@@ -1,0 +1,85 @@
+//! DDMA weight-synchronization walkthrough (paper §5.2, Figure 4).
+//!
+//! Demonstrates the in-process DDMA path end to end with REAL weights from
+//! the nano artifacts: the trainer publishes sharded snapshots to the bus,
+//! concurrent generator "workers" attach zero-copy, versions stay
+//! monotonic, and a late subscriber blocks until the version it needs.
+//! Finishes with the calibrated cluster-scale Table-4 numbers.
+//!
+//!     cargo run --release --example ddma_demo
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use llamarl::ddma::ps_baseline::PsModel;
+use llamarl::ddma::topology::DdmaModel;
+use llamarl::ddma::{sharded_copy, WeightsBus};
+use llamarl::model::load_init_params;
+use llamarl::runtime::Manifest;
+use llamarl::util::bench::fmt_secs;
+
+fn main() -> llamarl::Result<()> {
+    let manifest = Manifest::load("artifacts/nano")?;
+    let params = load_init_params(&manifest)?;
+    let p = params.len();
+    println!("model: {} params ({:.1} MB f32)\n", p, p as f64 * 4.0 / 1e6);
+
+    // 1. sharded snapshot (each "rank" copies only its shard)
+    let t0 = Instant::now();
+    let copy = sharded_copy(&params, 8);
+    let copy_t = t0.elapsed().as_secs_f64();
+    let max_shard = copy.shard_secs.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "sharded copy: total {} over 8 shards; slowest shard {} \
+         (cluster DDMA time = max shard, shards move in parallel)",
+        fmt_secs(copy_t),
+        fmt_secs(max_shard),
+    );
+
+    // 2. bus publish / zero-copy attach with concurrent subscribers
+    let bus = Arc::new(WeightsBus::new(copy.data));
+    let mut readers = Vec::new();
+    for w in 0..3 {
+        let bus = bus.clone();
+        readers.push(std::thread::spawn(move || {
+            // wait for version 5, then attach
+            let snap = bus.wait_for(5);
+            (w, snap.version, snap.data.len())
+        }));
+    }
+    let t1 = Instant::now();
+    for step in 1..=5u64 {
+        let mut new = (*bus.latest().data).clone();
+        new[0] = step as f32; // "optimizer update"
+        let v = bus.publish(new);
+        assert_eq!(v, step);
+    }
+    println!(
+        "published 5 versions in {} ({}/publish mean incl. snapshot copy)",
+        fmt_secs(t1.elapsed().as_secs_f64()),
+        fmt_secs(bus.mean_publish_secs()),
+    );
+    for r in readers {
+        let (w, version, len) = r.join().unwrap();
+        println!("worker {w}: attached to version {version} ({len} params, zero-copy Arc)");
+    }
+
+    // 3. cluster-scale model (Table 4)
+    println!("\n--- calibrated cluster-scale comparison (paper Table 4) ---\n");
+    let ddma = DdmaModel::calibrated();
+    let ps = PsModel::calibrated();
+    for (name, params) in [("7B", 7e9), ("70B", 70e9), ("405B", 405e9)] {
+        let gpus = if params > 100e9 { 512 } else { 128 };
+        println!(
+            "{name:>5}: DDMA {:>6.2} s   vs   parameter-server {:>8.2} s   ({:.0}x)",
+            ddma.sync_secs(params, gpus),
+            ps.sync_secs(params),
+            ps.sync_secs(params) / ddma.sync_secs(params, gpus)
+        );
+    }
+    println!(
+        "\nterabyte-scale weights sync in ~2 s because every GPU only moves\n\
+         its own shard — time is a function of shard size, not model size."
+    );
+    Ok(())
+}

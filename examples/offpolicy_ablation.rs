@@ -1,0 +1,130 @@
+//! Paper **Figure 8**: do off-policy corrections matter?
+//!
+//! Three async arms from the same pretrained base, with the off-policy
+//! pressure deliberately amplified (deep queue => steps of lag, int8
+//! generator => quantized behaviour policy, elevated LR):
+//!
+//!   rho=4      — AIPO's one-sided clipped importance correction (paper)
+//!   rho=1e6    — unclipped importance sampling (high variance)
+//!   rho<=0     — NO correction: plain REINFORCE on stale samples
+//!
+//! Expected shape (paper Fig. 8): the uncorrected arm destabilizes —
+//! entropy collapse / reward drop / exploding ratios — while clipped AIPO
+//! stays healthy.
+//!
+//!     cargo run --release --example offpolicy_ablation -- [--steps 40]
+
+use llamarl::coordinator::{
+    run_pretraining, run_training, Mode, PipelineConfig, PretrainConfig, RunReport,
+};
+use llamarl::util::bench::Table;
+use llamarl::util::cli::Args;
+
+fn stability_stats(r: &RunReport) -> (f64, f64, f64, f64) {
+    let n = r.records.len().max(1);
+    let tail = &r.records[r.records.len().saturating_sub(n / 3)..];
+    let tail_reward =
+        tail.iter().map(|x| x.reward_mean).sum::<f64>() / tail.len().max(1) as f64;
+    let final_entropy = r.records.last().map(|x| x.entropy).unwrap_or(f64::NAN);
+    let max_ratio = r
+        .records
+        .iter()
+        .map(|x| x.mean_ratio)
+        .fold(f64::NAN, f64::max);
+    let max_grad = r
+        .records
+        .iter()
+        .map(|x| x.grad_norm)
+        .fold(f64::NAN, f64::max);
+    (tail_reward, final_entropy, max_ratio, max_grad)
+}
+
+fn main() -> llamarl::Result<()> {
+    let args = Args::from_env(&[])?;
+    let artifact_dir = args.str_or("artifacts", "artifacts/small");
+    let steps = args.u64_or("steps", 40)?;
+    let out_root = std::path::PathBuf::from(args.str_or("out", "runs/ablation"));
+    let ckpt = out_root.join("pretrained");
+
+    println!("pretraining shared base model ...");
+    run_pretraining(
+        &PretrainConfig {
+            artifact_dir: artifact_dir.clone().into(),
+            steps: args.u64_or("pretrain-steps", 1500)?,
+            lr: 1e-3,
+            grad_clip: 1.0,
+            seed: 7,
+            log_every: 0,
+        },
+        &ckpt,
+    )?;
+
+    let mut base = PipelineConfig {
+        artifact_dir: artifact_dir.into(),
+        mode: Mode::Async,
+        n_generator_workers: 2,
+        // deep pipeline -> several steps of off-policy lag
+        queue_capacity: 6,
+        scored_capacity: 12,
+        n_generations: 4,
+        max_steps: steps,
+        temperature: 1.0,
+        // quantized behaviour policy: mu != pi even at zero lag (§4.3)
+        quantize_generator: true,
+        max_response: 10,
+        eval_every: 0,
+        init_checkpoint: Some(ckpt),
+        seed: 13,
+        ..PipelineConfig::default()
+    };
+    // aggressive LR amplifies the divergence between versions
+    base.aipo.lr = args.f64_or("lr", 1e-3)? as f32;
+    base.aipo.grad_clip = 0.0; // no safety net: let instability show
+
+    let arms: Vec<(&str, f32)> = vec![
+        ("AIPO rho=4 (paper)", 4.0),
+        ("unclipped IS", 1e6),
+        ("no correction", -1.0),
+    ];
+    let mut results = Vec::new();
+    for (name, rho) in &arms {
+        println!("\n=== arm: {name} ===");
+        let mut cfg = base.clone();
+        cfg.aipo.rho = *rho;
+        cfg.out_dir = out_root.join(name.replace(' ', "_").replace('=', ""));
+        let r = run_training(&cfg)?;
+        println!("{}", r.summary());
+        results.push((name.to_string(), r));
+    }
+
+    println!("\n=== Figure 8: stability under amplified off-policyness ===\n");
+    let mut t = Table::new(&[
+        "arm",
+        "tail reward",
+        "final entropy",
+        "max mean-ratio",
+        "max grad norm",
+        "mean lag",
+    ]);
+    for (name, r) in &results {
+        let (tail_reward, entropy, max_ratio, max_grad) = stability_stats(r);
+        let mean_lag = r.records.iter().map(|x| x.mean_lag).sum::<f64>()
+            / r.records.len().max(1) as f64;
+        t.row(vec![
+            name.clone(),
+            format!("{tail_reward:.3}"),
+            format!("{entropy:.3}"),
+            format!("{max_ratio:.2}"),
+            format!("{max_grad:.2}"),
+            format!("{mean_lag:.2}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nShape check (paper Fig. 8): the corrected arm keeps bounded ratios\n\
+         and healthy entropy; removing the correction (or the clip) lets\n\
+         stale-gradient noise through — larger ratio/grad excursions and a\n\
+         less stable reward tail."
+    );
+    Ok(())
+}

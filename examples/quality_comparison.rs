@@ -1,0 +1,113 @@
+//! Paper **Figure 6**: training-quality comparison — synchronous on-policy
+//! RL vs asynchronous AIPO, evaluated on the three held-out suites
+//! (math_test / math_500 / gsm_style, the MATH / MATH-500 / GSM8K analogs).
+//!
+//! Both arms share the same pretrained base checkpoint, hyper-parameters,
+//! seeds and step budget; the only difference is the execution architecture
+//! (paper §8.3). Expected shape: the async curves track the sync curves —
+//! off-policyness with AIPO correction does not cost quality.
+//!
+//!     cargo run --release --example quality_comparison -- \
+//!         [--artifacts artifacts/small] [--steps 60] [--pretrain-steps 1500]
+
+use llamarl::coordinator::{
+    run_pretraining, run_training, Mode, PipelineConfig, PretrainConfig, RunReport,
+};
+use llamarl::util::bench::Table;
+use llamarl::util::cli::Args;
+
+fn last_eval(r: &RunReport, suite: &str) -> Option<f64> {
+    r.evals
+        .iter()
+        .filter(|e| e.suite == suite)
+        .next_back()
+        .map(|e| e.accuracy)
+}
+
+fn first_eval(r: &RunReport, suite: &str) -> Option<f64> {
+    r.evals.iter().find(|e| e.suite == suite).map(|e| e.accuracy)
+}
+
+fn main() -> llamarl::Result<()> {
+    let args = Args::from_env(&[])?;
+    let artifact_dir = args.str_or("artifacts", "artifacts/small");
+    let steps = args.u64_or("steps", 60)?;
+    let out_root = std::path::PathBuf::from(args.str_or("out", "runs/quality"));
+    let ckpt = out_root.join("pretrained");
+
+    println!("pretraining shared base model ...");
+    let rep = run_pretraining(
+        &PretrainConfig {
+            artifact_dir: artifact_dir.clone().into(),
+            steps: args.u64_or("pretrain-steps", 1500)?,
+            lr: 1e-3,
+            grad_clip: 1.0,
+            seed: 7,
+            log_every: 0,
+        },
+        &ckpt,
+    )?;
+    println!("base model target_logp {:.3}", rep.final_target_logp);
+
+    let base = PipelineConfig {
+        artifact_dir: artifact_dir.into(),
+        max_steps: steps,
+        n_generations: 4,
+        temperature: 0.8,
+        max_response: 10,
+        eval_every: (steps / 4).max(1),
+        eval_max_per_suite: args.usize_or("eval-problems", 64)?,
+        init_checkpoint: Some(ckpt),
+        seed: 11,
+        ..PipelineConfig::default()
+    };
+
+    println!("\n=== arm 1/2: synchronous on-policy baseline ===");
+    let sync = run_training(&PipelineConfig {
+        mode: Mode::Sync,
+        out_dir: out_root.join("sync"),
+        ..base.clone()
+    })?;
+    println!("{}", sync.summary());
+
+    println!("\n=== arm 2/2: asynchronous AIPO (LlamaRL) ===");
+    let asy = run_training(&PipelineConfig {
+        mode: Mode::Async,
+        n_generator_workers: 2,
+        queue_capacity: 3,
+        out_dir: out_root.join("async"),
+        ..base
+    })?;
+    println!("{}", asy.summary());
+
+    println!("\n=== Figure 6: final accuracy by suite ===\n");
+    let mut t = Table::new(&["suite", "base (v0)", "sync final", "async final", "delta"]);
+    for suite in ["math_test", "math_500", "gsm_style"] {
+        let base_acc = first_eval(&sync, suite).unwrap_or(f64::NAN);
+        let s = last_eval(&sync, suite).unwrap_or(f64::NAN);
+        let a = last_eval(&asy, suite).unwrap_or(f64::NAN);
+        t.row(vec![
+            suite.into(),
+            format!("{:.1}%", base_acc * 100.0),
+            format!("{:.1}%", s * 100.0),
+            format!("{:.1}%", a * 100.0),
+            format!("{:+.1}pp", (a - s) * 100.0),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\ntraining rewards: sync final {:.3}, async final {:.3}",
+        sync.final_reward(),
+        asy.final_reward()
+    );
+    println!(
+        "wall-clock: sync {:.0}s vs async {:.0}s for the same {} steps",
+        sync.wall_secs, asy.wall_secs, steps
+    );
+    println!(
+        "\nShape check (paper Fig. 6): async deltas within noise of sync —\n\
+         asynchronous training does not compromise model quality."
+    );
+    Ok(())
+}

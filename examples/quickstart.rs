@@ -1,0 +1,46 @@
+//! Quickstart: the smallest possible LlamaRL job.
+//!
+//! Loads the `nano` artifacts, runs 3 synchronous RL steps (generate ->
+//! score -> AIPO train -> in-place weight update) and 3 asynchronous steps
+//! (executor threads + DDMA bus), then prints both reports.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use llamarl::coordinator::{run_training, Mode, PipelineConfig};
+use llamarl::metrics::print_report;
+
+fn main() -> llamarl::Result<()> {
+    let base = PipelineConfig {
+        artifact_dir: "artifacts/nano".into(),
+        max_steps: 3,
+        max_response: 10,
+        n_generations: 4,
+        eval_every: 3,
+        eval_max_per_suite: 16,
+        ..PipelineConfig::default()
+    };
+
+    println!("--- synchronous on-policy baseline (DeepSpeed-Chat-like) ---");
+    let sync = run_training(&PipelineConfig {
+        mode: Mode::Sync,
+        out_dir: std::env::temp_dir().join("llamarl_quickstart_sync"),
+        ..base.clone()
+    })?;
+    print_report(&sync);
+
+    println!("\n--- asynchronous off-policy LlamaRL pipeline ---");
+    let asy = run_training(&PipelineConfig {
+        mode: Mode::Async,
+        n_generator_workers: 2,
+        out_dir: std::env::temp_dir().join("llamarl_quickstart_async"),
+        ..base
+    })?;
+    print_report(&asy);
+
+    println!(
+        "\nNote the async report's off-policy lag: trajectories were sampled\n\
+         1-4 weight versions behind the trainer — exactly what AIPO's clipped\n\
+         importance ratio corrects (paper §6)."
+    );
+    Ok(())
+}

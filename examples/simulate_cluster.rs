@@ -1,0 +1,87 @@
+//! Cluster-scale what-if explorer: interactively sweep the calibrated cost
+//! model that reproduces the paper's Tables/Figures, for configurations the
+//! paper never ran.
+//!
+//!     cargo run --release --example simulate_cluster -- \
+//!         [--model 8B|70B|405B] [--gpus N] [--batch B] [--no-fp8]
+//!
+//! Prints: the optimizer's best sync and async configurations, the
+//! theta sweep (how sensitive the step time is to the GPU split), and the
+//! DDMA/PS weight-sync comparison at this scale.
+
+use llamarl::ddma::ps_baseline::PsModel;
+use llamarl::ddma::topology::DdmaModel;
+use llamarl::simulator::problem::{eval_async_config, solve_async, solve_sync};
+use llamarl::simulator::{HardwareModel, LLAMA_MODELS};
+use llamarl::util::bench::Table;
+use llamarl::util::cli::Args;
+
+fn main() -> llamarl::Result<()> {
+    let args = Args::from_env(&["no-fp8"])?;
+    let name = args.str_or("model", "70B");
+    let model = LLAMA_MODELS
+        .iter()
+        .find(|m| m.name == name)
+        .copied()
+        .ok_or_else(|| llamarl::Error::msg("model must be 8B|70B|405B"))?;
+    let mut hw = HardwareModel::paper_scale(model);
+    hw.g0 = args.usize_or("gpus", hw.g0 as usize)? as f64;
+    hw.b0 = args.usize_or("batch", hw.b0 as usize)? as f64;
+    hw.fp8_generator = !args.flag("no-fp8");
+
+    println!(
+        "\n=== cluster what-if: {} on {} GPUs, global batch {} (fp8 gen: {}) ===\n",
+        model.name, hw.g0, hw.b0, hw.fp8_generator
+    );
+
+    let p = hw.problem();
+    let sync = solve_sync(&p);
+    let asn = solve_async(&p);
+    println!("baseline replay (paper cfg): {:.1} s/step", hw.baseline_replay_secs());
+    println!(
+        "best sync   : {:.1} s/step  (bt={} bg={} m={})",
+        sync.step_secs, sync.bt, sync.bg, sync.m
+    );
+    println!(
+        "best async  : {:.1} s/step  (bt={} bg={} mt={} mg={} theta={:.2} -> {}t/{}g GPUs)",
+        asn.step_secs,
+        asn.bt,
+        asn.bg,
+        asn.mt,
+        asn.mg,
+        asn.theta,
+        asn.trainer_gpus.round(),
+        asn.generator_gpus.round()
+    );
+    println!(
+        "speedup     : {:.2}x vs paper-config baseline, {:.2}x vs best sync\n",
+        hw.baseline_replay_secs() / asn.step_secs,
+        sync.step_secs / asn.step_secs
+    );
+
+    println!("--- theta sensitivity (GPU split trainer/generator) ---\n");
+    let mut t = Table::new(&["theta", "trainer GPUs", "step secs", ""]);
+    for i in 1..10 {
+        let theta = i as f64 / 10.0;
+        let secs = eval_async_config(&p, asn.bt, asn.bg, asn.mt, asn.mg, theta);
+        let bar = "#".repeat((40.0 * asn.step_secs / secs) as usize);
+        t.row(vec![
+            format!("{theta:.1}"),
+            format!("{}", (theta * hw.g0).round()),
+            format!("{secs:.1}"),
+            bar,
+        ]);
+    }
+    t.print();
+
+    println!("\n--- weight sync at this scale ---\n");
+    let ddma = DdmaModel::calibrated();
+    let ps = PsModel::calibrated();
+    println!(
+        "DDMA: {:.2} s   (theoretical link floor {:.4} s)",
+        ddma.sync_secs(model.params, asn.trainer_gpus.round() as usize),
+        ddma.floor_secs(model.params, asn.trainer_gpus.round() as usize)
+    );
+    println!("parameter-server baseline: {:.1} s", ps.sync_secs(model.params));
+    Ok(())
+}

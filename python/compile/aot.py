@@ -1,0 +1,213 @@
+"""AOT compile path: lower the L2 graphs to HLO text + manifest + init ckpt.
+
+Python runs ONCE here (`make artifacts`); the Rust coordinator then loads
+`artifacts/<config>/*.hlo.txt` via the PJRT C API and never calls back into
+Python.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact has exactly ONE array output: multi-output executables come
+back from the PJRT shim as a single tuple buffer whose ToLiteralSync
+CHECK-fails, so the graphs pack their state into flat vectors instead
+(model.py docstring).
+
+Usage:
+  python -m compile.aot --out ../artifacts [--configs nano small e2e] [--fig5]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs as cfgs
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+F32 = "f32"
+I32 = "i32"
+_NP = {"f32": np.float32, "i32": np.int32}
+
+
+def artifact_defs(cfg):
+    """Entry points to lower for `cfg`: name -> (fn, input specs, out shape).
+
+    Input specs are (name, shape, dtype) in call order — the Rust runtime
+    reads these from the manifest and validates literals against them.
+    """
+    p = cfgs.num_params(cfg)
+    ts = cfgs.train_state_layout(cfg)["total"]
+    b, s, c = cfg["gen_batch"], cfg["max_seq"], cfg["gen_chunk"]
+    bt, t = cfg["train_batch"], cfg["train_seq"]
+    n_metrics = len(cfgs.METRIC_NAMES)
+
+    return {
+        "generate_chunk": dict(
+            fn=lambda params, tokens, lens, frozen, seed, temp, top_k:
+                model.generate_chunk(cfg, params, tokens, lens, frozen, seed,
+                                     temp, top_k),
+            inputs=[("params", (p,), F32), ("tokens", (b, s), I32),
+                    ("lens", (b,), I32), ("frozen", (b,), I32),
+                    ("seed", (1,), I32), ("temperature", (1,), F32),
+                    ("top_k", (1,), I32)],
+            output=((b, 2 * c + 2), F32),
+        ),
+        "train_step": dict(
+            fn=lambda state, tokens, targets, blogp, adv, mask, lens, hyp:
+                model.train_step(cfg, state, tokens, targets, blogp, adv,
+                                 mask, lens, hyp),
+            inputs=[("state", (ts,), F32), ("tokens", (bt, t), I32),
+                    ("targets", (bt, t), I32), ("blogp", (bt, t), F32),
+                    ("adv", (bt, t), F32), ("mask", (bt, t), F32),
+                    ("lens", (bt,), I32), ("hyp", (3,), F32)],
+            output=((ts,), F32),
+        ),
+        "extract_params": dict(
+            fn=lambda state: model.extract_params(cfg, state),
+            inputs=[("state", (ts,), F32)],
+            output=((p,), F32),
+        ),
+        "extract_metrics": dict(
+            fn=lambda state: model.extract_metrics(cfg, state),
+            inputs=[("state", (ts,), F32)],
+            output=((1 + n_metrics,), F32),
+        ),
+        "logprobs_eval": dict(
+            fn=lambda params, tokens, targets, lens:
+                model.logprobs_eval(cfg, params, tokens, targets, lens),
+            inputs=[("params", (p,), F32), ("tokens", (bt, t), I32),
+                    ("targets", (bt, t), I32), ("lens", (bt,), I32)],
+            output=((bt, t), F32),
+        ),
+    }
+
+
+def lower_one(defn):
+    specs = [_spec(shape, _NP[dt]) for _, shape, dt in defn["inputs"]]
+    lowered = jax.jit(defn["fn"]).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def emit_config(cfg, out_dir, fig5=False):
+    cdir = os.path.join(out_dir, cfg["name"])
+    os.makedirs(cdir, exist_ok=True)
+    defs = artifact_defs(cfg)
+
+    manifest_arts = {}
+    for name, defn in defs.items():
+        path = f"{name}.hlo.txt"
+        print(f"  lowering {cfg['name']}/{name} ...", flush=True)
+        text = lower_one(defn)
+        with open(os.path.join(cdir, path), "w") as f:
+            f.write(text)
+        manifest_arts[name] = {
+            "file": path,
+            "inputs": [_io(n, s, d) for n, s, d in defn["inputs"]],
+            "output": _io("out", defn["output"][0], defn["output"][1]),
+        }
+
+    # Figure-5 sweep variants: train_step at several microbatch sizes and
+    # generate_chunk at several decode concurrencies (real Assumption-7.1
+    # measurement harness; see benches/fig5_batch_scaling.rs).
+    fig5_arts = {}
+    if fig5:
+        for b in cfgs.FIG5_TRAIN_BATCHES:
+            vcfg = dict(cfg, train_batch=b)
+            defn = artifact_defs(vcfg)["train_step"]
+            name = f"fig5_train_b{b}"
+            print(f"  lowering {cfg['name']}/{name} ...", flush=True)
+            with open(os.path.join(cdir, f"{name}.hlo.txt"), "w") as f:
+                f.write(lower_one(defn))
+            fig5_arts[name] = {
+                "file": f"{name}.hlo.txt",
+                "inputs": [_io(n, s, d) for n, s, d in defn["inputs"]],
+                "output": _io("out", defn["output"][0], defn["output"][1]),
+            }
+        for b in cfgs.FIG5_GEN_BATCHES:
+            vcfg = dict(cfg, gen_batch=b)
+            defn = artifact_defs(vcfg)["generate_chunk"]
+            name = f"fig5_gen_b{b}"
+            print(f"  lowering {cfg['name']}/{name} ...", flush=True)
+            with open(os.path.join(cdir, f"{name}.hlo.txt"), "w") as f:
+                f.write(lower_one(defn))
+            fig5_arts[name] = {
+                "file": f"{name}.hlo.txt",
+                "inputs": [_io(n, s, d) for n, s, d in defn["inputs"]],
+                "output": _io("out", defn["output"][0], defn["output"][1]),
+            }
+    manifest_arts.update(fig5_arts)
+
+    # Initial checkpoint (raw little-endian f32) so Rust and Python agree on
+    # initialization without Rust re-implementing jax.random.
+    params = np.asarray(model.init_params(cfg, seed=0), dtype="<f4")
+    params.tofile(os.path.join(cdir, "init_params.bin"))
+
+    layout = []
+    off = 0
+    for name, shape in cfgs.param_layout(cfg):
+        size = int(np.prod(shape))
+        layout.append({"name": name, "shape": list(shape), "offset": off})
+        off += size
+
+    ts_lay = cfgs.train_state_layout(cfg)
+    manifest = {
+        "config": cfg,
+        "num_params": cfgs.num_params(cfg),
+        "param_layout": layout,
+        "train_state": {k: list(v) if isinstance(v, tuple) else v
+                        for k, v in ts_lay.items()},
+        "metric_names": cfgs.METRIC_NAMES,
+        "adam": {"b1": cfgs.ADAM_B1, "b2": cfgs.ADAM_B2, "eps": cfgs.ADAM_EPS},
+        "artifacts": manifest_arts,
+        "fig5": {
+            "train_batches": cfgs.FIG5_TRAIN_BATCHES if fig5 else [],
+            "gen_batches": cfgs.FIG5_GEN_BATCHES if fig5 else [],
+        },
+    }
+    with open(os.path.join(cdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {cdir}/manifest.json ({cfgs.num_params(cfg)} params)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=["nano", "small", "e2e"])
+    ap.add_argument("--fig5-config", default="small",
+                    help="config that also gets Figure-5 sweep variants")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.configs:
+        cfg = cfgs.CONFIGS[name]
+        print(f"config {name}:", flush=True)
+        emit_config(cfg, args.out, fig5=(name == args.fig5_config))
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump({"configs": args.configs}, f)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

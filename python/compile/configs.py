@@ -1,0 +1,139 @@
+"""Model/artifact configurations shared between the AOT compile path (python)
+and the Rust runtime (via artifacts/<name>/manifest.json).
+
+Three presets:
+  nano  — unit/CI tests: compiles in seconds, runs in milliseconds.
+  small — integration tests, Figure-5 batch-scaling measurements.
+  e2e   — the end-to-end training driver (examples/train_async_math.rs).
+
+Token id conventions (must match rust/src/model/tokenizer.rs):
+  0 = PAD, 1 = BOS, 2 = EOS, 3.. = character set.
+"""
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+# Adam hyper-parameters baked into the train_step artifact (lr comes in as a
+# runtime input so the Rust side can do schedules).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+
+# Names of the metric slots written by train_step into the packed train state.
+METRIC_NAMES = [
+    "loss",          # mean AIPO loss over masked tokens
+    "mean_ratio",    # mean unclipped importance ratio pi/mu
+    "clip_frac",     # fraction of masked tokens with ratio > rho
+    "approx_kl",     # mean (mu_logp - pi_logp) over masked tokens
+    "entropy",       # mean per-token policy entropy
+    "grad_norm",     # global grad norm (pre-clipping)
+    "token_count",   # number of masked (response) tokens in the batch
+    "max_ratio",     # max unclipped ratio in the batch
+    "adv_mean",      # mean advantage over masked tokens
+    "target_logp",   # mean pi log-prob of target tokens
+]
+
+
+def _cfg(
+    name,
+    vocab,
+    d_model,
+    n_layers,
+    n_heads,
+    d_ff,
+    max_seq,
+    gen_batch,
+    gen_chunk,
+    train_batch,
+):
+    assert d_model % n_heads == 0
+    return dict(
+        name=name,
+        vocab=vocab,
+        d_model=d_model,
+        n_layers=n_layers,
+        n_heads=n_heads,
+        d_head=d_model // n_heads,
+        d_ff=d_ff,
+        max_seq=max_seq,
+        # generator artifact: per-DP-worker decode batch and tokens per chunk
+        gen_batch=gen_batch,
+        gen_chunk=gen_chunk,
+        # trainer artifact: microbatch x full-sequence
+        train_batch=train_batch,
+        train_seq=max_seq,
+        pad_id=PAD_ID,
+        bos_id=BOS_ID,
+        eos_id=EOS_ID,
+    )
+
+
+CONFIGS = {
+    "nano": _cfg("nano", vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=128,
+                 max_seq=64, gen_batch=4, gen_chunk=8, train_batch=4),
+    "small": _cfg("small", vocab=256, d_model=128, n_layers=3, n_heads=4,
+                  d_ff=512, max_seq=128, gen_batch=4, gen_chunk=16,
+                  train_batch=8),
+    "e2e": _cfg("e2e", vocab=512, d_model=256, n_layers=4, n_heads=8,
+                d_ff=1024, max_seq=256, gen_batch=8, gen_chunk=32,
+                train_batch=8),
+}
+
+# Figure-5 batch-scaling sweep (real measurement of Assumption 7.1): emit
+# train_step variants at these microbatch sizes and generate_chunk variants at
+# these decode concurrencies, for the `small` config.
+FIG5_TRAIN_BATCHES = [1, 2, 4, 8, 16]
+FIG5_GEN_BATCHES = [1, 2, 4, 8, 16]
+
+
+def param_layout(cfg):
+    """Flat f32 parameter vector layout: list of (name, shape) in order.
+
+    The Rust side reads this from the manifest; offsets are cumulative.
+    Embedding is tied to the output head (logits = x @ embed.T).
+    """
+    d, f, v, s = cfg["d_model"], cfg["d_ff"], cfg["vocab"], cfg["max_seq"]
+    layout = [("embed", (v, d)), ("pos_embed", (s, d))]
+    for i in range(cfg["n_layers"]):
+        p = f"layer{i}."
+        layout += [
+            (p + "ln1_scale", (d,)),
+            (p + "ln1_bias", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln2_scale", (d,)),
+            (p + "ln2_bias", (d,)),
+            (p + "w1", (d, f)),
+            (p + "b1", (f,)),
+            (p + "w2", (f, d)),
+            (p + "b2", (d,)),
+        ]
+    layout += [("lnf_scale", (d,)), ("lnf_bias", (d,))]
+    return layout
+
+
+def num_params(cfg):
+    n = 0
+    for _, shape in param_layout(cfg):
+        size = 1
+        for dim in shape:
+            size *= dim
+        n += size
+    return n
+
+
+def train_state_layout(cfg):
+    """Packed train-state vector: [params | m | v | step | metrics]."""
+    p = num_params(cfg)
+    m = len(METRIC_NAMES)
+    return dict(
+        params=(0, p),
+        adam_m=(p, p),
+        adam_v=(2 * p, p),
+        step=(3 * p, 1),
+        metrics=(3 * p + 1, m),
+        total=3 * p + 1 + m,
+    )

@@ -1,0 +1,168 @@
+"""Fused AIPO loss kernel (L1, Pallas).
+
+This is the trainer's compute hot-spot on the vocab dimension: for every
+token position we need log-softmax over V logits, the target-token gather,
+the clipped importance ratio against the recorded behaviour log-prob, and the
+advantage weighting. Done naively (jnp log_softmax + gathers) the [N, V]
+logits tensor is read several times and a full [N, V] log-prob tensor is
+materialized; fused, the logits stream through once and only O(N) outputs are
+written.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles rows into
+ROW_BLOCK-sized chunks whose [ROW_BLOCK, V] logit tile is staged HBM->VMEM by
+the BlockSpec; V for our configs (<= 2048) keeps a tile under 64 KiB, well
+inside VMEM, so a single vocab pass per tile suffices (for larger V the same
+kernel structure extends to an online multi-tile logsumexp). The backward
+kernel *recomputes* the softmax from the saved per-row logsumexp instead of
+storing [N, V] probabilities — rematerialization trades one extra VMEM-local
+exp for an O(N*V) HBM saving.
+
+The gradient is the paper's estimator (§6):
+
+    grad_logits_t = -min(pi/mu, rho) * A_t * (onehot(y_t) - softmax(logits_t))
+
+i.e. the clipped ratio and advantage multiply grad log pi and are NOT
+differentiated through (enforced via jax.custom_vjp below).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 8 keeps the fwd tile (ROW_BLOCK x V f32) small enough
+# for VMEM at V=2048 while amortizing grid overhead.
+ROW_BLOCK = 8
+
+INTERPRET = True
+
+
+def _fwd_kernel(logits_ref, targets_ref, blogp_ref, adv_ref, mask_ref,
+                rho_ref, loss_ref, logp_ref, w_ref, lse_ref, ent_ref):
+    logits = logits_ref[...]            # [R, V]
+    targets = targets_ref[...]          # [R]
+    rho = rho_ref[0]
+
+    rowmax = jnp.max(logits, axis=-1)
+    shifted = logits - rowmax[:, None]
+    expd = jnp.exp(shifted)
+    sumexp = jnp.sum(expd, axis=-1)
+    lse = jnp.log(sumexp) + rowmax
+
+    tgt_logit = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    logp = tgt_logit - lse
+    ratio = jnp.exp(logp - blogp_ref[...])
+    # rho <= 0 disables the off-policy correction (w = 1): the Figure-8
+    # "without importance sampling" ablation arm.
+    w = jnp.where(rho > 0, jnp.minimum(ratio, rho), 1.0)
+
+    loss_ref[...] = -w * adv_ref[...] * logp * mask_ref[...]
+    logp_ref[...] = logp
+    w_ref[...] = w
+    lse_ref[...] = lse
+    # entropy = lse - E_p[logit]; reuse the staged exp tile.
+    p = expd / sumexp[:, None]
+    ent_ref[...] = lse - jnp.sum(p * logits, axis=-1)
+
+
+def _bwd_kernel(logits_ref, targets_ref, lse_ref, w_ref, adv_ref, mask_ref,
+                ct_ref, grad_ref):
+    logits = logits_ref[...]            # [R, V]
+    targets = targets_ref[...]          # [R]
+    # Rematerialize softmax from the saved logsumexp (no [N,V] residual).
+    softmax = jnp.exp(logits - lse_ref[...][:, None])
+    v = logits.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (logits.shape[0], v), 1)
+              == targets[:, None]).astype(logits.dtype)
+    coef = (-w_ref[...] * adv_ref[...] * mask_ref[...] * ct_ref[...])[:, None]
+    grad_ref[...] = coef * (onehot - softmax)
+
+
+def _pad_rows(n):
+    return (n + ROW_BLOCK - 1) // ROW_BLOCK * ROW_BLOCK
+
+
+def _fwd_call(logits, targets, blogp, adv, mask, rho):
+    n, v = logits.shape
+    np_ = _pad_rows(n)
+    if np_ != n:
+        pad = np_ - n
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+        targets = jnp.pad(targets, (0, pad))
+        blogp = jnp.pad(blogp, (0, pad))
+        adv = jnp.pad(adv, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    grid = (np_ // ROW_BLOCK,)
+    rho_arr = jnp.asarray(rho, jnp.float32).reshape((1,))
+    row = pl.BlockSpec((ROW_BLOCK,), lambda i: (i,))
+    mat = pl.BlockSpec((ROW_BLOCK, v), lambda i: (i, 0))
+    full = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((np_,), jnp.float32)] * 5
+    loss, logp, w, lse, ent = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[mat, row, row, row, row, full],
+        out_specs=[row] * 5,
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(logits, targets, blogp, adv, mask, rho_arr)
+    return loss[:n], logp[:n], w[:n], lse[:n], ent[:n]
+
+
+def _bwd_call(logits, targets, lse, w, adv, mask, ct):
+    n, v = logits.shape
+    np_ = _pad_rows(n)
+    if np_ != n:
+        pad = np_ - n
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+        targets = jnp.pad(targets, (0, pad))
+        lse = jnp.pad(lse, (0, pad))
+        w = jnp.pad(w, (0, pad))
+        adv = jnp.pad(adv, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+        ct = jnp.pad(ct, (0, pad))
+    grid = (np_ // ROW_BLOCK,)
+    row = pl.BlockSpec((ROW_BLOCK,), lambda i: (i,))
+    mat = pl.BlockSpec((ROW_BLOCK, v), lambda i: (i, 0))
+    grad = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[mat, row, row, row, row, row, row],
+        out_specs=mat,
+        out_shape=jax.ShapeDtypeStruct((np_, v), jnp.float32),
+        interpret=INTERPRET,
+    )(logits, targets, lse, w, adv, mask, ct)
+    return grad[:n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def aipo_loss_terms(logits, targets, blogp, adv, mask, rho):
+    """Fused AIPO per-token loss terms; see ref.aipo_loss_terms_ref.
+
+    Returns (loss_terms, logp, w, lse, entropy); differentiable in `logits`
+    only, with the paper's stop-grad-on-(w * adv) gradient.
+    """
+    return _fwd_call(logits, targets, blogp, adv, mask, rho)
+
+
+def _vjp_fwd(logits, targets, blogp, adv, mask, rho):
+    outs = _fwd_call(logits, targets, blogp, adv, mask, rho)
+    _, _, w, lse, _ = outs
+    return outs, (logits, targets, lse, w, adv, mask, blogp, rho)
+
+
+def _vjp_bwd(res, cts):
+    logits, targets, lse, w, adv, mask, blogp, rho = res
+    ct_loss = cts[0]  # only loss_terms' cotangent feeds the policy gradient
+    grad_logits = _bwd_call(logits, targets, lse, w, adv, mask, ct_loss)
+    f0 = lambda x: np.zeros(x.shape, dtype=jax.dtypes.float0)
+    return (grad_logits, f0(targets), jnp.zeros_like(blogp),
+            jnp.zeros_like(adv), jnp.zeros_like(mask), jnp.zeros_like(rho))
+
+
+aipo_loss_terms.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,72 @@
+"""Fused decode-attention kernel (L1, Pallas).
+
+The generator's hot-spot: one query token per sequence attending over the
+whole KV cache. The paper's generator uses optimized CUDA decode kernels
+(CUDA-graph captured); the TPU re-think (DESIGN.md §Hardware-Adaptation) is a
+flash-decoding-style kernel:
+
+  * grid = (B, H): one program instance per (sequence, head), the TPU
+    analogue of a CUDA threadblock per head;
+  * BlockSpec stages that head's [S, Dh] K/V slices HBM->VMEM; at our sizes
+    (S<=256, Dh<=32 -> 32 KiB per operand) the full cache slice is VMEM
+    resident, so a single-pass masked softmax suffices. For longer caches the
+    same body becomes the inner loop of an online (max, sumexp, acc) scan
+    over S-tiles;
+  * QK^T and P.V are `dot`s on [S, Dh] tiles — MXU-shaped work, not the
+    WMMA-fragment layout a CUDA port would use.
+
+The length mask implements ragged batched decode: row b attends to key
+positions j < limit[b] (right-padded batches; see model.generate_chunk).
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls; interpret mode
+lowers to identical-numerics HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, limit_ref, o_ref):
+    q = q_ref[0, 0, :]                   # [Dh]
+    k = k_ref[0, 0, :, :]                # [S, Dh]
+    v = v_ref[0, 0, :, :]                # [S, Dh]
+    limit = limit_ref[0]                 # scalar i32
+    dh = q.shape[-1]
+    s = k.shape[0]
+
+    scores = jnp.dot(k, q) / jnp.sqrt(jnp.asarray(dh, q.dtype))   # [S]
+    valid = jax.lax.iota(jnp.int32, s) < limit
+    scores = jnp.where(valid, scores, -1e30)
+    m = jnp.max(scores)
+    p = jnp.exp(scores - m) * valid.astype(q.dtype)
+    denom = jnp.maximum(jnp.sum(p), 1e-30)
+    o_ref[0, 0, :] = jnp.dot(p, v) / denom
+
+
+def decode_attention(q, k_cache, v_cache, limit):
+    """Single-token decode attention; see ref.decode_attention_ref.
+
+    Args:
+      q:       f32[B, H, Dh]
+      k_cache: f32[B, H, S, Dh]
+      v_cache: f32[B, H, S, Dh]
+      limit:   i32[B]  (row b attends to keys j < limit[b])
+
+    Returns f32[B, H, Dh].
+    """
+    b, h, s, dh = k_cache.shape
+    grid = (b, h)
+    q_spec = pl.BlockSpec((1, 1, dh), lambda i, j: (i, j, 0))
+    kv_spec = pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0))
+    lim_spec = pl.BlockSpec((1,), lambda i, j: (i,))
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, lim_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=INTERPRET,
+    )(q, k_cache, v_cache, limit)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: python/tests/test_kernels.py asserts
+the Pallas implementations (interpret=True) match these references under
+hypothesis-driven shape/value sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def aipo_loss_terms_ref(logits, targets, behavior_logp, adv, mask, rho):
+    """Reference AIPO per-token loss terms and stats.
+
+    AIPO (paper §6): importance-weighted policy gradient with a one-sided clip,
+
+        loss_t = - min(pi_t / mu_t, rho) * A_t * log pi_t        (masked)
+
+    where the clipped ratio and advantage are treated as constants in the
+    gradient (the paper's update is  min(ratio, rho) * A * grad log pi).
+
+    Args:
+      logits:        f32[N, V]  learner logits per (flattened) token position
+      targets:       i32[N]     sampled token ids
+      behavior_logp: f32[N]     log mu(y_t | ...) recorded by the generator
+      adv:           f32[N]     per-token advantage estimates
+      mask:          f32[N]     1.0 on response tokens, 0.0 elsewhere
+      rho:           f32[]      one-sided IS-ratio clip; rho <= 0 DISABLES
+                                the correction entirely (w = 1, the plain
+                                REINFORCE-on-stale-data ablation of Fig. 8)
+
+    Returns (loss_terms, logp, w, lse, entropy), each f32[N].
+    """
+    rowmax = jnp.max(logits, axis=-1)
+    shifted = logits - rowmax[:, None]
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    lse = jnp.log(sumexp) + rowmax
+    tgt_logit = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    logp = tgt_logit - lse
+    ratio = jnp.exp(logp - behavior_logp)
+    w = jnp.where(rho > 0, jnp.minimum(ratio, rho), 1.0)
+    loss_terms = -w * adv * logp * mask
+    # entropy = lse - E_p[logit]
+    p = jnp.exp(shifted) / sumexp[:, None]
+    entropy = lse - jnp.sum(p * logits, axis=-1)
+    return loss_terms, logp, w, lse, entropy
+
+
+def aipo_grad_logits_ref(logits, targets, lse, w, adv, mask, ct):
+    """Reference gradient of sum(ct * loss_terms) w.r.t. logits.
+
+    d loss_t / d logits_t = -w_t * A_t * (onehot(target_t) - softmax(logits_t))
+    with w treated as a constant (stop-grad), matching the paper's estimator.
+    """
+    v = logits.shape[-1]
+    softmax = jnp.exp(logits - lse[:, None])
+    onehot = jnp.eye(v, dtype=logits.dtype)[targets]
+    coef = (-w * adv * mask * ct)[:, None]
+    return coef * (onehot - softmax)
+
+
+def decode_attention_ref(q, k_cache, v_cache, limit):
+    """Reference single-token decode attention over a KV cache.
+
+    Args:
+      q:       f32[B, H, Dh]      query for the current position
+      k_cache: f32[B, H, S, Dh]   keys (positions >= limit[b] are invalid)
+      v_cache: f32[B, H, S, Dh]
+      limit:   i32[B]             row b attends to key positions j < limit[b]
+
+    Returns f32[B, H, Dh].
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )
+    s = k_cache.shape[2]
+    pos = jnp.arange(s)[None, None, :]
+    valid = pos < limit[:, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs * valid
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v_cache)

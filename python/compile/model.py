@@ -1,0 +1,428 @@
+"""L2: the policy model as JAX compute graphs, AOT-lowered to HLO artifacts.
+
+A decoder-only transformer (pre-LN, learned positional embeddings, tied
+input/output embedding) with four entry points, each lowered by aot.py into a
+single-output HLO executable the Rust runtime drives:
+
+  generate_chunk  — the generator executor's whole decode chunk in ONE call:
+                    in-graph prefill over the current token buffer, then a
+                    lax.scan of C decode steps (Pallas decode-attention
+                    kernel, KV-cache scatter, temperature/top-k sampling with
+                    in-graph threefry RNG, EOS handling). Returns a packed
+                    f32[B, 2C+2] = [tokens | behaviour_logp | new_len | done].
+  train_step      — one AIPO update: full-sequence forward (standard jnp
+                    attention — the trainer is the "FSDP bf16" path in the
+                    paper; the fused kernels live on the generator/loss),
+                    Pallas fused AIPO loss (custom VJP), global-norm clip,
+                    Adam. State is ONE packed f32 vector
+                    [params | m | v | step | metrics] so the executable has a
+                    single array output and stays device-resident between
+                    calls (see DESIGN.md: tuple outputs crash the PJRT shim).
+  extract_params / extract_metrics — O(1)-cost slices of the packed train
+                    state, so the Rust side fetches 13 MB of weights for a
+                    DDMA publication or 11 floats of metrics without pulling
+                    the whole 40 MB state to host.
+  logprobs_eval   — log pi(target | prefix) for lag/KL diagnostics.
+
+Everything is f32; step counters and token ids travel as f32 inside packed
+buffers (exact below 2^24). Python never runs at serve time: these graphs are
+lowered once by aot.py and executed from Rust via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import aipo
+from .kernels import attention as attn_kernel
+
+# ---------------------------------------------------------------------------
+# Parameter handling
+
+
+def unflatten_params(cfg, flat):
+    """Split the flat f32[P] vector into a dict of named arrays."""
+    params = {}
+    off = 0
+    for name, shape in configs.param_layout(cfg):
+        size = 1
+        for d in shape:
+            size *= d
+        params[name] = jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+        off += size
+    return params
+
+
+def init_params(cfg, seed):
+    """Initialization used for the artifacts' init checkpoint (aot.py)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in configs.param_layout(cfg):
+        key, sub = jax.random.split(key)
+        size = 1
+        for d in shape:
+            size *= d
+        if name.endswith(("_scale",)):
+            chunks.append(jnp.ones(size, jnp.float32))
+        elif name.endswith(("_bias", "b1", "b2")):
+            chunks.append(jnp.zeros(size, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else size
+            scale = 0.02 if name in ("embed", "pos_embed") else 1.0 / jnp.sqrt(fan_in)
+            chunks.append(jax.random.normal(sub, (size,), jnp.float32) * scale)
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _full_attention(q, k, v, lens):
+    """Causal + length-masked attention over full sequences (trainer path).
+
+    q,k,v: [B, H, T, Dh]; lens: i32[B] — key positions >= lens[b] are PAD.
+    """
+    dh = q.shape[-1]
+    t = q.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )
+    qpos = jnp.arange(t)[None, None, :, None]
+    kpos = jnp.arange(t)[None, None, None, :]
+    causal = kpos <= qpos
+    valid = kpos < lens[:, None, None, None]
+    mask = jnp.logical_and(causal, valid)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = probs * mask.astype(probs.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def forward_full(cfg, params, tokens, lens, return_kv=False):
+    """Full-sequence forward.
+
+    tokens: i32[B, T] right-padded; lens: i32[B] valid lengths.
+    Returns logits f32[B, T, V] (and optionally per-layer KV caches shaped
+    [L, B, H, S, Dh] with T <= S positions filled, for in-graph prefill).
+    """
+    h_dim = cfg["n_heads"]
+    b, t = tokens.shape
+    x = params["embed"][tokens] + params["pos_embed"][None, :t, :]
+    kv_ks, kv_vs = [], []
+    for i in range(cfg["n_layers"]):
+        p = f"layer{i}."
+        y = _layer_norm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        q = _split_heads(y @ params[p + "wq"], h_dim)
+        k = _split_heads(y @ params[p + "wk"], h_dim)
+        v = _split_heads(y @ params[p + "wv"], h_dim)
+        o = _full_attention(q, k, v, lens)
+        x = x + _merge_heads(o) @ params[p + "wo"]
+        y = _layer_norm(x, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        x = x + (jax.nn.gelu(y @ params[p + "w1"] + params[p + "b1"])
+                 @ params[p + "w2"] + params[p + "b2"])
+        if return_kv:
+            s = cfg["max_seq"]
+            pad = s - t
+            kv_ks.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+            kv_vs.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+    x = _layer_norm(x, params["lnf_scale"], params["lnf_bias"])
+    logits = x @ params["embed"].T
+    if return_kv:
+        return logits, jnp.stack(kv_ks), jnp.stack(kv_vs)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Generation (generator executor artifact)
+
+
+def _decode_one(cfg, params, kv_k, kv_v, tok, pos, done):
+    """One decode step for the whole batch; positions are per-row (ragged).
+
+    kv_k/kv_v: [L, B, H, S, Dh]; tok: i32[B]; pos: i32[B]; done: bool[B].
+    Returns (logits [B, V], kv_k', kv_v').
+    """
+    n_heads, s = cfg["n_heads"], cfg["max_seq"]
+    safe_pos = jnp.minimum(pos, s - 1)
+    x = params["embed"][tok] + params["pos_embed"][safe_pos]       # [B, D]
+    x = x[:, None, :]                                              # [B,1,D]
+    onehot = (jnp.arange(s)[None, :] == safe_pos[:, None]).astype(jnp.float32)
+    # rows that are done must not overwrite cache entries
+    onehot = onehot * (1.0 - done.astype(jnp.float32))[:, None]    # [B, S]
+    new_k, new_v = [], []
+    for i in range(cfg["n_layers"]):
+        p = f"layer{i}."
+        y = _layer_norm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        q = _split_heads(y @ params[p + "wq"], n_heads)[:, :, 0, :]  # [B,H,Dh]
+        k = _split_heads(y @ params[p + "wk"], n_heads)[:, :, 0, :]
+        v = _split_heads(y @ params[p + "wv"], n_heads)[:, :, 0, :]
+        # scatter k,v into the cache at per-row positions via one-hot blend
+        oh = onehot[:, None, :, None]                               # [B,1,S,1]
+        kc = kv_k[i] * (1.0 - oh) + oh * k[:, :, None, :]
+        vc = kv_v[i] * (1.0 - oh) + oh * v[:, :, None, :]
+        new_k.append(kc)
+        new_v.append(vc)
+        # attend to keys j <= pos  (the current token was just written)
+        o = attn_kernel.decode_attention(q, kc, vc, safe_pos + 1)   # [B,H,Dh]
+        x = x + (o.reshape(o.shape[0], -1) @ params[p + "wo"])[:, None, :]
+        y = _layer_norm(x, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        x = x + (jax.nn.gelu(y @ params[p + "w1"] + params[p + "b1"])
+                 @ params[p + "w2"] + params[p + "b2"])
+    xf = _layer_norm(x[:, 0, :], params["lnf_scale"], params["lnf_bias"])
+    logits = xf @ params["embed"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def _sample(key, logits, temperature, top_k):
+    """Temperature/top-k sampling; returns (token, behaviour_logp).
+
+    The behaviour log-prob is of the ACTUAL sampling distribution (post
+    temperature and top-k) — this is mu in AIPO's pi/mu ratio; when the
+    generator runs quantized or lagged this genuinely differs from pi.
+    temperature <= 0 selects greedy argmax (logp of the greedy dist = 0).
+    """
+    v = logits.shape[-1]
+    # top-k mask (top_k <= 0 disables)
+    sorted_desc = -jnp.sort(-logits, axis=-1)                     # [B, V]
+    k_idx = jnp.clip(top_k - 1, 0, v - 1)
+    kth = sorted_desc[:, k_idx]                                    # [B]
+    topk_mask = jnp.logical_or(top_k <= 0, logits >= kth[:, None])
+    masked = jnp.where(topk_mask, logits, -1e30)
+
+    temp = jnp.maximum(temperature, 1e-4)
+    scaled = masked / temp
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    use_greedy = temperature <= 0.0
+    tok = jnp.where(use_greedy, greedy, sampled)
+
+    logz = jax.nn.log_softmax(scaled, axis=-1)
+    logp = jnp.take_along_axis(logz, tok[:, None], axis=-1)[:, 0]
+    logp = jnp.where(use_greedy, 0.0, logp)
+    return tok, logp
+
+
+def generate_chunk(cfg, params_flat, tokens, lens, frozen, seed, temperature,
+                   top_k):
+    """Generate up to C tokens for each row of a right-padded batch.
+
+    Args:
+      params_flat: f32[P]
+      tokens:      i32[B, S]  prompt + previously generated tokens, right-pad
+      lens:        i32[B]     current valid length per row
+      frozen:      i32[B]     1 -> row is finished/idle, do not decode it
+      seed:        i32[1]     RNG seed for this chunk
+      temperature: f32[1]     <= 0 -> greedy
+      top_k:       i32[1]     <= 0 -> disabled
+
+    Returns packed f32[B, 2C + 2]:
+      [:, 0:C]        new tokens (as f32; PAD for rows already done)
+      [:, C:2C]       behaviour log-probs
+      [:, 2C]         new length
+      [:, 2C+1]       done flag (1.0 if EOS emitted or length hit max_seq)
+
+    Partial rollouts (paper §4.2): the Rust side calls this repeatedly with
+    the updated buffer/lengths; an unfinished row simply resumes next call.
+    The in-graph prefill recomputes the KV cache for the buffered prefix each
+    chunk — recompute trades O(prefill) FLOPs for not persisting a tuple of
+    device-side caches between calls.
+    """
+    c = cfg["gen_chunk"]
+    s = cfg["max_seq"]
+    eos, pad = cfg["eos_id"], cfg["pad_id"]
+    params = unflatten_params(cfg, params_flat)
+
+    # In-graph prefill over the whole buffer (padding rows masked out).
+    _, kv_k, kv_v = forward_full(cfg, params, tokens, lens, return_kv=True)
+    # The token to feed the first decode step: last valid token per row.
+    last_tok = jnp.take_along_axis(
+        tokens, jnp.maximum(lens - 1, 0)[:, None], axis=-1)[:, 0]
+    already_done = jnp.logical_or(lens >= s, frozen > 0)
+    key0 = jax.random.PRNGKey(seed[0])
+    temp = temperature[0]
+    tk = top_k[0]
+
+    def step(carry, _):
+        kv_k, kv_v, tok, pos, done, key = carry
+        key, sub = jax.random.split(key)
+        logits, kv_k, kv_v = _decode_one(cfg, params, kv_k, kv_v, tok, pos, done)
+        new_tok, logp = _sample(sub, logits, temp, tk)
+        new_tok = jnp.where(done, pad, new_tok)
+        logp = jnp.where(done, 0.0, logp)
+        new_done = jnp.logical_or(done, new_tok == eos)
+        new_pos = jnp.where(done, pos, pos + 1)
+        # hitting the end of the buffer also terminates the row
+        new_done = jnp.logical_or(new_done, new_pos >= s)
+        carry = (kv_k, kv_v, new_tok, new_pos, new_done, key)
+        return carry, (new_tok, logp)
+
+    # NOTE on positions: the prefix occupies [0, len); the first generated
+    # token is *written* at position len (cache write in _decode_one uses the
+    # query position pos, which for the first step must be len-1's successor).
+    # _decode_one writes the INPUT token's kv at `pos` then attends j <= pos;
+    # the input token of step 0 is tokens[len-1] whose kv already exists from
+    # prefill — overwriting it with identical values is benign, and the newly
+    # sampled token becomes the next step's input at pos+1.
+    carry0 = (kv_k, kv_v, last_tok, jnp.maximum(lens - 1, 0), already_done, key0)
+    (kv_k, kv_v, _, pos, done, _), (toks, logps) = jax.lax.scan(
+        step, carry0, None, length=c)
+
+    toks = toks.T.astype(jnp.float32)      # [B, C]
+    logps = logps.T                        # [B, C]
+    # pos is the position of the last *input* token; +1 counts the sampled
+    # token appended after it. A row that ends exactly at the buffer edge
+    # samples one token that no longer fits — clamp so new_len <= S (the
+    # caller drops the overflow sample).
+    new_len = jnp.minimum(pos + 1, s).astype(jnp.float32)
+    # rows that were already full keep their length
+    new_len = jnp.where(already_done, lens.astype(jnp.float32), new_len)
+    out = jnp.concatenate(
+        [toks, logps, new_len[:, None], done.astype(jnp.float32)[:, None]],
+        axis=1,
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Training (trainer executor artifact)
+
+
+def _adam_update(flat, m, v, step, grads, lr):
+    b1, b2, eps = configs.ADAM_B1, configs.ADAM_B2, configs.ADAM_EPS
+    m = b1 * m + (1.0 - b1) * grads
+    v = b2 * v + (1.0 - b2) * grads * grads
+    t = step + 1.0
+    mhat = m / (1.0 - b1**t)
+    vhat = v / (1.0 - b2**t)
+    return flat - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def train_step(cfg, state, tokens, targets, blogp, adv, mask, lens, hyp):
+    """One AIPO update over a packed train state.
+
+    Args:
+      state:   f32[TS] = [params | m | v | step | metrics]
+      tokens:  i32[B, T] input tokens (right-padded full sequences)
+      targets: i32[B, T] tokens[t+1] (next-token targets)
+      blogp:   f32[B, T] behaviour log-probs (0 where mask==0)
+      adv:     f32[B, T] per-token advantages
+      mask:    f32[B, T] 1.0 on response-token positions
+      lens:    i32[B]    valid lengths (for the attention mask)
+      hyp:     f32[3]    [lr, rho, grad_clip (<=0 disables)]
+
+    Returns the updated packed state f32[TS].
+    """
+    lay = configs.train_state_layout(cfg)
+    p_sz = lay["params"][1]
+    flat = jax.lax.slice(state, (0,), (p_sz,))
+    m = jax.lax.slice(state, (p_sz,), (2 * p_sz,))
+    v = jax.lax.slice(state, (2 * p_sz,), (3 * p_sz,))
+    step = state[3 * p_sz]
+    lr, rho, grad_clip = hyp[0], hyp[1], hyp[2]
+
+    b, t = tokens.shape
+    n = b * t
+
+    def loss_fn(flat_params):
+        params = unflatten_params(cfg, flat_params)
+        logits = forward_full(cfg, params, tokens, lens)           # [B,T,V]
+        loss_terms, logp, w, _, ent = aipo.aipo_loss_terms(
+            logits.reshape(n, -1),
+            targets.reshape(n),
+            blogp.reshape(n),
+            adv.reshape(n),
+            mask.reshape(n),
+            rho,
+        )
+        mflat = mask.reshape(n)
+        denom = jnp.maximum(jnp.sum(mflat), 1.0)
+        loss = jnp.sum(loss_terms) / denom
+        # diagnostics (all masked means)
+        ratio = jnp.exp(logp - blogp.reshape(n))
+        stats = dict(
+            mean_ratio=jnp.sum(ratio * mflat) / denom,
+            clip_frac=jnp.sum((ratio > rho) * mflat) / denom,
+            approx_kl=jnp.sum((blogp.reshape(n) - logp) * mflat) / denom,
+            entropy=jnp.sum(ent * mflat) / denom,
+            token_count=jnp.sum(mflat),
+            max_ratio=jnp.max(ratio * mflat),
+            adv_mean=jnp.sum(adv.reshape(n) * mflat) / denom,
+            target_logp=jnp.sum(logp * mflat) / denom,
+        )
+        return loss, stats
+
+    (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+    gnorm = jnp.sqrt(jnp.sum(grads * grads))
+    scale = jnp.where(
+        jnp.logical_and(grad_clip > 0.0, gnorm > grad_clip),
+        grad_clip / jnp.maximum(gnorm, 1e-12),
+        1.0,
+    )
+    grads = grads * scale
+    flat, m, v = _adam_update(flat, m, v, step, grads, lr)
+
+    metrics = jnp.stack([
+        loss,
+        stats["mean_ratio"],
+        stats["clip_frac"],
+        stats["approx_kl"],
+        stats["entropy"],
+        gnorm,
+        stats["token_count"],
+        stats["max_ratio"],
+        stats["adv_mean"],
+        stats["target_logp"],
+    ])
+    return jnp.concatenate([flat, m, v, (step + 1.0)[None], metrics])
+
+
+def extract_params(cfg, state):
+    p_sz = configs.train_state_layout(cfg)["params"][1]
+    return jax.lax.slice(state, (0,), (p_sz,))
+
+
+def extract_metrics(cfg, state):
+    """Returns f32[1 + n_metrics] = [step | metrics]."""
+    lay = configs.train_state_layout(cfg)
+    start = lay["step"][0]
+    return jax.lax.slice(state, (start,), (lay["total"],))
+
+
+def init_train_state(cfg, params_flat):
+    lay = configs.train_state_layout(cfg)
+    p_sz = lay["params"][1]
+    zeros = jnp.zeros(p_sz, jnp.float32)
+    tail = jnp.zeros(1 + len(configs.METRIC_NAMES), jnp.float32)
+    return jnp.concatenate([params_flat, zeros, zeros, tail])
+
+
+# ---------------------------------------------------------------------------
+# Evaluation / diagnostics artifact
+
+
+def logprobs_eval(cfg, params_flat, tokens, targets, lens):
+    """log pi(target_t | tokens_{<=t}) — f32[B, T].
+
+    Used by the Rust side for off-policy lag diagnostics (compare against the
+    recorded behaviour log-probs) and optional KL-to-reference penalties.
+    """
+    params = unflatten_params(cfg, params_flat)
+    logits = forward_full(cfg, params, tokens, lens)
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(logz, targets[:, :, None], axis=-1)[:, :, 0]

@@ -1,0 +1,88 @@
+"""AOT pipeline contract tests: manifest consistency and HLO-text validity.
+
+These validate the artifacts the Rust runtime consumes (skipped if `make
+artifacts` has not been run yet).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, configs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest(name):
+    path = os.path.join(ART, name, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip(f"{path} missing (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", ["nano", "small", "e2e"])
+def test_manifest_matches_configs(name):
+    m = _manifest(name)
+    cfg = configs.CONFIGS[name]
+    assert m["num_params"] == configs.num_params(cfg)
+    assert m["config"]["vocab"] == cfg["vocab"]
+    assert m["metric_names"] == configs.METRIC_NAMES
+    ts = configs.train_state_layout(cfg)
+    assert m["train_state"]["total"] == ts["total"]
+    # layout offsets are contiguous and cover num_params
+    off = 0
+    for entry in m["param_layout"]:
+        assert entry["offset"] == off
+        off += int(np.prod(entry["shape"]))
+    assert off == m["num_params"]
+
+
+@pytest.mark.parametrize("name", ["nano", "small", "e2e"])
+def test_artifact_io_shapes_match_defs(name):
+    m = _manifest(name)
+    cfg = configs.CONFIGS[name]
+    defs = aot.artifact_defs(cfg)
+    for art_name, defn in defs.items():
+        art = m["artifacts"][art_name]
+        want_inputs = [
+            {"name": n, "shape": list(s), "dtype": d} for n, s, d in defn["inputs"]
+        ]
+        assert art["inputs"] == want_inputs, art_name
+        assert tuple(art["output"]["shape"]) == defn["output"][0]
+
+
+@pytest.mark.parametrize("name", ["nano", "small", "e2e"])
+def test_hlo_files_exist_and_are_hlo_text(name):
+    m = _manifest(name)
+    base = os.path.join(ART, name)
+    for art_name, art in m["artifacts"].items():
+        path = os.path.join(base, art["file"])
+        assert os.path.exists(path), art_name
+        with open(path) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), f"{art_name} is not HLO text"
+
+
+@pytest.mark.parametrize("name", ["nano", "small", "e2e"])
+def test_init_checkpoint_matches_python_init(name):
+    m = _manifest(name)
+    cfg = configs.CONFIGS[name]
+    path = os.path.join(ART, name, "init_params.bin")
+    data = np.fromfile(path, dtype="<f4")
+    assert data.shape == (m["num_params"],)
+    from compile import model
+
+    want = np.asarray(model.init_params(cfg, seed=0))
+    np.testing.assert_array_equal(data, want)
+
+
+def test_fig5_variants_present_for_small():
+    m = _manifest("small")
+    for b in m["fig5"]["train_batches"]:
+        assert f"fig5_train_b{b}" in m["artifacts"]
+    for b in m["fig5"]["gen_batches"]:
+        art = m["artifacts"][f"fig5_gen_b{b}"]
+        assert art["inputs"][1]["shape"][0] == b

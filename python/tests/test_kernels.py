@@ -1,0 +1,163 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and value regimes; these are the core correctness
+signal for the kernels that end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aipo, attention, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _mk_aipo_case(rng, n, v, extreme=False):
+    scale = 20.0 if extreme else 2.0
+    logits = rng.normal(size=(n, v)).astype(np.float32) * scale
+    targets = rng.integers(0, v, n).astype(np.int32)
+    blogp = (rng.normal(size=n) - 2.0).astype(np.float32)
+    adv = rng.normal(size=n).astype(np.float32)
+    mask = rng.integers(0, 2, n).astype(np.float32)
+    return logits, targets, blogp, adv, mask
+
+
+@given(
+    n=st.integers(1, 40),
+    v=st.sampled_from([8, 64, 257, 512]),
+    rho=st.floats(1.0, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+    extreme=st.booleans(),
+)
+def test_aipo_fwd_matches_ref(n, v, rho, seed, extreme):
+    rng = np.random.default_rng(seed)
+    logits, targets, blogp, adv, mask = _mk_aipo_case(rng, n, v, extreme)
+    rho = jnp.float32(rho)
+    outs_k = aipo.aipo_loss_terms(logits, targets, blogp, adv, mask, rho)
+    outs_r = ref.aipo_loss_terms_ref(logits, targets, blogp, adv, mask, rho)
+    names = ["loss_terms", "logp", "w", "lse", "entropy"]
+    for a, b, name in zip(outs_k, outs_r, names):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5, err_msg=name)
+
+
+@given(
+    n=st.integers(1, 24),
+    v=st.sampled_from([8, 64, 130]),
+    rho=st.floats(1.0, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aipo_grad_matches_ref(n, v, rho, seed):
+    rng = np.random.default_rng(seed)
+    logits, targets, blogp, adv, mask = _mk_aipo_case(rng, n, v)
+    rho = jnp.float32(rho)
+
+    def total(lg):
+        return jnp.sum(aipo.aipo_loss_terms(lg, targets, blogp, adv, mask, rho)[0])
+
+    g_k = jax.grad(total)(jnp.asarray(logits))
+    _, _, w, lse, _ = ref.aipo_loss_terms_ref(logits, targets, blogp, adv, mask, rho)
+    g_r = ref.aipo_grad_logits_ref(
+        jnp.asarray(logits), targets, lse, w, adv, mask, jnp.ones(n, jnp.float32))
+    np.testing.assert_allclose(g_k, g_r, rtol=2e-5, atol=2e-5)
+
+
+def test_aipo_grad_is_paper_estimator():
+    """The clipped ratio must NOT be differentiated through (paper §6)."""
+    rng = np.random.default_rng(7)
+    n, v = 6, 16
+    logits, targets, _, adv, _ = _mk_aipo_case(rng, n, v)
+    mask = np.ones(n, np.float32)
+    # Make everything heavily clipped: behaviour logp very low -> ratio >> rho.
+    blogp = np.full(n, -30.0, np.float32)
+    rho = jnp.float32(2.0)
+
+    def total(lg):
+        return jnp.sum(aipo.aipo_loss_terms(lg, targets, blogp, adv, mask, rho)[0])
+
+    g = np.asarray(jax.grad(total)(jnp.asarray(logits)))
+    # expected: -rho * adv * (onehot - softmax): finite and proportional to rho
+    lse = np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1)) + logits.max(-1)
+    sm = np.exp(logits - lse[:, None])
+    onehot = np.eye(v, dtype=np.float32)[targets]
+    expected = (-2.0 * adv)[:, None] * (onehot - sm)
+    np.testing.assert_allclose(g, expected, rtol=1e-4, atol=1e-4)
+
+
+def test_aipo_zero_mask_zero_loss_and_grad():
+    rng = np.random.default_rng(3)
+    n, v = 9, 32
+    logits, targets, blogp, adv, _ = _mk_aipo_case(rng, n, v)
+    mask = np.zeros(n, np.float32)
+    loss_terms = aipo.aipo_loss_terms(logits, targets, blogp, adv, mask, jnp.float32(3.0))[0]
+    assert float(jnp.sum(jnp.abs(loss_terms))) == 0.0
+
+    def total(lg):
+        return jnp.sum(aipo.aipo_loss_terms(lg, targets, blogp, adv, mask, jnp.float32(3.0))[0])
+
+    g = jax.grad(total)(jnp.asarray(logits))
+    assert float(jnp.max(jnp.abs(g))) == 0.0
+
+
+@given(
+    b=st.integers(1, 5),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([4, 16, 33, 64]),
+    dh=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, s, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(b, h, dh)).astype(np.float32)
+    k = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    limit = rng.integers(1, s + 1, b).astype(np.int32)
+    out_k = attention.decode_attention(q, k, v, limit)
+    out_r = ref.decode_attention_ref(q, k, v, limit)
+    np.testing.assert_allclose(out_k, out_r, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_respects_limit():
+    """Keys at positions >= limit must have zero influence."""
+    rng = np.random.default_rng(11)
+    b, h, s, dh = 2, 2, 16, 8
+    q = rng.normal(size=(b, h, dh)).astype(np.float32)
+    k = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    limit = np.array([5, 9], np.int32)
+    out1 = attention.decode_attention(q, k, v, limit)
+    # scribble over the masked region
+    k2, v2 = k.copy(), v.copy()
+    for row, lim in enumerate(limit):
+        k2[row, :, lim:, :] = 1e6
+        v2[row, :, lim:, :] = -1e6
+    out2 = attention.decode_attention(q, k2, v2, limit)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_single_key():
+    """limit=1 -> output is exactly v[:, :, 0, :]."""
+    rng = np.random.default_rng(13)
+    b, h, s, dh = 3, 2, 8, 4
+    q = rng.normal(size=(b, h, dh)).astype(np.float32)
+    k = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    limit = np.ones(b, np.int32)
+    out = attention.decode_attention(q, k, v, limit)
+    np.testing.assert_allclose(out, v[:, :, 0, :], rtol=1e-6, atol=1e-6)
+
+
+def test_aipo_rho_nonpositive_disables_correction():
+    """rho <= 0 -> w = 1 everywhere (Fig. 8 no-correction ablation arm)."""
+    rng = np.random.default_rng(21)
+    n, v = 10, 32
+    logits, targets, blogp, adv, mask = _mk_aipo_case(rng, n, v)
+    mask = np.ones(n, np.float32)
+    loss, logp, w, _, _ = aipo.aipo_loss_terms(
+        logits, targets, blogp, adv, mask, jnp.float32(-1.0))
+    np.testing.assert_allclose(w, np.ones(n), rtol=1e-6)
+    np.testing.assert_allclose(loss, -np.asarray(adv) * np.asarray(logp),
+                               rtol=1e-5, atol=1e-6)

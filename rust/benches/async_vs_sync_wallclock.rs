@@ -1,0 +1,106 @@
+//! Bench: §8.2 architecture check on THIS testbed — the identical
+//! coordinator code (controller, executors, channels, DDMA bus) run in both
+//! modes over the real nano artifacts, wall-clock compared.
+//!
+//! NOTE on interpretation: this host has ONE core, so real PJRT compute
+//! cannot overlap and the async win here comes only from pipelining slack
+//! (it can even lose slightly to scheduling overhead). The cluster-scale
+//! wall-clock claim is reproduced by the DES/cost-model benches; THIS bench
+//! proves the coordinator machinery itself adds negligible overhead and
+//! that its async data path (lag, backpressure, DDMA) behaves as designed
+//! under real execution.
+
+use llamarl::coordinator::{run_training, Mode, PipelineConfig};
+use llamarl::util::bench::Table;
+
+fn main() {
+    if !std::path::Path::new("artifacts/nano/manifest.json").exists() {
+        eprintln!("artifacts/nano missing — run `make artifacts` first");
+        std::process::exit(0);
+    }
+    println!("\n=== async vs sync wall-clock, real pipeline (nano artifacts) ===\n");
+    let steps = 12u64;
+    let base = PipelineConfig {
+        artifact_dir: "artifacts/nano".into(),
+        max_steps: steps,
+        max_response: 10,
+        n_generations: 4,
+        eval_every: 0,
+        ..PipelineConfig::default()
+    };
+
+    let sync = run_training(&PipelineConfig {
+        mode: Mode::Sync,
+        out_dir: std::env::temp_dir().join("llamarl_bench_sync"),
+        ..base.clone()
+    })
+    .expect("sync run");
+
+    let async1 = run_training(&PipelineConfig {
+        mode: Mode::Async,
+        n_generator_workers: 1,
+        out_dir: std::env::temp_dir().join("llamarl_bench_async1"),
+        ..base.clone()
+    })
+    .expect("async run");
+
+    let async2 = run_training(&PipelineConfig {
+        mode: Mode::Async,
+        n_generator_workers: 2,
+        out_dir: std::env::temp_dir().join("llamarl_bench_async2"),
+        ..base
+    })
+    .expect("async run");
+
+    let mut t = Table::new(&[
+        "mode",
+        "s/step",
+        "tokens",
+        "trajs",
+        "mean lag",
+        "ddma ms",
+        "gen blocked s",
+    ]);
+    for r in [&sync, &async1, &async2] {
+        let mean_lag = if r.records.is_empty() {
+            0.0
+        } else {
+            r.records.iter().map(|x| x.mean_lag).sum::<f64>() / r.records.len() as f64
+        };
+        t.row(vec![
+            format!(
+                "{}{}",
+                r.mode,
+                if r.mode == "async" {
+                    format!(" w={}", if std::ptr::eq(r, &async2) { 2 } else { 1 })
+                } else {
+                    String::new()
+                }
+            ),
+            format!("{:.3}", r.mean_step_secs()),
+            r.tokens_generated.to_string(),
+            r.trajectories.to_string(),
+            format!("{mean_lag:.2}"),
+            format!("{:.2}", r.ddma_mean_publish_secs * 1e3),
+            format!("{:.2}", r.gen_send_blocked_secs),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\ntrainer compute share of sync step: {:.1}%  (the rest is the Fig-2 bubble)",
+        100.0
+            * sync.records.iter().map(|r| r.wall_secs).sum::<f64>()
+            / sync.wall_secs.max(1e-9)
+    );
+    println!(
+        "async off-policy lag: mean {:.2}, max {}",
+        async2
+            .records
+            .iter()
+            .map(|x| x.mean_lag)
+            .sum::<f64>()
+            / async2.records.len().max(1) as f64,
+        async2.records.iter().map(|x| x.max_lag).max().unwrap_or(0)
+    );
+}

@@ -1,0 +1,82 @@
+//! Bench: paper **Table 4** — weight-synchronization time, OpenRLHF's
+//! parameter-server path vs DDMA.
+//!
+//! Three layers of evidence:
+//!   1. the calibrated cluster models (PS power law through OpenRLHF's
+//!      published points; DDMA shard model through the paper's points),
+//!   2. the paper's ">900 s at 405B" PS extrapolation,
+//!   3. REAL measurements of this repo's in-process DDMA handoff (sharded
+//!      snapshot copy + bus publish + subscriber attach) across sizes.
+
+use llamarl::ddma::ps_baseline::PsModel;
+use llamarl::ddma::topology::DdmaModel;
+use llamarl::ddma::{sharded_copy, WeightsBus};
+use llamarl::util::bench::{fmt_secs, time_fn, Table};
+use llamarl::util::stats::summarize;
+
+fn main() {
+    println!("\n=== Table 4: weight synchronization time (seconds) ===\n");
+    let ddma = DdmaModel::calibrated();
+    let ps = PsModel::calibrated();
+
+    let mut t = Table::new(&[
+        "model",
+        "paper PS",
+        "model PS",
+        "paper DDMA",
+        "model DDMA",
+        "DDMA floor",
+    ]);
+    let rows: [(&str, f64, usize, Option<f64>, Option<f64>); 3] = [
+        ("7B", 7e9, 128, Some(4.32), Some(0.04)),
+        ("70B", 70e9, 128, Some(111.65), Some(1.15)),
+        ("405B", 405e9, 512, None, Some(2.31)),
+    ];
+    for (name, params, gpus, ps_paper, ddma_paper) in rows {
+        t.row(vec![
+            name.into(),
+            ps_paper.map(|x| format!("{x:.2}")).unwrap_or("-".into()),
+            format!("{:.2}", ps.sync_secs(params)),
+            ddma_paper.map(|x| format!("{x:.2}")).unwrap_or("-".into()),
+            format!("{:.2}", ddma.sync_secs(params, gpus)),
+            format!("{:.4}", ddma.floor_secs(params, gpus)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper: PS at 405B estimated >900 s; model extrapolates {:.0} s\n",
+        ps.sync_secs(405e9)
+    );
+
+    println!("--- real in-process DDMA handoff (this testbed) ---\n");
+    let mut rt = Table::new(&["params", "bytes", "sharded copy", "publish+attach", "GB/s"]);
+    for p in [29_312usize, 655_744, 3_352_064, 16_777_216] {
+        let src: Vec<f32> = (0..p).map(|i| i as f32 * 0.001).collect();
+        let copy_samples = time_fn(2, 10, || {
+            let c = sharded_copy(&src, 16);
+            std::hint::black_box(c.data.len());
+        });
+        let bus = WeightsBus::new(src.clone());
+        let publish_samples = time_fn(2, 10, || {
+            let v = bus.publish(src.clone());
+            let snap = bus.latest();
+            std::hint::black_box((v, snap.data[0]));
+        });
+        let cs = summarize(&copy_samples);
+        let pubs = summarize(&publish_samples);
+        let bytes = p * 4;
+        rt.row(vec![
+            format!("{p}"),
+            format!("{:.1}MB", bytes as f64 / 1e6),
+            fmt_secs(cs.p50),
+            fmt_secs(pubs.p50),
+            format!("{:.2}", bytes as f64 / cs.p50.max(1e-12) / 1e9),
+        ]);
+    }
+    rt.print();
+    println!(
+        "\nShape checks: DDMA is 2-3 orders of magnitude below PS at every size;\n\
+         DDMA time is constant at fixed shard size (linear scalability);\n\
+         PS grows superlinearly with model size."
+    );
+}

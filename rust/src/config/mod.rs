@@ -1,0 +1,202 @@
+//! Run configuration: named presets + JSON config files + CLI overrides.
+//!
+//! The `llamarl` binary resolves a [`PipelineConfig`] as
+//! `preset <- json file (--config) <- CLI flags`, so experiments are
+//! reproducible from a single artifact.
+
+use std::path::PathBuf;
+
+use crate::coordinator::{Mode, PipelineConfig};
+use crate::rl::{AipoConfig, Baseline};
+use crate::util::cli::Args;
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Named presets. `nano` for smoke tests, `small` for integration-scale
+/// runs, `e2e` for the headline end-to-end training driver.
+pub fn preset(name: &str) -> Result<PipelineConfig> {
+    let mut cfg = PipelineConfig::default();
+    match name {
+        "nano" => {
+            cfg.artifact_dir = "artifacts/nano".into();
+            cfg.max_steps = 5;
+            cfg.max_response = 12;
+            cfg.n_generator_workers = 1;
+        }
+        "small" => {
+            cfg.artifact_dir = "artifacts/small".into();
+            cfg.max_steps = 50;
+            cfg.max_response = 16;
+            cfg.n_generator_workers = 1;
+            cfg.eval_every = 10;
+            cfg.eval_max_per_suite = 32;
+        }
+        "e2e" => {
+            cfg.artifact_dir = "artifacts/e2e".into();
+            cfg.max_steps = 300;
+            cfg.max_response = 20;
+            cfg.n_generator_workers = 2;
+            cfg.queue_capacity = 4;
+            cfg.eval_every = 25;
+            cfg.eval_max_per_suite = 64;
+            cfg.aipo = AipoConfig {
+                lr: 3e-4,
+                rho: 4.0,
+                grad_clip: 1.0,
+                baseline: Baseline::GroupMean,
+            };
+        }
+        other => return Err(Error::Config(format!("unknown preset '{other}'"))),
+    }
+    Ok(cfg)
+}
+
+fn parse_mode(s: &str) -> Result<Mode> {
+    match s {
+        "sync" => Ok(Mode::Sync),
+        "async" => Ok(Mode::Async),
+        other => Err(Error::Config(format!("mode must be sync|async, got '{other}'"))),
+    }
+}
+
+fn parse_baseline(s: &str) -> Result<Baseline> {
+    match s {
+        "group_mean" => Ok(Baseline::GroupMean),
+        "rloo" => Ok(Baseline::LeaveOneOut),
+        "none" => Ok(Baseline::None),
+        other => Err(Error::Config(format!(
+            "baseline must be group_mean|rloo|none, got '{other}'"
+        ))),
+    }
+}
+
+/// Apply a parsed JSON config object over `cfg`.
+pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
+    let obj = v
+        .as_object()
+        .ok_or_else(|| Error::Config("config file must be a JSON object".into()))?;
+    for (k, val) in obj {
+        match k.as_str() {
+            "artifact_dir" => cfg.artifact_dir = PathBuf::from(val.as_str().unwrap_or("")),
+            "mode" => cfg.mode = parse_mode(val.as_str().unwrap_or(""))?,
+            "n_generator_workers" => cfg.n_generator_workers = val.as_usize().unwrap_or(1),
+            "queue_capacity" => cfg.queue_capacity = val.as_usize().unwrap_or(4),
+            "scored_capacity" => cfg.scored_capacity = val.as_usize().unwrap_or(8),
+            "n_generations" => cfg.n_generations = val.as_usize().unwrap_or(4),
+            "baseline" => cfg.baseline = parse_baseline(val.as_str().unwrap_or(""))?,
+            "max_steps" => cfg.max_steps = val.as_i64().unwrap_or(1) as u64,
+            "lr" => cfg.aipo.lr = val.as_f64().unwrap_or(2e-4) as f32,
+            "rho" => cfg.aipo.rho = val.as_f64().unwrap_or(4.0) as f32,
+            "grad_clip" => cfg.aipo.grad_clip = val.as_f64().unwrap_or(1.0) as f32,
+            "temperature" => cfg.temperature = val.as_f64().unwrap_or(1.0) as f32,
+            "top_k" => cfg.top_k = val.as_i64().unwrap_or(0) as i32,
+            "quantize_generator" => cfg.quantize_generator = val.as_bool().unwrap_or(false),
+            "max_response" => cfg.max_response = val.as_usize().unwrap_or(usize::MAX),
+            "eval_every" => cfg.eval_every = val.as_i64().unwrap_or(0) as u64,
+            "eval_max_per_suite" => cfg.eval_max_per_suite = val.as_usize().unwrap_or(64),
+            "checkpoint_every" => cfg.checkpoint_every = val.as_i64().unwrap_or(0) as u64,
+            "seed" => cfg.seed = val.as_i64().unwrap_or(0) as u64,
+            "out_dir" => cfg.out_dir = PathBuf::from(val.as_str().unwrap_or("")),
+            "init_checkpoint" => {
+                cfg.init_checkpoint = Some(PathBuf::from(val.as_str().unwrap_or("")))
+            }
+            other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+        }
+    }
+    Ok(())
+}
+
+/// Apply CLI flags over `cfg` (same keys as the JSON file).
+pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
+    if let Some(v) = args.str_opt("artifacts") {
+        cfg.artifact_dir = PathBuf::from(v);
+    }
+    if let Some(v) = args.str_opt("mode") {
+        cfg.mode = parse_mode(v)?;
+    }
+    if let Some(v) = args.str_opt("baseline") {
+        cfg.baseline = parse_baseline(v)?;
+    }
+    cfg.n_generator_workers = args.usize_or("workers", cfg.n_generator_workers)?;
+    cfg.queue_capacity = args.usize_or("queue-capacity", cfg.queue_capacity)?;
+    cfg.n_generations = args.usize_or("n-generations", cfg.n_generations)?;
+    cfg.max_steps = args.u64_or("steps", cfg.max_steps)?;
+    cfg.aipo.lr = args.f64_or("lr", cfg.aipo.lr as f64)? as f32;
+    cfg.aipo.rho = args.f64_or("rho", cfg.aipo.rho as f64)? as f32;
+    cfg.aipo.grad_clip = args.f64_or("grad-clip", cfg.aipo.grad_clip as f64)? as f32;
+    cfg.temperature = args.f64_or("temperature", cfg.temperature as f64)? as f32;
+    cfg.top_k = args.u64_or("top-k", cfg.top_k as u64)? as i32;
+    if args.flag("quantize-generator") {
+        cfg.quantize_generator = true;
+    }
+    cfg.max_response = args.usize_or("max-response", cfg.max_response)?;
+    cfg.eval_every = args.u64_or("eval-every", cfg.eval_every)?;
+    cfg.eval_max_per_suite = args.usize_or("eval-problems", cfg.eval_max_per_suite)?;
+    cfg.checkpoint_every = args.u64_or("checkpoint-every", cfg.checkpoint_every)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    if let Some(v) = args.str_opt("out") {
+        cfg.out_dir = PathBuf::from(v);
+    }
+    if let Some(v) = args.str_opt("init-checkpoint") {
+        cfg.init_checkpoint = Some(PathBuf::from(v));
+    }
+    Ok(())
+}
+
+/// Full resolution: preset -> optional --config file -> CLI flags.
+pub fn resolve(args: &Args) -> Result<PipelineConfig> {
+    let preset_name = args.str_or("preset", "nano");
+    let mut cfg = preset(&preset_name)?;
+    if let Some(path) = args.str_opt("config") {
+        let text = std::fs::read_to_string(path)?;
+        apply_json(&mut cfg, &Value::parse(&text)?)?;
+    }
+    apply_cli(&mut cfg, args)?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for p in ["nano", "small", "e2e"] {
+            assert!(preset(p).is_ok());
+        }
+        assert!(preset("bogus").is_err());
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        let v = Value::parse(r#"{"mode":"sync","rho":7.5,"max_steps":99}"#).unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert_eq!(cfg.mode, Mode::Sync);
+        assert_eq!(cfg.aipo.rho, 7.5);
+        assert_eq!(cfg.max_steps, 99);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = preset("nano").unwrap();
+        let v = Value::parse(r#"{"typo_key":1}"#).unwrap();
+        assert!(apply_json(&mut cfg, &v).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        let args = Args::parse(
+            ["--mode", "sync", "--rho", "2.0", "--quantize-generator"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["quantize-generator"],
+        )
+        .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.mode, Mode::Sync);
+        assert_eq!(cfg.aipo.rho, 2.0);
+        assert!(cfg.quantize_generator);
+    }
+}

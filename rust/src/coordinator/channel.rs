@@ -1,0 +1,305 @@
+//! Communication channels between executors (paper §5.1.2).
+//!
+//! A channel is a directed, *bounded* link with a distribution paradigm:
+//!
+//! * **GATHER**  — many outbound processes, one inbound executor (generator
+//!   workers -> reward executor). Implemented as a cloned-producer mpsc.
+//! * **SCATTER** — one outbound executor, chunks round-robined over inbound
+//!   processes (reward -> trainer microbatch streams).
+//! * **BROADCAST** — identical copy to every inbound process.
+//!
+//! Boundedness is load-bearing: a full channel blocks the sender, which is
+//! the backpressure that (a) keeps memory bounded and (b) caps off-policy
+//! lag in the async pipeline (a generator can run at most
+//! `capacity / rows-per-step` steps ahead of the trainer).
+//!
+//! Weight updates use the dedicated DDMA bus ([`crate::ddma::WeightsBus`])
+//! rather than a message channel — matching the paper's distinction between
+//! data channels and the DDMA weights path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::rl::Trajectory;
+use crate::util::error::{Error, Result};
+
+/// Data messages flowing between executors.
+#[derive(Debug)]
+pub enum Message {
+    /// raw generations (generator -> reward)
+    Trajectories(Vec<Trajectory>),
+    /// scored + advantage-filled groups (reward -> trainer)
+    Scored(Vec<Trajectory>),
+    /// drain marker: the upstream executor finished
+    Eof,
+}
+
+/// Shared channel telemetry (backpressure accounting for the perf pass and
+/// the bubble benches).
+#[derive(Debug, Default)]
+pub struct ChannelStats {
+    pub messages: AtomicU64,
+    pub items: AtomicU64,
+    pub send_blocked_nanos: AtomicU64,
+    pub recv_blocked_nanos: AtomicU64,
+}
+
+impl ChannelStats {
+    pub fn send_blocked_secs(&self) -> f64 {
+        self.send_blocked_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn recv_blocked_secs(&self) -> f64 {
+        self.recv_blocked_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+/// Sending half. Cloneable for GATHER (many producers).
+pub struct Outbound {
+    pub name: String,
+    senders: Vec<SyncSender<Message>>,
+    next: std::cell::Cell<usize>,
+    pub stats: Arc<ChannelStats>,
+}
+
+impl Clone for Outbound {
+    fn clone(&self) -> Self {
+        Outbound {
+            name: self.name.clone(),
+            senders: self.senders.clone(),
+            next: std::cell::Cell::new(0),
+            stats: self.stats.clone(),
+        }
+    }
+}
+
+/// Receiving half (one per inbound process).
+pub struct Inbound {
+    pub name: String,
+    rx: Receiver<Message>,
+    pub stats: Arc<ChannelStats>,
+}
+
+fn count_items(m: &Message) -> u64 {
+    match m {
+        Message::Trajectories(v) | Message::Scored(v) => v.len() as u64,
+        Message::Eof => 0,
+    }
+}
+
+impl Outbound {
+    /// Blocking send with backpressure accounting. SCATTER round-robins the
+    /// message to one inbound process; GATHER/BROADCAST have a single slot.
+    pub fn send(&self, msg: Message) -> Result<()> {
+        let items = count_items(&msg);
+        let idx = self.next.get() % self.senders.len();
+        self.next.set(idx + 1);
+        let t0 = Instant::now();
+        self.senders[idx]
+            .send(msg)
+            .map_err(|_| Error::ChannelClosed(self.name.clone()))?;
+        let dt = t0.elapsed();
+        // (send on a non-full channel is ~free; anything measurable is
+        // backpressure block time)
+        self.stats
+            .send_blocked_nanos
+            .fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.items.fetch_add(items, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Non-blocking send; returns the message back if the channel is full.
+    pub fn try_send(&self, msg: Message) -> std::result::Result<(), Message> {
+        let items = count_items(&msg);
+        let idx = self.next.get() % self.senders.len();
+        match self.senders[idx].try_send(msg) {
+            Ok(()) => {
+                self.next.set(idx + 1);
+                self.stats.messages.fetch_add(1, Ordering::Relaxed);
+                self.stats.items.fetch_add(items, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(m)) | Err(TrySendError::Disconnected(m)) => Err(m),
+        }
+    }
+
+    /// Signal EOF to every inbound process.
+    pub fn send_eof(&self) {
+        for s in &self.senders {
+            let _ = s.send(Message::Eof);
+        }
+    }
+}
+
+impl Inbound {
+    /// Blocking receive with starvation accounting.
+    pub fn recv(&self) -> Result<Message> {
+        let t0 = Instant::now();
+        let m = self
+            .rx
+            .recv()
+            .map_err(|_| Error::ChannelClosed(self.name.clone()))?;
+        self.stats
+            .recv_blocked_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(m)
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> std::result::Result<Message, RecvTimeoutError> {
+        let t0 = Instant::now();
+        let r = self.rx.recv_timeout(d);
+        self.stats
+            .recv_blocked_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        r
+    }
+
+    pub fn try_recv(&self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// GATHER: many producers (clone the Outbound), one consumer.
+pub fn gather_channel(name: &str, capacity: usize) -> (Outbound, Inbound) {
+    let (tx, rx) = sync_channel(capacity);
+    let stats = Arc::new(ChannelStats::default());
+    (
+        Outbound {
+            name: name.to_string(),
+            senders: vec![tx],
+            next: std::cell::Cell::new(0),
+            stats: stats.clone(),
+        },
+        Inbound {
+            name: name.to_string(),
+            rx,
+            stats,
+        },
+    )
+}
+
+/// SCATTER: one producer, `n` consumers, round-robin delivery.
+pub fn scatter_channel(name: &str, capacity: usize, n: usize) -> (Outbound, Vec<Inbound>) {
+    let stats = Arc::new(ChannelStats::default());
+    let mut senders = Vec::with_capacity(n);
+    let mut inbounds = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = sync_channel(capacity);
+        senders.push(tx);
+        inbounds.push(Inbound {
+            name: name.to_string(),
+            rx,
+            stats: stats.clone(),
+        });
+    }
+    (
+        Outbound {
+            name: name.to_string(),
+            senders,
+            next: std::cell::Cell::new(0),
+            stats,
+        },
+        inbounds,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traj(group_id: u64) -> Trajectory {
+        use crate::data::{Difficulty, Problem};
+        Trajectory {
+            group_id,
+            replica: 0,
+            n_replicas: 1,
+            problem: Problem {
+                prompt: "1+1=".into(),
+                answer: "2".into(),
+                difficulty: Difficulty::Add1,
+            },
+            prompt_tokens: vec![1],
+            response_tokens: vec![2],
+            behavior_logp: vec![-0.5],
+            gen_version: 0,
+            chunks: 1,
+            finish: crate::rl::FinishReason::Eos,
+            reward: 0.0,
+            advantage: 0.0,
+        }
+    }
+
+    #[test]
+    fn gather_many_producers() {
+        let (tx, rx) = gather_channel("g", 16);
+        let mut handles = vec![];
+        for i in 0..4 {
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                tx.send(Message::Trajectories(vec![traj(i)])).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut seen = vec![];
+        for _ in 0..4 {
+            if let Message::Trajectories(v) = rx.recv().unwrap() {
+                seen.push(v[0].group_id);
+            }
+        }
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert_eq!(rx.stats.messages.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn scatter_round_robins() {
+        let (tx, rxs) = scatter_channel("s", 4, 2);
+        for i in 0..4 {
+            tx.send(Message::Scored(vec![traj(i)])).unwrap();
+        }
+        let get = |rx: &Inbound| match rx.recv().unwrap() {
+            Message::Scored(v) => v[0].group_id,
+            _ => panic!(),
+        };
+        assert_eq!(get(&rxs[0]), 0);
+        assert_eq!(get(&rxs[1]), 1);
+        assert_eq!(get(&rxs[0]), 2);
+        assert_eq!(get(&rxs[1]), 3);
+    }
+
+    #[test]
+    fn bounded_channel_backpressures() {
+        let (tx, rx) = gather_channel("bp", 1);
+        tx.send(Message::Trajectories(vec![traj(0)])).unwrap();
+        // second send must block until the consumer drains
+        let t = std::thread::spawn(move || {
+            tx.send(Message::Trajectories(vec![traj(1)])).unwrap();
+            tx.stats.send_blocked_secs()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let _ = rx.recv().unwrap();
+        let blocked = t.join().unwrap();
+        assert!(blocked > 0.03, "sender should have blocked, got {blocked}");
+    }
+
+    #[test]
+    fn eof_reaches_all_consumers() {
+        let (tx, rxs) = scatter_channel("eof", 2, 3);
+        tx.send_eof();
+        for rx in &rxs {
+            assert!(matches!(rx.recv().unwrap(), Message::Eof));
+        }
+    }
+
+    #[test]
+    fn try_send_full_returns_message() {
+        let (tx, _rx) = gather_channel("full", 1);
+        assert!(tx.try_send(Message::Trajectories(vec![traj(0)])).is_ok());
+        assert!(tx.try_send(Message::Trajectories(vec![traj(1)])).is_err());
+    }
+}

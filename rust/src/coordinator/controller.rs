@@ -1,0 +1,427 @@
+//! The single Controller (paper §5.1.3, Algorithm 1): wires executors and
+//! channels into one training job and runs it to `max_steps`.
+//!
+//! Two execution architectures behind one entry point ([`run_training`]):
+//!
+//! * [`Mode::Sync`] — the DeepSpeed-Chat-like baseline (paper §8.1): one
+//!   thread drives generate → score → train strictly sequentially; every
+//!   step's batch is generated to completion under the current weights
+//!   (fully on-policy, with the all-rows-finish straggler bubble).
+//! * [`Mode::Async`] — LlamaRL: each executor free-runs on its own thread
+//!   (its own PJRT context = its own "processing group"), connected by
+//!   bounded GATHER/SCATTER channels; the trainer publishes weights over
+//!   the DDMA bus; generation is continuously batched with partial
+//!   rollouts. Off-policy lag is bounded by channel capacity and corrected
+//!   by AIPO.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::channel::{gather_channel, scatter_channel};
+use crate::coordinator::evaluator::{eval_policy, EvalResult, EvaluatorConfig, EvaluatorExecutor};
+use crate::coordinator::executor::{run_executor_loop, Executor, ExecutorContext, StepOutcome};
+use crate::coordinator::generator::{GeneratorConfig, GeneratorWorker};
+use crate::coordinator::reward::RewardExecutor;
+use crate::coordinator::trainer::{Trainer, TrainStepRecord, TrainerConfig};
+use crate::data::{task, PromptScheduler};
+use crate::ddma::WeightsBus;
+use crate::model::load_init_params;
+use crate::rl::{AipoConfig, Baseline};
+use crate::runtime::Manifest;
+use crate::util::error::{Error, Result};
+use crate::util::logging::JsonlWriter;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Sync,
+    Async,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub artifact_dir: PathBuf,
+    pub mode: Mode,
+    /// data-parallel generator workers (async mode)
+    pub n_generator_workers: usize,
+    /// gen->reward channel capacity, in messages (bounds off-policy lag)
+    pub queue_capacity: usize,
+    /// reward->trainer channel capacity, in groups
+    pub scored_capacity: usize,
+    /// generations per prompt (the advantage group, paper n=4)
+    pub n_generations: usize,
+    pub baseline: Baseline,
+    pub max_steps: u64,
+    pub aipo: AipoConfig,
+    pub temperature: f32,
+    pub top_k: i32,
+    pub quantize_generator: bool,
+    pub max_response: usize,
+    /// evaluate every k weight versions (0 disables)
+    pub eval_every: u64,
+    pub eval_max_per_suite: usize,
+    pub checkpoint_every: u64,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+    /// start RL from this pretrained checkpoint (bare params) instead of
+    /// the random init — see coordinator::pretrain
+    pub init_checkpoint: Option<PathBuf>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            artifact_dir: "artifacts/nano".into(),
+            mode: Mode::Async,
+            n_generator_workers: 1,
+            queue_capacity: 4,
+            scored_capacity: 8,
+            n_generations: 4,
+            baseline: Baseline::GroupMean,
+            max_steps: 5,
+            aipo: AipoConfig::default(),
+            temperature: 1.0,
+            top_k: 0,
+            quantize_generator: false,
+            max_response: 32,
+            eval_every: 0,
+            eval_max_per_suite: 64,
+            checkpoint_every: 0,
+            seed: 0,
+            out_dir: std::env::temp_dir().join("llamarl_run"),
+            init_checkpoint: None,
+        }
+    }
+}
+
+/// Everything a finished run reports (examples and benches consume this).
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub mode: String,
+    pub steps: u64,
+    pub wall_secs: f64,
+    pub records: Vec<TrainStepRecord>,
+    pub evals: Vec<EvalResult>,
+    pub tokens_generated: u64,
+    pub trajectories: u64,
+    pub chunks: u64,
+    pub weight_refreshes: u64,
+    pub ddma_publishes: u64,
+    pub ddma_mean_publish_secs: f64,
+    pub gen_send_blocked_secs: f64,
+    pub trainer_recv_blocked_secs: f64,
+    pub metrics_path: Option<PathBuf>,
+}
+
+impl RunReport {
+    pub fn mean_step_secs(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.wall_secs / self.steps as f64
+        }
+    }
+
+    pub fn final_reward(&self) -> f64 {
+        self.records.last().map(|r| r.reward_mean).unwrap_or(0.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} mode: {} steps in {:.1}s ({:.2}s/step), {} trajs, {} tokens, \
+             final reward {:.3}, ddma {:.1}ms/publish",
+            self.mode,
+            self.steps,
+            self.wall_secs,
+            self.mean_step_secs(),
+            self.trajectories,
+            self.tokens_generated,
+            self.final_reward(),
+            self.ddma_mean_publish_secs * 1e3,
+        )
+    }
+}
+
+fn gen_cfg(cfg: &PipelineConfig, worker: usize) -> GeneratorConfig {
+    GeneratorConfig {
+        artifact_dir: cfg.artifact_dir.clone(),
+        temperature: cfg.temperature,
+        top_k: cfg.top_k,
+        quantize_int8: cfg.quantize_generator,
+        max_response: cfg.max_response,
+        seed: cfg.seed.wrapping_add(1000 + worker as u64),
+    }
+}
+
+fn trainer_cfg(cfg: &PipelineConfig) -> TrainerConfig {
+    TrainerConfig {
+        artifact_dir: cfg.artifact_dir.clone(),
+        aipo: cfg.aipo,
+        max_steps: cfg.max_steps,
+        publish_every: 1,
+        checkpoint_every: cfg.checkpoint_every,
+    }
+}
+
+/// Entry point: build the topology for `cfg.mode` and train to completion.
+pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let manifest = Manifest::load(&cfg.artifact_dir)?;
+    let init = match &cfg.init_checkpoint {
+        None => load_init_params(&manifest)?,
+        Some(path) => {
+            let ckpt = crate::model::load_checkpoint(path)?;
+            if ckpt.state.len() != manifest.num_params {
+                return Err(Error::Config(format!(
+                    "checkpoint {} has {} params, artifacts expect {}",
+                    path.display(),
+                    ckpt.state.len(),
+                    manifest.num_params
+                )));
+            }
+            ckpt.state
+        }
+    };
+    if cfg.mode == Mode::Sync && manifest.config.train_batch % cfg.n_generations != 0 {
+        return Err(Error::Config(format!(
+            "sync mode requires train_batch ({}) divisible by n_generations ({}) \
+             so every step's groups complete",
+            manifest.config.train_batch, cfg.n_generations
+        )));
+    }
+    if cfg.n_generations == 0 || cfg.max_steps == 0 {
+        return Err(Error::Config("n_generations and max_steps must be > 0".into()));
+    }
+    let bus = WeightsBus::new(init);
+    let ctx = ExecutorContext::new(bus, cfg.out_dir.clone());
+    let scheduler = Arc::new(PromptScheduler::new(
+        cfg.seed,
+        manifest.config.vocab,
+        cfg.n_generations,
+    )?);
+    let metrics_path = cfg.out_dir.join("metrics.jsonl");
+    let log = Arc::new(JsonlWriter::create(&metrics_path)?);
+
+    let mut report = match cfg.mode {
+        Mode::Sync => run_sync(cfg, &manifest, ctx, scheduler, log)?,
+        Mode::Async => run_async(cfg, &manifest, ctx, scheduler, log)?,
+    };
+    report.metrics_path = Some(metrics_path);
+    Ok(report)
+}
+
+/// Synchronous on-policy baseline: single thread, sequential phases.
+fn run_sync(
+    cfg: &PipelineConfig,
+    manifest: &Manifest,
+    ctx: Arc<ExecutorContext>,
+    scheduler: Arc<PromptScheduler>,
+    log: Arc<JsonlWriter>,
+) -> Result<RunReport> {
+    // Sync mode runs all executors on ONE thread; channels must absorb a
+    // whole step's traffic without blocking (worst case: one message per
+    // trajectory, one group per n_generations rows).
+    let rows_per_step = manifest.config.train_batch;
+    let (gen_tx, gen_rx) = gather_channel("generations", (2 * rows_per_step).max(64));
+    let (scored_tx, mut scored_rxs) =
+        scatter_channel("scored", (2 * rows_per_step).max(64), 1);
+
+    let mut gen = GeneratorWorker::new(0, gen_cfg(cfg, 0), ctx.clone(), scheduler, gen_tx);
+    let mut reward = RewardExecutor::new(
+        ctx.clone(),
+        gen_rx,
+        scored_tx,
+        cfg.baseline,
+        manifest.config.vocab,
+        1,
+    )?;
+    let mut trainer = Trainer::new(
+        trainer_cfg(cfg),
+        ctx.clone(),
+        scored_rxs.remove(0),
+        Some(log.clone()),
+    );
+
+    gen.init()?;
+    reward.init()?;
+    trainer.init()?;
+
+    let suites = task::eval_suites(cfg.eval_max_per_suite);
+    let mut evals = Vec::new();
+    let t0 = Instant::now();
+
+    for step in 0..cfg.max_steps {
+        // Phase 1: generation — all rows complete under current weights.
+        gen.generate_batch_sync(rows_per_step)?;
+        // Phase 2: scoring.
+        while reward.drain_once()? {}
+        // Phase 3: one train step (+ weight publication = in-place update).
+        match trainer.step()? {
+            StepOutcome::Progress => {}
+            other => {
+                return Err(Error::Coordinator(format!(
+                    "sync trainer did not progress at step {step}: {other:?}"
+                )))
+            }
+        }
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let snap = ctx.weights.latest();
+            // co-located: eval borrows the generator's PJRT context
+            evals.extend(eval_policy(
+                gen.runtime_ref(),
+                &snap.data,
+                &suites,
+                cfg.eval_max_per_suite,
+                snap.version,
+            )?);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    Ok(RunReport {
+        mode: "sync".into(),
+        steps: trainer.current_step(),
+        wall_secs: wall,
+        records: trainer.records.clone(),
+        evals,
+        tokens_generated: gen.tokens_generated,
+        trajectories: gen.trajectories_emitted,
+        chunks: gen.chunks_run,
+        weight_refreshes: gen.weight_refreshes,
+        ddma_publishes: ctx.weights.publish_count(),
+        ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
+        gen_send_blocked_secs: 0.0,
+        trainer_recv_blocked_secs: 0.0,
+        metrics_path: None,
+    })
+}
+
+/// Asynchronous off-policy pipeline: executor-per-thread, bounded channels.
+fn run_async(
+    cfg: &PipelineConfig,
+    manifest: &Manifest,
+    ctx: Arc<ExecutorContext>,
+    scheduler: Arc<PromptScheduler>,
+    log: Arc<JsonlWriter>,
+) -> Result<RunReport> {
+    let n_workers = cfg.n_generator_workers.max(1);
+    let (gen_tx, gen_rx) = gather_channel("generations", cfg.queue_capacity);
+    let (scored_tx, mut scored_rxs) = scatter_channel("scored", cfg.scored_capacity, 1);
+    let gen_stats_ch = gen_tx.stats.clone();
+    let scored_stats_ch = scored_tx.stats.clone();
+
+    let mut gen_handles = Vec::new();
+    for w in 0..n_workers {
+        let ctx = ctx.clone();
+        let scheduler = scheduler.clone();
+        let out = gen_tx.clone();
+        let gcfg = gen_cfg(cfg, w);
+        gen_handles.push(
+            std::thread::Builder::new()
+                .name(format!("generator-{w}"))
+                .spawn(move || -> Result<(u64, u64, u64, u64)> {
+                    let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
+                    run_executor_loop(&mut gen, &ctx, None)?;
+                    Ok((
+                        gen.tokens_generated,
+                        gen.trajectories_emitted,
+                        gen.chunks_run,
+                        gen.weight_refreshes,
+                    ))
+                })
+                .expect("spawn generator"),
+        );
+    }
+    drop(gen_tx);
+
+    let reward_handle = {
+        let ctx = ctx.clone();
+        let vocab = manifest.config.vocab;
+        let baseline = cfg.baseline;
+        std::thread::Builder::new()
+            .name("reward".into())
+            .spawn(move || -> Result<(u64, u64, f64)> {
+                let mut r = RewardExecutor::new(ctx.clone(), gen_rx, scored_tx, baseline, vocab, n_workers)?;
+                run_executor_loop(&mut r, &ctx, None)?;
+                Ok((r.scored, r.groups_emitted, r.reward_sum))
+            })
+            .expect("spawn reward")
+    };
+
+    let eval_handle = if cfg.eval_every > 0 {
+        let ctx = ctx.clone();
+        let ecfg = EvaluatorConfig {
+            artifact_dir: cfg.artifact_dir.clone(),
+            every_versions: cfg.eval_every,
+            max_per_suite: cfg.eval_max_per_suite,
+        };
+        let log = log.clone();
+        Some(
+            std::thread::Builder::new()
+                .name("evaluator".into())
+                .spawn(move || -> Result<Vec<EvalResult>> {
+                    let mut e = EvaluatorExecutor::new(ecfg, ctx.clone(), Some(log));
+                    run_executor_loop(&mut e, &ctx, None)?;
+                    Ok(e.results)
+                })
+                .expect("spawn evaluator"),
+        )
+    } else {
+        None
+    };
+
+    // Trainer runs on the controller thread (Algorithm 1's "local executor").
+    // Init (artifact compilation) runs OUTSIDE the measured wall clock, like
+    // the sync driver's; the generator/reward threads warm up concurrently.
+    let scored_rx = scored_rxs.remove(0);
+    let mut trainer = Trainer::new(trainer_cfg(cfg), ctx.clone(), scored_rx, Some(log));
+    trainer.init()?;
+    let t0 = Instant::now();
+    crate::coordinator::executor::run_executor_loop_initialized(
+        &mut trainer,
+        &ctx,
+        if cfg.checkpoint_every > 0 {
+            Some(cfg.checkpoint_every)
+        } else {
+            None
+        },
+    )?;
+    ctx.request_stop();
+
+    let mut tokens = 0;
+    let mut trajs = 0;
+    let mut chunks = 0;
+    let mut refreshes = 0;
+    for h in gen_handles {
+        let (t, tr, ch, wr) = h.join().map_err(|_| Error::msg("generator panicked"))??;
+        tokens += t;
+        trajs += tr;
+        chunks += ch;
+        refreshes += wr;
+    }
+    let _ = reward_handle
+        .join()
+        .map_err(|_| Error::msg("reward panicked"))??;
+    let evals = match eval_handle {
+        Some(h) => h.join().map_err(|_| Error::msg("evaluator panicked"))??,
+        None => Vec::new(),
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    Ok(RunReport {
+        mode: "async".into(),
+        steps: trainer.current_step(),
+        wall_secs: wall,
+        records: trainer.records.clone(),
+        evals,
+        tokens_generated: tokens,
+        trajectories: trajs,
+        chunks,
+        weight_refreshes: refreshes,
+        ddma_publishes: ctx.weights.publish_count(),
+        ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
+        gen_send_blocked_secs: gen_stats_ch.send_blocked_secs(),
+        trainer_recv_blocked_secs: scored_stats_ch.recv_blocked_secs(),
+        metrics_path: None,
+    })
+}

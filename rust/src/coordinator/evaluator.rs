@@ -1,0 +1,213 @@
+//! Evaluator: greedy benchmark runs against held-out suites (Figure 6).
+//!
+//! [`eval_policy`] is the core routine (also used by the sync baseline
+//! driver); [`EvaluatorExecutor`] wraps it as an optional async executor
+//! that re-evaluates every K published weight versions without ever
+//! blocking the training pipeline.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::executor::{Executor, ExecutorContext, StepOutcome};
+use crate::data::{task, EvalSuite};
+use crate::model::Tokenizer;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::error::Result;
+use crate::util::json::Value;
+use crate::util::logging::JsonlWriter;
+
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub suite: String,
+    pub accuracy: f64,
+    pub n: usize,
+    pub weights_version: u64,
+}
+
+/// Greedy-decode every problem in each suite and report exact-match
+/// accuracy. `params` are uploaded once and reused across suites.
+pub fn eval_policy(
+    rt: &Runtime,
+    params: &[f32],
+    suites: &[EvalSuite],
+    max_per_suite: usize,
+    weights_version: u64,
+) -> Result<Vec<EvalResult>> {
+    let mcfg = rt.config().clone();
+    let (b, s, c) = (mcfg.gen_batch, mcfg.max_seq, mcfg.gen_chunk);
+    let tok = Tokenizer::new(mcfg.vocab)?;
+    let params_buf = rt.upload(&HostTensor::F32(params.to_vec(), vec![rt.manifest.num_params]))?;
+    let max_chunks = s.div_ceil(c) + 1;
+
+    let mut results = Vec::new();
+    for suite in suites {
+        let problems = &suite.problems[..suite.problems.len().min(max_per_suite)];
+        let mut correct = 0usize;
+        for batch in problems.chunks(b) {
+            // set up slot buffers
+            let mut tokens = vec![mcfg.pad_id; b * s];
+            let mut lens = vec![1i32; b];
+            let mut frozen = vec![1i32; b];
+            let mut bufs: Vec<Vec<i32>> = Vec::with_capacity(batch.len());
+            for (i, p) in batch.iter().enumerate() {
+                let ids = tok.encode_prompt(&p.prompt)?;
+                tokens[i * s..i * s + ids.len()].copy_from_slice(&ids);
+                lens[i] = ids.len() as i32;
+                frozen[i] = 0;
+                bufs.push(ids);
+            }
+            let mut done = vec![false; b];
+            for slot in batch.len()..b {
+                done[slot] = true;
+            }
+            for _ in 0..max_chunks {
+                if done.iter().all(|d| *d) {
+                    break;
+                }
+                let tokens_b = rt.upload(&HostTensor::I32(tokens.clone(), vec![b, s]))?;
+                let lens_b = rt.upload(&HostTensor::I32(lens.clone(), vec![b]))?;
+                let frozen_b = rt.upload(&HostTensor::I32(frozen.clone(), vec![b]))?;
+                let seed_b = rt.upload(&HostTensor::I32(vec![0], vec![1]))?;
+                let temp_b = rt.upload(&HostTensor::F32(vec![0.0], vec![1]))?; // greedy
+                let topk_b = rt.upload(&HostTensor::I32(vec![0], vec![1]))?;
+                let out_buf = rt.execute_buffers(
+                    "generate_chunk",
+                    &[&params_buf, &tokens_b, &lens_b, &frozen_b, &seed_b, &temp_b, &topk_b],
+                )?;
+                let out = rt.fetch_f32(&out_buf)?;
+                let row_w = 2 * c + 2;
+                for i in 0..batch.len() {
+                    if done[i] {
+                        continue;
+                    }
+                    let row = &out[i * row_w..(i + 1) * row_w];
+                    let new_len = row[2 * c] as usize;
+                    let n_new = new_len - lens[i] as usize;
+                    for j in 0..n_new {
+                        let t = row[j] as i32;
+                        tokens[i * s + lens[i] as usize + j] = t;
+                        bufs[i].push(t);
+                    }
+                    lens[i] = new_len as i32;
+                    if row[2 * c + 1] > 0.5 {
+                        done[i] = true;
+                        frozen[i] = 1;
+                    }
+                }
+            }
+            for (i, p) in batch.iter().enumerate() {
+                let prompt_len = tok.encode_prompt(&p.prompt)?.len();
+                let resp = tok.decode(&bufs[i][prompt_len..]);
+                if task::score(p, &resp) > 0.5 {
+                    correct += 1;
+                }
+            }
+        }
+        results.push(EvalResult {
+            suite: suite.name.to_string(),
+            accuracy: correct as f64 / problems.len().max(1) as f64,
+            n: problems.len(),
+            weights_version,
+        });
+    }
+    Ok(results)
+}
+
+pub struct EvaluatorConfig {
+    pub artifact_dir: std::path::PathBuf,
+    /// evaluate every k published weight versions
+    pub every_versions: u64,
+    pub max_per_suite: usize,
+}
+
+pub struct EvaluatorExecutor {
+    cfg: EvaluatorConfig,
+    ctx: Arc<ExecutorContext>,
+    log: Option<Arc<JsonlWriter>>,
+    runtime: Option<Runtime>,
+    suites: Vec<EvalSuite>,
+    last_version: u64,
+    pub results: Vec<EvalResult>,
+}
+
+impl EvaluatorExecutor {
+    pub fn new(
+        cfg: EvaluatorConfig,
+        ctx: Arc<ExecutorContext>,
+        log: Option<Arc<JsonlWriter>>,
+    ) -> EvaluatorExecutor {
+        let suites = task::eval_suites(cfg.max_per_suite);
+        EvaluatorExecutor {
+            cfg,
+            ctx,
+            log,
+            runtime: None,
+            suites,
+            last_version: 0,
+            results: Vec::new(),
+        }
+    }
+
+    fn eval_now(&mut self, version: u64) -> Result<()> {
+        let rt = self.runtime.as_ref().unwrap();
+        let snap = self.ctx.weights.latest();
+        let results = eval_policy(rt, &snap.data, &self.suites, self.cfg.max_per_suite, version)?;
+        for r in &results {
+            crate::log_info!(
+                "evaluator",
+                "v{} {}: {:.1}% ({} problems)",
+                version,
+                r.suite,
+                r.accuracy * 100.0,
+                r.n
+            );
+            if let Some(log) = &self.log {
+                log.write(&Value::object(vec![
+                    ("kind", Value::str("eval")),
+                    ("weights_version", Value::num(version as f64)),
+                    ("suite", Value::str(r.suite.clone())),
+                    ("accuracy", Value::num(r.accuracy)),
+                    ("n", Value::num(r.n as f64)),
+                ]))?;
+            }
+        }
+        self.results.extend(results);
+        Ok(())
+    }
+}
+
+impl Executor for EvaluatorExecutor {
+    fn name(&self) -> String {
+        "evaluator".into()
+    }
+
+    fn init(&mut self) -> Result<()> {
+        let rt = Runtime::load(&self.cfg.artifact_dir)?;
+        rt.prepare("generate_chunk")?;
+        self.runtime = Some(rt);
+        // baseline eval at version 0
+        self.eval_now(0)?;
+        Ok(())
+    }
+
+    fn set_step(&mut self, _step: u64) {}
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        let v = self.ctx.weights.version();
+        if v >= self.last_version + self.cfg.every_versions {
+            self.last_version = v;
+            self.eval_now(v)?;
+            return Ok(StepOutcome::Progress);
+        }
+        if self.ctx.should_stop() {
+            // final eval on the last weights
+            if v > self.last_version {
+                self.last_version = v;
+                self.eval_now(v)?;
+            }
+            return Ok(StepOutcome::Finished);
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        Ok(StepOutcome::Idle)
+    }
+}

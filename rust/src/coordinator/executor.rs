@@ -1,0 +1,125 @@
+//! The Executor abstraction (paper §5.1.1).
+//!
+//! An executor is a self-contained unit with `init` / `set_step` / `step` /
+//! `save_checkpoint` / output exposure, attached to its own processing group
+//! (here: its own OS thread + PJRT context). The [`ExecutorContext`] carries
+//! the shared coordination state (stop flag, DDMA bus handle, metrics dir) —
+//! the analogue of Algorithm 1's `executor_context` holding the distributed
+//! groups.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::ddma::WeightsBus;
+use crate::util::error::Result;
+
+/// What a `step()` accomplished — the controller uses this to drive
+/// progress/draining decisions without knowing executor internals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// useful work was done
+    Progress,
+    /// nothing to do right now (e.g. inbound channel empty)
+    Idle,
+    /// upstream finished and all local work is drained
+    Finished,
+}
+
+/// Shared coordination state, one per training job.
+pub struct ExecutorContext {
+    /// controller sets this to request a global stop
+    pub stop: AtomicBool,
+    /// trainer's optimizer step (the global training clock)
+    pub trainer_step: AtomicU64,
+    /// DDMA weights bus (trainer -> generators)
+    pub weights: WeightsBus,
+    /// where executors write metrics/checkpoints
+    pub out_dir: PathBuf,
+}
+
+impl ExecutorContext {
+    pub fn new(weights: WeightsBus, out_dir: PathBuf) -> Arc<Self> {
+        Arc::new(ExecutorContext {
+            stop: AtomicBool::new(false),
+            trainer_step: AtomicU64::new(0),
+            weights,
+            out_dir,
+        })
+    }
+
+    pub fn should_stop(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Base executor interface (paper §5.1.1). Implementations: generator
+/// workers, the reward executor, the trainer, the evaluator.
+pub trait Executor {
+    fn name(&self) -> String;
+
+    /// Construct models / compile artifacts / warm caches. Called once on
+    /// the executor's own thread before the first step.
+    fn init(&mut self) -> Result<()>;
+
+    /// Informs the executor of the current controller tick (sync mode) or is
+    /// self-reported (async mode).
+    fn set_step(&mut self, step: u64);
+
+    /// One unit of work: a decode chunk, a score pass, a train step.
+    fn step(&mut self) -> Result<StepOutcome>;
+
+    /// Persist state under `ctx.out_dir`. Default: stateless.
+    fn save_checkpoint(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Run an executor's SPMD loop (Algorithm 1 lines 8–17) until it finishes,
+/// errors, or the context requests a stop.
+pub fn run_executor_loop<E: Executor + ?Sized>(
+    exec: &mut E,
+    ctx: &ExecutorContext,
+    checkpoint_every: Option<u64>,
+) -> Result<()> {
+    exec.init()?;
+    run_executor_loop_initialized(exec, ctx, checkpoint_every)
+}
+
+/// The SPMD loop for an executor whose `init()` already ran (the controller
+/// uses this to keep artifact compilation out of the measured wall clock).
+pub fn run_executor_loop_initialized<E: Executor + ?Sized>(
+    exec: &mut E,
+    ctx: &ExecutorContext,
+    checkpoint_every: Option<u64>,
+) -> Result<()> {
+    let mut local_step: u64 = 0;
+    loop {
+        if ctx.should_stop() {
+            break;
+        }
+        exec.set_step(local_step);
+        match exec.step()? {
+            StepOutcome::Finished => break,
+            StepOutcome::Progress => {
+                local_step += 1;
+                if let Some(k) = checkpoint_every {
+                    if k > 0 && local_step % k == 0 {
+                        exec.save_checkpoint()?;
+                    }
+                }
+            }
+            StepOutcome::Idle => {
+                // Don't spin: executors are channel-driven, idle means the
+                // inbound side is momentarily empty.
+                std::thread::yield_now();
+            }
+        }
+    }
+    exec.save_checkpoint()?;
+    Ok(())
+}

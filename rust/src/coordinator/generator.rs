@@ -1,0 +1,344 @@
+//! Generator executor: the offloaded inference engine (paper §4.1).
+//!
+//! Each worker is one data-parallel inference replica with its own PJRT
+//! context. It keeps `gen_batch` sequence slots continuously batched: every
+//! `step()` runs ONE `generate_chunk` artifact call (up to C tokens for the
+//! whole batch in a single PJRT execution — prefill + Pallas decode
+//! attention + sampling all in-graph), finishes whatever sequences hit EOS,
+//! refills their slots with fresh prompts, and leaves unfinished sequences
+//! in place — which is exactly the paper's partial-rollout strategy (§4.2):
+//! long generations span multiple chunks/iterations instead of blocking the
+//! batch (straggler mitigation).
+//!
+//! Off-policy bookkeeping: the worker re-attaches to the DDMA weights bus at
+//! chunk boundaries; every trajectory records the weight version that
+//! finished it and the per-token behaviour log-probs mu(y_t) recorded by the
+//! sampler inside the artifact. With `quantize_int8` the uploaded weights
+//! are an int8 round-trip of the published snapshot — the "quantized
+//! behaviour policy" off-policy source of §4.3/Table 3.
+
+use std::sync::Arc;
+
+use crate::coordinator::channel::{Message, Outbound};
+use crate::coordinator::executor::{Executor, ExecutorContext, StepOutcome};
+use crate::data::{PromptScheduler, PromptTask};
+use crate::model::simulate_int8_roundtrip;
+use crate::rl::{FinishReason, Trajectory};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub temperature: f32,
+    pub top_k: i32,
+    /// run the behaviour policy on int8-roundtripped weights
+    pub quantize_int8: bool,
+    /// cap on response tokens (forces FinishReason::Length past it)
+    pub max_response: usize,
+    pub seed: u64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            artifact_dir: "artifacts/nano".into(),
+            temperature: 1.0,
+            top_k: 0,
+            quantize_int8: false,
+            max_response: usize::MAX,
+            seed: 0,
+        }
+    }
+}
+
+/// One continuous-batching slot.
+struct Slot {
+    task: PromptTask,
+    /// prompt + generated so far
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    logps: Vec<f32>,
+    chunks: u32,
+    version: u64,
+}
+
+pub struct GeneratorWorker {
+    pub worker_id: usize,
+    cfg: GeneratorConfig,
+    ctx: Arc<ExecutorContext>,
+    scheduler: Arc<PromptScheduler>,
+    out: Outbound,
+    rng: Rng,
+    // populated by init() on the executor thread (PJRT is thread-local)
+    runtime: Option<Runtime>,
+    params_buf: Option<xla::PjRtBuffer>,
+    local_version: u64,
+    slots: Vec<Option<Slot>>,
+    // telemetry
+    pub chunks_run: u64,
+    pub tokens_generated: u64,
+    pub trajectories_emitted: u64,
+    pub weight_refreshes: u64,
+}
+
+impl GeneratorWorker {
+    pub fn new(
+        worker_id: usize,
+        cfg: GeneratorConfig,
+        ctx: Arc<ExecutorContext>,
+        scheduler: Arc<PromptScheduler>,
+        out: Outbound,
+    ) -> GeneratorWorker {
+        let rng = Rng::new(cfg.seed ^ (worker_id as u64).wrapping_mul(0x9E3779B9));
+        GeneratorWorker {
+            worker_id,
+            cfg,
+            ctx,
+            scheduler,
+            out,
+            rng,
+            runtime: None,
+            params_buf: None,
+            local_version: u64::MAX,
+            slots: Vec::new(),
+            chunks_run: 0,
+            tokens_generated: 0,
+            trajectories_emitted: 0,
+            weight_refreshes: 0,
+        }
+    }
+
+    fn runtime(&self) -> &Runtime {
+        self.runtime.as_ref().expect("init() not called")
+    }
+
+    /// Borrow the worker's PJRT runtime (the sync baseline co-locates eval
+    /// on the generator's context).
+    pub fn runtime_ref(&self) -> &Runtime {
+        self.runtime()
+    }
+
+    /// Re-attach to the DDMA bus if a newer weight version is available.
+    fn refresh_weights(&mut self) -> Result<()> {
+        let bus_version = self.ctx.weights.version();
+        if self.params_buf.is_some() && bus_version == self.local_version {
+            return Ok(());
+        }
+        let snap = self.ctx.weights.latest();
+        let rt = self.runtime.as_ref().unwrap();
+        let host: HostTensor = if self.cfg.quantize_int8 {
+            let q = simulate_int8_roundtrip(&snap.data, &rt.manifest.param_layout);
+            HostTensor::F32(q, vec![rt.manifest.num_params])
+        } else {
+            HostTensor::F32(snap.data.as_ref().clone(), vec![rt.manifest.num_params])
+        };
+        self.params_buf = Some(rt.upload(&host)?);
+        self.local_version = snap.version;
+        self.weight_refreshes += 1;
+        Ok(())
+    }
+
+    fn fill_slots(&mut self) {
+        let stop = self.ctx.should_stop();
+        let max_seq = self.runtime().config().max_seq;
+        for slot in self.slots.iter_mut() {
+            if slot.is_none() && !stop {
+                let task = self.scheduler.next();
+                debug_assert!(task.prompt_tokens.len() + 2 < max_seq);
+                *slot = Some(Slot {
+                    tokens: task.prompt_tokens.clone(),
+                    prompt_len: task.prompt_tokens.len(),
+                    logps: Vec::new(),
+                    chunks: 0,
+                    version: 0,
+                    task,
+                });
+            }
+        }
+    }
+
+    /// Run one generate_chunk over the current slots; returns finished
+    /// trajectories.
+    fn run_chunk(&mut self) -> Result<Vec<Trajectory>> {
+        let rt = self.runtime.as_ref().unwrap();
+        let mcfg = rt.config().clone();
+        let (b, s, c) = (mcfg.gen_batch, mcfg.max_seq, mcfg.gen_chunk);
+
+        let mut tokens = vec![mcfg.pad_id; b * s];
+        let mut lens = vec![1i32; b];
+        let mut frozen = vec![1i32; b];
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(slot) = slot {
+                let n = slot.tokens.len();
+                tokens[i * s..i * s + n].copy_from_slice(&slot.tokens);
+                lens[i] = n as i32;
+                frozen[i] = 0;
+            }
+        }
+        let seed = self.rng.next_u32() as i32;
+
+        let tokens_b = rt.upload(&HostTensor::I32(tokens, vec![b, s]))?;
+        let lens_b = rt.upload(&HostTensor::I32(lens.clone(), vec![b]))?;
+        let frozen_b = rt.upload(&HostTensor::I32(frozen, vec![b]))?;
+        let seed_b = rt.upload(&HostTensor::I32(vec![seed], vec![1]))?;
+        let temp_b = rt.upload(&HostTensor::F32(vec![self.cfg.temperature], vec![1]))?;
+        let topk_b = rt.upload(&HostTensor::I32(vec![self.cfg.top_k], vec![1]))?;
+
+        let out_buf = rt.execute_buffers(
+            "generate_chunk",
+            &[
+                self.params_buf.as_ref().unwrap(),
+                &tokens_b,
+                &lens_b,
+                &frozen_b,
+                &seed_b,
+                &temp_b,
+                &topk_b,
+            ],
+        )?;
+        let out = rt.fetch_f32(&out_buf)?;
+        self.chunks_run += 1;
+
+        let row_w = 2 * c + 2;
+        let mut finished = Vec::new();
+        for i in 0..b {
+            let Some(slot) = self.slots[i].as_mut() else {
+                continue;
+            };
+            let row = &out[i * row_w..(i + 1) * row_w];
+            let old_len = slot.tokens.len();
+            let new_len = row[2 * c] as usize;
+            let done = row[2 * c + 1] > 0.5;
+            let n_new = new_len - old_len;
+            for j in 0..n_new {
+                slot.tokens.push(row[j] as i32);
+                slot.logps.push(row[c + j]);
+            }
+            self.tokens_generated += n_new as u64;
+            slot.chunks += 1;
+            slot.version = self.local_version;
+
+            let resp_len = slot.tokens.len() - slot.prompt_len;
+            let truncated = resp_len >= self.cfg.max_response;
+            if done || truncated {
+                let slot = self.slots[i].take().unwrap();
+                if resp_len == 0 {
+                    crate::log_warn!("generator", "dropping empty trajectory");
+                    continue;
+                }
+                let finish = if done
+                    && *slot.tokens.last().unwrap() == mcfg.eos_id
+                {
+                    FinishReason::Eos
+                } else {
+                    FinishReason::Length
+                };
+                finished.push(Trajectory {
+                    group_id: slot.task.group_id,
+                    replica: slot.task.replica,
+                    n_replicas: slot.task.n_replicas,
+                    problem: slot.task.problem,
+                    prompt_tokens: slot.tokens[..slot.prompt_len].to_vec(),
+                    response_tokens: slot.tokens[slot.prompt_len..].to_vec(),
+                    behavior_logp: slot.logps,
+                    gen_version: slot.version,
+                    chunks: slot.chunks,
+                    finish,
+                    reward: 0.0,
+                    advantage: 0.0,
+                });
+            }
+        }
+        Ok(finished)
+    }
+}
+
+impl Executor for GeneratorWorker {
+    fn name(&self) -> String {
+        format!("generator[{}]", self.worker_id)
+    }
+
+    fn init(&mut self) -> Result<()> {
+        let rt = Runtime::load(&self.cfg.artifact_dir)?;
+        rt.prepare("generate_chunk")?;
+        let b = rt.config().gen_batch;
+        if self.cfg.max_response < 2 {
+            return Err(Error::Config("max_response must be >= 2".into()));
+        }
+        self.slots = (0..b).map(|_| None).collect();
+        self.runtime = Some(rt);
+        self.refresh_weights()?;
+        Ok(())
+    }
+
+    fn set_step(&mut self, _step: u64) {}
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        self.refresh_weights()?;
+        self.fill_slots();
+        if self.slots.iter().all(|s| s.is_none()) {
+            // stop requested and every in-flight sequence drained
+            self.out.send_eof();
+            return Ok(StepOutcome::Finished);
+        }
+        let finished = self.run_chunk()?;
+        if !finished.is_empty() {
+            self.trajectories_emitted += finished.len() as u64;
+            // blocking send = the bounded-channel backpressure that caps
+            // off-policy lag
+            if self.out.send(Message::Trajectories(finished)).is_err() {
+                // downstream exited; only graceful if a stop was requested
+                return if self.ctx.should_stop() {
+                    Ok(StepOutcome::Finished)
+                } else {
+                    Err(Error::ChannelClosed("generator output".into()))
+                };
+            }
+        }
+        Ok(StepOutcome::Progress)
+    }
+}
+
+impl GeneratorWorker {
+    /// Synchronous-baseline generation (DeepSpeed-Chat-like): start from an
+    /// empty batch, feed exactly `n_rows` prompts, and run chunks until
+    /// every one of them completes — the all-rows-finish barrier whose
+    /// straggler tail is the idle "bubble" of paper Fig. 2(a). Emits the
+    /// trajectories downstream and returns the number of chunk calls.
+    pub fn generate_batch_sync(&mut self, n_rows: usize) -> Result<u64> {
+        assert!(
+            self.slots.iter().all(|s| s.is_none()),
+            "sync generation starts from an empty batch"
+        );
+        self.refresh_weights()?;
+        let mut to_start = n_rows;
+        let mut emitted = 0usize;
+        let mut chunks = 0u64;
+        while emitted < n_rows {
+            for slot in self.slots.iter_mut() {
+                if slot.is_none() && to_start > 0 {
+                    let task = self.scheduler.next();
+                    *slot = Some(Slot {
+                        tokens: task.prompt_tokens.clone(),
+                        prompt_len: task.prompt_tokens.len(),
+                        logps: Vec::new(),
+                        chunks: 0,
+                        version: 0,
+                        task,
+                    });
+                    to_start -= 1;
+                }
+            }
+            let finished = self.run_chunk()?;
+            chunks += 1;
+            if !finished.is_empty() {
+                emitted += finished.len();
+                self.trajectories_emitted += finished.len() as u64;
+                self.out.send(Message::Trajectories(finished))?;
+            }
+        }
+        Ok(chunks)
+    }
+}

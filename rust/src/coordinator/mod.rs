@@ -1,0 +1,39 @@
+//! The paper's system contribution (L3): executors, communication channels,
+//! and the single controller (paper §5), plus the synchronous baseline and
+//! the asynchronous off-policy pipeline (paper §4).
+//!
+//! Topology (the Figure-1/Algorithm-2 flow, critic-free with rule-based
+//! scorers):
+//!
+//! ```text
+//!   PromptScheduler ──► Generator workers (DP)  ──GATHER──►  Reward executor
+//!        ▲                   ▲                                   │
+//!        │                   │ DDMA weights bus                  │ SCATTER
+//!        │                   │                                   ▼
+//!        └──────────── Trainer executor ◄────────────── scored trajectories
+//! ```
+//!
+//! * **Sync mode** (DeepSpeed-Chat-like baseline): one thread, one PJRT
+//!   context shared by generation and training ("co-located"), strictly
+//!   sequential generate → score → train ticks.
+//! * **Async mode** (LlamaRL): every executor runs free on its own thread
+//!   with its own PJRT context, connected by bounded channels (backpressure
+//!   bounds off-policy lag) and the DDMA weights bus.
+
+pub mod channel;
+pub mod controller;
+pub mod evaluator;
+pub mod executor;
+pub mod generator;
+pub mod pretrain;
+pub mod reward;
+pub mod trainer;
+
+pub use channel::{gather_channel, scatter_channel, ChannelStats, Inbound, Message, Outbound};
+pub use controller::{run_training, Mode, PipelineConfig, RunReport};
+pub use evaluator::{eval_policy, EvalResult, EvaluatorConfig, EvaluatorExecutor};
+pub use executor::{run_executor_loop, Executor, ExecutorContext, StepOutcome};
+pub use generator::{GeneratorConfig, GeneratorWorker};
+pub use pretrain::{run_pretraining, PretrainConfig, PretrainReport};
+pub use reward::RewardExecutor;
+pub use trainer::{Trainer, TrainStepRecord, TrainerConfig};

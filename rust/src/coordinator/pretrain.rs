@@ -1,0 +1,148 @@
+//! Supervised pretraining: produces the "base model" checkpoint RL starts
+//! from.
+//!
+//! The paper post-trains *pretrained* Llama-3.1 models; RL from a random
+//! init gets zero reward signal (exact-match over a 60-way vocabulary is
+//! never hit by chance). The closest in-repo equivalent is supervised
+//! next-token training on (prompt, gold answer) pairs of the same task
+//! distribution, which conveniently reuses the AIPO train_step artifact
+//! verbatim: with advantage = 1, mask on answer tokens and rho <= 0 (w = 1),
+//! the AIPO gradient  -w*A*grad log pi  is exactly the MLE gradient.
+
+use std::path::Path;
+
+use crate::data::TaskGen;
+use crate::model::{load_init_params, save_checkpoint, Checkpoint, Tokenizer};
+use crate::rl::{pack_batch, FinishReason, Trajectory};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::error::Result;
+
+#[derive(Debug, Clone)]
+pub struct PretrainConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub steps: u64,
+    pub lr: f32,
+    pub grad_clip: f32,
+    pub seed: u64,
+    /// report mean target logp every k steps (0 = never)
+    pub log_every: u64,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig {
+            artifact_dir: "artifacts/nano".into(),
+            steps: 200,
+            lr: 1e-3,
+            grad_clip: 1.0,
+            seed: 7,
+            log_every: 25,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PretrainReport {
+    pub steps: u64,
+    pub final_target_logp: f64,
+    pub wall_secs: f64,
+}
+
+/// Build a supervised "trajectory": response = gold answer + EOS, with
+/// behaviour logp zeroed (unused at rho <= 0) and advantage 1.
+fn supervised_traj(tok: &Tokenizer, gen: &mut TaskGen) -> Result<Trajectory> {
+    let p = gen.next();
+    let prompt_tokens = tok.encode_prompt(&p.prompt)?;
+    let mut response = tok.encode(&p.answer)?;
+    response.push(crate::model::EOS_ID);
+    let n = response.len();
+    Ok(Trajectory {
+        group_id: 0,
+        replica: 0,
+        n_replicas: 1,
+        problem: p,
+        prompt_tokens,
+        response_tokens: response,
+        behavior_logp: vec![0.0; n],
+        gen_version: 0,
+        chunks: 0,
+        finish: FinishReason::Eos,
+        reward: 1.0,
+        advantage: 1.0,
+    })
+}
+
+/// Run supervised pretraining and write the resulting params checkpoint to
+/// `out` (consumed by PipelineConfig::init_checkpoint).
+pub fn run_pretraining(cfg: &PretrainConfig, out: impl AsRef<Path>) -> Result<PretrainReport> {
+    let t0 = std::time::Instant::now();
+    let rt = Runtime::load(&cfg.artifact_dir)?;
+    rt.prepare("train_step")?;
+    rt.prepare("extract_metrics")?;
+    rt.prepare("extract_params")?;
+    let mcfg = rt.config().clone();
+    let tok = Tokenizer::new(mcfg.vocab)?;
+    let mut gen = TaskGen::training_mixture(cfg.seed);
+
+    let init = load_init_params(&rt.manifest)?;
+    let total = rt.manifest.train_state.total;
+    let mut state_host = init;
+    state_host.resize(total, 0.0);
+    let mut state = rt.upload(&HostTensor::F32(state_host, vec![total]))?;
+
+    let (b, t) = (mcfg.train_batch, mcfg.train_seq);
+    // rho <= 0: AIPO kernel degrades to plain MLE (w = 1)
+    let hyp = [cfg.lr, -1.0, cfg.grad_clip];
+    let mut last_logp = f64::NAN;
+
+    for step in 0..cfg.steps {
+        let rows: Vec<Trajectory> = (0..b)
+            .map(|_| supervised_traj(&tok, &mut gen))
+            .collect::<Result<_>>()?;
+        let batch = pack_batch(&rows, b, t)?;
+        let tokens_b = rt.upload(&HostTensor::I32(batch.tokens, vec![b, t]))?;
+        let targets_b = rt.upload(&HostTensor::I32(batch.targets, vec![b, t]))?;
+        let blogp_b = rt.upload(&HostTensor::F32(batch.blogp, vec![b, t]))?;
+        let adv_b = rt.upload(&HostTensor::F32(batch.adv, vec![b, t]))?;
+        let mask_b = rt.upload(&HostTensor::F32(batch.mask, vec![b, t]))?;
+        let lens_b = rt.upload(&HostTensor::I32(batch.lens, vec![b]))?;
+        let hyp_b = rt.upload(&HostTensor::F32(hyp.to_vec(), vec![3]))?;
+        state = rt.execute_buffers(
+            "train_step",
+            &[&state, &tokens_b, &targets_b, &blogp_b, &adv_b, &mask_b, &lens_b, &hyp_b],
+        )?;
+        if cfg.log_every > 0 && (step + 1) % cfg.log_every == 0 {
+            let met_buf = rt.execute_buffers("extract_metrics", &[&state])?;
+            let met = rt.fetch_f32(&met_buf)?;
+            let idx = rt.manifest.metric_index("target_logp").unwrap();
+            last_logp = met[1 + idx] as f64;
+            crate::log_info!(
+                "pretrain",
+                "step {} target_logp {:.3}",
+                step + 1,
+                last_logp
+            );
+        }
+    }
+    // final metrics + checkpoint (bare params via extract_params)
+    let met_buf = rt.execute_buffers("extract_metrics", &[&state])?;
+    let met = rt.fetch_f32(&met_buf)?;
+    if let Some(idx) = rt.manifest.metric_index("target_logp") {
+        last_logp = met[1 + idx] as f64;
+    }
+    let p_buf = rt.execute_buffers("extract_params", &[&state])?;
+    let params = rt.fetch_f32(&p_buf)?;
+    save_checkpoint(
+        &out,
+        &Checkpoint {
+            step: cfg.steps,
+            weights_version: 0,
+            state: params,
+        },
+    )?;
+    Ok(PretrainReport {
+        steps: cfg.steps,
+        final_target_logp: last_logp,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}

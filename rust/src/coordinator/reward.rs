@@ -1,0 +1,173 @@
+//! Reward executor: rule-based scoring + group advantage baselines.
+//!
+//! The paper's Figure-1 flow uses rule-based scorers ("lightweight Python
+//! programs" co-located with light compute); here it is a lightweight Rust
+//! executor. It GATHERs raw trajectories from all generator workers, scores
+//! them by exact match, buffers until a prompt's full group of n generations
+//! is present, computes the group-baseline advantages (paper §6), and
+//! SCATTERs the scored group to the trainer.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::channel::{Inbound, Message, Outbound};
+use crate::coordinator::executor::{Executor, ExecutorContext, StepOutcome};
+use crate::data::task;
+use crate::model::Tokenizer;
+use crate::rl::{group_advantages, Baseline, Trajectory};
+use crate::util::error::Result;
+
+pub struct RewardExecutor {
+    ctx: Arc<ExecutorContext>,
+    inbound: Inbound,
+    out: Outbound,
+    baseline: Baseline,
+    tokenizer: Tokenizer,
+    groups: HashMap<u64, Vec<Trajectory>>,
+    n_producers: usize,
+    eofs_seen: usize,
+    // telemetry
+    pub scored: u64,
+    pub groups_emitted: u64,
+    pub rows_forwarded: u64,
+    pub reward_sum: f64,
+}
+
+impl RewardExecutor {
+    pub fn new(
+        ctx: Arc<ExecutorContext>,
+        inbound: Inbound,
+        out: Outbound,
+        baseline: Baseline,
+        vocab: usize,
+        n_producers: usize,
+    ) -> Result<RewardExecutor> {
+        Ok(RewardExecutor {
+            ctx,
+            inbound,
+            out,
+            baseline,
+            tokenizer: Tokenizer::new(vocab)?,
+            groups: HashMap::new(),
+            n_producers,
+            eofs_seen: 0,
+            scored: 0,
+            groups_emitted: 0,
+            rows_forwarded: 0,
+            reward_sum: 0.0,
+        })
+    }
+
+    fn ingest(&mut self, trajs: Vec<Trajectory>) -> Result<()> {
+        for mut t in trajs {
+            let response = t.decoded_response(&self.tokenizer);
+            t.reward = task::score(&t.problem, &response);
+            self.reward_sum += t.reward as f64;
+            self.scored += 1;
+            let gid = t.group_id;
+            let n = t.n_replicas;
+            let group = self.groups.entry(gid).or_default();
+            group.push(t);
+            if group.len() == n {
+                let mut full = self.groups.remove(&gid).unwrap();
+                group_advantages(&mut full, self.baseline);
+                self.groups_emitted += 1;
+                self.rows_forwarded += full.len() as u64;
+                self.out.send(Message::Scored(full))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush incomplete groups at drain time (their baseline uses whatever
+    /// replicas arrived).
+    fn flush(&mut self) -> Result<()> {
+        let keys: Vec<u64> = self.groups.keys().copied().collect();
+        for k in keys {
+            let mut g = self.groups.remove(&k).unwrap();
+            group_advantages(&mut g, self.baseline);
+            self.groups_emitted += 1;
+            self.rows_forwarded += g.len() as u64;
+            self.out.send(Message::Scored(g))?;
+        }
+        Ok(())
+    }
+
+    /// Non-blocking ingestion of one pending message; used by the sync
+    /// baseline driver. Returns true if a message was processed.
+    pub fn drain_once(&mut self) -> Result<bool> {
+        match self.inbound.try_recv() {
+            Some(Message::Trajectories(trajs)) => {
+                self.ingest(trajs)?;
+                Ok(true)
+            }
+            Some(Message::Eof) => {
+                self.eofs_seen += 1;
+                Ok(true)
+            }
+            Some(Message::Scored(_)) => Err(crate::util::error::Error::Coordinator(
+                "reward executor received Scored message".into(),
+            )),
+            None => Ok(false),
+        }
+    }
+}
+
+impl RewardExecutor {
+    /// Map a downstream ChannelClosed to a graceful finish when the job is
+    /// stopping (the trainer drops its inbound on finish).
+    fn graceful(&self, e: crate::util::error::Error) -> Result<StepOutcome> {
+        use crate::util::error::Error;
+        if self.ctx.should_stop() && matches!(e, Error::ChannelClosed(_)) {
+            Ok(StepOutcome::Finished)
+        } else {
+            Err(e)
+        }
+    }
+}
+
+impl Executor for RewardExecutor {
+    fn name(&self) -> String {
+        "reward".into()
+    }
+
+    fn init(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn set_step(&mut self, _step: u64) {}
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        match self.inbound.recv_timeout(Duration::from_millis(50)) {
+            Ok(Message::Trajectories(trajs)) => match self.ingest(trajs) {
+                Ok(()) => Ok(StepOutcome::Progress),
+                Err(e) => self.graceful(e),
+            },
+            Ok(Message::Scored(_)) => Err(crate::util::error::Error::Coordinator(
+                "reward executor received Scored message".into(),
+            )),
+            Ok(Message::Eof) => {
+                self.eofs_seen += 1;
+                if self.eofs_seen >= self.n_producers {
+                    if let Err(e) = self.flush() {
+                        return self.graceful(e);
+                    }
+                    self.out.send_eof();
+                    return Ok(StepOutcome::Finished);
+                }
+                Ok(StepOutcome::Progress)
+            }
+            Err(_) => {
+                if self.ctx.should_stop() {
+                    if let Err(e) = self.flush() {
+                        return self.graceful(e);
+                    }
+                    self.out.send_eof();
+                    return Ok(StepOutcome::Finished);
+                }
+                Ok(StepOutcome::Idle)
+            }
+        }
+    }
+}

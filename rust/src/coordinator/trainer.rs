@@ -1,0 +1,318 @@
+//! Trainer executor: AIPO policy updates over the packed train state.
+//!
+//! The train state [params | m | v | step | metrics] lives DEVICE-RESIDENT
+//! across steps (`execute_b` feeds step t's output buffer straight into step
+//! t+1); only the small inputs (token batches) are uploaded per step, and
+//! only the tiny `extract_metrics` slice plus the `extract_params` weight
+//! snapshot (for DDMA publication) are fetched. That keeps the hot loop free
+//! of 3P-sized host round-trips — the CPU analogue of keeping FSDP shards on
+//! device.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::channel::{Inbound, Message};
+use crate::coordinator::executor::{Executor, ExecutorContext, StepOutcome};
+use crate::model::{save_checkpoint, Checkpoint};
+use crate::rl::{pack_batch, AipoConfig, Trajectory};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::error::Result;
+use crate::util::json::Value;
+use crate::util::logging::JsonlWriter;
+
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub aipo: AipoConfig,
+    pub max_steps: u64,
+    /// publish weights to the DDMA bus every k optimizer steps
+    pub publish_every: u64,
+    pub checkpoint_every: u64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            artifact_dir: "artifacts/nano".into(),
+            aipo: AipoConfig::default(),
+            max_steps: 10,
+            publish_every: 1,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+/// Per-step record the trainer exposes for reports/benches.
+#[derive(Debug, Clone, Default)]
+pub struct TrainStepRecord {
+    pub step: u64,
+    pub wall_secs: f64,
+    pub loss: f64,
+    pub reward_mean: f64,
+    pub mean_ratio: f64,
+    pub clip_frac: f64,
+    pub approx_kl: f64,
+    pub entropy: f64,
+    pub grad_norm: f64,
+    pub mean_lag: f64,
+    pub max_lag: u64,
+    pub rows: usize,
+}
+
+pub struct Trainer {
+    cfg: TrainerConfig,
+    ctx: Arc<ExecutorContext>,
+    /// dropped on finish so blocked upstream senders unblock (shutdown path)
+    inbound: Option<Inbound>,
+    log: Option<Arc<JsonlWriter>>,
+    runtime: Option<Runtime>,
+    state_buf: Option<xla::PjRtBuffer>,
+    step: u64,
+    pending: VecDeque<Trajectory>,
+    eof: bool,
+    started: Option<Instant>,
+    pub records: Vec<TrainStepRecord>,
+    pub publish_secs_total: f64,
+}
+
+impl Trainer {
+    pub fn new(
+        cfg: TrainerConfig,
+        ctx: Arc<ExecutorContext>,
+        inbound: Inbound,
+        log: Option<Arc<JsonlWriter>>,
+    ) -> Trainer {
+        Trainer {
+            cfg,
+            ctx,
+            inbound: Some(inbound),
+            log,
+            runtime: None,
+            state_buf: None,
+            step: 0,
+            pending: VecDeque::new(),
+            eof: false,
+            started: None,
+            records: Vec::new(),
+            publish_secs_total: 0.0,
+        }
+    }
+
+    fn runtime(&self) -> &Runtime {
+        self.runtime.as_ref().expect("init() not called")
+    }
+
+    /// Pull from the inbound channel until we can fill a microbatch (or EOF).
+    fn fill_pending(&mut self) -> Result<()> {
+        let need = self.runtime().config().train_batch;
+        let Some(inbound) = self.inbound.as_ref() else {
+            return Ok(());
+        };
+        while self.pending.len() < need && !self.eof {
+            match inbound.recv_timeout(Duration::from_millis(50)) {
+                Ok(Message::Scored(g)) => self.pending.extend(g),
+                Ok(Message::Trajectories(_)) => {
+                    return Err(crate::util::error::Error::Coordinator(
+                        "trainer received unscored trajectories".into(),
+                    ))
+                }
+                Ok(Message::Eof) => self.eof = true,
+                Err(_) => {
+                    if self.ctx.should_stop() {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn run_train_step(&mut self, rows: Vec<Trajectory>) -> Result<TrainStepRecord> {
+        let t0 = Instant::now();
+        let rt = self.runtime.as_ref().unwrap();
+        let mcfg = rt.config();
+        let (b, t) = (mcfg.train_batch, mcfg.train_seq);
+        let batch = pack_batch(&rows, b, t)?;
+
+        let tokens_b = rt.upload(&HostTensor::I32(batch.tokens.clone(), vec![b, t]))?;
+        let targets_b = rt.upload(&HostTensor::I32(batch.targets.clone(), vec![b, t]))?;
+        let blogp_b = rt.upload(&HostTensor::F32(batch.blogp.clone(), vec![b, t]))?;
+        let adv_b = rt.upload(&HostTensor::F32(batch.adv.clone(), vec![b, t]))?;
+        let mask_b = rt.upload(&HostTensor::F32(batch.mask.clone(), vec![b, t]))?;
+        let lens_b = rt.upload(&HostTensor::I32(batch.lens.clone(), vec![b]))?;
+        let hyp = self.cfg.aipo.hyp();
+        let hyp_b = rt.upload(&HostTensor::F32(hyp.to_vec(), vec![3]))?;
+
+        let new_state = rt.execute_buffers(
+            "train_step",
+            &[
+                self.state_buf.as_ref().unwrap(),
+                &tokens_b,
+                &targets_b,
+                &blogp_b,
+                &adv_b,
+                &mask_b,
+                &lens_b,
+                &hyp_b,
+            ],
+        )?;
+        self.state_buf = Some(new_state);
+        self.step += 1;
+        self.ctx
+            .trainer_step
+            .store(self.step, std::sync::atomic::Ordering::SeqCst);
+
+        // fetch [step | metrics]
+        let met_buf =
+            rt.execute_buffers("extract_metrics", &[self.state_buf.as_ref().unwrap()])?;
+        let met = rt.fetch_f32(&met_buf)?;
+        let m = |name: &str| -> f64 {
+            rt.manifest
+                .metric_index(name)
+                .map(|i| met[1 + i] as f64)
+                .unwrap_or(f64::NAN)
+        };
+
+        // DDMA publication
+        if self.cfg.publish_every > 0 && self.step % self.cfg.publish_every == 0 {
+            let tp = Instant::now();
+            let p_buf =
+                rt.execute_buffers("extract_params", &[self.state_buf.as_ref().unwrap()])?;
+            let params = rt.fetch_f32(&p_buf)?;
+            self.ctx.weights.publish(params);
+            self.publish_secs_total += tp.elapsed().as_secs_f64();
+        }
+
+        let lags = batch.lags(self.step.saturating_sub(1));
+        let mean_lag = if lags.is_empty() {
+            0.0
+        } else {
+            lags.iter().sum::<u64>() as f64 / lags.len() as f64
+        };
+        let reward_mean = if batch.n_real_rows > 0 {
+            batch.rewards[..batch.n_real_rows].iter().sum::<f32>() as f64
+                / batch.n_real_rows as f64
+        } else {
+            0.0
+        };
+
+        let rec = TrainStepRecord {
+            step: self.step,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            loss: m("loss"),
+            reward_mean,
+            mean_ratio: m("mean_ratio"),
+            clip_frac: m("clip_frac"),
+            approx_kl: m("approx_kl"),
+            entropy: m("entropy"),
+            grad_norm: m("grad_norm"),
+            mean_lag,
+            max_lag: lags.iter().copied().max().unwrap_or(0),
+            rows: batch.n_real_rows,
+        };
+        if let Some(log) = &self.log {
+            let elapsed = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+            log.write(&Value::object(vec![
+                ("kind", Value::str("train")),
+                ("step", Value::num(rec.step as f64)),
+                ("elapsed", Value::num(elapsed)),
+                ("wall_secs", Value::num(rec.wall_secs)),
+                ("loss", Value::num(rec.loss)),
+                ("reward_mean", Value::num(rec.reward_mean)),
+                ("mean_ratio", Value::num(rec.mean_ratio)),
+                ("clip_frac", Value::num(rec.clip_frac)),
+                ("approx_kl", Value::num(rec.approx_kl)),
+                ("entropy", Value::num(rec.entropy)),
+                ("grad_norm", Value::num(rec.grad_norm)),
+                ("mean_lag", Value::num(rec.mean_lag)),
+                ("max_lag", Value::num(rec.max_lag as f64)),
+                ("rows", Value::num(rec.rows as f64)),
+            ]))?;
+        }
+        Ok(rec)
+    }
+
+    /// Fetch the full packed train state (for checkpointing/inspection).
+    pub fn fetch_state(&self) -> Result<Vec<f32>> {
+        let rt = self.runtime.as_ref().unwrap();
+        rt.fetch_f32(self.state_buf.as_ref().unwrap())
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+}
+
+impl Executor for Trainer {
+    fn name(&self) -> String {
+        "trainer".into()
+    }
+
+    fn init(&mut self) -> Result<()> {
+        let rt = Runtime::load(&self.cfg.artifact_dir)?;
+        rt.prepare("train_step")?;
+        rt.prepare("extract_metrics")?;
+        rt.prepare("extract_params")?;
+        // Initial train state from the bus's version-0 weights.
+        let snap = self.ctx.weights.latest();
+        let p = rt.manifest.num_params;
+        let total = rt.manifest.train_state.total;
+        let mut state = Vec::with_capacity(total);
+        state.extend_from_slice(&snap.data);
+        state.resize(total, 0.0);
+        debug_assert_eq!(snap.data.len(), p);
+        self.state_buf = Some(rt.upload(&HostTensor::F32(state, vec![total]))?);
+        self.runtime = Some(rt);
+        self.started = Some(Instant::now());
+        Ok(())
+    }
+
+    fn set_step(&mut self, _step: u64) {}
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.step >= self.cfg.max_steps {
+            self.ctx.request_stop();
+            // unblock any upstream sender stuck on a full channel
+            self.inbound = None;
+            return Ok(StepOutcome::Finished);
+        }
+        self.fill_pending()?;
+        let b = self.runtime().config().train_batch;
+        if self.pending.is_empty() {
+            return if self.eof || self.ctx.should_stop() {
+                self.inbound = None;
+                Ok(StepOutcome::Finished)
+            } else {
+                Ok(StepOutcome::Idle)
+            };
+        }
+        // Allow a final partial batch at drain time.
+        if self.pending.len() < b && !self.eof && !self.ctx.should_stop() {
+            return Ok(StepOutcome::Idle);
+        }
+        let take = self.pending.len().min(b);
+        let rows: Vec<Trajectory> = self.pending.drain(..take).collect();
+        let rec = self.run_train_step(rows)?;
+        self.records.push(rec);
+        Ok(StepOutcome::Progress)
+    }
+
+    fn save_checkpoint(&mut self) -> Result<()> {
+        if self.cfg.checkpoint_every == 0 || self.runtime.is_none() {
+            return Ok(());
+        }
+        let state = self.fetch_state()?;
+        let dir = self.ctx.out_dir.join(format!("ckpt_step{}", self.step));
+        save_checkpoint(
+            &dir,
+            &Checkpoint {
+                step: self.step,
+                weights_version: self.ctx.weights.version(),
+                state,
+            },
+        )?;
+        crate::log_info!("trainer", "checkpoint at step {} -> {}", self.step, dir.display());
+        Ok(())
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic verifiable-reward tasks (the MATH/GSM8K substitute).
+//!
+//! The paper trains on the MATH dataset with a sympy exact-match scorer and
+//! evaluates on MATH test / MATH-500 / GSM8K. This environment has no
+//! datasets, so we build the closest synthetic equivalent that exercises the
+//! same code paths: prompts with short verifiable answers, a rule-based
+//! exact-match scorer, and three held-out eval suites with distinct
+//! distributions (see [`task::EvalSuite`]).
+
+pub mod task;
+
+pub use task::{
+    eval_suites, Difficulty, EvalSuite, Problem, PromptScheduler, PromptTask, TaskGen,
+};

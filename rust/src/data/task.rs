@@ -1,0 +1,310 @@
+//! Arithmetic-reasoning task generator, prompt scheduling and eval suites.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::model::Tokenizer;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Task difficulty tiers. A curriculum-free mixture of these is the training
+/// distribution; eval suites draw from related but distinct distributions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Difficulty {
+    /// single-digit a+b
+    Add1,
+    /// two-digit a+b / a-b
+    AddSub2,
+    /// a*b with a,b <= 12
+    Mul,
+    /// three-term a+b-c
+    ThreeTerm,
+}
+
+impl Difficulty {
+    pub const ALL: [Difficulty; 4] = [
+        Difficulty::Add1,
+        Difficulty::AddSub2,
+        Difficulty::Mul,
+        Difficulty::ThreeTerm,
+    ];
+}
+
+/// One generated problem: prompt text and its unique correct answer.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub prompt: String,
+    pub answer: String,
+    pub difficulty: Difficulty,
+}
+
+pub fn make_problem(rng: &mut Rng, d: Difficulty) -> Problem {
+    let (prompt, answer) = match d {
+        Difficulty::Add1 => {
+            let a = rng.range(0, 10);
+            let b = rng.range(0, 10);
+            (format!("{a}+{b}="), format!("{}", a + b))
+        }
+        Difficulty::AddSub2 => {
+            let a = rng.range(10, 100);
+            let b = rng.range(10, 100);
+            if rng.bool(0.5) {
+                (format!("{a}+{b}="), format!("{}", a + b))
+            } else {
+                let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+                (format!("{hi}-{lo}="), format!("{}", hi - lo))
+            }
+        }
+        Difficulty::Mul => {
+            let a = rng.range(2, 13);
+            let b = rng.range(2, 13);
+            (format!("{a}*{b}="), format!("{}", a * b))
+        }
+        Difficulty::ThreeTerm => {
+            let a = rng.range(1, 50);
+            let b = rng.range(1, 50);
+            let c = rng.range(1, a + b + 1);
+            (format!("{a}+{b}-{c}="), format!("{}", a + b - c))
+        }
+    };
+    Problem {
+        prompt,
+        answer,
+        difficulty: d,
+    }
+}
+
+/// Exact-match scorer (the rule-based reward; paper Fig. 1). The response is
+/// everything the policy generated before EOS; trailing whitespace ignored.
+pub fn score(problem: &Problem, response: &str) -> f32 {
+    if response.trim_end() == problem.answer {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Task generator: a seeded stream over a difficulty mixture.
+#[derive(Debug)]
+pub struct TaskGen {
+    rng: Rng,
+    mixture: Vec<Difficulty>,
+}
+
+impl TaskGen {
+    pub fn new(seed: u64, mixture: Vec<Difficulty>) -> TaskGen {
+        assert!(!mixture.is_empty());
+        TaskGen {
+            rng: Rng::new(seed),
+            mixture,
+        }
+    }
+
+    pub fn training_mixture(seed: u64) -> TaskGen {
+        TaskGen::new(seed, Difficulty::ALL.to_vec())
+    }
+
+    pub fn next(&mut self) -> Problem {
+        let d = *self.rng.choice(&self.mixture);
+        make_problem(&mut self.rng, d)
+    }
+}
+
+/// A prompt replicated n_generations times (the paper's group for the
+/// group-mean baseline). All replicas share `group_id`.
+#[derive(Debug, Clone)]
+pub struct PromptTask {
+    pub group_id: u64,
+    pub replica: usize,
+    pub n_replicas: usize,
+    pub problem: Problem,
+    pub prompt_tokens: Vec<i32>,
+}
+
+/// Thread-safe prompt source shared by generator workers. Emits each
+/// problem's n replicas consecutively so groups complete quickly.
+pub struct PromptScheduler {
+    inner: Mutex<SchedulerInner>,
+    n_generations: usize,
+}
+
+struct SchedulerInner {
+    gen: TaskGen,
+    tok: Tokenizer,
+    queue: VecDeque<PromptTask>,
+    next_group: u64,
+    issued: u64,
+}
+
+impl PromptScheduler {
+    pub fn new(seed: u64, vocab: usize, n_generations: usize) -> Result<PromptScheduler> {
+        Ok(PromptScheduler {
+            inner: Mutex::new(SchedulerInner {
+                gen: TaskGen::training_mixture(seed),
+                tok: Tokenizer::new(vocab)?,
+                queue: VecDeque::new(),
+                next_group: 0,
+                issued: 0,
+            }),
+            n_generations,
+        })
+    }
+
+    /// Pop the next prompt task, synthesizing a new group when empty.
+    pub fn next(&self) -> PromptTask {
+        let mut s = self.inner.lock().unwrap();
+        if s.queue.is_empty() {
+            let problem = s.gen.next();
+            let prompt_tokens = s
+                .tok
+                .encode_prompt(&problem.prompt)
+                .expect("task grammar must be tokenizable");
+            let group_id = s.next_group;
+            s.next_group += 1;
+            for replica in 0..self.n_generations {
+                s.queue.push_back(PromptTask {
+                    group_id,
+                    replica,
+                    n_replicas: self.n_generations,
+                    problem: problem.clone(),
+                    prompt_tokens: prompt_tokens.clone(),
+                });
+            }
+        }
+        s.issued += 1;
+        s.queue.pop_front().unwrap()
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.inner.lock().unwrap().issued
+    }
+}
+
+/// Held-out evaluation suites, mirroring the paper's three benchmarks:
+///
+/// * `math_test`  — same mixture as training, disjoint seed (MATH test)
+/// * `math_500`   — fixed 500-problem subset of that distribution (MATH-500)
+/// * `gsm_style`  — shifted distribution: heavier 3-term/mul mix (GSM8K)
+#[derive(Debug, Clone)]
+pub struct EvalSuite {
+    pub name: &'static str,
+    pub problems: Vec<Problem>,
+}
+
+pub fn eval_suites(n_per_suite: usize) -> Vec<EvalSuite> {
+    let mut math_gen = TaskGen::new(0xEBA1_0001, Difficulty::ALL.to_vec());
+    let math_test = (0..n_per_suite).map(|_| math_gen.next()).collect();
+
+    let mut m500_gen = TaskGen::new(0xEBA1_0500, Difficulty::ALL.to_vec());
+    let math_500 = (0..n_per_suite.min(500)).map(|_| m500_gen.next()).collect();
+
+    let mut gsm_gen = TaskGen::new(
+        0xEBA1_8000,
+        vec![
+            Difficulty::ThreeTerm,
+            Difficulty::ThreeTerm,
+            Difficulty::Mul,
+            Difficulty::AddSub2,
+        ],
+    );
+    let gsm = (0..n_per_suite).map(|_| gsm_gen.next()).collect();
+
+    vec![
+        EvalSuite {
+            name: "math_test",
+            problems: math_test,
+        },
+        EvalSuite {
+            name: "math_500",
+            problems: math_500,
+        },
+        EvalSuite {
+            name: "gsm_style",
+            problems: gsm,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problems_are_correct() {
+        let mut rng = Rng::new(1);
+        for d in Difficulty::ALL {
+            for _ in 0..200 {
+                let p = make_problem(&mut rng, d);
+                // evaluate the prompt expression and compare to answer
+                let expr = p.prompt.trim_end_matches('=');
+                let val = eval_expr(expr);
+                assert_eq!(val.to_string(), p.answer, "{}", p.prompt);
+                assert_eq!(score(&p, &p.answer), 1.0);
+                assert_eq!(score(&p, "nope"), 0.0);
+            }
+        }
+    }
+
+    fn eval_expr(e: &str) -> i64 {
+        // tiny evaluator for the task grammar: left-assoc + - *single
+        if let Some(i) = e.rfind('+') {
+            if i > 0 {
+                return eval_expr(&e[..i]) + eval_expr(&e[i + 1..]);
+            }
+        }
+        if let Some(i) = e.rfind('-') {
+            if i > 0 {
+                return eval_expr(&e[..i]) - eval_expr(&e[i + 1..]);
+            }
+        }
+        if let Some(i) = e.find('*') {
+            return eval_expr(&e[..i]) * eval_expr(&e[i + 1..]);
+        }
+        e.parse().unwrap()
+    }
+
+    #[test]
+    fn prompts_tokenizable() {
+        let tok = Tokenizer::new(64).unwrap();
+        let mut gen = TaskGen::training_mixture(3);
+        for _ in 0..500 {
+            let p = gen.next();
+            assert!(tok.encode(&p.prompt).is_ok());
+            assert!(tok.encode(&p.answer).is_ok());
+            assert!(p.prompt.len() <= 20, "prompt too long: {}", p.prompt);
+        }
+    }
+
+    #[test]
+    fn scheduler_groups_replicas() {
+        let s = PromptScheduler::new(5, 64, 4).unwrap();
+        let tasks: Vec<_> = (0..8).map(|_| s.next()).collect();
+        assert!(tasks[..4].iter().all(|t| t.group_id == tasks[0].group_id));
+        assert!(tasks[4..].iter().all(|t| t.group_id == tasks[4].group_id));
+        assert_ne!(tasks[0].group_id, tasks[4].group_id);
+        let replicas: Vec<_> = tasks[..4].iter().map(|t| t.replica).collect();
+        assert_eq!(replicas, vec![0, 1, 2, 3]);
+        assert_eq!(tasks[0].problem.prompt, tasks[3].problem.prompt);
+    }
+
+    #[test]
+    fn eval_suites_are_deterministic_and_distinct() {
+        let a = eval_suites(50);
+        let b = eval_suites(50);
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.problems.len(), y.problems.len());
+            for (p, q) in x.problems.iter().zip(&y.problems) {
+                assert_eq!(p.prompt, q.prompt);
+            }
+        }
+        // training stream (seed 0) and math_test must differ
+        let mut train = TaskGen::training_mixture(0);
+        let overlap = a[0]
+            .problems
+            .iter()
+            .filter(|p| (0..50).any(|_| train.next().prompt == p.prompt))
+            .count();
+        assert!(overlap < 50);
+    }
+}

@@ -1,0 +1,60 @@
+//! Parameter-server weight-sync baseline (Table 4's OpenRLHF column).
+//!
+//! OpenRLHF's measured weight-communication time grows faster than linearly
+//! with model size (paper §3: 4.32 s at 7B, 111.65 s at 70B; the bottleneck
+//! is the serial weight-reload path, not link bandwidth). We fit the power
+//! law through the two published points and use it to reproduce the paper's
+//! ">900 s estimated at 405B" extrapolation.
+
+/// OpenRLHF published measurements: (params, seconds).
+pub const OPENRLHF_POINTS: [(f64, f64); 2] = [(7e9, 4.32), (70e9, 111.65)];
+
+#[derive(Debug, Clone, Copy)]
+pub struct PsModel {
+    /// t = c * (params/1e9)^p
+    pub c: f64,
+    pub p: f64,
+}
+
+impl PsModel {
+    pub fn calibrated() -> PsModel {
+        let (w1, t1) = OPENRLHF_POINTS[0];
+        let (w2, t2) = OPENRLHF_POINTS[1];
+        let p = (t2 / t1).ln() / (w2 / w1).ln();
+        let c = t1 / (w1 / 1e9).powf(p);
+        PsModel { c, p }
+    }
+
+    pub fn sync_secs(&self, params: f64) -> f64 {
+        self.c * (params / 1e9).powf(self.p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_published_points() {
+        let m = PsModel::calibrated();
+        for (w, t) in OPENRLHF_POINTS {
+            assert!((m.sync_secs(w) - t).abs() / t < 1e-9);
+        }
+    }
+
+    #[test]
+    fn superlinear() {
+        let m = PsModel::calibrated();
+        assert!(m.p > 1.0, "PS reload cost must be superlinear, p={}", m.p);
+    }
+
+    #[test]
+    fn paper_405b_extrapolation_exceeds_900s() {
+        let m = PsModel::calibrated();
+        assert!(
+            m.sync_secs(405e9) > 900.0,
+            "paper: 405B PS sync estimated over 900 s, got {}",
+            m.sync_secs(405e9)
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! # LlamaRL (reproduction)
+//!
+//! A fully-distributed, asynchronous reinforcement-learning framework for
+//! LLM post-training, reproducing *LlamaRL* (Meta GenAI, 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: a
+//!   single-[`coordinator::Controller`] orchestrating [`coordinator::Executor`]s
+//!   over [`coordinator::channel`]s, with the asynchronous off-policy
+//!   pipeline, [`ddma`] weight synchronization, partial rollouts, the
+//!   synchronous DeepSpeed-Chat-like baseline, and a [`simulator`] that
+//!   re-derives the paper's H100-scale evaluation from its own cost model.
+//! * **L2/L1 (build-time Python)** — `python/compile/` lowers the policy
+//!   model (JAX) and its Pallas kernels (fused AIPO loss, decode attention)
+//!   once into `artifacts/<config>/*.hlo.txt`; the [`runtime`] loads and
+//!   executes them via PJRT. Python is never on the hot path.
+//!
+//! The crate is organised bottom-up:
+//!
+//! | layer | modules |
+//! |---|---|
+//! | substrates | [`util`] (json / cli / rng / stats / prop / bench — the offline vendor set has no serde/clap/rand/proptest/criterion) |
+//! | runtime | [`runtime`] (PJRT artifact loading & execution), [`model`] (flat params, tokenizer, checkpoints, quantization) |
+//! | RL | [`data`] (synthetic verifiable-reward tasks), [`rl`] (advantages, trajectories, AIPO config) |
+//! | system | [`coordinator`] (executors, channels, controller, sync/async pipelines), [`ddma`] |
+//! | evaluation | [`simulator`] (memory/cost models, Theorem 7.5 optimizer, discrete-event timelines), [`metrics`] |
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod ddma;
+pub mod metrics;
+pub mod model;
+pub mod rl;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+
+pub use util::error::{Error, Result};

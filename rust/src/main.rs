@@ -1,0 +1,243 @@
+//! `llamarl` — CLI launcher for the LlamaRL reproduction.
+//!
+//! Subcommands:
+//!   train     run RL training (sync baseline or async LlamaRL pipeline)
+//!   simulate  cluster simulator: paper-scale step-time table (Table 3)
+//!   ddma      weight-sync comparison (Table 4)
+//!   timeline  discrete-event bubble analysis (Figure 2)
+//!   info      inspect an artifact bundle
+//!
+//! Examples:
+//!   llamarl train --preset nano --mode async --steps 5
+//!   llamarl train --preset e2e --mode sync --steps 50
+//!   llamarl simulate
+//!   llamarl info --artifacts artifacts/nano
+
+use llamarl::config;
+use llamarl::coordinator::run_training;
+use llamarl::ddma::ps_baseline::PsModel;
+use llamarl::ddma::topology::DdmaModel;
+use llamarl::metrics::print_report;
+use llamarl::runtime::Manifest;
+use llamarl::simulator::{
+    simulate_timeline, solve_async, solve_sync, DesConfig, HardwareModel, LLAMA_MODELS,
+    PAPER_TABLE3,
+};
+use llamarl::util::bench::Table;
+use llamarl::util::cli::Args;
+use llamarl::util::error::Result;
+
+const BOOL_FLAGS: &[&str] = &["quantize-generator", "help"];
+
+fn main() {
+    let args = match Args::from_env(BOOL_FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        print_help();
+        return Ok(());
+    }
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("pretrain") => cmd_pretrain(args),
+        Some("simulate") => cmd_simulate(),
+        Some("ddma") => cmd_ddma(),
+        Some("timeline") => cmd_timeline(args),
+        Some("info") => cmd_info(args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "llamarl — LlamaRL reproduction (async distributed RL for LLM post-training)
+
+USAGE: llamarl <subcommand> [flags]
+
+  train     --preset nano|small|e2e  --mode sync|async  --steps N
+            [--config file.json] [--workers N] [--rho X] [--lr X]
+            [--quantize-generator] [--eval-every K] [--out DIR]
+            [--init-checkpoint DIR]
+  pretrain  --artifacts DIR --steps N --lr X --out DIR
+            supervised warm-up producing the RL init checkpoint
+  simulate  reproduce Table 3 from the calibrated cluster cost model
+  ddma      reproduce Table 4 (DDMA vs parameter-server weight sync)
+  timeline  [--sigma X] discrete-event bubble analysis (Figure 2)
+  info      --artifacts DIR  inspect an artifact bundle"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config::resolve(args)?;
+    llamarl::log_info!(
+        "main",
+        "training: mode={:?} artifacts={} steps={}",
+        cfg.mode,
+        cfg.artifact_dir.display(),
+        cfg.max_steps
+    );
+    let report = run_training(&cfg)?;
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let cfg = llamarl::coordinator::PretrainConfig {
+        artifact_dir: args.str_or("artifacts", "artifacts/nano").into(),
+        steps: args.u64_or("steps", 200)?,
+        lr: args.f64_or("lr", 1e-3)? as f32,
+        grad_clip: args.f64_or("grad-clip", 1.0)? as f32,
+        seed: args.u64_or("seed", 7)?,
+        log_every: args.u64_or("log-every", 25)?,
+    };
+    let out = args.str_or("out", "/tmp/llamarl_pretrain");
+    let report = llamarl::coordinator::run_pretraining(&cfg, &out)?;
+    println!(
+        "pretrained {} steps in {:.1}s, final target_logp {:.3}; checkpoint -> {}",
+        report.steps, report.wall_secs, report.final_target_logp, out
+    );
+    Ok(())
+}
+
+fn cmd_simulate() -> Result<()> {
+    println!("Cluster simulator — paper Table 3 (step seconds)\n");
+    let mut t = Table::new(&[
+        "model", "GPUs", "paper base", "sim base", "paper best", "sim async", "paper x", "sim x",
+    ]);
+    for m in LLAMA_MODELS {
+        let hw = HardwareModel::paper_scale(m);
+        let sync = solve_sync(&hw.problem());
+        let hw8 = HardwareModel {
+            fp8_generator: true,
+            ..hw
+        };
+        let asn = solve_async(&hw8.problem());
+        let paper_base = PAPER_TABLE3
+            .iter()
+            .find(|r| r.model == m.name && r.system == "baseline")
+            .unwrap()
+            .step_secs;
+        let paper_best = PAPER_TABLE3
+            .iter()
+            .filter(|r| r.model == m.name && r.system == "llamarl")
+            .map(|r| r.step_secs)
+            .fold(f64::INFINITY, f64::min);
+        t.row(vec![
+            m.name.to_string(),
+            format!("{}", hw.g0 as u64),
+            format!("{paper_base:.1}"),
+            format!("{:.1}", sync.step_secs),
+            format!("{paper_best:.1}"),
+            format!("{:.1}", asn.step_secs),
+            format!("{:.2}x", paper_base / paper_best),
+            format!("{:.2}x", sync.step_secs / asn.step_secs),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_ddma() -> Result<()> {
+    println!("Weight synchronization — paper Table 4 (seconds)\n");
+    let ddma = DdmaModel::calibrated();
+    let ps = PsModel::calibrated();
+    let mut t = Table::new(&["model", "OpenRLHF PS", "model PS", "paper DDMA", "model DDMA"]);
+    let rows = [
+        ("7B", 7e9, 128.0, Some(4.32), Some(0.04)),
+        ("70B", 70e9, 128.0, Some(111.65), Some(1.15)),
+        ("405B", 405e9, 512.0, None, Some(2.31)),
+    ];
+    for (name, params, gpus, ps_paper, ddma_paper) in rows {
+        t.row(vec![
+            name.to_string(),
+            ps_paper.map(|x| format!("{x:.2}")).unwrap_or("-".into()),
+            format!("{:.2}", ps.sync_secs(params)),
+            ddma_paper.map(|x| format!("{x:.2}")).unwrap_or("-".into()),
+            format!("{:.2}", ddma.sync_secs(params, gpus as usize)),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_timeline(args: &Args) -> Result<()> {
+    let sigma = args.f64_or("sigma", 0.6)?;
+    let cfg = DesConfig {
+        gen_sigma: sigma,
+        ..DesConfig::default()
+    };
+    let (s, a) = simulate_timeline(&cfg);
+    println!("Discrete-event timelines (Figure 2), gen_sigma={sigma}\n");
+    let mut t = Table::new(&["arch", "total s", "s/step", "gen idle", "train idle", "lag"]);
+    t.row(vec![
+        "sync".into(),
+        format!("{:.1}", s.total_secs),
+        format!("{:.2}", s.step_secs_mean),
+        format!("{:.0}%", s.gen_idle_frac * 100.0),
+        format!("{:.0}%", s.train_idle_frac * 100.0),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "async".into(),
+        format!("{:.1}", a.total_secs),
+        format!("{:.2}", a.step_secs_mean),
+        format!("{:.0}%", a.gen_idle_frac * 100.0),
+        format!("{:.0}%", a.train_idle_frac * 100.0),
+        format!("{:.2}", a.mean_lag_steps),
+    ]);
+    t.print();
+    println!("\nasync speedup: {:.2}x", s.total_secs / a.total_secs);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts/nano");
+    let m = Manifest::load(&dir)?;
+    println!("artifact bundle: {dir}");
+    println!(
+        "model: {} (vocab={} d={} L={} H={} S={}), {} params",
+        m.config.name,
+        m.config.vocab,
+        m.config.d_model,
+        m.config.n_layers,
+        m.config.n_heads,
+        m.config.max_seq,
+        m.num_params
+    );
+    println!(
+        "shapes: gen [{}x{}] chunk {}, train [{}x{}]",
+        m.config.gen_batch,
+        m.config.max_seq,
+        m.config.gen_chunk,
+        m.config.train_batch,
+        m.config.train_seq
+    );
+    println!("artifacts:");
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {name}: {} inputs -> {:?} {:?}",
+            a.inputs.len(),
+            a.output.dtype,
+            a.output.shape
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Run-report rendering and metric aggregation helpers shared by the
+//! binary, examples and benches.
+
+use crate::coordinator::RunReport;
+use crate::util::bench::Table;
+use crate::util::json::Value;
+use crate::util::stats::summarize;
+
+/// Print a human-readable report of a finished training run.
+pub fn print_report(r: &RunReport) {
+    println!("== {} ==", r.summary());
+    let step_times: Vec<f64> = r.records.iter().map(|x| x.wall_secs).collect();
+    if !step_times.is_empty() {
+        let s = summarize(&step_times);
+        println!(
+            "train step: mean {:.3}s p50 {:.3}s p90 {:.3}s",
+            s.mean, s.p50, s.p90
+        );
+    }
+    let lags: Vec<f64> = r.records.iter().map(|x| x.mean_lag).collect();
+    if !lags.is_empty() {
+        println!(
+            "off-policy lag: mean {:.2} steps, max {} steps",
+            lags.iter().sum::<f64>() / lags.len() as f64,
+            r.records.iter().map(|x| x.max_lag).max().unwrap_or(0)
+        );
+    }
+    println!(
+        "backpressure: generators blocked {:.2}s sending, trainer starved {:.2}s receiving",
+        r.gen_send_blocked_secs, r.trainer_recv_blocked_secs
+    );
+    if !r.evals.is_empty() {
+        let mut t = Table::new(&["suite", "weights_version", "accuracy", "n"]);
+        for e in &r.evals {
+            t.row(vec![
+                e.suite.clone(),
+                e.weights_version.to_string(),
+                format!("{:.1}%", e.accuracy * 100.0),
+                e.n.to_string(),
+            ]);
+        }
+        t.print();
+    }
+}
+
+/// Reward curve as (step, reward_mean) pairs.
+pub fn reward_curve(r: &RunReport) -> Vec<(u64, f64)> {
+    r.records.iter().map(|x| (x.step, x.reward_mean)).collect()
+}
+
+/// Serialize a report summary to JSON (for EXPERIMENTS.md extraction).
+pub fn report_json(r: &RunReport) -> Value {
+    Value::object(vec![
+        ("mode", Value::str(r.mode.clone())),
+        ("steps", Value::num(r.steps as f64)),
+        ("wall_secs", Value::num(r.wall_secs)),
+        ("mean_step_secs", Value::num(r.mean_step_secs())),
+        ("tokens_generated", Value::num(r.tokens_generated as f64)),
+        ("trajectories", Value::num(r.trajectories as f64)),
+        ("chunks", Value::num(r.chunks as f64)),
+        ("final_reward", Value::num(r.final_reward())),
+        ("ddma_publishes", Value::num(r.ddma_publishes as f64)),
+        (
+            "ddma_mean_publish_secs",
+            Value::num(r.ddma_mean_publish_secs),
+        ),
+        (
+            "gen_send_blocked_secs",
+            Value::num(r.gen_send_blocked_secs),
+        ),
+        (
+            "trainer_recv_blocked_secs",
+            Value::num(r.trainer_recv_blocked_secs),
+        ),
+        (
+            "evals",
+            Value::Array(
+                r.evals
+                    .iter()
+                    .map(|e| {
+                        Value::object(vec![
+                            ("suite", Value::str(e.suite.clone())),
+                            ("weights_version", Value::num(e.weights_version as f64)),
+                            ("accuracy", Value::num(e.accuracy)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

@@ -1,0 +1,69 @@
+//! Checkpoint save/load: raw little-endian f32 train state plus a JSON
+//! sidecar with step/version metadata (paper: each executor checkpoints
+//! independently under controller triggers).
+
+use std::path::Path;
+
+use crate::model::params::{bytes_to_f32, f32_to_bytes};
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub weights_version: u64,
+    /// packed train state [params | m | v | step | metrics] or bare params
+    pub state: Vec<f32>,
+}
+
+pub fn save_checkpoint(dir: impl AsRef<Path>, ckpt: &Checkpoint) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("state.bin"), f32_to_bytes(&ckpt.state))?;
+    let meta = Value::object(vec![
+        ("step", Value::num(ckpt.step as f64)),
+        ("weights_version", Value::num(ckpt.weights_version as f64)),
+        ("state_len", Value::num(ckpt.state.len() as f64)),
+    ]);
+    std::fs::write(dir.join("meta.json"), meta.to_string())?;
+    Ok(())
+}
+
+pub fn load_checkpoint(dir: impl AsRef<Path>) -> Result<Checkpoint> {
+    let dir = dir.as_ref();
+    let meta = Value::parse(&std::fs::read_to_string(dir.join("meta.json"))?)?;
+    let state = bytes_to_f32(&std::fs::read(dir.join("state.bin"))?);
+    let expect = meta.req_usize("state_len")?;
+    if state.len() != expect {
+        return Err(Error::Manifest(format!(
+            "checkpoint state length {} != recorded {}",
+            state.len(),
+            expect
+        )));
+    }
+    Ok(Checkpoint {
+        step: meta.req_f64("step")? as u64,
+        weights_version: meta.req_f64("weights_version")? as u64,
+        state,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("llamarl_ckpt_test");
+        let ckpt = Checkpoint {
+            step: 42,
+            weights_version: 7,
+            state: vec![1.0, -2.5, 3.75],
+        };
+        save_checkpoint(&dir, &ckpt).unwrap();
+        let back = load_checkpoint(&dir).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.weights_version, 7);
+        assert_eq!(back.state, ckpt.state);
+    }
+}

@@ -1,0 +1,12 @@
+//! Host-side model state: flat parameter vectors, checkpoints, the
+//! char-level tokenizer, and generator-side quantization.
+
+mod checkpoint;
+mod params;
+mod quant;
+mod tokenizer;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+pub use params::{load_init_params, VersionedParams};
+pub use quant::{dequantize_int8, quantize_int8, simulate_int8_roundtrip, QuantizedParams};
+pub use tokenizer::{Tokenizer, BOS_ID, EOS_ID, PAD_ID};

@@ -1,0 +1,72 @@
+//! Flat parameter vectors and weight versioning.
+//!
+//! All model parameters live in one `f32[P]` buffer whose layout is described
+//! by the artifact manifest — this is what makes DDMA weight synchronization
+//! a single sharded buffer handoff (paper §5.2) instead of a per-tensor walk.
+
+use std::sync::Arc;
+
+use crate::runtime::Manifest;
+use crate::util::error::{Error, Result};
+
+/// A published snapshot of policy weights. `version` is the trainer step that
+/// produced it; trajectories record the version they were sampled under so
+/// off-policy lag is always measurable (paper Fig. 2: 1..n steps of delay).
+#[derive(Debug, Clone)]
+pub struct VersionedParams {
+    pub version: u64,
+    pub data: Arc<Vec<f32>>,
+}
+
+impl VersionedParams {
+    pub fn new(version: u64, data: Vec<f32>) -> Self {
+        VersionedParams {
+            version,
+            data: Arc::new(data),
+        }
+    }
+}
+
+/// Read the initial checkpoint emitted by `python -m compile.aot`
+/// (raw little-endian f32), validating length against the manifest.
+pub fn load_init_params(manifest: &Manifest) -> Result<Vec<f32>> {
+    let path = manifest.init_params_path();
+    let bytes = std::fs::read(&path).map_err(|e| {
+        Error::Manifest(format!("cannot read {}: {e}", path.display()))
+    })?;
+    if bytes.len() != manifest.num_params * 4 {
+        return Err(Error::Manifest(format!(
+            "init checkpoint has {} bytes, expected {} (P={})",
+            bytes.len(),
+            manifest.num_params * 4,
+            manifest.num_params
+        )));
+    }
+    Ok(bytes_to_f32(&bytes))
+}
+
+pub(crate) fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+pub(crate) fn f32_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&xs)), xs);
+    }
+}

@@ -1,0 +1,103 @@
+//! Generator-side weight quantization.
+//!
+//! The paper runs the 405B generator in fp8 to halve its memory and allow a
+//! smaller model-parallel degree (§4.3, Table 3). On this CPU testbed we
+//! implement int8 symmetric per-tensor quantization for real: the trainer
+//! publishes f32 weights, the generator optionally quantize-dequantizes them
+//! before upload. This exercises the same off-policy source (the behaviour
+//! policy mu is a *quantized* snapshot of pi, so pi/mu != 1 even at zero
+//! lag) that AIPO's correction must absorb — see examples/offpolicy_ablation.
+//! Cluster-scale fp8 effects (smaller W0 -> smaller admissible mp) are
+//! modelled in [`crate::simulator`].
+
+use crate::runtime::ParamEntry;
+
+#[derive(Debug, Clone)]
+pub struct QuantizedParams {
+    pub data: Vec<i8>,
+    /// one scale per param-layout entry (per-tensor symmetric)
+    pub scales: Vec<f32>,
+}
+
+/// Quantize a flat f32 param vector per-tensor to int8.
+pub fn quantize_int8(params: &[f32], layout: &[ParamEntry]) -> QuantizedParams {
+    let mut data = vec![0i8; params.len()];
+    let mut scales = Vec::with_capacity(layout.len());
+    for (i, entry) in layout.iter().enumerate() {
+        let start = entry.offset;
+        let len: usize = entry.shape.iter().product();
+        let end = start + len;
+        let chunk = &params[start..end];
+        let maxabs = chunk.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+        scales.push(scale);
+        for (dst, x) in data[start..end].iter_mut().zip(chunk) {
+            *dst = (x / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+        debug_assert_eq!(scales.len(), i + 1);
+    }
+    QuantizedParams { data, scales }
+}
+
+pub fn dequantize_int8(q: &QuantizedParams, layout: &[ParamEntry]) -> Vec<f32> {
+    let mut out = vec![0f32; q.data.len()];
+    for (entry, scale) in layout.iter().zip(&q.scales) {
+        let start = entry.offset;
+        let len: usize = entry.shape.iter().product();
+        for (dst, x) in out[start..start + len].iter_mut().zip(&q.data[start..start + len]) {
+            *dst = *x as f32 * scale;
+        }
+    }
+    out
+}
+
+/// Quantize-dequantize round trip: what the generator actually loads when
+/// `quantize_generator` is enabled.
+pub fn simulate_int8_roundtrip(params: &[f32], layout: &[ParamEntry]) -> Vec<f32> {
+    dequantize_int8(&quantize_int8(params, layout), layout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout(sizes: &[usize]) -> Vec<ParamEntry> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        for (i, s) in sizes.iter().enumerate() {
+            out.push(ParamEntry {
+                name: format!("p{i}"),
+                shape: vec![*s],
+                offset: off,
+            });
+            off += s;
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_error_is_bounded() {
+        let lay = layout(&[64, 32]);
+        let params: Vec<f32> = (0..96).map(|i| (i as f32 - 48.0) * 0.01).collect();
+        let rt = simulate_int8_roundtrip(&params, &lay);
+        let max_per_tensor = 0.48f32; // maxabs of first tensor
+        for (a, b) in params.iter().zip(&rt) {
+            assert!((a - b).abs() <= max_per_tensor / 127.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_tensor_is_exact() {
+        let lay = layout(&[8]);
+        let params = vec![0.0f32; 8];
+        assert_eq!(simulate_int8_roundtrip(&params, &lay), params);
+    }
+
+    #[test]
+    fn quantization_changes_values() {
+        let lay = layout(&[100]);
+        let params: Vec<f32> = (0..100).map(|i| (i as f32 * 0.7).sin()).collect();
+        let rt = simulate_int8_roundtrip(&params, &lay);
+        assert_ne!(params, rt, "int8 roundtrip should not be exact");
+    }
+}

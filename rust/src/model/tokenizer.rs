@@ -1,0 +1,118 @@
+//! Char-level tokenizer for the synthetic verifiable-reward tasks.
+//!
+//! Id conventions (shared with python/compile/configs.py): 0=PAD, 1=BOS,
+//! 2=EOS, 3.. = character set. The charset covers the arithmetic task
+//! grammar plus enough letters for word-problem templates; it must fit in
+//! the smallest config's vocab (nano: 64 -> charset <= 61).
+
+use crate::util::error::{Error, Result};
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+
+const CHARSET: &str = "0123456789+-*/=().,? abcdefghijklmnopqrstuvwxyz";
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Result<Tokenizer> {
+        if vocab < 3 + CHARSET.chars().count() {
+            return Err(Error::Config(format!(
+                "vocab {} too small for charset ({} chars + 3 specials)",
+                vocab,
+                CHARSET.chars().count()
+            )));
+        }
+        Ok(Tokenizer { vocab })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn encode_char(c: char) -> Option<i32> {
+        CHARSET.find(c).map(|i| i as i32 + 3)
+    }
+
+    pub fn decode_char(id: i32) -> Option<char> {
+        if id < 3 {
+            return None;
+        }
+        CHARSET.chars().nth((id - 3) as usize)
+    }
+
+    /// Encode text (no BOS/EOS added). Errors on out-of-charset chars.
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        text.chars()
+            .map(|c| {
+                Self::encode_char(c)
+                    .ok_or_else(|| Error::Config(format!("char '{c}' not in charset")))
+            })
+            .collect()
+    }
+
+    /// Encode with BOS prefix (the standard prompt form).
+    pub fn encode_prompt(&self, text: &str) -> Result<Vec<i32>> {
+        let mut out = vec![BOS_ID];
+        out.extend(self.encode(text)?);
+        Ok(out)
+    }
+
+    /// Decode ids, stopping at EOS, skipping PAD/BOS.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if id == EOS_ID {
+                break;
+            }
+            if let Some(c) = Self::decode_char(id) {
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tok = Tokenizer::new(64).unwrap();
+        let text = "12+34=46";
+        let ids = tok.encode(text).unwrap();
+        assert_eq!(tok.decode(&ids), text);
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let tok = Tokenizer::new(64).unwrap();
+        let mut ids = tok.encode("9*9=81").unwrap();
+        ids.push(EOS_ID);
+        ids.extend(tok.encode("junk").unwrap());
+        assert_eq!(tok.decode(&ids), "9*9=81");
+    }
+
+    #[test]
+    fn prompt_has_bos() {
+        let tok = Tokenizer::new(64).unwrap();
+        let ids = tok.encode_prompt("1+1=").unwrap();
+        assert_eq!(ids[0], BOS_ID);
+    }
+
+    #[test]
+    fn rejects_unknown_char() {
+        let tok = Tokenizer::new(64).unwrap();
+        assert!(tok.encode("日").is_err());
+    }
+
+    #[test]
+    fn vocab_guard() {
+        assert!(Tokenizer::new(16).is_err());
+    }
+}

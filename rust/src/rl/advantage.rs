@@ -1,0 +1,98 @@
+//! Advantage baselines (paper §6): from a single prompt we sample n
+//! generations and use group statistics as the variance-reducing baseline —
+//! no learned critic (the paper's Figure-1 workflow).
+
+use crate::rl::Trajectory;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    /// v = mean of all n rewards in the group (paper §6, Ahmadian et al.)
+    GroupMean,
+    /// leave-one-out mean (RLOO): v_i = mean of the other n-1 rewards
+    LeaveOneOut,
+    /// no baseline: advantage = raw reward
+    None,
+}
+
+/// Fill `advantage` for a complete group of trajectories (same prompt).
+/// Panics in debug if the group is inconsistent.
+pub fn group_advantages(group: &mut [Trajectory], baseline: Baseline) {
+    debug_assert!(!group.is_empty());
+    debug_assert!(group.windows(2).all(|w| w[0].group_id == w[1].group_id));
+    let n = group.len();
+    let sum: f32 = group.iter().map(|t| t.reward).sum();
+    for t in group.iter_mut() {
+        let v = match baseline {
+            Baseline::None => 0.0,
+            Baseline::GroupMean => sum / n as f32,
+            Baseline::LeaveOneOut => {
+                if n > 1 {
+                    (sum - t.reward) / (n - 1) as f32
+                } else {
+                    0.0
+                }
+            }
+        };
+        t.advantage = t.reward - v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Difficulty, Problem};
+    use crate::rl::FinishReason;
+
+    fn traj(group_id: u64, reward: f32) -> Trajectory {
+        Trajectory {
+            group_id,
+            replica: 0,
+            n_replicas: 4,
+            problem: Problem {
+                prompt: "1+1=".into(),
+                answer: "2".into(),
+                difficulty: Difficulty::Add1,
+            },
+            prompt_tokens: vec![1],
+            response_tokens: vec![2],
+            behavior_logp: vec![0.0],
+            gen_version: 0,
+            chunks: 1,
+            finish: FinishReason::Eos,
+            reward,
+            advantage: 0.0,
+        }
+    }
+
+    #[test]
+    fn group_mean() {
+        let mut g = vec![traj(0, 1.0), traj(0, 0.0), traj(0, 0.0), traj(0, 1.0)];
+        group_advantages(&mut g, Baseline::GroupMean);
+        assert_eq!(g[0].advantage, 0.5);
+        assert_eq!(g[1].advantage, -0.5);
+        let sum: f32 = g.iter().map(|t| t.advantage).sum();
+        assert!(sum.abs() < 1e-6, "group-mean advantages sum to zero");
+    }
+
+    #[test]
+    fn leave_one_out() {
+        let mut g = vec![traj(0, 1.0), traj(0, 0.0), traj(0, 0.0), traj(0, 0.0)];
+        group_advantages(&mut g, Baseline::LeaveOneOut);
+        assert_eq!(g[0].advantage, 1.0);
+        assert!((g[1].advantage - (-1.0 / 3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uniform_rewards_zero_advantage() {
+        let mut g = vec![traj(0, 1.0); 4];
+        group_advantages(&mut g, Baseline::GroupMean);
+        assert!(g.iter().all(|t| t.advantage == 0.0));
+    }
+
+    #[test]
+    fn no_baseline() {
+        let mut g = vec![traj(0, 0.7)];
+        group_advantages(&mut g, Baseline::None);
+        assert_eq!(g[0].advantage, 0.7);
+    }
+}

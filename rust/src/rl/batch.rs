@@ -1,0 +1,165 @@
+//! Packing trajectories into the fixed-shape arrays the train_step artifact
+//! consumes.
+
+use crate::rl::Trajectory;
+use crate::util::error::{Error, Result};
+
+/// A packed training microbatch, shaped [b, t] row-major.
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    pub b: usize,
+    pub t: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub blogp: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub lens: Vec<i32>,
+    /// generator weight versions per row (255 = padding row)
+    pub gen_versions: Vec<u64>,
+    pub rewards: Vec<f32>,
+    pub n_real_rows: usize,
+}
+
+/// Pack up to `b` trajectories into a [b, t] batch.
+///
+/// Layout per row: full = prompt ++ response; inputs are full[0..L-1],
+/// targets are full[1..L]; response-token targets live at positions
+/// [plen-1, plen+rlen-1) where mask=1 and blogp/advantage are aligned.
+/// Missing rows are zero-padded with mask 0 (no gradient contribution).
+pub fn pack_batch(trajs: &[Trajectory], b: usize, t: usize) -> Result<TrainBatch> {
+    if trajs.len() > b {
+        return Err(Error::Coordinator(format!(
+            "pack_batch: {} trajectories > batch {b}",
+            trajs.len()
+        )));
+    }
+    let mut out = TrainBatch {
+        b,
+        t,
+        tokens: vec![0; b * t],
+        targets: vec![0; b * t],
+        blogp: vec![0.0; b * t],
+        adv: vec![0.0; b * t],
+        mask: vec![0.0; b * t],
+        lens: vec![1; b],
+        gen_versions: vec![u64::MAX; b],
+        rewards: vec![0.0; b],
+        n_real_rows: trajs.len(),
+    };
+    for (row, tr) in trajs.iter().enumerate() {
+        let plen = tr.prompt_tokens.len();
+        let rlen = tr.response_tokens.len();
+        let total = plen + rlen;
+        if total > t + 1 {
+            return Err(Error::Coordinator(format!(
+                "trajectory length {total} exceeds train_seq+1 ({})",
+                t + 1
+            )));
+        }
+        if plen == 0 || rlen == 0 {
+            return Err(Error::Coordinator("empty prompt or response".into()));
+        }
+        if tr.behavior_logp.len() != rlen {
+            return Err(Error::Coordinator("behavior_logp/response mismatch".into()));
+        }
+        let mut full = Vec::with_capacity(total);
+        full.extend_from_slice(&tr.prompt_tokens);
+        full.extend_from_slice(&tr.response_tokens);
+        let base = row * t;
+        let in_len = total - 1;
+        for i in 0..in_len {
+            out.tokens[base + i] = full[i];
+            out.targets[base + i] = full[i + 1];
+        }
+        for (j, &lp) in tr.behavior_logp.iter().enumerate() {
+            let pos = plen - 1 + j;
+            out.blogp[base + pos] = lp;
+            out.adv[base + pos] = tr.advantage;
+            out.mask[base + pos] = 1.0;
+        }
+        out.lens[row] = in_len as i32;
+        out.gen_versions[row] = tr.gen_version;
+        out.rewards[row] = tr.reward;
+    }
+    Ok(out)
+}
+
+impl TrainBatch {
+    /// Masked token count (what the loss normalizes over).
+    pub fn token_count(&self) -> usize {
+        self.mask.iter().filter(|m| **m > 0.0).count()
+    }
+
+    /// Off-policy lag per real row given the trainer's current version.
+    pub fn lags(&self, trainer_version: u64) -> Vec<u64> {
+        self.gen_versions
+            .iter()
+            .take(self.n_real_rows)
+            .map(|v| trainer_version.saturating_sub(*v))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Difficulty, Problem};
+    use crate::rl::FinishReason;
+
+    fn traj(prompt: Vec<i32>, resp: Vec<i32>) -> Trajectory {
+        let n = resp.len();
+        Trajectory {
+            group_id: 0,
+            replica: 0,
+            n_replicas: 1,
+            problem: Problem {
+                prompt: "p".into(),
+                answer: "a".into(),
+                difficulty: Difficulty::Add1,
+            },
+            prompt_tokens: prompt,
+            response_tokens: resp,
+            behavior_logp: vec![-1.0; n],
+            gen_version: 3,
+            chunks: 1,
+            finish: FinishReason::Eos,
+            reward: 1.0,
+            advantage: 0.5,
+        }
+    }
+
+    #[test]
+    fn alignment() {
+        let tr = traj(vec![1, 10, 11], vec![20, 21, 2]);
+        let b = pack_batch(&[tr], 2, 8).unwrap();
+        // inputs: [1,10,11,20,21]; targets: [10,11,20,21,2]
+        assert_eq!(&b.tokens[..5], &[1, 10, 11, 20, 21]);
+        assert_eq!(&b.targets[..5], &[10, 11, 20, 21, 2]);
+        // response targets at positions 2,3,4
+        assert_eq!(&b.mask[..8], &[0., 0., 1., 1., 1., 0., 0., 0.]);
+        assert_eq!(b.lens[0], 5);
+        assert_eq!(b.adv[2], 0.5);
+        assert_eq!(b.blogp[3], -1.0);
+        // padding row untouched
+        assert_eq!(b.lens[1], 1);
+        assert!(b.mask[8..].iter().all(|m| *m == 0.0));
+        assert_eq!(b.token_count(), 3);
+        assert_eq!(b.lags(5), vec![2]);
+    }
+
+    #[test]
+    fn rejects_oversize() {
+        let tr = traj(vec![1; 6], vec![2; 6]);
+        assert!(pack_batch(&[tr], 1, 8).is_err());
+    }
+
+    #[test]
+    fn exact_fit_is_ok() {
+        // total = t+1 exactly: inputs fill the whole row
+        let tr = traj(vec![1; 4], vec![2; 5]);
+        let b = pack_batch(&[tr], 1, 8).unwrap();
+        assert_eq!(b.lens[0], 8);
+        assert_eq!(b.token_count(), 5);
+    }
+}

@@ -1,0 +1,40 @@
+//! RL data structures and the AIPO algorithm's host-side pieces:
+//! trajectories, group advantage baselines, and train-batch packing.
+
+mod advantage;
+mod batch;
+mod trajectory;
+
+pub use advantage::{group_advantages, Baseline};
+pub use batch::{pack_batch, TrainBatch};
+pub use trajectory::{FinishReason, Trajectory};
+
+/// AIPO hyper-parameters (paper §6). `rho` is the one-sided IS-ratio clip;
+/// `rho <= 0` disables the correction entirely (the Figure-8 ablation arm).
+#[derive(Debug, Clone, Copy)]
+pub struct AipoConfig {
+    pub lr: f32,
+    pub rho: f32,
+    pub grad_clip: f32,
+    pub baseline: Baseline,
+}
+
+impl Default for AipoConfig {
+    fn default() -> Self {
+        AipoConfig {
+            lr: 2e-4,
+            // paper: rho in [2, 10] works well
+            rho: 4.0,
+            grad_clip: 1.0,
+            baseline: Baseline::GroupMean,
+        }
+    }
+}
+
+impl AipoConfig {
+    /// The `hyp` vector consumed by the train_step artifact. `rho <= 0` is
+    /// understood by the AIPO kernel as "no off-policy correction" (w = 1).
+    pub fn hyp(&self) -> [f32; 3] {
+        [self.lr, self.rho, self.grad_clip]
+    }
+}

@@ -1,0 +1,48 @@
+//! Trajectories: the unit of data flowing generator -> reward -> trainer.
+
+use crate::data::Problem;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// policy emitted EOS
+    Eos,
+    /// hit the sequence-length budget
+    Length,
+}
+
+/// One completed generation plus everything AIPO training needs.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    pub group_id: u64,
+    pub replica: usize,
+    pub n_replicas: usize,
+    pub problem: Problem,
+    /// prompt token ids (BOS + prompt chars)
+    pub prompt_tokens: Vec<i32>,
+    /// generated token ids (including the final EOS if any)
+    pub response_tokens: Vec<i32>,
+    /// behaviour log-prob mu(y_t) recorded at sampling time, one per
+    /// response token
+    pub behavior_logp: Vec<f32>,
+    /// weights version the generator sampled under (off-policy lag =
+    /// trainer_version - gen_version)
+    pub gen_version: u64,
+    /// how many generate_chunk calls this trajectory spanned (partial
+    /// rollouts metric)
+    pub chunks: u32,
+    pub finish: FinishReason,
+    /// rule-based score, filled by the reward executor
+    pub reward: f32,
+    /// sequence-level advantage, filled after group baseline computation
+    pub advantage: f32,
+}
+
+impl Trajectory {
+    pub fn total_len(&self) -> usize {
+        self.prompt_tokens.len() + self.response_tokens.len()
+    }
+
+    pub fn decoded_response(&self, tok: &crate::model::Tokenizer) -> String {
+        tok.decode(&self.response_tokens)
+    }
+}

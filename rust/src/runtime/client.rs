@@ -1,0 +1,139 @@
+//! Per-executor PJRT runtime: compile artifacts lazily, execute them with
+//! host tensors or device-resident buffers, and account execution time.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::HostTensor;
+use crate::util::error::{Error, Result};
+
+/// Cumulative execution statistics per artifact (feeds the perf pass and the
+/// Figure-5 measurements).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// One PJRT CPU client + compiled-executable cache, owned by a single
+/// executor thread (`PjRtClient` is not `Send`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (and cache) the named artifact. Compilation happens at most
+    /// once per runtime; callers may invoke this eagerly at init to keep the
+    /// hot path compile-free (paper: executors compile in `init`).
+    pub fn prepare(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_default()
+            .compile_secs += dt;
+        crate::log_debug!("runtime", "compiled {name} in {dt:.2}s");
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn record(&self, name: &str, secs: f64) {
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += secs;
+    }
+
+    /// Execute with host tensors, validating shapes/dtypes against the
+    /// manifest. Returns the single output as a literal.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<xla::Literal> {
+        let def = self.manifest.artifact(name)?.clone();
+        if inputs.len() != def.inputs.len() {
+            return Err(Error::Manifest(format!(
+                "artifact '{name}' expects {} inputs, got {}",
+                def.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, spec) in inputs.iter().zip(&def.inputs) {
+            t.check(spec)?;
+        }
+        let exe = self.prepare(name)?;
+        let lits = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let t0 = Instant::now();
+        let bufs = exe.execute::<xla::Literal>(&lits)?;
+        let out = bufs[0][0].to_literal_sync()?;
+        self.record(name, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    /// Upload a host tensor to a device-resident buffer.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        match t {
+            HostTensor::F32(data, shape) => {
+                Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+            }
+            HostTensor::I32(data, shape) => {
+                Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+            }
+        }
+    }
+
+    /// Execute with device-resident buffers (zero host copies). Used for the
+    /// train-state loop: the packed state output of step t feeds step t+1.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let exe = self.prepare(name)?;
+        let t0 = Instant::now();
+        let mut bufs = exe.execute_b(inputs)?;
+        self.record(name, t0.elapsed().as_secs_f64());
+        let mut replica = bufs.remove(0);
+        Ok(replica.remove(0))
+    }
+
+    /// Fetch a device buffer to host as f32 (the only fetch dtype we need).
+    pub fn fetch_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn config(&self) -> &crate::runtime::manifest::ModelConfig {
+        &self.manifest.config
+    }
+}

@@ -1,0 +1,265 @@
+//! Artifact manifest: the contract between the AOT compile path
+//! (python/compile/aot.py) and the Rust runtime. Parsed from
+//! `artifacts/<config>/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(Error::Manifest(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Value) -> Result<TensorSpec> {
+        let shape = v
+            .req_array("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::Manifest("bad shape".into())))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: v.req_str("name")?.to_string(),
+            shape,
+            dtype: Dtype::parse(v.req_str("dtype")?)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactDef {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// Model hyper-parameters, mirroring python/compile/configs.py.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub gen_batch: usize,
+    pub gen_chunk: usize,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+}
+
+impl ModelConfig {
+    fn parse(v: &Value) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: v.req_str("name")?.to_string(),
+            vocab: v.req_usize("vocab")?,
+            d_model: v.req_usize("d_model")?,
+            n_layers: v.req_usize("n_layers")?,
+            n_heads: v.req_usize("n_heads")?,
+            d_head: v.req_usize("d_head")?,
+            d_ff: v.req_usize("d_ff")?,
+            max_seq: v.req_usize("max_seq")?,
+            gen_batch: v.req_usize("gen_batch")?,
+            gen_chunk: v.req_usize("gen_chunk")?,
+            train_batch: v.req_usize("train_batch")?,
+            train_seq: v.req_usize("train_seq")?,
+            pad_id: v.req_f64("pad_id")? as i32,
+            bos_id: v.req_f64("bos_id")? as i32,
+            eos_id: v.req_f64("eos_id")? as i32,
+        })
+    }
+
+    /// Approximate parameter count formula (embed tied); used by the
+    /// simulator to extrapolate W0 for paper-scale models.
+    pub fn approx_params(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 4 * d * d + 2 * d * self.d_ff + self.d_ff + 5 * d;
+        self.vocab * d + self.max_seq * d + self.n_layers * per_layer + 2 * d
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+/// Packed train-state layout: [params | m | v | step | metrics].
+#[derive(Debug, Clone)]
+pub struct TrainStateLayout {
+    pub params: (usize, usize),
+    pub adam_m: (usize, usize),
+    pub adam_v: (usize, usize),
+    pub step: (usize, usize),
+    pub metrics: (usize, usize),
+    pub total: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub num_params: usize,
+    pub param_layout: Vec<ParamEntry>,
+    pub train_state: TrainStateLayout,
+    pub metric_names: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactDef>,
+    pub fig5_train_batches: Vec<usize>,
+    pub fig5_gen_batches: Vec<usize>,
+}
+
+fn parse_span(v: &Value, key: &str) -> Result<(usize, usize)> {
+    let arr = v.req_array(key)?;
+    if arr.len() != 2 {
+        return Err(Error::Manifest(format!("span '{key}' must have 2 items")));
+    }
+    Ok((
+        arr[0].as_usize().ok_or_else(|| Error::Manifest("bad span".into()))?,
+        arr[1].as_usize().ok_or_else(|| Error::Manifest("bad span".into()))?,
+    ))
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        let v = Value::parse(&text)?;
+
+        let config = ModelConfig::parse(v.req("config")?)?;
+        let num_params = v.req_usize("num_params")?;
+
+        let mut param_layout = Vec::new();
+        for e in v.req_array("param_layout")? {
+            param_layout.push(ParamEntry {
+                name: e.req_str("name")?.to_string(),
+                shape: e
+                    .req_array("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: e.req_usize("offset")?,
+            });
+        }
+
+        let ts = v.req("train_state")?;
+        let train_state = TrainStateLayout {
+            params: parse_span(ts, "params")?,
+            adam_m: parse_span(ts, "adam_m")?,
+            adam_v: parse_span(ts, "adam_v")?,
+            step: parse_span(ts, "step")?,
+            metrics: parse_span(ts, "metrics")?,
+            total: ts.req_usize("total")?,
+        };
+
+        let metric_names: Vec<String> = v
+            .req_array("metric_names")?
+            .iter()
+            .map(|m| m.as_str().unwrap_or("").to_string())
+            .collect();
+
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in v
+            .req("artifacts")?
+            .as_object()
+            .ok_or_else(|| Error::Manifest("'artifacts' is not an object".into()))?
+        {
+            let inputs = art
+                .req_array("inputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactDef {
+                    name: name.clone(),
+                    file: art.req_str("file")?.to_string(),
+                    inputs,
+                    output: TensorSpec::parse(art.req("output")?)?,
+                },
+            );
+        }
+
+        let fig5 = v.req("fig5")?;
+        let to_usizes = |key: &str| -> Result<Vec<usize>> {
+            let out: Vec<usize> = fig5
+                .req_array(key)?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            Ok(out)
+        };
+
+        if train_state.total != 3 * num_params + 1 + metric_names.len() {
+            return Err(Error::Manifest("inconsistent train_state layout".into()));
+        }
+
+        Ok(Manifest {
+            dir,
+            config,
+            num_params,
+            param_layout,
+            train_state,
+            metric_names,
+            artifacts,
+            fig5_train_batches: to_usizes("train_batches")?,
+            fig5_gen_batches: to_usizes("gen_batches")?,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactDef> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact '{name}'")))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Index of a metric in the packed [step | metrics] extract output.
+    pub fn metric_index(&self, name: &str) -> Option<usize> {
+        self.metric_names.iter().position(|m| m == name)
+    }
+
+    /// Path of the initial checkpoint emitted by aot.py.
+    pub fn init_params_path(&self) -> PathBuf {
+        self.dir.join("init_params.bin")
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/<config>/*.hlo.txt`) and
+//! execute them from the coordinator hot path.
+//!
+//! Each executor thread owns one [`Runtime`] (the `xla` crate's
+//! `PjRtClient` is `Rc`-based and not `Send`, which conveniently mirrors the
+//! paper's model of executors as self-contained SPMD process groups with
+//! their own device context). Weights cross executors through host memory —
+//! exactly the surface the [`crate::ddma`] channel manages.
+//!
+//! Interchange is HLO **text**: jax>=0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Every artifact returns a
+//! single array (tuple outputs crash the shim's `ToLiteralSync`), so
+//! multi-value state travels as packed vectors (see python/compile/model.py).
+
+mod client;
+mod manifest;
+mod tensor;
+
+pub use client::{ExecStats, Runtime};
+pub use manifest::{ArtifactDef, Dtype, Manifest, ModelConfig, ParamEntry, TensorSpec};
+pub use tensor::{lit_f32, lit_i32, to_vec_f32, to_vec_i32, HostTensor};

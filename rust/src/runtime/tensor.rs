@@ -1,0 +1,86 @@
+//! Host-side tensor helpers: build/unpack `xla::Literal`s with shape/dtype
+//! validation against manifest [`TensorSpec`]s.
+
+use crate::runtime::manifest::{Dtype, TensorSpec};
+use crate::util::error::{Error, Result};
+
+/// A host tensor paired with its logical shape — the unit that travels
+/// through coordinator communication channels.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32(data, shape) => lit_f32(data, shape),
+            HostTensor::I32(data, shape) => lit_i32(data, shape),
+        }
+    }
+
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype || self.shape() != spec.shape.as_slice() {
+            return Err(Error::Shape {
+                what: spec.name.clone(),
+                expected: spec.shape.clone(),
+                got: self.shape().to_vec(),
+            });
+        }
+        Ok(())
+    }
+}
+
+fn to_i64_shape(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|d| *d as i64).collect()
+}
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(Error::Shape {
+            what: "lit_f32".into(),
+            expected: shape.to_vec(),
+            got: vec![data.len()],
+        });
+    }
+    Ok(xla::Literal::vec1(data).reshape(&to_i64_shape(shape))?)
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(Error::Shape {
+            what: "lit_i32".into(),
+            expected: shape.to_vec(),
+            got: vec![data.len()],
+        });
+    }
+    Ok(xla::Literal::vec1(data).reshape(&to_i64_shape(shape))?)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}

@@ -1,0 +1,264 @@
+//! Discrete-event simulation of the two execution architectures
+//! (paper Figure 2): per-GPU-group timelines, idle-bubble accounting,
+//! straggler effects from generation-length variance, and the
+//! partial-rollout mitigation (paper §4.2).
+//!
+//! The DES models one "processing group" per executor. Generation length is
+//! lognormal (heavy right tail = stragglers). In the synchronous
+//! architecture the trainer waits for the LAST sequence of every batch
+//! (Fig. 2a bubbles); asynchronously, groups free-run with a bounded queue
+//! (Fig. 2b) and partial rollouts cap per-iteration generation so stragglers
+//! span iterations instead of blocking peers.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct DesConfig {
+    /// RL steps to simulate
+    pub steps: usize,
+    /// sequences per training batch
+    pub batch: usize,
+    /// decode slots per generator group (concurrency)
+    pub concurrency: usize,
+    /// mean generation time per sequence, seconds
+    pub gen_mean_secs: f64,
+    /// lognormal sigma of generation time (straggler heaviness)
+    pub gen_sigma: f64,
+    /// trainer time per batch, seconds
+    pub train_secs: f64,
+    /// reward scoring time per batch, seconds
+    pub score_secs: f64,
+    /// async queue capacity, in batches
+    pub queue_capacity: usize,
+    /// cap generation work per iteration at this multiple of the mean
+    /// (partial rollouts); f64::INFINITY disables
+    pub partial_rollout_cap: f64,
+    pub seed: u64,
+}
+
+impl Default for DesConfig {
+    fn default() -> Self {
+        DesConfig {
+            steps: 50,
+            batch: 64,
+            concurrency: 16,
+            gen_mean_secs: 8.0,
+            gen_sigma: 0.6,
+            // a balanced regime (generation ~32 s per 64-batch at 16 slots,
+            // training 24 s): both bubbles visible, as in paper Fig. 2
+            train_secs: 24.0,
+            score_secs: 0.2,
+            queue_capacity: 2,
+            partial_rollout_cap: f64::INFINITY,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct DesReport {
+    pub total_secs: f64,
+    pub step_secs_mean: f64,
+    /// fraction of the run the generator group sat idle
+    pub gen_idle_frac: f64,
+    /// fraction of the run the trainer group sat idle
+    pub train_idle_frac: f64,
+    /// mean number of trainer steps of lag for consumed batches (async)
+    pub mean_lag_steps: f64,
+    /// per-step completion times
+    pub step_ends: Vec<f64>,
+}
+
+/// Draw per-sequence generation times; lognormal, mean-normalized.
+fn gen_times(rng: &mut Rng, cfg: &DesConfig, n: usize) -> Vec<f64> {
+    let mu = -0.5 * cfg.gen_sigma * cfg.gen_sigma; // E[lognormal]=1
+    (0..n)
+        .map(|_| cfg.gen_mean_secs * rng.lognormal(mu, cfg.gen_sigma))
+        .collect()
+}
+
+/// Time for one generator group to finish `batch` sequences with
+/// `concurrency` slots (greedy multi-slot packing). With a partial-rollout
+/// cap, work beyond `cap` carries into the NEXT batch (head-start credit),
+/// so the batch completes at the cap while the tail overlaps.
+fn batch_generation_time(
+    rng: &mut Rng,
+    cfg: &DesConfig,
+    carry: &mut Vec<f64>,
+) -> f64 {
+    let mut times = gen_times(rng, cfg, cfg.batch);
+    // resume carried partial sequences first (they replace fresh draws)
+    for (t, c) in times.iter_mut().zip(carry.iter()) {
+        *t = *c;
+    }
+    carry.clear();
+    let cap = cfg.partial_rollout_cap * cfg.gen_mean_secs;
+    let mut slots = vec![0.0f64; cfg.concurrency.max(1)];
+    for &t in &times {
+        // assign to the earliest-free slot
+        let (idx, _) = slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if t > cap {
+            // generate up to the cap now, carry the remainder
+            slots[idx] += cap;
+            carry.push(t - cap);
+        } else {
+            slots[idx] += t;
+        }
+    }
+    slots.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Synchronous architecture (Fig. 2a): each step is gen -> score -> train on
+/// the same clock; generator idles during training and vice versa.
+pub fn simulate_sync(cfg: &DesConfig) -> DesReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    let mut gen_busy = 0.0;
+    let mut train_busy = 0.0;
+    let mut step_ends = Vec::with_capacity(cfg.steps);
+    let mut carry = Vec::new();
+    for _ in 0..cfg.steps {
+        let g = batch_generation_time(&mut rng, cfg, &mut carry);
+        t += g;
+        gen_busy += g;
+        t += cfg.score_secs;
+        t += cfg.train_secs;
+        train_busy += cfg.train_secs;
+        step_ends.push(t);
+    }
+    DesReport {
+        total_secs: t,
+        step_secs_mean: t / cfg.steps as f64,
+        gen_idle_frac: 1.0 - gen_busy / t,
+        train_idle_frac: 1.0 - train_busy / t,
+        mean_lag_steps: 0.0,
+        step_ends,
+    }
+}
+
+/// Asynchronous architecture (Fig. 2b): generator and trainer free-run;
+/// a bounded queue of generated batches provides backpressure. Weight
+/// versions advance with trainer steps; each batch records the version gap
+/// between its generation and its consumption (off-policy lag).
+pub fn simulate_async(cfg: &DesConfig) -> DesReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut gen_clock = 0.0f64;
+    let mut train_clock = 0.0f64;
+    let mut gen_busy = 0.0f64;
+    let mut train_busy = 0.0f64;
+    // queue entries: (ready_time, trainer_step_when_generated)
+    let mut queue: std::collections::VecDeque<(f64, usize)> = Default::default();
+    let mut lags = Vec::with_capacity(cfg.steps);
+    let mut step_ends = Vec::with_capacity(cfg.steps);
+    let mut done_steps = 0usize;
+    let mut carry = Vec::new();
+
+    while done_steps < cfg.steps {
+        // generator produces whenever the queue has room
+        while queue.len() < cfg.queue_capacity && gen_clock <= train_clock + 1e-9 {
+            let g = batch_generation_time(&mut rng, cfg, &mut carry);
+            gen_clock += g;
+            gen_busy += g;
+            queue.push_back((gen_clock, done_steps));
+        }
+        // trainer consumes the next ready batch
+        match queue.pop_front() {
+            Some((ready, gen_at_step)) => {
+                let start = train_clock.max(ready) + cfg.score_secs;
+                train_clock = start + cfg.train_secs;
+                train_busy += cfg.train_secs;
+                lags.push((done_steps - gen_at_step) as f64);
+                done_steps += 1;
+                step_ends.push(train_clock);
+            }
+            None => {
+                // queue empty: generator must get ahead of the train clock
+                let g = batch_generation_time(&mut rng, cfg, &mut carry);
+                gen_clock = gen_clock.max(train_clock) + g;
+                gen_busy += g;
+                queue.push_back((gen_clock, done_steps));
+            }
+        }
+    }
+    let total = train_clock.max(gen_clock);
+    DesReport {
+        total_secs: total,
+        step_secs_mean: total / cfg.steps as f64,
+        gen_idle_frac: 1.0 - gen_busy / total,
+        train_idle_frac: 1.0 - train_busy / total,
+        mean_lag_steps: lags.iter().sum::<f64>() / lags.len().max(1) as f64,
+        step_ends,
+    }
+}
+
+/// Convenience: run both architectures on the same config.
+pub fn simulate_timeline(cfg: &DesConfig) -> (DesReport, DesReport) {
+    (simulate_sync(cfg), simulate_async(cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn async_faster_than_sync() {
+        let cfg = DesConfig::default();
+        let (s, a) = simulate_timeline(&cfg);
+        assert!(
+            a.total_secs < s.total_secs,
+            "async {} !< sync {}",
+            a.total_secs,
+            s.total_secs
+        );
+    }
+
+    #[test]
+    fn sync_trainer_idles_during_generation() {
+        let cfg = DesConfig::default();
+        let s = simulate_sync(&cfg);
+        assert!(s.train_idle_frac > 0.5, "train_idle={}", s.train_idle_frac);
+    }
+
+    #[test]
+    fn async_lag_bounded_by_queue() {
+        let cfg = DesConfig {
+            queue_capacity: 3,
+            ..DesConfig::default()
+        };
+        let a = simulate_async(&cfg);
+        assert!(a.mean_lag_steps <= 3.0 + 1e-9);
+        assert!(a.mean_lag_steps >= 0.0);
+    }
+
+    #[test]
+    fn partial_rollouts_reduce_straggler_cost() {
+        let heavy = DesConfig {
+            gen_sigma: 1.0,
+            steps: 100,
+            ..DesConfig::default()
+        };
+        let without = simulate_sync(&heavy);
+        let with = simulate_sync(&DesConfig {
+            partial_rollout_cap: 2.0,
+            ..heavy
+        });
+        assert!(
+            with.total_secs < without.total_secs,
+            "partial rollouts should shorten the straggler tail: {} vs {}",
+            with.total_secs,
+            without.total_secs
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = DesConfig::default();
+        let a1 = simulate_async(&cfg);
+        let a2 = simulate_async(&cfg);
+        assert_eq!(a1.total_secs, a2.total_secs);
+    }
+}

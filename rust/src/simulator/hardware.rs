@@ -1,0 +1,376 @@
+//! Physical instantiation of the paper's cost model for Llama-3.1 models on
+//! H100 clusters, calibrated against Table 3's baseline rows.
+//!
+//! Calibration contract (documented in DESIGN.md): the paper's *baseline*
+//! rows pin the absolute scale of eta_t + eta_g per model size (via Eq. 2);
+//! two shape constants split and curve them:
+//!
+//! * `GEN_FRACTION` — share of a synchronous step spent generating (the
+//!   paper: generation is "memory-bound with major execution time
+//!   contribution");
+//! * `FIXED_FRACTION` — share of per-sample time that amortizes away with
+//!   batch (Figure 5's curvature): eta(b) = c0/b + c1.
+//!
+//! Everything else — memory-forced minimum sharding degrees, the
+//! theta split, fp8's halved generator footprint, the large-mp
+//! communication penalty — comes from the model, so the simulated *LlamaRL*
+//! rows and the Figure-7 speedup curve are genuine predictions, compared
+//! against the paper's published numbers by the benches.
+
+use crate::simulator::problem::{default_grid, ProblemSpec};
+
+/// Architecture constants of the evaluated models.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub params: f64,
+    pub layers: f64,
+    pub d_model: f64,
+    /// grouped-query attention KV width (d_kv = d_model / gqa_ratio)
+    pub gqa_ratio: f64,
+}
+
+pub const LLAMA_MODELS: [ModelSpec; 3] = [
+    ModelSpec {
+        name: "8B",
+        params: 8e9,
+        layers: 32.0,
+        d_model: 4096.0,
+        gqa_ratio: 4.0,
+    },
+    ModelSpec {
+        name: "70B",
+        params: 70e9,
+        layers: 80.0,
+        d_model: 8192.0,
+        gqa_ratio: 8.0,
+    },
+    ModelSpec {
+        name: "405B",
+        params: 405e9,
+        layers: 126.0,
+        d_model: 16384.0,
+        gqa_ratio: 8.0,
+    },
+];
+
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub mem_bytes: f64,
+    pub bf16_flops: f64,
+    pub hbm_bps: f64,
+}
+
+pub const H100: GpuSpec = GpuSpec {
+    mem_bytes: 80e9,
+    bf16_flops: 989e12,
+    hbm_bps: 3.35e12,
+};
+
+/// Sequence-length assumptions for the RL workload (MATH-style prompts).
+pub const SEQ_TOTAL: f64 = 2048.0;
+
+/// Paper Table 3 rows (the ground truth the benches print alongside).
+#[derive(Debug, Clone, Copy)]
+pub struct PaperRow {
+    pub model: &'static str,
+    pub system: &'static str,
+    pub step_secs: f64,
+    pub total_gpus: f64,
+    pub trainer_mp: f64,
+    pub generator_mp: f64,
+    pub fp8_generator: bool,
+}
+
+pub const PAPER_TABLE3: [PaperRow; 10] = [
+    PaperRow { model: "8B", system: "baseline", step_secs: 22.45, total_gpus: 256.0, trainer_mp: 8.0, generator_mp: 8.0, fp8_generator: false },
+    PaperRow { model: "70B", system: "baseline", step_secs: 82.32, total_gpus: 256.0, trainer_mp: 8.0, generator_mp: 8.0, fp8_generator: false },
+    PaperRow { model: "405B", system: "baseline", step_secs: 635.8, total_gpus: 1024.0, trainer_mp: 64.0, generator_mp: 64.0, fp8_generator: false },
+    PaperRow { model: "8B", system: "llamarl", step_secs: 12.22, total_gpus: 256.0, trainer_mp: 8.0, generator_mp: 8.0, fp8_generator: false },
+    PaperRow { model: "8B", system: "llamarl", step_secs: 8.90, total_gpus: 256.0, trainer_mp: 8.0, generator_mp: 1.0, fp8_generator: false },
+    PaperRow { model: "70B", system: "llamarl", step_secs: 26.19, total_gpus: 256.0, trainer_mp: 8.0, generator_mp: 8.0, fp8_generator: false },
+    PaperRow { model: "70B", system: "llamarl", step_secs: 20.67, total_gpus: 256.0, trainer_mp: 8.0, generator_mp: 4.0, fp8_generator: true },
+    PaperRow { model: "405B", system: "llamarl", step_secs: 240.8, total_gpus: 1024.0, trainer_mp: 32.0, generator_mp: 32.0, fp8_generator: false },
+    PaperRow { model: "405B", system: "llamarl", step_secs: 100.5, total_gpus: 1024.0, trainer_mp: 16.0, generator_mp: 16.0, fp8_generator: false },
+    PaperRow { model: "405B", system: "llamarl", step_secs: 59.5, total_gpus: 1024.0, trainer_mp: 16.0, generator_mp: 8.0, fp8_generator: true },
+];
+
+/// The paper's headline speedups per size (baseline / best LlamaRL row).
+pub fn paper_speedup(model: &str) -> f64 {
+    let base = PAPER_TABLE3
+        .iter()
+        .find(|r| r.model == model && r.system == "baseline")
+        .unwrap()
+        .step_secs;
+    let best = PAPER_TABLE3
+        .iter()
+        .filter(|r| r.model == model && r.system == "llamarl")
+        .map(|r| r.step_secs)
+        .fold(f64::INFINITY, f64::min);
+    base / best
+}
+
+/// Calibration shape constants (see module docs).
+pub const GEN_FRACTION: f64 = 0.7;
+pub const FIXED_FRACTION: f64 = 0.35;
+
+/// Sub-linear tensor-parallel scaling exponent: tau(b, m) = tau_ref *
+/// (m_ref/m)^alpha. 0.85 means doubling an instance's GPUs buys ~1.8x.
+pub const TP_ALPHA: f64 = 0.85;
+
+/// fp8 generator kernels run ~1.4x faster than bf16 on H100 (in addition
+/// to halving the weight footprint).
+pub const FP8_GEN_SPEEDUP: f64 = 1.4;
+
+/// Inter-node communication penalties once an instance spans > 1 node of 8
+/// GPUs (paper §4.3: "smaller mp size ... significantly reduce the
+/// inter-node communications"). Training is throughput-bound (overlappable
+/// all-reduces, mild penalty); single-token decode is latency-bound (a
+/// blocking all-reduce per layer per token, steep penalty).
+pub fn comm_penalty_train(m: f64) -> f64 {
+    1.0 + 0.10 * (m / 8.0).max(1.0).log2()
+}
+
+pub fn comm_penalty_gen(m: f64) -> f64 {
+    1.0 + 0.60 * (m / 8.0).max(1.0).log2()
+}
+
+/// Straggler/bubble multiplier on the synchronous generation phase: the
+/// all-rows-finish barrier (Fig. 2a) costs the generation-length tail, and
+/// the paper observes the effect grows with model scale ("larger models
+/// introduce larger generation time differences causing larger bubbles",
+/// §1.1). Calibrated shape: +12% per doubling beyond 8B.
+pub fn sync_straggler_factor(params: f64) -> f64 {
+    1.0 + 0.12 * (params / 8e9).max(1.0).log2()
+}
+
+/// The paper baseline's model-parallel degree for a model size (the forced
+/// co-located TP degree; also the calibration reference m_ref).
+pub fn baseline_mp(model: &str) -> f64 {
+    PAPER_TABLE3
+        .iter()
+        .find(|r| r.model == model && r.system == "baseline")
+        .map(|r| r.trainer_mp)
+        .unwrap_or(8.0)
+}
+
+/// Baseline batch sizes assumed for the calibration anchor (per-instance
+/// microbatch / decode concurrency of the paper's baseline configs).
+pub const BASE_BT: f64 = 8.0;
+pub const BASE_BG: f64 = 16.0;
+
+#[derive(Debug, Clone, Copy)]
+pub struct HardwareModel {
+    pub model: ModelSpec,
+    pub gpu: GpuSpec,
+    pub g0: f64,
+    pub b0: f64,
+    /// fp8 generator weights (halved footprint, same eta shape)
+    pub fp8_generator: bool,
+    /// enable the large-mp communication penalty (paper §4.3)
+    pub mp_penalty: bool,
+}
+
+impl HardwareModel {
+    pub fn paper_scale(model: ModelSpec) -> HardwareModel {
+        let g0 = if model.params > 100e9 { 1024.0 } else { 256.0 };
+        HardwareModel {
+            model,
+            gpu: H100,
+            g0,
+            b0: 2048.0,
+            fp8_generator: false,
+            mp_penalty: true,
+        }
+    }
+
+    /// Trainer activation bytes per sample (selective recomputation, bf16).
+    pub fn act_bytes_per_sample(&self) -> f64 {
+        4.0 * self.model.layers * self.model.d_model * SEQ_TOTAL * 2.0
+    }
+
+    /// Generator KV-cache bytes per concurrent sequence (GQA, bf16).
+    pub fn kv_bytes_per_seq(&self) -> f64 {
+        2.0 * self.model.layers * SEQ_TOTAL * (self.model.d_model / self.model.gqa_ratio) * 2.0
+    }
+
+    pub fn w0_bytes(&self) -> f64 {
+        2.0 * self.model.params
+    }
+
+    pub fn wg_bytes(&self) -> f64 {
+        if self.fp8_generator {
+            self.model.params
+        } else {
+            2.0 * self.model.params
+        }
+    }
+
+    /// Eq. 2 inverted on the paper's baseline row, accounting for the
+    /// m-factor at the baseline's own configuration: the calibration anchor
+    /// eta_t(BASE_BT) + eta_g(BASE_BG) for this model size.
+    fn eta_sum_anchor(&self) -> f64 {
+        let row = PAPER_TABLE3
+            .iter()
+            .find(|r| r.model == self.model.name && r.system == "baseline")
+            .expect("model has a baseline row");
+        // Invert Eq. 2 with the per-phase m-factors and straggler term:
+        //   T = B0/G0 * A * [(1-gamma) * m * pen_t(m)
+        //                    + straggler * gamma * m * pen_g(m)]
+        // (m_ref = m_base makes the alpha terms collapse to m_base).
+        let m = row.trainer_mp;
+        let (pt, pg, st) = if self.mp_penalty {
+            (
+                comm_penalty_train(m),
+                comm_penalty_gen(m),
+                sync_straggler_factor(self.model.params),
+            )
+        } else {
+            (1.0, 1.0, 1.0)
+        };
+        let weight = (1.0 - GEN_FRACTION) * m * pt + st * GEN_FRACTION * m * pg;
+        row.step_secs * row.total_gpus / (2048.0 * weight)
+    }
+
+    /// Build the optimization problem for this hardware point (physical
+    /// form: sub-linear TP scaling + inter-node penalty; the pure paper
+    /// form is exercised by the property tests with tp_alpha = 0).
+    pub fn problem(&self) -> ProblemSpec {
+        let anchor = self.eta_sum_anchor();
+        let (eta_t_fn, eta_g) = calibrated_eta(anchor);
+        let eta_g_fn: crate::simulator::problem::Eta = if self.fp8_generator {
+            Box::new(move |b| eta_g(b) / FP8_GEN_SPEEDUP)
+        } else {
+            eta_g
+        };
+        let (pen_t, pen_g): (Box<dyn Fn(f64) -> f64>, Box<dyn Fn(f64) -> f64>) =
+            if self.mp_penalty {
+                (Box::new(comm_penalty_train), Box::new(comm_penalty_gen))
+            } else {
+                (Box::new(|_| 1.0), Box::new(|_| 1.0))
+            };
+        let straggler = if self.mp_penalty {
+            sync_straggler_factor(self.model.params)
+        } else {
+            1.0
+        };
+        ProblemSpec {
+            g0: self.g0,
+            b0: self.b0,
+            m0: self.gpu.mem_bytes,
+            w0: self.w0_bytes(),
+            wg: self.wg_bytes(),
+            a_t: self.act_bytes_per_sample(),
+            k_g: self.kv_bytes_per_seq(),
+            eta_t: eta_t_fn,
+            eta_g: eta_g_fn,
+            bt_grid: default_grid(),
+            bg_grid: default_grid(),
+            pen_t,
+            pen_g,
+            sync_straggler: straggler,
+            tp_alpha: TP_ALPHA,
+            m_ref: baseline_mp(self.model.name),
+            trainer_fsdp: true,
+        }
+    }
+
+    /// The paper baseline replay: step time at the paper's own co-located
+    /// configuration (m = published mp, calibration batches). By
+    /// construction this reproduces the paper's baseline column.
+    pub fn baseline_replay_secs(&self) -> f64 {
+        let p = self.problem();
+        crate::simulator::problem::eval_sync_config(
+            &p,
+            BASE_BT,
+            BASE_BG,
+            baseline_mp(self.model.name),
+        )
+    }
+}
+
+/// Split + curve the anchored per-sample time into eta_t(b), eta_g(b)
+/// (eta(b) = c0/b + c1, Assumption 7.1 satisfied by construction).
+pub fn calibrated_eta(anchor_sum: f64) -> (crate::simulator::problem::Eta, crate::simulator::problem::Eta) {
+    let eta_t_base = (1.0 - GEN_FRACTION) * anchor_sum;
+    let eta_g_base = GEN_FRACTION * anchor_sum;
+    let c0_t = FIXED_FRACTION * eta_t_base * BASE_BT;
+    let c1_t = (1.0 - FIXED_FRACTION) * eta_t_base;
+    let c0_g = FIXED_FRACTION * eta_g_base * BASE_BG;
+    let c1_g = (1.0 - FIXED_FRACTION) * eta_g_base;
+    (
+        Box::new(move |b: f64| c0_t / b + c1_t),
+        Box::new(move |b: f64| c0_g / b + c1_g),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::problem::{solve_async, solve_sync};
+
+    #[test]
+    fn eta_is_monotone_decreasing() {
+        let (et, eg) = calibrated_eta(5.0);
+        let grid = default_grid();
+        for w in grid.windows(2) {
+            assert!(et(w[1]) <= et(w[0]));
+            assert!(eg(w[1]) <= eg(w[0]));
+        }
+    }
+
+    #[test]
+    fn anchor_reproduces_baseline_step_time() {
+        for m in LLAMA_MODELS {
+            let hw = HardwareModel::paper_scale(m);
+            let row = PAPER_TABLE3
+                .iter()
+                .find(|r| r.model == m.name && r.system == "baseline")
+                .unwrap();
+            let t = hw.baseline_replay_secs();
+            assert!(
+                (t - row.step_secs).abs() / row.step_secs < 1e-9,
+                "{}: {t} vs {}",
+                m.name,
+                row.step_secs
+            );
+        }
+    }
+
+    #[test]
+    fn async_speedup_grows_with_model_size() {
+        let mut speedups = Vec::new();
+        for m in LLAMA_MODELS {
+            let hw = HardwareModel::paper_scale(m);
+            let base = hw.baseline_replay_secs();
+            let hw8 = HardwareModel {
+                fp8_generator: true,
+                ..hw
+            };
+            let asn = solve_async(&hw8.problem());
+            speedups.push(base / asn.step_secs);
+        }
+        assert!(
+            speedups[0] < speedups[1] && speedups[1] < speedups[2],
+            "speedup must grow with scale: {speedups:?}"
+        );
+        assert!(speedups[0] > 1.0);
+    }
+
+    #[test]
+    fn optimized_sync_never_beats_async() {
+        for m in LLAMA_MODELS {
+            let hw = HardwareModel::paper_scale(m);
+            let p = hw.problem();
+            let sync = solve_sync(&p);
+            let asn = solve_async(&hw.problem());
+            assert!(asn.step_secs <= sync.step_secs * 1.0001, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn paper_speedups() {
+        assert!((paper_speedup("8B") - 22.45 / 8.90).abs() < 1e-9);
+        assert!((paper_speedup("405B") - 635.8 / 59.5).abs() < 1e-9);
+    }
+}

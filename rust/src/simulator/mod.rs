@@ -1,0 +1,31 @@
+//! Cluster simulator: re-derives the paper's H100-scale evaluation from its
+//! own cost model (Definitions 7.2–7.4, Table 2), since this testbed has no
+//! GPUs.
+//!
+//! Two layers:
+//!
+//! * [`problem`] — the paper's abstract constrained-optimization form:
+//!   arbitrary monotone-decreasing per-sample-time functions eta_t/eta_g, the
+//!   Table-2 memory constraints, and a solver for problems (6) (synchronous)
+//!   and (7) (LlamaRL). Theorem 7.5 (async strictly faster) is verified
+//!   numerically over random instances in `rust/tests/prop_simulator.rs`.
+//! * [`hardware`] — a physical cost model (FLOPs/HBM roofline + batch
+//!   efficiency saturation + model-parallel communication penalty) that
+//!   instantiates eta for Llama-3.1 8B/70B/405B on H100s, calibrated against
+//!   the paper's Table-3 baseline rows; the async predictions are then
+//!   genuine model outputs compared against the paper's LlamaRL rows.
+//! * [`des`] — a discrete-event timeline of the two architectures with
+//!   straggler (generation-length) variance: reproduces the Figure-2 bubble
+//!   structure and the partial-rollout ablation.
+
+pub mod des;
+pub mod hardware;
+pub mod problem;
+
+pub use des::{simulate_timeline, DesConfig, DesReport};
+pub use hardware::{
+    calibrated_eta, GpuSpec, HardwareModel, ModelSpec, PaperRow, LLAMA_MODELS, PAPER_TABLE3,
+};
+pub use problem::{
+    solve_async, solve_sync, AsyncSolution, Eta, ProblemSpec, SyncSolution,
+};

@@ -1,0 +1,135 @@
+//! Bench harness (criterion is not in the offline vendor set).
+//!
+//! Each `rust/benches/*.rs` sets `harness = false` in Cargo.toml and drives
+//! this module: warmup, timed repetitions, summary stats, and aligned table
+//! printing so every paper table/figure bench prints paper-vs-measured rows.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Time `f` for `iters` iterations after `warmup` runs; returns per-iteration
+/// seconds.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+pub struct BenchReport {
+    pub name: String,
+    pub summary: Summary,
+}
+
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchReport {
+    let samples = time_fn(warmup, iters, f);
+    let summary = summarize(&samples);
+    BenchReport {
+        name: name.to_string(),
+        summary,
+    }
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        let s = &self.summary;
+        println!(
+            "{:<44} mean {:>10}  p50 {:>10}  p90 {:>10}  (n={})",
+            self.name,
+            fmt_secs(s.mean),
+            fmt_secs(s.p50),
+            fmt_secs(s.p90),
+            s.n
+        );
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".to_string()
+    } else if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Fixed-width table printer for paper-vs-measured rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let print_row = |cells: &[String]| {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>w$}", cells[i], w = widths[i]));
+            }
+            println!("{line}");
+        };
+        print_row(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            print_row(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive() {
+        let mut x = 0u64;
+        let samples = time_fn(1, 5, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(samples.len(), 5);
+        assert!(samples.iter().all(|s| *s >= 0.0));
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert_eq!(fmt_secs(0.0025), "2.500ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.5us");
+    }
+}

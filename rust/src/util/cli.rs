@@ -1,0 +1,136 @@
+//! Minimal CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `prog [subcommand] [--key value | --flag] [positional...]`.
+//! Values for known boolean flags are not consumed; everything else after
+//! `--key` is treated as that key's value.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `bool_flags` lists options that never take a value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        // first bare word = subcommand
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if bool_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                    continue;
+                }
+                match it.next() {
+                    Some(v) if !v.starts_with("--") => {
+                        args.options.insert(name.to_string(), v);
+                    }
+                    Some(v) => {
+                        return Err(Error::Cli(format!(
+                            "option --{name} expects a value, got '{v}'"
+                        )))
+                    }
+                    None => {
+                        return Err(Error::Cli(format!("option --{name} expects a value")))
+                    }
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), flags).unwrap()
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse("train --config e2e --steps 100 --verbose pos1", &["verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_opt("config"), Some("e2e"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn eq_form_and_defaults() {
+        let a = parse("--lr=0.5", &[]);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.f64_or("rho", 4.0).unwrap(), 4.0);
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--key".to_string()].into_iter(), &[]).is_err());
+    }
+}

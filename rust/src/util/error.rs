@@ -1,0 +1,60 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla/pjrt error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json parse error at byte {offset}: {msg}")]
+    JsonParse { offset: usize, msg: String },
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("shape mismatch for {what}: expected {expected:?}, got {got:?}")]
+    Shape {
+        what: String,
+        expected: Vec<usize>,
+        got: Vec<usize>,
+    },
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("channel closed: {0}")]
+    ChannelClosed(String),
+
+    #[error("cli error: {0}")]
+    Cli(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::Msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::Msg(s.to_string())
+    }
+}

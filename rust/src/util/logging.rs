@@ -1,0 +1,145 @@
+//! Leveled stderr logging + JSONL metric writers (env_logger/serde are not
+//! in the offline vendor set).
+//!
+//! Level comes from `LLAMARL_LOG` (error|warn|info|debug|trace), default
+//! `info`. The JSONL writer is what examples/benches use to persist curves
+//! for EXPERIMENTS.md.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::error::Result;
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn level() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != 255 {
+        return cur;
+    }
+    let parsed = match std::env::var("LLAMARL_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+pub fn log(l: Level, target: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{:>10}.{:03} {} {}] {}", t.as_secs(), t.subsec_millis(), tag, target, msg);
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $target,
+                                   &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $target,
+                                   &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $target,
+                                   &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, $target,
+                                   &format!($($arg)*))
+    };
+}
+
+/// Append-only JSONL metrics file, safe to share across executor threads.
+pub struct JsonlWriter {
+    inner: Mutex<BufWriter<File>>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = File::create(path)?;
+        Ok(JsonlWriter {
+            inner: Mutex::new(BufWriter::new(f)),
+        })
+    }
+
+    pub fn write(&self, v: &Value) -> Result<()> {
+        let mut w = self.inner.lock().unwrap();
+        writeln!(w, "{}", v.to_string())?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("llamarl_log_test");
+        let path = dir.join("m.jsonl");
+        let w = JsonlWriter::create(&path).unwrap();
+        w.write(&Value::object(vec![("step", Value::num(1.0))])).unwrap();
+        w.write(&Value::object(vec![("step", Value::num(2.0))])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            Value::parse(lines[1]).unwrap().req_f64("step").unwrap(),
+            2.0
+        );
+    }
+}

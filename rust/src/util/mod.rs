@@ -1,0 +1,22 @@
+//! Substrate utilities built in-repo because the offline crate universe
+//! (the `xla` crate's vendored dependency closure) lacks the usual
+//! ecosystem crates. Each submodule replaces one of them:
+//!
+//! | module | replaces | used for |
+//! |---|---|---|
+//! | [`json`] | serde_json | artifact manifests, configs, metric logs |
+//! | [`cli`] | clap | the `llamarl` binary and examples |
+//! | [`rng`] | rand | sampling prompts, seeds, property tests |
+//! | [`prop`] | proptest | coordinator/simulator invariant tests |
+//! | [`bench`] | criterion | the `cargo bench` harnesses |
+//! | [`stats`] | — | calibration fits, percentiles |
+//! | [`logging`] | env_logger | leveled logs + JSONL metric writers |
+
+pub mod bench;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,152 @@
+//! Property-testing harness (proptest is not in the offline vendor set).
+//!
+//! A case-based runner: each property receives a seeded [`Rng`]-backed
+//! [`Gen`] and asserts its invariant; failures report the failing seed so
+//! the case replays deterministically. Simpler than proptest (no automatic
+//! shrinking — generators are written to produce small cases first, which
+//! covers most of shrinking's value in practice).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't get the xla rpath in this image)
+//! use llamarl::util::prop::{run_prop, Gen};
+//! run_prop("add_commutes", 200, |g: &mut Gen| {
+//!     let a = g.i64(-100, 100);
+//!     let b = g.i64(-100, 100);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+    /// case index in [0, cases): generators use it to grow sizes gradually
+    pub case: usize,
+    pub cases: usize,
+}
+
+impl Gen {
+    /// A size hint that ramps from `lo` to `hi` over the run, so early cases
+    /// are small (easy to debug) and later cases stress-test.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let ramp_max = lo + (hi - lo) * (self.case + 1) / self.cases.max(1);
+        self.rng.range_usize(lo, ramp_max.max(lo) + 1)
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi + 1)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choice(xs)
+    }
+}
+
+/// Run `cases` seeded cases of `prop`. Panics (with the failing seed) on the
+/// first failure. Honors `LLAMARL_PROP_SEED` to replay a single case.
+pub fn run_prop<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    prop: F,
+) {
+    if let Ok(seed) = std::env::var("LLAMARL_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("LLAMARL_PROP_SEED must be a u64");
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case: 0,
+            cases: 1,
+        };
+        prop(&mut g);
+        return;
+    }
+    let base = 0xC0FFEE ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                case,
+                cases,
+            };
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with LLAMARL_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run_prop("sum_nonneg", 50, |g| {
+            let n = g.size(0, 20);
+            let xs = g.vec_f64(n, 0.0, 1.0);
+            assert!(xs.iter().sum::<f64>() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with LLAMARL_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        run_prop("always_fails_eventually", 50, |g| {
+            assert!(g.i64(0, 10) < 10, "hit the bound");
+        });
+    }
+
+    #[test]
+    fn size_ramps() {
+        let mut g = Gen {
+            rng: Rng::new(1),
+            case: 0,
+            cases: 100,
+        };
+        for _ in 0..50 {
+            assert!(g.size(0, 100) <= 1);
+        }
+        let mut g_late = Gen {
+            rng: Rng::new(1),
+            case: 99,
+            cases: 100,
+        };
+        let max_seen = (0..50).map(|_| g_late.size(0, 100)).max().unwrap();
+        assert!(max_seen > 50);
+    }
+}

@@ -1,0 +1,169 @@
+//! End-to-end integration tests: full pipelines over the real nano
+//! artifacts (sync baseline, async LlamaRL, pretraining, off-policy
+//! semantics). Skipped gracefully if `make artifacts` has not run.
+
+use llamarl::coordinator::{
+    run_pretraining, run_training, Mode, PipelineConfig, PretrainConfig,
+};
+use llamarl::rl::Baseline;
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/nano/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/nano missing (run `make artifacts`)");
+    }
+    ok
+}
+
+fn base_cfg(tag: &str) -> PipelineConfig {
+    PipelineConfig {
+        artifact_dir: "artifacts/nano".into(),
+        max_steps: 3,
+        max_response: 10,
+        n_generations: 4,
+        out_dir: std::env::temp_dir().join(format!("llamarl_it_{tag}")),
+        ..PipelineConfig::default()
+    }
+}
+
+#[test]
+fn sync_pipeline_runs_and_is_on_policy() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = PipelineConfig {
+        mode: Mode::Sync,
+        ..base_cfg("sync")
+    };
+    let r = run_training(&cfg).unwrap();
+    assert_eq!(r.steps, 3);
+    assert_eq!(r.records.len(), 3);
+    assert!(r.trajectories >= 3 * 4_u64);
+    // STRICT on-policy: every batch generated under the weights that train
+    // on it -> importance ratio identically 1, KL ~ 0, zero lag.
+    for rec in &r.records {
+        assert_eq!(rec.max_lag, 0, "sync mode must have zero lag");
+        assert!(
+            (rec.mean_ratio - 1.0).abs() < 1e-2,
+            "on-policy ratio 1.0, got {}",
+            rec.mean_ratio
+        );
+        assert!(rec.approx_kl.abs() < 1e-2);
+    }
+    assert!(r.metrics_path.unwrap().exists());
+}
+
+#[test]
+fn async_pipeline_runs_with_bounded_lag_and_backpressure_accounting() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = PipelineConfig {
+        mode: Mode::Async,
+        n_generator_workers: 2,
+        queue_capacity: 2,
+        max_steps: 4,
+        ..base_cfg("async")
+    };
+    let r = run_training(&cfg).unwrap();
+    assert_eq!(r.steps, 4);
+    assert!(r.ddma_publishes >= 4);
+    // lag exists but is bounded by the pipeline depth
+    let max_lag = r.records.iter().map(|x| x.max_lag).max().unwrap();
+    assert!(max_lag <= 8, "lag {} out of bounds", max_lag);
+    // importance ratios stay finite and positive
+    for rec in &r.records {
+        assert!(rec.mean_ratio.is_finite() && rec.mean_ratio > 0.0);
+    }
+}
+
+#[test]
+fn quantized_generator_produces_off_policy_ratios_in_sync_mode() {
+    if !have_artifacts() {
+        return;
+    }
+    // int8 generator + sync execution: lag is zero but mu != pi, so the
+    // measured ratio must deviate from 1 — the quantization off-policy
+    // source of paper §4.3.
+    let cfg = PipelineConfig {
+        mode: Mode::Sync,
+        quantize_generator: true,
+        max_steps: 2,
+        ..base_cfg("quant")
+    };
+    let r = run_training(&cfg).unwrap();
+    let any_deviation = r
+        .records
+        .iter()
+        .any(|rec| (rec.mean_ratio - 1.0).abs() > 1e-4 || rec.approx_kl.abs() > 1e-5);
+    assert!(
+        any_deviation,
+        "quantized behaviour policy must differ from learner: {:?}",
+        r.records
+    );
+}
+
+#[test]
+fn pretrain_then_rl_from_checkpoint() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = std::env::temp_dir().join("llamarl_it_pre");
+    let report = run_pretraining(
+        &PretrainConfig {
+            artifact_dir: "artifacts/nano".into(),
+            steps: 30,
+            lr: 2e-3,
+            grad_clip: 1.0,
+            seed: 3,
+            log_every: 0,
+        },
+        &out,
+    )
+    .unwrap();
+    assert_eq!(report.steps, 30);
+    assert!(report.final_target_logp.is_finite());
+    // RL resumes from the checkpoint
+    let cfg = PipelineConfig {
+        mode: Mode::Sync,
+        init_checkpoint: Some(out),
+        max_steps: 2,
+        ..base_cfg("pre_rl")
+    };
+    let r = run_training(&cfg).unwrap();
+    assert_eq!(r.steps, 2);
+}
+
+#[test]
+fn rloo_baseline_works() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = PipelineConfig {
+        mode: Mode::Sync,
+        baseline: Baseline::LeaveOneOut,
+        max_steps: 2,
+        ..base_cfg("rloo")
+    };
+    let r = run_training(&cfg).unwrap();
+    assert_eq!(r.steps, 2);
+}
+
+#[test]
+fn misconfiguration_is_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    // sync mode with train_batch (4) not divisible by n_generations
+    let cfg = PipelineConfig {
+        mode: Mode::Sync,
+        n_generations: 3,
+        ..base_cfg("bad")
+    };
+    assert!(run_training(&cfg).is_err());
+    let cfg = PipelineConfig {
+        max_steps: 0,
+        ..base_cfg("bad2")
+    };
+    assert!(run_training(&cfg).is_err());
+}

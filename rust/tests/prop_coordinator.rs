@@ -1,0 +1,278 @@
+//! Property tests on coordinator invariants: channel routing, batching,
+//! advantage baselines, weight-bus consistency, tokenizer round trips.
+//! (Hand-rolled harness in util::prop — proptest is not in the offline
+//! vendor set.)
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use llamarl::coordinator::channel::{gather_channel, scatter_channel, Message};
+use llamarl::data::{Difficulty, Problem};
+use llamarl::ddma::WeightsBus;
+use llamarl::model::Tokenizer;
+use llamarl::rl::{group_advantages, pack_batch, Baseline, FinishReason, Trajectory};
+use llamarl::util::prop::{run_prop, Gen};
+
+fn mk_traj(g: &mut Gen, group_id: u64, n_replicas: usize) -> Trajectory {
+    let plen = g.usize(1, 6);
+    let rlen = g.usize(1, 8);
+    Trajectory {
+        group_id,
+        replica: 0,
+        n_replicas,
+        problem: Problem {
+            prompt: "1+1=".into(),
+            answer: "2".into(),
+            difficulty: Difficulty::Add1,
+        },
+        prompt_tokens: (0..plen).map(|i| (i % 50 + 3) as i32).collect(),
+        response_tokens: (0..rlen).map(|i| (i % 50 + 3) as i32).collect(),
+        behavior_logp: (0..rlen).map(|_| g.f64(-5.0, 0.0) as f32).collect(),
+        gen_version: g.i64(0, 20) as u64,
+        chunks: 1,
+        finish: FinishReason::Eos,
+        reward: if g.bool() { 1.0 } else { 0.0 },
+        advantage: 0.0,
+    }
+}
+
+#[test]
+fn scatter_round_robin_preserves_every_message() {
+    run_prop("scatter_preserves", 50, |g| {
+        let n_consumers = g.usize(1, 5);
+        let n_msgs = g.usize(1, 40);
+        let (tx, rxs) = scatter_channel("t", n_msgs + 1, n_consumers);
+        for i in 0..n_msgs {
+            let mut t = mk_traj(g, i as u64, 1);
+            t.group_id = i as u64;
+            tx.send(Message::Scored(vec![t])).unwrap();
+        }
+        drop(tx);
+        let mut seen: Vec<u64> = vec![];
+        for rx in &rxs {
+            while let Some(Message::Scored(v)) = rx.try_recv() {
+                seen.extend(v.iter().map(|t| t.group_id));
+            }
+        }
+        seen.sort();
+        let want: Vec<u64> = (0..n_msgs as u64).collect();
+        assert_eq!(seen, want, "every message delivered exactly once");
+    });
+}
+
+#[test]
+fn gather_from_n_producers_delivers_all_items() {
+    run_prop("gather_all", 30, |g| {
+        let n_producers = g.usize(1, 6);
+        let per = g.usize(1, 10);
+        let (tx, rx) = gather_channel("t", n_producers * per + 1);
+        let mut handles = vec![];
+        for p in 0..n_producers {
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    let t = Trajectory {
+                        group_id: (p * 1000 + i) as u64,
+                        replica: 0,
+                        n_replicas: 1,
+                        problem: Problem {
+                            prompt: "p".into(),
+                            answer: "a".into(),
+                            difficulty: Difficulty::Add1,
+                        },
+                        prompt_tokens: vec![1],
+                        response_tokens: vec![2],
+                        behavior_logp: vec![0.0],
+                        gen_version: 0,
+                        chunks: 1,
+                        finish: FinishReason::Eos,
+                        reward: 0.0,
+                        advantage: 0.0,
+                    };
+                    tx.send(Message::Trajectories(vec![t])).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        drop(tx);
+        let mut count = 0;
+        while let Some(Message::Trajectories(v)) = rx.try_recv() {
+            count += v.len();
+        }
+        assert_eq!(count, n_producers * per);
+        assert_eq!(rx.stats.items.load(Ordering::Relaxed) as usize, count);
+    });
+}
+
+#[test]
+fn group_mean_advantages_sum_to_zero() {
+    run_prop("adv_zero_sum", 100, |g| {
+        let n = g.usize(2, 8);
+        let mut group: Vec<Trajectory> = (0..n).map(|_| mk_traj(g, 7, n)).collect();
+        group_advantages(&mut group, Baseline::GroupMean);
+        let sum: f32 = group.iter().map(|t| t.advantage).sum();
+        assert!(sum.abs() < 1e-4, "sum={sum}");
+        // uniform-reward groups give exactly zero advantage everywhere
+        let r = group[0].reward;
+        if group.iter().all(|t| t.reward == r) {
+            assert!(group.iter().all(|t| t.advantage == 0.0));
+        }
+    });
+}
+
+#[test]
+fn rloo_advantage_matches_direct_formula() {
+    run_prop("rloo_direct", 100, |g| {
+        let n = g.usize(2, 6);
+        let mut group: Vec<Trajectory> = (0..n).map(|_| mk_traj(g, 3, n)).collect();
+        let rewards: Vec<f32> = group.iter().map(|t| t.reward).collect();
+        group_advantages(&mut group, Baseline::LeaveOneOut);
+        for (i, t) in group.iter().enumerate() {
+            let others: f32 = rewards
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, r)| r)
+                .sum();
+            let want = t.reward - others / (n as f32 - 1.0);
+            assert!((t.advantage - want).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn pack_batch_roundtrips_every_token_and_mask_is_aligned() {
+    run_prop("pack_roundtrip", 100, |g| {
+        let b = g.usize(1, 6);
+        let t_dim = 24;
+        let n_rows = g.usize(1, b);
+        let trajs: Vec<Trajectory> = (0..n_rows)
+            .map(|_| {
+                let mut t = mk_traj(g, 0, 1);
+                t.advantage = g.f64(-1.0, 1.0) as f32;
+                t
+            })
+            .collect();
+        let batch = pack_batch(&trajs, b, t_dim).unwrap();
+        for (row, tr) in trajs.iter().enumerate() {
+            let base = row * t_dim;
+            let plen = tr.prompt_tokens.len();
+            let rlen = tr.response_tokens.len();
+            // inputs reconstruct prompt ++ response[..-1]
+            let mut full = tr.prompt_tokens.clone();
+            full.extend(&tr.response_tokens);
+            for i in 0..(plen + rlen - 1) {
+                assert_eq!(batch.tokens[base + i], full[i]);
+                assert_eq!(batch.targets[base + i], full[i + 1]);
+            }
+            // mask exactly covers response targets
+            let mask_count: f32 = batch.mask[base..base + t_dim].iter().sum();
+            assert_eq!(mask_count as usize, rlen);
+            for (j, &lp) in tr.behavior_logp.iter().enumerate() {
+                let pos = base + plen - 1 + j;
+                assert_eq!(batch.blogp[pos], lp);
+                assert_eq!(batch.mask[pos], 1.0);
+                assert_eq!(batch.adv[pos], tr.advantage);
+            }
+            assert_eq!(batch.lens[row] as usize, plen + rlen - 1);
+        }
+        // padding rows fully masked
+        for row in n_rows..b {
+            let base = row * t_dim;
+            assert!(batch.mask[base..base + t_dim].iter().all(|m| *m == 0.0));
+        }
+    });
+}
+
+#[test]
+fn weights_bus_snapshots_are_consistent_under_concurrency() {
+    // Readers racing a publisher must only ever see fully-published
+    // versions: data[i] == version for every element.
+    run_prop("bus_consistency", 5, |g| {
+        let len = g.usize(100, 5000);
+        let bus = Arc::new(WeightsBus::new(vec![0.0; len]));
+        let writer = {
+            let bus = bus.clone();
+            std::thread::spawn(move || {
+                for v in 1..=20u64 {
+                    bus.publish(vec![v as f32; len]);
+                }
+            })
+        };
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let bus = bus.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        let snap = bus.latest();
+                        let v = snap.data[0];
+                        assert!(snap.data.iter().all(|x| *x == v), "torn snapshot");
+                        assert_eq!(v as u64, snap.version);
+                    }
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(bus.version(), 20);
+    });
+}
+
+#[test]
+fn tokenizer_roundtrip_arbitrary_task_strings() {
+    run_prop("tok_roundtrip", 200, |g| {
+        let tok = Tokenizer::new(64).unwrap();
+        let charset = "0123456789+-*/=(). abcdefghijklmnopqrstuvwxyz";
+        let n = g.usize(0, 30);
+        let s: String = (0..n)
+            .map(|_| {
+                let i = g.usize(0, charset.len() - 1);
+                charset.as_bytes()[i] as char
+            })
+            .collect();
+        let ids = tok.encode(&s).unwrap();
+        assert_eq!(tok.decode(&ids), s);
+    });
+}
+
+#[test]
+fn quantization_roundtrip_bounded_by_per_tensor_scale() {
+    use llamarl::model::simulate_int8_roundtrip;
+    use llamarl::runtime::ParamEntry;
+    run_prop("quant_bounded", 60, |g| {
+        let n_tensors = g.usize(1, 5);
+        let mut layout = Vec::new();
+        let mut data = Vec::new();
+        let mut off = 0;
+        for i in 0..n_tensors {
+            let len = g.usize(1, 64);
+            layout.push(ParamEntry {
+                name: format!("t{i}"),
+                shape: vec![len],
+                offset: off,
+            });
+            for _ in 0..len {
+                data.push(g.f64(-2.0, 2.0) as f32);
+            }
+            off += len;
+        }
+        let rt = simulate_int8_roundtrip(&data, &layout);
+        for entry in &layout {
+            let len: usize = entry.shape.iter().product();
+            let chunk = &data[entry.offset..entry.offset + len];
+            let maxabs = chunk.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let bound = maxabs / 127.0 / 2.0 + 1e-6;
+            for (a, b) in chunk.iter().zip(&rt[entry.offset..entry.offset + len]) {
+                assert!(
+                    (a - b).abs() <= bound,
+                    "err {} > bound {bound}",
+                    (a - b).abs()
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,191 @@
+//! Property tests on the cluster simulator — most importantly a numeric
+//! verification of **Theorem 7.5**: for ANY problem instance satisfying
+//! Assumption 7.1 (monotone-decreasing per-sample time), the optimized
+//! asynchronous step time is <= the optimized synchronous step time; and
+//! strictly smaller whenever the solver's grid admits a non-degenerate
+//! split.
+
+use llamarl::simulator::problem::{
+    default_grid, eval_async_config, solve_async, solve_sync, ProblemSpec,
+};
+use llamarl::simulator::{simulate_timeline, DesConfig};
+use llamarl::util::prop::{run_prop, Gen};
+
+/// Random instance satisfying Assumption 7.1: eta(b) = c0/b + c1 with
+/// c0, c1 > 0 is monotone decreasing.
+fn random_problem(g: &mut Gen) -> ProblemSpec {
+    let w0 = g.f64(1e9, 1e12);
+    ProblemSpec {
+        g0: g.f64(64.0, 4096.0).round(),
+        b0: g.f64(128.0, 4096.0).round(),
+        m0: g.f64(16e9, 140e9),
+        w0,
+        wg: w0 * g.f64(0.5, 1.0),
+        a_t: g.f64(1e7, 5e9),
+        k_g: g.f64(1e7, 5e9),
+        eta_t: {
+            let c0 = g.f64(0.01, 10.0);
+            let c1 = g.f64(0.01, 5.0);
+            Box::new(move |b| c0 / b + c1)
+        },
+        eta_g: {
+            let c0 = g.f64(0.01, 10.0);
+            let c1 = g.f64(0.01, 5.0);
+            Box::new(move |b| c0 / b + c1)
+        },
+        bt_grid: default_grid(),
+        bg_grid: default_grid(),
+        pen_t: Box::new(|_| 1.0),
+        pen_g: Box::new(|_| 1.0),
+        sync_straggler: 1.0,
+        // pure paper form (Definition 7.3: tau is m-independent)
+        tp_alpha: 0.0,
+        m_ref: 1.0,
+        trainer_fsdp: false,
+    }
+}
+
+#[test]
+fn theorem_7_5_async_never_slower_than_sync() {
+    run_prop("theorem75", 150, |g| {
+        let p = random_problem(g);
+        // ensure feasibility: one instance must fit in the cluster
+        if p.min_mt(1.0) + p.min_mg(1.0) > p.g0 {
+            return; // infeasible instance, skip
+        }
+        let sync = solve_sync(&p);
+        let asn = solve_async(&p);
+        assert!(
+            asn.step_secs <= sync.step_secs * (1.0 + 1e-9),
+            "Theorem 7.5 violated: async {} > sync {} (bt={} bg={} m={})",
+            asn.step_secs,
+            sync.step_secs,
+            sync.bt,
+            sync.bg,
+            sync.m
+        );
+    });
+}
+
+#[test]
+fn theorem_7_5_strict_on_continuous_relaxation() {
+    // With the same batch point available to both and memory loose enough
+    // that ceil() effects vanish, the inequality chain (11) is strict.
+    run_prop("theorem75_strict", 100, |g| {
+        let mut p = random_problem(g);
+        p.m0 = g.f64(100e9, 200e9);
+        p.g0 = 1e6; // effectively unconstrained GPU count
+        if p.min_mt(1.0) + p.min_mg(1.0) > p.g0 {
+            return;
+        }
+        let sync = solve_sync(&p);
+        let asn = solve_async(&p);
+        assert!(
+            asn.step_secs < sync.step_secs,
+            "expected strict improvement: async {} vs sync {}",
+            asn.step_secs,
+            sync.step_secs
+        );
+    });
+}
+
+#[test]
+fn async_optimum_beats_arbitrary_async_configs() {
+    // the solver's optimum is a true lower bound over the searched grid
+    run_prop("async_opt", 60, |g| {
+        let p = random_problem(g);
+        if p.min_mt(1.0) + p.min_mg(1.0) > p.g0 {
+            return;
+        }
+        let opt = solve_async(&p);
+        for _ in 0..10 {
+            let bt = *g.choice(&p.bt_grid);
+            let bg = *g.choice(&p.bg_grid);
+            let mt = p.min_mt(bt);
+            let mg = p.min_mg(bg);
+            if mt + mg > p.g0 {
+                continue;
+            }
+            let theta = g.f64(0.05, 0.95);
+            let t = eval_async_config(&p, bt, bg, mt, mg, theta);
+            assert!(
+                opt.step_secs <= t * (1.0 + 1e-9),
+                "solver missed a better config: {} < {}",
+                t,
+                opt.step_secs
+            );
+        }
+    });
+}
+
+#[test]
+fn memory_constraints_hold_at_optimum() {
+    run_prop("mem_constraints", 100, |g| {
+        let p = random_problem(g);
+        if p.min_mt(1.0) + p.min_mg(1.0) > p.g0 {
+            return;
+        }
+        let a = solve_async(&p);
+        assert!((4.0 * p.w0 + p.a_t * a.bt) / a.mt <= p.m0 * 1.0001);
+        assert!((p.wg + p.k_g * a.bg) / a.mg <= p.m0 * 1.0001);
+        assert!(a.mt + a.mg <= p.g0 * 1.0001);
+        assert!(a.theta > 0.0 && a.theta < 1.0);
+        // Lemma B.3: theta equalizes the two sides
+        let tt = a.eta_t * a.mt / a.theta;
+        let tg = a.eta_g * a.mg / (1.0 - a.theta);
+        assert!((tt - tg).abs() <= 1e-6 * tt.max(tg));
+    });
+}
+
+#[test]
+fn des_async_at_least_as_fast_and_lag_bounded() {
+    run_prop("des_async", 40, |g| {
+        let cfg = DesConfig {
+            steps: g.usize(10, 60),
+            batch: g.usize(8, 64),
+            concurrency: g.usize(2, 32),
+            gen_mean_secs: g.f64(1.0, 20.0),
+            gen_sigma: g.f64(0.1, 1.2),
+            train_secs: g.f64(0.5, 20.0),
+            score_secs: g.f64(0.0, 1.0),
+            queue_capacity: g.usize(1, 4),
+            partial_rollout_cap: f64::INFINITY,
+            seed: g.i64(0, 1 << 30) as u64,
+        };
+        let (s, a) = simulate_timeline(&cfg);
+        assert!(
+            a.total_secs <= s.total_secs * 1.001,
+            "DES async slower: {} vs {}",
+            a.total_secs,
+            s.total_secs
+        );
+        assert!(a.mean_lag_steps <= cfg.queue_capacity as f64 + 1e-9);
+        // utilization accounting sane
+        for r in [&s, &a] {
+            assert!(r.gen_idle_frac >= -1e-9 && r.gen_idle_frac <= 1.0);
+            assert!(r.train_idle_frac >= -1e-9 && r.train_idle_frac <= 1.0);
+        }
+    });
+}
+
+#[test]
+fn ddma_model_scales_linearly_ps_model_does_not() {
+    use llamarl::ddma::ps_baseline::PsModel;
+    use llamarl::ddma::topology::DdmaModel;
+    run_prop("ddma_scaling", 50, |g| {
+        let ddma = DdmaModel::calibrated();
+        let ps = PsModel::calibrated();
+        let params = g.f64(1e9, 500e9);
+        let gpus = g.usize(8, 2048);
+        // constant shard size => constant DDMA time (linear scalability)
+        let t1 = ddma.sync_secs(params, gpus);
+        let t2 = ddma.sync_secs(params * 2.0, gpus * 2);
+        assert!((t1 - t2).abs() / t1 < 1e-6);
+        // PS cost is superlinear in model size regardless of GPUs
+        let p1 = ps.sync_secs(params);
+        let p2 = ps.sync_secs(params * 2.0);
+        assert!(p2 > 2.0 * p1 * 0.999, "ps must be superlinear");
+        // and DDMA beats PS at every scale the paper reports
+        assert!(ddma.sync_secs(params, gpus.max(64)) < ps.sync_secs(params));
+    });
+}

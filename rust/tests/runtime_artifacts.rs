@@ -1,0 +1,214 @@
+//! Runtime-level tests against the real `nano` artifacts: manifest
+//! validation, executable round trips, generation semantics, train-step
+//! behaviour. These need `make artifacts` to have run (they are skipped
+//! with a message otherwise, so `cargo test` works on a fresh checkout).
+
+use llamarl::model::{load_init_params, Tokenizer, EOS_ID, PAD_ID};
+use llamarl::runtime::{Dtype, HostTensor, Manifest, Runtime};
+
+fn artifacts() -> Option<&'static str> {
+    const DIR: &str = "artifacts/nano";
+    if std::path::Path::new(DIR).join("manifest.json").exists() {
+        Some(DIR)
+    } else {
+        eprintln!("skipping: {DIR} missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_is_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(dir).unwrap();
+    assert_eq!(m.config.name, "nano");
+    // layout covers exactly num_params
+    let last = m.param_layout.last().unwrap();
+    let last_size: usize = last.shape.iter().product();
+    assert_eq!(last.offset + last_size, m.num_params);
+    // offsets strictly increasing & contiguous
+    let mut off = 0;
+    for e in &m.param_layout {
+        assert_eq!(e.offset, off);
+        off += e.shape.iter().product::<usize>();
+    }
+    // all five artifacts present with single outputs
+    for name in [
+        "generate_chunk",
+        "train_step",
+        "extract_params",
+        "extract_metrics",
+        "logprobs_eval",
+    ] {
+        let a = m.artifact(name).unwrap();
+        assert!(!a.inputs.is_empty());
+        assert!(m.artifact_path(name).unwrap().exists());
+    }
+    assert_eq!(m.artifact("train_step").unwrap().output.dtype, Dtype::F32);
+}
+
+#[test]
+fn init_params_load_and_are_finite() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(dir).unwrap();
+    let p = load_init_params(&m).unwrap();
+    assert_eq!(p.len(), m.num_params);
+    assert!(p.iter().all(|x| x.is_finite()));
+    // layer-norm scales initialized to 1
+    let ln = m
+        .param_layout
+        .iter()
+        .find(|e| e.name == "layer0.ln1_scale")
+        .unwrap();
+    assert!(p[ln.offset..ln.offset + 4].iter().all(|x| *x == 1.0));
+}
+
+#[test]
+fn generate_chunk_executes_and_respects_semantics() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let c = rt.config().clone();
+    let (b, s, ch) = (c.gen_batch, c.max_seq, c.gen_chunk);
+    let tok = Tokenizer::new(c.vocab).unwrap();
+    let prompt = tok.encode_prompt("12+34=").unwrap();
+
+    let mut tokens = vec![PAD_ID; b * s];
+    let mut lens = vec![1i32; b];
+    let mut frozen = vec![0i32; b];
+    for i in 0..b {
+        tokens[i * s..i * s + prompt.len()].copy_from_slice(&prompt);
+        lens[i] = prompt.len() as i32;
+    }
+    frozen[b - 1] = 1;
+    let params = load_init_params(&rt.manifest).unwrap();
+
+    let out = rt
+        .execute(
+            "generate_chunk",
+            &[
+                HostTensor::F32(params, vec![rt.manifest.num_params]),
+                HostTensor::I32(tokens, vec![b, s]),
+                HostTensor::I32(lens.clone(), vec![b]),
+                HostTensor::I32(frozen, vec![b]),
+                HostTensor::I32(vec![123], vec![1]),
+                HostTensor::F32(vec![1.0], vec![1]),
+                HostTensor::I32(vec![0], vec![1]),
+            ],
+        )
+        .unwrap();
+    let out = out.to_vec::<f32>().unwrap();
+    let row_w = 2 * ch + 2;
+    assert_eq!(out.len(), b * row_w);
+    for i in 0..b - 1 {
+        let row = &out[i * row_w..(i + 1) * row_w];
+        let new_len = row[2 * ch] as usize;
+        assert!(new_len > lens[i] as usize && new_len <= s);
+        for j in 0..(new_len - lens[i] as usize) {
+            let t = row[j] as i32;
+            assert!((0..c.vocab as i32).contains(&t));
+            assert!(row[ch + j] <= 0.0, "logp must be <= 0");
+        }
+    }
+    // frozen row untouched
+    let fr = &out[(b - 1) * row_w..b * row_w];
+    assert_eq!(fr[2 * ch] as i32, lens[b - 1]);
+    assert_eq!(fr[2 * ch + 1], 1.0);
+    assert!(fr[..ch].iter().all(|t| *t as i32 == PAD_ID));
+    let _ = EOS_ID;
+}
+
+#[test]
+fn train_step_moves_params_and_counts_steps() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let c = rt.config().clone();
+    let (b, t) = (c.train_batch, c.train_seq);
+    let params = load_init_params(&rt.manifest).unwrap();
+    let total = rt.manifest.train_state.total;
+    let mut state = params.clone();
+    state.resize(total, 0.0);
+
+    let tokens: Vec<i32> = (0..b * t).map(|i| (i % 40 + 3) as i32).collect();
+    let targets: Vec<i32> = (0..b * t).map(|i| ((i + 1) % 40 + 3) as i32).collect();
+    let blogp = vec![-2.0f32; b * t];
+    let adv = vec![1.0f32; b * t];
+    let mask = vec![1.0f32; b * t];
+    let lens = vec![t as i32; b];
+    let hyp = vec![1e-3f32, 4.0, 1.0];
+
+    let state_b = rt.upload(&HostTensor::F32(state, vec![total])).unwrap();
+    let new_state = rt
+        .execute_buffers(
+            "train_step",
+            &[
+                &state_b,
+                &rt.upload(&HostTensor::I32(tokens, vec![b, t])).unwrap(),
+                &rt.upload(&HostTensor::I32(targets, vec![b, t])).unwrap(),
+                &rt.upload(&HostTensor::F32(blogp, vec![b, t])).unwrap(),
+                &rt.upload(&HostTensor::F32(adv, vec![b, t])).unwrap(),
+                &rt.upload(&HostTensor::F32(mask, vec![b, t])).unwrap(),
+                &rt.upload(&HostTensor::I32(lens, vec![b])).unwrap(),
+                &rt.upload(&HostTensor::F32(hyp, vec![3])).unwrap(),
+            ],
+        )
+        .unwrap();
+
+    // metrics: step == 1, token_count == b*t, grad_norm > 0
+    let met_b = rt.execute_buffers("extract_metrics", &[&new_state]).unwrap();
+    let met = rt.fetch_f32(&met_b).unwrap();
+    assert_eq!(met[0], 1.0, "step counter");
+    let idx = |n: &str| rt.manifest.metric_index(n).unwrap();
+    assert_eq!(met[1 + idx("token_count")], (b * t) as f32);
+    assert!(met[1 + idx("grad_norm")] > 0.0);
+    assert!(met[1 + idx("entropy")] > 0.0);
+
+    // params moved
+    let p_b = rt.execute_buffers("extract_params", &[&new_state]).unwrap();
+    let new_params = rt.fetch_f32(&p_b).unwrap();
+    assert_eq!(new_params.len(), rt.manifest.num_params);
+    let diff: f32 = params
+        .iter()
+        .zip(&new_params)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 0.0, "params must move");
+}
+
+#[test]
+fn logprobs_eval_matches_semantics() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let c = rt.config().clone();
+    let (b, t) = (c.train_batch, c.train_seq);
+    let params = load_init_params(&rt.manifest).unwrap();
+    let tokens: Vec<i32> = (0..b * t).map(|i| (i % 30 + 3) as i32).collect();
+    let targets: Vec<i32> = (0..b * t).map(|i| ((i * 7) % 30 + 3) as i32).collect();
+    let lens = vec![t as i32; b];
+    let out = rt
+        .execute(
+            "logprobs_eval",
+            &[
+                HostTensor::F32(params, vec![rt.manifest.num_params]),
+                HostTensor::I32(tokens, vec![b, t]),
+                HostTensor::I32(targets, vec![b, t]),
+                HostTensor::I32(lens, vec![b]),
+            ],
+        )
+        .unwrap();
+    let lp = out.to_vec::<f32>().unwrap();
+    assert_eq!(lp.len(), b * t);
+    assert!(lp.iter().all(|x| *x <= 0.0 && x.is_finite()));
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let res = rt.execute(
+        "extract_params",
+        &[HostTensor::F32(vec![0.0; 3], vec![3])],
+    );
+    assert!(res.is_err(), "wrong shape must be rejected before PJRT");
+    let res = rt.execute("extract_params", &[]);
+    assert!(res.is_err(), "wrong arity must be rejected");
+    assert!(rt.execute("no_such_artifact", &[]).is_err());
+}
