@@ -1,0 +1,243 @@
+//! Bench: the trajectory data plane — direct-channel async vs buffered
+//! async over the RolloutStore, on throughput and realized off-policy lag.
+//!
+//! Panel 1 (DES): lag-matched comparison — the channel bounds lag only via
+//! queue depth (throttling the generator); the store bounds it explicitly
+//! via max-staleness drops while the generator free-runs.
+//!
+//! Panel 2 (threads): the synthetic driver pushes real trajectories from
+//! real producer threads through both transports and reports rows/s plus
+//! the realized lag distribution, including the sampling-strategy arms.
+//!
+//! Panel 3 (hot path): raw store push/sample cost per row vs the channel.
+
+use std::time::Duration;
+
+use llamarl::coordinator::channel::{gather_channel, Message};
+use llamarl::dataplane::{
+    run_driver, AdmissionPolicy, DriverConfig, RolloutStore, SamplingStrategy, StoreConfig,
+    Transport,
+};
+use llamarl::data::{Difficulty, Problem};
+use llamarl::rl::{FinishReason, Trajectory};
+use llamarl::simulator::des::simulate_async;
+use llamarl::simulator::{simulate_async_buffered, BufferedDesConfig, DesConfig};
+use llamarl::util::bench::{bench, Table};
+
+fn traj(group_id: u64, gen_version: u64) -> Trajectory {
+    Trajectory {
+        group_id,
+        replica: 0,
+        n_replicas: 1,
+        problem: Problem {
+            prompt: "1+1=".into(),
+            answer: "2".into(),
+            difficulty: Difficulty::Add1,
+        },
+        prompt_tokens: vec![1, 2, 3, 4],
+        response_tokens: vec![5, 6, 7],
+        behavior_logp: vec![-0.5; 3],
+        gen_version,
+        chunks: 1,
+        finish: FinishReason::Eos,
+        reward: 1.0,
+        advantage: 0.5,
+    }
+}
+
+fn panel_des() {
+    println!("--- panel 1: DES, lag-matched channel vs store (gen_sigma=1.0) ---\n");
+    let mut t = Table::new(&[
+        "lag bound",
+        "channel s/step",
+        "store s/step",
+        "store/channel",
+        "channel lag",
+        "store lag",
+        "store drops",
+    ]);
+    let mut store_never_slower = true;
+    let mut lag_always_bounded = true;
+    for bound in [1usize, 2, 4] {
+        let (mut ch_tot, mut st_tot, mut ch_lag, mut st_lag, mut st_max, mut drops) =
+            (0.0, 0.0, 0.0, 0.0, 0.0f64, 0usize);
+        let seeds = 5;
+        for seed in 0..seeds as u64 {
+            let cfg = DesConfig {
+                steps: 200,
+                gen_sigma: 1.0,
+                seed,
+                ..DesConfig::default()
+            };
+            let ch = simulate_async(&DesConfig {
+                queue_capacity: bound,
+                ..cfg.clone()
+            });
+            let st = simulate_async_buffered(
+                &cfg,
+                &BufferedDesConfig {
+                    store_capacity: 8,
+                    max_staleness: bound as u64,
+                    freshest_first: false,
+                },
+            );
+            ch_tot += ch.total_secs;
+            st_tot += st.total_secs;
+            ch_lag += ch.mean_lag_steps;
+            st_lag += st.mean_lag_steps;
+            st_max = st_max.max(st.max_lag_steps);
+            drops += st.dropped_batches;
+        }
+        let n = seeds as f64;
+        store_never_slower &= st_tot <= ch_tot * 1.02;
+        lag_always_bounded &= st_max <= bound as f64 + 1e-9;
+        t.row(vec![
+            bound.to_string(),
+            format!("{:.2}", ch_tot / n / 200.0),
+            format!("{:.2}", st_tot / n / 200.0),
+            format!("{:.3}x", st_tot / ch_tot),
+            format!("{:.2}", ch_lag / n),
+            format!("{:.2}", st_lag / n),
+            format!("{}", drops / seeds),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nshape check: store throughput >= lag-matched channel: {}; \
+         realized max lag <= bound: {}",
+        if store_never_slower { "PASS" } else { "FAIL" },
+        if lag_always_bounded { "PASS" } else { "FAIL" },
+    );
+}
+
+fn panel_threads() {
+    println!("\n--- panel 2: threaded driver, real transports (40 steps, 2 producers) ---\n");
+    let base = DriverConfig {
+        train_steps: 40,
+        ..DriverConfig::default()
+    };
+    let bound = 4u64;
+    let store = |sampling: SamplingStrategy, admission: AdmissionPolicy| {
+        Transport::Store(StoreConfig {
+            capacity: 64,
+            shards: 4,
+            max_staleness: Some(bound),
+            admission,
+            sampling,
+            seed: 0,
+        })
+    };
+    let mut t = Table::new(&[
+        "transport",
+        "rows/s",
+        "mean lag",
+        "max sampled lag",
+        "dropped",
+        "evicted",
+    ]);
+    let mut channel_rate = 0.0;
+    let mut store_fifo_rate = 0.0;
+    let mut bound_ok = true;
+    for (i, transport) in [
+        Transport::Channel { capacity: 4 },
+        store(SamplingStrategy::Fifo, AdmissionPolicy::EvictOldest),
+        store(SamplingStrategy::FreshestFirst, AdmissionPolicy::EvictOldest),
+        store(SamplingStrategy::StalenessWeighted, AdmissionPolicy::EvictOldest),
+        store(SamplingStrategy::Fifo, AdmissionPolicy::Block),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let r = run_driver(&DriverConfig {
+            transport,
+            ..base.clone()
+        });
+        let (max_sampled, dropped, evicted) = r
+            .dataplane
+            .as_ref()
+            .map(|d| {
+                bound_ok &= d.max_sampled_lag <= bound;
+                (
+                    d.max_sampled_lag.to_string(),
+                    (d.dropped_stale + d.dropped_capacity).to_string(),
+                    d.evicted.to_string(),
+                )
+            })
+            .unwrap_or_else(|| ("-".into(), "-".into(), "-".into()));
+        if i == 0 {
+            channel_rate = r.rows_per_sec;
+        }
+        if i == 1 {
+            store_fifo_rate = r.rows_per_sec;
+        }
+        t.row(vec![
+            r.transport.clone(),
+            format!("{:.0}", r.rows_per_sec),
+            format!("{:.2}", r.mean_lag),
+            max_sampled,
+            dropped,
+            evicted,
+        ]);
+    }
+    t.print();
+    println!(
+        "\nshape check: store(fifo) throughput {:.0} rows/s vs channel {:.0} ({}); \
+         sampled lag <= bound {bound}: {}",
+        store_fifo_rate,
+        channel_rate,
+        if store_fifo_rate >= channel_rate * 0.9 {
+            "PASS"
+        } else {
+            "FAIL"
+        },
+        if bound_ok { "PASS" } else { "FAIL" },
+    );
+}
+
+fn panel_hot_path() {
+    println!("\n--- panel 3: raw data-plane hot path (per-row cost) ---\n");
+    let rows = 256usize;
+
+    let store = RolloutStore::new(StoreConfig {
+        capacity: rows,
+        shards: 4,
+        max_staleness: None,
+        admission: AdmissionPolicy::EvictOldest,
+        sampling: SamplingStrategy::Fifo,
+        seed: 0,
+    });
+    let r = bench("store push+sample (256 rows, 4 shards)", 3, 20, || {
+        for i in 0..rows as u64 {
+            store.push_group(vec![traj(i, 0)]).unwrap();
+        }
+        let mut got = 0;
+        while got < rows {
+            got += store
+                .sample(32, Duration::from_millis(1))
+                .map(|v| v.len())
+                .unwrap_or(0);
+        }
+    });
+    r.print();
+
+    let r = bench("channel send+recv (256 rows)", 3, 20, || {
+        let (tx, rx) = gather_channel("bench", rows + 1);
+        for i in 0..rows as u64 {
+            tx.send(Message::Scored(vec![traj(i, 0)])).unwrap();
+        }
+        let mut got = 0;
+        while got < rows {
+            if let Some(Message::Scored(v)) = rx.try_recv() {
+                got += v.len();
+            }
+        }
+    });
+    r.print();
+}
+
+fn main() {
+    println!("\n=== data plane: staleness-aware store vs direct channel ===\n");
+    panel_des();
+    panel_threads();
+    panel_hot_path();
+}

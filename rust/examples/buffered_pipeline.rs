@@ -1,0 +1,172 @@
+//! The streaming trajectory data plane, end to end: direct-channel async
+//! (Mode::Async) vs buffered async over the RolloutStore
+//! (Mode::AsyncBuffered), compared on throughput and realized off-policy
+//! lag.
+//!
+//! With compiled artifacts present (`make artifacts`) this drives the REAL
+//! pipeline twice — same executors, same DDMA bus, only the reward→trainer
+//! data plane differs. Without artifacts it falls back to the synthetic
+//! threaded driver (real threads, real store, modeled compute) plus the
+//! discrete-event timeline, so the example always runs end to end.
+//!
+//!     cargo run --release --example buffered_pipeline -- [--steps 6]
+//!     cargo run --release --example buffered_pipeline -- --max-staleness 2
+
+use llamarl::coordinator::{run_training, Mode, PipelineConfig};
+use llamarl::dataplane::{
+    run_driver, AdmissionPolicy, DriverConfig, SamplingStrategy, StoreConfig, Transport,
+};
+use llamarl::metrics::print_report;
+use llamarl::simulator::{simulate_async_buffered, BufferedDesConfig, DesConfig};
+use llamarl::simulator::des::simulate_async;
+use llamarl::util::bench::Table;
+use llamarl::util::cli::Args;
+
+fn main() -> llamarl::Result<()> {
+    let args = Args::from_env(&[])?;
+    let artifact_dir = args.str_or("artifacts", "artifacts/nano");
+    let bound = args.u64_or("max-staleness", 4)?;
+    let staleness = if bound == 0 { None } else { Some(bound) };
+
+    if std::path::Path::new(&artifact_dir).join("manifest.json").exists() {
+        real_pipeline(&args, &artifact_dir, staleness)?;
+    } else {
+        eprintln!(
+            "{artifact_dir} missing (run `make artifacts`) — using the synthetic driver\n"
+        );
+        synthetic_pipeline(&args, staleness)?;
+    }
+    Ok(())
+}
+
+/// Both real pipelines over the compiled artifacts.
+fn real_pipeline(args: &Args, artifact_dir: &str, staleness: Option<u64>) -> llamarl::Result<()> {
+    let base = PipelineConfig {
+        artifact_dir: artifact_dir.into(),
+        max_steps: args.u64_or("steps", 6)?,
+        max_response: 10,
+        n_generations: 4,
+        n_generator_workers: 2,
+        queue_capacity: 2,
+        store: StoreConfig {
+            capacity: 64,
+            max_staleness: staleness,
+            ..StoreConfig::default()
+        },
+        ..PipelineConfig::default()
+    };
+
+    println!("--- direct-channel async (Mode::Async) ---");
+    let direct = run_training(&PipelineConfig {
+        mode: Mode::Async,
+        out_dir: std::env::temp_dir().join("llamarl_bufex_async"),
+        ..base.clone()
+    })?;
+    print_report(&direct);
+
+    println!("\n--- buffered async over the RolloutStore (Mode::AsyncBuffered) ---");
+    let buffered = run_training(&PipelineConfig {
+        mode: Mode::AsyncBuffered,
+        out_dir: std::env::temp_dir().join("llamarl_bufex_buffered"),
+        ..base
+    })?;
+    print_report(&buffered);
+
+    let lag = |r: &llamarl::coordinator::RunReport| {
+        let n = r.records.len().max(1) as f64;
+        r.records.iter().map(|x| x.mean_lag).sum::<f64>() / n
+    };
+    println!(
+        "\ncomparison: direct {:.2}s/step lag {:.2} | buffered {:.2}s/step lag {:.2}{}",
+        direct.mean_step_secs(),
+        lag(&direct),
+        buffered.mean_step_secs(),
+        lag(&buffered),
+        staleness.map_or(String::new(), |b| format!(" (bound {b})")),
+    );
+    Ok(())
+}
+
+/// No artifacts: the synthetic threaded driver + the DES timeline.
+fn synthetic_pipeline(args: &Args, staleness: Option<u64>) -> llamarl::Result<()> {
+    let steps = args.u64_or("steps", 40)?;
+    let base = DriverConfig {
+        train_steps: steps,
+        ..DriverConfig::default()
+    };
+    let store = |sampling: SamplingStrategy| {
+        Transport::Store(StoreConfig {
+            capacity: 64,
+            shards: 4,
+            max_staleness: staleness,
+            admission: AdmissionPolicy::EvictOldest,
+            sampling,
+            seed: 0,
+        })
+    };
+
+    println!("synthetic driver: {steps} train steps, 2 producers, real threads\n");
+    let mut t = Table::new(&["transport", "rows/s", "mean lag", "max lag", "dropped"]);
+    for transport in [
+        Transport::Channel { capacity: 4 },
+        store(SamplingStrategy::Fifo),
+        store(SamplingStrategy::FreshestFirst),
+        store(SamplingStrategy::StalenessWeighted),
+    ] {
+        let r = run_driver(&DriverConfig {
+            transport,
+            ..base.clone()
+        });
+        let dropped = r
+            .dataplane
+            .as_ref()
+            .map(|d| d.dropped_stale + d.dropped_capacity + d.evicted)
+            .unwrap_or(0);
+        t.row(vec![
+            r.transport.clone(),
+            format!("{:.0}", r.rows_per_sec),
+            format!("{:.2}", r.mean_lag),
+            r.max_lag.to_string(),
+            dropped.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\nDES timeline (train-bound regime, staleness pressure visible):\n");
+    let cfg = DesConfig {
+        steps: 200,
+        train_secs: 48.0,
+        ..DesConfig::default()
+    };
+    let direct = simulate_async(&cfg);
+    let buffered = simulate_async_buffered(
+        &cfg,
+        &BufferedDesConfig {
+            store_capacity: 8,
+            max_staleness: staleness.unwrap_or(u64::MAX),
+            freshest_first: false,
+        },
+    );
+    let mut d = Table::new(&["arch", "s/step", "mean lag", "max lag", "dropped batches"]);
+    d.row(vec![
+        "async (channel)".into(),
+        format!("{:.2}", direct.step_secs_mean),
+        format!("{:.2}", direct.mean_lag_steps),
+        format!("{:.0}", direct.max_lag_steps),
+        "0".into(),
+    ]);
+    d.row(vec![
+        "async_buffered (store)".into(),
+        format!("{:.2}", buffered.step_secs_mean),
+        format!("{:.2}", buffered.mean_lag_steps),
+        format!("{:.0}", buffered.max_lag_steps),
+        buffered.dropped_batches.to_string(),
+    ]);
+    d.print();
+    println!(
+        "\nShape check: the store holds realized lag at or below the bound by\n\
+         dropping aged batches, while the free-running generator keeps the\n\
+         trainer fed — the channel can only bound lag by throttling."
+    );
+    Ok(())
+}

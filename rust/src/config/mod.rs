@@ -7,6 +7,7 @@
 use std::path::PathBuf;
 
 use crate::coordinator::{Mode, PipelineConfig};
+use crate::dataplane::{AdmissionPolicy, SamplingStrategy};
 use crate::rl::{AipoConfig, Baseline};
 use crate::util::cli::Args;
 use crate::util::error::{Error, Result};
@@ -55,7 +56,19 @@ fn parse_mode(s: &str) -> Result<Mode> {
     match s {
         "sync" => Ok(Mode::Sync),
         "async" => Ok(Mode::Async),
-        other => Err(Error::Config(format!("mode must be sync|async, got '{other}'"))),
+        "async_buffered" | "buffered" => Ok(Mode::AsyncBuffered),
+        other => Err(Error::Config(format!(
+            "mode must be sync|async|async_buffered, got '{other}'"
+        ))),
+    }
+}
+
+/// 0 means "unbounded" for the max-staleness knob (CLI/JSON friendly).
+fn staleness_opt(v: u64) -> Option<u64> {
+    if v == 0 {
+        None
+    } else {
+        Some(v)
     }
 }
 
@@ -82,6 +95,17 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             "n_generator_workers" => cfg.n_generator_workers = val.as_usize().unwrap_or(1),
             "queue_capacity" => cfg.queue_capacity = val.as_usize().unwrap_or(4),
             "scored_capacity" => cfg.scored_capacity = val.as_usize().unwrap_or(8),
+            "store_capacity" => cfg.store.capacity = val.as_usize().unwrap_or(128).max(1),
+            "store_shards" => cfg.store.shards = val.as_usize().unwrap_or(4).max(1),
+            "max_staleness" => {
+                cfg.store.max_staleness = staleness_opt(val.as_i64().unwrap_or(0).max(0) as u64)
+            }
+            "admission" => {
+                cfg.store.admission = AdmissionPolicy::parse(val.as_str().unwrap_or(""))?
+            }
+            "sampling" => {
+                cfg.store.sampling = SamplingStrategy::parse(val.as_str().unwrap_or(""))?
+            }
             "n_generations" => cfg.n_generations = val.as_usize().unwrap_or(4),
             "baseline" => cfg.baseline = parse_baseline(val.as_str().unwrap_or(""))?,
             "max_steps" => cfg.max_steps = val.as_i64().unwrap_or(1) as u64,
@@ -119,6 +143,20 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
     }
     cfg.n_generator_workers = args.usize_or("workers", cfg.n_generator_workers)?;
     cfg.queue_capacity = args.usize_or("queue-capacity", cfg.queue_capacity)?;
+    cfg.store.capacity = args.usize_or("store-capacity", cfg.store.capacity)?.max(1);
+    cfg.store.shards = args.usize_or("store-shards", cfg.store.shards)?.max(1);
+    if let Some(v) = args.str_opt("max-staleness") {
+        let bound: u64 = v.parse().map_err(|_| {
+            Error::Cli(format!("--max-staleness expects an integer, got '{v}'"))
+        })?;
+        cfg.store.max_staleness = staleness_opt(bound);
+    }
+    if let Some(v) = args.str_opt("admission") {
+        cfg.store.admission = AdmissionPolicy::parse(v)?;
+    }
+    if let Some(v) = args.str_opt("sampling") {
+        cfg.store.sampling = SamplingStrategy::parse(v)?;
+    }
     cfg.n_generations = args.usize_or("n-generations", cfg.n_generations)?;
     cfg.max_steps = args.u64_or("steps", cfg.max_steps)?;
     cfg.aipo.lr = args.f64_or("lr", cfg.aipo.lr as f64)? as f32;
@@ -175,6 +213,36 @@ mod tests {
         assert_eq!(cfg.mode, Mode::Sync);
         assert_eq!(cfg.aipo.rho, 7.5);
         assert_eq!(cfg.max_steps, 99);
+    }
+
+    #[test]
+    fn dataplane_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        let v = Value::parse(
+            r#"{"mode":"async_buffered","store_capacity":64,"store_shards":2,
+                "max_staleness":3,"admission":"block","sampling":"freshest"}"#,
+        )
+        .unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert_eq!(cfg.mode, Mode::AsyncBuffered);
+        assert_eq!(cfg.store.capacity, 64);
+        assert_eq!(cfg.store.shards, 2);
+        assert_eq!(cfg.store.max_staleness, Some(3));
+        assert_eq!(cfg.store.admission, AdmissionPolicy::Block);
+        assert_eq!(cfg.store.sampling, SamplingStrategy::FreshestFirst);
+
+        // CLI layer: 0 disables the bound, mode alias resolves
+        let args = Args::parse(
+            ["--mode", "buffered", "--max-staleness", "0", "--sampling", "staleness_weighted"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.mode, Mode::AsyncBuffered);
+        assert_eq!(cfg.store.max_staleness, None);
+        assert_eq!(cfg.store.sampling, SamplingStrategy::StalenessWeighted);
     }
 
     #[test]

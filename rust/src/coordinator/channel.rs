@@ -54,6 +54,26 @@ impl ChannelStats {
     pub fn recv_blocked_secs(&self) -> f64 {
         self.recv_blocked_nanos.load(Ordering::Relaxed) as f64 / 1e9
     }
+
+    /// Accumulate blocked time into `counter` without ever wrapping: the
+    /// u128->u64 narrowing and the running sum both saturate, so a stuck
+    /// sender (or a clock-skewed suspend/resume making one interval huge)
+    /// can pin the counter at u64::MAX but never overflow it back to a
+    /// small — effectively "negative" — value.
+    fn add_blocked(counter: &AtomicU64, dt: Duration) {
+        let nanos = u64::try_from(dt.as_nanos()).unwrap_or(u64::MAX);
+        let _ = counter.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            Some(cur.saturating_add(nanos))
+        });
+    }
+
+    pub fn add_send_blocked(&self, dt: Duration) {
+        Self::add_blocked(&self.send_blocked_nanos, dt);
+    }
+
+    pub fn add_recv_blocked(&self, dt: Duration) {
+        Self::add_blocked(&self.recv_blocked_nanos, dt);
+    }
 }
 
 /// Sending half. Cloneable for GATHER (many producers).
@@ -100,12 +120,9 @@ impl Outbound {
         self.senders[idx]
             .send(msg)
             .map_err(|_| Error::ChannelClosed(self.name.clone()))?;
-        let dt = t0.elapsed();
         // (send on a non-full channel is ~free; anything measurable is
         // backpressure block time)
-        self.stats
-            .send_blocked_nanos
-            .fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        self.stats.add_send_blocked(t0.elapsed());
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.items.fetch_add(items, Ordering::Relaxed);
         Ok(())
@@ -142,18 +159,14 @@ impl Inbound {
             .rx
             .recv()
             .map_err(|_| Error::ChannelClosed(self.name.clone()))?;
-        self.stats
-            .recv_blocked_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.add_recv_blocked(t0.elapsed());
         Ok(m)
     }
 
     pub fn recv_timeout(&self, d: Duration) -> std::result::Result<Message, RecvTimeoutError> {
         let t0 = Instant::now();
         let r = self.rx.recv_timeout(d);
-        self.stats
-            .recv_blocked_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.add_recv_blocked(t0.elapsed());
         r
     }
 
@@ -301,5 +314,27 @@ mod tests {
         let (tx, _rx) = gather_channel("full", 1);
         assert!(tx.try_send(Message::Trajectories(vec![traj(0)])).is_ok());
         assert!(tx.try_send(Message::Trajectories(vec![traj(1)])).is_err());
+    }
+
+    #[test]
+    fn blocked_time_accounting_saturates_instead_of_wrapping() {
+        let stats = ChannelStats::default();
+        // near-overflow accumulator + a huge interval (clock-skew style):
+        // must pin at u64::MAX, never wrap to a small value
+        stats
+            .send_blocked_nanos
+            .store(u64::MAX - 5, Ordering::Relaxed);
+        stats.add_send_blocked(Duration::from_secs(3600));
+        assert_eq!(stats.send_blocked_nanos.load(Ordering::Relaxed), u64::MAX);
+        assert!(stats.send_blocked_secs() >= (u64::MAX - 5) as f64 / 1e9);
+
+        // an interval whose nanos exceed u64 (u128 source) also saturates
+        let recv = ChannelStats::default();
+        recv.add_recv_blocked(Duration::from_secs(u64::MAX / 1_000_000_000 + 10));
+        assert_eq!(recv.recv_blocked_nanos.load(Ordering::Relaxed), u64::MAX);
+        // monotonic: further adds keep it pinned
+        recv.add_recv_blocked(Duration::from_secs(1));
+        assert_eq!(recv.recv_blocked_nanos.load(Ordering::Relaxed), u64::MAX);
+        assert!(recv.recv_blocked_secs() > 0.0);
     }
 }

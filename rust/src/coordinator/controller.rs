@@ -13,6 +13,11 @@
 //!   the DDMA bus; generation is continuously batched with partial
 //!   rollouts. Off-policy lag is bounded by channel capacity and corrected
 //!   by AIPO.
+//! * [`Mode::AsyncBuffered`] — the streaming data plane: scored groups
+//!   land in a sharded [`RolloutStore`] instead of a SCATTER channel. The
+//!   store enforces an explicit max-staleness bound, applies a pluggable
+//!   admission/eviction policy and sampling strategy, and parks partial
+//!   rollouts at drain time. Generators never block on the trainer.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -22,9 +27,10 @@ use crate::coordinator::channel::{gather_channel, scatter_channel};
 use crate::coordinator::evaluator::{eval_policy, EvalResult, EvaluatorConfig, EvaluatorExecutor};
 use crate::coordinator::executor::{run_executor_loop, Executor, ExecutorContext, StepOutcome};
 use crate::coordinator::generator::{GeneratorConfig, GeneratorWorker};
-use crate::coordinator::reward::RewardExecutor;
-use crate::coordinator::trainer::{Trainer, TrainStepRecord, TrainerConfig};
+use crate::coordinator::reward::{RewardExecutor, ScoredSink};
+use crate::coordinator::trainer::{TrainStepRecord, Trainer, TrainerConfig, TrajectorySource};
 use crate::data::{task, PromptScheduler};
+use crate::dataplane::{DataPlaneSnapshot, RolloutStore, StoreConfig};
 use crate::ddma::WeightsBus;
 use crate::model::load_init_params;
 use crate::rl::{AipoConfig, Baseline};
@@ -36,6 +42,7 @@ use crate::util::logging::JsonlWriter;
 pub enum Mode {
     Sync,
     Async,
+    AsyncBuffered,
 }
 
 #[derive(Debug, Clone)]
@@ -48,6 +55,9 @@ pub struct PipelineConfig {
     pub queue_capacity: usize,
     /// reward->trainer channel capacity, in groups
     pub scored_capacity: usize,
+    /// rollout-store configuration (Mode::AsyncBuffered); the store's seed
+    /// is derived from `seed` at run time
+    pub store: StoreConfig,
     /// generations per prompt (the advantage group, paper n=4)
     pub n_generations: usize,
     pub baseline: Baseline,
@@ -76,6 +86,7 @@ impl Default for PipelineConfig {
             n_generator_workers: 1,
             queue_capacity: 4,
             scored_capacity: 8,
+            store: StoreConfig::default(),
             n_generations: 4,
             baseline: Baseline::GroupMean,
             max_steps: 5,
@@ -110,6 +121,8 @@ pub struct RunReport {
     pub ddma_mean_publish_secs: f64,
     pub gen_send_blocked_secs: f64,
     pub trainer_recv_blocked_secs: f64,
+    /// rollout-store telemetry (Mode::AsyncBuffered only)
+    pub dataplane: Option<DataPlaneSnapshot>,
     pub metrics_path: Option<PathBuf>,
 }
 
@@ -205,6 +218,7 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     let mut report = match cfg.mode {
         Mode::Sync => run_sync(cfg, &manifest, ctx, scheduler, log)?,
         Mode::Async => run_async(cfg, &manifest, ctx, scheduler, log)?,
+        Mode::AsyncBuffered => run_async_buffered(cfg, &manifest, ctx, scheduler, log)?,
     };
     report.metrics_path = Some(metrics_path);
     Ok(report)
@@ -230,7 +244,7 @@ fn run_sync(
     let mut reward = RewardExecutor::new(
         ctx.clone(),
         gen_rx,
-        scored_tx,
+        ScoredSink::Channel(scored_tx),
         cfg.baseline,
         manifest.config.vocab,
         1,
@@ -238,7 +252,7 @@ fn run_sync(
     let mut trainer = Trainer::new(
         trainer_cfg(cfg),
         ctx.clone(),
-        scored_rxs.remove(0),
+        TrajectorySource::Channel(scored_rxs.remove(0)),
         Some(log.clone()),
     );
 
@@ -292,6 +306,7 @@ fn run_sync(
         ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
         gen_send_blocked_secs: 0.0,
         trainer_recv_blocked_secs: 0.0,
+        dataplane: None,
         metrics_path: None,
     })
 }
@@ -341,7 +356,14 @@ fn run_async(
         std::thread::Builder::new()
             .name("reward".into())
             .spawn(move || -> Result<(u64, u64, f64)> {
-                let mut r = RewardExecutor::new(ctx.clone(), gen_rx, scored_tx, baseline, vocab, n_workers)?;
+                let mut r = RewardExecutor::new(
+                    ctx.clone(),
+                    gen_rx,
+                    ScoredSink::Channel(scored_tx),
+                    baseline,
+                    vocab,
+                    n_workers,
+                )?;
                 run_executor_loop(&mut r, &ctx, None)?;
                 Ok((r.scored, r.groups_emitted, r.reward_sum))
             })
@@ -374,7 +396,12 @@ fn run_async(
     // Init (artifact compilation) runs OUTSIDE the measured wall clock, like
     // the sync driver's; the generator/reward threads warm up concurrently.
     let scored_rx = scored_rxs.remove(0);
-    let mut trainer = Trainer::new(trainer_cfg(cfg), ctx.clone(), scored_rx, Some(log));
+    let mut trainer = Trainer::new(
+        trainer_cfg(cfg),
+        ctx.clone(),
+        TrajectorySource::Channel(scored_rx),
+        Some(log),
+    );
     trainer.init()?;
     let t0 = Instant::now();
     crate::coordinator::executor::run_executor_loop_initialized(
@@ -422,6 +449,153 @@ fn run_async(
         ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
         gen_send_blocked_secs: gen_stats_ch.send_blocked_secs(),
         trainer_recv_blocked_secs: scored_stats_ch.recv_blocked_secs(),
+        dataplane: None,
+        metrics_path: None,
+    })
+}
+
+/// Buffered asynchronous pipeline (the streaming data plane): generators
+/// GATHER into the reward executor exactly as in async mode, but scored
+/// groups are admitted into a sharded [`RolloutStore`] instead of a
+/// SCATTER channel. The trainer samples microbatches from the store (per
+/// the configured strategy) and advances the staleness watermark with its
+/// optimizer step; generators park partial rollouts in the store at drain
+/// time instead of decoding stragglers to completion.
+fn run_async_buffered(
+    cfg: &PipelineConfig,
+    manifest: &Manifest,
+    ctx: Arc<ExecutorContext>,
+    scheduler: Arc<PromptScheduler>,
+    log: Arc<JsonlWriter>,
+) -> Result<RunReport> {
+    let n_workers = cfg.n_generator_workers.max(1);
+    let (gen_tx, gen_rx) = gather_channel("generations", cfg.queue_capacity);
+    let gen_stats_ch = gen_tx.stats.clone();
+    let store = Arc::new(RolloutStore::new(StoreConfig {
+        seed: cfg.seed ^ 0xB0FF_E12D,
+        ..cfg.store.clone()
+    }));
+
+    let mut gen_handles = Vec::new();
+    for w in 0..n_workers {
+        let ctx = ctx.clone();
+        let scheduler = scheduler.clone();
+        let out = gen_tx.clone();
+        let store = store.clone();
+        let gcfg = gen_cfg(cfg, w);
+        gen_handles.push(
+            std::thread::Builder::new()
+                .name(format!("generator-{w}"))
+                .spawn(move || -> Result<(u64, u64, u64, u64)> {
+                    let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
+                    gen.set_resume_store(store);
+                    run_executor_loop(&mut gen, &ctx, None)?;
+                    Ok((
+                        gen.tokens_generated,
+                        gen.trajectories_emitted,
+                        gen.chunks_run,
+                        gen.weight_refreshes,
+                    ))
+                })
+                .expect("spawn generator"),
+        );
+    }
+    drop(gen_tx);
+
+    let reward_handle = {
+        let ctx = ctx.clone();
+        let vocab = manifest.config.vocab;
+        let baseline = cfg.baseline;
+        let sink = ScoredSink::Store(store.clone());
+        std::thread::Builder::new()
+            .name("reward".into())
+            .spawn(move || -> Result<(u64, u64, f64)> {
+                let mut r = RewardExecutor::new(ctx.clone(), gen_rx, sink, baseline, vocab, n_workers)?;
+                run_executor_loop(&mut r, &ctx, None)?;
+                Ok((r.scored, r.groups_emitted, r.reward_sum))
+            })
+            .expect("spawn reward")
+    };
+
+    let eval_handle = if cfg.eval_every > 0 {
+        let ctx = ctx.clone();
+        let ecfg = EvaluatorConfig {
+            artifact_dir: cfg.artifact_dir.clone(),
+            every_versions: cfg.eval_every,
+            max_per_suite: cfg.eval_max_per_suite,
+        };
+        let log = log.clone();
+        Some(
+            std::thread::Builder::new()
+                .name("evaluator".into())
+                .spawn(move || -> Result<Vec<EvalResult>> {
+                    let mut e = EvaluatorExecutor::new(ecfg, ctx.clone(), Some(log));
+                    run_executor_loop(&mut e, &ctx, None)?;
+                    Ok(e.results)
+                })
+                .expect("spawn evaluator"),
+        )
+    } else {
+        None
+    };
+
+    // Trainer on the controller thread, sampling from the store.
+    let mut trainer = Trainer::new(
+        trainer_cfg(cfg),
+        ctx.clone(),
+        TrajectorySource::Store(store.clone()),
+        Some(log),
+    );
+    trainer.init()?;
+    let t0 = Instant::now();
+    crate::coordinator::executor::run_executor_loop_initialized(
+        &mut trainer,
+        &ctx,
+        if cfg.checkpoint_every > 0 {
+            Some(cfg.checkpoint_every)
+        } else {
+            None
+        },
+    )?;
+    ctx.request_stop();
+    store.close();
+
+    let mut tokens = 0;
+    let mut trajs = 0;
+    let mut chunks = 0;
+    let mut refreshes = 0;
+    for h in gen_handles {
+        let (t, tr, ch, wr) = h.join().map_err(|_| Error::msg("generator panicked"))??;
+        tokens += t;
+        trajs += tr;
+        chunks += ch;
+        refreshes += wr;
+    }
+    let _ = reward_handle
+        .join()
+        .map_err(|_| Error::msg("reward panicked"))??;
+    let evals = match eval_handle {
+        Some(h) => h.join().map_err(|_| Error::msg("evaluator panicked"))??,
+        None => Vec::new(),
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    let snapshot = store.snapshot();
+
+    Ok(RunReport {
+        mode: "async_buffered".into(),
+        steps: trainer.current_step(),
+        wall_secs: wall,
+        records: trainer.records.clone(),
+        evals,
+        tokens_generated: tokens,
+        trajectories: trajs,
+        chunks,
+        weight_refreshes: refreshes,
+        ddma_publishes: ctx.weights.publish_count(),
+        ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
+        gen_send_blocked_secs: gen_stats_ch.send_blocked_secs(),
+        trainer_recv_blocked_secs: snapshot.sample_wait_secs,
+        dataplane: Some(snapshot),
         metrics_path: None,
     })
 }

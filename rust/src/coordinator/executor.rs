@@ -73,6 +73,13 @@ pub trait Executor {
     /// One unit of work: a decode chunk, a score pass, a train step.
     fn step(&mut self) -> Result<StepOutcome>;
 
+    /// Hand off in-flight work when the loop exits (stop requested or
+    /// Finished) — e.g. generators park partial rollouts in the data
+    /// plane's resumption slot. Default: nothing in flight.
+    fn drain(&mut self) -> Result<()> {
+        Ok(())
+    }
+
     /// Persist state under `ctx.out_dir`. Default: stateless.
     fn save_checkpoint(&mut self) -> Result<()> {
         Ok(())
@@ -120,6 +127,7 @@ pub fn run_executor_loop_initialized<E: Executor + ?Sized>(
             }
         }
     }
+    exec.drain()?;
     exec.save_checkpoint()?;
     Ok(())
 }

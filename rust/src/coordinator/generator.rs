@@ -22,6 +22,7 @@ use std::sync::Arc;
 use crate::coordinator::channel::{Message, Outbound};
 use crate::coordinator::executor::{Executor, ExecutorContext, StepOutcome};
 use crate::data::{PromptScheduler, PromptTask};
+use crate::dataplane::{PartialRollout, RolloutStore};
 use crate::model::simulate_int8_roundtrip;
 use crate::rl::{FinishReason, Trajectory};
 use crate::runtime::{HostTensor, Runtime};
@@ -76,6 +77,9 @@ pub struct GeneratorWorker {
     params_buf: Option<xla::PjRtBuffer>,
     local_version: u64,
     slots: Vec<Option<Slot>>,
+    /// data-plane resumption slot (Mode::AsyncBuffered): unfinished
+    /// sequences are parked here at drain time and reclaimed on refill
+    resume: Option<Arc<RolloutStore>>,
     // telemetry
     pub chunks_run: u64,
     pub tokens_generated: u64,
@@ -103,6 +107,7 @@ impl GeneratorWorker {
             params_buf: None,
             local_version: u64::MAX,
             slots: Vec::new(),
+            resume: None,
             chunks_run: 0,
             tokens_generated: 0,
             trajectories_emitted: 0,
@@ -118,6 +123,39 @@ impl GeneratorWorker {
     /// on the generator's context).
     pub fn runtime_ref(&self) -> &Runtime {
         self.runtime()
+    }
+
+    /// Attach the data-plane resumption slot (Mode::AsyncBuffered): at
+    /// drain time in-flight sequences are parked instead of decoded to
+    /// completion, and refills reclaim parked work before asking the
+    /// scheduler for fresh prompts.
+    pub fn set_resume_store(&mut self, store: Arc<RolloutStore>) {
+        self.resume = Some(store);
+    }
+
+    /// Park every in-flight sequence that has generated at least one token;
+    /// pristine slots are simply released (the scheduler re-issues their
+    /// prompts). Returns how many were parked.
+    fn park_live_slots(&mut self) -> usize {
+        let Some(store) = &self.resume else {
+            return 0;
+        };
+        let mut parked = 0;
+        for slot in self.slots.iter_mut() {
+            let Some(s) = slot.take() else { continue };
+            if s.tokens.len() > s.prompt_len {
+                store.park_partial(PartialRollout {
+                    tokens: s.tokens,
+                    prompt_len: s.prompt_len,
+                    logps: s.logps,
+                    chunks: s.chunks,
+                    gen_version: s.version,
+                    task: s.task,
+                });
+                parked += 1;
+            }
+        }
+        parked
     }
 
     /// Re-attach to the DDMA bus if a newer weight version is available.
@@ -145,6 +183,19 @@ impl GeneratorWorker {
         let max_seq = self.runtime().config().max_seq;
         for slot in self.slots.iter_mut() {
             if slot.is_none() && !stop {
+                // reclaim parked partial rollouts (work a drained worker
+                // left in the store) before drawing fresh prompts
+                if let Some(p) = self.resume.as_ref().and_then(|s| s.take_partial_any()) {
+                    *slot = Some(Slot {
+                        tokens: p.tokens,
+                        prompt_len: p.prompt_len,
+                        logps: p.logps,
+                        chunks: p.chunks,
+                        version: p.gen_version,
+                        task: p.task,
+                    });
+                    continue;
+                }
                 let task = self.scheduler.next();
                 debug_assert!(task.prompt_tokens.len() + 2 < max_seq);
                 *slot = Some(Slot {
@@ -298,6 +349,22 @@ impl Executor for GeneratorWorker {
             }
         }
         Ok(StepOutcome::Progress)
+    }
+
+    /// Loop exit (stop requested mid-flight): with a data plane attached,
+    /// park in-flight sequences in the store's resumption slot instead of
+    /// abandoning their decoded tokens. The executor loop calls this after
+    /// its stop check, which is the only place a stop can strand work.
+    fn drain(&mut self) -> Result<()> {
+        let parked = self.park_live_slots();
+        if parked > 0 {
+            crate::log_debug!(
+                "generator",
+                "worker {} parked {parked} partial rollouts at drain",
+                self.worker_id
+            );
+        }
+        Ok(())
     }
 }
 

@@ -1,16 +1,23 @@
 //! The paper's system contribution (L3): executors, communication channels,
-//! and the single controller (paper §5), plus the synchronous baseline and
-//! the asynchronous off-policy pipeline (paper §4).
+//! and the single controller (paper §5), plus the synchronous baseline, the
+//! asynchronous off-policy pipeline (paper §4), and the buffered pipeline
+//! over the streaming trajectory data plane ([`crate::dataplane`]).
 //!
 //! Topology (the Figure-1/Algorithm-2 flow, critic-free with rule-based
 //! scorers):
 //!
 //! ```text
-//!   PromptScheduler ──► Generator workers (DP)  ──GATHER──►  Reward executor
-//!        ▲                   ▲                                   │
-//!        │                   │ DDMA weights bus                  │ SCATTER
-//!        │                   │                                   ▼
-//!        └──────────── Trainer executor ◄────────────── scored trajectories
+//!   PromptScheduler ──► Generator workers (DP) ──GATHER──► Reward executor
+//!        ▲                  ▲      │ park/resume                │ ScoredSink
+//!        │                  │      │ partial rollouts   ┌───────┴────────┐
+//!        │   DDMA weights   │      ▼              SCATTER (async)   push (buffered)
+//!        │   bus            │  ┌──────────────┐        │                │
+//!        │                  │  │ RolloutStore │◄───────┼────────────────┘
+//!        │                  │  │ shard│shard│… │       │
+//!        │                  │  └──────┬───────┘  scored channel
+//!        │                  │  sample │ ▲ watermark    │
+//!        │                  │         ▼ │              ▼
+//!        └─────────────── Trainer executor ◄───────────┘
 //! ```
 //!
 //! * **Sync mode** (DeepSpeed-Chat-like baseline): one thread, one PJRT
@@ -19,6 +26,11 @@
 //! * **Async mode** (LlamaRL): every executor runs free on its own thread
 //!   with its own PJRT context, connected by bounded channels (backpressure
 //!   bounds off-policy lag) and the DDMA weights bus.
+//! * **AsyncBuffered mode** (streaming data plane): scored groups are
+//!   admitted into a staleness-aware [`crate::dataplane::RolloutStore`];
+//!   the trainer samples microbatches per a pluggable strategy and its
+//!   optimizer step drives the staleness watermark, so off-policy lag is
+//!   an enforced bound rather than a channel-capacity side effect.
 
 pub mod channel;
 pub mod controller;
@@ -35,5 +47,5 @@ pub use evaluator::{eval_policy, EvalResult, EvaluatorConfig, EvaluatorExecutor}
 pub use executor::{run_executor_loop, Executor, ExecutorContext, StepOutcome};
 pub use generator::{GeneratorConfig, GeneratorWorker};
 pub use pretrain::{run_pretraining, PretrainConfig, PretrainReport};
-pub use reward::RewardExecutor;
-pub use trainer::{Trainer, TrainStepRecord, TrainerConfig};
+pub use reward::{RewardExecutor, ScoredSink};
+pub use trainer::{TrainStepRecord, Trainer, TrainerConfig, TrajectorySource};

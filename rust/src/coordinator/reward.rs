@@ -4,8 +4,10 @@
 //! programs" co-located with light compute); here it is a lightweight Rust
 //! executor. It GATHERs raw trajectories from all generator workers, scores
 //! them by exact match, buffers until a prompt's full group of n generations
-//! is present, computes the group-baseline advantages (paper §6), and
-//! SCATTERs the scored group to the trainer.
+//! is present, computes the group-baseline advantages (paper §6), and hands
+//! the scored group downstream through a [`ScoredSink`] — either SCATTERed
+//! over a bounded channel to the trainer (Mode::Async) or admitted into the
+//! staleness-aware rollout store (Mode::AsyncBuffered).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -14,14 +16,40 @@ use std::time::Duration;
 use crate::coordinator::channel::{Inbound, Message, Outbound};
 use crate::coordinator::executor::{Executor, ExecutorContext, StepOutcome};
 use crate::data::task;
+use crate::dataplane::RolloutStore;
 use crate::model::Tokenizer;
 use crate::rl::{group_advantages, Baseline, Trajectory};
 use crate::util::error::Result;
 
+/// Where scored groups go: the direct channel of the classic async
+/// pipeline, or the rollout store of the buffered one. The reward executor
+/// is agnostic — admission policy, eviction and staleness bookkeeping all
+/// live behind this seam.
+pub enum ScoredSink {
+    Channel(Outbound),
+    Store(Arc<RolloutStore>),
+}
+
+impl ScoredSink {
+    pub fn send_group(&self, group: Vec<Trajectory>) -> Result<()> {
+        match self {
+            ScoredSink::Channel(out) => out.send(Message::Scored(group)),
+            ScoredSink::Store(store) => store.push_group(group),
+        }
+    }
+
+    pub fn send_eof(&self) {
+        match self {
+            ScoredSink::Channel(out) => out.send_eof(),
+            ScoredSink::Store(store) => store.close(),
+        }
+    }
+}
+
 pub struct RewardExecutor {
     ctx: Arc<ExecutorContext>,
     inbound: Inbound,
-    out: Outbound,
+    out: ScoredSink,
     baseline: Baseline,
     tokenizer: Tokenizer,
     groups: HashMap<u64, Vec<Trajectory>>,
@@ -38,7 +66,7 @@ impl RewardExecutor {
     pub fn new(
         ctx: Arc<ExecutorContext>,
         inbound: Inbound,
-        out: Outbound,
+        out: ScoredSink,
         baseline: Baseline,
         vocab: usize,
         n_producers: usize,
@@ -74,7 +102,7 @@ impl RewardExecutor {
                 group_advantages(&mut full, self.baseline);
                 self.groups_emitted += 1;
                 self.rows_forwarded += full.len() as u64;
-                self.out.send(Message::Scored(full))?;
+                self.out.send_group(full)?;
             }
         }
         Ok(())
@@ -89,7 +117,7 @@ impl RewardExecutor {
             group_advantages(&mut g, self.baseline);
             self.groups_emitted += 1;
             self.rows_forwarded += g.len() as u64;
-            self.out.send(Message::Scored(g))?;
+            self.out.send_group(g)?;
         }
         Ok(())
     }

@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::channel::{Inbound, Message};
 use crate::coordinator::executor::{Executor, ExecutorContext, StepOutcome};
+use crate::dataplane::RolloutStore;
 use crate::model::{save_checkpoint, Checkpoint};
 use crate::rl::{pack_batch, AipoConfig, Trajectory};
 use crate::runtime::{HostTensor, Runtime};
@@ -60,11 +61,22 @@ pub struct TrainStepRecord {
     pub rows: usize,
 }
 
+/// Where the trainer's microbatches come from: the scored SCATTER channel
+/// (Mode::Sync / Mode::Async) or the rollout store (Mode::AsyncBuffered).
+/// With a store, microbatch assembly — sampling strategy, staleness
+/// enforcement — belongs to the store; the trainer only reports its clock
+/// back via the watermark.
+pub enum TrajectorySource {
+    Channel(Inbound),
+    Store(Arc<RolloutStore>),
+}
+
 pub struct Trainer {
     cfg: TrainerConfig,
     ctx: Arc<ExecutorContext>,
-    /// dropped on finish so blocked upstream senders unblock (shutdown path)
-    inbound: Option<Inbound>,
+    /// dropped on finish so blocked upstream senders unblock (shutdown
+    /// path); dropping a Store source closes the store
+    source: Option<TrajectorySource>,
     log: Option<Arc<JsonlWriter>>,
     runtime: Option<Runtime>,
     state_buf: Option<xla::PjRtBuffer>,
@@ -80,13 +92,13 @@ impl Trainer {
     pub fn new(
         cfg: TrainerConfig,
         ctx: Arc<ExecutorContext>,
-        inbound: Inbound,
+        source: TrajectorySource,
         log: Option<Arc<JsonlWriter>>,
     ) -> Trainer {
         Trainer {
             cfg,
             ctx,
-            inbound: Some(inbound),
+            source: Some(source),
             log,
             runtime: None,
             state_buf: None,
@@ -103,29 +115,58 @@ impl Trainer {
         self.runtime.as_ref().expect("init() not called")
     }
 
-    /// Pull from the inbound channel until we can fill a microbatch (or EOF).
+    /// Pull from the trajectory source until we can fill a microbatch (or
+    /// EOF). For a Store source the store assembles the rows (sampling
+    /// strategy + staleness bound); here we only loop until enough arrive.
     fn fill_pending(&mut self) -> Result<()> {
         let need = self.runtime().config().train_batch;
-        let Some(inbound) = self.inbound.as_ref() else {
+        let Some(source) = self.source.as_ref() else {
             return Ok(());
         };
         while self.pending.len() < need && !self.eof {
-            match inbound.recv_timeout(Duration::from_millis(50)) {
-                Ok(Message::Scored(g)) => self.pending.extend(g),
-                Ok(Message::Trajectories(_)) => {
-                    return Err(crate::util::error::Error::Coordinator(
-                        "trainer received unscored trajectories".into(),
-                    ))
+            match source {
+                TrajectorySource::Channel(inbound) => {
+                    match inbound.recv_timeout(Duration::from_millis(50)) {
+                        Ok(Message::Scored(g)) => self.pending.extend(g),
+                        Ok(Message::Trajectories(_)) => {
+                            return Err(crate::util::error::Error::Coordinator(
+                                "trainer received unscored trajectories".into(),
+                            ))
+                        }
+                        Ok(Message::Eof) => self.eof = true,
+                        Err(_) => {
+                            if self.ctx.should_stop() {
+                                return Ok(());
+                            }
+                        }
+                    }
                 }
-                Ok(Message::Eof) => self.eof = true,
-                Err(_) => {
-                    if self.ctx.should_stop() {
-                        return Ok(());
+                TrajectorySource::Store(store) => {
+                    let want = need - self.pending.len();
+                    match store.sample(want, Duration::from_millis(50)) {
+                        None => self.eof = true, // closed and drained
+                        Some(rows) => {
+                            let starved = rows.is_empty();
+                            self.pending.extend(rows);
+                            if starved && self.ctx.should_stop() {
+                                return Ok(());
+                            }
+                        }
                     }
                 }
             }
         }
         Ok(())
+    }
+
+    /// Tear down the trajectory source (shutdown path): dropping a channel
+    /// unblocks senders with ChannelClosed; a store is closed explicitly so
+    /// Block-admission producers wake up too.
+    fn drop_source(&mut self) {
+        if let Some(TrajectorySource::Store(store)) = &self.source {
+            store.close();
+        }
+        self.source = None;
     }
 
     fn run_train_step(&mut self, rows: Vec<Trajectory>) -> Result<TrainStepRecord> {
@@ -162,6 +203,10 @@ impl Trainer {
         self.ctx
             .trainer_step
             .store(self.step, std::sync::atomic::Ordering::SeqCst);
+        // the store's staleness clock follows the optimizer step
+        if let Some(TrajectorySource::Store(store)) = &self.source {
+            store.advance_watermark(self.step);
+        }
 
         // fetch [step | metrics]
         let met_buf =
@@ -273,15 +318,15 @@ impl Executor for Trainer {
     fn step(&mut self) -> Result<StepOutcome> {
         if self.step >= self.cfg.max_steps {
             self.ctx.request_stop();
-            // unblock any upstream sender stuck on a full channel
-            self.inbound = None;
+            // unblock any upstream sender stuck on a full channel/store
+            self.drop_source();
             return Ok(StepOutcome::Finished);
         }
         self.fill_pending()?;
         let b = self.runtime().config().train_batch;
         if self.pending.is_empty() {
             return if self.eof || self.ctx.should_stop() {
-                self.inbound = None;
+                self.drop_source();
                 Ok(StepOutcome::Finished)
             } else {
                 Ok(StepOutcome::Idle)

@@ -1,0 +1,49 @@
+//! The streaming trajectory data plane: a staleness-aware rollout store
+//! between generation and training.
+//!
+//! LlamaRL (§4) bounds off-policy lag only *implicitly*, through bounded
+//! channel backpressure. This module makes the data plane explicit, the
+//! way AsyncFlow's TransferQueue and Laminar's relay buffer do: scored
+//! trajectories land in a sharded [`RolloutStore`] that owns them until
+//! the trainer samples a microbatch, and staleness becomes a first-class,
+//! measured, *enforced* quantity instead of a side effect of channel
+//! capacity.
+//!
+//! ```text
+//!   Generator workers ──GATHER──► Reward executor
+//!                                     │ push_group (admission policy)
+//!                                     ▼
+//!                          ┌─────────────────────┐   advance_watermark
+//!                          │     RolloutStore    │◄────────┐
+//!                          │  shard │ shard │ …  │         │
+//!                          └─────────────────────┘     Trainer(s)
+//!                                     │ sample (strategy)   ▲
+//!                                     └─────────────────────┘
+//! ```
+//!
+//! * [`store`] — the [`RolloutStore`]: sharded resident set, per-row
+//!   weight-version watermarks, capacity reserved by CAS (occupancy can
+//!   never exceed capacity), plus the [`PartialRollout`] resumption slot.
+//! * [`policy`] — pluggable [`AdmissionPolicy`] (block / drop-newest /
+//!   evict-oldest) and [`SamplingStrategy`] (FIFO / freshest-first /
+//!   staleness-weighted).
+//! * [`stats`] — [`DataPlaneStats`] counters and the [`DataPlaneSnapshot`]
+//!   (occupancy, drop/evict counts, sampled-lag histogram) surfaced
+//!   through [`crate::metrics`] and [`crate::coordinator::RunReport`].
+//! * [`driver`] — a synthetic threaded harness comparing channel vs store
+//!   transport with no PJRT backend (benches, examples, stress tests).
+//!
+//! The coordinator consumes this module through
+//! `Mode::AsyncBuffered` ([`crate::coordinator::run_training`]); the
+//! discrete-event analogue lives in
+//! [`crate::simulator::simulate_async_buffered`].
+
+pub mod driver;
+pub mod policy;
+pub mod stats;
+pub mod store;
+
+pub use driver::{run_driver, DriverConfig, DriverReport, Transport};
+pub use policy::{AdmissionPolicy, SamplingStrategy};
+pub use stats::{DataPlaneSnapshot, DataPlaneStats, LAG_BUCKETS};
+pub use store::{PartialRollout, RolloutStore, StoreConfig};

@@ -1,0 +1,110 @@
+//! Pluggable admission and sampling policies for the [`RolloutStore`]
+//! (AsyncFlow's TransferQueue and Laminar's relay buffer expose the same
+//! two knobs: what to keep under pressure, and what to hand the trainer
+//! next).
+//!
+//! [`RolloutStore`]: crate::dataplane::RolloutStore
+
+use crate::util::error::{Error, Result};
+
+/// What the store does when a scored group arrives.
+///
+/// Max-staleness dropping is orthogonal and always active when
+/// `StoreConfig::max_staleness` is set: rows whose off-policy lag already
+/// exceeds the bound are discarded at admission (and again at sampling
+/// time, since the watermark advances while rows sit in the store).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the producer until capacity frees up — channel-like
+    /// backpressure (FIFO admission).
+    Block,
+    /// Reject the incoming rows when full; the resident set is never
+    /// touched. Biases the store toward *older* data.
+    DropNewest,
+    /// Evict the oldest resident rows to make room — capacity-pressure
+    /// eviction. Producers never block; biases the store toward *fresh*
+    /// data.
+    EvictOldest,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> Result<AdmissionPolicy> {
+        match s {
+            "block" => Ok(AdmissionPolicy::Block),
+            "drop_newest" => Ok(AdmissionPolicy::DropNewest),
+            "evict_oldest" => Ok(AdmissionPolicy::EvictOldest),
+            other => Err(Error::Config(format!(
+                "admission must be block|drop_newest|evict_oldest, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::DropNewest => "drop_newest",
+            AdmissionPolicy::EvictOldest => "evict_oldest",
+        }
+    }
+}
+
+/// How the store assembles the trainer's next microbatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplingStrategy {
+    /// Oldest-admitted rows first — streaming FIFO, the direct-channel
+    /// behaviour.
+    Fifo,
+    /// Highest generator weight-version first; minimizes realized lag at
+    /// the cost of starving old rows (they age out via max-staleness).
+    FreshestFirst,
+    /// Weighted priority: a row with off-policy lag `l` is drawn with
+    /// weight `1 / (1 + l)` — fresh data is favored but stale rows still
+    /// flow, trading a little lag for sample diversity.
+    StalenessWeighted,
+}
+
+impl SamplingStrategy {
+    pub fn parse(s: &str) -> Result<SamplingStrategy> {
+        match s {
+            "fifo" => Ok(SamplingStrategy::Fifo),
+            "freshest" => Ok(SamplingStrategy::FreshestFirst),
+            "staleness_weighted" => Ok(SamplingStrategy::StalenessWeighted),
+            other => Err(Error::Config(format!(
+                "sampling must be fifo|freshest|staleness_weighted, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplingStrategy::Fifo => "fifo",
+            SamplingStrategy::FreshestFirst => "freshest",
+            SamplingStrategy::StalenessWeighted => "staleness_weighted",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips() {
+        for p in [
+            AdmissionPolicy::Block,
+            AdmissionPolicy::DropNewest,
+            AdmissionPolicy::EvictOldest,
+        ] {
+            assert_eq!(AdmissionPolicy::parse(p.name()).unwrap(), p);
+        }
+        for s in [
+            SamplingStrategy::Fifo,
+            SamplingStrategy::FreshestFirst,
+            SamplingStrategy::StalenessWeighted,
+        ] {
+            assert_eq!(SamplingStrategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(AdmissionPolicy::parse("bogus").is_err());
+        assert!(SamplingStrategy::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Data-plane telemetry: lock-free counters updated on the hot paths and a
+//! plain snapshot struct for reports ([`crate::metrics`] renders it).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Number of exact buckets in the sampled-lag histogram; lags >= this land
+/// in the overflow bucket (index `LAG_BUCKETS`).
+pub const LAG_BUCKETS: usize = 16;
+
+/// Live counters owned by the [`crate::dataplane::RolloutStore`]. All
+/// increments use relaxed atomics — telemetry must never serialize the
+/// data path.
+#[derive(Debug, Default)]
+pub struct DataPlaneStats {
+    /// rows accepted into the store
+    pub admitted: AtomicU64,
+    /// rows discarded because their lag exceeded max_staleness
+    pub dropped_stale: AtomicU64,
+    /// rows rejected at admission under DropNewest capacity pressure
+    pub dropped_capacity: AtomicU64,
+    /// resident rows evicted under EvictOldest capacity pressure
+    pub evicted: AtomicU64,
+    /// rows handed to the trainer
+    pub sampled: AtomicU64,
+    /// partial rollouts parked in the resumption slot
+    pub parked: AtomicU64,
+    /// partial rollouts taken back out of the resumption slot
+    pub resumed: AtomicU64,
+    /// time consumers spent waiting for rows, in nanoseconds
+    pub sample_wait_nanos: AtomicU64,
+    /// time producers spent blocked on admission (Block policy), nanoseconds
+    pub admit_wait_nanos: AtomicU64,
+    /// histogram of off-policy lag at sampling time; last bucket = overflow
+    pub lag_hist: [AtomicU64; LAG_BUCKETS + 1],
+    /// running sum of sampled lags (for the mean)
+    pub lag_sum: AtomicU64,
+    /// maximum sampled lag
+    pub lag_max: AtomicU64,
+    /// high-water mark of store occupancy, in rows
+    pub peak_occupancy: AtomicUsize,
+}
+
+impl DataPlaneStats {
+    pub fn record_sampled_lag(&self, lag: u64) {
+        let bucket = (lag as usize).min(LAG_BUCKETS);
+        self.lag_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        self.lag_sum.fetch_add(lag, Ordering::Relaxed);
+        self.lag_max.fetch_max(lag, Ordering::Relaxed);
+        self.sampled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_occupancy(&self, occupancy: usize) {
+        self.peak_occupancy.fetch_max(occupancy, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of the counters, plus derived quantities. This is
+/// what crosses into [`crate::coordinator::RunReport`] and the benches.
+#[derive(Debug, Clone, Default)]
+pub struct DataPlaneSnapshot {
+    pub occupancy: usize,
+    pub peak_occupancy: usize,
+    pub watermark: u64,
+    pub admitted: u64,
+    pub dropped_stale: u64,
+    pub dropped_capacity: u64,
+    pub evicted: u64,
+    pub sampled: u64,
+    pub parked: u64,
+    pub resumed: u64,
+    pub sample_wait_secs: f64,
+    pub admit_wait_secs: f64,
+    /// sampled-lag histogram; index = lag in trainer steps, last = overflow
+    pub lag_hist: Vec<u64>,
+    pub mean_sampled_lag: f64,
+    pub max_sampled_lag: u64,
+}
+
+impl DataPlaneSnapshot {
+    pub(crate) fn from_stats(
+        stats: &DataPlaneStats,
+        occupancy: usize,
+        watermark: u64,
+    ) -> DataPlaneSnapshot {
+        let sampled = stats.sampled.load(Ordering::Relaxed);
+        let lag_sum = stats.lag_sum.load(Ordering::Relaxed);
+        DataPlaneSnapshot {
+            occupancy,
+            peak_occupancy: stats.peak_occupancy.load(Ordering::Relaxed),
+            watermark,
+            admitted: stats.admitted.load(Ordering::Relaxed),
+            dropped_stale: stats.dropped_stale.load(Ordering::Relaxed),
+            dropped_capacity: stats.dropped_capacity.load(Ordering::Relaxed),
+            evicted: stats.evicted.load(Ordering::Relaxed),
+            sampled,
+            parked: stats.parked.load(Ordering::Relaxed),
+            resumed: stats.resumed.load(Ordering::Relaxed),
+            sample_wait_secs: stats.sample_wait_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            admit_wait_secs: stats.admit_wait_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            lag_hist: stats
+                .lag_hist
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            mean_sampled_lag: if sampled > 0 {
+                lag_sum as f64 / sampled as f64
+            } else {
+                0.0
+            },
+            max_sampled_lag: stats.lag_max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One-line rendering for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "store: occ {}/{} peak, admitted {}, sampled {}, dropped {} stale + {} capacity, \
+             evicted {}, lag mean {:.2} max {}",
+            self.occupancy,
+            self.peak_occupancy,
+            self.admitted,
+            self.sampled,
+            self.dropped_stale,
+            self.dropped_capacity,
+            self.evicted,
+            self.mean_sampled_lag,
+            self.max_sampled_lag,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lag_histogram_buckets_and_overflow() {
+        let s = DataPlaneStats::default();
+        s.record_sampled_lag(0);
+        s.record_sampled_lag(3);
+        s.record_sampled_lag(3);
+        s.record_sampled_lag(LAG_BUCKETS as u64 + 40); // overflow
+        let snap = DataPlaneSnapshot::from_stats(&s, 7, 9);
+        assert_eq!(snap.lag_hist[0], 1);
+        assert_eq!(snap.lag_hist[3], 2);
+        assert_eq!(snap.lag_hist[LAG_BUCKETS], 1);
+        assert_eq!(snap.sampled, 4);
+        assert_eq!(snap.max_sampled_lag, LAG_BUCKETS as u64 + 40);
+        assert_eq!(snap.occupancy, 7);
+        assert_eq!(snap.watermark, 9);
+        let mean = (0 + 3 + 3 + LAG_BUCKETS as u64 + 40) as f64 / 4.0;
+        assert!((snap.mean_sampled_lag - mean).abs() < 1e-12);
+    }
+}

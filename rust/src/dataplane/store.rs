@@ -1,0 +1,739 @@
+//! The sharded, staleness-aware rollout store.
+//!
+//! A [`RolloutStore`] owns scored trajectories between the reward executor
+//! and the trainer(s). Unlike a bounded channel — where capacity is the
+//! *only* lever and off-policy lag is a side effect of backpressure — the
+//! store makes staleness first-class:
+//!
+//! * every resident row carries its generator weight-version; the trainer
+//!   advances a **watermark** (its optimizer step) and a row's off-policy
+//!   lag is `watermark - gen_version`, recomputed as the watermark moves;
+//! * admission/eviction policy and sampling strategy are pluggable
+//!   ([`AdmissionPolicy`], [`SamplingStrategy`]);
+//! * rows whose lag exceeds `max_staleness` are discarded at admission and
+//!   again at sampling time, so the trainer **never** consumes a row above
+//!   the bound (property-tested in `tests/prop_dataplane.rs`);
+//! * a resumption slot parks partial rollouts (prompt id -> in-flight
+//!   tokens) so draining generators abandon no work.
+//!
+//! Concurrency: rows live in `shards` independently-locked shards keyed by
+//! `group_id`, so producers contend only per shard. Sampling and eviction
+//! need a global view and take the shard locks in ascending index order
+//! (the single lock-ordering rule of this module — it is what makes the
+//! mixed push/sample/evict paths deadlock-free). Occupancy is reserved
+//! with a CAS *before* any row is inserted, which is what makes
+//! "occupancy never exceeds capacity" a hard invariant rather than a race.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::data::PromptTask;
+use crate::dataplane::policy::{AdmissionPolicy, SamplingStrategy};
+use crate::dataplane::stats::{DataPlaneSnapshot, DataPlaneStats};
+use crate::rl::Trajectory;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// maximum resident rows across all shards (hard bound)
+    pub capacity: usize,
+    /// number of independently-locked shards
+    pub shards: usize,
+    /// drop rows whose off-policy lag exceeds this many trainer steps
+    /// (None = unbounded)
+    pub max_staleness: Option<u64>,
+    pub admission: AdmissionPolicy,
+    pub sampling: SamplingStrategy,
+    /// seed for staleness-weighted sampling
+    pub seed: u64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            capacity: 128,
+            shards: 4,
+            max_staleness: Some(8),
+            admission: AdmissionPolicy::EvictOldest,
+            sampling: SamplingStrategy::Fifo,
+            seed: 0,
+        }
+    }
+}
+
+/// An unfinished generation parked in the store's resumption slot: the
+/// prompt plus everything sampled so far, so any generator can pick the
+/// sequence back up instead of re-decoding from scratch (the data-plane
+/// form of the paper's §4.2 partial rollouts).
+#[derive(Debug, Clone)]
+pub struct PartialRollout {
+    pub task: PromptTask,
+    /// prompt + generated-so-far token ids
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// behaviour log-probs for the generated suffix
+    pub logps: Vec<f32>,
+    /// generate_chunk calls spent so far
+    pub chunks: u32,
+    /// weight version the suffix was sampled under
+    pub gen_version: u64,
+}
+
+/// One resident row: the trajectory plus its global admission sequence
+/// number (FIFO order across shards).
+struct Entry {
+    seq: u64,
+    traj: Trajectory,
+}
+
+#[derive(Default)]
+struct Shard {
+    rows: VecDeque<Entry>,
+}
+
+pub struct RolloutStore {
+    cfg: StoreConfig,
+    shards: Vec<Mutex<Shard>>,
+    /// resident rows; reserved via CAS before insertion
+    occupancy: AtomicUsize,
+    /// the trainer's clock: its latest optimizer step
+    watermark: AtomicU64,
+    /// global admission counter
+    seq: AtomicU64,
+    closed: AtomicBool,
+    /// producers wait here when Block admission hits capacity; consumers
+    /// wait here when the store is empty
+    gate: Mutex<()>,
+    cv: Condvar,
+    partial: Mutex<HashMap<(u64, usize), PartialRollout>>,
+    rng: Mutex<Rng>,
+    pub stats: DataPlaneStats,
+}
+
+impl RolloutStore {
+    pub fn new(cfg: StoreConfig) -> RolloutStore {
+        assert!(cfg.capacity > 0, "store capacity must be > 0");
+        let n = cfg.shards.max(1);
+        let seed = cfg.seed;
+        RolloutStore {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            occupancy: AtomicUsize::new(0),
+            watermark: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+            partial: Mutex::new(HashMap::new()),
+            rng: Mutex::new(Rng::new(seed ^ 0xDA7A_91A5)),
+            cfg,
+            stats: DataPlaneStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.occupancy.load(Ordering::Acquire)
+    }
+
+    pub fn watermark(&self) -> u64 {
+        self.watermark.load(Ordering::Acquire)
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Advance the trainer clock. Rows already resident age accordingly;
+    /// they are purged lazily at the next admission/sampling touch.
+    pub fn advance_watermark(&self, trainer_step: u64) {
+        self.watermark.fetch_max(trainer_step, Ordering::AcqRel);
+    }
+
+    /// Close the store: producers error out, consumers drain what is left
+    /// and then observe EOF.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    fn lag_of(&self, gen_version: u64) -> u64 {
+        self.watermark().saturating_sub(gen_version)
+    }
+
+    fn is_stale(&self, gen_version: u64) -> bool {
+        match self.cfg.max_staleness {
+            Some(bound) => self.lag_of(gen_version) > bound,
+            None => false,
+        }
+    }
+
+    /// CAS-reserve `n` occupancy slots. Never overshoots capacity.
+    fn try_reserve(&self, n: usize) -> bool {
+        self.occupancy
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |occ| {
+                if occ + n <= self.cfg.capacity {
+                    Some(occ + n)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    fn release(&self, n: usize) {
+        self.occupancy.fetch_sub(n, Ordering::AcqRel);
+    }
+
+    fn shard_for(&self, group_id: u64) -> usize {
+        (group_id % self.shards.len() as u64) as usize
+    }
+
+    /// Lock every shard in ascending index order (the global lock-ordering
+    /// rule; see module docs).
+    fn lock_all(&self) -> Vec<MutexGuard<'_, Shard>> {
+        self.shards.iter().map(|s| s.lock().unwrap()).collect()
+    }
+
+    /// Evict up to `want` globally-oldest rows. Returns how many went.
+    fn evict_oldest(&self, want: usize) -> usize {
+        let mut guards = self.lock_all();
+        let mut evicted = 0;
+        while evicted < want {
+            // find the shard whose front entry is globally oldest
+            let oldest = guards
+                .iter()
+                .enumerate()
+                .filter_map(|(i, g)| g.rows.front().map(|e| (e.seq, i)))
+                .min();
+            match oldest {
+                Some((_, i)) => {
+                    guards[i].rows.pop_front();
+                    evicted += 1;
+                }
+                None => break, // store empty
+            }
+        }
+        if evicted > 0 {
+            self.release(evicted);
+            self.stats.evicted.fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+        evicted
+    }
+
+    /// Drop resident rows that aged past max_staleness. Caller holds all
+    /// shard guards. Returns how many were purged.
+    fn purge_stale_locked(&self, guards: &mut [MutexGuard<'_, Shard>]) -> usize {
+        let Some(bound) = self.cfg.max_staleness else {
+            return 0;
+        };
+        let watermark = self.watermark();
+        let mut purged = 0;
+        for g in guards.iter_mut() {
+            let before = g.rows.len();
+            g.rows
+                .retain(|e| watermark.saturating_sub(e.traj.gen_version) <= bound);
+            purged += before - g.rows.len();
+        }
+        if purged > 0 {
+            self.release(purged);
+            self.stats
+                .dropped_stale
+                .fetch_add(purged as u64, Ordering::Relaxed);
+        }
+        purged
+    }
+
+    /// Admit a scored group. Depending on the admission policy this may
+    /// block (Block), silently count a drop (DropNewest), or evict old
+    /// resident rows (EvictOldest). Errors only when the store is closed.
+    pub fn push_group(&self, group: Vec<Trajectory>) -> Result<()> {
+        if self.is_closed() {
+            return Err(Error::ChannelClosed("rollout store".into()));
+        }
+        // max-staleness drop at admission
+        let mut rows: Vec<Trajectory> = Vec::with_capacity(group.len());
+        let mut stale = 0u64;
+        for t in group {
+            if self.is_stale(t.gen_version) {
+                stale += 1;
+            } else {
+                rows.push(t);
+            }
+        }
+        if stale > 0 {
+            self.stats.dropped_stale.fetch_add(stale, Ordering::Relaxed);
+        }
+        // a group larger than the whole store can only ever keep its
+        // newest `capacity` rows
+        if rows.len() > self.cfg.capacity {
+            let excess = rows.len() - self.cfg.capacity;
+            rows.drain(..excess);
+            self.stats
+                .dropped_capacity
+                .fetch_add(excess as u64, Ordering::Relaxed);
+        }
+        if rows.is_empty() {
+            return Ok(());
+        }
+        let n = rows.len();
+
+        match self.cfg.admission {
+            AdmissionPolicy::Block => {
+                let t0 = Instant::now();
+                let mut waited = false;
+                while !self.try_reserve(n) {
+                    if self.is_closed() {
+                        return Err(Error::ChannelClosed("rollout store".into()));
+                    }
+                    waited = true;
+                    let guard = self.gate.lock().unwrap();
+                    // re-check under the gate so a concurrent sample's
+                    // notify cannot be lost between reserve and wait
+                    if self.occupancy() + n > self.cfg.capacity && !self.is_closed() {
+                        let _ = self
+                            .cv
+                            .wait_timeout(guard, Duration::from_millis(50))
+                            .unwrap();
+                    }
+                }
+                if waited {
+                    self.stats.admit_wait_nanos.fetch_add(
+                        u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX),
+                        Ordering::Relaxed,
+                    );
+                }
+            }
+            AdmissionPolicy::DropNewest => {
+                if !self.try_reserve(n) {
+                    self.stats
+                        .dropped_capacity
+                        .fetch_add(n as u64, Ordering::Relaxed);
+                    return Ok(());
+                }
+            }
+            AdmissionPolicy::EvictOldest => {
+                while !self.try_reserve(n) {
+                    if self.evict_oldest(n) == 0 {
+                        // nothing evictable (a racing producer reserved the
+                        // space first): yield and retry
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+
+        for t in rows {
+            let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+            let shard = self.shard_for(t.group_id);
+            self.shards[shard]
+                .lock()
+                .unwrap()
+                .rows
+                .push_back(Entry { seq, traj: t });
+        }
+        self.stats.admitted.fetch_add(n as u64, Ordering::Relaxed);
+        self.stats.note_occupancy(self.occupancy());
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Take up to `max_rows` entries per the sampling strategy, in one
+    /// pass over the resident set. Caller holds all shard guards; keeping
+    /// batch assembly O(occupancy) total (not per row) bounds how long
+    /// producers wait on the shard locks.
+    fn take_batch_locked(
+        &self,
+        guards: &mut [MutexGuard<'_, Shard>],
+        max_rows: usize,
+    ) -> Vec<Entry> {
+        match self.cfg.sampling {
+            SamplingStrategy::Fifo => {
+                // k-way merge over the shard fronts; pops are O(1)
+                let mut out = Vec::new();
+                while out.len() < max_rows {
+                    let oldest = guards
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, g)| g.rows.front().map(|e| (e.seq, i)))
+                        .min();
+                    match oldest {
+                        Some((_, i)) => out.push(guards[i].rows.pop_front().unwrap()),
+                        None => break,
+                    }
+                }
+                out
+            }
+            SamplingStrategy::FreshestFirst => {
+                // single scan for the top keys (version desc, admission
+                // order among ties), then a single extraction pass
+                let mut keys: Vec<(u64, u64)> = guards
+                    .iter()
+                    .flat_map(|g| g.rows.iter().map(|e| (e.traj.gen_version, e.seq)))
+                    .collect();
+                keys.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+                keys.truncate(max_rows);
+                let mut picked =
+                    Self::extract_by_seq(guards, keys.iter().map(|k| k.1).collect());
+                picked.sort_by(|a, b| {
+                    b.traj
+                        .gen_version
+                        .cmp(&a.traj.gen_version)
+                        .then(a.seq.cmp(&b.seq))
+                });
+                picked
+            }
+            SamplingStrategy::StalenessWeighted => {
+                // Efraimidis–Spirakis weighted sampling without
+                // replacement: per-row key u^(1/w); the largest max_rows
+                // keys are exactly a w-weighted draw, in one scan
+                let watermark = self.watermark();
+                let mut rng = self.rng.lock().unwrap();
+                let mut keys: Vec<(f64, u64)> = guards
+                    .iter()
+                    .flat_map(|g| g.rows.iter())
+                    .map(|e| {
+                        let lag = watermark.saturating_sub(e.traj.gen_version);
+                        let w = 1.0 / (1.0 + lag as f64);
+                        (rng.f64().max(1e-12).powf(1.0 / w), e.seq)
+                    })
+                    .collect();
+                drop(rng);
+                keys.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                keys.truncate(max_rows);
+                Self::extract_by_seq(guards, keys.iter().map(|k| k.1).collect())
+            }
+        }
+    }
+
+    /// Remove and return the entries with the given admission seqs (one
+    /// drain pass per shard; seqs are unique by construction).
+    fn extract_by_seq(
+        guards: &mut [MutexGuard<'_, Shard>],
+        seqs: std::collections::HashSet<u64>,
+    ) -> Vec<Entry> {
+        let mut out = Vec::with_capacity(seqs.len());
+        for g in guards.iter_mut() {
+            if out.len() == seqs.len() {
+                break;
+            }
+            let mut kept = VecDeque::with_capacity(g.rows.len());
+            for e in g.rows.drain(..) {
+                if seqs.contains(&e.seq) {
+                    out.push(e);
+                } else {
+                    kept.push_back(e);
+                }
+            }
+            g.rows = kept;
+        }
+        out
+    }
+
+    /// Assemble the trainer's next microbatch: up to `max_rows` rows chosen
+    /// by the sampling strategy, after purging rows that aged past the
+    /// staleness bound (so a returned row's lag NEVER exceeds the bound).
+    ///
+    /// Returns `None` once the store is closed *and* drained (EOF);
+    /// `Some(vec![])` when `timeout` elapsed with nothing available.
+    pub fn sample(&self, max_rows: usize, timeout: Duration) -> Option<Vec<Trajectory>> {
+        let deadline = Instant::now() + timeout;
+        let t0 = Instant::now();
+        // consumer-side starvation accounting covers every exit path —
+        // timeouts and EOF included — so buffered-mode "trainer starved"
+        // numbers stay comparable with channel recv accounting
+        let charge_wait = || {
+            self.stats.sample_wait_nanos.fetch_add(
+                u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX),
+                Ordering::Relaxed,
+            );
+        };
+        loop {
+            let mut out = Vec::new();
+            {
+                let mut guards = self.lock_all();
+                self.purge_stale_locked(&mut guards);
+                for e in self.take_batch_locked(&mut guards, max_rows) {
+                    self.stats
+                        .record_sampled_lag(self.lag_of(e.traj.gen_version));
+                    out.push(e.traj);
+                }
+            }
+            if !out.is_empty() {
+                self.release(out.len());
+                charge_wait();
+                self.cv.notify_all(); // space freed for Block producers
+                return Some(out);
+            }
+            if self.is_closed() {
+                charge_wait();
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                charge_wait();
+                return Some(Vec::new());
+            }
+            let guard = self.gate.lock().unwrap();
+            if self.occupancy() == 0 && !self.is_closed() {
+                let _ = self
+                    .cv
+                    .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
+                    .unwrap();
+            }
+        }
+    }
+
+    // -- resumption slot ----------------------------------------------------
+
+    /// Park an unfinished rollout, keyed by (prompt group, replica). A
+    /// later park for the same key replaces the earlier one (the newer
+    /// suffix strictly supersedes it).
+    pub fn park_partial(&self, p: PartialRollout) {
+        let key = (p.task.group_id, p.task.replica);
+        self.partial.lock().unwrap().insert(key, p);
+        self.stats.parked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Take any parked rollout (generators resume whatever is available).
+    pub fn take_partial_any(&self) -> Option<PartialRollout> {
+        let mut map = self.partial.lock().unwrap();
+        let key = map.keys().next().copied()?;
+        let p = map.remove(&key);
+        if p.is_some() {
+            self.stats.resumed.fetch_add(1, Ordering::Relaxed);
+        }
+        p
+    }
+
+    /// Take the parked rollout for a specific prompt, if present.
+    pub fn take_partial(&self, group_id: u64, replica: usize) -> Option<PartialRollout> {
+        let p = self.partial.lock().unwrap().remove(&(group_id, replica));
+        if p.is_some() {
+            self.stats.resumed.fetch_add(1, Ordering::Relaxed);
+        }
+        p
+    }
+
+    pub fn partial_count(&self) -> usize {
+        self.partial.lock().unwrap().len()
+    }
+
+    pub fn snapshot(&self) -> DataPlaneSnapshot {
+        DataPlaneSnapshot::from_stats(&self.stats, self.occupancy(), self.watermark())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Difficulty, Problem};
+    use crate::rl::FinishReason;
+    use std::sync::Arc;
+
+    fn traj(group_id: u64, gen_version: u64) -> Trajectory {
+        Trajectory {
+            group_id,
+            replica: 0,
+            n_replicas: 1,
+            problem: Problem {
+                prompt: "1+1=".into(),
+                answer: "2".into(),
+                difficulty: Difficulty::Add1,
+            },
+            prompt_tokens: vec![1],
+            response_tokens: vec![2],
+            behavior_logp: vec![-0.5],
+            gen_version,
+            chunks: 1,
+            finish: FinishReason::Eos,
+            reward: 1.0,
+            advantage: 0.5,
+        }
+    }
+
+    fn cfg(capacity: usize) -> StoreConfig {
+        StoreConfig {
+            capacity,
+            shards: 3,
+            max_staleness: None,
+            admission: AdmissionPolicy::EvictOldest,
+            sampling: SamplingStrategy::Fifo,
+            seed: 1,
+        }
+    }
+
+    fn drain(s: &RolloutStore, n: usize) -> Vec<Trajectory> {
+        s.sample(n, Duration::from_millis(10)).unwrap()
+    }
+
+    #[test]
+    fn fifo_sampling_preserves_admission_order_across_shards() {
+        let s = RolloutStore::new(cfg(16));
+        for i in 0..8u64 {
+            s.push_group(vec![traj(i, 0)]).unwrap(); // spread over shards
+        }
+        let rows = drain(&s, 8);
+        let ids: Vec<u64> = rows.iter().map(|t| t.group_id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        assert_eq!(s.occupancy(), 0);
+    }
+
+    #[test]
+    fn evict_oldest_keeps_occupancy_at_capacity_and_freshest_rows() {
+        let s = RolloutStore::new(cfg(4));
+        for i in 0..10u64 {
+            s.push_group(vec![traj(i, i)]).unwrap();
+            assert!(s.occupancy() <= 4, "occupancy exceeded capacity");
+        }
+        assert_eq!(s.occupancy(), 4);
+        assert_eq!(s.snapshot().evicted, 6);
+        let ids: Vec<u64> = drain(&s, 8).iter().map(|t| t.group_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "oldest rows were evicted");
+    }
+
+    #[test]
+    fn drop_newest_rejects_overflow() {
+        let mut c = cfg(3);
+        c.admission = AdmissionPolicy::DropNewest;
+        let s = RolloutStore::new(c);
+        for i in 0..5u64 {
+            s.push_group(vec![traj(i, 0)]).unwrap();
+        }
+        assert_eq!(s.occupancy(), 3);
+        assert_eq!(s.snapshot().dropped_capacity, 2);
+        let ids: Vec<u64> = drain(&s, 5).iter().map(|t| t.group_id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "resident rows untouched");
+    }
+
+    #[test]
+    fn block_admission_backpressures_until_sampled() {
+        let mut c = cfg(2);
+        c.admission = AdmissionPolicy::Block;
+        let s = Arc::new(RolloutStore::new(c));
+        s.push_group(vec![traj(0, 0), traj(1, 0)]).unwrap();
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            s2.push_group(vec![traj(2, 0)]).unwrap();
+            s2.snapshot().admit_wait_secs
+        });
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(s.occupancy(), 2, "producer must be blocked");
+        let got = drain(&s, 1);
+        assert_eq!(got.len(), 1);
+        let waited = t.join().unwrap();
+        assert!(waited > 0.03, "blocked time accounted, got {waited}");
+        assert_eq!(s.occupancy(), 2);
+    }
+
+    #[test]
+    fn max_staleness_drops_at_admission_and_in_place() {
+        let mut c = cfg(16);
+        c.max_staleness = Some(2);
+        let s = RolloutStore::new(c);
+        s.advance_watermark(10);
+        // lag 10-7=3 > 2: dropped at the door
+        s.push_group(vec![traj(0, 7)]).unwrap();
+        assert_eq!(s.occupancy(), 0);
+        assert_eq!(s.snapshot().dropped_stale, 1);
+        // lag 1: admitted...
+        s.push_group(vec![traj(1, 9)]).unwrap();
+        assert_eq!(s.occupancy(), 1);
+        // ...then ages out as the watermark advances
+        s.advance_watermark(12);
+        let got = s.sample(4, Duration::from_millis(5)).unwrap();
+        assert!(got.is_empty(), "aged row must not reach the trainer");
+        assert_eq!(s.occupancy(), 0);
+        assert_eq!(s.snapshot().dropped_stale, 2);
+    }
+
+    #[test]
+    fn freshest_first_picks_highest_version() {
+        let mut c = cfg(16);
+        c.sampling = SamplingStrategy::FreshestFirst;
+        let s = RolloutStore::new(c);
+        for (gid, v) in [(0u64, 3u64), (1, 9), (2, 5), (3, 9)] {
+            s.push_group(vec![traj(gid, v)]).unwrap();
+        }
+        let rows = drain(&s, 4);
+        let versions: Vec<u64> = rows.iter().map(|t| t.gen_version).collect();
+        assert_eq!(versions, vec![9, 9, 5, 3]);
+        // ties broken by admission order (seq): gid 1 admitted before 3
+        assert_eq!(rows[0].group_id, 1);
+        assert_eq!(rows[1].group_id, 3);
+    }
+
+    #[test]
+    fn staleness_weighted_still_returns_everything() {
+        let mut c = cfg(16);
+        c.sampling = SamplingStrategy::StalenessWeighted;
+        let s = RolloutStore::new(c);
+        s.advance_watermark(4);
+        for (gid, v) in [(0u64, 0u64), (1, 2), (2, 4)] {
+            s.push_group(vec![traj(gid, v)]).unwrap();
+        }
+        let mut ids: Vec<u64> = drain(&s, 3).iter().map(|t| t.group_id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(s.occupancy(), 0);
+    }
+
+    #[test]
+    fn close_drains_then_signals_eof() {
+        let s = RolloutStore::new(cfg(8));
+        s.push_group(vec![traj(0, 0)]).unwrap();
+        s.close();
+        assert!(s.push_group(vec![traj(1, 0)]).is_err());
+        let got = s.sample(4, Duration::from_millis(5)).unwrap();
+        assert_eq!(got.len(), 1, "resident rows drain after close");
+        assert!(s.sample(4, Duration::from_millis(5)).is_none(), "then EOF");
+    }
+
+    #[test]
+    fn partial_rollouts_park_and_resume() {
+        let s = RolloutStore::new(cfg(8));
+        let p = PartialRollout {
+            task: PromptTask {
+                group_id: 7,
+                replica: 2,
+                n_replicas: 4,
+                problem: Problem {
+                    prompt: "2+2=".into(),
+                    answer: "4".into(),
+                    difficulty: Difficulty::Add1,
+                },
+                prompt_tokens: vec![1, 5, 6],
+            },
+            tokens: vec![1, 5, 6, 9],
+            prompt_len: 3,
+            logps: vec![-0.25],
+            chunks: 2,
+            gen_version: 3,
+        };
+        s.park_partial(p.clone());
+        assert_eq!(s.partial_count(), 1);
+        assert!(s.take_partial(7, 0).is_none());
+        let back = s.take_partial(7, 2).unwrap();
+        assert_eq!(back.tokens, p.tokens);
+        assert_eq!(back.chunks, 2);
+        assert_eq!(s.partial_count(), 0);
+        s.park_partial(p);
+        assert!(s.take_partial_any().is_some());
+        let snap = s.snapshot();
+        assert_eq!((snap.parked, snap.resumed), (2, 2));
+    }
+
+    #[test]
+    fn oversized_group_keeps_only_newest_capacity_rows() {
+        let s = RolloutStore::new(cfg(3));
+        s.push_group((0..7u64).map(|i| traj(i, i)).collect()).unwrap();
+        assert_eq!(s.occupancy(), 3);
+        let ids: Vec<u64> = drain(&s, 4).iter().map(|t| t.group_id).collect();
+        assert_eq!(ids, vec![4, 5, 6]);
+    }
+}

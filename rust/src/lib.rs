@@ -22,12 +22,14 @@
 //! | substrates | [`util`] (json / cli / rng / stats / prop / bench — the offline vendor set has no serde/clap/rand/proptest/criterion) |
 //! | runtime | [`runtime`] (PJRT artifact loading & execution), [`model`] (flat params, tokenizer, checkpoints, quantization) |
 //! | RL | [`data`] (synthetic verifiable-reward tasks), [`rl`] (advantages, trajectories, AIPO config) |
-//! | system | [`coordinator`] (executors, channels, controller, sync/async pipelines), [`ddma`] |
+//! | data plane | [`dataplane`] (staleness-aware rollout store: admission/eviction policies, sampling strategies, partial-rollout resumption, lag telemetry) |
+//! | system | [`coordinator`] (executors, channels, controller, sync/async/buffered pipelines), [`ddma`] |
 //! | evaluation | [`simulator`] (memory/cost models, Theorem 7.5 optimizer, discrete-event timelines), [`metrics`] |
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dataplane;
 pub mod ddma;
 pub mod metrics;
 pub mod model;

@@ -1,16 +1,20 @@
 //! `llamarl` — CLI launcher for the LlamaRL reproduction.
 //!
 //! Subcommands:
-//!   train     run RL training (sync baseline or async LlamaRL pipeline)
+//!   train     run RL training (sync baseline, async LlamaRL pipeline, or
+//!             the buffered data-plane pipeline)
 //!   simulate  cluster simulator: paper-scale step-time table (Table 3)
 //!   ddma      weight-sync comparison (Table 4)
 //!   timeline  discrete-event bubble analysis (Figure 2)
+//!   dataplane synthetic channel-vs-store data-plane comparison (no
+//!             artifacts needed)
 //!   info      inspect an artifact bundle
 //!
 //! Examples:
 //!   llamarl train --preset nano --mode async --steps 5
-//!   llamarl train --preset e2e --mode sync --steps 50
+//!   llamarl train --preset nano --mode async_buffered --max-staleness 4
 //!   llamarl simulate
+//!   llamarl dataplane --steps 60
 //!   llamarl info --artifacts artifacts/nano
 
 use llamarl::config;
@@ -58,6 +62,7 @@ fn run(args: &Args) -> Result<()> {
         Some("simulate") => cmd_simulate(),
         Some("ddma") => cmd_ddma(),
         Some("timeline") => cmd_timeline(args),
+        Some("dataplane") => cmd_dataplane(args),
         Some("info") => cmd_info(args),
         _ => {
             print_help();
@@ -72,15 +77,21 @@ fn print_help() {
 
 USAGE: llamarl <subcommand> [flags]
 
-  train     --preset nano|small|e2e  --mode sync|async  --steps N
-            [--config file.json] [--workers N] [--rho X] [--lr X]
+  train     --preset nano|small|e2e  --mode sync|async|async_buffered
+            --steps N [--config file.json] [--workers N] [--rho X] [--lr X]
             [--quantize-generator] [--eval-every K] [--out DIR]
             [--init-checkpoint DIR]
+            buffered data plane: [--store-capacity N] [--store-shards N]
+            [--max-staleness K (0=unbounded)]
+            [--admission block|drop_newest|evict_oldest]
+            [--sampling fifo|freshest|staleness_weighted]
   pretrain  --artifacts DIR --steps N --lr X --out DIR
             supervised warm-up producing the RL init checkpoint
   simulate  reproduce Table 3 from the calibrated cluster cost model
   ddma      reproduce Table 4 (DDMA vs parameter-server weight sync)
   timeline  [--sigma X] discrete-event bubble analysis (Figure 2)
+  dataplane [--steps N] [--max-staleness K] synthetic channel-vs-store
+            comparison on real threads (no artifacts needed)
   info      --artifacts DIR  inspect an artifact bundle"
     );
 }
@@ -205,6 +216,61 @@ fn cmd_timeline(args: &Args) -> Result<()> {
     ]);
     t.print();
     println!("\nasync speedup: {:.2}x", s.total_secs / a.total_secs);
+    Ok(())
+}
+
+fn cmd_dataplane(args: &Args) -> Result<()> {
+    use llamarl::dataplane::{
+        run_driver, AdmissionPolicy, DriverConfig, SamplingStrategy, StoreConfig, Transport,
+    };
+    let steps = args.u64_or("steps", 40)?;
+    let bound = args.u64_or("max-staleness", 4)?;
+    let base = DriverConfig {
+        train_steps: steps,
+        seed: args.u64_or("seed", 0)?,
+        ..DriverConfig::default()
+    };
+    println!("Synthetic data-plane comparison ({steps} train steps, staleness bound {bound})\n");
+    let mut t = Table::new(&["transport", "rows/s", "mean lag", "max lag", "dropped", "evicted"]);
+    let arms: Vec<Transport> = vec![
+        Transport::Channel { capacity: 4 },
+        Transport::Store(StoreConfig {
+            capacity: 64,
+            shards: 4,
+            max_staleness: if bound == 0 { None } else { Some(bound) },
+            admission: AdmissionPolicy::EvictOldest,
+            sampling: SamplingStrategy::Fifo,
+            seed: 0,
+        }),
+        Transport::Store(StoreConfig {
+            capacity: 64,
+            shards: 4,
+            max_staleness: if bound == 0 { None } else { Some(bound) },
+            admission: AdmissionPolicy::EvictOldest,
+            sampling: SamplingStrategy::FreshestFirst,
+            seed: 0,
+        }),
+    ];
+    for transport in arms {
+        let r = run_driver(&DriverConfig {
+            transport,
+            ..base.clone()
+        });
+        let (dropped, evicted) = r
+            .dataplane
+            .as_ref()
+            .map(|d| (d.dropped_stale + d.dropped_capacity, d.evicted))
+            .unwrap_or((0, 0));
+        t.row(vec![
+            r.transport.clone(),
+            format!("{:.0}", r.rows_per_sec),
+            format!("{:.2}", r.mean_lag),
+            r.max_lag.to_string(),
+            dropped.to_string(),
+            evicted.to_string(),
+        ]);
+    }
+    t.print();
     Ok(())
 }
 

@@ -29,6 +29,31 @@ pub fn print_report(r: &RunReport) {
         "backpressure: generators blocked {:.2}s sending, trainer starved {:.2}s receiving",
         r.gen_send_blocked_secs, r.trainer_recv_blocked_secs
     );
+    if let Some(dp) = &r.dataplane {
+        println!("{}", dp.summary());
+        let hist: Vec<String> = dp
+            .lag_hist
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| **n > 0)
+            .map(|(lag, n)| {
+                if lag + 1 == dp.lag_hist.len() {
+                    format!("{lag}+:{n}")
+                } else {
+                    format!("{lag}:{n}")
+                }
+            })
+            .collect();
+        if !hist.is_empty() {
+            println!("sampled-lag histogram (lag:count): {}", hist.join(" "));
+        }
+        if dp.parked + dp.resumed > 0 {
+            println!(
+                "partial rollouts: {} parked, {} resumed",
+                dp.parked, dp.resumed
+            );
+        }
+    }
     if !r.evals.is_empty() {
         let mut t = Table::new(&["suite", "weights_version", "accuracy", "n"]);
         for e in &r.evals {
@@ -71,6 +96,37 @@ pub fn report_json(r: &RunReport) -> Value {
         (
             "trainer_recv_blocked_secs",
             Value::num(r.trainer_recv_blocked_secs),
+        ),
+        (
+            "dataplane",
+            match &r.dataplane {
+                None => Value::Null,
+                Some(dp) => Value::object(vec![
+                    ("occupancy", Value::num(dp.occupancy as f64)),
+                    ("peak_occupancy", Value::num(dp.peak_occupancy as f64)),
+                    ("watermark", Value::num(dp.watermark as f64)),
+                    ("admitted", Value::num(dp.admitted as f64)),
+                    ("dropped_stale", Value::num(dp.dropped_stale as f64)),
+                    ("dropped_capacity", Value::num(dp.dropped_capacity as f64)),
+                    ("evicted", Value::num(dp.evicted as f64)),
+                    ("sampled", Value::num(dp.sampled as f64)),
+                    ("parked", Value::num(dp.parked as f64)),
+                    ("resumed", Value::num(dp.resumed as f64)),
+                    ("sample_wait_secs", Value::num(dp.sample_wait_secs)),
+                    ("admit_wait_secs", Value::num(dp.admit_wait_secs)),
+                    ("mean_sampled_lag", Value::num(dp.mean_sampled_lag)),
+                    ("max_sampled_lag", Value::num(dp.max_sampled_lag as f64)),
+                    (
+                        "lag_hist",
+                        Value::Array(
+                            dp.lag_hist
+                                .iter()
+                                .map(|n| Value::num(*n as f64))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            },
         ),
         (
             "evals",

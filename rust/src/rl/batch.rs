@@ -162,4 +162,48 @@ mod tests {
         assert_eq!(b.lens[0], 8);
         assert_eq!(b.token_count(), 5);
     }
+
+    #[test]
+    fn empty_trajectory_list_packs_all_padding() {
+        // drain-time corner: the trainer may be asked to pack zero rows
+        let b = pack_batch(&[], 3, 8).unwrap();
+        assert_eq!(b.n_real_rows, 0);
+        assert_eq!(b.token_count(), 0);
+        assert!(b.mask.iter().all(|m| *m == 0.0));
+        assert!(b.tokens.iter().all(|t| *t == 0));
+        assert!(b.gen_versions.iter().all(|v| *v == u64::MAX));
+        // padding rows keep lens = 1 so in-graph slicing stays valid
+        assert!(b.lens.iter().all(|l| *l == 1));
+        assert!(b.lags(5).is_empty(), "no real rows -> no lags");
+    }
+
+    #[test]
+    fn final_partial_batch_pads_missing_rows() {
+        // drain time: 2 of 4 rows present; the rest must be inert padding
+        let rows = vec![traj(vec![1, 2], vec![3, 4]), traj(vec![5], vec![6, 7, 2])];
+        let b = pack_batch(&rows, 4, 8).unwrap();
+        assert_eq!(b.n_real_rows, 2);
+        assert_eq!(b.token_count(), 2 + 3);
+        assert_eq!(b.lags(3), vec![0, 0], "lags only cover real rows");
+        for row in 2..4 {
+            let base = row * 8;
+            assert!(b.mask[base..base + 8].iter().all(|m| *m == 0.0));
+            assert_eq!(b.gen_versions[row], u64::MAX);
+            assert_eq!(b.rewards[row], 0.0);
+        }
+        // rewards of real rows survive for the report means
+        assert_eq!(b.rewards[0], 1.0);
+    }
+
+    #[test]
+    fn lags_saturate_when_trainer_is_behind_generator() {
+        // gen_version = 3 (see traj()); a trainer at version 1 — e.g. a
+        // freshest-first store handing out rows generated under a version
+        // the trainer's clock hasn't caught up to — must clamp to 0, not
+        // wrap to u64::MAX
+        let b = pack_batch(&[traj(vec![1, 2], vec![3, 4])], 2, 8).unwrap();
+        assert_eq!(b.lags(1), vec![0], "future rows clamp to zero lag");
+        assert_eq!(b.lags(3), vec![0]);
+        assert_eq!(b.lags(u64::MAX), vec![u64::MAX - 3]);
+    }
 }

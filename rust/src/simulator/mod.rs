@@ -14,15 +14,19 @@
 //!   instantiates eta for Llama-3.1 8B/70B/405B on H100s, calibrated against
 //!   the paper's Table-3 baseline rows; the async predictions are then
 //!   genuine model outputs compared against the paper's LlamaRL rows.
-//! * [`des`] — a discrete-event timeline of the two architectures with
+//! * [`des`] — a discrete-event timeline of the architectures with
 //!   straggler (generation-length) variance: reproduces the Figure-2 bubble
-//!   structure and the partial-rollout ablation.
+//!   structure, the partial-rollout ablation, and the buffered-pipeline
+//!   (rollout-store) timeline with capacity eviction and an enforced
+//!   staleness bound.
 
 pub mod des;
 pub mod hardware;
 pub mod problem;
 
-pub use des::{simulate_timeline, DesConfig, DesReport};
+pub use des::{
+    simulate_async_buffered, simulate_timeline, BufferedDesConfig, DesConfig, DesReport,
+};
 pub use hardware::{
     calibrated_eta, GpuSpec, HardwareModel, ModelSpec, PaperRow, LLAMA_MODELS, PAPER_TABLE3,
 };

@@ -1,44 +1,74 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled: thiserror is not in the offline
+//! vendor set).
 
-use thiserror::Error;
+use std::fmt;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla/pjrt error: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json parse error at byte {offset}: {msg}")]
+    Xla(xla::Error),
+    Io(std::io::Error),
     JsonParse { offset: usize, msg: String },
-
-    #[error("manifest error: {0}")]
     Manifest(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("shape mismatch for {what}: expected {expected:?}, got {got:?}")]
     Shape {
         what: String,
         expected: Vec<usize>,
         got: Vec<usize>,
     },
-
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-
-    #[error("channel closed: {0}")]
     ChannelClosed(String),
-
-    #[error("cli error: {0}")]
     Cli(String),
-
-    #[error("{0}")]
     Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla/pjrt error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::JsonParse { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Manifest(s) => write!(f, "manifest error: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Shape {
+                what,
+                expected,
+                got,
+            } => write!(
+                f,
+                "shape mismatch for {what}: expected {expected:?}, got {got:?}"
+            ),
+            Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
+            Error::ChannelClosed(s) => write!(f, "channel closed: {s}"),
+            Error::Cli(s) => write!(f, "cli error: {s}"),
+            Error::Msg(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

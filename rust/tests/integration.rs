@@ -104,6 +104,40 @@ fn quantized_generator_produces_off_policy_ratios_in_sync_mode() {
 }
 
 #[test]
+fn buffered_pipeline_runs_with_enforced_staleness_bound() {
+    if !have_artifacts() {
+        return;
+    }
+    let bound = 3u64;
+    let mut cfg = PipelineConfig {
+        mode: Mode::AsyncBuffered,
+        n_generator_workers: 2,
+        max_steps: 4,
+        ..base_cfg("buffered")
+    };
+    cfg.store.capacity = 64;
+    cfg.store.max_staleness = Some(bound);
+    let r = run_training(&cfg).unwrap();
+    assert_eq!(r.steps, 4);
+    assert_eq!(r.mode, "async_buffered");
+    let dp = r.dataplane.expect("buffered mode must report store telemetry");
+    assert!(dp.admitted > 0, "rows must flow through the store");
+    assert!(dp.sampled > 0);
+    assert!(
+        dp.max_sampled_lag <= bound,
+        "store handed out lag {} > bound {bound}",
+        dp.max_sampled_lag
+    );
+    // the trainer's own per-batch lag accounting agrees with the bound
+    // (+1 step in flight between sampling and the optimizer update)
+    let max_lag = r.records.iter().map(|x| x.max_lag).max().unwrap();
+    assert!(max_lag <= bound + 1, "realized lag {max_lag} out of bounds");
+    for rec in &r.records {
+        assert!(rec.mean_ratio.is_finite() && rec.mean_ratio > 0.0);
+    }
+}
+
+#[test]
 fn pretrain_then_rl_from_checkpoint() {
     if !have_artifacts() {
         return;

@@ -1,0 +1,242 @@
+//! Property tests on the trajectory data plane, most importantly the two
+//! hard invariants of the RolloutStore:
+//!
+//! 1. **occupancy never exceeds capacity** — under any admission policy,
+//!    any interleaving of concurrent producers and a sampler;
+//! 2. **a sampled row's lag never exceeds the max-staleness bound** — the
+//!    trainer can never be handed data older than configured, no matter
+//!    how the watermark races admissions.
+//!
+//! (Hand-rolled harness in util::prop — proptest is not in the offline
+//! vendor set.)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use llamarl::data::{Difficulty, Problem};
+use llamarl::dataplane::{
+    run_driver, AdmissionPolicy, DriverConfig, RolloutStore, SamplingStrategy, StoreConfig,
+    Transport,
+};
+use llamarl::rl::{FinishReason, Trajectory};
+use llamarl::util::prop::{run_prop, Gen};
+
+fn traj(group_id: u64, gen_version: u64) -> Trajectory {
+    Trajectory {
+        group_id,
+        replica: 0,
+        n_replicas: 1,
+        problem: Problem {
+            prompt: "1+1=".into(),
+            answer: "2".into(),
+            difficulty: Difficulty::Add1,
+        },
+        prompt_tokens: vec![1],
+        response_tokens: vec![2],
+        behavior_logp: vec![-0.5],
+        gen_version,
+        chunks: 1,
+        finish: FinishReason::Eos,
+        reward: 0.0,
+        advantage: 0.0,
+    }
+}
+
+fn any_admission(g: &mut Gen) -> AdmissionPolicy {
+    *g.choice(&[
+        AdmissionPolicy::Block,
+        AdmissionPolicy::DropNewest,
+        AdmissionPolicy::EvictOldest,
+    ])
+}
+
+fn any_sampling(g: &mut Gen) -> SamplingStrategy {
+    *g.choice(&[
+        SamplingStrategy::Fifo,
+        SamplingStrategy::FreshestFirst,
+        SamplingStrategy::StalenessWeighted,
+    ])
+}
+
+#[test]
+fn occupancy_never_exceeds_capacity_under_concurrency() {
+    run_prop("dp_capacity", 25, |g| {
+        let capacity = g.usize(1, 24);
+        let cfg = StoreConfig {
+            capacity,
+            shards: g.usize(1, 5),
+            max_staleness: if g.bool() { Some(g.i64(0, 6) as u64) } else { None },
+            // Block would deadlock without a steady consumer; the capacity
+            // invariant for it is covered by the driver test below
+            admission: *g.choice(&[AdmissionPolicy::DropNewest, AdmissionPolicy::EvictOldest]),
+            sampling: any_sampling(g),
+            seed: g.i64(0, 1 << 30) as u64,
+        };
+        let store = Arc::new(RolloutStore::new(cfg));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let n_producers = g.usize(1, 4);
+        let per = g.usize(5, 40);
+        let group_rows = g.usize(1, 6);
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let store = store.clone();
+            let peak = peak.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    let gid = (p * 10_000 + i) as u64;
+                    let group = (0..group_rows)
+                        .map(|r| traj(gid, (i % 7) as u64 + r as u64))
+                        .collect();
+                    store.push_group(group).unwrap();
+                    peak.fetch_max(store.occupancy(), Ordering::Relaxed);
+                }
+            }));
+        }
+        // a racing sampler + watermark mover
+        let sampler = {
+            let store = store.clone();
+            let peak = peak.clone();
+            std::thread::spawn(move || {
+                for v in 0..30u64 {
+                    store.advance_watermark(v / 3);
+                    let _ = store.sample(3, Duration::from_millis(1));
+                    peak.fetch_max(store.occupancy(), Ordering::Relaxed);
+                }
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        sampler.join().unwrap();
+        let peak = peak.load(Ordering::Relaxed).max(store.occupancy());
+        assert!(
+            peak <= capacity,
+            "occupancy {peak} exceeded capacity {capacity}"
+        );
+        // accounting closes: every admitted row is exactly one of resident,
+        // sampled, evicted, or aged-out-in-place. dropped_stale mixes
+        // admission-time rejections (never admitted) with in-place aging
+        // (admitted), so the residual is bounded by it rather than equal.
+        let s = store.snapshot();
+        let accounted = s.sampled + s.evicted + store.occupancy() as u64;
+        assert!(
+            s.admitted >= accounted && s.admitted - accounted <= s.dropped_stale,
+            "row accounting must close: {s:?}"
+        );
+    });
+}
+
+#[test]
+fn sampled_lag_never_exceeds_staleness_bound() {
+    run_prop("dp_staleness", 40, |g| {
+        let bound = g.i64(0, 5) as u64;
+        let cfg = StoreConfig {
+            capacity: g.usize(4, 32),
+            shards: g.usize(1, 4),
+            max_staleness: Some(bound),
+            admission: any_admission(g),
+            sampling: any_sampling(g),
+            seed: g.i64(0, 1 << 30) as u64,
+        };
+        let store = RolloutStore::new(cfg);
+        let mut max_seen_lag = 0u64;
+        let mut watermark = 0u64;
+        for round in 0..12u64 {
+            // admit rows with versions scattered around the watermark
+            for k in 0..g.usize(1, 5) {
+                let v = watermark.saturating_sub(g.i64(0, 8) as u64);
+                let _ = store.push_group(vec![traj(round * 100 + k as u64, v)]);
+            }
+            if g.bool() {
+                watermark += g.i64(0, 3) as u64;
+                store.advance_watermark(watermark);
+            }
+            for t in store.sample(g.usize(1, 6), Duration::from_millis(1)).unwrap() {
+                max_seen_lag = max_seen_lag.max(watermark.saturating_sub(t.gen_version));
+            }
+        }
+        assert!(
+            max_seen_lag <= bound,
+            "consumed lag {max_seen_lag} exceeds bound {bound}"
+        );
+        let snap = store.snapshot();
+        assert!(
+            snap.max_sampled_lag <= bound,
+            "store-recorded lag {} exceeds bound {bound}",
+            snap.max_sampled_lag
+        );
+    });
+}
+
+#[test]
+fn block_admission_capacity_holds_with_live_consumer() {
+    // the Block policy needs a consumer thread; drive it end to end and
+    // check the capacity invariant via the store's own peak counter
+    let r = run_driver(&DriverConfig {
+        transport: Transport::Store(StoreConfig {
+            capacity: 8,
+            shards: 2,
+            max_staleness: Some(3),
+            admission: AdmissionPolicy::Block,
+            sampling: SamplingStrategy::Fifo,
+            seed: 11,
+        }),
+        producers: 3,
+        group_rows: 3,
+        train_steps: 15,
+        rows_per_step: 4,
+        gen_group_micros: 150,
+        gen_sigma: 0.8,
+        train_step_micros: 400,
+        seed: 11,
+    });
+    let dp = r.dataplane.expect("store telemetry");
+    assert!(dp.peak_occupancy <= 8, "peak {} > capacity", dp.peak_occupancy);
+    assert!(dp.max_sampled_lag <= 3, "lag {} > bound", dp.max_sampled_lag);
+    assert_eq!(r.steps, 15);
+}
+
+#[test]
+fn sampling_strategies_return_identical_multisets() {
+    run_prop("dp_strategies", 30, |g| {
+        let n = g.usize(2, 12);
+        let mk = |sampling| {
+            let store = RolloutStore::new(StoreConfig {
+                capacity: 64,
+                shards: 3,
+                max_staleness: None,
+                admission: AdmissionPolicy::EvictOldest,
+                sampling,
+                seed: 5,
+            });
+            for i in 0..n {
+                store
+                    .push_group(vec![traj(i as u64, (i % 4) as u64)])
+                    .unwrap();
+            }
+            store
+        };
+        // every strategy returns the same multiset, in its own order
+        let mut sets: Vec<Vec<u64>> = Vec::new();
+        for sampling in [
+            SamplingStrategy::Fifo,
+            SamplingStrategy::FreshestFirst,
+            SamplingStrategy::StalenessWeighted,
+        ] {
+            let store = mk(sampling);
+            let mut ids: Vec<u64> = store
+                .sample(n, Duration::from_millis(5))
+                .unwrap()
+                .iter()
+                .map(|t| t.group_id)
+                .collect();
+            assert_eq!(store.occupancy(), 0);
+            ids.sort();
+            sets.push(ids);
+        }
+        assert_eq!(sets[0], sets[1]);
+        assert_eq!(sets[1], sets[2]);
+        assert_eq!(sets[0], (0..n as u64).collect::<Vec<_>>());
+    });
+}

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Tier-1 verification entry point (see ROADMAP.md).
+#
+#   ./verify.sh            build + test (+ advisory fmt check)
+#   ./verify.sh --strict   also fail on rustfmt drift
+#
+# The fmt check is advisory by default because the offline image may lack
+# a rustfmt component; build + test are the hard gate.
+
+set -uo pipefail
+cd "$(dirname "$0")"
+
+strict_fmt=0
+[ "${1:-}" = "--strict" ] && strict_fmt=1
+
+fail=0
+
+echo "== cargo build --release =="
+cargo build --release || fail=1
+
+echo "== cargo test -q =="
+cargo test -q || fail=1
+
+echo "== cargo fmt --check (advisory) =="
+if cargo fmt --version >/dev/null 2>&1; then
+    if ! cargo fmt --all -- --check; then
+        echo "warning: rustfmt drift detected"
+        [ "$strict_fmt" = 1 ] && fail=1
+    fi
+else
+    echo "rustfmt not installed; skipping"
+fi
+
+if [ "$fail" = 0 ]; then
+    echo "verify: OK"
+else
+    echo "verify: FAILED"
+fi
+exit "$fail"
