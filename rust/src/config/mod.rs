@@ -106,6 +106,13 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             "sampling" => {
                 cfg.store.sampling = SamplingStrategy::parse(val.as_str().unwrap_or(""))?
             }
+            "sync_trainer_shards" => {
+                cfg.sync.trainer_shards = val.as_usize().unwrap_or(4).max(1)
+            }
+            "sync_generator_shards" => {
+                cfg.sync.generator_shards = val.as_usize().unwrap_or(2).max(1)
+            }
+            "sync_quantized" => cfg.sync.quantized = val.as_bool().unwrap_or(false),
             "n_generations" => cfg.n_generations = val.as_usize().unwrap_or(4),
             "baseline" => cfg.baseline = parse_baseline(val.as_str().unwrap_or(""))?,
             "max_steps" => cfg.max_steps = val.as_i64().unwrap_or(1) as u64,
@@ -156,6 +163,15 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
     }
     if let Some(v) = args.str_opt("sampling") {
         cfg.store.sampling = SamplingStrategy::parse(v)?;
+    }
+    cfg.sync.trainer_shards = args
+        .usize_or("sync-trainer-shards", cfg.sync.trainer_shards)?
+        .max(1);
+    cfg.sync.generator_shards = args
+        .usize_or("sync-generator-shards", cfg.sync.generator_shards)?
+        .max(1);
+    if args.flag("sync-quantized") {
+        cfg.sync.quantized = true;
     }
     cfg.n_generations = args.usize_or("n-generations", cfg.n_generations)?;
     cfg.max_steps = args.u64_or("steps", cfg.max_steps)?;
@@ -243,6 +259,32 @@ mod tests {
         assert_eq!(cfg.mode, Mode::AsyncBuffered);
         assert_eq!(cfg.store.max_staleness, None);
         assert_eq!(cfg.store.sampling, SamplingStrategy::StalenessWeighted);
+    }
+
+    #[test]
+    fn weightsync_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        let v = Value::parse(
+            r#"{"sync_trainer_shards":8,"sync_generator_shards":4,"sync_quantized":true}"#,
+        )
+        .unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert_eq!(cfg.sync.trainer_shards, 8);
+        assert_eq!(cfg.sync.generator_shards, 4);
+        assert!(cfg.sync.quantized);
+
+        let args = Args::parse(
+            ["--sync-trainer-shards", "2", "--sync-generator-shards", "1"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["sync-quantized"],
+        )
+        .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.sync.trainer_shards, 2);
+        assert_eq!(cfg.sync.generator_shards, 1);
+        // a missing flag never unsets an earlier layer's choice
+        assert!(cfg.sync.quantized);
     }
 
     #[test]

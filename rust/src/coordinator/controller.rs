@@ -37,12 +37,38 @@ use crate::rl::{AipoConfig, Baseline};
 use crate::runtime::Manifest;
 use crate::util::error::{Error, Result};
 use crate::util::logging::JsonlWriter;
+use crate::weightsync::{Layout, ShardEncoding};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     Sync,
     Async,
     AsyncBuffered,
+}
+
+/// Sharded weight-sync plane configuration: how each publish is resharded
+/// from the trainer's FSDP layout into the generators' TP layout (see
+/// [`crate::weightsync`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WeightSyncConfig {
+    /// trainer-side FSDP shard count (source ranks of the reshard plan)
+    pub trainer_shards: usize,
+    /// generator-side TP shard count (destination ranks; per-tensor split
+    /// when the manifest's param layout allows it)
+    pub generator_shards: usize,
+    /// stream int8-quantized shard payloads (1 byte/elem + per-shard scale,
+    /// dequantized at attach) instead of raw f32
+    pub quantized: bool,
+}
+
+impl Default for WeightSyncConfig {
+    fn default() -> Self {
+        WeightSyncConfig {
+            trainer_shards: 4,
+            generator_shards: 2,
+            quantized: false,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -58,6 +84,8 @@ pub struct PipelineConfig {
     /// rollout-store configuration (Mode::AsyncBuffered); the store's seed
     /// is derived from `seed` at run time
     pub store: StoreConfig,
+    /// sharded weight-sync plane configuration
+    pub sync: WeightSyncConfig,
     /// generations per prompt (the advantage group, paper n=4)
     pub n_generations: usize,
     pub baseline: Baseline,
@@ -87,6 +115,7 @@ impl Default for PipelineConfig {
             queue_capacity: 4,
             scored_capacity: 8,
             store: StoreConfig::default(),
+            sync: WeightSyncConfig::default(),
             n_generations: 4,
             baseline: Baseline::GroupMean,
             max_steps: 5,
@@ -119,6 +148,9 @@ pub struct RunReport {
     pub weight_refreshes: u64,
     pub ddma_publishes: u64,
     pub ddma_mean_publish_secs: f64,
+    /// mean per-publish time of the slowest shard — the modelled parallel
+    /// DDMA cost of the reshard plan (0 when no generator slot is registered)
+    pub ddma_mean_shard_max_secs: f64,
     pub gen_send_blocked_secs: f64,
     pub trainer_recv_blocked_secs: f64,
     /// rollout-store telemetry (Mode::AsyncBuffered only)
@@ -205,7 +237,21 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     if cfg.n_generations == 0 || cfg.max_steps == 0 {
         return Err(Error::Config("n_generations and max_steps must be > 0".into()));
     }
-    let bus = WeightsBus::new(init);
+    // Build the weight-sync plane: FSDP source layout from the configured
+    // trainer shard count, TP destination layout split per-tensor via the
+    // manifest's param map (falling back to a flat split if the map has
+    // gaps), int8 shard payloads when requested.
+    let n_params = init.len();
+    let src_layout = Layout::fsdp(n_params, cfg.sync.trainer_shards.max(1));
+    let g_shards = cfg.sync.generator_shards.max(1);
+    let dst_layout = Layout::tp(n_params, g_shards, &manifest.param_layout)
+        .unwrap_or_else(|_| Layout::tp_flat(n_params, g_shards));
+    let encoding = if cfg.sync.quantized {
+        ShardEncoding::Int8
+    } else {
+        ShardEncoding::F32
+    };
+    let bus = WeightsBus::with_layouts(init, src_layout, dst_layout, encoding)?;
     let ctx = ExecutorContext::new(bus, cfg.out_dir.clone());
     let scheduler = Arc::new(PromptScheduler::new(
         cfg.seed,
@@ -304,6 +350,7 @@ fn run_sync(
         weight_refreshes: gen.weight_refreshes,
         ddma_publishes: ctx.weights.publish_count(),
         ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
+        ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
         gen_send_blocked_secs: 0.0,
         trainer_recv_blocked_secs: 0.0,
         dataplane: None,
@@ -331,11 +378,15 @@ fn run_async(
         let scheduler = scheduler.clone();
         let out = gen_tx.clone();
         let gcfg = gen_cfg(cfg, w);
+        // every publish streams the reshard plan into this slot's staging
+        // buffer; the worker swaps it in (fenced) at chunk boundaries
+        let sync_slot = ctx.weights.register_generator();
         gen_handles.push(
             std::thread::Builder::new()
                 .name(format!("generator-{w}"))
                 .spawn(move || -> Result<(u64, u64, u64, u64)> {
                     let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
+                    gen.set_sync_slot(sync_slot);
                     run_executor_loop(&mut gen, &ctx, None)?;
                     Ok((
                         gen.tokens_generated,
@@ -447,6 +498,7 @@ fn run_async(
         weight_refreshes: refreshes,
         ddma_publishes: ctx.weights.publish_count(),
         ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
+        ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
         gen_send_blocked_secs: gen_stats_ch.send_blocked_secs(),
         trainer_recv_blocked_secs: scored_stats_ch.recv_blocked_secs(),
         dataplane: None,
@@ -483,12 +535,14 @@ fn run_async_buffered(
         let out = gen_tx.clone();
         let store = store.clone();
         let gcfg = gen_cfg(cfg, w);
+        let sync_slot = ctx.weights.register_generator();
         gen_handles.push(
             std::thread::Builder::new()
                 .name(format!("generator-{w}"))
                 .spawn(move || -> Result<(u64, u64, u64, u64)> {
                     let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
                     gen.set_resume_store(store);
+                    gen.set_sync_slot(sync_slot);
                     run_executor_loop(&mut gen, &ctx, None)?;
                     Ok((
                         gen.tokens_generated,
@@ -593,6 +647,7 @@ fn run_async_buffered(
         weight_refreshes: refreshes,
         ddma_publishes: ctx.weights.publish_count(),
         ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
+        ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
         gen_send_blocked_secs: gen_stats_ch.send_blocked_secs(),
         trainer_recv_blocked_secs: snapshot.sample_wait_secs,
         dataplane: Some(snapshot),

@@ -10,10 +10,13 @@
 //! long generations span multiple chunks/iterations instead of blocking the
 //! batch (straggler mitigation).
 //!
-//! Off-policy bookkeeping: the worker re-attaches to the DDMA weights bus at
-//! chunk boundaries; every trajectory records the weight version that
-//! finished it and the per-token behaviour log-probs mu(y_t) recorded by the
-//! sampler inside the artifact. With `quantize_int8` the uploaded weights
+//! Off-policy bookkeeping: in async modes each worker owns a double-buffered
+//! [`crate::weightsync::GeneratorSlot`] — new weight versions stream into
+//! its staging buffer while the worker decodes, and the worker promotes them
+//! with a fenced swap at chunk boundaries (sync mode re-attaches to the DDMA
+//! bus directly). Every trajectory records the weight version that finished
+//! it and the per-token behaviour log-probs mu(y_t) recorded by the sampler
+//! inside the artifact. With `quantize_int8` the uploaded weights
 //! are an int8 round-trip of the published snapshot — the "quantized
 //! behaviour policy" off-policy source of §4.3/Table 3.
 
@@ -23,11 +26,12 @@ use crate::coordinator::channel::{Message, Outbound};
 use crate::coordinator::executor::{Executor, ExecutorContext, StepOutcome};
 use crate::data::{PromptScheduler, PromptTask};
 use crate::dataplane::{PartialRollout, RolloutStore};
-use crate::model::simulate_int8_roundtrip;
+use crate::model::{simulate_int8_roundtrip, VersionedParams};
 use crate::rl::{FinishReason, Trajectory};
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
+use crate::weightsync::GeneratorSlot;
 
 #[derive(Debug, Clone)]
 pub struct GeneratorConfig {
@@ -80,6 +84,10 @@ pub struct GeneratorWorker {
     /// data-plane resumption slot (Mode::AsyncBuffered): unfinished
     /// sequences are parked here at drain time and reclaimed on refill
     resume: Option<Arc<RolloutStore>>,
+    /// double-buffered weight-sync receive slot (async modes): new versions
+    /// stream into its staging buffer while this worker decodes; the fenced
+    /// swap happens here, at chunk boundaries
+    sync_slot: Option<Arc<GeneratorSlot>>,
     // telemetry
     pub chunks_run: u64,
     pub tokens_generated: u64,
@@ -108,6 +116,7 @@ impl GeneratorWorker {
             local_version: u64::MAX,
             slots: Vec::new(),
             resume: None,
+            sync_slot: None,
             chunks_run: 0,
             tokens_generated: 0,
             trajectories_emitted: 0,
@@ -131,6 +140,15 @@ impl GeneratorWorker {
     /// scheduler for fresh prompts.
     pub fn set_resume_store(&mut self, store: Arc<RolloutStore>) {
         self.resume = Some(store);
+    }
+
+    /// Attach this worker's double-buffered weight-sync slot (async modes).
+    /// Publishes stream into the slot's staging buffer off-thread; this
+    /// worker promotes them with the fenced swap at chunk boundaries, so
+    /// every trajectory's `gen_version` comes from a complete, atomically
+    /// swapped version.
+    pub fn set_sync_slot(&mut self, slot: Arc<GeneratorSlot>) {
+        self.sync_slot = Some(slot);
     }
 
     /// Park every in-flight sequence that has generated at least one token;
@@ -158,13 +176,8 @@ impl GeneratorWorker {
         parked
     }
 
-    /// Re-attach to the DDMA bus if a newer weight version is available.
-    fn refresh_weights(&mut self) -> Result<()> {
-        let bus_version = self.ctx.weights.version();
-        if self.params_buf.is_some() && bus_version == self.local_version {
-            return Ok(());
-        }
-        let snap = self.ctx.weights.latest();
+    /// Upload a weight snapshot to this worker's PJRT context.
+    fn upload_params(&mut self, snap: &VersionedParams) -> Result<()> {
         let rt = self.runtime.as_ref().unwrap();
         let host: HostTensor = if self.cfg.quantize_int8 {
             let q = simulate_int8_roundtrip(&snap.data, &rt.manifest.param_layout);
@@ -176,6 +189,30 @@ impl GeneratorWorker {
         self.local_version = snap.version;
         self.weight_refreshes += 1;
         Ok(())
+    }
+
+    /// Refresh weights at a chunk boundary. With a weight-sync slot the new
+    /// version streamed in while the previous chunk decoded; the fenced swap
+    /// here costs one pointer exchange, and decode stays on version N until
+    /// N+1 is complete. Without a slot (sync mode) this re-attaches to the
+    /// DDMA bus directly.
+    fn refresh_weights(&mut self) -> Result<()> {
+        if let Some(slot) = self.sync_slot.clone() {
+            if self.params_buf.is_none() {
+                let snap = slot.attach();
+                return self.upload_params(&snap);
+            }
+            if let Some(snap) = slot.swap_at_boundary() {
+                return self.upload_params(&snap);
+            }
+            return Ok(());
+        }
+        let bus_version = self.ctx.weights.version();
+        if self.params_buf.is_some() && bus_version == self.local_version {
+            return Ok(());
+        }
+        let snap = self.ctx.weights.latest();
+        self.upload_params(&snap)
     }
 
     fn fill_slots(&mut self) {

@@ -25,7 +25,11 @@
 //!   sequential generate → score → train ticks.
 //! * **Async mode** (LlamaRL): every executor runs free on its own thread
 //!   with its own PJRT context, connected by bounded channels (backpressure
-//!   bounds off-policy lag) and the DDMA weights bus.
+//!   bounds off-policy lag) and the DDMA weights bus. Each generator owns a
+//!   double-buffered [`crate::weightsync::GeneratorSlot`]: publishes stream
+//!   the reshard plan into its staging buffer and the worker promotes the
+//!   new version with a fenced swap at chunk boundaries, so per-trajectory
+//!   weight versions always come from a complete snapshot.
 //! * **AsyncBuffered mode** (streaming data plane): scored groups are
 //!   admitted into a staleness-aware [`crate::dataplane::RolloutStore`];
 //!   the trainer samples microbatches per a pluggable strategy and its
@@ -42,7 +46,7 @@ pub mod reward;
 pub mod trainer;
 
 pub use channel::{gather_channel, scatter_channel, ChannelStats, Inbound, Message, Outbound};
-pub use controller::{run_training, Mode, PipelineConfig, RunReport};
+pub use controller::{run_training, Mode, PipelineConfig, RunReport, WeightSyncConfig};
 pub use evaluator::{eval_policy, EvalResult, EvaluatorConfig, EvaluatorExecutor};
 pub use executor::{run_executor_loop, Executor, ExecutorContext, StepOutcome};
 pub use generator::{GeneratorConfig, GeneratorWorker};

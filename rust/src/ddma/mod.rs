@@ -4,17 +4,26 @@
 //! The paper's DDMA replaces the parameter-server pattern with fully
 //! distributed zero-copy GPU-to-GPU shard transfers over NVLink/IB, updating
 //! terabyte-scale weights in ~2 s (Table 4). In this single-host testbed the
-//! *protocol* is real and the *links* are modelled:
+//! *protocol* is real and the *links* are modelled. Since the weight-sync
+//! plane landed, this module is a **facade over [`crate::weightsync`]**:
 //!
-//! * [`WeightsBus`] — the in-process DDMA path: the trainer publishes a
-//!   sharded snapshot, generator workers attach to the latest version with a
-//!   zero-copy `Arc` clone. Versions are monotonic; every trajectory records
-//!   the version it sampled under, so off-policy lag is always measurable.
+//! * [`WeightsBus`] — the in-process DDMA path. Internally a publish runs
+//!   the resharding plan between the trainer-side FSDP layout and the
+//!   generator-side TP layout ([`crate::weightsync::plan_reshard`]):
+//!   per-shard [`crate::weightsync::ShardPacket`]s (f32 or int8) stream
+//!   into every registered generator's double-buffered
+//!   [`crate::weightsync::GeneratorSlot`], where decode keeps running on
+//!   version N until the fenced swap at a sequence boundary. The bus also
+//!   keeps a master snapshot slot so `latest()` / `wait_for()` serve
+//!   non-streaming readers (trainer init, evaluator, sync mode) exactly as
+//!   before. Versions are monotonic; every trajectory records the version
+//!   it sampled under, so off-policy lag is always measurable.
 //! * [`ShardedCopy`] — the sharded memcpy the trainer performs to produce a
 //!   publishable snapshot (the analogue of each GPU pushing only its own
 //!   shard; real measured bandwidth feeds Table 4's "measured" column).
 //! * [`topology`] — NVLink/IB link model producing cluster-scale DDMA
-//!   timings for the paper's 8B/70B/405B rows.
+//!   timings for the paper's 8B/70B/405B rows, including the cost of a
+//!   planner schedule ([`topology::DdmaModel::plan_secs`]).
 //! * [`ps_baseline`] — the parameter-server + weight-reload cost model
 //!   calibrated to OpenRLHF's published numbers (Table 4 comparison).
 
@@ -26,36 +35,133 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::model::VersionedParams;
+use crate::util::error::Result;
+use crate::weightsync::{
+    encode_shard, plan_reshard, GeneratorSlot, Layout, ReshardPlan, ShardEncoding,
+};
 
-/// The in-process DDMA weights path between trainer and generators.
+/// The in-process DDMA weights path between trainer and generators: a facade
+/// over the sharded weight-sync plane.
 pub struct WeightsBus {
+    plan: ReshardPlan,
+    encoding: ShardEncoding,
+    /// master snapshot (always exact f32) for non-streaming readers
     slot: RwLock<Arc<VersionedParams>>,
+    /// per-generator double-buffered receive slots
+    subscribers: Mutex<Vec<Arc<GeneratorSlot>>>,
     version: AtomicU64,
     publishes: AtomicU64,
     publish_nanos: AtomicU64,
+    /// sum over publishes of the slowest shard's encode+fan-out time — the
+    /// modelled parallel DDMA time (shards move concurrently on a cluster)
+    shard_max_nanos: AtomicU64,
+    /// payload bytes streamed to generator slots
+    bytes_streamed: AtomicU64,
+    /// serializes publishers (and slot registration) across the whole
+    /// mint/stream/swap sequence, so the notify lock below is only ever
+    /// held for the microsecond counter-update + wakeup
+    publish_lock: Mutex<()>,
     notify: (Mutex<u64>, Condvar),
 }
 
 impl WeightsBus {
-    /// Create the bus with version-0 initial weights.
+    /// Create the bus with version-0 initial weights and the trivial
+    /// single-shard plan (monolithic behaviour).
     pub fn new(init: Vec<f32>) -> WeightsBus {
-        WeightsBus {
+        let n = init.len();
+        WeightsBus::with_layouts(
+            init,
+            Layout::fsdp(n, 1),
+            Layout::tp_flat(n, 1),
+            ShardEncoding::F32,
+        )
+        .expect("single-shard layouts are always valid")
+    }
+
+    /// Create the bus over an explicit trainer-side source layout,
+    /// generator-side destination layout, and shard encoding. The resharding
+    /// plan is computed once here and reused by every publish.
+    pub fn with_layouts(
+        init: Vec<f32>,
+        src: Layout,
+        dst: Layout,
+        encoding: ShardEncoding,
+    ) -> Result<WeightsBus> {
+        let plan = plan_reshard(&src, &dst)?;
+        Ok(WeightsBus {
+            plan,
+            encoding,
             slot: RwLock::new(Arc::new(VersionedParams::new(0, init))),
+            subscribers: Mutex::new(Vec::new()),
             version: AtomicU64::new(0),
             publishes: AtomicU64::new(0),
             publish_nanos: AtomicU64::new(0),
+            shard_max_nanos: AtomicU64::new(0),
+            bytes_streamed: AtomicU64::new(0),
+            publish_lock: Mutex::new(()),
             notify: (Mutex::new(0), Condvar::new()),
-        }
+        })
     }
 
-    /// Publish a new weight snapshot; returns its version. The write lock is
-    /// held only for the Arc swap — readers never observe a partial update
+    /// Register a generator's double-buffered receive slot. Its front starts
+    /// at the current master version; every later publish streams into its
+    /// staging buffer, and the generator promotes it with
+    /// [`GeneratorSlot::swap_at_boundary`] at its own sequence boundary.
+    pub fn register_generator(&self) -> Arc<GeneratorSlot> {
+        // Serialize against in-flight publishes: without this, a slot
+        // created while a publish streams could seed its front from the
+        // not-yet-swapped master AND miss the streaming version's packets,
+        // leaving it one version stale until the next publish.
+        let _serial = self.publish_lock.lock().unwrap();
+        let slot = GeneratorSlot::new(self.latest());
+        self.subscribers.lock().unwrap().push(slot.clone());
+        slot
+    }
+
+    /// Publish a new weight snapshot; returns its version.
+    ///
+    /// Ordering contract (regression test
+    /// `version_never_ahead_of_latest_snapshot`): the version counter is
+    /// minted under the publish lock and stored only *after* the master
+    /// slot swap, so an observer that reads `version() == N` is guaranteed
+    /// `latest().version >= N`. Readers never observe a partial update
     /// (test: `prop_coordinator::weights_bus_snapshots_are_consistent`).
     pub fn publish(&self, data: Vec<f32>) -> u64 {
         let t0 = Instant::now();
-        let version = self.version.fetch_add(1, Ordering::SeqCst) + 1;
-        let vp = Arc::new(VersionedParams::new(version, data));
-        *self.slot.write().unwrap() = vp;
+        // The publish lock serializes publishers across the whole
+        // mint/stream/swap sequence; the notify mutex is touched only at
+        // the very end, so `wait_for` callers are never stuck behind the
+        // encode/fan-out work.
+        let _serial = self.publish_lock.lock().unwrap();
+        let version = self.version.load(Ordering::SeqCst) + 1;
+
+        // Stream the resharding plan into every generator slot while their
+        // decode loops keep reading the front buffer.
+        let subs = self.subscribers.lock().unwrap().clone();
+        if !subs.is_empty() {
+            for slot in &subs {
+                slot.begin(version, self.plan.ops.len());
+            }
+            let mut max_op = 0f64;
+            let mut bytes = 0usize;
+            for &op in &self.plan.ops {
+                let t_op = Instant::now();
+                let pkt = encode_shard(&data, version, op, self.encoding);
+                bytes += pkt.payload_bytes();
+                for slot in &subs {
+                    slot.recv(&pkt);
+                }
+                max_op = max_op.max(t_op.elapsed().as_secs_f64());
+            }
+            self.shard_max_nanos
+                .fetch_add((max_op * 1e9) as u64, Ordering::Relaxed);
+            self.bytes_streamed
+                .fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+
+        // Master slot swap strictly before the version-counter bump.
+        *self.slot.write().unwrap() = Arc::new(VersionedParams::new(version, data));
+        self.version.store(version, Ordering::SeqCst);
         self.publish_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.publishes.fetch_add(1, Ordering::Relaxed);
@@ -65,7 +171,7 @@ impl WeightsBus {
         version
     }
 
-    /// Zero-copy attach to the latest snapshot.
+    /// Zero-copy attach to the latest master snapshot.
     pub fn latest(&self) -> Arc<VersionedParams> {
         self.slot.read().unwrap().clone()
     }
@@ -97,21 +203,48 @@ impl WeightsBus {
         }
         self.publish_nanos.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
     }
+
+    /// Mean per-publish time of the slowest shard — what a publish costs
+    /// when shards move in parallel (cluster DDMA time).
+    pub fn mean_shard_max_secs(&self) -> f64 {
+        let n = self.publishes.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.shard_max_nanos.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+    }
+
+    /// Payload bytes streamed to generator slots so far (int8 encoding
+    /// shows up here as a ~4x reduction).
+    pub fn bytes_streamed(&self) -> u64 {
+        self.bytes_streamed.load(Ordering::Relaxed)
+    }
+
+    /// The resharding schedule every publish executes.
+    pub fn plan(&self) -> &ReshardPlan {
+        &self.plan
+    }
+
+    pub fn subscriber_count(&self) -> usize {
+        self.subscribers.lock().unwrap().len()
+    }
 }
 
 /// The sharded snapshot copy: every "rank" copies only its own contiguous
 /// shard (paper: each GPU stores/updates its assigned shards). Returns the
-/// copy and per-shard timings.
+/// copy, per-shard timings, and the chunk size used.
 pub struct ShardedCopy {
     pub data: Vec<f32>,
     pub shard_secs: Vec<f64>,
+    /// elements per shard (last shard may be smaller)
+    pub chunk: usize,
 }
 
 pub fn sharded_copy(src: &[f32], n_shards: usize) -> ShardedCopy {
     assert!(n_shards > 0);
     let mut data = vec![0f32; src.len()];
     let mut shard_secs = Vec::with_capacity(n_shards);
-    let chunk = src.len().div_ceil(n_shards);
+    let chunk = src.len().div_ceil(n_shards).max(1);
     // NOTE: shards copy sequentially here (one core); the *per-shard* time is
     // what scales to the cluster model, where shards move in parallel and
     // DDMA time = max(shard time) — see topology::ddma_sync_time.
@@ -120,7 +253,11 @@ pub fn sharded_copy(src: &[f32], n_shards: usize) -> ShardedCopy {
         dst_chunk.copy_from_slice(src_chunk);
         shard_secs.push(t0.elapsed().as_secs_f64());
     }
-    ShardedCopy { data, shard_secs }
+    ShardedCopy {
+        data,
+        shard_secs,
+        chunk,
+    }
 }
 
 #[cfg(test)]
@@ -149,12 +286,101 @@ mod tests {
     }
 
     #[test]
+    fn version_never_ahead_of_latest_snapshot() {
+        // Regression (publish version/notify race): minting the version
+        // before the slot swap let a reader observe version() == N while
+        // latest() still returned N-1. The fixed ordering stores the
+        // counter only after the swap, so this invariant holds under a
+        // racing publisher.
+        let bus = Arc::new(WeightsBus::new(vec![0.0; 256]));
+        let writer = {
+            let bus = bus.clone();
+            std::thread::spawn(move || {
+                for v in 1..=300u64 {
+                    bus.publish(vec![v as f32; 256]);
+                }
+            })
+        };
+        loop {
+            let observed = bus.version();
+            let snap = bus.latest();
+            assert!(
+                snap.version >= observed,
+                "latest() at {} behind observed version() {}",
+                snap.version,
+                observed
+            );
+            if observed >= 300 {
+                break;
+            }
+        }
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn registered_slot_receives_fenced_versions() {
+        let n = 64;
+        let bus = WeightsBus::with_layouts(
+            vec![0.0; n],
+            Layout::fsdp(n, 4),
+            Layout::tp_flat(n, 2),
+            ShardEncoding::F32,
+        )
+        .unwrap();
+        let slot = bus.register_generator();
+        assert_eq!(slot.front_version(), 0);
+        assert!(slot.swap_at_boundary().is_none(), "nothing staged yet");
+
+        bus.publish(vec![1.5; n]);
+        // decode still on version 0 until the generator swaps
+        assert_eq!(slot.front_version(), 0);
+        let snap = slot.swap_at_boundary().expect("complete staging");
+        assert_eq!(snap.version, 1);
+        assert!(snap.data.iter().all(|x| *x == 1.5));
+        assert!(bus.bytes_streamed() > 0);
+        assert!(bus.mean_shard_max_secs() >= 0.0);
+    }
+
+    #[test]
+    fn quantized_bus_streams_fewer_bytes_within_bound() {
+        let n = 1000;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let next: Vec<f32> = (0..n).map(|i| (i as f32 * 0.013).cos()).collect();
+        let mk = |enc| {
+            WeightsBus::with_layouts(
+                init.clone(),
+                Layout::fsdp(n, 4),
+                Layout::tp_flat(n, 4),
+                enc,
+            )
+            .unwrap()
+        };
+        let f32_bus = mk(ShardEncoding::F32);
+        let q_bus = mk(ShardEncoding::Int8);
+        let f32_slot = f32_bus.register_generator();
+        let q_slot = q_bus.register_generator();
+        f32_bus.publish(next.clone());
+        q_bus.publish(next.clone());
+        let exact = f32_slot.swap_at_boundary().unwrap();
+        let quant = q_slot.swap_at_boundary().unwrap();
+        assert_eq!(*exact.data, next);
+        assert!(q_bus.bytes_streamed() * 3 < f32_bus.bytes_streamed());
+        let maxabs = next.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let bound = crate::model::int8_error_bound(maxabs);
+        for (a, b) in next.iter().zip(quant.data.iter()) {
+            assert!((a - b).abs() <= bound);
+        }
+        // the master slot stays exact even on a quantized bus
+        assert_eq!(*q_bus.latest().data, next);
+    }
+
+    #[test]
     fn sharded_copy_is_exact() {
         let src: Vec<f32> = (0..1000).map(|i| i as f32).collect();
         for shards in [1, 3, 7, 16] {
             let c = sharded_copy(&src, shards);
             assert_eq!(c.data, src);
-            assert_eq!(c.shard_secs.len(), src.len().div_ceil(src.len().div_ceil(shards)));
+            assert_eq!(c.shard_secs.len(), src.len().div_ceil(c.chunk));
         }
     }
 }

@@ -13,6 +13,12 @@
 //!    launch overheads and stream synchronization the floor ignores.
 
 use crate::util::stats::linfit;
+use crate::weightsync::ReshardPlan;
+
+/// Per-op software overhead (stream launch + synchronization) paid when
+/// costing a planner schedule explicitly; the calibrated power-law fit
+/// absorbs the same effect for the aggregate model.
+pub const OP_LAUNCH_SECS: f64 = 20e-6;
 
 /// Interconnect bandwidths, bytes/sec.
 #[derive(Debug, Clone, Copy)]
@@ -85,6 +91,24 @@ impl DdmaModel {
     pub fn floor_secs(&self, params: f64, n_trainer_gpus: usize) -> f64 {
         bf16_bytes(params) / n_trainer_gpus as f64 / self.link.ib_bps
     }
+
+    /// Cost of executing a resharding planner schedule on the cluster:
+    /// every active (src, dst) link moves its bytes in parallel over IB,
+    /// paying [`OP_LAUNCH_SECS`] per op it issues, so schedule time is the
+    /// *max* over links — shard size, not model size, is what matters
+    /// (the paper's linear-scalability property at plan granularity).
+    /// `bytes_per_elem` selects the wire encoding (2.0 bf16, 4.0 f32,
+    /// 1.0 int8).
+    pub fn plan_secs(&self, plan: &ReshardPlan, bytes_per_elem: f64) -> f64 {
+        let ops = plan.link_ops();
+        plan.link_elems()
+            .iter()
+            .map(|(link, n)| {
+                *n as f64 * bytes_per_elem / self.link.ib_bps
+                    + ops.get(link).copied().unwrap_or(0) as f64 * OP_LAUNCH_SECS
+            })
+            .fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +136,26 @@ mod tests {
         let t1 = m.sync_secs(70e9, 128);
         let t2 = m.sync_secs(140e9, 256);
         assert!((t1 - t2).abs() / t1 < 1e-9);
+    }
+
+    #[test]
+    fn plan_cost_scales_with_shard_not_model() {
+        use crate::weightsync::{plan_reshard, Layout};
+        let m = DdmaModel::calibrated();
+        // doubling size AND both rank counts keeps per-link volume constant
+        let small = plan_reshard(&Layout::fsdp(1 << 20, 8), &Layout::tp_flat(1 << 20, 4))
+            .unwrap();
+        let large = plan_reshard(&Layout::fsdp(1 << 21, 16), &Layout::tp_flat(1 << 21, 8))
+            .unwrap();
+        let t_small = m.plan_secs(&small, 2.0);
+        let t_large = m.plan_secs(&large, 2.0);
+        assert!(
+            (t_small - t_large).abs() / t_small < 1e-6,
+            "{t_small} vs {t_large}"
+        );
+        // int8 wire encoding moves half the bf16 bytes
+        let t_int8 = m.plan_secs(&small, 1.0);
+        assert!(t_int8 < t_small);
     }
 
     #[test]

@@ -23,7 +23,8 @@
 //! | runtime | [`runtime`] (PJRT artifact loading & execution), [`model`] (flat params, tokenizer, checkpoints, quantization) |
 //! | RL | [`data`] (synthetic verifiable-reward tasks), [`rl`] (advantages, trajectories, AIPO config) |
 //! | data plane | [`dataplane`] (staleness-aware rollout store: admission/eviction policies, sampling strategies, partial-rollout resumption, lag telemetry) |
-//! | system | [`coordinator`] (executors, channels, controller, sync/async/buffered pipelines), [`ddma`] |
+//! | weight plane | [`weightsync`] (FSDP/TP shard layouts, resharding planner, quantized per-shard transfer, generation-overlapped double-buffered swap) |
+//! | system | [`coordinator`] (executors, channels, controller, sync/async/buffered pipelines), [`ddma`] (the DDMA facade over [`weightsync`] + cluster link models) |
 //! | evaluation | [`simulator`] (memory/cost models, Theorem 7.5 optimizer, discrete-event timelines), [`metrics`] |
 
 pub mod config;
@@ -37,5 +38,6 @@ pub mod rl;
 pub mod runtime;
 pub mod simulator;
 pub mod util;
+pub mod weightsync;
 
 pub use util::error::{Error, Result};

@@ -31,7 +31,7 @@ use llamarl::util::bench::Table;
 use llamarl::util::cli::Args;
 use llamarl::util::error::Result;
 
-const BOOL_FLAGS: &[&str] = &["quantize-generator", "help"];
+const BOOL_FLAGS: &[&str] = &["quantize-generator", "sync-quantized", "help"];
 
 fn main() {
     let args = match Args::from_env(BOOL_FLAGS) {
@@ -85,6 +85,8 @@ USAGE: llamarl <subcommand> [flags]
             [--max-staleness K (0=unbounded)]
             [--admission block|drop_newest|evict_oldest]
             [--sampling fifo|freshest|staleness_weighted]
+            weight-sync plane: [--sync-trainer-shards N]
+            [--sync-generator-shards N] [--sync-quantized]
   pretrain  --artifacts DIR --steps N --lr X --out DIR
             supervised warm-up producing the RL init checkpoint
   simulate  reproduce Table 3 from the calibrated cluster cost model

@@ -90,6 +90,10 @@ pub fn report_json(r: &RunReport) -> Value {
             Value::num(r.ddma_mean_publish_secs),
         ),
         (
+            "ddma_mean_shard_max_secs",
+            Value::num(r.ddma_mean_shard_max_secs),
+        ),
+        (
             "gen_send_blocked_secs",
             Value::num(r.gen_send_blocked_secs),
         ),

@@ -8,5 +8,7 @@ mod tokenizer;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
 pub use params::{load_init_params, VersionedParams};
-pub use quant::{dequantize_int8, quantize_int8, simulate_int8_roundtrip, QuantizedParams};
+pub use quant::{
+    dequantize_int8, int8_error_bound, quantize_int8, simulate_int8_roundtrip, QuantizedParams,
+};
 pub use tokenizer::{Tokenizer, BOS_ID, EOS_ID, PAD_ID};

@@ -57,6 +57,18 @@ pub fn simulate_int8_roundtrip(params: &[f32], layout: &[ParamEntry]) -> Vec<f32
     dequantize_int8(&quantize_int8(params, layout), layout)
 }
 
+/// Worst-case absolute round-trip error for a tensor whose max |x| is
+/// `maxabs`: half a quantization step (`scale / 2`, since `round` is
+/// nearest), padded for the f32 rounding incurred by the divide/multiply
+/// pair. The property test `int8_roundtrip_error_within_bound` exercises
+/// this across scales, and the weight-sync quantized transfer path
+/// ([`crate::weightsync::transfer::run_transfer`]) measures against it on
+/// every plan it executes.
+pub fn int8_error_bound(maxabs: f32) -> f32 {
+    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    0.5 * scale * (1.0 + 1e-4) + f32::EPSILON
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +111,41 @@ mod tests {
         let params: Vec<f32> = (0..100).map(|i| (i as f32 * 0.7).sin()).collect();
         let rt = simulate_int8_roundtrip(&params, &lay);
         assert_ne!(params, rt, "int8 roundtrip should not be exact");
+    }
+
+    #[test]
+    fn int8_roundtrip_error_within_bound() {
+        // Property: quantize -> dequantize error stays within
+        // int8_error_bound per tensor, across tensor counts, sizes, and
+        // twelve decades of scale — the acceptance check the weight-sync
+        // quantized transfer path leans on.
+        crate::util::prop::run_prop("int8_roundtrip_bound", 200, |g| {
+            let n_tensors = g.usize(1, 5);
+            let sizes: Vec<usize> = (0..n_tensors).map(|_| g.size(0, 200)).collect();
+            let lay = layout(&sizes);
+            let total: usize = sizes.iter().sum();
+            let mut params = Vec::with_capacity(total);
+            for &s in &sizes {
+                // per-tensor scale spanning twelve decades
+                let mag = 10f64.powf(g.f64(-6.0, 6.0)) as f32;
+                for _ in 0..s {
+                    params.push((g.f64(-1.0, 1.0) as f32) * mag);
+                }
+            }
+            let rt = simulate_int8_roundtrip(&params, &lay);
+            for (entry, _) in lay.iter().zip(&sizes) {
+                let len: usize = entry.shape.iter().product();
+                let chunk = &params[entry.offset..entry.offset + len];
+                let maxabs = chunk.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                let bound = int8_error_bound(maxabs);
+                for (a, b) in chunk.iter().zip(&rt[entry.offset..entry.offset + len]) {
+                    assert!(
+                        (a - b).abs() <= bound,
+                        "err {} > bound {bound} (maxabs {maxabs})",
+                        (a - b).abs()
+                    );
+                }
+            }
+        });
     }
 }

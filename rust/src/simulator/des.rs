@@ -33,6 +33,15 @@ pub struct DesConfig {
     /// cap generation work per iteration at this multiple of the mean
     /// (partial rollouts); f64::INFINITY disables
     pub partial_rollout_cap: f64,
+    /// weight-sync stall per refresh, seconds (e.g. a planner schedule
+    /// costed by `ddma::topology::DdmaModel::plan_secs`); 0 disables
+    pub weight_sync_secs: f64,
+    /// generation-overlapped sync: shards stream into the double-buffered
+    /// slot while decode runs, so the generator pays only the O(1) fenced
+    /// swap instead of `weight_sync_secs` (valid when sync time is well
+    /// under a batch's decode time, as in paper Table 4). Sync mode cannot
+    /// overlap — the next batch needs the new weights before it starts.
+    pub sync_overlap: bool,
     pub seed: u64,
 }
 
@@ -50,6 +59,8 @@ impl Default for DesConfig {
             score_secs: 0.2,
             queue_capacity: 2,
             partial_rollout_cap: f64::INFINITY,
+            weight_sync_secs: 0.0,
+            sync_overlap: false,
             seed: 0,
         }
     }
@@ -140,8 +151,21 @@ fn batch_generation_time(
     slots.iter().cloned().fold(0.0, f64::max)
 }
 
+/// Generator-side stall per weight refresh in the free-running
+/// architectures: overlapped sync hides the stream behind decode and pays
+/// only the fenced swap (modelled as 0 here — it is one pointer exchange).
+fn gen_sync_stall(cfg: &DesConfig) -> f64 {
+    if cfg.sync_overlap {
+        0.0
+    } else {
+        cfg.weight_sync_secs
+    }
+}
+
 /// Synchronous architecture (Fig. 2a): each step is gen -> score -> train on
-/// the same clock; generator idles during training and vice versa.
+/// the same clock; generator idles during training and vice versa. The
+/// weight reload (`weight_sync_secs`) cannot overlap anything — the next
+/// batch needs the new weights before it starts.
 pub fn simulate_sync(cfg: &DesConfig) -> DesReport {
     let mut rng = Rng::new(cfg.seed);
     let mut t = 0.0f64;
@@ -156,6 +180,7 @@ pub fn simulate_sync(cfg: &DesConfig) -> DesReport {
         t += cfg.score_secs;
         t += cfg.train_secs;
         train_busy += cfg.train_secs;
+        t += cfg.weight_sync_secs;
         step_ends.push(t);
     }
     DesReport {
@@ -187,10 +212,12 @@ pub fn simulate_async(cfg: &DesConfig) -> DesReport {
     let mut done_steps = 0usize;
     let mut carry = Vec::new();
 
+    let stall = gen_sync_stall(cfg);
     while done_steps < cfg.steps {
-        // generator produces whenever the queue has room
+        // generator produces whenever the queue has room; each batch starts
+        // with a weight refresh (stall unless sync is overlapped)
         while queue.len() < cfg.queue_capacity && gen_clock <= train_clock + 1e-9 {
-            let g = batch_generation_time(&mut rng, cfg, &mut carry);
+            let g = batch_generation_time(&mut rng, cfg, &mut carry) + stall;
             gen_clock += g;
             gen_busy += g;
             queue.push_back((gen_clock, done_steps));
@@ -207,7 +234,7 @@ pub fn simulate_async(cfg: &DesConfig) -> DesReport {
             }
             None => {
                 // queue empty: generator must get ahead of the train clock
-                let g = batch_generation_time(&mut rng, cfg, &mut carry);
+                let g = batch_generation_time(&mut rng, cfg, &mut carry) + stall;
                 gen_clock = gen_clock.max(train_clock) + g;
                 gen_busy += g;
                 queue.push_back((gen_clock, done_steps));
@@ -249,6 +276,7 @@ pub fn simulate_async_buffered(cfg: &DesConfig, dp: &BufferedDesConfig) -> DesRe
     let mut dropped = 0usize;
     let mut carry = Vec::new();
     let cap = dp.store_capacity.max(1);
+    let stall = gen_sync_stall(cfg);
 
     while done_steps < cfg.steps {
         // Generator free-runs: produce while it is behind the train clock,
@@ -256,7 +284,7 @@ pub fn simulate_async_buffered(cfg: &DesConfig, dp: &BufferedDesConfig) -> DesRe
         // evicts the oldest resident batch (capacity pressure) — the
         // generator itself never waits.
         while store.is_empty() || gen_clock <= train_clock + 1e-9 {
-            let g = batch_generation_time(&mut rng, cfg, &mut carry);
+            let g = batch_generation_time(&mut rng, cfg, &mut carry) + stall;
             gen_clock += g;
             gen_busy += g;
             store.push_back((gen_clock, done_steps));
@@ -357,6 +385,50 @@ mod tests {
             "partial rollouts should shorten the straggler tail: {} vs {}",
             with.total_secs,
             without.total_secs
+        );
+    }
+
+    #[test]
+    fn overlapped_sync_removes_generator_stall() {
+        let base = DesConfig {
+            weight_sync_secs: 4.0,
+            ..DesConfig::default()
+        };
+        let blocking = simulate_async(&base);
+        let overlapped = simulate_async(&DesConfig {
+            sync_overlap: true,
+            ..base.clone()
+        });
+        assert!(
+            overlapped.total_secs < blocking.total_secs,
+            "overlap {} !< blocking {}",
+            overlapped.total_secs,
+            blocking.total_secs
+        );
+        // zero sync cost == overlapped sync: the stall is the whole gap
+        let free = simulate_async(&DesConfig {
+            weight_sync_secs: 0.0,
+            ..base
+        });
+        assert_eq!(overlapped.total_secs, free.total_secs);
+    }
+
+    #[test]
+    fn sync_mode_always_pays_weight_reload() {
+        let cfg = DesConfig {
+            weight_sync_secs: 4.0,
+            sync_overlap: true, // ignored by the sync architecture
+            ..DesConfig::default()
+        };
+        let with = simulate_sync(&cfg);
+        let without = simulate_sync(&DesConfig {
+            weight_sync_secs: 0.0,
+            ..cfg.clone()
+        });
+        let gap = with.total_secs - without.total_secs;
+        assert!(
+            (gap - 4.0 * cfg.steps as f64).abs() < 1e-6,
+            "reload cost should be steps * sync_secs, got {gap}"
         );
     }
 

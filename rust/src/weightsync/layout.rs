@@ -1,0 +1,264 @@
+//! Shard-map descriptors over the flat parameter vector.
+//!
+//! A [`Layout`] says which rank owns which half-open interval of the flat
+//! `f32[P]` buffer. Two families matter for weight sync (paper §5.2):
+//!
+//! * **FSDP-style** (trainer side): the flat vector is split into `n_ranks`
+//!   contiguous, near-equal shards — rank r owns one interval. This is the
+//!   layout the optimizer state lives in, so it is the *source* of every
+//!   publish.
+//! * **TP-style** (generator side): each *tensor* is split across the
+//!   `n_ranks` of a model-parallel group — rank r owns the r-th slice of
+//!   every tensor, so its ownership is many scattered intervals. This is
+//!   the layout the inference engine wants, so it is the *destination*.
+//!
+//! The two tilings disagree, which is exactly why resharding
+//! ([`crate::weightsync::plan`]) is non-trivial: one trainer shard feeds
+//! pieces of several generator ranks and vice versa.
+
+use crate::runtime::ParamEntry;
+use crate::util::error::{Error, Result};
+
+/// One contiguous interval of the flat parameter vector owned by `rank`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardInterval {
+    pub rank: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+impl ShardInterval {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// Which family of tiling produced a layout (documentation + display only —
+/// the planner works purely on intervals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayoutKind {
+    /// contiguous per-rank split of the whole flat vector
+    Fsdp,
+    /// per-tensor split across the model-parallel group
+    Tp,
+}
+
+/// A disjoint cover of `[0, num_params)` by rank-owned intervals, sorted by
+/// `start`. Construct via [`Layout::fsdp`] / [`Layout::tp`]; `validate`
+/// enforces the cover invariant (and every constructor here satisfies it).
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub kind: LayoutKind,
+    pub n_ranks: usize,
+    pub num_params: usize,
+    /// sorted by `start`; disjoint; covers `[0, num_params)` exactly
+    pub shards: Vec<ShardInterval>,
+}
+
+/// Split `[start, start+len)` into `n` near-equal contiguous pieces (the
+/// first `len % n` pieces get one extra element); zero-length pieces are
+/// skipped. Returns `(rank, start, len)` per surviving piece.
+fn split_interval(start: usize, len: usize, n: usize) -> Vec<(usize, usize, usize)> {
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut at = start;
+    for r in 0..n {
+        let l = base + usize::from(r < extra);
+        if l > 0 {
+            out.push((r, at, l));
+        }
+        at += l;
+    }
+    out
+}
+
+/// Build a contiguous tensor map from per-tensor sizes — the synthetic
+/// analogue of the manifest's `param_layout` (benches, examples, tests).
+pub fn contiguous_entries(sizes: &[usize]) -> Vec<ParamEntry> {
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut off = 0;
+    for (i, s) in sizes.iter().enumerate() {
+        out.push(ParamEntry {
+            name: format!("t{i}"),
+            shape: vec![*s],
+            offset: off,
+        });
+        off += s;
+    }
+    out
+}
+
+/// `n_tensors` near-equal contiguous entries tiling `[0, num_params)`.
+pub fn even_entries(num_params: usize, n_tensors: usize) -> Vec<ParamEntry> {
+    assert!(n_tensors > 0, "need at least one tensor");
+    split_interval(0, num_params, n_tensors)
+        .into_iter()
+        .map(|(i, offset, len)| ParamEntry {
+            name: format!("t{i}"),
+            shape: vec![len],
+            offset,
+        })
+        .collect()
+}
+
+impl Layout {
+    /// Trainer-side FSDP layout: `n_ranks` contiguous shards over the flat
+    /// vector.
+    pub fn fsdp(num_params: usize, n_ranks: usize) -> Layout {
+        assert!(n_ranks > 0, "layout needs at least one rank");
+        let shards = split_interval(0, num_params, n_ranks)
+            .into_iter()
+            .map(|(rank, start, len)| ShardInterval { rank, start, len })
+            .collect();
+        Layout {
+            kind: LayoutKind::Fsdp,
+            n_ranks,
+            num_params,
+            shards,
+        }
+    }
+
+    /// Generator-side TP layout: every tensor in `entries` is split across
+    /// the `n_ranks` model-parallel ranks, so rank r owns the r-th slice of
+    /// each tensor. `entries` must tile `[0, num_params)` contiguously in
+    /// offset order (the manifest's `param_layout` does).
+    pub fn tp(num_params: usize, n_ranks: usize, entries: &[ParamEntry]) -> Result<Layout> {
+        assert!(n_ranks > 0, "layout needs at least one rank");
+        let mut shards = Vec::with_capacity(entries.len() * n_ranks);
+        let mut expect = 0usize;
+        for e in entries {
+            if e.offset != expect {
+                return Err(Error::Config(format!(
+                    "param layout gap: entry '{}' at offset {}, expected {expect}",
+                    e.name, e.offset
+                )));
+            }
+            let len: usize = e.shape.iter().product();
+            for (rank, start, l) in split_interval(e.offset, len, n_ranks) {
+                shards.push(ShardInterval {
+                    rank,
+                    start,
+                    len: l,
+                });
+            }
+            expect += len;
+        }
+        if expect != num_params {
+            return Err(Error::Config(format!(
+                "param layout covers {expect} elements, expected {num_params}"
+            )));
+        }
+        Ok(Layout {
+            kind: LayoutKind::Tp,
+            n_ranks,
+            num_params,
+            shards,
+        })
+    }
+
+    /// TP layout with no tensor map available: treat the flat vector as one
+    /// tensor (degenerates to the FSDP tiling, but tagged TP).
+    pub fn tp_flat(num_params: usize, n_ranks: usize) -> Layout {
+        let mut l = Layout::fsdp(num_params, n_ranks);
+        l.kind = LayoutKind::Tp;
+        l
+    }
+
+    /// Check the disjoint-cover invariant.
+    pub fn validate(&self) -> Result<()> {
+        let mut expect = 0usize;
+        for s in &self.shards {
+            if s.start != expect {
+                return Err(Error::Config(format!(
+                    "layout hole/overlap at {}: shard starts at {}",
+                    expect, s.start
+                )));
+            }
+            if s.rank >= self.n_ranks {
+                return Err(Error::Config(format!(
+                    "shard rank {} out of range (n_ranks {})",
+                    s.rank, self.n_ranks
+                )));
+            }
+            expect = s.end();
+        }
+        if expect != self.num_params {
+            return Err(Error::Config(format!(
+                "layout covers {expect} elements, expected {}",
+                self.num_params
+            )));
+        }
+        Ok(())
+    }
+
+    /// Elements owned by `rank` (its shard-group size).
+    pub fn rank_elems(&self, rank: usize) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.rank == rank)
+            .map(|s| s.len)
+            .sum()
+    }
+
+    /// The largest per-rank ownership — at fixed shard size this is what
+    /// cluster DDMA time scales with.
+    pub fn max_rank_elems(&self) -> usize {
+        (0..self.n_ranks).map(|r| self.rank_elems(r)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsdp_covers_and_balances() {
+        for (n, ranks) in [(100, 1), (100, 7), (5, 8), (1000, 16)] {
+            let l = Layout::fsdp(n, ranks);
+            l.validate().unwrap();
+            let max = l.max_rank_elems();
+            let min = (0..ranks).map(|r| l.rank_elems(r)).min().unwrap();
+            assert!(max - min <= 1, "unbalanced: {min}..{max}");
+        }
+    }
+
+    #[test]
+    fn tp_splits_every_tensor() {
+        let es = contiguous_entries(&[64, 32, 10]);
+        let l = Layout::tp(106, 4, &es).unwrap();
+        l.validate().unwrap();
+        // rank 0 owns the head slice of each tensor: 16 + 8 + 3 = 27
+        assert_eq!(l.rank_elems(0), 16 + 8 + 3);
+        // scattered ownership: more intervals than ranks
+        assert!(l.shards.len() > l.n_ranks);
+    }
+
+    #[test]
+    fn tp_rejects_gappy_entries() {
+        let mut es = contiguous_entries(&[10, 10]);
+        es[1].offset = 15;
+        assert!(Layout::tp(25, 2, &es).is_err());
+    }
+
+    #[test]
+    fn even_entries_tile_exactly() {
+        for (n, k) in [(100, 7), (5, 8), (16, 1)] {
+            let es = even_entries(n, k);
+            let total: usize = es
+                .iter()
+                .map(|e| e.shape.iter().product::<usize>())
+                .sum();
+            assert_eq!(total, n);
+            Layout::tp(n, 2, &es).unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn tp_flat_matches_fsdp_tiling() {
+        let a = Layout::tp_flat(97, 3);
+        let b = Layout::fsdp(97, 3);
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.kind, LayoutKind::Tp);
+    }
+}

@@ -1,0 +1,49 @@
+//! The sharded weight-sync plane (paper §5.2, Table 4).
+//!
+//! DDMA's efficiency claim is structural: weights move as many small
+//! per-shard transfers over parallel links, not one monolithic broadcast, so
+//! sync time scales with *shard* size while generators keep decoding until a
+//! complete new version is ready. This module is that structure, end to end:
+//!
+//! ```text
+//!   trainer (FSDP layout)                        generators (TP layout)
+//!   ┌────┬────┬────┬────┐   ReshardPlan          ┌──────────┬──────────┐
+//!   │ r0 │ r1 │ r2 │ r3 │ ──(min per-link ops)─► │ staging  │ staging  │
+//!   └────┴────┴────┴────┘   ShardPacket stream   │ (ver N+1)│ (ver N+1)│
+//!            │               f32 | int8+scale    ├──────────┼──────────┤
+//!            │                                   │ front N  │ front N  │ ◄─ decode
+//!            ▼                                   └────▲─────┴────▲─────┘
+//!     per-shard timing                          swap_at_boundary (fenced)
+//!     (DDMA time = max shard)
+//! ```
+//!
+//! * [`layout`] — [`Layout`] shard maps: trainer-side FSDP (contiguous) and
+//!   generator-side TP (per-tensor split) tilings of the flat vector.
+//! * [`plan`] — [`plan_reshard`]: the minimal per-link [`TransferOp`]
+//!   schedule between any two layouts (interval intersection sweep).
+//! * [`transfer`] — [`ShardPacket`] encode/apply with [`ShardEncoding`]
+//!   (f32 or int8-per-shard via `model::quant`, dequantized at
+//!   attach, error within [`crate::model::int8_error_bound`]) and
+//!   [`TransferTiming`] (DDMA time = max over parallel shards).
+//! * [`swap`] — [`GeneratorSlot`]: double-buffered receive slots with
+//!   version fencing; decode stays on version N while N+1 streams in and
+//!   swaps atomically at a sequence boundary.
+//!
+//! [`crate::ddma::WeightsBus`] is the facade over this plane; the
+//! coordinator's async modes register one slot per generator worker and
+//! record per-trajectory weight versions from the fenced swap. The cluster
+//! cost of a plan is modelled by
+//! [`crate::ddma::topology::DdmaModel::plan_secs`].
+
+pub mod layout;
+pub mod plan;
+pub mod swap;
+pub mod transfer;
+
+pub use layout::{contiguous_entries, even_entries, Layout, LayoutKind, ShardInterval};
+pub use plan::{plan_reshard, ReshardPlan, TransferOp};
+pub use swap::GeneratorSlot;
+pub use transfer::{
+    apply_packet, encode_shard, run_transfer, ShardEncoding, ShardPacket, ShardPayload,
+    TransferTiming,
+};

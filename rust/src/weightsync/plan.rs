@@ -1,0 +1,174 @@
+//! Resharding planner: the minimal per-link transfer schedule between two
+//! [`Layout`]s.
+//!
+//! Every element of the flat vector is owned by exactly one source rank and
+//! exactly one destination rank, so the minimal schedule is the set of
+//! non-empty intersections of source and destination intervals: each
+//! intersection becomes one [`TransferOp`] on the link `src -> dst`, and no
+//! element ever moves twice. Ops on distinct links run in parallel on the
+//! cluster (each GPU pushes only its own shard over its own link), so the
+//! modelled DDMA time is the *max* over links, not the sum — the paper's
+//! linear-scalability property falls straight out of this schedule.
+//!
+//! The sweep is O(|src shards| + |dst shards|): both interval lists are
+//! sorted covers of the same range, so a two-pointer walk visits every
+//! overlap exactly once.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+use crate::weightsync::layout::Layout;
+
+/// Move `[start, start+len)` from source rank `src` to destination rank
+/// `dst`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferOp {
+    pub src: usize,
+    pub dst: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+impl TransferOp {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// The full schedule for one publish: ops sorted by `start`, tiling
+/// `[0, num_params)` exactly once.
+#[derive(Debug, Clone)]
+pub struct ReshardPlan {
+    pub n_src: usize,
+    pub n_dst: usize,
+    pub num_params: usize,
+    pub ops: Vec<TransferOp>,
+}
+
+impl ReshardPlan {
+    /// Elements moved per (src, dst) link.
+    pub fn link_elems(&self) -> BTreeMap<(usize, usize), usize> {
+        let mut out = BTreeMap::new();
+        for op in &self.ops {
+            *out.entry((op.src, op.dst)).or_insert(0) += op.len;
+        }
+        out
+    }
+
+    /// Ops per (src, dst) link (per-tensor launches the schedule issues).
+    pub fn link_ops(&self) -> BTreeMap<(usize, usize), usize> {
+        let mut out = BTreeMap::new();
+        for op in &self.ops {
+            *out.entry((op.src, op.dst)).or_insert(0) += 1;
+        }
+        out
+    }
+
+    /// The busiest link's element count — with links in parallel, transfer
+    /// time scales with this, not with `num_params`.
+    pub fn max_link_elems(&self) -> usize {
+        self.link_elems().values().copied().max().unwrap_or(0)
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.ops.iter().map(|o| o.len).sum()
+    }
+
+    /// Number of active (src, dst) links.
+    pub fn n_links(&self) -> usize {
+        self.link_elems().len()
+    }
+}
+
+/// Compute the minimal transfer schedule from `src` to `dst`.
+pub fn plan_reshard(src: &Layout, dst: &Layout) -> Result<ReshardPlan> {
+    if src.num_params != dst.num_params {
+        return Err(Error::Config(format!(
+            "reshard layouts disagree on size: src {} vs dst {}",
+            src.num_params, dst.num_params
+        )));
+    }
+    src.validate()?;
+    dst.validate()?;
+    let mut ops = Vec::with_capacity(src.shards.len() + dst.shards.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < src.shards.len() && j < dst.shards.len() {
+        let a = &src.shards[i];
+        let b = &dst.shards[j];
+        let start = a.start.max(b.start);
+        let end = a.end().min(b.end());
+        if end > start {
+            ops.push(TransferOp {
+                src: a.rank,
+                dst: b.rank,
+                start,
+                len: end - start,
+            });
+        }
+        // advance whichever interval finishes first
+        if a.end() <= b.end() {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    Ok(ReshardPlan {
+        n_src: src.n_ranks,
+        n_dst: dst.n_ranks,
+        num_params: src.num_params,
+        ops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::weightsync::layout::contiguous_entries;
+
+    fn assert_exact_tiling(plan: &ReshardPlan) {
+        assert_eq!(plan.total_elems(), plan.num_params);
+        let mut at = 0usize;
+        for op in &plan.ops {
+            assert_eq!(op.start, at, "ops must tile without gap/overlap");
+            at = op.end();
+        }
+        assert_eq!(at, plan.num_params);
+    }
+
+    #[test]
+    fn identical_layouts_are_local_copies() {
+        let l = Layout::fsdp(100, 4);
+        let p = plan_reshard(&l, &l).unwrap();
+        assert_exact_tiling(&p);
+        assert_eq!(p.ops.len(), 4);
+        assert!(p.ops.iter().all(|o| o.src == o.dst));
+    }
+
+    #[test]
+    fn fsdp_to_tp_crosses_links() {
+        let es = contiguous_entries(&[40, 40, 20]);
+        let src = Layout::fsdp(100, 4);
+        let dst = Layout::tp(100, 2, &es).unwrap();
+        let p = plan_reshard(&src, &dst).unwrap();
+        assert_exact_tiling(&p);
+        // per-tensor TP vs contiguous FSDP must produce cross-rank traffic
+        assert!(p.ops.iter().any(|o| o.src != o.dst));
+        assert!(p.n_links() > 2);
+    }
+
+    #[test]
+    fn max_link_below_total() {
+        let src = Layout::fsdp(1000, 8);
+        let dst = Layout::tp_flat(1000, 4);
+        let p = plan_reshard(&src, &dst).unwrap();
+        assert_exact_tiling(&p);
+        assert!(p.max_link_elems() < p.total_elems());
+        // contiguous->contiguous with 8->4 ranks: exactly one op per src shard
+        assert_eq!(p.ops.len(), 8);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(plan_reshard(&Layout::fsdp(10, 2), &Layout::fsdp(12, 2)).is_err());
+    }
+}

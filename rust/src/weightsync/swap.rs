@@ -1,0 +1,233 @@
+//! Generation-overlapped double buffering: per-generator receive slots with
+//! version fencing.
+//!
+//! Each generator owns a [`GeneratorSlot`] with two buffers:
+//!
+//! * **front** — the complete version the decode loop reads (zero-copy
+//!   `Arc` attach, exactly like the old monolithic bus);
+//! * **staging** — the next version streaming in shard by shard while the
+//!   generator keeps decoding on front.
+//!
+//! The fence: staging becomes swappable only when every op of its plan has
+//! landed (`received == expected`), and the swap happens only when the
+//! *generator* calls [`GeneratorSlot::swap_at_boundary`] — a sequence
+//! boundary of its own choosing (chunk edges, in this codebase). Decode
+//! therefore never observes a torn or partial version, and the stall a
+//! publish imposes on generation shrinks from "copy the whole snapshot" to
+//! one pointer exchange. Publishes are latest-wins: if version N+2 starts
+//! streaming before N+1 was swapped in, N+1 is abandoned — generators always
+//! jump to the freshest complete version (paper §4.1 semantics).
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::model::VersionedParams;
+use crate::weightsync::transfer::{apply_packet, ShardPacket};
+
+/// The in-flight (staging) buffer: version N+1 while decode runs on N.
+struct Staging {
+    version: u64,
+    data: Vec<f32>,
+    /// start offsets of ops landed so far — ops of one plan tile the vector
+    /// disjointly, so `start` identifies an op and duplicates cannot count
+    /// twice; the fence opens at `expected` DISTINCT ops
+    received: BTreeSet<usize>,
+    expected: usize,
+}
+
+/// One generator's double-buffered weight slot.
+pub struct GeneratorSlot {
+    num_params: usize,
+    front: RwLock<Arc<VersionedParams>>,
+    staging: Mutex<Option<Staging>>,
+    swaps: AtomicU64,
+    stall_nanos: AtomicU64,
+    dropped_versions: AtomicU64,
+}
+
+impl GeneratorSlot {
+    pub fn new(init: Arc<VersionedParams>) -> Arc<GeneratorSlot> {
+        let num_params = init.data.len();
+        Arc::new(GeneratorSlot {
+            num_params,
+            front: RwLock::new(init),
+            staging: Mutex::new(None),
+            swaps: AtomicU64::new(0),
+            stall_nanos: AtomicU64::new(0),
+            dropped_versions: AtomicU64::new(0),
+        })
+    }
+
+    /// Zero-copy attach to the current front version.
+    pub fn attach(&self) -> Arc<VersionedParams> {
+        self.front.read().unwrap().clone()
+    }
+
+    pub fn front_version(&self) -> u64 {
+        self.front.read().unwrap().version
+    }
+
+    /// Publisher side: open staging for `version`, expecting `expected_ops`
+    /// packets. Latest-wins: an unswapped older staging is abandoned.
+    pub fn begin(&self, version: u64, expected_ops: usize) {
+        let mut guard = self.staging.lock().unwrap();
+        if let Some(old) = guard.as_ref() {
+            if old.version >= version {
+                return; // never regress the staging version
+            }
+            self.dropped_versions.fetch_add(1, Ordering::Relaxed);
+        }
+        // reuse the abandoned staging allocation when shapes match
+        let data = match guard.take() {
+            Some(old) if old.data.len() == self.num_params => old.data,
+            _ => vec![0.0f32; self.num_params],
+        };
+        *guard = Some(Staging {
+            version,
+            data,
+            received: BTreeSet::new(),
+            expected: expected_ops.max(1),
+        });
+    }
+
+    /// Publisher side: land one shard. Packets for any version other than
+    /// the currently staging one are dropped (the fence); duplicated
+    /// packets overwrite their own interval but never advance the fence.
+    pub fn recv(&self, pkt: &ShardPacket) {
+        let mut guard = self.staging.lock().unwrap();
+        let Some(staging) = guard.as_mut() else { return };
+        if staging.version != pkt.version {
+            return;
+        }
+        apply_packet(&mut staging.data, pkt);
+        staging.received.insert(pkt.op.start);
+    }
+
+    /// Generator side, called at a sequence boundary: if a complete staged
+    /// version is waiting, promote it to front (one pointer exchange) and
+    /// return it. Incomplete staging never swaps — that is the version
+    /// fence.
+    pub fn swap_at_boundary(&self) -> Option<Arc<VersionedParams>> {
+        let t0 = Instant::now();
+        let mut guard = self.staging.lock().unwrap();
+        let ready = matches!(guard.as_ref(), Some(s) if s.received.len() >= s.expected);
+        if !ready {
+            return None;
+        }
+        let staging = guard.take().unwrap();
+        let snap = Arc::new(VersionedParams::new(staging.version, staging.data));
+        *self.front.write().unwrap() = snap.clone();
+        drop(guard);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        self.stall_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Some(snap)
+    }
+
+    /// Completed swaps so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Staged versions abandoned because a newer publish arrived first.
+    pub fn dropped_versions(&self) -> u64 {
+        self.dropped_versions.load(Ordering::Relaxed)
+    }
+
+    /// Total generator-side stall spent in `swap_at_boundary` calls that
+    /// actually promoted a version — the whole cost a publish imposes on
+    /// the decode loop in overlapped mode (no-op boundary polls are not
+    /// counted; they cost one uncontended lock acquire).
+    pub fn stall_secs(&self) -> f64 {
+        self.stall_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Mean stall per completed swap.
+    pub fn mean_stall_secs(&self) -> f64 {
+        let n = self.swaps();
+        if n == 0 {
+            0.0
+        } else {
+            self.stall_secs() / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::weightsync::plan::TransferOp;
+    use crate::weightsync::transfer::{encode_shard, ShardEncoding};
+
+    fn op(start: usize, len: usize) -> TransferOp {
+        TransferOp {
+            src: 0,
+            dst: 0,
+            start,
+            len,
+        }
+    }
+
+    #[test]
+    fn incomplete_staging_never_swaps() {
+        let slot = GeneratorSlot::new(Arc::new(VersionedParams::new(0, vec![0.0; 8])));
+        let next = vec![1.0f32; 8];
+        slot.begin(1, 2);
+        slot.recv(&encode_shard(&next, 1, op(0, 4), ShardEncoding::F32));
+        assert!(slot.swap_at_boundary().is_none(), "fence must hold");
+        assert_eq!(slot.front_version(), 0);
+        slot.recv(&encode_shard(&next, 1, op(4, 4), ShardEncoding::F32));
+        let snap = slot.swap_at_boundary().expect("complete staging swaps");
+        assert_eq!(snap.version, 1);
+        assert_eq!(*snap.data, next);
+        assert_eq!(slot.front_version(), 1);
+        // nothing left to swap
+        assert!(slot.swap_at_boundary().is_none());
+        assert_eq!(slot.swaps(), 1);
+    }
+
+    #[test]
+    fn stale_packets_are_dropped() {
+        let slot = GeneratorSlot::new(Arc::new(VersionedParams::new(0, vec![0.0; 4])));
+        let v1 = vec![1.0f32; 4];
+        let v2 = vec![2.0f32; 4];
+        slot.begin(1, 1);
+        // version 2 overtakes before v1's packet lands
+        slot.begin(2, 1);
+        slot.recv(&encode_shard(&v1, 1, op(0, 4), ShardEncoding::F32)); // stale, dropped
+        assert!(slot.swap_at_boundary().is_none());
+        slot.recv(&encode_shard(&v2, 2, op(0, 4), ShardEncoding::F32));
+        let snap = slot.swap_at_boundary().unwrap();
+        assert_eq!(snap.version, 2);
+        assert_eq!(*snap.data, v2);
+        assert_eq!(slot.dropped_versions(), 1);
+    }
+
+    #[test]
+    fn duplicate_packets_cannot_open_the_fence() {
+        // Regression: the fence counts DISTINCT ops (by start offset), so a
+        // duplicated packet plus a missing one must not promote a torn
+        // buffer.
+        let slot = GeneratorSlot::new(Arc::new(VersionedParams::new(0, vec![0.0; 8])));
+        let next = vec![1.0f32; 8];
+        slot.begin(1, 2);
+        let first = encode_shard(&next, 1, op(0, 4), ShardEncoding::F32);
+        slot.recv(&first);
+        slot.recv(&first); // duplicate of op 0; op 1 still missing
+        assert!(slot.swap_at_boundary().is_none(), "fence opened on duplicate");
+        slot.recv(&encode_shard(&next, 1, op(4, 4), ShardEncoding::F32));
+        assert_eq!(slot.swap_at_boundary().unwrap().version, 1);
+    }
+
+    #[test]
+    fn begin_never_regresses() {
+        let slot = GeneratorSlot::new(Arc::new(VersionedParams::new(0, vec![0.0; 4])));
+        slot.begin(3, 1);
+        slot.begin(2, 1); // ignored
+        let v3 = vec![3.0f32; 4];
+        slot.recv(&encode_shard(&v3, 3, op(0, 4), ShardEncoding::F32));
+        assert_eq!(slot.swap_at_boundary().unwrap().version, 3);
+    }
+}

@@ -150,6 +150,8 @@ fn des_async_at_least_as_fast_and_lag_bounded() {
             score_secs: g.f64(0.0, 1.0),
             queue_capacity: g.usize(1, 4),
             partial_rollout_cap: f64::INFINITY,
+            weight_sync_secs: 0.0,
+            sync_overlap: false,
             seed: g.i64(0, 1 << 30) as u64,
         };
         let (s, a) = simulate_timeline(&cfg);

@@ -1,17 +1,17 @@
 #!/usr/bin/env bash
 # Tier-1 verification entry point (see ROADMAP.md).
 #
-#   ./verify.sh            build + test (+ advisory fmt check)
-#   ./verify.sh --strict   also fail on rustfmt drift
+#   ./verify.sh            build + test (+ advisory fmt & clippy checks)
+#   ./verify.sh --strict   also fail on rustfmt drift / clippy findings
 #
-# The fmt check is advisory by default because the offline image may lack
-# a rustfmt component; build + test are the hard gate.
+# The fmt and clippy checks are advisory by default because the offline
+# image may lack those components; build + test are the hard gate.
 
 set -uo pipefail
 cd "$(dirname "$0")"
 
-strict_fmt=0
-[ "${1:-}" = "--strict" ] && strict_fmt=1
+strict=0
+[ "${1:-}" = "--strict" ] && strict=1
 
 fail=0
 
@@ -25,10 +25,24 @@ echo "== cargo fmt --check (advisory) =="
 if cargo fmt --version >/dev/null 2>&1; then
     if ! cargo fmt --all -- --check; then
         echo "warning: rustfmt drift detected"
-        [ "$strict_fmt" = 1 ] && fail=1
+        [ "$strict" = 1 ] && fail=1
     fi
 else
     echo "rustfmt not installed; skipping"
+fi
+
+echo "== cargo clippy -q --all-targets (advisory) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    # clippy exits 0 on plain warnings; strict mode must deny them for the
+    # gate to exist
+    clippy_flags=""
+    [ "$strict" = 1 ] && clippy_flags="-D warnings"
+    if ! cargo clippy -q --all-targets -- $clippy_flags; then
+        echo "warning: clippy findings detected"
+        [ "$strict" = 1 ] && fail=1
+    fi
+else
+    echo "clippy not installed; skipping"
 fi
 
 if [ "$fail" = 0 ]; then
