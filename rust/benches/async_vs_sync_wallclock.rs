@@ -15,7 +15,12 @@ use llamarl::util::bench::Table;
 
 fn main() {
     if !std::path::Path::new("artifacts/nano/manifest.json").exists() {
-        eprintln!("artifacts/nano missing — run `make artifacts` first");
+        // the explicit marker lets CI logs distinguish "skipped" from
+        // "ran and measured nothing"
+        println!(
+            "BENCH SKIPPED: artifacts/nano/manifest.json missing — run \
+             `make artifacts` (or `python -m compile.aot --preset nano`) first"
+        );
         std::process::exit(0);
     }
     println!("\n=== async vs sync wall-clock, real pipeline (nano artifacts) ===\n");

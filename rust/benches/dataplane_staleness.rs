@@ -22,7 +22,7 @@ use llamarl::data::{Difficulty, Problem};
 use llamarl::rl::{FinishReason, Trajectory};
 use llamarl::simulator::des::simulate_async;
 use llamarl::simulator::{simulate_async_buffered, BufferedDesConfig, DesConfig};
-use llamarl::util::bench::{bench, Table};
+use llamarl::util::bench::{bench, bench_rounds, Table};
 
 fn traj(group_id: u64, gen_version: u64) -> Trajectory {
     Trajectory {
@@ -45,7 +45,7 @@ fn traj(group_id: u64, gen_version: u64) -> Trajectory {
     }
 }
 
-fn panel_des() {
+fn panel_des() -> (bool, bool) {
     println!("--- panel 1: DES, lag-matched channel vs store (gen_sigma=1.0) ---\n");
     let mut t = Table::new(&[
         "lag bound",
@@ -61,7 +61,7 @@ fn panel_des() {
     for bound in [1usize, 2, 4] {
         let (mut ch_tot, mut st_tot, mut ch_lag, mut st_lag, mut st_max, mut drops) =
             (0.0, 0.0, 0.0, 0.0, 0.0f64, 0usize);
-        let seeds = 5;
+        let seeds = bench_rounds(5); // CI smoke: LLAMARL_BENCH_ROUNDS caps
         for seed in 0..seeds as u64 {
             let cfg = DesConfig {
                 steps: 200,
@@ -108,12 +108,13 @@ fn panel_des() {
         if store_never_slower { "PASS" } else { "FAIL" },
         if lag_always_bounded { "PASS" } else { "FAIL" },
     );
+    (store_never_slower, lag_always_bounded)
 }
 
-fn panel_threads() {
+fn panel_threads() -> (f64, f64, bool) {
     println!("\n--- panel 2: threaded driver, real transports (40 steps, 2 producers) ---\n");
     let base = DriverConfig {
-        train_steps: 40,
+        train_steps: bench_rounds(40) as u64,
         ..DriverConfig::default()
     };
     let bound = 4u64;
@@ -192,6 +193,7 @@ fn panel_threads() {
         },
         if bound_ok { "PASS" } else { "FAIL" },
     );
+    (channel_rate, store_fifo_rate, bound_ok)
 }
 
 fn panel_hot_path() {
@@ -206,7 +208,7 @@ fn panel_hot_path() {
         sampling: SamplingStrategy::Fifo,
         seed: 0,
     });
-    let r = bench("store push+sample (256 rows, 4 shards)", 3, 20, || {
+    let r = bench("store push+sample (256 rows, 4 shards)", 3, bench_rounds(20), || {
         for i in 0..rows as u64 {
             store.push_group(vec![traj(i, 0)]).unwrap();
         }
@@ -220,7 +222,7 @@ fn panel_hot_path() {
     });
     r.print();
 
-    let r = bench("channel send+recv (256 rows)", 3, 20, || {
+    let r = bench("channel send+recv (256 rows)", 3, bench_rounds(20), || {
         let (tx, rx) = gather_channel("bench", rows + 1);
         for i in 0..rows as u64 {
             tx.send(Message::Scored(vec![traj(i, 0)])).unwrap();
@@ -237,7 +239,40 @@ fn panel_hot_path() {
 
 fn main() {
     println!("\n=== data plane: staleness-aware store vs direct channel ===\n");
-    panel_des();
-    panel_threads();
+    let (store_never_slower, lag_always_bounded) = panel_des();
+    let (channel_rate, store_fifo_rate, sampled_lag_bounded) = panel_threads();
     panel_hot_path();
+
+    // machine-readable summary for the CI artifact upload, mirroring
+    // BENCH_weightsync.json
+    let json = llamarl::util::json::Value::object(vec![
+        (
+            "channel_rows_per_sec",
+            llamarl::util::json::Value::num(channel_rate),
+        ),
+        (
+            "store_fifo_rows_per_sec",
+            llamarl::util::json::Value::num(store_fifo_rate),
+        ),
+        (
+            "store_never_slower",
+            llamarl::util::json::Value::Bool(store_never_slower),
+        ),
+        (
+            "lag_always_bounded",
+            llamarl::util::json::Value::Bool(lag_always_bounded),
+        ),
+        (
+            "sampled_lag_bounded",
+            llamarl::util::json::Value::Bool(sampled_lag_bounded),
+        ),
+    ]);
+    let line = json.to_string();
+    println!("BENCH_dataplane.json {line}");
+    let target_dir = std::env::var("CARGO_TARGET_DIR")
+        .unwrap_or_else(|_| format!("{}/../target", env!("CARGO_MANIFEST_DIR")));
+    let path = format!("{target_dir}/BENCH_dataplane.json");
+    if let Err(e) = std::fs::write(&path, &line) {
+        eprintln!("warning: could not write {path}: {e}");
+    }
 }

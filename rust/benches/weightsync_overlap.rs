@@ -1,46 +1,52 @@
-//! Bench: the sharded weight-sync plane — monolithic vs sharded vs
-//! sharded+quantized+overlapped sync (paper §5.2, Table 4).
+//! Bench: the sharded weight-sync plane — monolithic vs inline-sharded vs
+//! background-streamed publishes, across wire encodings (paper §5.2,
+//! Table 4).
 //!
 //! Panel 1 (cluster model): the resharding planner's schedule costed on the
 //! calibrated link model for the 8B/70B/405B rows — monolithic broadcast
 //! (all bytes over one link) vs the planned per-link max, bf16 vs int8 wire
 //! encoding.
 //!
-//! Panel 2 (real, this testbed): *sync-attributable* generator stall per
-//! publish at equal parameter count. What differs between the protocols is
-//! WHEN the snapshot gets materialized into generator-local memory — the
-//! testbed analogue of the cluster's "pull the new weights over the
-//! network". Monolithic: the full-vector copy happens on the generator
-//! thread at the refresh boundary (an in-process `Arc` attach hides this
-//! cost, so the arm performs the copy explicitly — on a cluster there is
-//! no shared memory to hide behind). Sharded+overlapped: the copy streamed
-//! into the double-buffered slot off the boundary (on the publisher's
-//! clock here, on DMA engines on a cluster), so the boundary pays only the
-//! fenced O(1) swap. The device-upload cost downstream of either path is
-//! identical in both arms (coordinator::generator::upload_params) and is
-//! excluded as a common term. Acceptance: sharded+overlapped boundary
-//! stall strictly below monolithic, and the quantized path's round-trip
-//! error within `model::int8_error_bound`.
+//! Panel 2 (real, this testbed): per-arm, at equal parameter count —
 //!
-//! Panel 3 (threads): decode keeps running while a version streams in.
+//! * **publish blocked** — how long the *trainer* thread is stuck inside
+//!   `WeightsBus::publish`. Inline arms pay the whole encode + fan-out;
+//!   background arms only the version mint + queue handoff (the tentpole:
+//!   acceptance requires >= 5x lower for the executor vs inline).
+//! * **gen stall** — how long the *generator* pays at its refresh boundary.
+//!   Monolithic: the full-snapshot copy. Sharded: the fenced O(1) swap.
+//! * **payload MB** — wire bytes per publish: int8 ~4x under f32; sparse
+//!   delta orders of magnitude under it at low update density.
+//!
+//! Exactness is asserted in-loop: full/delta arms must hand the generator a
+//! bit-exact copy of the published snapshot; int8/top-k within their
+//! documented bounds.
+//!
+//! Panel 3 (threads): decode keeps running while a version streams in, and
+//! a publish burst shows latest-wins coalescing.
 //!
 //! Panel 4 (DES): end-to-end effect of overlapping the 70B planned sync
-//! cost on the async timeline.
+//! cost — and of backgrounding the publish fan-out — on the async timeline.
 //!
 //! Emits a machine-readable summary: the `BENCH_weightsync.json` line on
-//! stdout (also written to target/BENCH_weightsync.json).
+//! stdout (also written to target/BENCH_weightsync.json; the committed
+//! repo-root baseline is compared by tools/bench_gate.sh).
+//!
+//! CI smoke: `LLAMARL_BENCH_ROUNDS=3` caps the measured rounds.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use llamarl::ddma::topology::DdmaModel;
-use llamarl::ddma::WeightsBus;
+use llamarl::ddma::{BusOptions, WeightsBus};
 use llamarl::simulator::des::simulate_async;
 use llamarl::simulator::{simulate_async_buffered, BufferedDesConfig, DesConfig};
-use llamarl::util::bench::{fmt_secs, Table};
+use llamarl::util::bench::{bench_rounds, fmt_secs, Table};
 use llamarl::util::json::Value;
 use llamarl::util::stats::summarize;
-use llamarl::weightsync::{even_entries, plan_reshard, run_transfer, Layout, ShardEncoding};
+use llamarl::weightsync::{
+    even_entries, plan_reshard, run_transfer, Layout, ShardEncoding,
+};
 
 fn panel_cluster(model: &DdmaModel) -> (f64, f64) {
     println!("--- panel 1: planner schedule on the calibrated link model ---\n");
@@ -91,18 +97,27 @@ fn panel_cluster(model: &DdmaModel) -> (f64, f64) {
 
 struct Arm {
     name: &'static str,
-    publish_secs: f64,
+    /// p50 seconds the publisher thread is blocked inside publish()
+    publish_blocked_secs: f64,
+    /// p50 generator boundary stall per refresh
     stall_secs: f64,
     shard_max_secs: f64,
     payload_mb: f64,
+    /// streamed weights identical (bitwise) to the published snapshot
+    exact: bool,
+    /// realized |err| vs the published snapshot at the final round
+    max_abs_err: f32,
 }
 
 fn measure_monolithic(p: usize, rounds: usize) -> Arm {
     let bus = WeightsBus::new(vec![0.0; p]);
     let mut stalls = Vec::with_capacity(rounds);
+    let mut blocked = Vec::with_capacity(rounds);
     for v in 1..=rounds {
         let data = vec![v as f32; p];
+        let t_pub = Instant::now();
         bus.publish(data);
+        blocked.push(t_pub.elapsed().as_secs_f64());
         // Generator refresh at the boundary: attach, then materialize the
         // snapshot into generator-local memory — the network pull a cluster
         // generator performs here, made explicit because the in-process Arc
@@ -116,106 +131,176 @@ fn measure_monolithic(p: usize, rounds: usize) -> Arm {
     }
     Arm {
         name: "monolithic",
-        publish_secs: bus.mean_publish_secs(),
+        publish_blocked_secs: summarize(&blocked).p50,
         stall_secs: summarize(&stalls).p50,
         shard_max_secs: f64::NAN,
         payload_mb: p as f64 * 4.0 / 1e6,
+        exact: true,
+        max_abs_err: 0.0,
     }
 }
 
+/// Deterministic per-round update: `frac` of the elements move (evenly
+/// strided, phase-shifted by the round so the touched set rotates).
+fn mutate(data: &mut [f32], round: usize, frac: f64) -> f32 {
+    let stride = ((1.0 / frac) as usize).max(1);
+    let mut max_update = 0.0f32;
+    let mut i = round % stride;
+    while i < data.len() {
+        let upd = 0.01 + (i % 7) as f32 * 0.001;
+        data[i] += upd;
+        max_update = max_update.max(upd);
+        i += stride;
+    }
+    max_update
+}
+
+/// One sharded arm: `background` routes the fan-out through the streaming
+/// executor; `update_frac` is the fraction of weights that move per round
+/// (1.0 = dense update — the regime the full/int8 encodings assume; sparse
+/// regimes are where delta/top-k earn their keep). Returns the arm plus the
+/// cumulative documented error bound for lossy encodings.
 fn measure_sharded(
     name: &'static str,
     p: usize,
     rounds: usize,
     encoding: ShardEncoding,
-) -> (Arm, f32, f32) {
+    background: bool,
+    update_frac: f64,
+) -> (Arm, f32) {
     let es = even_entries(p, 16);
-    let src = Layout::fsdp(p, 8);
-    let dst = Layout::tp(p, 4, &es).expect("entries tile");
-    let bus = WeightsBus::with_layouts(vec![0.0; p], src, dst, encoding).unwrap();
+    let mut opts = BusOptions::new(Layout::fsdp(p, 8), Layout::tp(p, 4, &es).expect("entries"));
+    opts.encoding = encoding;
+    opts.background = background;
+    let bus = WeightsBus::with_options(vec![0.0; p], opts).unwrap();
     let slot = bus.register_generator();
     let mut stalls = Vec::with_capacity(rounds);
+    let mut blocked = Vec::with_capacity(rounds);
+    let mut cur = vec![0.0f32; p];
+    let mut cum_bound = 0.0f32;
+    let mut exact = true;
+    let mut max_err = 0.0f32;
     for v in 1..=rounds {
-        let data = vec![v as f32 * 0.01; p];
-        // publisher side: encode + stream the plan into the staging buffer
-        // (off the generator's critical path once threads are involved)
-        bus.publish(data);
+        cum_bound += mutate(&mut cur, v, update_frac);
+        // publisher side: with the executor this returns after the enqueue;
+        // inline it returns after the whole encode + fan-out
+        let t_pub = Instant::now();
+        bus.publish(cur.clone());
+        blocked.push(t_pub.elapsed().as_secs_f64());
+        // settle the background stream so the boundary swap below measures
+        // the swap itself, not stream completion (generators never do this;
+        // they just keep decoding)
+        bus.flush();
         // generator side: the fenced swap is the entire boundary cost
         let t0 = Instant::now();
-        let snap = slot.swap_at_boundary().expect("staging complete after publish");
+        let snap = slot.swap_at_boundary().expect("staging complete after flush");
         std::hint::black_box(snap.version);
         stalls.push(t0.elapsed().as_secs_f64());
+        for (a, b) in snap.data.iter().zip(&cur) {
+            if a.to_bits() != b.to_bits() {
+                exact = false;
+                max_err = max_err.max((a - b).abs());
+            }
+        }
     }
-    // quantization fidelity, measured on a fresh transfer of random-ish data
-    // over the very plan the bus streams
-    let probe: Vec<f32> = (0..p).map(|i| ((i % 977) as f32 * 0.37).sin()).collect();
-    let mut out = vec![0.0f32; p];
-    let fid = run_transfer(&probe, &mut out, bus.plan(), 1, encoding);
     (
         Arm {
             name,
-            publish_secs: bus.mean_publish_secs(),
+            publish_blocked_secs: summarize(&blocked).p50,
             stall_secs: summarize(&stalls).p50,
             shard_max_secs: bus.mean_shard_max_secs(),
             payload_mb: bus.bytes_streamed() as f64 / rounds as f64 / 1e6,
+            exact,
+            max_abs_err: max_err,
         },
-        fid.max_abs_err,
-        fid.err_bound,
+        cum_bound,
     )
 }
 
-fn panel_measured(p: usize, rounds: usize) -> (Vec<Arm>, f32, f32) {
-    println!("--- panel 2: measured generator stall per publish ({p} params) ---\n");
+struct Panel2 {
+    arms: Vec<Arm>,
+    quant_err: f32,
+    quant_bound: f32,
+    topk_bound: f32,
+}
+
+fn panel_measured(p: usize, rounds: usize) -> Panel2 {
+    println!("--- panel 2: publish blocked + generator stall per arm ({p} params, {rounds} rounds) ---\n");
     let mono = measure_monolithic(p, rounds);
-    let (sharded, _, _) = measure_sharded("sharded+overlap", p, rounds, ShardEncoding::F32);
-    let (quant, err, bound) =
-        measure_sharded("sharded+int8+overlap", p, rounds, ShardEncoding::Int8);
-    let arms = vec![mono, sharded, quant];
+    let (inline_f32, _) =
+        measure_sharded("inline f32", p, rounds, ShardEncoding::F32, false, 1.0);
+    let (inline_int8, _) =
+        measure_sharded("inline int8", p, rounds, ShardEncoding::Int8, false, 1.0);
+    let (bg_f32, _) = measure_sharded("bg f32", p, rounds, ShardEncoding::F32, true, 1.0);
+    let (bg_delta, _) =
+        measure_sharded("bg delta (1% upd)", p, rounds, ShardEncoding::Delta, true, 0.01);
+    let (bg_topk, topk_bound) =
+        measure_sharded("bg topk (3% upd)", p, rounds, ShardEncoding::TopK, true, 0.03);
+
+    // int8 fidelity on a fresh transfer over the very plan the bus streams
+    let es = even_entries(p, 16);
+    let plan = plan_reshard(&Layout::fsdp(p, 8), &Layout::tp(p, 4, &es).unwrap()).unwrap();
+    let probe: Vec<f32> = (0..p).map(|i| ((i % 977) as f32 * 0.37).sin()).collect();
+    let mut out = vec![0.0f32; p];
+    let fid = run_transfer(&probe, &mut out, &plan, 1, ShardEncoding::Int8);
+
+    let arms = vec![mono, inline_f32, inline_int8, bg_f32, bg_delta, bg_topk];
     let mut t = Table::new(&[
         "arm",
-        "publish (trainer)",
-        "gen stall/publish",
+        "publish blocked (trainer)",
+        "gen stall/refresh",
         "max-shard (parallel model)",
         "payload MB",
+        "exact",
     ]);
     for a in &arms {
         t.row(vec![
             a.name.into(),
-            fmt_secs(a.publish_secs),
+            fmt_secs(a.publish_blocked_secs),
             fmt_secs(a.stall_secs),
             if a.shard_max_secs.is_nan() {
                 "-".into()
             } else {
                 fmt_secs(a.shard_max_secs)
             },
-            format!("{:.2}", a.payload_mb),
+            format!("{:.3}", a.payload_mb),
+            if a.exact {
+                "bit".into()
+            } else {
+                format!("~{:.1e}", a.max_abs_err)
+            },
         ]);
     }
     t.print();
     println!(
-        "\nquantized round-trip: max |err| {err:.3e} <= bound {bound:.3e}: {}\n",
-        if err <= bound { "PASS" } else { "FAIL" }
+        "\nquantized round-trip: max |err| {:.3e} <= bound {:.3e}: {}\n",
+        fid.max_abs_err,
+        fid.err_bound,
+        if fid.max_abs_err <= fid.err_bound {
+            "PASS"
+        } else {
+            "FAIL"
+        }
     );
-    (arms, err, bound)
+    Panel2 {
+        arms,
+        quant_err: fid.max_abs_err,
+        quant_bound: fid.err_bound,
+        topk_bound,
+    }
 }
 
-fn panel_threads(p: usize) {
-    println!("--- panel 3: decode keeps running while a version streams in ---\n");
+fn panel_threads(p: usize) -> u64 {
+    println!("--- panel 3: decode runs while versions stream; bursts coalesce ---\n");
     let es = even_entries(p, 16);
-    let bus = Arc::new(
-        WeightsBus::with_layouts(
-            vec![0.0; p],
-            Layout::fsdp(p, 8),
-            Layout::tp(p, 4, &es).unwrap(),
-            ShardEncoding::F32,
-        )
-        .unwrap(),
-    );
+    let mut opts = BusOptions::new(Layout::fsdp(p, 8), Layout::tp(p, 4, &es).unwrap());
+    opts.background = true;
+    let bus = Arc::new(WeightsBus::with_options(vec![0.0; p], opts).unwrap());
     let slot = bus.register_generator();
     let publisher = {
         let bus = bus.clone();
         std::thread::spawn(move || {
-            for v in 1..=5u64 {
+            for v in 1..=8u64 {
                 bus.publish(vec![v as f32; p]);
             }
         })
@@ -224,15 +309,15 @@ fn panel_threads(p: usize) {
     let mut swaps = 0u64;
     loop {
         // "decode": the front version stays attached and complete while the
-        // publisher streams staging buffers underneath it
+        // link-group workers stream staging buffers underneath it
         let front = slot.attach();
         std::hint::black_box(front.version);
         attaches += 1;
         if slot.swap_at_boundary().is_some() {
             swaps += 1;
         }
-        if bus.version() >= 5 {
-            // publisher done: drain whatever is still staged, then stop
+        if bus.version() >= 8 {
+            bus.flush();
             while slot.swap_at_boundary().is_some() {
                 swaps += 1;
             }
@@ -240,14 +325,18 @@ fn panel_threads(p: usize) {
         }
     }
     publisher.join().unwrap();
+    let coalesced = bus.coalesced_publishes();
     println!(
         "generator attached {attaches} times (decoding on version N) while {} \
-         publishes streamed in; {} fenced swaps, {} versions skipped \
+         publishes streamed in the background; {} fenced swaps, {} versions \
+         dropped at slots, {} jobs coalesced in link-group queues \
          (latest-wins)\n",
         bus.publish_count(),
         swaps,
         slot.dropped_versions(),
+        coalesced,
     );
+    coalesced
 }
 
 fn panel_des(planned_70b_bf16: f64) {
@@ -255,6 +344,8 @@ fn panel_des(planned_70b_bf16: f64) {
     let base = DesConfig {
         steps: 100,
         weight_sync_secs: planned_70b_bf16,
+        // inline publish fan-out: the trainer pays the planned stream cost
+        publish_block_secs: planned_70b_bf16,
         ..DesConfig::default()
     };
     let blocking = simulate_async(&base);
@@ -262,9 +353,15 @@ fn panel_des(planned_70b_bf16: f64) {
         sync_overlap: true,
         ..base.clone()
     });
+    let background = simulate_async(&DesConfig {
+        sync_overlap: true,
+        background_publish: true,
+        ..base.clone()
+    });
     let buffered = simulate_async_buffered(
         &DesConfig {
             sync_overlap: true,
+            background_publish: true,
             ..base.clone()
         },
         &BufferedDesConfig::default(),
@@ -273,7 +370,8 @@ fn panel_des(planned_70b_bf16: f64) {
     for (name, r) in [
         ("async, blocking sync", &blocking),
         ("async, overlapped sync", &overlapped),
-        ("buffered, overlapped sync", &buffered),
+        ("async, overlapped + bg publish", &background),
+        ("buffered, overlapped + bg publish", &buffered),
     ] {
         t.row(vec![
             name.into(),
@@ -287,26 +385,40 @@ fn panel_des(planned_70b_bf16: f64) {
 }
 
 fn main() {
-    println!("\n=== weight sync: monolithic vs sharded vs quantized+overlapped ===\n");
+    println!("\n=== weight sync: inline vs background-streamed, per encoding ===\n");
     let model = DdmaModel::calibrated();
     let (planned_70b_bf16, planned_70b_int8) = panel_cluster(&model);
 
     let p = 1 << 21; // 2M params, 8 MB f32 — big enough to resolve copies
-    let rounds = 20;
-    let (arms, quant_err, quant_bound) = panel_measured(p, rounds);
-    panel_threads(p);
+    let rounds = bench_rounds(20);
+    let panel2 = panel_measured(p, rounds);
+    let coalesced = panel_threads(p);
     panel_des(planned_70b_bf16);
 
-    let mono_stall = arms[0].stall_secs;
-    let overlap_stall = arms[1].stall_secs;
-    let quant_stall = arms[2].stall_secs;
+    let [mono, inline_f32, inline_int8, bg_f32, bg_delta, bg_topk] = &panel2.arms[..] else {
+        unreachable!("panel 2 produces six arms")
+    };
+    let mono_stall = mono.stall_secs;
+    let overlap_stall = inline_f32.stall_secs;
+    let quant_stall = inline_int8.stall_secs;
     let stall_ok = overlap_stall < mono_stall && quant_stall < mono_stall;
-    let quant_ok = quant_err <= quant_bound;
+    let quant_ok = panel2.quant_err <= panel2.quant_bound;
+    let overlap_stall_speedup = mono_stall / overlap_stall.max(1e-12);
+    let publish_blocked_speedup =
+        inline_f32.publish_blocked_secs / bg_f32.publish_blocked_secs.max(1e-12);
+    let blocked_5x = publish_blocked_speedup >= 5.0;
+    let delta_exact = bg_f32.exact && bg_delta.exact;
+    let topk_ok = bg_topk.max_abs_err <= panel2.topk_bound;
     println!(
         "shape checks: sharded+overlapped stall strictly below monolithic: {}; \
-         quantized round-trip within bound: {}",
+         quantized round-trip within bound: {}; background publish blocked \
+         >=5x below inline ({publish_blocked_speedup:.1}x): {}; delta streams \
+         bit-exact: {}; top-k within cumulative bound: {}",
         if stall_ok { "PASS" } else { "FAIL" },
         if quant_ok { "PASS" } else { "FAIL" },
+        if blocked_5x { "PASS" } else { "FAIL" },
+        if delta_exact { "PASS" } else { "FAIL" },
+        if topk_ok { "PASS" } else { "FAIL" },
     );
 
     let json = Value::object(vec![
@@ -315,15 +427,37 @@ fn main() {
         ("monolithic_stall_secs", Value::num(mono_stall)),
         ("sharded_overlap_stall_secs", Value::num(overlap_stall)),
         ("quantized_overlap_stall_secs", Value::num(quant_stall)),
-        ("monolithic_publish_secs", Value::num(arms[0].publish_secs)),
-        ("sharded_publish_secs", Value::num(arms[1].publish_secs)),
-        ("quantized_payload_mb", Value::num(arms[2].payload_mb)),
-        ("quant_max_abs_err", Value::num(quant_err as f64)),
-        ("quant_err_bound", Value::num(quant_bound as f64)),
+        ("monolithic_publish_secs", Value::num(mono.publish_blocked_secs)),
+        (
+            "inline_publish_blocked_secs",
+            Value::num(inline_f32.publish_blocked_secs),
+        ),
+        (
+            "executor_publish_blocked_secs",
+            Value::num(bg_f32.publish_blocked_secs),
+        ),
+        (
+            "publish_blocked_speedup",
+            Value::num(publish_blocked_speedup),
+        ),
+        ("overlap_stall_speedup", Value::num(overlap_stall_speedup)),
+        ("executor_stall_secs", Value::num(bg_f32.stall_secs)),
+        ("quantized_payload_mb", Value::num(inline_int8.payload_mb)),
+        ("delta_payload_mb", Value::num(bg_delta.payload_mb)),
+        ("topk_payload_mb", Value::num(bg_topk.payload_mb)),
+        ("full_payload_mb", Value::num(inline_f32.payload_mb)),
+        ("quant_max_abs_err", Value::num(panel2.quant_err as f64)),
+        ("quant_err_bound", Value::num(panel2.quant_bound as f64)),
+        ("topk_max_abs_err", Value::num(bg_topk.max_abs_err as f64)),
+        ("topk_err_bound", Value::num(panel2.topk_bound as f64)),
+        ("coalesced_publishes", Value::num(coalesced as f64)),
         ("planned_70b_bf16_secs", Value::num(planned_70b_bf16)),
         ("planned_70b_int8_secs", Value::num(planned_70b_int8)),
         ("stall_strictly_lower", Value::Bool(stall_ok)),
         ("quant_within_bound", Value::Bool(quant_ok)),
+        ("publish_blocked_5x", Value::Bool(blocked_5x)),
+        ("delta_exact", Value::Bool(delta_exact)),
+        ("topk_within_bound", Value::Bool(topk_ok)),
     ]);
     let line = json.to_string();
     println!("BENCH_weightsync.json {line}");

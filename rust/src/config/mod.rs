@@ -12,6 +12,7 @@ use crate::rl::{AipoConfig, Baseline};
 use crate::util::cli::Args;
 use crate::util::error::{Error, Result};
 use crate::util::json::Value;
+use crate::weightsync::ShardEncoding;
 
 /// Named presets. `nano` for smoke tests, `small` for integration-scale
 /// runs, `e2e` for the headline end-to-end training driver.
@@ -72,6 +73,19 @@ fn staleness_opt(v: u64) -> Option<u64> {
     }
 }
 
+/// `sync_encoding = full|int8|delta|topk` (JSON and CLI).
+fn parse_encoding(s: &str) -> Result<ShardEncoding> {
+    match s {
+        "full" | "f32" => Ok(ShardEncoding::F32),
+        "int8" => Ok(ShardEncoding::Int8),
+        "delta" => Ok(ShardEncoding::Delta),
+        "topk" | "top_k" => Ok(ShardEncoding::TopK),
+        other => Err(Error::Config(format!(
+            "sync_encoding must be full|int8|delta|topk, got '{other}'"
+        ))),
+    }
+}
+
 fn parse_baseline(s: &str) -> Result<Baseline> {
     match s {
         "group_mean" => Ok(Baseline::GroupMean),
@@ -112,7 +126,21 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             "sync_generator_shards" => {
                 cfg.sync.generator_shards = val.as_usize().unwrap_or(2).max(1)
             }
-            "sync_quantized" => cfg.sync.quantized = val.as_bool().unwrap_or(false),
+            // back-compat alias for sync_encoding = int8; false never
+            // unsets an encoding an earlier layer chose
+            "sync_quantized" => {
+                if val.as_bool().unwrap_or(false) {
+                    cfg.sync.encoding = ShardEncoding::Int8;
+                }
+            }
+            "sync_encoding" => {
+                cfg.sync.encoding = parse_encoding(val.as_str().unwrap_or(""))?
+            }
+            "sync_background" => cfg.sync.background = val.as_bool().unwrap_or(true),
+            "sync_link_groups" => cfg.sync.link_groups = val.as_usize().unwrap_or(0),
+            "sync_topk_frac" => {
+                cfg.sync.topk_frac = val.as_f64().unwrap_or(0.01).clamp(1e-6, 1.0)
+            }
             "n_generations" => cfg.n_generations = val.as_usize().unwrap_or(4),
             "baseline" => cfg.baseline = parse_baseline(val.as_str().unwrap_or(""))?,
             "max_steps" => cfg.max_steps = val.as_i64().unwrap_or(1) as u64,
@@ -171,8 +199,20 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
         .usize_or("sync-generator-shards", cfg.sync.generator_shards)?
         .max(1);
     if args.flag("sync-quantized") {
-        cfg.sync.quantized = true;
+        cfg.sync.encoding = ShardEncoding::Int8;
     }
+    if let Some(v) = args.str_opt("sync-encoding") {
+        cfg.sync.encoding = parse_encoding(v)?;
+    }
+    if args.flag("sync-inline") {
+        // opt out of the background streaming executor (the inline
+        // fan-out baseline; useful for A/B runs)
+        cfg.sync.background = false;
+    }
+    cfg.sync.link_groups = args.usize_or("sync-link-groups", cfg.sync.link_groups)?;
+    cfg.sync.topk_frac = args
+        .f64_or("sync-topk-frac", cfg.sync.topk_frac)?
+        .clamp(1e-6, 1.0);
     cfg.n_generations = args.usize_or("n-generations", cfg.n_generations)?;
     cfg.max_steps = args.u64_or("steps", cfg.max_steps)?;
     cfg.aipo.lr = args.f64_or("lr", cfg.aipo.lr as f64)? as f32;
@@ -264,27 +304,58 @@ mod tests {
     #[test]
     fn weightsync_overrides() {
         let mut cfg = preset("nano").unwrap();
+        assert!(cfg.sync.background, "background streaming is the default");
         let v = Value::parse(
-            r#"{"sync_trainer_shards":8,"sync_generator_shards":4,"sync_quantized":true}"#,
+            r#"{"sync_trainer_shards":8,"sync_generator_shards":4,"sync_quantized":true,
+                "sync_link_groups":3}"#,
         )
         .unwrap();
         apply_json(&mut cfg, &v).unwrap();
         assert_eq!(cfg.sync.trainer_shards, 8);
         assert_eq!(cfg.sync.generator_shards, 4);
-        assert!(cfg.sync.quantized);
+        // back-compat alias lands on the encoding enum
+        assert_eq!(cfg.sync.encoding, ShardEncoding::Int8);
+        assert_eq!(cfg.sync.link_groups, 3);
 
         let args = Args::parse(
             ["--sync-trainer-shards", "2", "--sync-generator-shards", "1"]
                 .iter()
                 .map(|s| s.to_string()),
-            &["sync-quantized"],
+            &["sync-quantized", "sync-inline"],
         )
         .unwrap();
         apply_cli(&mut cfg, &args).unwrap();
         assert_eq!(cfg.sync.trainer_shards, 2);
         assert_eq!(cfg.sync.generator_shards, 1);
         // a missing flag never unsets an earlier layer's choice
-        assert!(cfg.sync.quantized);
+        assert_eq!(cfg.sync.encoding, ShardEncoding::Int8);
+        assert!(cfg.sync.background);
+    }
+
+    #[test]
+    fn weightsync_encoding_and_executor_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        let v = Value::parse(
+            r#"{"sync_encoding":"topk","sync_topk_frac":0.05,"sync_background":false}"#,
+        )
+        .unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert_eq!(cfg.sync.encoding, ShardEncoding::TopK);
+        assert_eq!(cfg.sync.topk_frac, 0.05);
+        assert!(!cfg.sync.background);
+
+        // CLI layer: encoding name resolves, --sync-inline opts out
+        let args = Args::parse(
+            ["--sync-encoding", "delta"].iter().map(|s| s.to_string()),
+            &["sync-inline"],
+        )
+        .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.sync.encoding, ShardEncoding::Delta);
+        assert!(!cfg.sync.background);
+
+        let bad = Value::parse(r#"{"sync_encoding":"bf16"}"#).unwrap();
+        assert!(apply_json(&mut cfg, &bad).is_err());
     }
 
     #[test]

@@ -26,12 +26,12 @@ use std::time::Instant;
 use crate::coordinator::channel::{gather_channel, scatter_channel};
 use crate::coordinator::evaluator::{eval_policy, EvalResult, EvaluatorConfig, EvaluatorExecutor};
 use crate::coordinator::executor::{run_executor_loop, Executor, ExecutorContext, StepOutcome};
-use crate::coordinator::generator::{GeneratorConfig, GeneratorWorker};
+use crate::coordinator::generator::{GenTally, GeneratorConfig, GeneratorWorker};
 use crate::coordinator::reward::{RewardExecutor, ScoredSink};
 use crate::coordinator::trainer::{TrainStepRecord, Trainer, TrainerConfig, TrajectorySource};
 use crate::data::{task, PromptScheduler};
 use crate::dataplane::{DataPlaneSnapshot, RolloutStore, StoreConfig};
-use crate::ddma::WeightsBus;
+use crate::ddma::{BusOptions, WeightsBus};
 use crate::model::load_init_params;
 use crate::rl::{AipoConfig, Baseline};
 use crate::runtime::Manifest;
@@ -47,18 +47,27 @@ pub enum Mode {
 }
 
 /// Sharded weight-sync plane configuration: how each publish is resharded
-/// from the trainer's FSDP layout into the generators' TP layout (see
-/// [`crate::weightsync`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// from the trainer's FSDP layout into the generators' TP layout, which
+/// wire encoding the shards use, and whether the fan-out runs on the
+/// background streaming executor (see [`crate::weightsync`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WeightSyncConfig {
     /// trainer-side FSDP shard count (source ranks of the reshard plan)
     pub trainer_shards: usize,
     /// generator-side TP shard count (destination ranks; per-tensor split
     /// when the manifest's param layout allows it)
     pub generator_shards: usize,
-    /// stream int8-quantized shard payloads (1 byte/elem + per-shard scale,
-    /// dequantized at attach) instead of raw f32
-    pub quantized: bool,
+    /// shard wire encoding: full f32, int8 (1 byte/elem + per-shard scale,
+    /// dequantized at attach), exact delta, or top-k sparse delta
+    pub encoding: ShardEncoding,
+    /// run publishes through the background streaming executor
+    /// (enqueue-and-return, per-link-group worker threads) instead of the
+    /// inline fan-out on the trainer thread
+    pub background: bool,
+    /// background link-group worker threads (0 = one per generator shard)
+    pub link_groups: usize,
+    /// kept-update fraction per shard for [`ShardEncoding::TopK`]
+    pub topk_frac: f64,
 }
 
 impl Default for WeightSyncConfig {
@@ -66,7 +75,10 @@ impl Default for WeightSyncConfig {
         WeightSyncConfig {
             trainer_shards: 4,
             generator_shards: 2,
-            quantized: false,
+            encoding: ShardEncoding::F32,
+            background: true,
+            link_groups: 0,
+            topk_frac: 0.01,
         }
     }
 }
@@ -151,6 +163,17 @@ pub struct RunReport {
     /// mean per-publish time of the slowest shard — the modelled parallel
     /// DDMA cost of the reshard plan (0 when no generator slot is registered)
     pub ddma_mean_shard_max_secs: f64,
+    /// total seconds the trainer thread spent blocked inside
+    /// `WeightsBus::publish` — with the background executor this is the
+    /// enqueue handoff only, inline the whole encode + fan-out
+    pub ddma_publish_blocked_secs: f64,
+    /// background publishes superseded by a newer version before streaming
+    /// (latest-wins coalescing; 0 for the inline plane)
+    pub ddma_coalesced_publishes: u64,
+    /// total decode-side stall the fenced weight swaps imposed across
+    /// generator workers, and how many swaps completed
+    pub gen_swap_stall_secs: f64,
+    pub gen_swaps: u64,
     pub gen_send_blocked_secs: f64,
     pub trainer_recv_blocked_secs: f64,
     /// rollout-store telemetry (Mode::AsyncBuffered only)
@@ -240,18 +263,24 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     // Build the weight-sync plane: FSDP source layout from the configured
     // trainer shard count, TP destination layout split per-tensor via the
     // manifest's param map (falling back to a flat split if the map has
-    // gaps), int8 shard payloads when requested.
+    // gaps), the configured wire encoding, and — by default — the
+    // background streaming executor so the trainer's publish is
+    // enqueue-and-return.
     let n_params = init.len();
     let src_layout = Layout::fsdp(n_params, cfg.sync.trainer_shards.max(1));
     let g_shards = cfg.sync.generator_shards.max(1);
     let dst_layout = Layout::tp(n_params, g_shards, &manifest.param_layout)
         .unwrap_or_else(|_| Layout::tp_flat(n_params, g_shards));
-    let encoding = if cfg.sync.quantized {
-        ShardEncoding::Int8
-    } else {
-        ShardEncoding::F32
-    };
-    let bus = WeightsBus::with_layouts(init, src_layout, dst_layout, encoding)?;
+    let mut bus_opts = BusOptions::new(src_layout, dst_layout);
+    bus_opts.encoding = cfg.sync.encoding;
+    // Sync mode registers no generator slots (the single thread re-attaches
+    // to the master directly), so background workers would wake per publish
+    // to stream to nobody — and the enqueue-only blocked-time metric would
+    // stop being comparable to the baseline. Force the inline plane there.
+    bus_opts.background = cfg.sync.background && cfg.mode != Mode::Sync;
+    bus_opts.link_groups = cfg.sync.link_groups;
+    bus_opts.topk_frac = cfg.sync.topk_frac;
+    let bus = WeightsBus::with_options(init, bus_opts)?;
     let ctx = ExecutorContext::new(bus, cfg.out_dir.clone());
     let scheduler = Arc::new(PromptScheduler::new(
         cfg.seed,
@@ -337,6 +366,8 @@ fn run_sync(
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    // settle any background stream before reading plane-wide counters
+    ctx.weights.flush();
 
     Ok(RunReport {
         mode: "sync".into(),
@@ -351,6 +382,10 @@ fn run_sync(
         ddma_publishes: ctx.weights.publish_count(),
         ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
         ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
+        ddma_publish_blocked_secs: ctx.weights.publish_blocked_secs(),
+        ddma_coalesced_publishes: ctx.weights.coalesced_publishes(),
+        gen_swap_stall_secs: 0.0,
+        gen_swaps: 0,
         gen_send_blocked_secs: 0.0,
         trainer_recv_blocked_secs: 0.0,
         dataplane: None,
@@ -384,16 +419,11 @@ fn run_async(
         gen_handles.push(
             std::thread::Builder::new()
                 .name(format!("generator-{w}"))
-                .spawn(move || -> Result<(u64, u64, u64, u64)> {
+                .spawn(move || -> Result<GenTally> {
                     let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
                     gen.set_sync_slot(sync_slot);
                     run_executor_loop(&mut gen, &ctx, None)?;
-                    Ok((
-                        gen.tokens_generated,
-                        gen.trajectories_emitted,
-                        gen.chunks_run,
-                        gen.weight_refreshes,
-                    ))
+                    Ok(gen.tally())
                 })
                 .expect("spawn generator"),
         );
@@ -466,16 +496,10 @@ fn run_async(
     )?;
     ctx.request_stop();
 
-    let mut tokens = 0;
-    let mut trajs = 0;
-    let mut chunks = 0;
-    let mut refreshes = 0;
+    let mut tally = GenTally::default();
     for h in gen_handles {
-        let (t, tr, ch, wr) = h.join().map_err(|_| Error::msg("generator panicked"))??;
-        tokens += t;
-        trajs += tr;
-        chunks += ch;
-        refreshes += wr;
+        let t = h.join().map_err(|_| Error::msg("generator panicked"))??;
+        tally.add(&t);
     }
     let _ = reward_handle
         .join()
@@ -485,6 +509,8 @@ fn run_async(
         None => Vec::new(),
     };
     let wall = t0.elapsed().as_secs_f64();
+    // settle any background stream before reading plane-wide counters
+    ctx.weights.flush();
 
     Ok(RunReport {
         mode: "async".into(),
@@ -492,13 +518,17 @@ fn run_async(
         wall_secs: wall,
         records: trainer.records.clone(),
         evals,
-        tokens_generated: tokens,
-        trajectories: trajs,
-        chunks,
-        weight_refreshes: refreshes,
+        tokens_generated: tally.tokens,
+        trajectories: tally.trajectories,
+        chunks: tally.chunks,
+        weight_refreshes: tally.weight_refreshes,
         ddma_publishes: ctx.weights.publish_count(),
         ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
         ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
+        ddma_publish_blocked_secs: ctx.weights.publish_blocked_secs(),
+        ddma_coalesced_publishes: ctx.weights.coalesced_publishes(),
+        gen_swap_stall_secs: tally.swap_stall_secs,
+        gen_swaps: tally.swaps,
         gen_send_blocked_secs: gen_stats_ch.send_blocked_secs(),
         trainer_recv_blocked_secs: scored_stats_ch.recv_blocked_secs(),
         dataplane: None,
@@ -539,17 +569,12 @@ fn run_async_buffered(
         gen_handles.push(
             std::thread::Builder::new()
                 .name(format!("generator-{w}"))
-                .spawn(move || -> Result<(u64, u64, u64, u64)> {
+                .spawn(move || -> Result<GenTally> {
                     let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
                     gen.set_resume_store(store);
                     gen.set_sync_slot(sync_slot);
                     run_executor_loop(&mut gen, &ctx, None)?;
-                    Ok((
-                        gen.tokens_generated,
-                        gen.trajectories_emitted,
-                        gen.chunks_run,
-                        gen.weight_refreshes,
-                    ))
+                    Ok(gen.tally())
                 })
                 .expect("spawn generator"),
         );
@@ -614,16 +639,10 @@ fn run_async_buffered(
     ctx.request_stop();
     store.close();
 
-    let mut tokens = 0;
-    let mut trajs = 0;
-    let mut chunks = 0;
-    let mut refreshes = 0;
+    let mut tally = GenTally::default();
     for h in gen_handles {
-        let (t, tr, ch, wr) = h.join().map_err(|_| Error::msg("generator panicked"))??;
-        tokens += t;
-        trajs += tr;
-        chunks += ch;
-        refreshes += wr;
+        let t = h.join().map_err(|_| Error::msg("generator panicked"))??;
+        tally.add(&t);
     }
     let _ = reward_handle
         .join()
@@ -634,6 +653,8 @@ fn run_async_buffered(
     };
     let wall = t0.elapsed().as_secs_f64();
     let snapshot = store.snapshot();
+    // settle any background stream before reading plane-wide counters
+    ctx.weights.flush();
 
     Ok(RunReport {
         mode: "async_buffered".into(),
@@ -641,13 +662,17 @@ fn run_async_buffered(
         wall_secs: wall,
         records: trainer.records.clone(),
         evals,
-        tokens_generated: tokens,
-        trajectories: trajs,
-        chunks,
-        weight_refreshes: refreshes,
+        tokens_generated: tally.tokens,
+        trajectories: tally.trajectories,
+        chunks: tally.chunks,
+        weight_refreshes: tally.weight_refreshes,
         ddma_publishes: ctx.weights.publish_count(),
         ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
         ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
+        ddma_publish_blocked_secs: ctx.weights.publish_blocked_secs(),
+        ddma_coalesced_publishes: ctx.weights.coalesced_publishes(),
+        gen_swap_stall_secs: tally.swap_stall_secs,
+        gen_swaps: tally.swaps,
         gen_send_blocked_secs: gen_stats_ch.send_blocked_secs(),
         trainer_recv_blocked_secs: snapshot.sample_wait_secs,
         dataplane: Some(snapshot),

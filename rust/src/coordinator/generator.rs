@@ -58,6 +58,32 @@ impl Default for GeneratorConfig {
     }
 }
 
+/// End-of-run counters a generator thread hands back to the controller.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GenTally {
+    pub tokens: u64,
+    pub trajectories: u64,
+    pub chunks: u64,
+    pub weight_refreshes: u64,
+    /// total decode stall the fenced weight swaps cost this worker (the
+    /// whole per-publish price in overlapped mode: one pointer exchange)
+    pub swap_stall_secs: f64,
+    /// fenced swaps that promoted a version
+    pub swaps: u64,
+}
+
+impl GenTally {
+    /// Accumulate another worker's tally (controller-side aggregation).
+    pub fn add(&mut self, other: &GenTally) {
+        self.tokens += other.tokens;
+        self.trajectories += other.trajectories;
+        self.chunks += other.chunks;
+        self.weight_refreshes += other.weight_refreshes;
+        self.swap_stall_secs += other.swap_stall_secs;
+        self.swaps += other.swaps;
+    }
+}
+
 /// One continuous-batching slot.
 struct Slot {
     task: PromptTask,
@@ -140,6 +166,23 @@ impl GeneratorWorker {
     /// scheduler for fresh prompts.
     pub fn set_resume_store(&mut self, store: Arc<RolloutStore>) {
         self.resume = Some(store);
+    }
+
+    /// This worker's end-of-run counters, including the sync slot's
+    /// swap-stall telemetry (how much decode time weight refreshes cost).
+    pub fn tally(&self) -> GenTally {
+        let (swap_stall_secs, swaps) = match &self.sync_slot {
+            Some(slot) => (slot.stall_secs(), slot.swaps()),
+            None => (0.0, 0),
+        };
+        GenTally {
+            tokens: self.tokens_generated,
+            trajectories: self.trajectories_emitted,
+            chunks: self.chunks_run,
+            weight_refreshes: self.weight_refreshes,
+            swap_stall_secs,
+            swaps,
+        }
     }
 
     /// Attach this worker's double-buffered weight-sync slot (async modes).

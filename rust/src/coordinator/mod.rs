@@ -49,7 +49,7 @@ pub use channel::{gather_channel, scatter_channel, ChannelStats, Inbound, Messag
 pub use controller::{run_training, Mode, PipelineConfig, RunReport, WeightSyncConfig};
 pub use evaluator::{eval_policy, EvalResult, EvaluatorConfig, EvaluatorExecutor};
 pub use executor::{run_executor_loop, Executor, ExecutorContext, StepOutcome};
-pub use generator::{GeneratorConfig, GeneratorWorker};
+pub use generator::{GenTally, GeneratorConfig, GeneratorWorker};
 pub use pretrain::{run_pretraining, PretrainConfig, PretrainReport};
 pub use reward::{RewardExecutor, ScoredSink};
 pub use trainer::{TrainStepRecord, Trainer, TrainerConfig, TrajectorySource};

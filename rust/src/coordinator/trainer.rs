@@ -85,7 +85,12 @@ pub struct Trainer {
     eof: bool,
     started: Option<Instant>,
     pub records: Vec<TrainStepRecord>,
+    /// seconds blocked inside `WeightsBus::publish` (the DDMA handoff;
+    /// enqueue-only when the background executor runs)
     pub publish_secs_total: f64,
+    /// seconds fetching the weight snapshot off-device (extract_params) —
+    /// a cost common to every sync design, kept out of the handoff number
+    pub extract_secs_total: f64,
 }
 
 impl Trainer {
@@ -108,6 +113,7 @@ impl Trainer {
             started: None,
             records: Vec::new(),
             publish_secs_total: 0.0,
+            extract_secs_total: 0.0,
         }
     }
 
@@ -219,12 +225,19 @@ impl Trainer {
                 .unwrap_or(f64::NAN)
         };
 
-        // DDMA publication
+        // DDMA publication. The device fetch (extract_params) is a cost
+        // every sync design pays; the publish call itself is the part the
+        // background executor turns into enqueue-and-return, so the two are
+        // accounted separately — `publish_secs_total` is the trainer-side
+        // blocked time on the bus handoff only (it should track
+        // `WeightsBus::publish_blocked_secs`).
         if self.cfg.publish_every > 0 && self.step % self.cfg.publish_every == 0 {
-            let tp = Instant::now();
+            let tf = Instant::now();
             let p_buf =
                 rt.execute_buffers("extract_params", &[self.state_buf.as_ref().unwrap()])?;
             let params = rt.fetch_f32(&p_buf)?;
+            self.extract_secs_total += tf.elapsed().as_secs_f64();
+            let tp = Instant::now();
             self.ctx.weights.publish(params);
             self.publish_secs_total += tp.elapsed().as_secs_f64();
         }

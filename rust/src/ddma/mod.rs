@@ -7,17 +7,27 @@
 //! *protocol* is real and the *links* are modelled. Since the weight-sync
 //! plane landed, this module is a **facade over [`crate::weightsync`]**:
 //!
-//! * [`WeightsBus`] — the in-process DDMA path. Internally a publish runs
-//!   the resharding plan between the trainer-side FSDP layout and the
+//! * [`WeightsBus`] — the in-process DDMA path. A publish executes the
+//!   resharding plan between the trainer-side FSDP layout and the
 //!   generator-side TP layout ([`crate::weightsync::plan_reshard`]):
-//!   per-shard [`crate::weightsync::ShardPacket`]s (f32 or int8) stream
-//!   into every registered generator's double-buffered
+//!   per-shard [`crate::weightsync::ShardPacket`]s (f32 / int8 / delta /
+//!   top-k) stream into every registered generator's double-buffered
 //!   [`crate::weightsync::GeneratorSlot`], where decode keeps running on
-//!   version N until the fenced swap at a sequence boundary. The bus also
-//!   keeps a master snapshot slot so `latest()` / `wait_for()` serve
-//!   non-streaming readers (trainer init, evaluator, sync mode) exactly as
-//!   before. Versions are monotonic; every trajectory records the version
-//!   it sampled under, so off-policy lag is always measurable.
+//!   version N until the fenced swap at a sequence boundary. With
+//!   [`BusOptions::background`] the fan-out runs on the
+//!   [`crate::weightsync::StreamExecutor`]'s per-link-group worker threads
+//!   and `publish` is **enqueue-and-return** — the trainer-side blocked
+//!   time collapses to the version mint (tracked separately as
+//!   [`WeightsBus::publish_blocked_secs`]); inline mode (the baseline the
+//!   bench compares against) pays the whole encode + fan-out on the
+//!   publisher's thread. The bus also keeps a master snapshot slot (always
+//!   exact f32, swapped inline in both modes) so `latest()` / `wait_for()`
+//!   serve non-streaming readers (trainer init, evaluator, sync mode)
+//!   exactly as before. Versions are monotonic and minted under one lock
+//!   even with multiple registered publishers
+//!   ([`WeightsBus::register_publisher`]), so `wait_for` observers see a
+//!   single total order; every trajectory records the version it sampled
+//!   under, so off-policy lag is always measurable.
 //! * [`ShardedCopy`] — the sharded memcpy the trainer performs to produce a
 //!   publishable snapshot (the analogue of each GPU pushing only its own
 //!   shard; real measured bandwidth feeds Table 4's "measured" column).
@@ -36,30 +46,65 @@ use std::time::Instant;
 
 use crate::model::VersionedParams;
 use crate::util::error::Result;
+use crate::weightsync::executor::{begin_on, fan_out_op, PublishJob};
 use crate::weightsync::{
-    encode_shard, plan_reshard, GeneratorSlot, Layout, ReshardPlan, ShardEncoding,
+    plan_reshard, GeneratorSlot, Layout, ReshardPlan, ShardEncoding, StreamExecutor, SyncMetrics,
 };
+
+/// Construction options for [`WeightsBus::with_options`].
+#[derive(Debug, Clone)]
+pub struct BusOptions {
+    /// trainer-side source layout
+    pub src: Layout,
+    /// generator-side destination layout
+    pub dst: Layout,
+    /// wire encoding for shard payloads
+    pub encoding: ShardEncoding,
+    /// spawn the background streaming executor: `publish` becomes
+    /// enqueue-and-return, per-link-group worker threads drain the fan-out
+    pub background: bool,
+    /// link-group worker threads (0 = one per destination rank)
+    pub link_groups: usize,
+    /// per-shard kept fraction for [`ShardEncoding::TopK`]
+    pub topk_frac: f64,
+}
+
+impl BusOptions {
+    pub fn new(src: Layout, dst: Layout) -> BusOptions {
+        BusOptions {
+            src,
+            dst,
+            encoding: ShardEncoding::F32,
+            background: false,
+            link_groups: 0,
+            topk_frac: 0.01,
+        }
+    }
+}
 
 /// The in-process DDMA weights path between trainer and generators: a facade
 /// over the sharded weight-sync plane.
 pub struct WeightsBus {
     plan: ReshardPlan,
     encoding: ShardEncoding,
+    topk_frac: f64,
     /// master snapshot (always exact f32) for non-streaming readers
     slot: RwLock<Arc<VersionedParams>>,
-    /// per-generator double-buffered receive slots
-    subscribers: Mutex<Vec<Arc<GeneratorSlot>>>,
+    /// per-generator double-buffered receive slots (shared with the
+    /// background executor's workers)
+    subscribers: Arc<Mutex<Vec<Arc<GeneratorSlot>>>>,
     version: AtomicU64,
-    publishes: AtomicU64,
-    publish_nanos: AtomicU64,
-    /// sum over publishes of the slowest shard's encode+fan-out time — the
-    /// modelled parallel DDMA time (shards move concurrently on a cluster)
-    shard_max_nanos: AtomicU64,
-    /// payload bytes streamed to generator slots
-    bytes_streamed: AtomicU64,
-    /// serializes publishers (and slot registration) across the whole
-    /// mint/stream/swap sequence, so the notify lock below is only ever
-    /// held for the microsecond counter-update + wakeup
+    /// publisher-blocked time, fan-out timing, bytes, coalescing/fence
+    /// counters — shared with the executor when one is running
+    metrics: Arc<SyncMetrics>,
+    /// per-publisher publish counts; index = publisher id (0 pre-registered)
+    publishers: Mutex<Vec<u64>>,
+    /// the background streaming plane (None = inline fan-out on the
+    /// publisher's thread)
+    executor: Option<StreamExecutor>,
+    /// serializes publishers (and slot/publisher registration) across the
+    /// whole mint/stream/swap sequence, so the notify lock below is only
+    /// ever held for the microsecond counter-update + wakeup
     publish_lock: Mutex<()>,
     notify: (Mutex<u64>, Condvar),
 }
@@ -79,28 +124,63 @@ impl WeightsBus {
     }
 
     /// Create the bus over an explicit trainer-side source layout,
-    /// generator-side destination layout, and shard encoding. The resharding
-    /// plan is computed once here and reused by every publish.
+    /// generator-side destination layout, and shard encoding, with the
+    /// inline fan-out (the pre-executor baseline). The resharding plan is
+    /// computed once and reused by every publish.
     pub fn with_layouts(
         init: Vec<f32>,
         src: Layout,
         dst: Layout,
         encoding: ShardEncoding,
     ) -> Result<WeightsBus> {
-        let plan = plan_reshard(&src, &dst)?;
+        let mut opts = BusOptions::new(src, dst);
+        opts.encoding = encoding;
+        WeightsBus::with_options(init, opts)
+    }
+
+    /// Full constructor: layouts, encoding, and (optionally) the background
+    /// streaming executor with its link-group thread count.
+    pub fn with_options(init: Vec<f32>, opts: BusOptions) -> Result<WeightsBus> {
+        let plan = plan_reshard(&opts.src, &opts.dst)?;
+        let subscribers: Arc<Mutex<Vec<Arc<GeneratorSlot>>>> = Arc::new(Mutex::new(Vec::new()));
+        let metrics = Arc::new(SyncMetrics::default());
+        let executor = if opts.background {
+            Some(StreamExecutor::spawn(
+                &plan,
+                opts.link_groups,
+                opts.encoding,
+                opts.topk_frac,
+                subscribers.clone(),
+                metrics.clone(),
+            ))
+        } else {
+            None
+        };
         Ok(WeightsBus {
             plan,
-            encoding,
+            encoding: opts.encoding,
+            topk_frac: opts.topk_frac,
             slot: RwLock::new(Arc::new(VersionedParams::new(0, init))),
-            subscribers: Mutex::new(Vec::new()),
+            subscribers,
             version: AtomicU64::new(0),
-            publishes: AtomicU64::new(0),
-            publish_nanos: AtomicU64::new(0),
-            shard_max_nanos: AtomicU64::new(0),
-            bytes_streamed: AtomicU64::new(0),
+            metrics,
+            publishers: Mutex::new(vec![0]),
+            executor,
             publish_lock: Mutex::new(()),
             notify: (Mutex::new(0), Condvar::new()),
         })
+    }
+
+    /// Register an additional trainer-side publisher sharing this bus's
+    /// precomputed plan; returns its publisher id for
+    /// [`WeightsBus::publish_from`]. Publisher 0 is pre-registered.
+    /// Versions stay globally ordered: every publish, whichever publisher
+    /// issues it, mints under the same lock.
+    pub fn register_publisher(&self) -> usize {
+        let _serial = self.publish_lock.lock().unwrap();
+        let mut counts = self.publishers.lock().unwrap();
+        counts.push(0);
+        counts.len() - 1
     }
 
     /// Register a generator's double-buffered receive slot. Its front starts
@@ -108,17 +188,26 @@ impl WeightsBus {
     /// staging buffer, and the generator promotes it with
     /// [`GeneratorSlot::swap_at_boundary`] at its own sequence boundary.
     pub fn register_generator(&self) -> Arc<GeneratorSlot> {
-        // Serialize against in-flight publishes: without this, a slot
-        // created while a publish streams could seed its front from the
+        // Serialize against publishes: without this, a slot created while
+        // an inline publish streams could seed its front from the
         // not-yet-swapped master AND miss the streaming version's packets,
-        // leaving it one version stale until the next publish.
+        // leaving it one version stale until the next publish. (Background
+        // workers racing this registration are safe on their own: the slot
+        // seeds from the already-swapped master, and GeneratorSlot::begin
+        // refuses versions at or below that front.)
         let _serial = self.publish_lock.lock().unwrap();
         let slot = GeneratorSlot::new(self.latest());
         self.subscribers.lock().unwrap().push(slot.clone());
         slot
     }
 
-    /// Publish a new weight snapshot; returns its version.
+    /// Publish a new weight snapshot as publisher 0; returns its version.
+    pub fn publish(&self, data: Vec<f32>) -> u64 {
+        self.publish_from(0, data)
+    }
+
+    /// Publish a new weight snapshot from a registered publisher; returns
+    /// its (globally ordered) version.
     ///
     /// Ordering contract (regression test
     /// `version_never_ahead_of_latest_snapshot`): the version counter is
@@ -126,49 +215,113 @@ impl WeightsBus {
     /// slot swap, so an observer that reads `version() == N` is guaranteed
     /// `latest().version >= N`. Readers never observe a partial update
     /// (test: `prop_coordinator::weights_bus_snapshots_are_consistent`).
-    pub fn publish(&self, data: Vec<f32>) -> u64 {
+    ///
+    /// With the background executor this is **enqueue-and-return**: the
+    /// publisher blocks only for the mint + master swap + queue handoff;
+    /// the per-slot fan-out happens on the link-group workers (latest-wins
+    /// — a version still queued when a newer one lands is superseded).
+    /// Inline, the whole fan-out runs here. Either way the time spent in
+    /// this call is what [`WeightsBus::publish_blocked_secs`] accounts.
+    pub fn publish_from(&self, publisher: usize, data: Vec<f32>) -> u64 {
         let t0 = Instant::now();
+        // Validate the publisher id BEFORE taking any bus lock or minting:
+        // a bad id must not leave a phantom publish behind, and panicking
+        // while holding the publish/publishers locks would poison the whole
+        // bus. Ids are never removed, so this check cannot go stale.
+        assert!(
+            publisher < self.publishers.lock().unwrap().len(),
+            "publisher {publisher} not registered"
+        );
         // The publish lock serializes publishers across the whole
         // mint/stream/swap sequence; the notify mutex is touched only at
         // the very end, so `wait_for` callers are never stuck behind the
         // encode/fan-out work.
         let _serial = self.publish_lock.lock().unwrap();
         let version = self.version.load(Ordering::SeqCst) + 1;
+        // the previous master snapshot is the delta base
+        let base = self.latest();
+        let snap = Arc::new(VersionedParams::new(version, data));
 
-        // Stream the resharding plan into every generator slot while their
-        // decode loops keep reading the front buffer.
-        let subs = self.subscribers.lock().unwrap().clone();
-        if !subs.is_empty() {
-            for slot in &subs {
-                slot.begin(version, self.plan.ops.len());
+        match &self.executor {
+            Some(exec) => {
+                // Master slot swap strictly before the version-counter
+                // bump, then hand the fan-out to the link-group workers.
+                *self.slot.write().unwrap() = snap.clone();
+                self.version.store(version, Ordering::SeqCst);
+                exec.enqueue(PublishJob {
+                    params: snap,
+                    base: if self.encoding.is_delta() {
+                        Some(base)
+                    } else {
+                        None
+                    },
+                });
             }
-            let mut max_op = 0f64;
-            let mut bytes = 0usize;
-            for &op in &self.plan.ops {
-                let t_op = Instant::now();
-                let pkt = encode_shard(&data, version, op, self.encoding);
-                bytes += pkt.payload_bytes();
-                for slot in &subs {
-                    slot.recv(&pkt);
+            None => {
+                // Inline fan-out: stream the resharding plan into every
+                // generator slot while their decode loops keep reading the
+                // front buffer.
+                let subs = self.subscribers.lock().unwrap().clone();
+                if !subs.is_empty() {
+                    begin_on(&subs, version, self.plan.ops.len(), self.encoding.is_delta());
+                    let delta_base = if self.encoding.is_delta() {
+                        Some(base.as_ref())
+                    } else {
+                        None
+                    };
+                    let mut max_op = 0f64;
+                    let mut bytes = 0usize;
+                    for &op in &self.plan.ops {
+                        let t_op = Instant::now();
+                        bytes += fan_out_op(
+                            &snap.data,
+                            delta_base,
+                            version,
+                            op,
+                            self.encoding,
+                            self.topk_frac,
+                            &subs,
+                            &self.metrics,
+                        );
+                        max_op = max_op.max(t_op.elapsed().as_secs_f64());
+                    }
+                    self.metrics
+                        .shard_max_nanos
+                        .fetch_add((max_op * 1e9) as u64, Ordering::Relaxed);
+                    self.metrics.shard_max_samples.fetch_add(1, Ordering::Relaxed);
+                    self.metrics
+                        .bytes_streamed
+                        .fetch_add(bytes as u64, Ordering::Relaxed);
                 }
-                max_op = max_op.max(t_op.elapsed().as_secs_f64());
+                // Master slot swap strictly before the version-counter bump.
+                *self.slot.write().unwrap() = snap;
+                self.version.store(version, Ordering::SeqCst);
             }
-            self.shard_max_nanos
-                .fetch_add((max_op * 1e9) as u64, Ordering::Relaxed);
-            self.bytes_streamed
-                .fetch_add(bytes as u64, Ordering::Relaxed);
         }
 
-        // Master slot swap strictly before the version-counter bump.
-        *self.slot.write().unwrap() = Arc::new(VersionedParams::new(version, data));
-        self.version.store(version, Ordering::SeqCst);
-        self.publish_nanos
+        self.publishers.lock().unwrap()[publisher] += 1;
+        self.metrics.publishes.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .publish_blocked_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.publishes.fetch_add(1, Ordering::Relaxed);
         let (lock, cvar) = &self.notify;
         *lock.lock().unwrap() = version;
         cvar.notify_all();
         version
+    }
+
+    /// Block until every enqueued background publish has streamed into the
+    /// registered slots (no-op for an inline bus). Benches and shutdown
+    /// paths use this; generators just keep decoding.
+    pub fn flush(&self) {
+        if let Some(exec) = &self.executor {
+            exec.flush();
+        }
+    }
+
+    /// Whether the background streaming executor is running.
+    pub fn is_background(&self) -> bool {
+        self.executor.is_some()
     }
 
     /// Zero-copy attach to the latest master snapshot.
@@ -192,32 +345,68 @@ impl WeightsBus {
     }
 
     pub fn publish_count(&self) -> u64 {
-        self.publishes.load(Ordering::Relaxed)
+        self.metrics.publishes.load(Ordering::Relaxed)
     }
 
-    /// Mean seconds per publish (the real measured DDMA handoff time).
+    /// Publishes issued by one registered publisher.
+    pub fn publisher_publishes(&self, publisher: usize) -> u64 {
+        self.publishers
+            .lock()
+            .unwrap()
+            .get(publisher)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Registered publishers (>= 1; publisher 0 is built in).
+    pub fn publisher_count(&self) -> usize {
+        self.publishers.lock().unwrap().len()
+    }
+
+    /// Mean seconds a publisher spends blocked inside `publish` — the
+    /// trainer-side DDMA handoff cost. Background mode: mint + enqueue;
+    /// inline: the whole encode + fan-out.
     pub fn mean_publish_secs(&self) -> f64 {
-        let n = self.publishes.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.publish_nanos.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+        self.metrics.mean_publish_blocked_secs()
     }
 
-    /// Mean per-publish time of the slowest shard — what a publish costs
-    /// when shards move in parallel (cluster DDMA time).
+    /// Total publisher-blocked seconds across all publishes (the quantity
+    /// the background executor exists to minimize; reported as
+    /// `publish_blocked_secs` in `BENCH_weightsync.json`).
+    pub fn publish_blocked_secs(&self) -> f64 {
+        self.metrics.publish_blocked_secs()
+    }
+
+    /// Mean slowest-shard time per sampled stream job — what a publish
+    /// costs when shards move in parallel (cluster DDMA time). Inline: one
+    /// sample per publish with subscribers; background: one per link-group
+    /// job.
     pub fn mean_shard_max_secs(&self) -> f64 {
-        let n = self.publishes.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.shard_max_nanos.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+        self.metrics.mean_shard_max_secs()
     }
 
-    /// Payload bytes streamed to generator slots so far (int8 encoding
-    /// shows up here as a ~4x reduction).
+    /// Payload bytes streamed to generator slots so far (int8 shows up as
+    /// a ~4x reduction, sparse deltas as orders of magnitude under low
+    /// update density).
     pub fn bytes_streamed(&self) -> u64 {
-        self.bytes_streamed.load(Ordering::Relaxed)
+        self.metrics.bytes_streamed.load(Ordering::Relaxed)
+    }
+
+    /// Background publishes superseded in a link-group queue before they
+    /// streamed (latest-wins coalescing).
+    pub fn coalesced_publishes(&self) -> u64 {
+        self.metrics.coalesced_jobs.load(Ordering::Relaxed)
+    }
+
+    /// Delta packets the base-version fence rejected and the plane re-sent
+    /// as full f32.
+    pub fn delta_full_resends(&self) -> u64 {
+        self.metrics.delta_full_resends.load(Ordering::Relaxed)
+    }
+
+    /// The shared counter block (bus + executor sides).
+    pub fn metrics(&self) -> &SyncMetrics {
+        &self.metrics
     }
 
     /// The resharding schedule every publish executes.
@@ -372,6 +561,104 @@ mod tests {
         }
         // the master slot stays exact even on a quantized bus
         assert_eq!(*q_bus.latest().data, next);
+    }
+
+    fn background_opts(n: usize, encoding: ShardEncoding) -> BusOptions {
+        let mut opts = BusOptions::new(Layout::fsdp(n, 4), Layout::tp_flat(n, 2));
+        opts.encoding = encoding;
+        opts.background = true;
+        opts
+    }
+
+    #[test]
+    fn background_publish_converges_after_flush() {
+        let n = 512;
+        let bus =
+            WeightsBus::with_options(vec![0.0; n], background_opts(n, ShardEncoding::F32))
+                .unwrap();
+        assert!(bus.is_background());
+        let slot = bus.register_generator();
+        for v in 1..=25u64 {
+            let got = bus.publish(vec![v as f32; n]);
+            assert_eq!(got, v);
+            // master snapshot is current immediately, before any stream
+            assert_eq!(bus.latest().version, v);
+        }
+        bus.flush();
+        let snap = slot.swap_at_boundary().expect("latest version staged");
+        assert_eq!(snap.version, 25, "slot must converge to the max version");
+        assert!(snap.data.iter().all(|x| *x == 25.0));
+        assert_eq!(bus.publish_count(), 25);
+        assert!(bus.publish_blocked_secs() >= 0.0);
+    }
+
+    #[test]
+    fn background_delta_bus_reconstructs_bit_exactly() {
+        let n = 600;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.017).sin()).collect();
+        let bus = WeightsBus::with_options(init.clone(), background_opts(n, ShardEncoding::Delta))
+            .unwrap();
+        let slot = bus.register_generator();
+        let mut cur = init;
+        for v in 1..=10u64 {
+            cur[(v as usize * 53) % n] += 0.5; // sparse update
+            bus.publish(cur.clone());
+            bus.flush();
+            if v % 2 == 0 {
+                slot.swap_at_boundary();
+            }
+        }
+        bus.flush();
+        while slot.swap_at_boundary().is_some() {}
+        let front = slot.attach();
+        assert_eq!(front.version, 10);
+        assert!(
+            front.data.iter().zip(&cur).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "delta bus must reconstruct the published snapshot bit-exactly"
+        );
+        // sparse updates must undercut the 10-publish full-f32 wire cost
+        assert!(bus.bytes_streamed() < 10 * (n as u64) * 4);
+        // master stays exact too
+        assert!(bus.latest().data.iter().zip(&cur).all(|(a, b)| a == b));
+    }
+
+    #[test]
+    fn multi_publisher_versions_are_totally_ordered() {
+        let n = 128;
+        let bus = Arc::new(
+            WeightsBus::with_options(vec![0.0; n], background_opts(n, ShardEncoding::F32))
+                .unwrap(),
+        );
+        let p1 = bus.register_publisher();
+        let p2 = bus.register_publisher();
+        assert_eq!((p1, p2), (1, 2));
+        let rounds = 40u64;
+        let mut handles = Vec::new();
+        for pid in [0, p1, p2] {
+            let bus = bus.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut versions = Vec::new();
+                for _ in 0..rounds {
+                    versions.push(bus.publish_from(pid, vec![pid as f32; n]));
+                }
+                versions
+            }));
+        }
+        let mut all: Vec<u64> = Vec::new();
+        for h in handles {
+            let vs = h.join().unwrap();
+            assert!(vs.windows(2).all(|w| w[0] < w[1]), "per-publisher order");
+            all.extend(vs);
+        }
+        // one global mint: every version distinct, none skipped
+        all.sort_unstable();
+        assert_eq!(all, (1..=3 * rounds).collect::<Vec<u64>>());
+        assert_eq!(bus.publisher_count(), 3);
+        assert_eq!(bus.publisher_publishes(0), rounds);
+        assert_eq!(bus.publisher_publishes(p1), rounds);
+        assert_eq!(bus.publisher_publishes(p2), rounds);
+        // wait_for observers see the same total order
+        assert_eq!(bus.wait_for(3 * rounds).version, 3 * rounds);
     }
 
     #[test]

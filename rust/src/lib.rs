@@ -23,7 +23,7 @@
 //! | runtime | [`runtime`] (PJRT artifact loading & execution), [`model`] (flat params, tokenizer, checkpoints, quantization) |
 //! | RL | [`data`] (synthetic verifiable-reward tasks), [`rl`] (advantages, trajectories, AIPO config) |
 //! | data plane | [`dataplane`] (staleness-aware rollout store: admission/eviction policies, sampling strategies, partial-rollout resumption, lag telemetry) |
-//! | weight plane | [`weightsync`] (FSDP/TP shard layouts, resharding planner, quantized per-shard transfer, generation-overlapped double-buffered swap) |
+//! | weight plane | [`weightsync`] (FSDP/TP shard layouts, resharding planner, f32/int8/delta/top-k per-shard transfer, generation-overlapped double-buffered swap, background per-link-group streaming executor) |
 //! | system | [`coordinator`] (executors, channels, controller, sync/async/buffered pipelines), [`ddma`] (the DDMA facade over [`weightsync`] + cluster link models) |
 //! | evaluation | [`simulator`] (memory/cost models, Theorem 7.5 optimizer, discrete-event timelines), [`metrics`] |
 

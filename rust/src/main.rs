@@ -31,7 +31,7 @@ use llamarl::util::bench::Table;
 use llamarl::util::cli::Args;
 use llamarl::util::error::Result;
 
-const BOOL_FLAGS: &[&str] = &["quantize-generator", "sync-quantized", "help"];
+const BOOL_FLAGS: &[&str] = &["quantize-generator", "sync-quantized", "sync-inline", "help"];
 
 fn main() {
     let args = match Args::from_env(BOOL_FLAGS) {
@@ -87,6 +87,9 @@ USAGE: llamarl <subcommand> [flags]
             [--sampling fifo|freshest|staleness_weighted]
             weight-sync plane: [--sync-trainer-shards N]
             [--sync-generator-shards N] [--sync-quantized]
+            [--sync-encoding full|int8|delta|topk] [--sync-topk-frac X]
+            [--sync-inline (disable the background streaming executor)]
+            [--sync-link-groups N (0 = one worker per generator shard)]
   pretrain  --artifacts DIR --steps N --lr X --out DIR
             supervised warm-up producing the RL init checkpoint
   simulate  reproduce Table 3 from the calibrated cluster cost model

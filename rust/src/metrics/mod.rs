@@ -29,6 +29,11 @@ pub fn print_report(r: &RunReport) {
         "backpressure: generators blocked {:.2}s sending, trainer starved {:.2}s receiving",
         r.gen_send_blocked_secs, r.trainer_recv_blocked_secs
     );
+    println!(
+        "weight sync: trainer blocked {:.3}s publishing ({} coalesced), \
+         generators stalled {:.3}s over {} fenced swaps",
+        r.ddma_publish_blocked_secs, r.ddma_coalesced_publishes, r.gen_swap_stall_secs, r.gen_swaps
+    );
     if let Some(dp) = &r.dataplane {
         println!("{}", dp.summary());
         let hist: Vec<String> = dp
@@ -93,6 +98,19 @@ pub fn report_json(r: &RunReport) -> Value {
             "ddma_mean_shard_max_secs",
             Value::num(r.ddma_mean_shard_max_secs),
         ),
+        (
+            "ddma_publish_blocked_secs",
+            Value::num(r.ddma_publish_blocked_secs),
+        ),
+        (
+            "ddma_coalesced_publishes",
+            Value::num(r.ddma_coalesced_publishes as f64),
+        ),
+        (
+            "gen_swap_stall_secs",
+            Value::num(r.gen_swap_stall_secs),
+        ),
+        ("gen_swaps", Value::num(r.gen_swaps as f64)),
         (
             "gen_send_blocked_secs",
             Value::num(r.gen_send_blocked_secs),

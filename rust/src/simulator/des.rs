@@ -42,6 +42,14 @@ pub struct DesConfig {
     /// under a batch's decode time, as in paper Table 4). Sync mode cannot
     /// overlap — the next batch needs the new weights before it starts.
     pub sync_overlap: bool,
+    /// trainer-side stall per publish (encode + fan-out on the trainer
+    /// thread when the weight-sync plane runs inline); 0 disables
+    pub publish_block_secs: f64,
+    /// background streaming executor: publish is enqueue-and-return, so the
+    /// trainer never pays `publish_block_secs` (the stream rides the
+    /// link-group workers instead). The sync architecture cannot benefit —
+    /// its next generation batch needs the new weights before it starts.
+    pub background_publish: bool,
     pub seed: u64,
 }
 
@@ -61,6 +69,8 @@ impl Default for DesConfig {
             partial_rollout_cap: f64::INFINITY,
             weight_sync_secs: 0.0,
             sync_overlap: false,
+            publish_block_secs: 0.0,
+            background_publish: false,
             seed: 0,
         }
     }
@@ -162,6 +172,17 @@ fn gen_sync_stall(cfg: &DesConfig) -> f64 {
     }
 }
 
+/// Trainer-side stall per publish: the background streaming executor turns
+/// the fan-out into enqueue-and-return, otherwise the trainer's clock pays
+/// the inline encode + stream.
+fn trainer_publish_stall(cfg: &DesConfig) -> f64 {
+    if cfg.background_publish {
+        0.0
+    } else {
+        cfg.publish_block_secs
+    }
+}
+
 /// Synchronous architecture (Fig. 2a): each step is gen -> score -> train on
 /// the same clock; generator idles during training and vice versa. The
 /// weight reload (`weight_sync_secs`) cannot overlap anything — the next
@@ -180,7 +201,9 @@ pub fn simulate_sync(cfg: &DesConfig) -> DesReport {
         t += cfg.score_secs;
         t += cfg.train_secs;
         train_busy += cfg.train_secs;
-        t += cfg.weight_sync_secs;
+        // weight reload AND the inline publish fan-out both serialize here;
+        // backgrounding cannot help — the next batch needs the new weights
+        t += cfg.weight_sync_secs + cfg.publish_block_secs;
         step_ends.push(t);
     }
     DesReport {
@@ -215,18 +238,22 @@ pub fn simulate_async(cfg: &DesConfig) -> DesReport {
     let stall = gen_sync_stall(cfg);
     while done_steps < cfg.steps {
         // generator produces whenever the queue has room; each batch starts
-        // with a weight refresh (stall unless sync is overlapped)
+        // with a weight refresh (stall unless sync is overlapped). The
+        // stall advances the clock but is NOT busy time — it is exactly the
+        // idle bubble overlapped sync removes (and sync mode accounts the
+        // same reload as idle).
         while queue.len() < cfg.queue_capacity && gen_clock <= train_clock + 1e-9 {
-            let g = batch_generation_time(&mut rng, cfg, &mut carry) + stall;
-            gen_clock += g;
+            let g = batch_generation_time(&mut rng, cfg, &mut carry);
+            gen_clock += g + stall;
             gen_busy += g;
             queue.push_back((gen_clock, done_steps));
         }
-        // trainer consumes the next ready batch
+        // trainer consumes the next ready batch; each optimizer step ends
+        // with a publish (enqueue-only when backgrounded)
         match queue.pop_front() {
             Some((ready, gen_at_step)) => {
                 let start = train_clock.max(ready) + cfg.score_secs;
-                train_clock = start + cfg.train_secs;
+                train_clock = start + cfg.train_secs + trainer_publish_stall(cfg);
                 train_busy += cfg.train_secs;
                 lags.push((done_steps - gen_at_step) as f64);
                 done_steps += 1;
@@ -234,8 +261,8 @@ pub fn simulate_async(cfg: &DesConfig) -> DesReport {
             }
             None => {
                 // queue empty: generator must get ahead of the train clock
-                let g = batch_generation_time(&mut rng, cfg, &mut carry) + stall;
-                gen_clock = gen_clock.max(train_clock) + g;
+                let g = batch_generation_time(&mut rng, cfg, &mut carry);
+                gen_clock = gen_clock.max(train_clock) + g + stall;
                 gen_busy += g;
                 queue.push_back((gen_clock, done_steps));
             }
@@ -284,8 +311,8 @@ pub fn simulate_async_buffered(cfg: &DesConfig, dp: &BufferedDesConfig) -> DesRe
         // evicts the oldest resident batch (capacity pressure) — the
         // generator itself never waits.
         while store.is_empty() || gen_clock <= train_clock + 1e-9 {
-            let g = batch_generation_time(&mut rng, cfg, &mut carry) + stall;
-            gen_clock += g;
+            let g = batch_generation_time(&mut rng, cfg, &mut carry);
+            gen_clock += g + stall;
             gen_busy += g;
             store.push_back((gen_clock, done_steps));
             if store.len() > cap {
@@ -308,7 +335,7 @@ pub fn simulate_async_buffered(cfg: &DesConfig, dp: &BufferedDesConfig) -> DesRe
             store.pop_front().unwrap()
         };
         let start = train_clock.max(ready) + cfg.score_secs;
-        train_clock = start + cfg.train_secs;
+        train_clock = start + cfg.train_secs + trainer_publish_stall(cfg);
         train_busy += cfg.train_secs;
         lags.push((done_steps - gen_at_step) as f64);
         done_steps += 1;
@@ -429,6 +456,61 @@ mod tests {
         assert!(
             (gap - 4.0 * cfg.steps as f64).abs() < 1e-6,
             "reload cost should be steps * sync_secs, got {gap}"
+        );
+    }
+
+    #[test]
+    fn background_publish_removes_trainer_stall() {
+        let base = DesConfig {
+            publish_block_secs: 3.0,
+            ..DesConfig::default()
+        };
+        let inline = simulate_async(&base);
+        let background = simulate_async(&DesConfig {
+            background_publish: true,
+            ..base.clone()
+        });
+        assert!(
+            background.total_secs < inline.total_secs,
+            "background {} !< inline {}",
+            background.total_secs,
+            inline.total_secs
+        );
+        // enqueue-and-return == never paying the block at all
+        let free = simulate_async(&DesConfig {
+            publish_block_secs: 0.0,
+            ..base.clone()
+        });
+        assert_eq!(background.total_secs, free.total_secs);
+        // the buffered plane benefits identically
+        let dp = BufferedDesConfig::default();
+        let b_inline = simulate_async_buffered(&base, &dp);
+        let b_bg = simulate_async_buffered(
+            &DesConfig {
+                background_publish: true,
+                ..base.clone()
+            },
+            &dp,
+        );
+        assert!(b_bg.total_secs < b_inline.total_secs);
+    }
+
+    #[test]
+    fn sync_architecture_cannot_background_publish() {
+        let cfg = DesConfig {
+            publish_block_secs: 2.0,
+            background_publish: true, // ignored: next batch needs weights
+            ..DesConfig::default()
+        };
+        let with = simulate_sync(&cfg);
+        let without = simulate_sync(&DesConfig {
+            publish_block_secs: 0.0,
+            ..cfg.clone()
+        });
+        let gap = with.total_secs - without.total_secs;
+        assert!(
+            (gap - 2.0 * cfg.steps as f64).abs() < 1e-6,
+            "publish block should cost steps * block_secs in sync, got {gap}"
         );
     }
 

@@ -51,6 +51,21 @@ impl BenchReport {
     }
 }
 
+/// Iteration knob for CI smoke runs: `LLAMARL_BENCH_ROUNDS=<n>` caps a
+/// bench's round/iteration counts at `n` (benches pass their full default;
+/// an unset or unparsable variable leaves it unchanged). The CI bench-smoke
+/// job sets a small value so every bench executes end to end in seconds
+/// while local runs keep full fidelity.
+pub fn bench_rounds(default: usize) -> usize {
+    match std::env::var("LLAMARL_BENCH_ROUNDS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => default.min(n),
+            _ => default,
+        },
+        Err(_) => default,
+    }
+}
+
 pub fn fmt_secs(s: f64) -> String {
     if !s.is_finite() {
         "n/a".to_string()
@@ -112,6 +127,14 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_rounds_caps_only_downward() {
+        // never raises the default, regardless of env; without touching the
+        // process env (racy across test threads) we exercise the unset path
+        assert_eq!(bench_rounds(20).min(20), bench_rounds(20));
+        assert!(bench_rounds(20) >= 1);
+    }
 
     #[test]
     fn timing_is_positive() {

@@ -20,30 +20,47 @@
 //! * [`layout`] — [`Layout`] shard maps: trainer-side FSDP (contiguous) and
 //!   generator-side TP (per-tensor split) tilings of the flat vector.
 //! * [`plan`] — [`plan_reshard`]: the minimal per-link [`TransferOp`]
-//!   schedule between any two layouts (interval intersection sweep).
-//! * [`transfer`] — [`ShardPacket`] encode/apply with [`ShardEncoding`]
-//!   (f32 or int8-per-shard via `model::quant`, dequantized at
-//!   attach, error within [`crate::model::int8_error_bound`]) and
-//!   [`TransferTiming`] (DDMA time = max over parallel shards).
+//!   schedule between any two layouts (interval intersection sweep), plus
+//!   [`ReshardPlan::link_groups`], the per-destination-rank partition the
+//!   background executor threads over.
+//! * [`transfer`] — [`ShardPacket`] encode/apply with [`ShardEncoding`]:
+//!   f32, int8-per-shard (via `model::quant`, dequantized at attach, error
+//!   within [`crate::model::int8_error_bound`]), exact delta (sparse
+//!   index+value or dense bitwise-XOR vs the previous published version,
+//!   bit-exact), and top-k sparse delta (k largest updates, error bounded
+//!   by the largest dropped update, full-f32 fallback past the density
+//!   break-even). [`TransferTiming`] models DDMA time = max over parallel
+//!   shards.
 //! * [`swap`] — [`GeneratorSlot`]: double-buffered receive slots with
-//!   version fencing; decode stays on version N while N+1 streams in and
-//!   swaps atomically at a sequence boundary.
+//!   version fencing (only complete versions promote, at a boundary the
+//!   generator chooses) and base-version fencing (a delta packet against a
+//!   base the staging buffer does not hold is rejected with
+//!   [`RecvOutcome::BaseMismatch`] and re-sent as full).
+//! * [`executor`] — [`StreamExecutor`]: the background streaming plane.
+//!   One long-lived worker thread per link-group drains a latest-wins queue
+//!   of publish jobs, so `WeightsBus::publish` is enqueue-and-return and
+//!   the trainer never stalls on the fan-out. [`SyncMetrics`] splits
+//!   publisher-blocked time from stream-side work.
 //!
 //! [`crate::ddma::WeightsBus`] is the facade over this plane; the
 //! coordinator's async modes register one slot per generator worker and
-//! record per-trajectory weight versions from the fenced swap. The cluster
+//! record per-trajectory weight versions from the fenced swap. Multiple
+//! trainer publishers may share one bus — versions are minted under a
+//! single lock, so `wait_for` observers see one total order. The cluster
 //! cost of a plan is modelled by
 //! [`crate::ddma::topology::DdmaModel::plan_secs`].
 
+pub mod executor;
 pub mod layout;
 pub mod plan;
 pub mod swap;
 pub mod transfer;
 
+pub use executor::{StreamExecutor, SyncMetrics};
 pub use layout::{contiguous_entries, even_entries, Layout, LayoutKind, ShardInterval};
 pub use plan::{plan_reshard, ReshardPlan, TransferOp};
-pub use swap::GeneratorSlot;
+pub use swap::{GeneratorSlot, RecvOutcome};
 pub use transfer::{
-    apply_packet, encode_shard, run_transfer, ShardEncoding, ShardPacket, ShardPayload,
-    TransferTiming,
+    apply_packet, encode_shard, encode_shard_delta, run_transfer, run_transfer_delta,
+    ShardEncoding, ShardPacket, ShardPayload, TransferTiming,
 };

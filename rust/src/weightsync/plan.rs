@@ -78,6 +78,26 @@ impl ReshardPlan {
     pub fn n_links(&self) -> usize {
         self.link_elems().len()
     }
+
+    /// Partition the schedule into `n_groups` link-groups for the
+    /// background streaming executor (one worker thread per group). Ops are
+    /// grouped by destination rank modulo the group count, so every packet
+    /// bound for one generator rank flows through one worker — the testbed
+    /// analogue of one transfer thread per NVLink/IB link — and groups stay
+    /// element-balanced for balanced destination layouts. `n_groups` is
+    /// clamped to [1, n_dst]; empty groups are dropped.
+    pub fn link_groups(&self, n_groups: usize) -> Vec<Vec<TransferOp>> {
+        let n = n_groups.clamp(1, self.n_dst.max(1));
+        let mut groups: Vec<Vec<TransferOp>> = vec![Vec::new(); n];
+        for &op in &self.ops {
+            groups[op.dst % n].push(op);
+        }
+        groups.retain(|g| !g.is_empty());
+        if groups.is_empty() {
+            groups.push(Vec::new()); // degenerate empty plan: one idle group
+        }
+        groups
+    }
 }
 
 /// Compute the minimal transfer schedule from `src` to `dst`.
@@ -122,6 +142,8 @@ pub fn plan_reshard(src: &Layout, dst: &Layout) -> Result<ReshardPlan> {
 
 #[cfg(test)]
 mod tests {
+    use std::collections::BTreeMap;
+
     use super::*;
     use crate::weightsync::layout::contiguous_entries;
 
@@ -170,5 +192,25 @@ mod tests {
     #[test]
     fn size_mismatch_rejected() {
         assert!(plan_reshard(&Layout::fsdp(10, 2), &Layout::fsdp(12, 2)).is_err());
+    }
+
+    #[test]
+    fn link_groups_partition_ops_exactly() {
+        let src = Layout::fsdp(1000, 8);
+        let dst = Layout::tp_flat(1000, 4);
+        let p = plan_reshard(&src, &dst).unwrap();
+        for n in [1usize, 2, 3, 4, 99] {
+            let groups = p.link_groups(n);
+            assert!(groups.len() <= n.clamp(1, 4));
+            let total: usize = groups.iter().map(|g| g.len()).sum();
+            assert_eq!(total, p.ops.len(), "groups must tile the schedule");
+            // a destination rank's ops never split across groups
+            let mut home: BTreeMap<usize, usize> = BTreeMap::new();
+            for (gi, g) in groups.iter().enumerate() {
+                for op in g {
+                    assert_eq!(*home.entry(op.dst).or_insert(gi), gi);
+                }
+            }
+        }
     }
 }

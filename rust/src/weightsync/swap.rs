@@ -8,15 +8,24 @@
 //! * **staging** — the next version streaming in shard by shard while the
 //!   generator keeps decoding on front.
 //!
-//! The fence: staging becomes swappable only when every op of its plan has
-//! landed (`received == expected`), and the swap happens only when the
-//! *generator* calls [`GeneratorSlot::swap_at_boundary`] — a sequence
+//! The version fence: staging becomes swappable only when every op of its
+//! plan has landed (`received == expected`), and the swap happens only when
+//! the *generator* calls [`GeneratorSlot::swap_at_boundary`] — a sequence
 //! boundary of its own choosing (chunk edges, in this codebase). Decode
 //! therefore never observes a torn or partial version, and the stall a
 //! publish imposes on generation shrinks from "copy the whole snapshot" to
 //! one pointer exchange. Publishes are latest-wins: if version N+2 starts
 //! streaming before N+1 was swapped in, N+1 is abandoned — generators always
 //! jump to the freshest complete version (paper §4.1 semantics).
+//!
+//! The base-version fence (delta encodings): a delta staging is opened with
+//! [`GeneratorSlot::begin_delta`], which seeds the staging buffer from the
+//! slot's current front and records that front's version as the staging
+//! base. A delta packet whose `base_version` disagrees is rejected with
+//! [`RecvOutcome::BaseMismatch`] — applied onto the wrong base it would
+//! silently corrupt weights — and the sender re-encodes that shard as full
+//! f32 (see `weightsync::executor`). The op only counts toward the version
+//! fence once a payload actually lands.
 
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,6 +34,18 @@ use std::time::Instant;
 
 use crate::model::VersionedParams;
 use crate::weightsync::transfer::{apply_packet, ShardPacket};
+
+/// What [`GeneratorSlot::recv`] did with a packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvOutcome {
+    /// payload applied; the op now counts toward the version fence
+    Applied,
+    /// no staging open, or the packet's version is not the staging version
+    Stale,
+    /// delta payload against a base the staging buffer does not hold; the
+    /// sender must re-send this op as a self-contained (full) payload
+    BaseMismatch,
+}
 
 /// The in-flight (staging) buffer: version N+1 while decode runs on N.
 struct Staging {
@@ -35,6 +56,9 @@ struct Staging {
     /// twice; the fence opens at `expected` DISTINCT ops
     received: BTreeSet<usize>,
     expected: usize,
+    /// Some(v): the buffer was seeded from front version v and may accept
+    /// delta payloads against exactly v; None: full-payload staging
+    base_version: Option<u64>,
 }
 
 /// One generator's double-buffered weight slot.
@@ -45,6 +69,7 @@ pub struct GeneratorSlot {
     swaps: AtomicU64,
     stall_nanos: AtomicU64,
     dropped_versions: AtomicU64,
+    base_rejects: AtomicU64,
 }
 
 impl GeneratorSlot {
@@ -57,6 +82,7 @@ impl GeneratorSlot {
             swaps: AtomicU64::new(0),
             stall_nanos: AtomicU64::new(0),
             dropped_versions: AtomicU64::new(0),
+            base_rejects: AtomicU64::new(0),
         })
     }
 
@@ -71,7 +97,31 @@ impl GeneratorSlot {
 
     /// Publisher side: open staging for `version`, expecting `expected_ops`
     /// packets. Latest-wins: an unswapped older staging is abandoned.
+    /// Versions at or below the current front are refused outright — a
+    /// late-registered slot already starts at the bus's latest snapshot, so
+    /// promoting an older stream would regress decode.
+    ///
+    /// Idempotent per version: concurrent link-group workers may all call
+    /// this for the same publish, only the first opens the staging.
     pub fn begin(&self, version: u64, expected_ops: usize) {
+        self.begin_inner(version, expected_ops, false)
+    }
+
+    /// [`GeneratorSlot::begin`] for a delta-encoded publish: seeds the
+    /// staging buffer from the current front and records that front's
+    /// version as the staging base, arming the base-version fence.
+    pub fn begin_delta(&self, version: u64, expected_ops: usize) {
+        self.begin_inner(version, expected_ops, true)
+    }
+
+    fn begin_inner(&self, version: u64, expected_ops: usize, delta: bool) {
+        // Clone the front Arc *before* taking the staging lock:
+        // swap_at_boundary acquires staging -> front(write), so holding
+        // front(read) here while waiting on staging would deadlock.
+        let front = self.front.read().unwrap().clone();
+        if version <= front.version {
+            return; // decode is already at (or past) this version
+        }
         let mut guard = self.staging.lock().unwrap();
         if let Some(old) = guard.as_ref() {
             if old.version >= version {
@@ -80,29 +130,47 @@ impl GeneratorSlot {
             self.dropped_versions.fetch_add(1, Ordering::Relaxed);
         }
         // reuse the abandoned staging allocation when shapes match
-        let data = match guard.take() {
+        let mut data = match guard.take() {
             Some(old) if old.data.len() == self.num_params => old.data,
             _ => vec![0.0f32; self.num_params],
+        };
+        let base_version = if delta {
+            data.copy_from_slice(&front.data);
+            Some(front.version)
+        } else {
+            None
         };
         *guard = Some(Staging {
             version,
             data,
             received: BTreeSet::new(),
             expected: expected_ops.max(1),
+            base_version,
         });
     }
 
     /// Publisher side: land one shard. Packets for any version other than
-    /// the currently staging one are dropped (the fence); duplicated
+    /// the currently staging one are dropped (the version fence); delta
+    /// payloads against a base the staging was not seeded from are rejected
+    /// (the base-version fence) so the sender can re-send full; duplicated
     /// packets overwrite their own interval but never advance the fence.
-    pub fn recv(&self, pkt: &ShardPacket) {
+    pub fn recv(&self, pkt: &ShardPacket) -> RecvOutcome {
         let mut guard = self.staging.lock().unwrap();
-        let Some(staging) = guard.as_mut() else { return };
+        let Some(staging) = guard.as_mut() else {
+            return RecvOutcome::Stale;
+        };
         if staging.version != pkt.version {
-            return;
+            return RecvOutcome::Stale;
+        }
+        if let Some(pkt_base) = pkt.base_version() {
+            if staging.base_version != Some(pkt_base) {
+                self.base_rejects.fetch_add(1, Ordering::Relaxed);
+                return RecvOutcome::BaseMismatch;
+            }
         }
         apply_packet(&mut staging.data, pkt);
         staging.received.insert(pkt.op.start);
+        RecvOutcome::Applied
     }
 
     /// Generator side, called at a sequence boundary: if a complete staged
@@ -118,7 +186,15 @@ impl GeneratorSlot {
         }
         let staging = guard.take().unwrap();
         let snap = Arc::new(VersionedParams::new(staging.version, staging.data));
-        *self.front.write().unwrap() = snap.clone();
+        {
+            let mut front = self.front.write().unwrap();
+            if snap.version <= front.version {
+                // belt-and-braces: begin() refuses versions <= front, so a
+                // completed staging is always ahead — but never regress
+                return None;
+            }
+            *front = snap.clone();
+        }
         drop(guard);
         self.swaps.fetch_add(1, Ordering::Relaxed);
         self.stall_nanos
@@ -134,6 +210,12 @@ impl GeneratorSlot {
     /// Staged versions abandoned because a newer publish arrived first.
     pub fn dropped_versions(&self) -> u64 {
         self.dropped_versions.load(Ordering::Relaxed)
+    }
+
+    /// Delta packets rejected by the base-version fence (each one was
+    /// re-sent as full by the streaming plane).
+    pub fn base_rejects(&self) -> u64 {
+        self.base_rejects.load(Ordering::Relaxed)
     }
 
     /// Total generator-side stall spent in `swap_at_boundary` calls that
@@ -159,7 +241,7 @@ impl GeneratorSlot {
 mod tests {
     use super::*;
     use crate::weightsync::plan::TransferOp;
-    use crate::weightsync::transfer::{encode_shard, ShardEncoding};
+    use crate::weightsync::transfer::{encode_shard, encode_shard_delta, ShardEncoding};
 
     fn op(start: usize, len: usize) -> TransferOp {
         TransferOp {
@@ -229,5 +311,58 @@ mod tests {
         let v3 = vec![3.0f32; 4];
         slot.recv(&encode_shard(&v3, 3, op(0, 4), ShardEncoding::F32));
         assert_eq!(slot.swap_at_boundary().unwrap().version, 3);
+    }
+
+    #[test]
+    fn begin_refuses_versions_at_or_below_front() {
+        // A slot registered after publish N already fronts N; re-streaming
+        // N (or older) must not stage, or a later swap would regress decode.
+        let slot = GeneratorSlot::new(Arc::new(VersionedParams::new(5, vec![5.0; 4])));
+        slot.begin(5, 1);
+        slot.recv(&encode_shard(&[9.0f32; 4], 5, op(0, 4), ShardEncoding::F32));
+        assert!(slot.swap_at_boundary().is_none());
+        assert_eq!(slot.front_version(), 5);
+        assert!(slot.attach().data.iter().all(|x| *x == 5.0));
+    }
+
+    #[test]
+    fn delta_staging_applies_matching_base_exactly() {
+        let base = vec![1.0f32, 2.0, 3.0, 4.0];
+        let slot = GeneratorSlot::new(Arc::new(VersionedParams::new(3, base.clone())));
+        let mut new = base.clone();
+        new[2] = 30.0;
+        slot.begin_delta(4, 1);
+        let (pkt, _) = encode_shard_delta(&new, &base, 3, 4, op(0, 4), None);
+        assert_eq!(slot.recv(&pkt), RecvOutcome::Applied);
+        let snap = slot.swap_at_boundary().expect("delta staging complete");
+        assert_eq!(snap.version, 4);
+        assert_eq!(*snap.data, new);
+        assert_eq!(slot.base_rejects(), 0);
+    }
+
+    #[test]
+    fn stale_base_delta_is_fenced_and_full_resend_recovers() {
+        // Slot fronts version 2; publisher encodes v4 as a delta against v3
+        // (its previous publish). The fence must reject the delta — applied
+        // onto v2 it would corrupt — and the full re-send must complete the
+        // version fence instead.
+        let v2 = vec![2.0f32; 4];
+        let v3 = vec![2.0f32, 7.0, 2.0, 2.0];
+        let v4 = vec![2.0f32, 7.0, 9.0, 2.0];
+        let slot = GeneratorSlot::new(Arc::new(VersionedParams::new(2, v2)));
+        slot.begin_delta(4, 1); // seeds from front: base_version = Some(2)
+        let (delta_pkt, _) = encode_shard_delta(&v4, &v3, 3, 4, op(0, 4), None);
+        assert_eq!(slot.recv(&delta_pkt), RecvOutcome::BaseMismatch);
+        assert_eq!(slot.base_rejects(), 1);
+        assert!(
+            slot.swap_at_boundary().is_none(),
+            "rejected delta must not advance the version fence"
+        );
+        // sender notices and re-encodes the op as self-contained f32
+        let full = encode_shard(&v4, 4, op(0, 4), ShardEncoding::F32);
+        assert_eq!(slot.recv(&full), RecvOutcome::Applied);
+        let snap = slot.swap_at_boundary().unwrap();
+        assert_eq!(snap.version, 4);
+        assert_eq!(*snap.data, v4);
     }
 }

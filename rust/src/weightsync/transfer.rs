@@ -1,11 +1,33 @@
-//! Per-shard versioned transfer with optional quantized encoding.
+//! Per-shard versioned transfer with quantized and delta encodings.
 //!
 //! Each [`TransferOp`] of a [`ReshardPlan`] becomes one [`ShardPacket`]: the
-//! source rank encodes its interval (f32 passthrough or int8 symmetric
-//! per-shard, reusing `model::quant`), the destination rank applies
-//! it — dequantizing at attach — into its receive buffer. Packets carry the
-//! weight version so receivers can fence: a packet for any version other
-//! than the one currently staging is dropped, never mixed.
+//! source rank encodes its interval, the destination rank applies it into
+//! its receive buffer. Packets carry the weight version so receivers can
+//! fence: a packet for any version other than the one currently staging is
+//! dropped, never mixed.
+//!
+//! Four wire encodings ([`ShardEncoding`]):
+//!
+//! * `F32` — 4 bytes/elem passthrough, bit-exact.
+//! * `Int8` — symmetric per-shard quantization reusing `model::quant`,
+//!   dequantized at attach, error within [`crate::model::int8_error_bound`].
+//! * `Delta` — encoded against a *base* version (the previously published
+//!   snapshot). Changed elements (bitwise `f32::to_bits` comparison) ship as
+//!   sparse index+value pairs when sparse enough, otherwise as a dense
+//!   bitwise-XOR delta. Both reconstruct **bit-exactly** — the XOR form by
+//!   construction, the sparse form because unchanged elements are, by
+//!   definition of the changed set, already identical in the base. Delta
+//!   payloads carry `base_version`; a receiver whose staging buffer was not
+//!   seeded from exactly that version must reject the packet (the
+//!   *base-version fence*, enforced by
+//!   [`crate::weightsync::GeneratorSlot::recv`]) and be re-sent the shard
+//!   as full f32.
+//! * `TopK` — sparse delta capped at the k largest-magnitude changes per
+//!   shard; dropped changes keep their base value, so the reconstruction
+//!   error is bounded by the largest dropped |update| (returned by
+//!   [`encode_shard_delta`] and accumulated into
+//!   [`TransferTiming::err_bound`]). Falls back to full f32 when the sparse
+//!   packing would be denser than the break-even threshold.
 //!
 //! Timing: each op is timed individually. On the cluster all links move in
 //! parallel, so the modelled DDMA time for a publish is
@@ -18,6 +40,10 @@ use crate::model::{quantize_int8, QuantizedParams};
 use crate::runtime::ParamEntry;
 use crate::weightsync::plan::{ReshardPlan, TransferOp};
 
+/// Sparse index+value packing costs 8 bytes/changed elem vs 4 bytes/elem
+/// dense, so past half density a sparse packet is pure overhead.
+pub const SPARSE_BREAK_EVEN_DENSITY: f64 = 0.5;
+
 /// Wire encoding for shard payloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardEncoding {
@@ -26,6 +52,21 @@ pub enum ShardEncoding {
     /// 1 byte/elem + one f32 scale per shard; the paper's fp8-generator
     /// analogue — the attached weights are a quantized snapshot of pi
     Int8,
+    /// exact delta vs the previous published version: sparse index+value
+    /// when sparse enough, dense bitwise-XOR otherwise (both bit-exact,
+    /// base-version fenced)
+    Delta,
+    /// top-k sparse delta: only the k largest |updates| ship; bounded error,
+    /// base-version fenced, full-f32 fallback past the density threshold
+    TopK,
+}
+
+impl ShardEncoding {
+    /// Delta-family encodings need a base snapshot and the base-version
+    /// fence on the receive side.
+    pub fn is_delta(self) -> bool {
+        matches!(self, ShardEncoding::Delta | ShardEncoding::TopK)
+    }
 }
 
 /// One encoded shard in flight.
@@ -40,6 +81,16 @@ pub struct ShardPacket {
 pub enum ShardPayload {
     F32(Vec<f32>),
     Int8(QuantizedParams),
+    /// changed elements only, as (index within the op, new value) pairs;
+    /// valid only on a buffer holding `base_version`'s content
+    SparseDelta {
+        base_version: u64,
+        idx: Vec<u32>,
+        val: Vec<f32>,
+    },
+    /// bitwise XOR of the op's interval vs `base_version`; applying it to
+    /// exactly that base reproduces the new bits verbatim
+    DenseDelta { base_version: u64, xor: Vec<u32> },
 }
 
 impl ShardPacket {
@@ -48,6 +99,18 @@ impl ShardPacket {
         match &self.payload {
             ShardPayload::F32(v) => v.len() * 4,
             ShardPayload::Int8(q) => q.data.len() + q.scales.len() * 4,
+            ShardPayload::SparseDelta { idx, val, .. } => idx.len() * 4 + val.len() * 4,
+            ShardPayload::DenseDelta { xor, .. } => xor.len() * 4,
+        }
+    }
+
+    /// The base version a delta payload must land on (None for
+    /// self-contained payloads).
+    pub fn base_version(&self) -> Option<u64> {
+        match &self.payload {
+            ShardPayload::SparseDelta { base_version, .. }
+            | ShardPayload::DenseDelta { base_version, .. } => Some(*base_version),
+            _ => None,
         }
     }
 }
@@ -62,7 +125,10 @@ fn shard_entry(len: usize) -> [ParamEntry; 1] {
     }]
 }
 
-/// Encode one op's interval of `params` (the source rank's push).
+/// Encode one op's interval of `params` (the source rank's push). The
+/// delta-family encodings need a base snapshot — without one they degrade
+/// to full f32 (which is also the fallback a receiver's base-version fence
+/// triggers), so this stays total over the enum.
 pub fn encode_shard(
     params: &[f32],
     version: u64,
@@ -71,7 +137,9 @@ pub fn encode_shard(
 ) -> ShardPacket {
     let chunk = &params[op.start..op.end()];
     let payload = match encoding {
-        ShardEncoding::F32 => ShardPayload::F32(chunk.to_vec()),
+        ShardEncoding::F32 | ShardEncoding::Delta | ShardEncoding::TopK => {
+            ShardPayload::F32(chunk.to_vec())
+        }
         ShardEncoding::Int8 => {
             ShardPayload::Int8(quantize_int8(chunk, &shard_entry(chunk.len())))
         }
@@ -81,6 +149,94 @@ pub fn encode_shard(
         op,
         payload,
     }
+}
+
+/// |new - base| used to rank top-k candidates; a bit-level change whose
+/// arithmetic difference is NaN (NaN appeared or disappeared) must always
+/// be kept, so it ranks as infinite.
+fn update_magnitude(new: f32, base: f32) -> f32 {
+    let d = (new - base).abs();
+    if d.is_nan() {
+        f32::INFINITY
+    } else {
+        d
+    }
+}
+
+/// Encode one op's interval as a delta against `base` (the previously
+/// published snapshot, version `base_version`).
+///
+/// * `topk` None — exact: every changed element ships (sparse pairs under
+///   [`SPARSE_BREAK_EVEN_DENSITY`], dense XOR above it). Returned bound 0.
+/// * `topk` Some(k) — at most the k largest-|update| changes ship; returns
+///   the largest *dropped* |update|, which bounds the reconstruction error
+///   of this shard. Falls back to full f32 (bound 0) when even the capped
+///   packing is denser than break-even.
+pub fn encode_shard_delta(
+    params: &[f32],
+    base: &[f32],
+    base_version: u64,
+    version: u64,
+    op: TransferOp,
+    topk: Option<usize>,
+) -> (ShardPacket, f32) {
+    let chunk = &params[op.start..op.end()];
+    let base_chunk = &base[op.start..op.end()];
+    // bitwise comparison: catches sign-of-zero and NaN-payload changes that
+    // `==` would miss, which is what makes sparse reconstruction bit-exact
+    let mut changed: Vec<(u32, f32, f32)> = chunk
+        .iter()
+        .zip(base_chunk)
+        .enumerate()
+        .filter(|(_, (n, b))| n.to_bits() != b.to_bits())
+        .map(|(i, (n, b))| (i as u32, *n, update_magnitude(*n, *b)))
+        .collect();
+
+    let mut dropped_bound = 0.0f32;
+    if let Some(k) = topk {
+        let k = k.max(1);
+        if changed.len() > k {
+            changed.sort_unstable_by(|a, b| b.2.total_cmp(&a.2));
+            dropped_bound = changed[k].2;
+            changed.truncate(k);
+            changed.sort_unstable_by_key(|c| c.0);
+        }
+    }
+
+    // 8 bytes per sparse pair vs 4 per dense elem: sparse wins while the
+    // changed density stays under SPARSE_BREAK_EVEN_DENSITY
+    let density = changed.len() as f64 / op.len.max(1) as f64;
+    let payload = if density < SPARSE_BREAK_EVEN_DENSITY {
+        ShardPayload::SparseDelta {
+            base_version,
+            idx: changed.iter().map(|c| c.0).collect(),
+            val: changed.iter().map(|c| c.1).collect(),
+        }
+    } else if topk.is_none() {
+        // exact mode past break-even: dense XOR keeps bit-exactness and the
+        // all-zero runs of an unchanged region (compressible on a real wire)
+        ShardPayload::DenseDelta {
+            base_version,
+            xor: chunk
+                .iter()
+                .zip(base_chunk)
+                .map(|(n, b)| n.to_bits() ^ b.to_bits())
+                .collect(),
+        }
+    } else {
+        // top-k past break-even: the delta machinery buys nothing, ship the
+        // shard whole (exact, no base fence needed)
+        dropped_bound = 0.0;
+        ShardPayload::F32(chunk.to_vec())
+    };
+    (
+        ShardPacket {
+            version,
+            op,
+            payload,
+        },
+        dropped_bound,
+    )
 }
 
 /// Apply a packet into the receive buffer (the destination rank's attach);
@@ -97,6 +253,20 @@ pub fn apply_packet(dst: &mut [f32], pkt: &ShardPacket) {
             let scale = q.scales.first().copied().unwrap_or(1.0);
             for (out, x) in dst[range].iter_mut().zip(&q.data) {
                 *out = *x as f32 * scale;
+            }
+        }
+        // Delta payloads assume dst currently holds the base version's
+        // content over this interval — the base-version fence
+        // (GeneratorSlot::recv) guarantees it on the streaming path; direct
+        // callers (run_transfer_delta, tests) must seed dst themselves.
+        ShardPayload::SparseDelta { idx, val, .. } => {
+            for (i, v) in idx.iter().zip(val) {
+                dst[pkt.op.start + *i as usize] = *v;
+            }
+        }
+        ShardPayload::DenseDelta { xor, .. } => {
+            for (out, x) in dst[range].iter_mut().zip(xor) {
+                *out = f32::from_bits(out.to_bits() ^ *x);
             }
         }
     }
@@ -155,6 +325,48 @@ pub fn run_transfer(
             timing.err_bound = timing.err_bound.max(crate::model::int8_error_bound(maxabs));
             for (a, b) in src_chunk.iter().zip(&dst[op.start..op.end()]) {
                 timing.max_abs_err = timing.max_abs_err.max((a - b).abs());
+            }
+        }
+    }
+    timing
+}
+
+/// Execute a full delta-encoded plan at `version` against `base`
+/// (`base_version`'s snapshot). `dst` must hold the base content on entry —
+/// the testbed analogue of the receiver's staging buffer seeded from its
+/// front — and holds the reconstruction on exit. `topk_frac` Some(f) caps
+/// each shard at ceil(f * len) updates; None is the exact Delta encoding.
+///
+/// `err_bound` is the largest dropped |update| across shards (0 for exact
+/// delta) and `max_abs_err` the realized reconstruction error, measured
+/// bitwise-aware: exact-delta plans always report 0.
+pub fn run_transfer_delta(
+    params: &[f32],
+    base: &[f32],
+    dst: &mut [f32],
+    plan: &ReshardPlan,
+    base_version: u64,
+    version: u64,
+    topk_frac: Option<f64>,
+) -> TransferTiming {
+    assert_eq!(params.len(), plan.num_params);
+    assert_eq!(base.len(), plan.num_params);
+    assert_eq!(dst.len(), plan.num_params);
+    let mut timing = TransferTiming::default();
+    for &op in &plan.ops {
+        let t0 = Instant::now();
+        let k = topk_frac.map(|f| ((op.len as f64 * f).ceil() as usize).max(1));
+        let (pkt, bound) = encode_shard_delta(params, base, base_version, version, op, k);
+        timing.bytes += pkt.payload_bytes();
+        apply_packet(dst, &pkt);
+        timing.shard_secs.push(t0.elapsed().as_secs_f64());
+        timing.err_bound = timing.err_bound.max(bound);
+        for (a, b) in params[op.start..op.end()]
+            .iter()
+            .zip(&dst[op.start..op.end()])
+        {
+            if a.to_bits() != b.to_bits() {
+                timing.max_abs_err = timing.max_abs_err.max(update_magnitude(*a, *b));
             }
         }
     }
@@ -223,6 +435,105 @@ mod tests {
         assert_eq!(&dst[5..37], &reference[..]);
         // outside the op's interval stays untouched
         assert!(dst[..5].iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn sparse_delta_roundtrips_bit_exactly() {
+        let base = params(512);
+        let mut new = base.clone();
+        // ~3% of elements change, including a sign-of-zero flip
+        for i in (0..512).step_by(37) {
+            new[i] += 0.125;
+        }
+        new[1] = -0.0;
+        let plan =
+            plan_reshard(&Layout::fsdp(512, 4), &Layout::tp_flat(512, 2)).unwrap();
+        let mut dst = base.clone();
+        let t = run_transfer_delta(&new, &base, &mut dst, &plan, 1, 2, None);
+        assert!(
+            dst.iter().zip(&new).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "exact delta must reconstruct bit-exactly"
+        );
+        assert_eq!(t.max_abs_err, 0.0);
+        assert_eq!(t.err_bound, 0.0);
+        // sparse packing: far fewer bytes than the 512*4 full transfer
+        assert!(t.bytes < 512 * 4 / 2, "delta bytes {} not sparse", t.bytes);
+    }
+
+    #[test]
+    fn dense_delta_still_exact_when_everything_changed() {
+        let base = params(256);
+        let new: Vec<f32> = base.iter().map(|x| x * 1.5 + 0.01).collect();
+        let plan =
+            plan_reshard(&Layout::fsdp(256, 2), &Layout::tp_flat(256, 2)).unwrap();
+        let mut dst = base.clone();
+        let t = run_transfer_delta(&new, &base, &mut dst, &plan, 3, 4, None);
+        assert!(dst.iter().zip(&new).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(t.max_abs_err, 0.0);
+        // dense XOR: same wire size as full f32, never more
+        assert_eq!(t.bytes, 256 * 4);
+    }
+
+    #[test]
+    fn topk_delta_error_within_reported_bound() {
+        let base = params(1000);
+        let mut new = base.clone();
+        for (i, x) in new.iter_mut().enumerate() {
+            *x += (i as f32 * 0.61).cos() * 0.01; // every element nudged
+        }
+        let plan =
+            plan_reshard(&Layout::fsdp(1000, 4), &Layout::tp_flat(1000, 2)).unwrap();
+        let mut dst = base.clone();
+        let t = run_transfer_delta(&new, &base, &mut dst, &plan, 1, 2, Some(0.05));
+        assert!(t.max_abs_err > 0.0, "top-k at 5% of a dense update must drop");
+        assert!(
+            t.max_abs_err <= t.err_bound,
+            "err {} > bound {}",
+            t.max_abs_err,
+            t.err_bound
+        );
+        assert!(t.bytes < 1000 * 4, "capped sparse packing must beat full");
+    }
+
+    #[test]
+    fn topk_falls_back_to_full_when_dense() {
+        // k = 90% of the shard: sparse pairs would cost 1.8x full, so the
+        // encoder must ship full f32 (exact, bound 0, no base fence)
+        let base = params(64);
+        let new: Vec<f32> = base.iter().map(|x| x + 1.0).collect();
+        let op = TransferOp {
+            src: 0,
+            dst: 0,
+            start: 0,
+            len: 64,
+        };
+        let (pkt, bound) = encode_shard_delta(&new, &base, 1, 2, op, Some(58));
+        assert!(matches!(pkt.payload, ShardPayload::F32(_)));
+        assert_eq!(bound, 0.0);
+        assert_eq!(pkt.base_version(), None);
+        let mut dst = vec![0.0; 64]; // full payload needs no base seeding
+        apply_packet(&mut dst, &pkt);
+        assert_eq!(dst, new);
+    }
+
+    #[test]
+    fn delta_base_version_is_tagged() {
+        let base = vec![0.0f32; 16];
+        let new = {
+            let mut v = base.clone();
+            v[3] = 9.0;
+            v
+        };
+        let op = TransferOp {
+            src: 0,
+            dst: 0,
+            start: 0,
+            len: 16,
+        };
+        let (pkt, _) = encode_shard_delta(&new, &base, 41, 42, op, None);
+        assert_eq!(pkt.version, 42);
+        assert_eq!(pkt.base_version(), Some(41));
+        assert_eq!(pkt.payload_bytes(), 8); // one (idx, val) pair
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Threaded stress tests for the background streaming weight-sync executor:
+//! N concurrent publishers x M generator slots, across wire encodings.
+//!
+//! Invariants under arbitrary interleaving:
+//!
+//! * every slot converges to the bus's max version once the stream settles;
+//! * no slot ever fronts a torn or mixed buffer — each swapped snapshot is
+//!   self-consistent with the publish that produced it (checked via a
+//!   content tag, so it holds regardless of which publisher won the race);
+//! * the base-version fence never lets a delta land on a stale base: with
+//!   the exact Delta encoding every swapped snapshot must be *bit-exact*
+//!   self-consistent, which a single wrongly-based sparse packet would
+//!   break;
+//! * versions are minted in one total order across publishers.
+
+use std::sync::Arc;
+
+use llamarl::ddma::{BusOptions, WeightsBus};
+use llamarl::weightsync::{Layout, ShardEncoding};
+
+/// Publish payloads are self-describing: element i derives from the tag in
+/// element 0. A buffer mixing two publishes (torn write, wrong-base delta)
+/// cannot satisfy this for all i.
+fn fill(tag: u32, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (tag.wrapping_mul(31).wrapping_add(i as u32) % 1013) as f32)
+        .collect()
+}
+
+fn assert_consistent(data: &[f32], context: &str) {
+    assert!(!data.is_empty());
+    // recover the tag from element 0: tag*31 % 1013 == data[0]
+    let d0 = data[0] as u32;
+    let tag = (0..1013u32)
+        .find(|t| t.wrapping_mul(31) % 1013 == d0)
+        .unwrap_or_else(|| panic!("{context}: element 0 ({d0}) encodes no tag"));
+    for (i, x) in data.iter().enumerate() {
+        let want = (tag.wrapping_mul(31).wrapping_add(i as u32) % 1013) as f32;
+        assert!(
+            x.to_bits() == want.to_bits(),
+            "{context}: element {i} = {x}, want {want} (tag {tag}) — torn or \
+             wrongly-based buffer"
+        );
+    }
+}
+
+fn stress(encoding: ShardEncoding, n_publishers: usize, n_slots: usize) {
+    let n = 1 << 10;
+    let rounds = 60u64;
+    let mut opts = BusOptions::new(Layout::fsdp(n, 4), Layout::tp_flat(n, 3));
+    opts.encoding = encoding;
+    opts.background = true;
+    opts.link_groups = 3;
+    let bus = Arc::new(WeightsBus::with_options(fill(0, n), opts).unwrap());
+
+    let slots: Vec<_> = (0..n_slots).map(|_| bus.register_generator()).collect();
+
+    // consumer threads: swap eagerly, checking consistency + monotonicity
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let consumers: Vec<_> = slots
+        .iter()
+        .enumerate()
+        .map(|(si, slot)| {
+            let slot = slot.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    if let Some(snap) = slot.swap_at_boundary() {
+                        assert!(snap.version > last, "slot {si}: version regressed");
+                        last = snap.version;
+                        assert_consistent(&snap.data, &format!("slot {si} v{}", snap.version));
+                    }
+                    std::hint::black_box(slot.attach().version);
+                }
+            })
+        })
+        .collect();
+
+    // publisher threads: distinct tags per publish, global version mint
+    let publishers: Vec<_> = (0..n_publishers)
+        .map(|p| {
+            let bus = bus.clone();
+            let pid = if p == 0 { 0 } else { bus.register_publisher() };
+            std::thread::spawn(move || {
+                let mut versions = Vec::new();
+                for r in 0..rounds {
+                    let tag = (p as u32 + 1) * 1000 + r as u32;
+                    versions.push(bus.publish_from(pid, fill(tag, n)));
+                }
+                versions
+            })
+        })
+        .collect();
+
+    let mut all_versions: Vec<u64> = Vec::new();
+    for h in publishers {
+        let vs = h.join().unwrap();
+        assert!(
+            vs.windows(2).all(|w| w[0] < w[1]),
+            "a publisher's own versions must be strictly increasing"
+        );
+        all_versions.extend(vs);
+    }
+    // one global mint across publishers: all versions distinct, none skipped
+    all_versions.sort_unstable();
+    let expected: Vec<u64> = (1..=n_publishers as u64 * rounds).collect();
+    assert_eq!(all_versions, expected, "versions must form one total order");
+
+    // settle the stream, stop consumers, then drain every slot
+    bus.flush();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for c in consumers {
+        c.join().unwrap();
+    }
+    let max_version = bus.version();
+    assert_eq!(max_version, n_publishers as u64 * rounds);
+    for (si, slot) in slots.iter().enumerate() {
+        while slot.swap_at_boundary().is_some() {}
+        let front = slot.attach();
+        assert_eq!(
+            front.version, max_version,
+            "slot {si} must converge to the max version"
+        );
+        assert_consistent(&front.data, &format!("slot {si} final"));
+        // final content must equal the winning publish exactly (bit-exact
+        // even for delta: the master snapshot is always exact)
+        let master = bus.latest();
+        assert!(
+            front
+                .data
+                .iter()
+                .zip(master.data.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "slot {si}: converged content differs from the master snapshot"
+        );
+    }
+    assert_eq!(bus.publisher_count(), n_publishers.max(1));
+}
+
+#[test]
+fn stress_full_f32_three_publishers_four_slots() {
+    stress(ShardEncoding::F32, 3, 4);
+}
+
+#[test]
+fn stress_exact_delta_two_publishers_three_slots() {
+    // Delta: a single wrongly-based sparse packet that slipped the fence
+    // would corrupt a slot's buffer and fail assert_consistent bit-exactly.
+    stress(ShardEncoding::Delta, 2, 3);
+}
+
+#[test]
+fn stress_single_publisher_delta_matches_master() {
+    stress(ShardEncoding::Delta, 1, 2);
+}

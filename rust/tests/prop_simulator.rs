@@ -152,6 +152,8 @@ fn des_async_at_least_as_fast_and_lag_bounded() {
             partial_rollout_cap: f64::INFINITY,
             weight_sync_secs: 0.0,
             sync_overlap: false,
+            publish_block_secs: 0.0,
+            background_publish: false,
             seed: g.i64(0, 1 << 30) as u64,
         };
         let (s, a) = simulate_timeline(&cfg);

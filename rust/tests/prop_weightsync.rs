@@ -7,8 +7,8 @@ use std::sync::Arc;
 use llamarl::model::{int8_error_bound, VersionedParams};
 use llamarl::util::prop::{run_prop, Gen};
 use llamarl::weightsync::{
-    contiguous_entries, encode_shard, plan_reshard, run_transfer, GeneratorSlot, Layout,
-    ReshardPlan, ShardEncoding,
+    contiguous_entries, encode_shard, plan_reshard, run_transfer, run_transfer_delta,
+    GeneratorSlot, Layout, ReshardPlan, ShardEncoding,
 };
 
 fn random_layout_pair(g: &mut Gen) -> (Layout, Layout, usize) {
@@ -113,6 +113,81 @@ fn int8_transfer_stays_within_quant_bound() {
         // int8 payloads are strictly smaller than f32 for non-trivial sizes
         if n > 8 * plan.ops.len() {
             assert!(t.bytes < n * 4);
+        }
+    });
+}
+
+/// Build a new vector from `base` with roughly `sparsity` of the elements
+/// changed (always at least one when n > 0); returns the new vector.
+fn perturb(g: &mut Gen, base: &[f32], sparsity: f64) -> Vec<f32> {
+    let mut new = base.to_vec();
+    let mut changed = 0usize;
+    for x in new.iter_mut() {
+        if g.rng.f64() < sparsity {
+            *x += g.f64(-2.0, 2.0) as f32;
+            changed += 1;
+        }
+    }
+    if changed == 0 && !new.is_empty() {
+        new[0] += 1.0;
+    }
+    new
+}
+
+#[test]
+fn delta_transfer_roundtrips_bit_exactly_across_sparsity() {
+    run_prop("transfer_delta_exact", 120, |g| {
+        let (src, dst, n) = random_layout_pair(g);
+        let plan = plan_reshard(&src, &dst).unwrap();
+        let base: Vec<f32> = (0..n).map(|_| g.f64(-5.0, 5.0) as f32).collect();
+        // sweep density from ~0.1% to 100%: both the sparse index+value and
+        // the dense XOR packings must reconstruct bit-exactly
+        let sparsity = 10f64.powf(g.f64(-3.0, 0.0));
+        let new = perturb(g, &base, sparsity);
+        let mut out = base.clone();
+        let t = run_transfer_delta(&new, &base, &mut out, &plan, 7, 8, None);
+        assert!(
+            out.iter().zip(&new).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "delta reconstruction not bit-exact at sparsity {sparsity}"
+        );
+        assert_eq!(t.max_abs_err, 0.0);
+        assert_eq!(t.err_bound, 0.0);
+        // an exact delta never costs more wire than the full transfer
+        assert!(t.bytes <= n * 4, "delta bytes {} > full {}", t.bytes, n * 4);
+    });
+}
+
+#[test]
+fn topk_transfer_error_within_bound_across_sparsity() {
+    run_prop("transfer_topk_bound", 120, |g| {
+        let (src, dst, n) = random_layout_pair(g);
+        let plan = plan_reshard(&src, &dst).unwrap();
+        let base: Vec<f32> = (0..n).map(|_| g.f64(-5.0, 5.0) as f32).collect();
+        let sparsity = 10f64.powf(g.f64(-3.0, 0.0));
+        let new = perturb(g, &base, sparsity);
+        let frac = 10f64.powf(g.f64(-2.0, 0.0)); // kept fraction 1%..100%
+        let mut out = base.clone();
+        let t = run_transfer_delta(&new, &base, &mut out, &plan, 7, 8, Some(frac));
+        // the reported bound (largest dropped |update| across shards) must
+        // dominate the realized reconstruction error
+        assert!(
+            t.max_abs_err <= t.err_bound,
+            "topk err {} > bound {} (sparsity {sparsity}, frac {frac})",
+            t.max_abs_err,
+            t.err_bound
+        );
+        // kept updates apply exactly: every output element is either the
+        // base value (dropped) or the new value (kept), bitwise
+        for ((o, b), a) in out.iter().zip(&base).zip(&new) {
+            assert!(
+                o.to_bits() == b.to_bits() || o.to_bits() == a.to_bits(),
+                "output element is neither base nor new"
+            );
+        }
+        // when the cap does not bind, top-k degenerates to the exact delta
+        if t.err_bound == 0.0 {
+            assert_eq!(t.max_abs_err, 0.0);
+            assert!(out.iter().zip(&new).all(|(a, b)| a.to_bits() == b.to_bits()));
         }
     });
 }

@@ -1,0 +1,103 @@
+#!/usr/bin/env bash
+# Bench-regression gate for the weight-sync plane.
+#
+# Compares the freshly-measured target/BENCH_weightsync.json (written by
+# `cargo bench --bench weightsync_overlap`) against the committed baseline
+# BENCH_weightsync.json at the repo root:
+#
+#   * shape checks (booleans) must hold outright: sharded+overlapped stall
+#     strictly below monolithic, quantized round-trip within bound, delta
+#     streams bit-exact, top-k within its cumulative bound, and the
+#     acceptance floor that background publish blocked time is >= 5x below
+#     the inline fan-out;
+#   * the two headline ratios — overlap_stall_speedup (monolithic stall /
+#     sharded+overlapped stall) and publish_blocked_speedup (inline publish
+#     blocked / background publish blocked) — must not regress more than
+#     BENCH_GATE_TOL (default 20%) below the baseline. Ratios are gated
+#     rather than raw seconds so the gate is stable across machines; the
+#     raw numbers ride along in the JSON artifact for inspection.
+#
+# Usage: tools/bench_gate.sh [current.json] [baseline.json]
+# Env:   BENCH_GATE_TOL=0.20   fractional allowed regression on ratios
+#
+# Wired into CI (.github/workflows/ci.yml bench-smoke job) and
+# `./verify.sh --bench`. Refresh the baseline by copying a trusted run's
+# target/BENCH_weightsync.json over the repo-root file.
+
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+CUR="${1:-target/BENCH_weightsync.json}"
+BASE="${2:-BENCH_weightsync.json}"
+TOL="${BENCH_GATE_TOL:-0.20}"
+
+fail=0
+
+if [ ! -f "$CUR" ]; then
+    echo "bench_gate: FAIL — current summary $CUR missing (run \
+cargo bench --bench weightsync_overlap first)"
+    exit 1
+fi
+if [ ! -f "$BASE" ]; then
+    echo "bench_gate: FAIL — committed baseline $BASE missing"
+    exit 1
+fi
+
+# Extract "key":<scalar> from a flat one-line JSON object.
+field() {
+    grep -oE "\"$2\":(-?[0-9][0-9.eE+-]*|true|false)" "$1" | head -1 | sed 's/^[^:]*://'
+}
+
+require_true() {
+    local key="$1"
+    local val
+    val=$(field "$CUR" "$key")
+    if [ "$val" != "true" ]; then
+        echo "bench_gate: FAIL — $key is '${val:-missing}', expected true"
+        fail=1
+    else
+        echo "bench_gate: OK   — $key"
+    fi
+}
+
+# current >= baseline * (1 - TOL), plus an optional absolute floor
+require_ratio() {
+    local key="$1" floor="${2:-0}"
+    local cur base
+    cur=$(field "$CUR" "$key")
+    base=$(field "$BASE" "$key")
+    if [ -z "$cur" ]; then
+        echo "bench_gate: FAIL — $key missing from $CUR"
+        fail=1
+        return
+    fi
+    if [ -z "$base" ]; then
+        echo "bench_gate: FAIL — $key missing from baseline $BASE"
+        fail=1
+        return
+    fi
+    if awk -v c="$cur" -v b="$base" -v t="$TOL" -v f="$floor" \
+        'BEGIN { min = b * (1 - t); if (f + 0 > min) min = f + 0; exit !(c + 0 >= min) }'
+    then
+        echo "bench_gate: OK   — $key = $cur (baseline $base, tol $TOL)"
+    else
+        echo "bench_gate: FAIL — $key = $cur regressed below baseline $base (tol $TOL)"
+        fail=1
+    fi
+}
+
+echo "== bench_gate: $CUR vs $BASE (tol ${TOL}) =="
+require_true stall_strictly_lower
+require_true quant_within_bound
+require_true publish_blocked_5x
+require_true delta_exact
+require_true topk_within_bound
+require_ratio overlap_stall_speedup
+require_ratio publish_blocked_speedup 5
+
+if [ "$fail" = 0 ]; then
+    echo "bench_gate: PASS"
+else
+    echo "bench_gate: FAILED"
+fi
+exit "$fail"

@@ -3,15 +3,27 @@
 #
 #   ./verify.sh            build + test (+ advisory fmt & clippy checks)
 #   ./verify.sh --strict   also fail on rustfmt drift / clippy findings
+#   ./verify.sh --bench    also run the weight-sync bench and gate it
+#                          against the committed BENCH_weightsync.json
+#                          baseline (tools/bench_gate.sh)
 #
 # The fmt and clippy checks are advisory by default because the offline
-# image may lack those components; build + test are the hard gate.
+# image may lack those components; build + test are the hard gate. CI
+# (.github/workflows/ci.yml) runs plain verify as the required job, strict
+# as allowed-to-fail, and the bench gate in its own smoke job.
 
 set -uo pipefail
 cd "$(dirname "$0")"
 
 strict=0
-[ "${1:-}" = "--strict" ] && strict=1
+run_bench=0
+for arg in "$@"; do
+    case "$arg" in
+        --strict) strict=1 ;;
+        --bench) run_bench=1 ;;
+        *) echo "verify.sh: unknown flag '$arg' (use --strict / --bench)"; exit 2 ;;
+    esac
+done
 
 fail=0
 
@@ -43,6 +55,16 @@ if cargo clippy --version >/dev/null 2>&1; then
     fi
 else
     echo "clippy not installed; skipping"
+fi
+
+if [ "$run_bench" = 1 ]; then
+    echo "== cargo bench --bench weightsync_overlap + bench gate =="
+    if cargo bench --bench weightsync_overlap; then
+        ./tools/bench_gate.sh || fail=1
+    else
+        echo "error: weightsync_overlap bench failed"
+        fail=1
+    fi
 fi
 
 if [ "$fail" = 0 ]; then
