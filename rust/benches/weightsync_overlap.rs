@@ -155,6 +155,23 @@ fn mutate(data: &mut [f32], round: usize, frac: f64) -> f32 {
     max_update
 }
 
+/// Clustered per-round update: one contiguous block of `frac` of the
+/// elements moves (rotating with the round) — past the sparse break-even,
+/// the regime where the zero-run-encoded XOR wire format earns its keep.
+fn mutate_clustered(data: &mut [f32], round: usize, frac: f64) -> f32 {
+    let len = data.len();
+    let span = ((len as f64 * frac) as usize).clamp(1, len);
+    let slots = (len - span + 1).max(1);
+    let start = (round * 8191) % slots;
+    let mut max_update = 0.0f32;
+    for i in start..start + span {
+        let upd = 0.01 + (i % 7) as f32 * 0.001;
+        data[i] += upd;
+        max_update = max_update.max(upd);
+    }
+    max_update
+}
+
 /// One sharded arm: `background` routes the fan-out through the streaming
 /// executor; `update_frac` is the fraction of weights that move per round
 /// (1.0 = dense update — the regime the full/int8 encodings assume; sparse
@@ -167,6 +184,7 @@ fn measure_sharded(
     encoding: ShardEncoding,
     background: bool,
     update_frac: f64,
+    clustered: bool,
 ) -> (Arm, f32) {
     let es = even_entries(p, 16);
     let mut opts = BusOptions::new(Layout::fsdp(p, 8), Layout::tp(p, 4, &es).expect("entries"));
@@ -181,7 +199,11 @@ fn measure_sharded(
     let mut exact = true;
     let mut max_err = 0.0f32;
     for v in 1..=rounds {
-        cum_bound += mutate(&mut cur, v, update_frac);
+        cum_bound += if clustered {
+            mutate_clustered(&mut cur, v, update_frac)
+        } else {
+            mutate(&mut cur, v, update_frac)
+        };
         // publisher side: with the executor this returns after the enqueue;
         // inline it returns after the whole encode + fan-out
         let t_pub = Instant::now();
@@ -228,14 +250,24 @@ fn panel_measured(p: usize, rounds: usize) -> Panel2 {
     println!("--- panel 2: publish blocked + generator stall per arm ({p} params, {rounds} rounds) ---\n");
     let mono = measure_monolithic(p, rounds);
     let (inline_f32, _) =
-        measure_sharded("inline f32", p, rounds, ShardEncoding::F32, false, 1.0);
+        measure_sharded("inline f32", p, rounds, ShardEncoding::F32, false, 1.0, false);
     let (inline_int8, _) =
-        measure_sharded("inline int8", p, rounds, ShardEncoding::Int8, false, 1.0);
-    let (bg_f32, _) = measure_sharded("bg f32", p, rounds, ShardEncoding::F32, true, 1.0);
+        measure_sharded("inline int8", p, rounds, ShardEncoding::Int8, false, 1.0, false);
+    let (bg_f32, _) =
+        measure_sharded("bg f32", p, rounds, ShardEncoding::F32, true, 1.0, false);
     let (bg_delta, _) =
-        measure_sharded("bg delta (1% upd)", p, rounds, ShardEncoding::Delta, true, 0.01);
+        measure_sharded("bg delta (1% upd)", p, rounds, ShardEncoding::Delta, true, 0.01, false);
+    let (bg_rle, _) = measure_sharded(
+        "bg delta (60% clustered, RLE)",
+        p,
+        rounds,
+        ShardEncoding::Delta,
+        true,
+        0.6,
+        true,
+    );
     let (bg_topk, topk_bound) =
-        measure_sharded("bg topk (3% upd)", p, rounds, ShardEncoding::TopK, true, 0.03);
+        measure_sharded("bg topk (3% upd)", p, rounds, ShardEncoding::TopK, true, 0.03, false);
 
     // int8 fidelity on a fresh transfer over the very plan the bus streams
     let es = even_entries(p, 16);
@@ -244,7 +276,7 @@ fn panel_measured(p: usize, rounds: usize) -> Panel2 {
     let mut out = vec![0.0f32; p];
     let fid = run_transfer(&probe, &mut out, &plan, 1, ShardEncoding::Int8);
 
-    let arms = vec![mono, inline_f32, inline_int8, bg_f32, bg_delta, bg_topk];
+    let arms = vec![mono, inline_f32, inline_int8, bg_f32, bg_delta, bg_rle, bg_topk];
     let mut t = Table::new(&[
         "arm",
         "publish blocked (trainer)",
@@ -395,8 +427,9 @@ fn main() {
     let coalesced = panel_threads(p);
     panel_des(planned_70b_bf16);
 
-    let [mono, inline_f32, inline_int8, bg_f32, bg_delta, bg_topk] = &panel2.arms[..] else {
-        unreachable!("panel 2 produces six arms")
+    let [mono, inline_f32, inline_int8, bg_f32, bg_delta, bg_rle, bg_topk] = &panel2.arms[..]
+    else {
+        unreachable!("panel 2 produces seven arms")
     };
     let mono_stall = mono.stall_secs;
     let overlap_stall = inline_f32.stall_secs;
@@ -407,17 +440,24 @@ fn main() {
     let publish_blocked_speedup =
         inline_f32.publish_blocked_secs / bg_f32.publish_blocked_secs.max(1e-12);
     let blocked_5x = publish_blocked_speedup >= 5.0;
-    let delta_exact = bg_f32.exact && bg_delta.exact;
+    let delta_exact = bg_f32.exact && bg_delta.exact && bg_rle.exact;
     let topk_ok = bg_topk.max_abs_err <= panel2.topk_bound;
+    // a 60% clustered update past the sparse break-even must still beat
+    // the full-f32 wire via zero-run encoding, bit-exactly
+    let rle_below_full = bg_rle.payload_mb < inline_f32.payload_mb;
     println!(
         "shape checks: sharded+overlapped stall strictly below monolithic: {}; \
          quantized round-trip within bound: {}; background publish blocked \
          >=5x below inline ({publish_blocked_speedup:.1}x): {}; delta streams \
-         bit-exact: {}; top-k within cumulative bound: {}",
+         bit-exact (incl. RLE): {}; clustered RLE payload below full ({:.2} \
+         vs {:.2} MB): {}; top-k within cumulative bound: {}",
         if stall_ok { "PASS" } else { "FAIL" },
         if quant_ok { "PASS" } else { "FAIL" },
         if blocked_5x { "PASS" } else { "FAIL" },
         if delta_exact { "PASS" } else { "FAIL" },
+        bg_rle.payload_mb,
+        inline_f32.payload_mb,
+        if rle_below_full { "PASS" } else { "FAIL" },
         if topk_ok { "PASS" } else { "FAIL" },
     );
 
@@ -444,6 +484,7 @@ fn main() {
         ("executor_stall_secs", Value::num(bg_f32.stall_secs)),
         ("quantized_payload_mb", Value::num(inline_int8.payload_mb)),
         ("delta_payload_mb", Value::num(bg_delta.payload_mb)),
+        ("rle_delta_payload_mb", Value::num(bg_rle.payload_mb)),
         ("topk_payload_mb", Value::num(bg_topk.payload_mb)),
         ("full_payload_mb", Value::num(inline_f32.payload_mb)),
         ("quant_max_abs_err", Value::num(panel2.quant_err as f64)),
@@ -457,6 +498,7 @@ fn main() {
         ("quant_within_bound", Value::Bool(quant_ok)),
         ("publish_blocked_5x", Value::Bool(blocked_5x)),
         ("delta_exact", Value::Bool(delta_exact)),
+        ("rle_below_full", Value::Bool(rle_below_full)),
         ("topk_within_bound", Value::Bool(topk_ok)),
     ]);
     let line = json.to_string();

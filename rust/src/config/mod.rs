@@ -8,6 +8,7 @@ use std::path::PathBuf;
 
 use crate::coordinator::{Mode, PipelineConfig};
 use crate::dataplane::{AdmissionPolicy, SamplingStrategy};
+use crate::memplane::pool::AllocClass;
 use crate::rl::{AipoConfig, Baseline};
 use crate::util::cli::Args;
 use crate::util::error::{Error, Result};
@@ -141,6 +142,18 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             "sync_topk_frac" => {
                 cfg.sync.topk_frac = val.as_f64().unwrap_or(0.01).clamp(1e-6, 1.0)
             }
+            // colocated offloading memory plane
+            "colocate" => cfg.mem.colocate = val.as_bool().unwrap_or(false),
+            "offload_classes" => {
+                cfg.mem.offload_classes = AllocClass::parse_list(val.as_str().unwrap_or(""))?
+            }
+            "offload_chunk_mb" => {
+                cfg.mem.offload_chunk_mb = val.as_usize().unwrap_or(4).max(1)
+            }
+            "prefetch_depth" => cfg.mem.prefetch_depth = val.as_usize().unwrap_or(8),
+            "offload_background" => {
+                cfg.mem.background = val.as_bool().unwrap_or(true)
+            }
             "n_generations" => cfg.n_generations = val.as_usize().unwrap_or(4),
             "baseline" => cfg.baseline = parse_baseline(val.as_str().unwrap_or(""))?,
             "max_steps" => cfg.max_steps = val.as_i64().unwrap_or(1) as u64,
@@ -213,6 +226,21 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
     cfg.sync.topk_frac = args
         .f64_or("sync-topk-frac", cfg.sync.topk_frac)?
         .clamp(1e-6, 1.0);
+    if args.flag("colocate") {
+        cfg.mem.colocate = true;
+    }
+    if let Some(v) = args.str_opt("offload-classes") {
+        cfg.mem.offload_classes = AllocClass::parse_list(v)?;
+    }
+    cfg.mem.offload_chunk_mb = args
+        .usize_or("offload-chunk-mb", cfg.mem.offload_chunk_mb)?
+        .max(1);
+    cfg.mem.prefetch_depth = args.usize_or("prefetch-depth", cfg.mem.prefetch_depth)?;
+    if args.flag("offload-eager") {
+        // opt out of the background offload executor (leases then pay
+        // their transfers synchronously; the A/B the bench measures)
+        cfg.mem.background = false;
+    }
     cfg.n_generations = args.usize_or("n-generations", cfg.n_generations)?;
     cfg.max_steps = args.u64_or("steps", cfg.max_steps)?;
     cfg.aipo.lr = args.f64_or("lr", cfg.aipo.lr as f64)? as f32;
@@ -355,6 +383,43 @@ mod tests {
         assert!(!cfg.sync.background);
 
         let bad = Value::parse(r#"{"sync_encoding":"bf16"}"#).unwrap();
+        assert!(apply_json(&mut cfg, &bad).is_err());
+    }
+
+    #[test]
+    fn memplane_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        assert!(!cfg.mem.colocate, "colocation is opt-in");
+        assert!(cfg.mem.background, "background offloading is the default");
+        let v = Value::parse(
+            r#"{"colocate":true,"offload_classes":"optim","offload_chunk_mb":2,
+                "prefetch_depth":3}"#,
+        )
+        .unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert!(cfg.mem.colocate);
+        assert_eq!(cfg.mem.offload_classes, vec![AllocClass::OptimState]);
+        assert_eq!(cfg.mem.offload_chunk_mb, 2);
+        assert_eq!(cfg.mem.prefetch_depth, 3);
+
+        let args = Args::parse(
+            ["--offload-classes", "grads,optim", "--prefetch-depth", "5"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["offload-eager"],
+        )
+        .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(
+            cfg.mem.offload_classes,
+            vec![AllocClass::Grads, AllocClass::OptimState]
+        );
+        assert_eq!(cfg.mem.prefetch_depth, 5);
+        // a missing flag never unsets an earlier layer's choice
+        assert!(cfg.mem.colocate);
+        assert!(cfg.mem.background);
+
+        let bad = Value::parse(r#"{"offload_classes":"hbm"}"#).unwrap();
         assert!(apply_json(&mut cfg, &bad).is_err());
     }
 

@@ -32,6 +32,9 @@ use crate::coordinator::trainer::{TrainStepRecord, Trainer, TrainerConfig, Traje
 use crate::data::{task, PromptScheduler};
 use crate::dataplane::{DataPlaneSnapshot, RolloutStore, StoreConfig};
 use crate::ddma::{BusOptions, WeightsBus};
+use crate::memplane::plan::Phase;
+use crate::memplane::pool::MemSpec;
+use crate::memplane::{MemPlane, MemPlaneConfig};
 use crate::model::load_init_params;
 use crate::rl::{AipoConfig, Baseline};
 use crate::runtime::Manifest;
@@ -98,6 +101,10 @@ pub struct PipelineConfig {
     pub store: StoreConfig,
     /// sharded weight-sync plane configuration
     pub sync: WeightSyncConfig,
+    /// colocated offloading memory plane (`colocate`, `offload_classes`,
+    /// `offload_chunk_mb`, `prefetch_depth`); `concurrent_phases` is
+    /// derived from the mode at run time
+    pub mem: MemPlaneConfig,
     /// generations per prompt (the advantage group, paper n=4)
     pub n_generations: usize,
     pub baseline: Baseline,
@@ -128,6 +135,7 @@ impl Default for PipelineConfig {
             scored_capacity: 8,
             store: StoreConfig::default(),
             sync: WeightSyncConfig::default(),
+            mem: MemPlaneConfig::default(),
             n_generations: 4,
             baseline: Baseline::GroupMean,
             max_steps: 5,
@@ -176,9 +184,37 @@ pub struct RunReport {
     pub gen_swaps: u64,
     pub gen_send_blocked_secs: f64,
     pub trainer_recv_blocked_secs: f64,
+    /// memplane telemetry: bytes the offload executor swapped to host
+    /// (D2H) and prefetched back (H2D) across phase flips
+    pub offload_d2h_bytes: u64,
+    pub offload_h2d_bytes: u64,
+    /// total seconds phase leases blocked waiting for residency (the
+    /// un-hidden part of the offload stream)
+    pub offload_wait_secs: f64,
+    /// shard waits the background prefetcher satisfied without blocking
+    pub offload_prefetch_hits: u64,
+    /// residency targets superseded before the executor converged them
+    /// (latest-wins phase flips)
+    pub offload_superseded: u64,
     /// rollout-store telemetry (Mode::AsyncBuffered only)
     pub dataplane: Option<DataPlaneSnapshot>,
     pub metrics_path: Option<PathBuf>,
+}
+
+impl RunReport {
+    /// Copy the memory-plane counters out of the executor context (called
+    /// once per finished run, after the final flush).
+    fn fill_mem_telemetry(&mut self, ctx: &ExecutorContext) {
+        use std::sync::atomic::Ordering;
+        if let Some(m) = &ctx.mem {
+            let mm = m.metrics();
+            self.offload_d2h_bytes = mm.d2h_bytes.load(Ordering::Relaxed);
+            self.offload_h2d_bytes = mm.h2d_bytes.load(Ordering::Relaxed);
+            self.offload_wait_secs = mm.wait_secs();
+            self.offload_prefetch_hits = mm.prefetch_hits.load(Ordering::Relaxed);
+            self.offload_superseded = mm.superseded_targets.load(Ordering::Relaxed);
+        }
+    }
 }
 
 impl RunReport {
@@ -281,7 +317,23 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     bus_opts.link_groups = cfg.sync.link_groups;
     bus_opts.topk_frac = cfg.sync.topk_frac;
     let bus = WeightsBus::with_options(init, bus_opts)?;
-    let ctx = ExecutorContext::new(bus, cfg.out_dir.clone());
+    // Build the colocated offloading memory plane: a testbed-scale MemSpec
+    // derived from the artifact's parameter count, with `concurrent_phases`
+    // following the mode (async architectures overlap generate/train/sync
+    // on disjoint executors, so nothing may leave the device and the
+    // planner must prove the union fits). Infeasible colocations fail HERE,
+    // before any executor spawns.
+    let mem_cfg = MemPlaneConfig {
+        concurrent_phases: cfg.mode != Mode::Sync,
+        ..cfg.mem.clone()
+    };
+    let spec = MemSpec::testbed(
+        n_params,
+        manifest.config.train_batch,
+        manifest.config.gen_batch,
+    );
+    let mem = MemPlane::new(spec, &mem_cfg)?;
+    let ctx = ExecutorContext::with_mem(bus, Some(mem), cfg.out_dir.clone());
     let scheduler = Arc::new(PromptScheduler::new(
         cfg.seed,
         manifest.config.vocab,
@@ -341,10 +393,24 @@ fn run_sync(
 
     for step in 0..cfg.max_steps {
         // Phase 1: generation — all rows complete under current weights.
-        gen.generate_batch_sync(rows_per_step)?;
+        // The Generate lease swaps offloadable trainer state (optimizer
+        // moments, grads) to host behind decode, and the Train hint arms
+        // the prefetcher so the first optimizer shard is back on device
+        // before the batch finishes.
+        {
+            let _gen_lease = match &ctx.mem {
+                Some(m) => Some(m.lease(Phase::Generate)?),
+                None => None,
+            };
+            if let Some(m) = &ctx.mem {
+                m.hint_next(Phase::Train);
+            }
+            gen.generate_batch_sync(rows_per_step)?;
+        }
         // Phase 2: scoring.
         while reward.drain_once()? {}
-        // Phase 3: one train step (+ weight publication = in-place update).
+        // Phase 3: one train step (+ weight publication = in-place update);
+        // the trainer brackets itself with Train/Sync leases.
         match trainer.step()? {
             StepOutcome::Progress => {}
             other => {
@@ -368,8 +434,11 @@ fn run_sync(
     let wall = t0.elapsed().as_secs_f64();
     // settle any background stream before reading plane-wide counters
     ctx.weights.flush();
+    if let Some(m) = &ctx.mem {
+        m.flush()?;
+    }
 
-    Ok(RunReport {
+    let mut report = RunReport {
         mode: "sync".into(),
         steps: trainer.current_step(),
         wall_secs: wall,
@@ -390,7 +459,10 @@ fn run_sync(
         trainer_recv_blocked_secs: 0.0,
         dataplane: None,
         metrics_path: None,
-    })
+        ..RunReport::default()
+    };
+    report.fill_mem_telemetry(&ctx);
+    Ok(report)
 }
 
 /// Asynchronous off-policy pipeline: executor-per-thread, bounded channels.
@@ -420,6 +492,13 @@ fn run_async(
             std::thread::Builder::new()
                 .name(format!("generator-{w}"))
                 .spawn(move || -> Result<GenTally> {
+                    // the worker holds its Generate lease for its whole
+                    // lifetime: async phases overlap, so the lease is
+                    // feasibility + accounting, never an offload stall
+                    let _gen_lease = match &ctx.mem {
+                        Some(m) => Some(m.lease(Phase::Generate)?),
+                        None => None,
+                    };
                     let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
                     gen.set_sync_slot(sync_slot);
                     run_executor_loop(&mut gen, &ctx, None)?;
@@ -511,8 +590,11 @@ fn run_async(
     let wall = t0.elapsed().as_secs_f64();
     // settle any background stream before reading plane-wide counters
     ctx.weights.flush();
+    if let Some(m) = &ctx.mem {
+        m.flush()?;
+    }
 
-    Ok(RunReport {
+    let mut report = RunReport {
         mode: "async".into(),
         steps: trainer.current_step(),
         wall_secs: wall,
@@ -533,7 +615,10 @@ fn run_async(
         trainer_recv_blocked_secs: scored_stats_ch.recv_blocked_secs(),
         dataplane: None,
         metrics_path: None,
-    })
+        ..RunReport::default()
+    };
+    report.fill_mem_telemetry(&ctx);
+    Ok(report)
 }
 
 /// Buffered asynchronous pipeline (the streaming data plane): generators
@@ -570,6 +655,10 @@ fn run_async_buffered(
             std::thread::Builder::new()
                 .name(format!("generator-{w}"))
                 .spawn(move || -> Result<GenTally> {
+                    let _gen_lease = match &ctx.mem {
+                        Some(m) => Some(m.lease(Phase::Generate)?),
+                        None => None,
+                    };
                     let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
                     gen.set_resume_store(store);
                     gen.set_sync_slot(sync_slot);
@@ -655,8 +744,11 @@ fn run_async_buffered(
     let snapshot = store.snapshot();
     // settle any background stream before reading plane-wide counters
     ctx.weights.flush();
+    if let Some(m) = &ctx.mem {
+        m.flush()?;
+    }
 
-    Ok(RunReport {
+    let mut report = RunReport {
         mode: "async_buffered".into(),
         steps: trainer.current_step(),
         wall_secs: wall,
@@ -677,5 +769,8 @@ fn run_async_buffered(
         trainer_recv_blocked_secs: snapshot.sample_wait_secs,
         dataplane: Some(snapshot),
         metrics_path: None,
-    })
+        ..RunReport::default()
+    };
+    report.fill_mem_telemetry(&ctx);
+    Ok(report)
 }

@@ -12,6 +12,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::ddma::WeightsBus;
+use crate::memplane::MemPlane;
 use crate::util::error::Result;
 
 /// What a `step()` accomplished — the controller uses this to drive
@@ -34,16 +35,29 @@ pub struct ExecutorContext {
     pub trainer_step: AtomicU64,
     /// DDMA weights bus (trainer -> generators)
     pub weights: WeightsBus,
+    /// colocated offloading memory plane; executors bracket their phases
+    /// with [`MemPlane::lease`] (None only in tests that bypass the
+    /// controller)
+    pub mem: Option<Arc<MemPlane>>,
     /// where executors write metrics/checkpoints
     pub out_dir: PathBuf,
 }
 
 impl ExecutorContext {
     pub fn new(weights: WeightsBus, out_dir: PathBuf) -> Arc<Self> {
+        ExecutorContext::with_mem(weights, None, out_dir)
+    }
+
+    pub fn with_mem(
+        weights: WeightsBus,
+        mem: Option<Arc<MemPlane>>,
+        out_dir: PathBuf,
+    ) -> Arc<Self> {
         Arc::new(ExecutorContext {
             stop: AtomicBool::new(false),
             trainer_step: AtomicU64::new(0),
             weights,
+            mem,
             out_dir,
         })
     }

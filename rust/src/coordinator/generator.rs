@@ -1,5 +1,11 @@
 //! Generator executor: the offloaded inference engine (paper §4.1).
 //!
+//! Memory placement is owned by [`crate::memplane`]: the controller (sync
+//! mode) or the worker's spawn wrapper (async modes) brackets generation
+//! with a `Phase::Generate` lease, so the KV cache is materialized — and
+//! offloadable trainer state swapped out — before the first decode chunk
+//! runs, with the prefetch back overlapped behind decode.
+//!
 //! Each worker is one data-parallel inference replica with its own PJRT
 //! context. It keeps `gen_batch` sequence slots continuously batched: every
 //! `step()` runs ONE `generate_chunk` artifact call (up to C tokens for the

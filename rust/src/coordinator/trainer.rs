@@ -15,6 +15,8 @@ use std::time::{Duration, Instant};
 use crate::coordinator::channel::{Inbound, Message};
 use crate::coordinator::executor::{Executor, ExecutorContext, StepOutcome};
 use crate::dataplane::RolloutStore;
+use crate::memplane::plan::Phase;
+use crate::memplane::pool::AllocClass;
 use crate::model::{save_checkpoint, Checkpoint};
 use crate::rl::{pack_batch, AipoConfig, Trajectory};
 use crate::runtime::{HostTensor, Runtime};
@@ -177,6 +179,15 @@ impl Trainer {
 
     fn run_train_step(&mut self, rows: Vec<Trajectory>) -> Result<TrainStepRecord> {
         let t0 = Instant::now();
+        // Memplane Train lease: the optimizer update requires grads +
+        // moments device-resident. The lease returns once the FIRST
+        // optimizer shard is back (double-buffered prefetch); the
+        // remaining stream overlaps batch packing/upload, and the
+        // wait_class fence below is the last point it must have finished.
+        let train_lease = match &self.ctx.mem {
+            Some(m) => Some(m.lease(Phase::Train)?),
+            None => None,
+        };
         let rt = self.runtime.as_ref().unwrap();
         let mcfg = rt.config();
         let (b, t) = (mcfg.train_batch, mcfg.train_seq);
@@ -191,6 +202,13 @@ impl Trainer {
         let hyp = self.cfg.aipo.hyp();
         let hyp_b = rt.upload(&HostTensor::F32(hyp.to_vec(), vec![3]))?;
 
+        // residency fence: every optimizer shard must have landed before
+        // the fused update runs (prefetch hits when the plane overlapped
+        // the stream behind the uploads above)
+        if let Some(l) = &train_lease {
+            l.wait_class(AllocClass::OptimState)?;
+            l.wait_class(AllocClass::Grads)?;
+        }
         let new_state = rt.execute_buffers(
             "train_step",
             &[
@@ -232,6 +250,13 @@ impl Trainer {
         // blocked time on the bus handoff only (it should track
         // `WeightsBus::publish_blocked_secs`).
         if self.cfg.publish_every > 0 && self.step % self.cfg.publish_every == 0 {
+            // Sync lease: publication only needs the weight snapshot; it
+            // nests inside the Train lease (Device residency only widens),
+            // marking the phase boundary for the memplane's accounting.
+            let _sync_lease = match &self.ctx.mem {
+                Some(m) => Some(m.lease(Phase::Sync)?),
+                None => None,
+            };
             let tf = Instant::now();
             let p_buf =
                 rt.execute_buffers("extract_params", &[self.state_buf.as_ref().unwrap()])?;

@@ -27,6 +27,8 @@ pub struct LinkSpec {
     pub nvlink_bps: f64,
     /// inter-node InfiniBand per GPU
     pub ib_bps: f64,
+    /// host <-> device link per GPU (PCIe; what colocated offloading pays)
+    pub pcie_bps: f64,
 }
 
 impl Default for LinkSpec {
@@ -34,6 +36,7 @@ impl Default for LinkSpec {
         LinkSpec {
             nvlink_bps: 900e9, // NVLink4 ~900 GB/s
             ib_bps: 50e9,      // 400 Gb/s HDR IB per GPU
+            pcie_bps: 64e9,    // PCIe gen5 x16 ~64 GB/s per direction
         }
     }
 }
@@ -90,6 +93,18 @@ impl DdmaModel {
     /// The theoretical floor alone (pure link time, zero software overhead).
     pub fn floor_secs(&self, params: f64, n_trainer_gpus: usize) -> f64 {
         bf16_bytes(params) / n_trainer_gpus as f64 / self.link.ib_bps
+    }
+
+    /// Host <-> device transfer time for a colocated offload/prefetch of
+    /// `bytes`, issued as `chunk_bytes`-sized copies over the PCIe link
+    /// (each chunk pays the same per-op launch overhead the planner
+    /// schedule model uses). Feeds the memplane's DES timeline segments.
+    pub fn offload_secs(&self, bytes: f64, chunk_bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let chunks = (bytes / chunk_bytes.max(1.0)).ceil().max(1.0);
+        bytes / self.link.pcie_bps + chunks * OP_LAUNCH_SECS
     }
 
     /// Cost of executing a resharding planner schedule on the cluster:
@@ -156,6 +171,18 @@ mod tests {
         // int8 wire encoding moves half the bf16 bytes
         let t_int8 = m.plan_secs(&small, 1.0);
         assert!(t_int8 < t_small);
+    }
+
+    #[test]
+    fn offload_time_is_pcie_plus_launches() {
+        let m = DdmaModel::calibrated();
+        assert_eq!(m.offload_secs(0.0, 4e6), 0.0);
+        // 64 MB over ~64 GB/s: about a millisecond, plus 16 chunk launches
+        let t = m.offload_secs(64e6, 4e6);
+        let floor = 64e6 / m.link.pcie_bps;
+        assert!(t >= floor && t < floor + 32.0 * OP_LAUNCH_SECS, "{t}");
+        // halving the chunk size only adds launch overhead
+        assert!(m.offload_secs(64e6, 2e6) > t);
     }
 
     #[test]

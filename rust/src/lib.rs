@@ -23,7 +23,8 @@
 //! | runtime | [`runtime`] (PJRT artifact loading & execution), [`model`] (flat params, tokenizer, checkpoints, quantization) |
 //! | RL | [`data`] (synthetic verifiable-reward tasks), [`rl`] (advantages, trajectories, AIPO config) |
 //! | data plane | [`dataplane`] (staleness-aware rollout store: admission/eviction policies, sampling strategies, partial-rollout resumption, lag telemetry) |
-//! | weight plane | [`weightsync`] (FSDP/TP shard layouts, resharding planner, f32/int8/delta/top-k per-shard transfer, generation-overlapped double-buffered swap, background per-link-group streaming executor) |
+//! | weight plane | [`weightsync`] (FSDP/TP shard layouts, bandwidth-balanced resharding planner, f32/int8/delta(+RLE)/top-k per-shard transfer, generation-overlapped double-buffered swap, background per-link-group streaming executor) |
+//! | memory plane | [`memplane`] (per-rank HBM/host pool accounting over tracked allocation classes, phase-aware colocation planner with hard-capacity rejection, background offload/prefetch executor behind the phase-lease protocol) |
 //! | system | [`coordinator`] (executors, channels, controller, sync/async/buffered pipelines), [`ddma`] (the DDMA facade over [`weightsync`] + cluster link models) |
 //! | evaluation | [`simulator`] (memory/cost models, Theorem 7.5 optimizer, discrete-event timelines), [`metrics`] |
 
@@ -32,6 +33,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dataplane;
 pub mod ddma;
+pub mod memplane;
 pub mod metrics;
 pub mod model;
 pub mod rl;

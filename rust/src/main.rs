@@ -31,7 +31,14 @@ use llamarl::util::bench::Table;
 use llamarl::util::cli::Args;
 use llamarl::util::error::Result;
 
-const BOOL_FLAGS: &[&str] = &["quantize-generator", "sync-quantized", "sync-inline", "help"];
+const BOOL_FLAGS: &[&str] = &[
+    "quantize-generator",
+    "sync-quantized",
+    "sync-inline",
+    "colocate",
+    "offload-eager",
+    "help",
+];
 
 fn main() {
     let args = match Args::from_env(BOOL_FLAGS) {
@@ -89,7 +96,11 @@ USAGE: llamarl <subcommand> [flags]
             [--sync-generator-shards N] [--sync-quantized]
             [--sync-encoding full|int8|delta|topk] [--sync-topk-frac X]
             [--sync-inline (disable the background streaming executor)]
-            [--sync-link-groups N (0 = one worker per generator shard)]
+            [--sync-link-groups N (0 = one worker per generator shard;
+             explicit N uses bandwidth-balanced link groups)]
+            memory plane: [--colocate (trainer+generator share the rank)]
+            [--offload-classes grads,optim] [--offload-chunk-mb N]
+            [--prefetch-depth N] [--offload-eager (no background executor)]
   pretrain  --artifacts DIR --steps N --lr X --out DIR
             supervised warm-up producing the RL init checkpoint
   simulate  reproduce Table 3 from the calibrated cluster cost model

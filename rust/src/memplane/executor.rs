@@ -1,0 +1,813 @@
+//! Background offload/prefetch engine: a long-lived worker thread drains
+//! latest-wins residency targets with chunked, shard-granular transfers.
+//!
+//! This is the memplane's analogue of the weight-sync plane's
+//! [`crate::weightsync::executor`]: the lease holder never performs
+//! transfers itself — it *publishes a residency target* (which classes must
+//! be device-resident) and the worker converges the shard store onto it:
+//!
+//! ```text
+//!   lease/drop/hint ── set_target(seq, residency, hints) ──► worker
+//!        │   (returns immediately; a newer target            │
+//!        ▼    supersedes an unconverged older one)           ▼
+//!   wait_shard(class, i) blocks on          1. free transient scratch the
+//!   the done condvar until shard i             target dropped
+//!   is device-resident                      2. required residency next:
+//!                                              transient scratch first,
+//!                                              then retained H2D shards
+//!                                              ascending — evicting a
+//!                                              host-parked shard whenever
+//!                                              the next piece doesn't fit
+//!                                           3. drain host-parked classes
+//!                                              down to their hint-keep
+//!                                              watermark (prefetch_depth
+//!                                              when hinted, 0 otherwise)
+//!                                           4. opportunistic hint
+//!                                              prefetch, capacity- and
+//!                                              depth-bounded
+//! ```
+//!
+//! The required/evict interleave is what makes the generate flip cheap:
+//! the KV cache grows shard by shard *as* the optimizer state drains out,
+//! so the Generate lease waits only for KV shard 0 (one freed-scratch
+//! slot) while the rest of the D2H stream hides behind decode. The drain
+//! stops at the hint-keep watermark, so shards the next phase will need
+//! anyway never make a pointless round trip. Symmetrically, required H2D
+//! prefetch runs in ascending shard order, so a consumer walking shards
+//! (`wait_shard(0..n)`) overlaps its compute with the remaining stream —
+//! the double-buffered prefetch that puts the trainer's first optimizer
+//! shard on device before generation finishes.
+//!
+//! Transfers are real memcpys, chunked at `offload_chunk_mb`, and every
+//! placement change goes through the [`MemPool`] accountant — the engine
+//! physically cannot overcommit the capacities the planner proved. Latest
+//! wins: a target published while the worker is mid-pass supersedes the old
+//! one at the next shard boundary; rapid phase flips waste at most one
+//! shard of work.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::memplane::plan::{ColocationPlan, Phase, Residency};
+use crate::memplane::pool::{AllocClass, AllocId, MemPool, Placement};
+use crate::util::error::{Error, Result};
+
+/// Shared counters for one memplane (lease side + worker side).
+#[derive(Debug, Default)]
+pub struct OffloadMetrics {
+    /// bytes copied device -> host (offloads)
+    pub d2h_bytes: AtomicU64,
+    /// bytes copied host -> device (prefetches)
+    pub h2d_bytes: AtomicU64,
+    /// completed shard transfers
+    pub shard_moves: AtomicU64,
+    /// chunk copies issued (transfer granularity = offload_chunk_mb)
+    pub chunks_copied: AtomicU64,
+    /// residency targets superseded before the worker converged them
+    /// (latest-wins cancellation)
+    pub superseded_targets: AtomicU64,
+    /// lease/shard residency waits issued
+    pub wait_events: AtomicU64,
+    /// nanoseconds lease holders spent blocked waiting for residency
+    pub wait_nanos: AtomicU64,
+    /// waits satisfied instantly because the prefetcher already ran
+    pub prefetch_hits: AtomicU64,
+}
+
+impl OffloadMetrics {
+    /// Total seconds lease holders spent blocked on residency.
+    pub fn wait_secs(&self) -> f64 {
+        self.wait_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn transferred_bytes(&self) -> u64 {
+        self.d2h_bytes.load(Ordering::Relaxed) + self.h2d_bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// The residency the store must converge to. `residency` is the hard
+/// target (lease-derived); `hints` marks retained classes a future phase
+/// will need, prefetched opportunistically up to `prefetch_depth` shards
+/// per class while free capacity allows.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ResidencyTarget {
+    pub seq: u64,
+    pub residency: [Residency; 5],
+    pub hints: [bool; 5],
+    pub prefetch_depth: usize,
+}
+
+/// Deterministic fill pattern: transfers must preserve contents bit-exactly
+/// (the stress test verifies residency races never tear a shard).
+fn pattern(class: usize, shard: usize, i: usize) -> u64 {
+    (class as u64 + 1)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((shard as u64) << 32)
+        .wrapping_add(i as u64)
+}
+
+struct ClassShard {
+    words: Vec<u64>,
+    on_device: bool,
+    alloc: AllocId,
+}
+
+struct ClassState {
+    bytes: u64,
+    shard_bytes: u64,
+    /// retained classes: the data-bearing shards being moved
+    shards: Vec<ClassShard>,
+    /// transient classes: per-shard scratch allocations (None = dropped);
+    /// scratch has no contents to retain, so (re)materialization is an
+    /// accounting acquire, not a copy
+    transient_allocs: Vec<Option<AllocId>>,
+}
+
+impl ClassState {
+    fn device_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.on_device).count()
+    }
+
+    /// Is shard `idx` device-resident? `idx` past the shard count means
+    /// "all of it".
+    fn shard_ready(&self, transient: bool, idx: usize) -> bool {
+        if self.bytes == 0 {
+            return true;
+        }
+        if transient {
+            match self.transient_allocs.get(idx) {
+                Some(a) => a.is_some(),
+                None => self.transient_allocs.iter().all(|a| a.is_some()),
+            }
+        } else {
+            match self.shards.get(idx) {
+                Some(s) => s.on_device,
+                None => self.shards.iter().all(|s| s.on_device),
+            }
+        }
+    }
+}
+
+struct StoreState {
+    classes: Vec<ClassState>,
+    target: ResidencyTarget,
+    /// the last target seq the worker fully converged
+    done_seq: u64,
+    shutdown: bool,
+    /// a hard failure (pool accounting violation) poisons the plane
+    failed: Option<String>,
+}
+
+/// One unit of worker work, planned under the lock.
+enum Action {
+    /// free one transient shard: (class index, shard index)
+    FreeTransient(usize, usize),
+    /// materialize one transient shard that fits free capacity now
+    AcquireTransient(usize, usize),
+    /// (class index, shard index, to-device?)
+    MoveShard(usize, usize, bool),
+}
+
+struct ExecInner {
+    pool: Arc<MemPool>,
+    /// classes whose waits may count as prefetch hits (the plan parks them
+    /// off-device at some phase; always-resident classes never "hit")
+    hit_classes: [bool; 5],
+    chunk_words: usize,
+    state: Mutex<StoreState>,
+    /// serializes whole actions (plan + pool accounting + copy): the state
+    /// lock is dropped during a chunked copy so waiters and new targets
+    /// stay responsive, and this lock keeps a concurrent eager lease from
+    /// planning against a shard whose words are mid-flight
+    action_lock: Mutex<()>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    metrics: Arc<OffloadMetrics>,
+}
+
+/// The offload engine. With `background` a worker thread converges targets
+/// asynchronously; without it, [`OffloadExecutor::apply_target_blocking`]
+/// runs the same convergence loop on the caller's thread (the eager
+/// baseline the bench compares against).
+pub struct OffloadExecutor {
+    inner: Arc<ExecInner>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl OffloadExecutor {
+    /// Materialize the shard store in the plan's `initial` phase residency
+    /// and (optionally) spawn the worker. Every shard/scratch allocation is
+    /// registered with `pool` — construction fails if the initial residency
+    /// does not fit, which cannot happen for a plan the planner admitted.
+    ///
+    /// `materialize` backs retained shards with real patterned arenas so
+    /// transfers are genuine memcpys; accounting-only planes (placements
+    /// that never move a retained byte: non-colocated ranks, concurrent
+    /// phases) skip the allocation entirely. `hit_classes` marks the
+    /// classes whose waits may legitimately count as prefetch hits (the
+    /// ones the plan ever parks off-device).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        pool: Arc<MemPool>,
+        plan: &ColocationPlan,
+        initial: Phase,
+        shards_per_class: usize,
+        chunk_mb: usize,
+        background: bool,
+        materialize: bool,
+        hit_classes: [bool; 5],
+        metrics: Arc<OffloadMetrics>,
+    ) -> Result<OffloadExecutor> {
+        let n_shards = shards_per_class.max(1);
+        let mut classes = Vec::with_capacity(5);
+        let mut residency = [Residency::Device; 5];
+        for c in AllocClass::ALL {
+            let bytes = plan.spec.bytes(c);
+            let res = plan.residency(initial, c);
+            residency[c.index()] = res;
+            let shard_bytes = bytes.div_ceil(n_shards as u64).max(1);
+            let mut cs = ClassState {
+                bytes,
+                shard_bytes,
+                shards: Vec::new(),
+                transient_allocs: Vec::new(),
+            };
+            if bytes > 0 {
+                let mut left = bytes;
+                let mut s = 0usize;
+                while left > 0 {
+                    let b = left.min(shard_bytes);
+                    left -= b;
+                    if c.is_transient() {
+                        cs.transient_allocs.push(if res == Residency::Device {
+                            Some(pool.acquire(c, b, Placement::Device)?)
+                        } else {
+                            None
+                        });
+                    } else {
+                        let placement = match res {
+                            Residency::Host => Placement::Host,
+                            _ => Placement::Device,
+                        };
+                        // accounting-only planes keep the pool bookkeeping
+                        // but never back shards with data (their targets
+                        // never move a retained byte)
+                        let words = if materialize {
+                            (0..(b as usize).div_ceil(8))
+                                .map(|i| pattern(c.index(), s, i))
+                                .collect()
+                        } else {
+                            Vec::new()
+                        };
+                        cs.shards.push(ClassShard {
+                            words,
+                            on_device: placement == Placement::Device,
+                            alloc: pool.acquire(c, b, placement)?,
+                        });
+                    }
+                    s += 1;
+                }
+            }
+            classes.push(cs);
+        }
+        let inner = Arc::new(ExecInner {
+            pool,
+            hit_classes,
+            chunk_words: ((chunk_mb.max(1) as u64 * 1_000_000) / 8) as usize,
+            state: Mutex::new(StoreState {
+                classes,
+                target: ResidencyTarget {
+                    seq: 0,
+                    residency,
+                    hints: [false; 5],
+                    prefetch_depth: 0,
+                },
+                done_seq: 0,
+                shutdown: false,
+                failed: None,
+            }),
+            action_lock: Mutex::new(()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            metrics,
+        });
+        let worker = if background {
+            let w = inner.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("memplane-offload".into())
+                    .spawn(move || worker_loop(&w))
+                    .expect("spawn memplane offload worker"),
+            )
+        } else {
+            None
+        };
+        Ok(OffloadExecutor { inner, worker })
+    }
+
+    pub fn is_background(&self) -> bool {
+        self.worker.is_some()
+    }
+
+    /// Publish a new residency target (latest-wins; returns immediately).
+    pub(crate) fn set_target(&self, residency: [Residency; 5], hints: [bool; 5], depth: usize) {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.target.seq > st.done_seq {
+            self.inner
+                .metrics
+                .superseded_targets
+                .fetch_add(1, Ordering::Relaxed);
+        }
+        st.target = ResidencyTarget {
+            seq: st.target.seq + 1,
+            residency,
+            hints,
+            prefetch_depth: depth,
+        };
+        drop(st);
+        self.inner.work_cv.notify_all();
+    }
+
+    /// Eager mode: converge the current target on the caller's thread (the
+    /// synchronous baseline; a background executor does this for free).
+    pub(crate) fn apply_target_blocking(&self) -> Result<()> {
+        debug_assert!(self.worker.is_none(), "background plane converges itself");
+        while run_one_action(&self.inner)? {}
+        Ok(())
+    }
+
+    /// Block until shard `idx` of `class` is device-resident (transient
+    /// classes: until that scratch shard is materialized); `idx` past the
+    /// shard count means the whole class. Counts a prefetch hit when no
+    /// blocking was needed; the blocked time is accounted into
+    /// [`OffloadMetrics::wait_nanos`].
+    pub fn wait_shard(&self, class: AllocClass, idx: usize) -> Result<()> {
+        let t0 = Instant::now();
+        let mut st = self.inner.state.lock().unwrap();
+        let mut blocked = false;
+        loop {
+            if let Some(msg) = &st.failed {
+                return Err(Error::Capacity(msg.clone()));
+            }
+            if st.classes[class.index()].shard_ready(class.is_transient(), idx) {
+                break;
+            }
+            if self.worker.is_none() {
+                // eager plane: the caller's lease already converged the
+                // target; a miss here means the target does not want this
+                // class on device at all
+                return Err(Error::Capacity(format!(
+                    "wait_shard({}, {idx}) under a target that parks the \
+                     class off-device",
+                    class.name()
+                )));
+            }
+            blocked = true;
+            st = self.inner.done_cv.wait(st).unwrap();
+        }
+        drop(st);
+        let m = &self.inner.metrics;
+        m.wait_events.fetch_add(1, Ordering::Relaxed);
+        m.wait_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if !blocked && self.worker.is_some() && self.inner.hit_classes[class.index()] {
+            m.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Block until every shard of `class` is device-resident.
+    pub fn wait_class(&self, class: AllocClass) -> Result<()> {
+        self.wait_shard(class, usize::MAX)
+    }
+
+    /// Block until the worker has converged the newest target (tests,
+    /// benches, shutdown). No-op for an eager plane.
+    pub fn flush(&self) -> Result<()> {
+        if self.worker.is_none() {
+            return Ok(());
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        while st.failed.is_none() && st.done_seq < st.target.seq {
+            st = self.inner.done_cv.wait(st).unwrap();
+        }
+        match &st.failed {
+            Some(msg) => Err(Error::Capacity(msg.clone())),
+            None => Ok(()),
+        }
+    }
+
+    /// Fraction of each retained class's shards currently device-resident
+    /// (stress tests assert convergence to the planned residency set).
+    pub fn device_fracs(&self) -> Vec<(AllocClass, f64)> {
+        let st = self.inner.state.lock().unwrap();
+        AllocClass::ALL
+            .iter()
+            .filter(|c| !c.is_transient())
+            .map(|c| {
+                let cs = &st.classes[c.index()];
+                let n = cs.shards.len().max(1);
+                (*c, cs.device_shards() as f64 / n as f64)
+            })
+            .collect()
+    }
+
+    /// Verify every retained shard still holds its fill pattern — no
+    /// transfer may tear or corrupt contents, whatever the race.
+    pub fn verify_integrity(&self) -> Result<()> {
+        let st = self.inner.state.lock().unwrap();
+        for c in AllocClass::ALL {
+            let cs = &st.classes[c.index()];
+            for (s, shard) in cs.shards.iter().enumerate() {
+                for (i, w) in shard.words.iter().enumerate() {
+                    if *w != pattern(c.index(), s, i) {
+                        return Err(Error::Capacity(format!(
+                            "shard integrity violated: {}[{s}] word {i}",
+                            c.name()
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for OffloadExecutor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        self.inner.done_cv.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The next device-residency acquisition the target still requires, or
+/// None: `(action, bytes)`. Transient scratch first (instant, and lease
+/// entry waits on it), then retained H2D in ascending shard order.
+fn next_required(st: &StoreState) -> Option<(Action, u64)> {
+    let t = &st.target;
+    for transient_pass in [true, false] {
+        for c in AllocClass::ALL {
+            if c.is_transient() != transient_pass
+                || t.residency[c.index()] != Residency::Device
+            {
+                continue;
+            }
+            let cs = &st.classes[c.index()];
+            if c.is_transient() {
+                if let Some(idx) = cs.transient_allocs.iter().position(|a| a.is_none()) {
+                    return Some((
+                        Action::AcquireTransient(c.index(), idx),
+                        transient_shard_bytes(cs, idx),
+                    ));
+                }
+            } else if let Some(idx) = cs.shards.iter().position(|s| !s.on_device) {
+                return Some((
+                    Action::MoveShard(c.index(), idx, true),
+                    cs.shards[idx].words.len() as u64 * 8,
+                ));
+            }
+        }
+    }
+    None
+}
+
+/// The next offloadable shard: a device-resident shard of a class the
+/// target parks on host, keeping up to `prefetch_depth` shards resident
+/// when the class is hinted (unless `ignore_keep`, used to make room for
+/// required work). Highest shard first, so prefetch streams back
+/// lowest-first.
+fn next_evictable(st: &StoreState, ignore_keep: bool) -> Option<Action> {
+    let t = &st.target;
+    for c in AllocClass::ALL {
+        if c.is_transient() || t.residency[c.index()] != Residency::Host {
+            continue;
+        }
+        let cs = &st.classes[c.index()];
+        let keep = if t.hints[c.index()] && !ignore_keep {
+            t.prefetch_depth
+        } else {
+            0
+        };
+        if cs.device_shards() > keep {
+            if let Some(idx) = cs.shards.iter().rposition(|s| s.on_device) {
+                return Some(Action::MoveShard(c.index(), idx, false));
+            }
+        }
+    }
+    None
+}
+
+/// Plan the single highest-priority action for the current target, or None
+/// when the store already satisfies it. The ordering (module docs) both
+/// guarantees capacity — frees and offloads never starve behind
+/// acquisitions — and interleaves transient growth (KV) with the offload
+/// drain so phase entry is cheap.
+fn next_action(st: &StoreState, pool: &MemPool) -> Option<Action> {
+    let t = &st.target;
+    // 1. free transient scratch the target no longer wants
+    for c in AllocClass::ALL {
+        let cs = &st.classes[c.index()];
+        if c.is_transient() && t.residency[c.index()] != Residency::Device {
+            if let Some(idx) = cs.transient_allocs.iter().position(|a| a.is_some()) {
+                return Some(Action::FreeTransient(c.index(), idx));
+            }
+        }
+    }
+    // 2. required residency, evicting to make room when it does not fit
+    if let Some((action, bytes)) = next_required(st) {
+        if pool.device_free() >= bytes {
+            return Some(action);
+        }
+        // capacity-blocked: drain a host-parked shard first, overriding
+        // any hint-keep (required work always wins over prefetch)
+        if let Some(evict) = next_evictable(st, true) {
+            return Some(evict);
+        }
+        // nothing left to evict: by the planner's proof this must fit; a
+        // failure in the pool here is a real accounting violation and
+        // fails the plane loudly
+        return Some(action);
+    }
+    // 3. drain host-parked classes down to their hint-keep watermark
+    next_evictable(st, false)
+}
+
+fn transient_shard_bytes(cs: &ClassState, idx: usize) -> u64 {
+    // the last shard may be smaller than shard_bytes
+    let full = cs.shard_bytes;
+    let before = full * idx as u64;
+    (cs.bytes - before).min(full)
+}
+
+/// Opportunistic hint prefetch: one more shard of a hinted class, bounded
+/// by depth and free device capacity. Separate from [`next_action`] so a
+/// capacity miss here never fails the plane.
+fn next_hint(st: &StoreState, pool: &MemPool) -> Option<Action> {
+    let t = &st.target;
+    for c in AllocClass::ALL {
+        if c.is_transient() || !t.hints[c.index()] {
+            continue;
+        }
+        let cs = &st.classes[c.index()];
+        if t.residency[c.index()] == Residency::Device {
+            continue; // already a hard requirement
+        }
+        if cs.device_shards() >= t.prefetch_depth {
+            continue;
+        }
+        if let Some(idx) = cs.shards.iter().position(|s| !s.on_device) {
+            if pool.device_free() >= cs.shards[idx].words.len() as u64 * 8 {
+                return Some(Action::MoveShard(c.index(), idx, true));
+            }
+        }
+    }
+    None
+}
+
+/// Execute one planned action; returns whether anything was done. Chunked
+/// copies drop the lock between chunks' bookkeeping so waiters and new
+/// targets are never stuck behind a transfer.
+fn run_one_action(inner: &ExecInner) -> Result<bool> {
+    let _serial = inner.action_lock.lock().unwrap();
+    let mut st = inner.state.lock().unwrap();
+    if let Some(msg) = &st.failed {
+        return Err(Error::Capacity(msg.clone()));
+    }
+    let action = next_action(&st, &inner.pool).or_else(|| next_hint(&st, &inner.pool));
+    let Some(action) = action else {
+        return Ok(false);
+    };
+    match action {
+        Action::FreeTransient(ci, idx) => {
+            let alloc = st.classes[ci].transient_allocs[idx].take().expect("planned");
+            inner.pool.release(alloc)?;
+        }
+        Action::AcquireTransient(ci, idx) => {
+            let class = AllocClass::ALL[ci];
+            let bytes = transient_shard_bytes(&st.classes[ci], idx);
+            let alloc = inner.pool.acquire(class, bytes, Placement::Device)?;
+            st.classes[ci].transient_allocs[idx] = Some(alloc);
+        }
+        Action::MoveShard(ci, idx, to_device) => {
+            let shard = &mut st.classes[ci].shards[idx];
+            let alloc = shard.alloc;
+            // accounting first: the pool refuses moves that would
+            // overcommit the target tier, before any byte is copied
+            inner.pool.relocate(
+                alloc,
+                if to_device {
+                    Placement::Device
+                } else {
+                    Placement::Host
+                },
+            )?;
+            let src = std::mem::take(&mut shard.words);
+            drop(st);
+            // the transfer itself: chunked copy into the destination tier
+            let mut dst: Vec<u64> = Vec::with_capacity(src.len());
+            for chunk in src.chunks(inner.chunk_words.max(1)) {
+                dst.extend_from_slice(chunk);
+                inner.metrics.chunks_copied.fetch_add(1, Ordering::Relaxed);
+            }
+            let bytes = dst.len() as u64 * 8;
+            let m = &inner.metrics;
+            if to_device {
+                m.h2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+            } else {
+                m.d2h_bytes.fetch_add(bytes, Ordering::Relaxed);
+            }
+            m.shard_moves.fetch_add(1, Ordering::Relaxed);
+            st = inner.state.lock().unwrap();
+            let shard = &mut st.classes[ci].shards[idx];
+            shard.words = dst;
+            shard.on_device = to_device;
+        }
+    }
+    drop(st);
+    inner.done_cv.notify_all();
+    Ok(true)
+}
+
+fn worker_loop(inner: &ExecInner) {
+    loop {
+        match run_one_action(inner) {
+            Ok(true) => continue,
+            Ok(false) => {
+                let mut st = inner.state.lock().unwrap();
+                // a target may have raced in between the action scan and
+                // this lock — re-check BEFORE declaring convergence, so
+                // done_seq never runs ahead of actual residency
+                if next_action(&st, &inner.pool).is_some()
+                    || next_hint(&st, &inner.pool).is_some()
+                {
+                    continue;
+                }
+                if st.done_seq < st.target.seq {
+                    st.done_seq = st.target.seq;
+                    inner.done_cv.notify_all();
+                }
+                if st.shutdown {
+                    return;
+                }
+                let _st = inner.work_cv.wait(st).unwrap();
+            }
+            Err(e) => {
+                let mut st = inner.state.lock().unwrap();
+                st.failed = Some(e.to_string());
+                inner.done_cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memplane::plan::plan_colocation;
+    use crate::memplane::pool::MemSpec;
+
+    const MB: u64 = 1_000_000;
+
+    fn tight_plan() -> (ColocationPlan, Arc<MemPool>) {
+        let spec = MemSpec::new(8 * MB, 8 * MB, 16 * MB, 24 * MB, 8 * MB);
+        let plan = plan_colocation(
+            spec,
+            48 * MB,
+            64 * MB,
+            true,
+            false,
+            &[AllocClass::Grads, AllocClass::OptimState],
+        )
+        .unwrap();
+        let pool = Arc::new(MemPool::new(plan.device_cap, plan.host_cap));
+        (plan, pool)
+    }
+
+    fn residency_of(plan: &ColocationPlan, p: Phase) -> [Residency; 5] {
+        let mut r = [Residency::Device; 5];
+        for c in AllocClass::ALL {
+            r[c.index()] = plan.residency(p, c);
+        }
+        r
+    }
+
+    #[test]
+    fn background_converges_phase_flips() {
+        let (plan, pool) = tight_plan();
+        let metrics = Arc::new(OffloadMetrics::default());
+        let exec = OffloadExecutor::new(
+            pool.clone(),
+            &plan,
+            Phase::Sync,
+            4,
+            1,
+            true,
+            true,
+            [true; 5],
+            metrics.clone(),
+        )
+        .unwrap();
+        for _ in 0..3 {
+            exec.set_target(residency_of(&plan, Phase::Generate), [false; 5], 0);
+            exec.wait_class(AllocClass::KvCache).unwrap();
+            exec.flush().unwrap();
+            assert_eq!(pool.device_bytes_of(AllocClass::OptimState), 0);
+            exec.set_target(residency_of(&plan, Phase::Train), [false; 5], 0);
+            exec.wait_class(AllocClass::OptimState).unwrap();
+            exec.flush().unwrap();
+            assert_eq!(pool.device_bytes_of(AllocClass::OptimState), 16 * MB);
+        }
+        exec.verify_integrity().unwrap();
+        assert!(metrics.d2h_bytes.load(Ordering::Relaxed) >= 3 * 16 * MB);
+        assert!(pool.usage().device_used <= pool.device_cap);
+    }
+
+    #[test]
+    fn eager_plane_converges_synchronously() {
+        let (plan, pool) = tight_plan();
+        let metrics = Arc::new(OffloadMetrics::default());
+        let exec =
+            OffloadExecutor::new(pool, &plan, Phase::Train, 4, 1, false, true, [true; 5], metrics)
+                .unwrap();
+        exec.set_target(residency_of(&plan, Phase::Generate), [false; 5], 0);
+        exec.apply_target_blocking().unwrap();
+        exec.wait_class(AllocClass::KvCache).unwrap();
+        // optimizer state is off-device now; waiting on it must be refused
+        // (an eager plane has nobody to bring it back)
+        assert!(exec.wait_shard(AllocClass::OptimState, 0).is_err());
+        exec.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn hints_prefetch_within_depth_and_capacity() {
+        let (plan, pool) = tight_plan();
+        let metrics = Arc::new(OffloadMetrics::default());
+        let exec = OffloadExecutor::new(
+            pool.clone(),
+            &plan,
+            Phase::Generate,
+            8,
+            1,
+            true,
+            true,
+            [true; 5],
+            metrics.clone(),
+        )
+        .unwrap();
+        exec.flush().unwrap();
+        assert_eq!(pool.device_bytes_of(AllocClass::OptimState), 0);
+        // hint the optimizer back in, but only 2 shards deep
+        let mut hints = [false; 5];
+        hints[AllocClass::OptimState.index()] = true;
+        exec.set_target(residency_of(&plan, Phase::Generate), hints, 2);
+        exec.flush().unwrap();
+        let frac = exec
+            .device_fracs()
+            .into_iter()
+            .find(|(c, _)| *c == AllocClass::OptimState)
+            .unwrap()
+            .1;
+        assert!((frac - 0.25).abs() < 1e-9, "2 of 8 shards, got {frac}");
+        assert!(pool.usage().device_used <= pool.device_cap);
+        exec.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn transient_growth_interleaves_with_offload() {
+        // generate-phase KV (24 MB) cannot fit until optimizer shards
+        // drain; shard-granular interleave must still make shard 0 of KV
+        // available long before the full D2H completes
+        let (plan, pool) = tight_plan();
+        let metrics = Arc::new(OffloadMetrics::default());
+        let exec = OffloadExecutor::new(
+            pool.clone(),
+            &plan,
+            Phase::Train,
+            8,
+            1,
+            true,
+            true,
+            [true; 5],
+            metrics.clone(),
+        )
+        .unwrap();
+        exec.set_target(residency_of(&plan, Phase::Generate), [false; 5], 0);
+        exec.wait_shard(AllocClass::KvCache, 0).unwrap();
+        // shard 0 of KV is live; the optimizer drain may still be running
+        exec.flush().unwrap();
+        exec.wait_class(AllocClass::KvCache).unwrap();
+        assert_eq!(pool.device_bytes_of(AllocClass::KvCache), 24 * MB);
+        assert_eq!(pool.device_bytes_of(AllocClass::OptimState), 0);
+        exec.verify_integrity().unwrap();
+    }
+}

@@ -1,0 +1,488 @@
+//! The colocated offloading memory plane (paper best practice #3; cf.
+//! AsyncFlow arXiv 2507.01663, Laminar arXiv 2510.12633).
+//!
+//! Colocation lets trainer and generator share the same GPUs without
+//! doubling the cluster: state the current phase does not need — above all
+//! the optimizer moments, the largest single allocation in the 4x-W0
+//! trainer footprint — is swapped to host memory during generation and
+//! prefetched back before the next optimizer update, overlapped with
+//! compute. This module makes that a first-class, *accounted* subsystem:
+//!
+//! * [`pool`] — [`MemPool`]: per-rank HBM/host capacity accounting over
+//!   tracked [`AllocClass`]es (params, grads, optimizer state, KV cache,
+//!   activation scratch), with hard-capacity errors instead of silent
+//!   overcommit, and [`MemSpec`] deriving class sizes from the same
+//!   quantities as [`crate::simulator::hardware`].
+//! * [`plan`] — the phase-aware colocation planner: per
+//!   [`Phase`] (generate / train / sync), which classes live on-device vs
+//!   host; transient scratch is dropped, retained classes are offloaded
+//!   largest-first, and infeasible placements are rejected with
+//!   [`crate::util::error::Error::Capacity`] **before** a run starts.
+//! * [`executor`] — [`OffloadExecutor`]: the background offload/prefetch
+//!   engine (long-lived worker, chunked transfers, latest-wins residency
+//!   targets), reusing the streaming-worker pattern of
+//!   [`crate::weightsync::executor`].
+//!
+//! # The colocation lease protocol
+//!
+//! The coordinator never moves memory itself; it brackets each phase with a
+//! lease on the shared [`MemPlane`]:
+//!
+//! ```text
+//!   lease(Generate) ─► target := Generate residency   (offload optimizer
+//!       │               D2H runs behind decode)
+//!       │ hint_next(Train) ─► prefetcher streams optimizer shards back
+//!       │                     H2D while generation still runs, capacity-
+//!       ▼                     and depth-bounded (prefetch_depth)
+//!   drop(lease)
+//!   lease(Train) ──► returns once the FIRST shard of every required
+//!       │            class is device-resident (double buffering: shard
+//!       │            i+1 streams while shard i updates)
+//!       │ wait_shard(OptimState, i) before touching shard i
+//!       ▼
+//!   drop(lease)
+//! ```
+//!
+//! 1. [`MemPlane::lease`] bumps the phase's refcount, publishes the merged
+//!    residency target of every *active* phase to the executor, and blocks
+//!    only until the phase's required classes are *entered*: transient
+//!    scratch allocated, and shard 0 of each retained class resident. The
+//!    rest of the stream overlaps the phase's own compute.
+//! 2. [`PhaseLease::wait_shard`] is the consumer-side fence: call it before
+//!    touching shard `i`; with the background prefetcher warm these waits
+//!    are hits (no blocking), and the blocked time that remains is the true
+//!    un-hidden transfer cost ([`OffloadMetrics::wait_secs`]).
+//! 3. [`MemPlane::hint_next`] arms the prefetcher for the *next* phase
+//!    while the current lease is still held — this is what hides the H2D
+//!    stream behind generation. Hints are opportunistic: bounded by
+//!    `prefetch_depth` shards and whatever HBM the current phase leaves
+//!    free, never violating the planner's capacity proof.
+//! 4. Dropping the last lease of a phase leaves residency untouched (no
+//!    thrash between back-to-back phases); the next lease or hint drives
+//!    the transition, and a target published mid-transition supersedes the
+//!    old one at the next shard boundary (latest-wins).
+//!
+//! Async architectures run phases concurrently on disjoint executors; the
+//! planner then requires the full union to fit (offloading cannot help) and
+//! leases degrade to pure accounting — same code path, zero transfers.
+
+pub mod executor;
+pub mod plan;
+pub mod pool;
+
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+use crate::memplane::executor::{OffloadExecutor, OffloadMetrics};
+use crate::memplane::plan::{plan_colocation, auto_device_cap, ColocationPlan, Phase, Residency};
+use crate::memplane::pool::{AllocClass, MemPool, MemSpec, PoolUsage};
+use crate::util::error::{Error, Result};
+
+pub use executor::OffloadMetrics as Metrics;
+pub use plan::{ColocationPlan as Plan, FlipMove, Residency as ClassResidency};
+pub use pool::{AllocId, Placement, PoolUsage as Usage};
+
+/// Arena guard: the plane materializes real buffers for every retained
+/// class; paper-scale specs must go through the planner/DES path instead.
+const MAX_ARENA_BYTES: u64 = 2_000_000_000;
+
+/// Memory-plane configuration (config file keys `colocate`,
+/// `offload_classes`, `offload_chunk_mb`, `prefetch_depth`).
+#[derive(Debug, Clone)]
+pub struct MemPlaneConfig {
+    /// trainer and generator share the rank (sequential phase residency)
+    pub colocate: bool,
+    /// retained classes allowed off-device (default: grads + optimizer)
+    pub offload_classes: Vec<AllocClass>,
+    /// transfer chunk size, MB (chunk = cancellation granularity)
+    pub offload_chunk_mb: usize,
+    /// shards the hint prefetcher may bring in ahead of the lease
+    pub prefetch_depth: usize,
+    /// run transfers on the background worker (false = eager baseline:
+    /// every lease pays its transfers synchronously)
+    pub background: bool,
+    /// shards per retained class (transfer/eviction granularity)
+    pub shards_per_class: usize,
+    /// per-rank HBM bytes; 0 = auto (plan requirement + 25% headroom)
+    pub device_bytes: u64,
+    /// host memory bytes; 0 = auto (the whole spec fits)
+    pub host_bytes: u64,
+    /// async architectures: phases overlap in time, nothing may offload
+    pub concurrent_phases: bool,
+}
+
+impl Default for MemPlaneConfig {
+    fn default() -> Self {
+        MemPlaneConfig {
+            colocate: false,
+            offload_classes: vec![AllocClass::Grads, AllocClass::OptimState],
+            offload_chunk_mb: 4,
+            prefetch_depth: 8,
+            background: true,
+            shards_per_class: 8,
+            device_bytes: 0,
+            host_bytes: 0,
+            concurrent_phases: false,
+        }
+    }
+}
+
+struct ActivePhases {
+    counts: [usize; 3],
+    hint: Option<Phase>,
+}
+
+/// The per-rank memory plane: planner proof + pool accountant + offload
+/// executor behind the phase-lease protocol (module docs).
+pub struct MemPlane {
+    /// self-handle so leases can own the plane past the caller's borrow
+    /// (set once by [`MemPlane::new`] via `Arc::new_cyclic`)
+    me: Weak<MemPlane>,
+    plan: ColocationPlan,
+    pool: Arc<MemPool>,
+    exec: OffloadExecutor,
+    metrics: Arc<OffloadMetrics>,
+    prefetch_depth: usize,
+    active: Mutex<ActivePhases>,
+}
+
+impl MemPlane {
+    /// Plan, account and materialize a plane for `spec`. Fails with a
+    /// capacity error when no legal placement exists — a colocated config
+    /// that does not fit its rank's HBM never starts running.
+    pub fn new(spec: MemSpec, cfg: &MemPlaneConfig) -> Result<Arc<MemPlane>> {
+        // Only sequential colocated planes ever move retained state, so
+        // only they back shards with real arenas (and only they need the
+        // testbed-scale guard); every other placement is accounting-only
+        // and costs no memory beyond the bookkeeping.
+        let materialize = cfg.colocate && !cfg.concurrent_phases;
+        if materialize && spec.total() > MAX_ARENA_BYTES {
+            return Err(Error::Config(format!(
+                "memplane materializes real arenas for colocated offloading; \
+                 {} B exceeds the {} B testbed guard — use the planner/DES \
+                 path for paper-scale specs",
+                spec.total(),
+                MAX_ARENA_BYTES
+            )));
+        }
+        let device_cap = if cfg.device_bytes > 0 {
+            cfg.device_bytes
+        } else {
+            auto_device_cap(
+                &spec,
+                cfg.colocate,
+                cfg.concurrent_phases,
+                &cfg.offload_classes,
+                0.25,
+            )
+        };
+        let host_cap = if cfg.host_bytes > 0 {
+            cfg.host_bytes
+        } else {
+            spec.total().max(1)
+        };
+        let plan = plan_colocation(
+            spec,
+            device_cap,
+            host_cap,
+            cfg.colocate,
+            cfg.concurrent_phases,
+            &cfg.offload_classes,
+        )?;
+        let pool = Arc::new(MemPool::new(device_cap, host_cap));
+        let metrics = Arc::new(OffloadMetrics::default());
+        // prefetch hits are only meaningful for classes the plan ever
+        // parks off-device — always-resident classes never "hit"
+        let mut hit_classes = [false; 5];
+        for c in plan.offloaded_classes() {
+            hit_classes[c.index()] = true;
+        }
+        let exec = OffloadExecutor::new(
+            pool.clone(),
+            &plan,
+            Phase::Sync,
+            cfg.shards_per_class,
+            cfg.offload_chunk_mb,
+            cfg.background,
+            materialize,
+            hit_classes,
+            metrics.clone(),
+        )?;
+        Ok(Arc::new_cyclic(|me| MemPlane {
+            me: me.clone(),
+            plan,
+            pool,
+            exec,
+            metrics,
+            prefetch_depth: cfg.prefetch_depth,
+            active: Mutex::new(ActivePhases {
+                counts: [0; 3],
+                hint: None,
+            }),
+        }))
+    }
+
+    /// Merged residency target of all active phases (+ hint flags); see
+    /// module docs. Device wins over Host wins over Dropped, so concurrent
+    /// leases can only widen residency, never evict under a peer.
+    fn merged_target(&self, act: &ActivePhases) -> ([Residency; 5], [bool; 5]) {
+        let mut residency = [Residency::Device; 5];
+        let active: Vec<Phase> = Phase::ALL
+            .iter()
+            .copied()
+            .filter(|p| act.counts[p.index()] > 0)
+            .collect();
+        for c in AllocClass::ALL {
+            let i = c.index();
+            residency[i] = if active
+                .iter()
+                .any(|p| self.plan.residency(*p, c) == Residency::Device)
+            {
+                Residency::Device
+            } else if c.is_transient() {
+                Residency::Dropped
+            } else if self.plan.offloaded_classes().contains(&c) {
+                Residency::Host
+            } else {
+                Residency::Device
+            };
+        }
+        let mut hints = [false; 5];
+        if let Some(h) = act.hint {
+            for c in AllocClass::ALL {
+                if !c.is_transient()
+                    && self.plan.residency(h, c) == Residency::Device
+                    && residency[c.index()] != Residency::Device
+                {
+                    hints[c.index()] = true;
+                }
+            }
+        }
+        (residency, hints)
+    }
+
+    fn publish_target(&self, act: &ActivePhases) {
+        let (residency, hints) = self.merged_target(act);
+        self.exec.set_target(residency, hints, self.prefetch_depth);
+    }
+
+    /// Acquire a phase lease: publish the merged residency target and block
+    /// until the phase is *entered* (transient scratch live, shard 0 of
+    /// every retained required class resident). Use
+    /// [`PhaseLease::wait_shard`] as you walk the remaining shards.
+    ///
+    /// Concurrent leases are refcounted per phase and only widen residency
+    /// (Device wins). On a sequential colocated plan, concurrently leasing
+    /// phases whose union exceeds the rank fails loudly through the pool
+    /// accountant — it does not silently overcommit.
+    pub fn lease(&self, phase: Phase) -> Result<PhaseLease> {
+        {
+            let mut act = self.active.lock().unwrap();
+            act.counts[phase.index()] += 1;
+            if act.hint == Some(phase) {
+                act.hint = None; // the hinted phase arrived
+            }
+            self.publish_target(&act);
+        }
+        // the refcount is live from here: a failed entry must release it,
+        // or the phase would pin its residency in every future target
+        if let Err(e) = self.enter_phase(phase) {
+            self.release(phase);
+            return Err(e);
+        }
+        Ok(PhaseLease {
+            plane: self.me.upgrade().expect("plane alive while leasing"),
+            phase,
+        })
+    }
+
+    /// The fallible half of [`MemPlane::lease`]: converge (eager) and wait
+    /// for the phase's entry residency.
+    fn enter_phase(&self, phase: Phase) -> Result<()> {
+        if !self.exec.is_background() {
+            // eager plane: the lease holder pays the whole transfer now
+            let t0 = Instant::now();
+            self.exec.apply_target_blocking()?;
+            let m = &self.metrics;
+            m.wait_events
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            m.wait_nanos.fetch_add(
+                t0.elapsed().as_nanos() as u64,
+                std::sync::atomic::Ordering::Relaxed,
+            );
+        }
+        for c in phase.required() {
+            self.exec.wait_shard(*c, 0)?;
+        }
+        Ok(())
+    }
+
+    /// Arm the prefetcher for the phase that comes next while the current
+    /// lease is still held (capacity- and depth-bounded; no-op on an eager
+    /// plane, which is exactly the overlap the bench measures).
+    pub fn hint_next(&self, phase: Phase) {
+        let mut act = self.active.lock().unwrap();
+        act.hint = Some(phase);
+        self.publish_target(&act);
+    }
+
+    /// Block until the executor converged the newest residency target.
+    pub fn flush(&self) -> Result<()> {
+        self.exec.flush()
+    }
+
+    pub fn metrics(&self) -> &OffloadMetrics {
+        &self.metrics
+    }
+
+    pub fn plan(&self) -> &ColocationPlan {
+        &self.plan
+    }
+
+    pub fn usage(&self) -> PoolUsage {
+        self.pool.usage()
+    }
+
+    pub fn device_cap(&self) -> u64 {
+        self.pool.device_cap
+    }
+
+    /// Shard-content integrity check (tests): transfers never tear data.
+    pub fn verify_integrity(&self) -> Result<()> {
+        self.exec.verify_integrity()
+    }
+
+    /// Per-class device-resident shard fractions (tests/benches).
+    pub fn device_fracs(&self) -> Vec<(AllocClass, f64)> {
+        self.exec.device_fracs()
+    }
+
+    fn release(&self, phase: Phase) {
+        let mut act = self.active.lock().unwrap();
+        let c = &mut act.counts[phase.index()];
+        debug_assert!(*c > 0, "lease refcount underflow");
+        *c = c.saturating_sub(1);
+        if act.counts.iter().any(|n| *n > 0) || act.hint.is_some() {
+            // remaining peers (or an armed hint) keep driving the target
+            self.publish_target(&act);
+        }
+        // all-idle: leave residency as-is — the next lease or hint drives
+        // the transition, avoiding thrash between back-to-back phases
+    }
+}
+
+/// An RAII phase lease (see the protocol in the module docs).
+pub struct PhaseLease {
+    plane: Arc<MemPlane>,
+    phase: Phase,
+}
+
+impl PhaseLease {
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// Fence before touching shard `idx` of `class`; blocks only for the
+    /// un-prefetched remainder of the stream.
+    pub fn wait_shard(&self, class: AllocClass, idx: usize) -> Result<()> {
+        self.plane.exec.wait_shard(class, idx)
+    }
+
+    /// Fence on a whole class.
+    pub fn wait_class(&self, class: AllocClass) -> Result<()> {
+        self.plane.exec.wait_class(class)
+    }
+}
+
+impl Drop for PhaseLease {
+    fn drop(&mut self) {
+        self.plane.release(self.phase);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1_000_000;
+
+    fn cfg(colocate: bool, background: bool) -> MemPlaneConfig {
+        MemPlaneConfig {
+            colocate,
+            background,
+            device_bytes: 48 * MB,
+            host_bytes: 128 * MB,
+            shards_per_class: 4,
+            offload_chunk_mb: 1,
+            ..MemPlaneConfig::default()
+        }
+    }
+
+    fn spec() -> MemSpec {
+        MemSpec::new(8 * MB, 8 * MB, 16 * MB, 24 * MB, 8 * MB)
+    }
+
+    #[test]
+    fn lease_cycle_offloads_and_prefetches() {
+        let plane = MemPlane::new(spec(), &cfg(true, true)).unwrap();
+        for _ in 0..3 {
+            let g = plane.lease(Phase::Generate).unwrap();
+            plane.hint_next(Phase::Train);
+            drop(g);
+            let t = plane.lease(Phase::Train).unwrap();
+            for s in 0..4 {
+                t.wait_shard(AllocClass::OptimState, s).unwrap();
+            }
+            drop(t);
+        }
+        plane.flush().unwrap();
+        plane.verify_integrity().unwrap();
+        let m = plane.metrics();
+        assert!(m.d2h_bytes.load(std::sync::atomic::Ordering::Relaxed) >= 16 * MB);
+        assert!(m.h2d_bytes.load(std::sync::atomic::Ordering::Relaxed) >= 16 * MB);
+        assert!(plane.usage().device_used <= plane.device_cap());
+    }
+
+    #[test]
+    fn infeasible_plane_never_constructs() {
+        let mut c = cfg(true, true);
+        c.device_bytes = 30 * MB; // train needs 40 even with kv dropped
+        match MemPlane::new(spec(), &c) {
+            Err(err) => assert!(matches!(err, Error::Capacity(_)), "{err}"),
+            Ok(_) => panic!("oversized colocation must not construct"),
+        }
+    }
+
+    #[test]
+    fn concurrent_leases_widen_residency() {
+        let mut c = cfg(true, true);
+        c.concurrent_phases = true;
+        c.device_bytes = spec().total() + MB;
+        let plane = MemPlane::new(spec(), &c).unwrap();
+        let g = plane.lease(Phase::Generate).unwrap();
+        let t = plane.lease(Phase::Train).unwrap();
+        t.wait_class(AllocClass::OptimState).unwrap();
+        g.wait_class(AllocClass::KvCache).unwrap();
+        plane.flush().unwrap();
+        // nothing ever leaves the device in concurrent mode
+        assert_eq!(plane.metrics().transferred_bytes(), 0);
+        drop(g);
+        drop(t);
+    }
+
+    #[test]
+    fn eager_plane_pays_at_the_lease() {
+        let plane = MemPlane::new(spec(), &cfg(true, false)).unwrap();
+        {
+            let _g = plane.lease(Phase::Generate).unwrap();
+            plane.hint_next(Phase::Train); // no-op without a worker
+        }
+        let t = plane.lease(Phase::Train).unwrap();
+        t.wait_class(AllocClass::OptimState).unwrap();
+        drop(t);
+        let m = plane.metrics();
+        assert!(m.wait_secs() > 0.0);
+        assert!(m.transferred_bytes() >= 32 * MB);
+        plane.verify_integrity().unwrap();
+    }
+}

@@ -1,0 +1,525 @@
+//! Phase-aware colocation planner: which allocation classes live on-device
+//! vs host in each pipeline phase, and what the phase flips cost.
+//!
+//! Colocation (paper best practice; also AsyncFlow/Laminar) lets trainer
+//! and generator share the same GPUs: state the current phase does not need
+//! is swapped to host memory and prefetched back before the phase that
+//! does. The planner turns a [`MemSpec`] + hard capacities into a
+//! *placement proof*:
+//!
+//! * every phase's device-resident set fits the per-rank HBM capacity, or
+//!   planning fails with [`Error::Capacity`] — infeasible colocations are
+//!   rejected before a run starts, never discovered as an OOM mid-step;
+//! * retained classes ([`AllocClass::is_transient`] == false) that do not
+//!   fit next to a phase's working set are offloaded **largest-first**
+//!   (fewest transfers for the most freed bytes), but only if the caller
+//!   listed them in `offload_classes` — the planner never silently moves
+//!   state the user wanted pinned;
+//! * transient classes (KV cache, activation scratch) are *dropped* outside
+//!   their phase: freed and re-materialized, zero transfer bytes.
+//!
+//! Concurrent-phase mode models the asynchronous architectures, where
+//! generate/train/sync overlap in time on disjoint executors: nothing can
+//! be offloaded (a class is always needed by *someone*), so colocation is
+//! feasible only when everything fits at once — and the planner says so
+//! loudly instead of letting phases fight over residency.
+//!
+//! The phase-flip transfer volumes are costed on the same hardware model
+//! the DDMA plane uses ([`DdmaModel::offload_secs`], PCIe-bound), which is
+//! what the DES offload/prefetch timeline segments and the
+//! `offload_overlap` bench consume.
+
+use crate::ddma::topology::DdmaModel;
+use crate::memplane::pool::{AllocClass, MemSpec};
+use crate::util::error::{Error, Result};
+
+/// Pipeline phases the coordinator leases around.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Generate,
+    Train,
+    Sync,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 3] = [Phase::Generate, Phase::Train, Phase::Sync];
+
+    /// Classes a phase must have device-resident to run at all.
+    pub fn required(self) -> &'static [AllocClass] {
+        match self {
+            Phase::Generate => &[AllocClass::Params, AllocClass::KvCache],
+            Phase::Train => &[
+                AllocClass::Params,
+                AllocClass::Grads,
+                AllocClass::OptimState,
+                AllocClass::ActivationSlack,
+            ],
+            // publish reads the weight snapshot; everything else may rest
+            Phase::Sync => &[AllocClass::Params],
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Generate => "generate",
+            Phase::Train => "train",
+            Phase::Sync => "sync",
+        }
+    }
+
+    pub(crate) fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Where a class lives during one phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// on-device (HBM-resident)
+    Device,
+    /// offloaded to host memory (retained: contents preserved, D2H/H2D on
+    /// the flips)
+    Host,
+    /// freed — transient scratch re-materialized when its phase resumes
+    Dropped,
+}
+
+/// A transfer one phase flip performs for one retained class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlipMove {
+    /// device -> host (offload)
+    D2H(AllocClass, u64),
+    /// host -> device (prefetch)
+    H2D(AllocClass, u64),
+}
+
+/// The planner's proof object: per-phase residency for every class, plus
+/// the capacities it was proven against.
+#[derive(Debug, Clone)]
+pub struct ColocationPlan {
+    pub spec: MemSpec,
+    pub device_cap: u64,
+    pub host_cap: u64,
+    pub colocated: bool,
+    /// async architectures: phases overlap in time, so no class can leave
+    /// the device
+    pub concurrent: bool,
+    residency: [[Residency; 5]; 3],
+}
+
+impl ColocationPlan {
+    pub fn residency(&self, phase: Phase, class: AllocClass) -> Residency {
+        self.residency[phase.index()][class.index()]
+    }
+
+    /// Device bytes the plan puts on the rank during `phase`.
+    pub fn device_bytes(&self, phase: Phase) -> u64 {
+        AllocClass::ALL
+            .iter()
+            .filter(|c| self.residency(phase, **c) == Residency::Device)
+            .map(|c| self.spec.bytes(*c))
+            .sum()
+    }
+
+    /// The plan's peak per-rank HBM demand across phases.
+    pub fn max_phase_device_bytes(&self) -> u64 {
+        Phase::ALL
+            .iter()
+            .map(|p| self.device_bytes(*p))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Retained classes the plan ever parks on the host.
+    pub fn offloaded_classes(&self) -> Vec<AllocClass> {
+        AllocClass::ALL
+            .into_iter()
+            .filter(|c| {
+                Phase::ALL
+                    .iter()
+                    .any(|p| self.residency(*p, *c) == Residency::Host)
+            })
+            .collect()
+    }
+
+    /// Retained-class moves when flipping `from -> to` (transient drops and
+    /// re-materializations carry no bytes and are not listed).
+    pub fn transfers(&self, from: Phase, to: Phase) -> Vec<FlipMove> {
+        let mut out = Vec::new();
+        for c in AllocClass::ALL {
+            if c.is_transient() {
+                continue;
+            }
+            match (self.residency(from, c), self.residency(to, c)) {
+                (Residency::Device, Residency::Host) => {
+                    out.push(FlipMove::D2H(c, self.spec.bytes(c)))
+                }
+                (Residency::Host, Residency::Device) => {
+                    out.push(FlipMove::H2D(c, self.spec.bytes(c)))
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Total bytes a flip moves in each direction: `(d2h, h2d)`.
+    pub fn flip_bytes(&self, from: Phase, to: Phase) -> (u64, u64) {
+        let mut d2h = 0;
+        let mut h2d = 0;
+        for m in self.transfers(from, to) {
+            match m {
+                FlipMove::D2H(_, b) => d2h += b,
+                FlipMove::H2D(_, b) => h2d += b,
+            }
+        }
+        (d2h, h2d)
+    }
+
+    /// DES timeline segments on the calibrated hardware model: seconds of
+    /// offload (train -> generate flip) and prefetch (generate -> train
+    /// flip) transfer over the host link, chunked at `chunk_mb`.
+    pub fn des_offload_costs(&self, model: &DdmaModel, chunk_mb: usize) -> (f64, f64) {
+        let chunk = (chunk_mb.max(1) as f64) * 1e6;
+        let (d2h, _) = self.flip_bytes(Phase::Train, Phase::Generate);
+        let (_, h2d) = self.flip_bytes(Phase::Generate, Phase::Train);
+        (
+            model.offload_secs(d2h as f64, chunk),
+            model.offload_secs(h2d as f64, chunk),
+        )
+    }
+}
+
+fn phase_fit_error(phase: Phase, need: u64, cap: u64, hint: &str) -> Error {
+    Error::Capacity(format!(
+        "colocated {} phase needs {need} B device-resident but the rank has \
+         {cap} B of HBM{hint}",
+        phase.name(),
+    ))
+}
+
+/// Plan a placement. `offload_classes` are the retained classes the caller
+/// allows off-device; `concurrent` models the async architectures (phases
+/// overlap, nothing may leave). Fails with [`Error::Capacity`] when no
+/// legal placement exists.
+pub fn plan_colocation(
+    spec: MemSpec,
+    device_cap: u64,
+    host_cap: u64,
+    colocated: bool,
+    concurrent: bool,
+    offload_classes: &[AllocClass],
+) -> Result<ColocationPlan> {
+    for c in offload_classes {
+        if c.is_transient() {
+            return Err(Error::Config(format!(
+                "class '{}' is transient scratch (dropped between phases); \
+                 it cannot be offload-retained",
+                c.name()
+            )));
+        }
+    }
+    let mut residency = [[Residency::Device; 5]; 3];
+    if !colocated {
+        // Disjoint ranks per role: each phase's rank holds its own classes;
+        // the cross-phase classes simply do not exist on the other rank.
+        // Feasibility is per-role.
+        let trainer: u64 = spec.sum(Phase::Train.required().iter().copied());
+        let generator: u64 = spec.sum(Phase::Generate.required().iter().copied());
+        if trainer > device_cap {
+            return Err(phase_fit_error(Phase::Train, trainer, device_cap, ""));
+        }
+        if generator > device_cap {
+            return Err(phase_fit_error(Phase::Generate, generator, device_cap, ""));
+        }
+        for p in Phase::ALL {
+            for c in AllocClass::ALL {
+                if c.is_transient() && !p.required().contains(&c) {
+                    residency[p.index()][c.index()] = Residency::Dropped;
+                }
+            }
+        }
+        return Ok(ColocationPlan {
+            spec,
+            device_cap,
+            host_cap,
+            colocated,
+            concurrent,
+            residency,
+        });
+    }
+
+    if concurrent {
+        // Overlapping phases: every class is live for someone at all times.
+        let total = spec.total();
+        if total > device_cap {
+            return Err(Error::Capacity(format!(
+                "colocated async needs every class device-resident at once \
+                 ({total} B > {device_cap} B HBM): phases overlap, so \
+                 offloading cannot help — shrink batches or un-colocate"
+            )));
+        }
+        return Ok(ColocationPlan {
+            spec,
+            device_cap,
+            host_cap,
+            colocated,
+            concurrent,
+            residency,
+        });
+    }
+
+    // Sequential colocation: per phase, start from everything resident,
+    // drop transient scratch other phases own, then offload allowed
+    // retained classes largest-first until the phase fits.
+    for p in Phase::ALL {
+        let row = &mut residency[p.index()];
+        for c in AllocClass::ALL {
+            if c.is_transient() && !p.required().contains(&c) {
+                row[c.index()] = Residency::Dropped;
+            }
+        }
+        let device_sum = |row: &[Residency; 5]| -> u64 {
+            AllocClass::ALL
+                .iter()
+                .filter(|c| row[c.index()] == Residency::Device)
+                .map(|c| spec.bytes(*c))
+                .sum()
+        };
+        if device_sum(row) <= device_cap {
+            continue;
+        }
+        // largest-first offload of the allowed, non-required classes
+        let mut candidates: Vec<AllocClass> = offload_classes
+            .iter()
+            .copied()
+            .filter(|c| !p.required().contains(c))
+            .collect();
+        candidates.sort_by_key(|c| std::cmp::Reverse(spec.bytes(*c)));
+        for c in candidates {
+            if device_sum(row) <= device_cap {
+                break;
+            }
+            row[c.index()] = Residency::Host;
+        }
+        let need = device_sum(row);
+        if need > device_cap {
+            return Err(phase_fit_error(
+                p,
+                need,
+                device_cap,
+                " even with every allowed class offloaded",
+            ));
+        }
+        let host_sum: u64 = AllocClass::ALL
+            .iter()
+            .filter(|c| row[c.index()] == Residency::Host)
+            .map(|c| spec.bytes(*c))
+            .sum();
+        if host_sum > host_cap {
+            return Err(Error::Capacity(format!(
+                "colocated {} phase offloads {host_sum} B to host but only \
+                 {host_cap} B of host memory is available",
+                p.name()
+            )));
+        }
+    }
+    Ok(ColocationPlan {
+        spec,
+        device_cap,
+        host_cap,
+        colocated,
+        concurrent,
+        residency,
+    })
+}
+
+/// The smallest device capacity the plane's pool needs to run `spec`, with
+/// a fractional headroom — what the coordinator uses when no explicit
+/// capacity is configured. Non-colocated deployments get the SUM of both
+/// roles' demands (the pool then stands for two ranks' HBM — exactly the
+/// hardware bill colocation exists to avoid); colocated concurrent gets
+/// the full union; colocated sequential gets the worst single phase under
+/// the allowed offloads.
+pub fn auto_device_cap(
+    spec: &MemSpec,
+    colocated: bool,
+    concurrent: bool,
+    offload_classes: &[AllocClass],
+    headroom: f64,
+) -> u64 {
+    let need = if !colocated {
+        // two ranks' worth: the trainer rank plus the generator rank
+        let trainer = spec.sum(Phase::Train.required().iter().copied());
+        let generator = spec.sum(Phase::Generate.required().iter().copied());
+        trainer + generator
+    } else if concurrent {
+        spec.total()
+    } else {
+        Phase::ALL
+            .iter()
+            .map(|p| {
+                let mut sum = 0u64;
+                for c in AllocClass::ALL {
+                    let dropped = c.is_transient() && !p.required().contains(&c);
+                    let offloaded =
+                        offload_classes.contains(&c) && !p.required().contains(&c);
+                    if !dropped && !offloaded {
+                        sum += spec.bytes(c);
+                    }
+                }
+                sum
+            })
+            .max()
+            .unwrap_or(0)
+    };
+    ((need as f64) * (1.0 + headroom.max(0.0))).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1_000_000;
+
+    fn spec() -> MemSpec {
+        // params 32, grads 32, optim 64, kv 96, act 32 (MB)
+        MemSpec::new(32 * MB, 32 * MB, 64 * MB, 96 * MB, 32 * MB)
+    }
+
+    #[test]
+    fn sequential_plan_offloads_only_when_needed() {
+        let s = spec();
+        // cap fits everything retained at all times: nothing offloaded
+        let roomy = plan_colocation(
+            s,
+            s.total(),
+            s.total(),
+            true,
+            false,
+            &[AllocClass::Grads, AllocClass::OptimState],
+        )
+        .unwrap();
+        assert!(roomy.offloaded_classes().is_empty());
+        assert_eq!(roomy.flip_bytes(Phase::Train, Phase::Generate), (0, 0));
+
+        // tight cap: generate phase (params+kv = 128) cannot also hold
+        // grads+optim (96) at 160 — optim (largest) goes first, and it is
+        // enough
+        let tight = plan_colocation(
+            s,
+            160 * MB,
+            256 * MB,
+            true,
+            false,
+            &[AllocClass::Grads, AllocClass::OptimState],
+        )
+        .unwrap();
+        assert_eq!(
+            tight.residency(Phase::Generate, AllocClass::OptimState),
+            Residency::Host
+        );
+        assert_eq!(
+            tight.residency(Phase::Generate, AllocClass::Grads),
+            Residency::Device
+        );
+        assert_eq!(
+            tight.residency(Phase::Train, AllocClass::OptimState),
+            Residency::Device
+        );
+        // transient scratch is dropped, not offloaded
+        assert_eq!(
+            tight.residency(Phase::Generate, AllocClass::ActivationSlack),
+            Residency::Dropped
+        );
+        let (d2h, h2d) = (
+            tight.flip_bytes(Phase::Train, Phase::Generate),
+            tight.flip_bytes(Phase::Generate, Phase::Train),
+        );
+        assert_eq!(d2h, (64 * MB, 0));
+        assert_eq!(h2d, (0, 64 * MB));
+    }
+
+    #[test]
+    fn infeasible_placement_is_a_capacity_error() {
+        let s = spec();
+        // train needs params+grads+optim+act = 160 even with kv dropped
+        let err = plan_colocation(
+            s,
+            100 * MB,
+            1024 * MB,
+            true,
+            false,
+            &[AllocClass::Grads, AllocClass::OptimState],
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Capacity(_)), "{err}");
+        // without permission to offload, generate (128 + 96 retained) fails
+        let err2 = plan_colocation(s, 160 * MB, 1024 * MB, true, false, &[]).unwrap_err();
+        assert!(matches!(err2, Error::Capacity(_)), "{err2}");
+        // host too small to hold the offloaded optimizer state
+        let err3 = plan_colocation(
+            s,
+            160 * MB,
+            10 * MB,
+            true,
+            false,
+            &[AllocClass::Grads, AllocClass::OptimState],
+        )
+        .unwrap_err();
+        assert!(matches!(err3, Error::Capacity(_)), "{err3}");
+    }
+
+    #[test]
+    fn concurrent_phases_need_the_union() {
+        let s = spec();
+        assert!(plan_colocation(s, s.total(), 0, true, true, &[]).is_ok());
+        let err = plan_colocation(s, s.total() - 1, 0, true, true, &[]).unwrap_err();
+        assert!(matches!(err, Error::Capacity(_)));
+    }
+
+    #[test]
+    fn transient_classes_cannot_be_offload_retained() {
+        let s = spec();
+        assert!(plan_colocation(s, s.total(), 0, true, false, &[AllocClass::KvCache]).is_err());
+    }
+
+    #[test]
+    fn non_colocated_checks_each_role() {
+        let s = spec();
+        // trainer role needs 160, generator 128
+        assert!(plan_colocation(s, 160 * MB, 0, false, false, &[]).is_ok());
+        assert!(plan_colocation(s, 130 * MB, 0, false, false, &[]).is_err());
+    }
+
+    #[test]
+    fn auto_cap_admits_its_own_plan() {
+        let s = spec();
+        let off = [AllocClass::Grads, AllocClass::OptimState];
+        for (colo, conc) in [(true, false), (true, true), (false, false)] {
+            let cap = auto_device_cap(&s, colo, conc, &off, 0.25);
+            let plan = plan_colocation(s, cap, u64::MAX, colo, conc, &off).unwrap();
+            assert!(plan.max_phase_device_bytes() <= cap);
+        }
+    }
+
+    #[test]
+    fn des_costs_follow_flip_bytes() {
+        let s = spec();
+        let plan = plan_colocation(
+            s,
+            160 * MB,
+            256 * MB,
+            true,
+            false,
+            &[AllocClass::Grads, AllocClass::OptimState],
+        )
+        .unwrap();
+        let model = DdmaModel::calibrated();
+        let (d2h, h2d) = plan.des_offload_costs(&model, 4);
+        // 64 MB over the ~64 GB/s host link: ~1 ms either way
+        assert!(d2h > 0.0 && h2d > 0.0);
+        assert!((d2h - h2d).abs() < 1e-9, "symmetric flip volumes");
+        assert!(d2h < 0.1, "64 MB must not cost more than 100 ms: {d2h}");
+    }
+}

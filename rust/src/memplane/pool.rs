@@ -1,0 +1,389 @@
+//! Per-rank memory pools with tracked allocation classes and hard-capacity
+//! accounting.
+//!
+//! Every byte the colocated stack puts on a GPU belongs to one
+//! [`AllocClass`] — the paper's Table-2 memory model made explicit: trainer
+//! weights, gradients, optimizer state and activation scratch, plus the
+//! generator's KV cache. A [`MemPool`] tracks live allocations against a
+//! hard device (HBM) and host (DRAM) capacity: `acquire` on a full pool
+//! returns [`Error::Capacity`] instead of overcommitting, `release` of an
+//! unknown handle is a double-free error instead of a silent no-op. The
+//! colocation planner ([`crate::memplane::plan`]) proves a placement fits
+//! before the executor moves a byte; the pool is the runtime enforcement of
+//! that proof.
+//!
+//! [`MemSpec`] derives per-rank class sizes from the same quantities the
+//! cluster cost model uses ([`crate::simulator::hardware`]): weights are
+//! `W0/mp`, the 4x-W0 trainer footprint splits into weights + grads + two
+//! f32 optimizer moments, KV scales with decode concurrency and activation
+//! scratch with the microbatch.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::simulator::hardware::HardwareModel;
+use crate::util::error::{Error, Result};
+
+/// Tracked allocation classes (the rows of the paper's Table-2 memory
+/// model). `is_transient` classes hold scratch that is *dropped* at a phase
+/// boundary (freed and re-materialized, nothing to copy); the others hold
+/// state that must be *retained* — offloading them means a D2H copy and a
+/// later H2D prefetch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AllocClass {
+    /// model weights (needed by both trainer and generator phases)
+    Params,
+    /// gradient buffer (train phase)
+    Grads,
+    /// optimizer moments (train phase; the dominant offload payload)
+    OptimState,
+    /// generator KV cache (generate phase; transient — rebuilt per batch)
+    KvCache,
+    /// trainer activation scratch (train phase; transient)
+    ActivationSlack,
+}
+
+impl AllocClass {
+    pub const ALL: [AllocClass; 5] = [
+        AllocClass::Params,
+        AllocClass::Grads,
+        AllocClass::OptimState,
+        AllocClass::KvCache,
+        AllocClass::ActivationSlack,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AllocClass::Params => "params",
+            AllocClass::Grads => "grads",
+            AllocClass::OptimState => "optim",
+            AllocClass::KvCache => "kv",
+            AllocClass::ActivationSlack => "act",
+        }
+    }
+
+    /// Parse one class name (config/CLI): `params|grads|optim|kv|act`.
+    pub fn parse(s: &str) -> Result<AllocClass> {
+        match s.trim() {
+            "params" => Ok(AllocClass::Params),
+            "grads" => Ok(AllocClass::Grads),
+            "optim" | "optimizer" => Ok(AllocClass::OptimState),
+            "kv" | "kv_cache" => Ok(AllocClass::KvCache),
+            "act" | "activations" => Ok(AllocClass::ActivationSlack),
+            other => Err(Error::Config(format!(
+                "unknown allocation class '{other}' (use params|grads|optim|kv|act)"
+            ))),
+        }
+    }
+
+    /// Parse a comma-separated class list, e.g. `"grads,optim"`.
+    pub fn parse_list(s: &str) -> Result<Vec<AllocClass>> {
+        s.split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(AllocClass::parse)
+            .collect()
+    }
+
+    /// Transient classes are scratch: dropped (freed) when their phase
+    /// ends, re-materialized when it resumes — no transfer bytes.
+    pub fn is_transient(self) -> bool {
+        matches!(self, AllocClass::KvCache | AllocClass::ActivationSlack)
+    }
+
+    pub(crate) fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Where an allocation currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    Device,
+    Host,
+}
+
+/// Per-rank byte sizes of every allocation class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemSpec {
+    /// bytes per class, indexed by [`AllocClass::index`]
+    pub class_bytes: [u64; 5],
+}
+
+impl MemSpec {
+    pub fn new(params: u64, grads: u64, optim: u64, kv: u64, act: u64) -> MemSpec {
+        MemSpec {
+            class_bytes: [params, grads, optim, kv, act],
+        }
+    }
+
+    pub fn bytes(&self, class: AllocClass) -> u64 {
+        self.class_bytes[class.index()]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.class_bytes.iter().sum()
+    }
+
+    pub fn sum<I: IntoIterator<Item = AllocClass>>(&self, classes: I) -> u64 {
+        classes.into_iter().map(|c| self.bytes(c)).sum()
+    }
+
+    /// Per-rank spec at paper scale: the trainer's 4x-W0 footprint split
+    /// into weights (`W0/mp`) + grads (`W0/mp`) + two f32 optimizer
+    /// moments (`2*W0/mp`), the generator KV cache at decode concurrency
+    /// `bg`, and activation scratch at microbatch `bt` — all sharded over
+    /// the model-parallel degree `mp`.
+    pub fn paper_rank(hw: &HardwareModel, mp: f64, bt: f64, bg: f64) -> MemSpec {
+        let per = |b: f64| (b / mp).ceil().max(0.0) as u64;
+        MemSpec::new(
+            per(hw.w0_bytes()),
+            per(hw.w0_bytes()),
+            per(2.0 * hw.w0_bytes()),
+            per(hw.kv_bytes_per_seq() * bg),
+            per(hw.act_bytes_per_sample() * bt),
+        )
+    }
+
+    /// Testbed-scale spec derived from the artifact's flat f32 parameter
+    /// vector: weights + grads at 4 bytes/param, two f32 optimizer moments,
+    /// KV proportional to the decode batch and activations to the train
+    /// batch. Small by construction — the coordinator materializes these
+    /// arenas for real.
+    pub fn testbed(num_params: usize, train_batch: usize, gen_batch: usize) -> MemSpec {
+        let p = num_params as u64 * 4;
+        MemSpec::new(
+            p,
+            p,
+            2 * p,
+            (p / 2).max(1) * gen_batch.max(1) as u64 / 4,
+            (p / 2).max(1) * train_batch.max(1) as u64 / 4,
+        )
+    }
+}
+
+/// Opaque handle to one live allocation (release exactly once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct AllocId(u64);
+
+#[derive(Debug, Clone, Copy)]
+struct Allocation {
+    class: AllocClass,
+    bytes: u64,
+    placement: Placement,
+}
+
+#[derive(Debug, Default)]
+struct PoolState {
+    device_used: u64,
+    host_used: u64,
+    next_id: u64,
+    live: BTreeMap<u64, Allocation>,
+}
+
+/// Point-in-time usage snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolUsage {
+    pub device_used: u64,
+    pub host_used: u64,
+    pub live_allocs: usize,
+}
+
+/// One rank's memory accountant: hard device + host capacities, tracked
+/// live allocations. All methods are thread-safe (the offload executor's
+/// worker and lease holders share one pool).
+#[derive(Debug)]
+pub struct MemPool {
+    pub device_cap: u64,
+    pub host_cap: u64,
+    state: Mutex<PoolState>,
+}
+
+impl MemPool {
+    pub fn new(device_cap: u64, host_cap: u64) -> MemPool {
+        MemPool {
+            device_cap,
+            host_cap,
+            state: Mutex::new(PoolState::default()),
+        }
+    }
+
+    /// Reserve `bytes` for `class` at `placement`. Hard-capacity: a pool
+    /// that cannot fit the request errors instead of overcommitting.
+    pub fn acquire(&self, class: AllocClass, bytes: u64, placement: Placement) -> Result<AllocId> {
+        let mut st = self.state.lock().unwrap();
+        let (used, cap, where_) = match placement {
+            Placement::Device => (&mut st.device_used, self.device_cap, "device"),
+            Placement::Host => (&mut st.host_used, self.host_cap, "host"),
+        };
+        if used.saturating_add(bytes) > cap {
+            return Err(Error::Capacity(format!(
+                "{} pool overflow acquiring {bytes} B for {}: {} of {cap} B in use",
+                where_,
+                class.name(),
+                *used,
+            )));
+        }
+        *used += bytes;
+        let id = st.next_id;
+        st.next_id += 1;
+        st.live.insert(
+            id,
+            Allocation {
+                class,
+                bytes,
+                placement,
+            },
+        );
+        Ok(AllocId(id))
+    }
+
+    /// Free a live allocation. Releasing an unknown (already-freed) handle
+    /// is a double-free error.
+    pub fn release(&self, id: AllocId) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let alloc = st.live.remove(&id.0).ok_or_else(|| {
+            Error::Capacity(format!("double free: allocation {} is not live", id.0))
+        })?;
+        match alloc.placement {
+            Placement::Device => st.device_used -= alloc.bytes,
+            Placement::Host => st.host_used -= alloc.bytes,
+        }
+        Ok(())
+    }
+
+    /// Move a live allocation to the other tier (the accounting half of an
+    /// offload/prefetch: capacity is checked on the target side first, so a
+    /// relocation can never overcommit either tier).
+    pub fn relocate(&self, id: AllocId, to: Placement) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let alloc = *st.live.get(&id.0).ok_or_else(|| {
+            Error::Capacity(format!("relocate of dead allocation {}", id.0))
+        })?;
+        if alloc.placement == to {
+            return Ok(());
+        }
+        let (used, cap, where_) = match to {
+            Placement::Device => (st.device_used, self.device_cap, "device"),
+            Placement::Host => (st.host_used, self.host_cap, "host"),
+        };
+        if used.saturating_add(alloc.bytes) > cap {
+            return Err(Error::Capacity(format!(
+                "{} pool overflow relocating {} B of {}: {} of {cap} B in use",
+                where_,
+                alloc.bytes,
+                alloc.class.name(),
+                used,
+            )));
+        }
+        match alloc.placement {
+            Placement::Device => st.device_used -= alloc.bytes,
+            Placement::Host => st.host_used -= alloc.bytes,
+        }
+        match to {
+            Placement::Device => st.device_used += alloc.bytes,
+            Placement::Host => st.host_used += alloc.bytes,
+        }
+        st.live.get_mut(&id.0).unwrap().placement = to;
+        Ok(())
+    }
+
+    pub fn usage(&self) -> PoolUsage {
+        let st = self.state.lock().unwrap();
+        PoolUsage {
+            device_used: st.device_used,
+            host_used: st.host_used,
+            live_allocs: st.live.len(),
+        }
+    }
+
+    pub fn device_free(&self) -> u64 {
+        self.device_cap - self.state.lock().unwrap().device_used
+    }
+
+    /// Device bytes currently held by `class`.
+    pub fn device_bytes_of(&self, class: AllocClass) -> u64 {
+        let st = self.state.lock().unwrap();
+        st.live
+            .values()
+            .filter(|a| a.class == class && a.placement == Placement::Device)
+            .map(|a| a.bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_roundtrip() {
+        let pool = MemPool::new(100, 50);
+        let a = pool.acquire(AllocClass::Params, 60, Placement::Device).unwrap();
+        let b = pool.acquire(AllocClass::Grads, 40, Placement::Device).unwrap();
+        assert_eq!(pool.usage().device_used, 100);
+        assert!(pool
+            .acquire(AllocClass::KvCache, 1, Placement::Device)
+            .is_err());
+        pool.release(a).unwrap();
+        assert_eq!(pool.usage().device_used, 40);
+        pool.release(b).unwrap();
+        assert_eq!(pool.usage(), PoolUsage::default());
+    }
+
+    #[test]
+    fn double_free_is_an_error() {
+        let pool = MemPool::new(10, 10);
+        let a = pool.acquire(AllocClass::Params, 5, Placement::Host).unwrap();
+        pool.release(a).unwrap();
+        assert!(matches!(pool.release(a), Err(Error::Capacity(_))));
+    }
+
+    #[test]
+    fn relocate_checks_target_capacity() {
+        let pool = MemPool::new(100, 30);
+        let a = pool
+            .acquire(AllocClass::OptimState, 60, Placement::Device)
+            .unwrap();
+        // host side only holds 30 — relocation must refuse, leaving the
+        // allocation untouched on device
+        assert!(pool.relocate(a, Placement::Host).is_err());
+        assert_eq!(pool.usage().device_used, 60);
+        assert_eq!(pool.usage().host_used, 0);
+        let small = pool
+            .acquire(AllocClass::Grads, 20, Placement::Device)
+            .unwrap();
+        pool.relocate(small, Placement::Host).unwrap();
+        assert_eq!(pool.usage().device_used, 60);
+        assert_eq!(pool.usage().host_used, 20);
+        assert_eq!(pool.device_bytes_of(AllocClass::Grads), 0);
+        pool.release(a).unwrap();
+        pool.release(small).unwrap();
+    }
+
+    #[test]
+    fn class_names_roundtrip() {
+        for c in AllocClass::ALL {
+            assert_eq!(AllocClass::parse(c.name()).unwrap(), c);
+        }
+        assert!(AllocClass::parse("hbm").is_err());
+        assert_eq!(
+            AllocClass::parse_list("grads, optim").unwrap(),
+            vec![AllocClass::Grads, AllocClass::OptimState]
+        );
+        assert!(AllocClass::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn paper_rank_spec_matches_4x_w0() {
+        let hw = HardwareModel::paper_scale(crate::simulator::hardware::LLAMA_MODELS[1]);
+        let spec = MemSpec::paper_rank(&hw, 8.0, 8.0, 16.0);
+        // weights + grads + optim = 4 * W0 / mp (the paper's trainer row)
+        let four_w0 = spec.bytes(AllocClass::Params)
+            + spec.bytes(AllocClass::Grads)
+            + spec.bytes(AllocClass::OptimState);
+        let want = (4.0 * hw.w0_bytes() / 8.0) as u64;
+        assert!((four_w0 as i64 - want as i64).unsigned_abs() <= 4);
+        assert!(spec.bytes(AllocClass::KvCache) > 0);
+        assert!(spec.bytes(AllocClass::ActivationSlack) > 0);
+    }
+}

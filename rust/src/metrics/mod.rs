@@ -34,6 +34,19 @@ pub fn print_report(r: &RunReport) {
          generators stalled {:.3}s over {} fenced swaps",
         r.ddma_publish_blocked_secs, r.ddma_coalesced_publishes, r.gen_swap_stall_secs, r.gen_swaps
     );
+    // only worth a line when the plane actually moved state (accounting-
+    // only planes accrue lease-entry nanos but transfer nothing)
+    if r.offload_d2h_bytes + r.offload_h2d_bytes > 0 {
+        println!(
+            "memplane: {:.1} MB offloaded, {:.1} MB prefetched, leases \
+             blocked {:.3}s ({} prefetch hits, {} targets superseded)",
+            r.offload_d2h_bytes as f64 / 1e6,
+            r.offload_h2d_bytes as f64 / 1e6,
+            r.offload_wait_secs,
+            r.offload_prefetch_hits,
+            r.offload_superseded
+        );
+    }
     if let Some(dp) = &r.dataplane {
         println!("{}", dp.summary());
         let hist: Vec<String> = dp
@@ -118,6 +131,23 @@ pub fn report_json(r: &RunReport) -> Value {
         (
             "trainer_recv_blocked_secs",
             Value::num(r.trainer_recv_blocked_secs),
+        ),
+        (
+            "offload_d2h_bytes",
+            Value::num(r.offload_d2h_bytes as f64),
+        ),
+        (
+            "offload_h2d_bytes",
+            Value::num(r.offload_h2d_bytes as f64),
+        ),
+        ("offload_wait_secs", Value::num(r.offload_wait_secs)),
+        (
+            "offload_prefetch_hits",
+            Value::num(r.offload_prefetch_hits as f64),
+        ),
+        (
+            "offload_superseded",
+            Value::num(r.offload_superseded as f64),
         ),
         (
             "dataplane",

@@ -50,6 +50,18 @@ pub struct DesConfig {
     /// link-group workers instead). The sync architecture cannot benefit —
     /// its next generation batch needs the new weights before it starts.
     pub background_publish: bool,
+    /// colocated offloading (sync/colocated architecture only): D2H
+    /// seconds to swap trainer state to host when generation begins — cost
+    /// a [`crate::memplane::plan::ColocationPlan::des_offload_costs`]
+    /// derivation on the calibrated PCIe link; 0 disables
+    pub offload_d2h_secs: f64,
+    /// H2D seconds to prefetch the state back before training resumes
+    pub offload_h2d_secs: f64,
+    /// background offload executor: both transfers overlap the generation
+    /// window they bracket, so the step pays only the part generation is
+    /// too short to hide (the memplane's hint-prefetch protocol). Without
+    /// it every phase flip serializes the full transfer.
+    pub offload_overlap: bool,
     pub seed: u64,
 }
 
@@ -71,6 +83,9 @@ impl Default for DesConfig {
             sync_overlap: false,
             publish_block_secs: 0.0,
             background_publish: false,
+            offload_d2h_secs: 0.0,
+            offload_h2d_secs: 0.0,
+            offload_overlap: false,
             seed: 0,
         }
     }
@@ -183,10 +198,27 @@ fn trainer_publish_stall(cfg: &DesConfig) -> f64 {
     }
 }
 
+/// Colocated-offload stall per step in the sequential architecture: the
+/// D2H swap-out brackets the head of the generation window and the H2D
+/// prefetch its tail. Overlapped (background executor + hint prefetch),
+/// the step pays only what generation is too short to hide; eager, every
+/// flip serializes its full transfer.
+fn colocated_offload_stall(cfg: &DesConfig, gen_secs: f64) -> f64 {
+    let total = cfg.offload_d2h_secs + cfg.offload_h2d_secs;
+    if cfg.offload_overlap {
+        (total - gen_secs).max(0.0)
+    } else {
+        total
+    }
+}
+
 /// Synchronous architecture (Fig. 2a): each step is gen -> score -> train on
 /// the same clock; generator idles during training and vice versa. The
 /// weight reload (`weight_sync_secs`) cannot overlap anything — the next
-/// batch needs the new weights before it starts.
+/// batch needs the new weights before it starts. Colocated offloading adds
+/// its flip transfers around the generation window (timeline segments:
+/// offload at its head, prefetch at its tail), hidden behind decode when
+/// `offload_overlap` is set.
 pub fn simulate_sync(cfg: &DesConfig) -> DesReport {
     let mut rng = Rng::new(cfg.seed);
     let mut t = 0.0f64;
@@ -196,7 +228,7 @@ pub fn simulate_sync(cfg: &DesConfig) -> DesReport {
     let mut carry = Vec::new();
     for _ in 0..cfg.steps {
         let g = batch_generation_time(&mut rng, cfg, &mut carry);
-        t += g;
+        t += g + colocated_offload_stall(cfg, g);
         gen_busy += g;
         t += cfg.score_secs;
         t += cfg.train_secs;
@@ -511,6 +543,47 @@ mod tests {
         assert!(
             (gap - 2.0 * cfg.steps as f64).abs() < 1e-6,
             "publish block should cost steps * block_secs in sync, got {gap}"
+        );
+    }
+
+    #[test]
+    fn overlapped_offload_hides_behind_generation() {
+        let base = DesConfig {
+            offload_d2h_secs: 3.0,
+            offload_h2d_secs: 3.0,
+            ..DesConfig::default()
+        };
+        let eager = simulate_sync(&base);
+        let overlapped = simulate_sync(&DesConfig {
+            offload_overlap: true,
+            ..base.clone()
+        });
+        let free = simulate_sync(&DesConfig {
+            offload_d2h_secs: 0.0,
+            offload_h2d_secs: 0.0,
+            ..base.clone()
+        });
+        // eager pays steps * (d2h + h2d) in full
+        let gap = eager.total_secs - free.total_secs;
+        assert!((gap - 6.0 * base.steps as f64).abs() < 1e-6, "{gap}");
+        // generation (~32 s/step) dwarfs the 6 s transfer: fully hidden
+        assert_eq!(overlapped.total_secs, free.total_secs);
+        // transfers larger than the generation window pay only the excess
+        let huge = DesConfig {
+            offload_d2h_secs: 200.0,
+            offload_h2d_secs: 200.0,
+            offload_overlap: true,
+            ..base
+        };
+        let partially = simulate_sync(&huge);
+        assert!(partially.total_secs > free.total_secs);
+        assert!(
+            partially.total_secs
+                < simulate_sync(&DesConfig {
+                    offload_overlap: false,
+                    ..huge
+                })
+                .total_secs
         );
     }
 

@@ -20,6 +20,9 @@ pub enum Error {
     Coordinator(String),
     ChannelClosed(String),
     Cli(String),
+    /// A memory placement exceeds a hard pool capacity (the memplane never
+    /// silently overcommits — infeasible colocations must fail loudly).
+    Capacity(String),
     Msg(String),
 }
 
@@ -44,6 +47,7 @@ impl fmt::Display for Error {
             Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
             Error::ChannelClosed(s) => write!(f, "channel closed: {s}"),
             Error::Cli(s) => write!(f, "cli error: {s}"),
+            Error::Capacity(s) => write!(f, "capacity error: {s}"),
             Error::Msg(s) => write!(f, "{s}"),
         }
     }

@@ -70,6 +70,8 @@ pub struct SyncMetrics {
     pub delta_full_resends: AtomicU64,
     /// sparse delta packets shipped
     pub sparse_packets: AtomicU64,
+    /// zero-run-encoded dense-XOR delta packets shipped
+    pub rle_packets: AtomicU64,
     /// nanoseconds worker threads spent streaming (background mode)
     pub stream_nanos: AtomicU64,
 }
@@ -148,8 +150,14 @@ pub(crate) fn fan_out_op(
         // first publish of a delta plane has no base yet -> full f32
         _ => encode_shard(data, version, op, encoding),
     };
-    if matches!(pkt.payload, ShardPayload::SparseDelta { .. }) {
-        metrics.sparse_packets.fetch_add(1, Ordering::Relaxed);
+    match pkt.payload {
+        ShardPayload::SparseDelta { .. } => {
+            metrics.sparse_packets.fetch_add(1, Ordering::Relaxed);
+        }
+        ShardPayload::RleDelta { .. } => {
+            metrics.rle_packets.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {}
     }
     let mut bytes = pkt.payload_bytes();
     let mut full_resend: Option<ShardPacket> = None;
@@ -207,12 +215,15 @@ impl StreamExecutor {
         subscribers: Arc<Mutex<Vec<Arc<GeneratorSlot>>>>,
         metrics: Arc<SyncMetrics>,
     ) -> StreamExecutor {
-        let want = if link_groups == 0 {
-            plan.n_dst.max(1)
+        // 0 = auto: one group per destination rank (the original
+        // rank-modulo behaviour, trivially exact at n = n_dst); an explicit
+        // count uses the bandwidth-aware LPT partition so worker streams
+        // stay element-balanced under skewed destination layouts.
+        let groups = if link_groups == 0 {
+            plan.link_groups(plan.n_dst.max(1))
         } else {
-            link_groups
+            plan.link_groups_balanced(link_groups)
         };
-        let groups = plan.link_groups(want);
         let n = groups.len();
         let inner = Arc::new(ExecInner {
             expected_ops: plan.ops.len(),

@@ -21,8 +21,12 @@
 //!   generator-side TP (per-tensor split) tilings of the flat vector.
 //! * [`plan`] — [`plan_reshard`]: the minimal per-link [`TransferOp`]
 //!   schedule between any two layouts (interval intersection sweep), plus
-//!   [`ReshardPlan::link_groups`], the per-destination-rank partition the
-//!   background executor threads over.
+//!   the link-group partitions the background executor threads over:
+//!   [`ReshardPlan::link_groups`] (per-destination-rank, the
+//!   `sync_link_groups = 0` auto default) and
+//!   [`ReshardPlan::link_groups_balanced`] (bandwidth-aware greedy
+//!   largest-first over cumulative link volumes, used for explicit group
+//!   counts so skewed destination layouts still load workers evenly).
 //! * [`transfer`] — [`ShardPacket`] encode/apply with [`ShardEncoding`]:
 //!   f32, int8-per-shard (via `model::quant`, dequantized at attach, error
 //!   within [`crate::model::int8_error_bound`]), exact delta (sparse
@@ -58,9 +62,9 @@ pub mod transfer;
 
 pub use executor::{StreamExecutor, SyncMetrics};
 pub use layout::{contiguous_entries, even_entries, Layout, LayoutKind, ShardInterval};
-pub use plan::{plan_reshard, ReshardPlan, TransferOp};
+pub use plan::{group_balance_ratio, plan_reshard, ReshardPlan, TransferOp};
 pub use swap::{GeneratorSlot, RecvOutcome};
 pub use transfer::{
-    apply_packet, encode_shard, encode_shard_delta, run_transfer, run_transfer_delta,
-    ShardEncoding, ShardPacket, ShardPayload, TransferTiming,
+    apply_packet, encode_shard, encode_shard_delta, rle_encode_xor, run_transfer,
+    run_transfer_delta, ShardEncoding, ShardPacket, ShardPayload, TransferTiming,
 };

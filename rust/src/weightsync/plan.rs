@@ -86,6 +86,10 @@ impl ReshardPlan {
     /// analogue of one transfer thread per NVLink/IB link — and groups stay
     /// element-balanced for balanced destination layouts. `n_groups` is
     /// clamped to [1, n_dst]; empty groups are dropped.
+    ///
+    /// This is the `sync_link_groups = 0` (auto) behaviour; an explicit
+    /// group count routes through the bandwidth-aware
+    /// [`ReshardPlan::link_groups_balanced`] instead.
     pub fn link_groups(&self, n_groups: usize) -> Vec<Vec<TransferOp>> {
         let n = n_groups.clamp(1, self.n_dst.max(1));
         let mut groups: Vec<Vec<TransferOp>> = vec![Vec::new(); n];
@@ -97,6 +101,63 @@ impl ReshardPlan {
             groups.push(Vec::new()); // degenerate empty plan: one idle group
         }
         groups
+    }
+
+    /// Bandwidth-aware link-group partition: destination ranks are weighed
+    /// by their cumulative [`ReshardPlan::link_elems`] volume and assigned
+    /// greedy largest-first to the currently lightest group (LPT
+    /// scheduling), so worker streams stay element-balanced even when the
+    /// destination layout is skewed — rank-modulo grouping can put every
+    /// heavy rank in the same group and leave other workers idle. Like
+    /// [`ReshardPlan::link_groups`], a destination rank's ops never split
+    /// across groups (one stream per receiver), and ops keep their plan
+    /// order within a group.
+    pub fn link_groups_balanced(&self, n_groups: usize) -> Vec<Vec<TransferOp>> {
+        let n = n_groups.clamp(1, self.n_dst.max(1));
+        // cumulative elements per destination rank
+        let mut per_dst: BTreeMap<usize, usize> = BTreeMap::new();
+        for op in &self.ops {
+            *per_dst.entry(op.dst).or_insert(0) += op.len;
+        }
+        // largest destination first onto the lightest group
+        let mut dsts: Vec<(usize, usize)> = per_dst.into_iter().collect();
+        dsts.sort_by_key(|(dst, elems)| (std::cmp::Reverse(*elems), *dst));
+        let mut load = vec![0usize; n];
+        let mut home: BTreeMap<usize, usize> = BTreeMap::new();
+        for (dst, elems) in dsts {
+            let g = (0..n).min_by_key(|g| load[*g]).unwrap();
+            load[g] += elems;
+            home.insert(dst, g);
+        }
+        let mut groups: Vec<Vec<TransferOp>> = vec![Vec::new(); n];
+        for &op in &self.ops {
+            groups[home[&op.dst]].push(op);
+        }
+        groups.retain(|g| !g.is_empty());
+        if groups.is_empty() {
+            groups.push(Vec::new()); // degenerate empty plan: one idle group
+        }
+        groups
+    }
+}
+
+/// Max-over-min element load of a grouping (1.0 = perfectly balanced);
+/// groups moving zero elements count as empty and make the ratio infinite.
+pub fn group_balance_ratio(groups: &[Vec<TransferOp>]) -> f64 {
+    let loads: Vec<usize> = groups
+        .iter()
+        .map(|g| g.iter().map(|o| o.len).sum())
+        .collect();
+    let max = loads.iter().copied().max().unwrap_or(0) as f64;
+    let min = loads.iter().copied().min().unwrap_or(0) as f64;
+    if min == 0.0 {
+        if max == 0.0 {
+            1.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        max / min
     }
 }
 
@@ -192,6 +253,52 @@ mod tests {
     #[test]
     fn size_mismatch_rejected() {
         assert!(plan_reshard(&Layout::fsdp(10, 2), &Layout::fsdp(12, 2)).is_err());
+    }
+
+    #[test]
+    fn balanced_groups_beat_rank_modulo_on_skewed_layouts() {
+        use crate::weightsync::layout::{LayoutKind, ShardInterval};
+        // destination ranks with very uneven volumes: 700 / 50 / 200 / 50
+        let dst = Layout {
+            kind: LayoutKind::Tp,
+            n_ranks: 4,
+            num_params: 1000,
+            shards: vec![
+                ShardInterval { rank: 0, start: 0, len: 700 },
+                ShardInterval { rank: 1, start: 700, len: 50 },
+                ShardInterval { rank: 2, start: 750, len: 200 },
+                ShardInterval { rank: 3, start: 950, len: 50 },
+            ],
+        };
+        let p = plan_reshard(&Layout::fsdp(1000, 4), &dst).unwrap();
+        for n in [2usize, 3] {
+            let modulo = p.link_groups(n);
+            let balanced = p.link_groups_balanced(n);
+            // both are exact partitions that never split a destination
+            for groups in [&modulo, &balanced] {
+                let total: usize = groups.iter().map(|g| g.len()).sum();
+                assert_eq!(total, p.ops.len());
+                let mut home: BTreeMap<usize, usize> = BTreeMap::new();
+                for (gi, g) in groups.iter().enumerate() {
+                    for op in g {
+                        assert_eq!(*home.entry(op.dst).or_insert(gi), gi);
+                    }
+                }
+            }
+            let r_mod = group_balance_ratio(&modulo);
+            let r_bal = group_balance_ratio(&balanced);
+            assert!(
+                r_bal <= r_mod,
+                "n={n}: balanced ratio {r_bal} worse than modulo {r_mod}"
+            );
+        }
+        // the 2-group case is where modulo hurts most: ranks 0+2 share a
+        // worker (900 elems) while 1+3 (100) idles — LPT must do strictly
+        // better
+        let r_mod = group_balance_ratio(&p.link_groups(2));
+        let r_bal = group_balance_ratio(&p.link_groups_balanced(2));
+        assert!(r_bal < r_mod, "balanced {r_bal} !< modulo {r_mod}");
+        assert!(r_bal <= 3.0, "700/300 split expected, got {r_bal}");
     }
 
     #[test]

@@ -13,15 +13,19 @@
 //!   dequantized at attach, error within [`crate::model::int8_error_bound`].
 //! * `Delta` — encoded against a *base* version (the previously published
 //!   snapshot). Changed elements (bitwise `f32::to_bits` comparison) ship as
-//!   sparse index+value pairs when sparse enough, otherwise as a dense
-//!   bitwise-XOR delta. Both reconstruct **bit-exactly** — the XOR form by
-//!   construction, the sparse form because unchanged elements are, by
-//!   definition of the changed set, already identical in the base. Delta
-//!   payloads carry `base_version`; a receiver whose staging buffer was not
-//!   seeded from exactly that version must reject the packet (the
-//!   *base-version fence*, enforced by
-//!   [`crate::weightsync::GeneratorSlot::recv`]) and be re-sent the shard
-//!   as full f32.
+//!   sparse index+value pairs when sparse enough; past the sparse
+//!   break-even the XOR word stream is zero-run-length encoded
+//!   ([`ShardPayload::RleDelta`]: `(zero_run, literal_count, literals…)`
+//!   token groups — clustered updates compress to their literal words
+//!   while the untouched regions collapse to a single counter), falling
+//!   back to the raw dense XOR only when RLE would not be smaller. All
+//!   three reconstruct **bit-exactly** — the XOR forms by construction, the
+//!   sparse form because unchanged elements are, by definition of the
+//!   changed set, already identical in the base. Delta payloads carry
+//!   `base_version`; a receiver whose staging buffer was not seeded from
+//!   exactly that version must reject the packet (the *base-version
+//!   fence*, enforced by [`crate::weightsync::GeneratorSlot::recv`]) and
+//!   be re-sent the shard as full f32.
 //! * `TopK` — sparse delta capped at the k largest-magnitude changes per
 //!   shard; dropped changes keep their base value, so the reconstruction
 //!   error is bounded by the largest dropped |update| (returned by
@@ -43,6 +47,13 @@ use crate::weightsync::plan::{ReshardPlan, TransferOp};
 /// Sparse index+value packing costs 8 bytes/changed elem vs 4 bytes/elem
 /// dense, so past half density a sparse packet is pure overhead.
 pub const SPARSE_BREAK_EVEN_DENSITY: f64 = 0.5;
+
+/// Below this density the sparse packing is at worst 2 bytes per element
+/// of the op and scattered updates dominate, so the exact encoder skips
+/// computing the XOR/RLE candidates (an extra O(len) pass that clustered
+/// updates would need to amortize); at or above it, the smallest of
+/// sparse / RLE / dense wins.
+pub const RLE_CANDIDATE_DENSITY: f64 = 0.25;
 
 /// Wire encoding for shard payloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,6 +102,33 @@ pub enum ShardPayload {
     /// bitwise XOR of the op's interval vs `base_version`; applying it to
     /// exactly that base reproduces the new bits verbatim
     DenseDelta { base_version: u64, xor: Vec<u32> },
+    /// zero-run-length-encoded XOR stream: repeated `(zero_run,
+    /// literal_count, literals…)` token groups over the op's XOR words.
+    /// Chosen over [`ShardPayload::DenseDelta`] whenever it is smaller
+    /// (clustered updates); identical reconstruction guarantees
+    RleDelta { base_version: u64, runs: Vec<u32> },
+}
+
+/// Zero-run encode an XOR word stream into `(zero_run, literal_count,
+/// literals…)` token groups. Unchanged (all-zero) stretches collapse to a
+/// single counter; a trailing all-zero stretch encodes as `(n, 0)`.
+pub fn rle_encode_xor(xor: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < xor.len() {
+        let z0 = i;
+        while i < xor.len() && xor[i] == 0 {
+            i += 1;
+        }
+        let lit0 = i;
+        while i < xor.len() && xor[i] != 0 {
+            i += 1;
+        }
+        out.push((lit0 - z0) as u32);
+        out.push((i - lit0) as u32);
+        out.extend_from_slice(&xor[lit0..i]);
+    }
+    out
 }
 
 impl ShardPacket {
@@ -101,6 +139,7 @@ impl ShardPacket {
             ShardPayload::Int8(q) => q.data.len() + q.scales.len() * 4,
             ShardPayload::SparseDelta { idx, val, .. } => idx.len() * 4 + val.len() * 4,
             ShardPayload::DenseDelta { xor, .. } => xor.len() * 4,
+            ShardPayload::RleDelta { runs, .. } => runs.len() * 4,
         }
     }
 
@@ -109,7 +148,8 @@ impl ShardPacket {
     pub fn base_version(&self) -> Option<u64> {
         match &self.payload {
             ShardPayload::SparseDelta { base_version, .. }
-            | ShardPayload::DenseDelta { base_version, .. } => Some(*base_version),
+            | ShardPayload::DenseDelta { base_version, .. }
+            | ShardPayload::RleDelta { base_version, .. } => Some(*base_version),
             _ => None,
         }
     }
@@ -206,28 +246,42 @@ pub fn encode_shard_delta(
     // 8 bytes per sparse pair vs 4 per dense elem: sparse wins while the
     // changed density stays under SPARSE_BREAK_EVEN_DENSITY
     let density = changed.len() as f64 / op.len.max(1) as f64;
-    let payload = if density < SPARSE_BREAK_EVEN_DENSITY {
-        ShardPayload::SparseDelta {
-            base_version,
-            idx: changed.iter().map(|c| c.0).collect(),
-            val: changed.iter().map(|c| c.1).collect(),
+    let sparse = |changed: &[(u32, f32, f32)]| ShardPayload::SparseDelta {
+        base_version,
+        idx: changed.iter().map(|c| c.0).collect(),
+        val: changed.iter().map(|c| c.1).collect(),
+    };
+    let payload = if topk.is_some() {
+        if density < SPARSE_BREAK_EVEN_DENSITY {
+            sparse(&changed)
+        } else {
+            // top-k past break-even: the delta machinery buys nothing,
+            // ship the shard whole (exact, no base fence needed)
+            dropped_bound = 0.0;
+            ShardPayload::F32(chunk.to_vec())
         }
-    } else if topk.is_none() {
-        // exact mode past break-even: dense XOR keeps bit-exactness and the
-        // all-zero runs of an unchanged region (compressible on a real wire)
-        ShardPayload::DenseDelta {
-            base_version,
-            xor: chunk
-                .iter()
-                .zip(base_chunk)
-                .map(|(n, b)| n.to_bits() ^ b.to_bits())
-                .collect(),
-        }
+    } else if density < RLE_CANDIDATE_DENSITY {
+        sparse(&changed)
     } else {
-        // top-k past break-even: the delta machinery buys nothing, ship the
-        // shard whole (exact, no base fence needed)
-        dropped_bound = 0.0;
-        ShardPayload::F32(chunk.to_vec())
+        // exact mode at moderate-to-high density: smallest of sparse / RLE
+        // / dense, all bit-exact. Clustered updates make the zero-run
+        // encoding win well below the sparse break-even (one run of
+        // literals + two counters per gap); scattered ones keep sparse or,
+        // past break-even, raw dense XOR.
+        let xor: Vec<u32> = chunk
+            .iter()
+            .zip(base_chunk)
+            .map(|(n, b)| n.to_bits() ^ b.to_bits())
+            .collect();
+        let runs = rle_encode_xor(&xor);
+        let sparse_words = 2 * changed.len();
+        if sparse_words <= runs.len().min(xor.len()) {
+            sparse(&changed)
+        } else if runs.len() < xor.len() {
+            ShardPayload::RleDelta { base_version, runs }
+        } else {
+            ShardPayload::DenseDelta { base_version, xor }
+        }
     };
     (
         ShardPacket {
@@ -268,6 +322,23 @@ pub fn apply_packet(dst: &mut [f32], pkt: &ShardPacket) {
             for (out, x) in dst[range].iter_mut().zip(xor) {
                 *out = f32::from_bits(out.to_bits() ^ *x);
             }
+        }
+        ShardPayload::RleDelta { runs, .. } => {
+            // walk the token groups; skipping a zero run IS applying it
+            // (XOR with 0 is the identity)
+            let mut at = pkt.op.start;
+            let mut i = 0;
+            while i + 1 < runs.len() {
+                at += runs[i] as usize;
+                let lits = runs[i + 1] as usize;
+                for k in 0..lits {
+                    let x = runs[i + 2 + k];
+                    dst[at + k] = f32::from_bits(dst[at + k].to_bits() ^ x);
+                }
+                at += lits;
+                i += 2 + lits;
+            }
+            debug_assert!(at <= pkt.op.end());
         }
     }
 }
@@ -472,6 +543,55 @@ mod tests {
         assert_eq!(t.max_abs_err, 0.0);
         // dense XOR: same wire size as full f32, never more
         assert_eq!(t.bytes, 256 * 4);
+    }
+
+    #[test]
+    fn clustered_dense_delta_rle_compresses_and_roundtrips() {
+        // 60% of the op changes, all in one contiguous block: past the
+        // sparse break-even, but the zero runs outside the block make RLE
+        // strictly smaller than raw dense XOR
+        let base = params(500);
+        let mut new = base.clone();
+        for x in new.iter_mut().take(300) {
+            *x += 1.0;
+        }
+        let op = TransferOp {
+            src: 0,
+            dst: 0,
+            start: 0,
+            len: 500,
+        };
+        let (pkt, bound) = encode_shard_delta(&new, &base, 1, 2, op, None);
+        assert!(
+            matches!(pkt.payload, ShardPayload::RleDelta { .. }),
+            "clustered past-break-even delta must pick RLE"
+        );
+        assert_eq!(bound, 0.0);
+        assert!(
+            pkt.payload_bytes() < 500 * 4,
+            "RLE must undercut dense XOR: {} B",
+            pkt.payload_bytes()
+        );
+        let mut dst = base.clone();
+        apply_packet(&mut dst, &pkt);
+        assert!(
+            dst.iter().zip(&new).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "RLE delta must reconstruct bit-exactly"
+        );
+    }
+
+    #[test]
+    fn rle_encode_decode_edge_cases() {
+        // all zeros: one (n, 0) group
+        assert_eq!(rle_encode_xor(&[0, 0, 0]), vec![3, 0]);
+        // all literals: one (0, n) group + the words
+        assert_eq!(rle_encode_xor(&[7, 8]), vec![0, 2, 7, 8]);
+        // alternating groups, trailing zeros
+        assert_eq!(
+            rle_encode_xor(&[0, 5, 0, 0, 6, 0]),
+            vec![1, 1, 5, 2, 1, 6, 1, 0]
+        );
+        assert_eq!(rle_encode_xor(&[]), Vec::<u32>::new());
     }
 
     #[test]

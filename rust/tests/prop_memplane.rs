@@ -1,0 +1,303 @@
+//! Memory-plane invariants: pool accounting under randomized schedules,
+//! planner feasibility, and the offload executor under racing targets.
+//!
+//! * the pool never leaks, never double-frees, never overcommits — checked
+//!   against a shadow model across randomized acquire/release/relocate
+//!   sequences and across randomized phase-lease schedules on a live
+//!   plane;
+//! * the planner's proof holds at runtime: whatever the phase schedule,
+//!   device usage stays under the capacity the plan was admitted against;
+//! * the background executor converges to the planned residency set under
+//!   rapid latest-wins target flips and racing prefetch hints, without
+//!   ever tearing a shard's contents.
+
+use std::sync::atomic::Ordering;
+
+use llamarl::memplane::plan::Phase;
+use llamarl::memplane::pool::{AllocClass, AllocId, MemPool, MemSpec, Placement};
+use llamarl::memplane::{MemPlane, MemPlaneConfig};
+use llamarl::util::prop::{run_prop, Gen};
+use llamarl::Error;
+
+const MB: u64 = 1_000_000;
+
+#[test]
+fn prop_pool_accounting_matches_shadow_model() {
+    run_prop("pool_accounting", 150, |g: &mut Gen| {
+        let device_cap = g.usize(50, 400) as u64;
+        let host_cap = g.usize(50, 400) as u64;
+        let pool = MemPool::new(device_cap, host_cap);
+        // shadow model: (id, bytes, placement)
+        let mut live: Vec<(AllocId, u64, Placement)> = Vec::new();
+        let mut dead: Vec<AllocId> = Vec::new();
+        let used = |live: &Vec<(AllocId, u64, Placement)>, p: Placement| -> u64 {
+            live.iter().filter(|(_, _, q)| *q == p).map(|(_, b, _)| b).sum()
+        };
+        for _ in 0..g.usize(10, 120) {
+            match g.usize(0, 3) {
+                0 => {
+                    // acquire: must succeed exactly when it fits
+                    let bytes = g.usize(1, 120) as u64;
+                    let placement = if g.bool() { Placement::Device } else { Placement::Host };
+                    let class = *g.choice(&AllocClass::ALL);
+                    let (cap, u) = match placement {
+                        Placement::Device => (device_cap, used(&live, Placement::Device)),
+                        Placement::Host => (host_cap, used(&live, Placement::Host)),
+                    };
+                    match pool.acquire(class, bytes, placement) {
+                        Ok(id) => {
+                            assert!(u + bytes <= cap, "overcommit admitted");
+                            live.push((id, bytes, placement));
+                        }
+                        Err(e) => {
+                            assert!(u + bytes > cap, "fitting acquire refused: {e}");
+                            assert!(matches!(e, Error::Capacity(_)));
+                        }
+                    }
+                }
+                1 => {
+                    // release a live allocation, or require a double-free
+                    // error for a dead one
+                    if !live.is_empty() && g.bool() {
+                        let i = g.usize(0, live.len() - 1);
+                        let (id, _, _) = live.remove(i);
+                        pool.release(id).expect("live release");
+                        dead.push(id);
+                    } else if let Some(id) = dead.last() {
+                        assert!(
+                            matches!(pool.release(*id), Err(Error::Capacity(_))),
+                            "double free must error"
+                        );
+                    }
+                }
+                _ => {
+                    // relocate: succeeds exactly when the target tier fits
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = g.usize(0, live.len() - 1);
+                    let (id, bytes, from) = live[i];
+                    let to = match from {
+                        Placement::Device => Placement::Host,
+                        Placement::Host => Placement::Device,
+                    };
+                    let (cap, u) = match to {
+                        Placement::Device => (device_cap, used(&live, Placement::Device)),
+                        Placement::Host => (host_cap, used(&live, Placement::Host)),
+                    };
+                    match pool.relocate(id, to) {
+                        Ok(()) => {
+                            assert!(u + bytes <= cap);
+                            live[i].2 = to;
+                        }
+                        Err(_) => assert!(u + bytes > cap, "fitting relocate refused"),
+                    }
+                }
+            }
+            let usage = pool.usage();
+            assert_eq!(usage.device_used, used(&live, Placement::Device));
+            assert_eq!(usage.host_used, used(&live, Placement::Host));
+            assert_eq!(usage.live_allocs, live.len());
+        }
+        for (id, _, _) in live.drain(..) {
+            pool.release(id).unwrap();
+        }
+        assert_eq!(pool.usage().live_allocs, 0);
+        assert_eq!(pool.usage().device_used, 0);
+        assert_eq!(pool.usage().host_used, 0);
+    });
+}
+
+fn random_feasible_spec(g: &mut Gen) -> (MemSpec, u64) {
+    let spec = MemSpec::new(
+        g.usize(2, 16) as u64 * MB,
+        g.usize(2, 16) as u64 * MB,
+        g.usize(8, 32) as u64 * MB,
+        g.usize(4, 32) as u64 * MB,
+        g.usize(2, 16) as u64 * MB,
+    );
+    // between the worst phase (always feasible with offloads) and the
+    // union: sometimes tight enough to force offloading, sometimes roomy
+    let offload = [AllocClass::Grads, AllocClass::OptimState];
+    let floor = llamarl::memplane::plan::auto_device_cap(&spec, true, false, &offload, 0.0);
+    let cap = floor + (g.usize(0, 32) as u64) * MB;
+    (spec, cap)
+}
+
+#[test]
+fn prop_random_phase_schedules_never_leak_or_overcommit() {
+    run_prop("memplane_phase_schedules", 25, |g: &mut Gen| {
+        let (spec, cap) = random_feasible_spec(g);
+        let background = g.bool();
+        let plane = MemPlane::new(
+            spec,
+            &MemPlaneConfig {
+                colocate: true,
+                background,
+                device_bytes: cap,
+                host_bytes: spec.total() * 2,
+                shards_per_class: g.usize(1, 6),
+                offload_chunk_mb: 1,
+                prefetch_depth: g.usize(0, 8),
+                ..MemPlaneConfig::default()
+            },
+        )
+        .expect("cap at/above the planner floor must be feasible");
+        let phases = [Phase::Generate, Phase::Train, Phase::Sync];
+        for _ in 0..g.usize(2, 12) {
+            let p = *g.choice(&phases);
+            let lease = plane.lease(p).expect("lease");
+            if g.bool() {
+                plane.hint_next(*g.choice(&phases));
+            }
+            for c in p.required() {
+                lease.wait_class(*c).expect("required class resident");
+            }
+            assert!(plane.usage().device_used <= plane.device_cap());
+            drop(lease);
+        }
+        plane.flush().expect("converge");
+        plane.verify_integrity().expect("no torn shards");
+        let usage = plane.usage();
+        assert!(usage.device_used <= plane.device_cap());
+        // every byte of every retained class is accounted exactly once
+        // (leak or double-free would skew the total)
+        let retained: u64 = AllocClass::ALL
+            .iter()
+            .filter(|c| !c.is_transient())
+            .map(|c| spec.bytes(*c))
+            .sum();
+        assert!(usage.device_used + usage.host_used >= retained);
+        assert!(usage.device_used + usage.host_used <= spec.total());
+    });
+}
+
+#[test]
+fn stress_racing_targets_converge_to_planned_residency() {
+    let spec = MemSpec::new(8 * MB, 8 * MB, 16 * MB, 24 * MB, 8 * MB);
+    let offload = [AllocClass::Grads, AllocClass::OptimState];
+    let plane = MemPlane::new(
+        spec,
+        &MemPlaneConfig {
+            colocate: true,
+            background: true,
+            device_bytes: 48 * MB,
+            host_bytes: 128 * MB,
+            offload_classes: offload.to_vec(),
+            shards_per_class: 8,
+            offload_chunk_mb: 1,
+            prefetch_depth: 8,
+            ..MemPlaneConfig::default()
+        },
+    )
+    .unwrap();
+
+    // flipper threads: rapid full lease cycles (generate evicts optimizer,
+    // train pulls it back) with prefetch hints racing the evictions.
+    // Threads synchronize per cycle via the lease-wait fences themselves.
+    let rounds = 30;
+    let flipper = {
+        let plane = plane.clone();
+        std::thread::spawn(move || {
+            for i in 0..rounds {
+                {
+                    let g = plane.lease(Phase::Generate).expect("generate");
+                    if i % 2 == 0 {
+                        plane.hint_next(Phase::Train); // prefetch vs evict race
+                    }
+                    g.wait_shard(AllocClass::KvCache, 0).expect("kv head");
+                }
+                {
+                    let t = plane.lease(Phase::Train).expect("train");
+                    t.wait_shard(AllocClass::OptimState, 0).expect("optim head");
+                    // drop without draining the rest: the next generate
+                    // target supersedes the tail of this prefetch
+                }
+            }
+        })
+    };
+    // integrity auditor racing the transfers
+    let auditor = {
+        let plane = plane.clone();
+        std::thread::spawn(move || {
+            for _ in 0..50 {
+                plane.verify_integrity().expect("no torn shard mid-race");
+                std::thread::yield_now();
+            }
+        })
+    };
+    flipper.join().unwrap();
+    auditor.join().unwrap();
+
+    // settle on Train: the executor must converge to exactly the planned
+    // train-phase residency set
+    let t = plane.lease(Phase::Train).unwrap();
+    t.wait_class(AllocClass::OptimState).unwrap();
+    t.wait_class(AllocClass::Grads).unwrap();
+    plane.flush().unwrap();
+    for (class, frac) in plane.device_fracs() {
+        assert_eq!(frac, 1.0, "{} not fully resident after settle", class.name());
+    }
+    plane.verify_integrity().unwrap();
+    let m = plane.metrics();
+    assert!(
+        m.superseded_targets.load(Ordering::Relaxed) > 0,
+        "rapid flips must exercise latest-wins cancellation"
+    );
+    assert!(m.transferred_bytes() > 0);
+    assert!(plane.usage().device_used <= plane.device_cap());
+    drop(t);
+
+    // the planner's capacity error is a hard gate, not a warning: the same
+    // spec on a 30 MB rank must refuse to construct
+    match MemPlane::new(
+        spec,
+        &MemPlaneConfig {
+            colocate: true,
+            device_bytes: 30 * MB,
+            ..MemPlaneConfig::default()
+        },
+    ) {
+        Err(err) => assert!(matches!(err, Error::Capacity(_)), "{err}"),
+        Ok(_) => panic!("oversized colocation must not construct"),
+    }
+}
+
+#[test]
+fn concurrent_mode_is_accounting_only() {
+    let spec = MemSpec::new(4 * MB, 4 * MB, 8 * MB, 8 * MB, 4 * MB);
+    let plane = MemPlane::new(
+        spec,
+        &MemPlaneConfig {
+            colocate: true,
+            concurrent_phases: true,
+            device_bytes: spec.total() + MB,
+            ..MemPlaneConfig::default()
+        },
+    )
+    .unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let plane = plane.clone();
+            std::thread::spawn(move || {
+                let phase = if i % 2 == 0 { Phase::Generate } else { Phase::Train };
+                for _ in 0..20 {
+                    let l = plane.lease(phase).expect("lease");
+                    for c in phase.required() {
+                        l.wait_class(*c).expect("resident");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    plane.flush().unwrap();
+    assert_eq!(
+        plane.metrics().transferred_bytes(),
+        0,
+        "concurrent phases must never move state"
+    );
+    plane.verify_integrity().unwrap();
+}

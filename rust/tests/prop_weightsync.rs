@@ -158,6 +158,45 @@ fn delta_transfer_roundtrips_bit_exactly_across_sparsity() {
 }
 
 #[test]
+fn rle_delta_roundtrips_bit_exactly_across_clustered_densities() {
+    use llamarl::weightsync::{apply_packet, encode_shard_delta, ShardPayload, TransferOp};
+    run_prop("transfer_delta_rle", 150, |g| {
+        // one contiguous changed block covering 50%..~100% of the op: past
+        // the sparse break-even, where the RLE-vs-dense choice lives
+        let n = g.size(32, 600).max(32);
+        let frac = g.f64(0.5, 1.0);
+        // ceil + div_ceil floor keep the changed density at or above the
+        // sparse break-even, so the encoder is always in RLE-vs-dense land
+        let changed = ((n as f64 * frac).ceil() as usize).clamp(n.div_ceil(2), n);
+        let start = g.usize(0, n - changed);
+        let base: Vec<f32> = (0..n).map(|_| g.f64(-5.0, 5.0) as f32).collect();
+        let mut new = base.clone();
+        for x in new.iter_mut().skip(start).take(changed) {
+            *x += 1.0 + g.f64(0.0, 1.0) as f32;
+        }
+        let op = TransferOp { src: 0, dst: 0, start: 0, len: n };
+        let (pkt, bound) = encode_shard_delta(&new, &base, 4, 5, op, None);
+        assert_eq!(bound, 0.0);
+        // never more wire than raw dense XOR; strictly less whenever the
+        // zero runs outweigh the two-counter-per-run overhead
+        assert!(pkt.payload_bytes() <= n * 4);
+        if changed + 4 < n {
+            assert!(
+                matches!(pkt.payload, ShardPayload::RleDelta { .. }),
+                "clustered block of {changed}/{n} must zero-run encode"
+            );
+            assert!(pkt.payload_bytes() < n * 4);
+        }
+        let mut out = base.clone();
+        apply_packet(&mut out, &pkt);
+        assert!(
+            out.iter().zip(&new).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "RLE reconstruction not bit-exact ({changed}/{n} changed at {start})"
+        );
+    });
+}
+
+#[test]
 fn topk_transfer_error_within_bound_across_sparsity() {
     run_prop("transfer_topk_bound", 120, |g| {
         let (src, dst, n) = random_layout_pair(g);

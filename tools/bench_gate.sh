@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Bench-regression gate for the weight-sync plane.
+# Bench-regression gate for the weight-sync plane and the offloading
+# memory plane.
 #
 # Compares the freshly-measured target/BENCH_weightsync.json (written by
 # `cargo bench --bench weightsync_overlap`) against the committed baseline
@@ -7,9 +8,10 @@
 #
 #   * shape checks (booleans) must hold outright: sharded+overlapped stall
 #     strictly below monolithic, quantized round-trip within bound, delta
-#     streams bit-exact, top-k within its cumulative bound, and the
-#     acceptance floor that background publish blocked time is >= 5x below
-#     the inline fan-out;
+#     streams bit-exact (incl. the zero-run-encoded XOR wire format, which
+#     must also undercut the full-f32 payload on clustered updates), top-k
+#     within its cumulative bound, and the acceptance floor that background
+#     publish blocked time is >= 5x below the inline fan-out;
 #   * the two headline ratios — overlap_stall_speedup (monolithic stall /
 #     sharded+overlapped stall) and publish_blocked_speedup (inline publish
 #     blocked / background publish blocked) — must not regress more than
@@ -17,12 +19,20 @@
 #     rather than raw seconds so the gate is stable across machines; the
 #     raw numbers ride along in the JSON artifact for inspection.
 #
+# When the committed BENCH_offload.json baseline exists, the memplane bench
+# summary (target/BENCH_offload.json, written by `cargo bench --bench
+# offload_overlap`) is gated the same way: shape checks (overlapped
+# prefetch hides >= 70% of the eager transfer time, oversized colocations
+# raise capacity errors, shard integrity holds, colocated arms move the
+# full offload volume) plus the prefetch_hidden_frac ratio with an
+# absolute 0.7 floor.
+#
 # Usage: tools/bench_gate.sh [current.json] [baseline.json]
 # Env:   BENCH_GATE_TOL=0.20   fractional allowed regression on ratios
 #
 # Wired into CI (.github/workflows/ci.yml bench-smoke job) and
-# `./verify.sh --bench`. Refresh the baseline by copying a trusted run's
-# target/BENCH_weightsync.json over the repo-root file.
+# `./verify.sh --bench`. Refresh a baseline by copying a trusted run's
+# target/BENCH_*.json over the matching repo-root file.
 
 set -uo pipefail
 cd "$(dirname "$0")/.."
@@ -91,9 +101,33 @@ require_true stall_strictly_lower
 require_true quant_within_bound
 require_true publish_blocked_5x
 require_true delta_exact
+require_true rle_below_full
 require_true topk_within_bound
 require_ratio overlap_stall_speedup
 require_ratio publish_blocked_speedup 5
+
+# --- memplane offload bench (gated once its baseline is committed) ---
+OFF_CUR="${BENCH_OFFLOAD_CUR:-target/BENCH_offload.json}"
+OFF_BASE="${BENCH_OFFLOAD_BASE:-BENCH_offload.json}"
+if [ -f "$OFF_BASE" ]; then
+    if [ ! -f "$OFF_CUR" ]; then
+        echo "bench_gate: FAIL — offload summary $OFF_CUR missing (run \
+cargo bench --bench offload_overlap first)"
+        fail=1
+    else
+        echo "== bench_gate: $OFF_CUR vs $OFF_BASE (tol ${TOL}) =="
+        CUR="$OFF_CUR"
+        BASE="$OFF_BASE"
+        require_true prefetch_hides_70pct
+        require_true capacity_error_raised
+        require_true integrity_ok
+        require_true moved_full_volume
+        require_ratio prefetch_hidden_frac 0.7
+    fi
+else
+    echo "bench_gate: note — $OFF_BASE baseline not committed yet; offload \
+gate skipped"
+fi
 
 if [ "$fail" = 0 ]; then
     echo "bench_gate: PASS"

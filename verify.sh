@@ -3,9 +3,10 @@
 #
 #   ./verify.sh            build + test (+ advisory fmt & clippy checks)
 #   ./verify.sh --strict   also fail on rustfmt drift / clippy findings
-#   ./verify.sh --bench    also run the weight-sync bench and gate it
-#                          against the committed BENCH_weightsync.json
-#                          baseline (tools/bench_gate.sh)
+#   ./verify.sh --bench    also run the weight-sync + offload benches and
+#                          gate them against the committed repo-root
+#                          BENCH_weightsync.json / BENCH_offload.json
+#                          baselines (tools/bench_gate.sh)
 #
 # The fmt and clippy checks are advisory by default because the offline
 # image may lack those components; build + test are the hard gate. CI
@@ -58,11 +59,13 @@ else
 fi
 
 if [ "$run_bench" = 1 ]; then
-    echo "== cargo bench --bench weightsync_overlap + bench gate =="
-    if cargo bench --bench weightsync_overlap; then
+    echo "== cargo bench --bench weightsync_overlap/offload_overlap + bench gate =="
+    bench_ok=1
+    cargo bench --bench weightsync_overlap || { echo "error: weightsync_overlap bench failed"; bench_ok=0; }
+    cargo bench --bench offload_overlap || { echo "error: offload_overlap bench failed"; bench_ok=0; }
+    if [ "$bench_ok" = 1 ]; then
         ./tools/bench_gate.sh || fail=1
     else
-        echo "error: weightsync_overlap bench failed"
         fail=1
     fi
 fi
