@@ -175,8 +175,9 @@ fn mutate_clustered(data: &mut [f32], round: usize, frac: f64) -> f32 {
 /// One sharded arm: `background` routes the fan-out through the streaming
 /// executor; `update_frac` is the fraction of weights that move per round
 /// (1.0 = dense update — the regime the full/int8 encodings assume; sparse
-/// regimes are where delta/top-k earn their keep). Returns the arm plus the
-/// cumulative documented error bound for lossy encodings.
+/// regimes are where delta/top-k earn their keep). Returns the arm, the
+/// cumulative documented error bound for lossy encodings, and the mean
+/// measured update density (nonzero only for `ShardEncoding::Auto`).
 fn measure_sharded(
     name: &'static str,
     p: usize,
@@ -185,7 +186,7 @@ fn measure_sharded(
     background: bool,
     update_frac: f64,
     clustered: bool,
-) -> (Arm, f32) {
+) -> (Arm, f32, f64) {
     let es = even_entries(p, 16);
     let mut opts = BusOptions::new(Layout::fsdp(p, 8), Layout::tp(p, 4, &es).expect("entries"));
     opts.encoding = encoding;
@@ -236,6 +237,7 @@ fn measure_sharded(
             max_abs_err: max_err,
         },
         cum_bound,
+        bus.mean_update_density(),
     )
 }
 
@@ -244,20 +246,21 @@ struct Panel2 {
     quant_err: f32,
     quant_bound: f32,
     topk_bound: f32,
+    /// mean measured update density of the sparse adaptive arm
+    auto_density: f64,
 }
 
 fn panel_measured(p: usize, rounds: usize) -> Panel2 {
     println!("--- panel 2: publish blocked + generator stall per arm ({p} params, {rounds} rounds) ---\n");
     let mono = measure_monolithic(p, rounds);
-    let (inline_f32, _) =
+    let (inline_f32, _, _) =
         measure_sharded("inline f32", p, rounds, ShardEncoding::F32, false, 1.0, false);
-    let (inline_int8, _) =
+    let (inline_int8, _, _) =
         measure_sharded("inline int8", p, rounds, ShardEncoding::Int8, false, 1.0, false);
-    let (bg_f32, _) =
-        measure_sharded("bg f32", p, rounds, ShardEncoding::F32, true, 1.0, false);
-    let (bg_delta, _) =
+    let (bg_f32, _, _) = measure_sharded("bg f32", p, rounds, ShardEncoding::F32, true, 1.0, false);
+    let (bg_delta, _, _) =
         measure_sharded("bg delta (1% upd)", p, rounds, ShardEncoding::Delta, true, 0.01, false);
-    let (bg_rle, _) = measure_sharded(
+    let (bg_rle, _, _) = measure_sharded(
         "bg delta (60% clustered, RLE)",
         p,
         rounds,
@@ -266,8 +269,14 @@ fn panel_measured(p: usize, rounds: usize) -> Panel2 {
         0.6,
         true,
     );
-    let (bg_topk, topk_bound) =
+    let (bg_topk, topk_bound, _) =
         measure_sharded("bg topk (3% upd)", p, rounds, ShardEncoding::TopK, true, 0.03, false);
+    // adaptive per-publish selection: the sparse arm must ride the delta
+    // wire, the dense arm must fall back to self-contained full f32
+    let (bg_auto, _, auto_density) =
+        measure_sharded("bg auto (1% upd)", p, rounds, ShardEncoding::Auto, true, 0.01, false);
+    let (bg_auto_dense, _, _) =
+        measure_sharded("bg auto (dense)", p, rounds, ShardEncoding::Auto, true, 1.0, false);
 
     // int8 fidelity on a fresh transfer over the very plan the bus streams
     let es = even_entries(p, 16);
@@ -276,7 +285,17 @@ fn panel_measured(p: usize, rounds: usize) -> Panel2 {
     let mut out = vec![0.0f32; p];
     let fid = run_transfer(&probe, &mut out, &plan, 1, ShardEncoding::Int8);
 
-    let arms = vec![mono, inline_f32, inline_int8, bg_f32, bg_delta, bg_rle, bg_topk];
+    let arms = vec![
+        mono,
+        inline_f32,
+        inline_int8,
+        bg_f32,
+        bg_delta,
+        bg_rle,
+        bg_topk,
+        bg_auto,
+        bg_auto_dense,
+    ];
     let mut t = Table::new(&[
         "arm",
         "publish blocked (trainer)",
@@ -319,6 +338,7 @@ fn panel_measured(p: usize, rounds: usize) -> Panel2 {
         quant_err: fid.max_abs_err,
         quant_bound: fid.err_bound,
         topk_bound,
+        auto_density,
     }
 }
 
@@ -427,9 +447,10 @@ fn main() {
     let coalesced = panel_threads(p);
     panel_des(planned_70b_bf16);
 
-    let [mono, inline_f32, inline_int8, bg_f32, bg_delta, bg_rle, bg_topk] = &panel2.arms[..]
+    let [mono, inline_f32, inline_int8, bg_f32, bg_delta, bg_rle, bg_topk, bg_auto, bg_auto_dense] =
+        &panel2.arms[..]
     else {
-        unreachable!("panel 2 produces seven arms")
+        unreachable!("panel 2 produces nine arms")
     };
     let mono_stall = mono.stall_secs;
     let overlap_stall = inline_f32.stall_secs;
@@ -445,12 +466,21 @@ fn main() {
     // a 60% clustered update past the sparse break-even must still beat
     // the full-f32 wire via zero-run encoding, bit-exactly
     let rle_below_full = bg_rle.payload_mb < inline_f32.payload_mb;
+    // adaptive encoding: sparse publishes must ride the delta wire (well
+    // under half the full payload), dense publishes must fall back to
+    // full f32 (within noise of it), both bit-exact
+    let auto_adaptive = bg_auto.payload_mb < inline_f32.payload_mb / 2.0
+        && bg_auto_dense.payload_mb >= inline_f32.payload_mb * 0.9
+        && bg_auto.exact
+        && bg_auto_dense.exact;
     println!(
         "shape checks: sharded+overlapped stall strictly below monolithic: {}; \
          quantized round-trip within bound: {}; background publish blocked \
          >=5x below inline ({publish_blocked_speedup:.1}x): {}; delta streams \
          bit-exact (incl. RLE): {}; clustered RLE payload below full ({:.2} \
-         vs {:.2} MB): {}; top-k within cumulative bound: {}",
+         vs {:.2} MB): {}; top-k within cumulative bound: {}; auto encoding \
+         adapts to density ({:.2} MB sparse / {:.2} MB dense, measured \
+         density {:.4}): {}",
         if stall_ok { "PASS" } else { "FAIL" },
         if quant_ok { "PASS" } else { "FAIL" },
         if blocked_5x { "PASS" } else { "FAIL" },
@@ -459,6 +489,10 @@ fn main() {
         inline_f32.payload_mb,
         if rle_below_full { "PASS" } else { "FAIL" },
         if topk_ok { "PASS" } else { "FAIL" },
+        bg_auto.payload_mb,
+        bg_auto_dense.payload_mb,
+        panel2.auto_density,
+        if auto_adaptive { "PASS" } else { "FAIL" },
     );
 
     let json = Value::object(vec![
@@ -486,6 +520,9 @@ fn main() {
         ("delta_payload_mb", Value::num(bg_delta.payload_mb)),
         ("rle_delta_payload_mb", Value::num(bg_rle.payload_mb)),
         ("topk_payload_mb", Value::num(bg_topk.payload_mb)),
+        ("auto_payload_mb", Value::num(bg_auto.payload_mb)),
+        ("auto_dense_payload_mb", Value::num(bg_auto_dense.payload_mb)),
+        ("auto_update_density", Value::num(panel2.auto_density)),
         ("full_payload_mb", Value::num(inline_f32.payload_mb)),
         ("quant_max_abs_err", Value::num(panel2.quant_err as f64)),
         ("quant_err_bound", Value::num(panel2.quant_bound as f64)),
@@ -500,6 +537,7 @@ fn main() {
         ("delta_exact", Value::Bool(delta_exact)),
         ("rle_below_full", Value::Bool(rle_below_full)),
         ("topk_within_bound", Value::Bool(topk_ok)),
+        ("auto_adaptive", Value::Bool(auto_adaptive)),
     ]);
     let line = json.to_string();
     println!("BENCH_weightsync.json {line}");

@@ -74,15 +74,18 @@ fn staleness_opt(v: u64) -> Option<u64> {
     }
 }
 
-/// `sync_encoding = full|int8|delta|topk` (JSON and CLI).
+/// `sync_encoding = full|int8|delta|topk|auto` (JSON and CLI). `auto`
+/// measures the update density at encode time and picks full vs delta per
+/// publish.
 fn parse_encoding(s: &str) -> Result<ShardEncoding> {
     match s {
         "full" | "f32" => Ok(ShardEncoding::F32),
         "int8" => Ok(ShardEncoding::Int8),
         "delta" => Ok(ShardEncoding::Delta),
         "topk" | "top_k" => Ok(ShardEncoding::TopK),
+        "auto" => Ok(ShardEncoding::Auto),
         other => Err(Error::Config(format!(
-            "sync_encoding must be full|int8|delta|topk, got '{other}'"
+            "sync_encoding must be full|int8|delta|topk|auto, got '{other}'"
         ))),
     }
 }
@@ -108,6 +111,9 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             "artifact_dir" => cfg.artifact_dir = PathBuf::from(val.as_str().unwrap_or("")),
             "mode" => cfg.mode = parse_mode(val.as_str().unwrap_or(""))?,
             "n_generator_workers" => cfg.n_generator_workers = val.as_usize().unwrap_or(1),
+            "n_reward_workers" => {
+                cfg.n_reward_workers = val.as_usize().unwrap_or(1).max(1)
+            }
             "queue_capacity" => cfg.queue_capacity = val.as_usize().unwrap_or(4),
             "scored_capacity" => cfg.scored_capacity = val.as_usize().unwrap_or(8),
             "store_capacity" => cfg.store.capacity = val.as_usize().unwrap_or(128).max(1),
@@ -190,6 +196,9 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
         cfg.baseline = parse_baseline(v)?;
     }
     cfg.n_generator_workers = args.usize_or("workers", cfg.n_generator_workers)?;
+    cfg.n_reward_workers = args
+        .usize_or("reward-workers", cfg.n_reward_workers)?
+        .max(1);
     cfg.queue_capacity = args.usize_or("queue-capacity", cfg.queue_capacity)?;
     cfg.store.capacity = args.usize_or("store-capacity", cfg.store.capacity)?.max(1);
     cfg.store.shards = args.usize_or("store-shards", cfg.store.shards)?.max(1);
@@ -421,6 +430,28 @@ mod tests {
 
         let bad = Value::parse(r#"{"offload_classes":"hbm"}"#).unwrap();
         assert!(apply_json(&mut cfg, &bad).is_err());
+    }
+
+    #[test]
+    fn reward_fleet_and_auto_encoding_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        assert_eq!(cfg.n_reward_workers, 1, "single scorer is the default");
+        let v = Value::parse(r#"{"n_reward_workers":3,"sync_encoding":"auto"}"#).unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert_eq!(cfg.n_reward_workers, 3);
+        assert_eq!(cfg.sync.encoding, ShardEncoding::Auto);
+
+        let args = Args::parse(
+            ["--reward-workers", "2"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.n_reward_workers, 2);
+        // 0 clamps to 1 — a topology always has a reward fleet
+        let v = Value::parse(r#"{"n_reward_workers":0}"#).unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert_eq!(cfg.n_reward_workers, 1);
     }
 
     #[test]

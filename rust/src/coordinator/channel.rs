@@ -6,6 +6,12 @@
 //!   workers -> reward executor). Implemented as a cloned-producer mpsc.
 //! * **SCATTER** — one outbound executor, chunks round-robined over inbound
 //!   processes (reward -> trainer microbatch streams).
+//! * **GROUP-ROUTED** — many outbound processes, `n` inbound processes,
+//!   each trajectory delivered to consumer `group_id % n` (generator
+//!   workers -> reward *fleet*): a prompt's whole advantage group is
+//!   scored by exactly one reward node, whatever worker decoded each
+//!   replica. EOF broadcasts to every consumer, so fan-in drain counting
+//!   works per consumer.
 //! * **BROADCAST** — identical copy to every inbound process.
 //!
 //! Boundedness is load-bearing: a full channel blocks the sender, which is
@@ -76,11 +82,14 @@ impl ChannelStats {
     }
 }
 
-/// Sending half. Cloneable for GATHER (many producers).
+/// Sending half. Cloneable for GATHER / GROUP-ROUTED (many producers).
 pub struct Outbound {
     pub name: String,
     senders: Vec<SyncSender<Message>>,
     next: std::cell::Cell<usize>,
+    /// deliver each trajectory to consumer `group_id % n` instead of
+    /// round-robining whole messages (see [`routed_channel`])
+    route_by_group: bool,
     pub stats: Arc<ChannelStats>,
 }
 
@@ -90,6 +99,7 @@ impl Clone for Outbound {
             name: self.name.clone(),
             senders: self.senders.clone(),
             next: std::cell::Cell::new(0),
+            route_by_group: self.route_by_group,
             stats: self.stats.clone(),
         }
     }
@@ -111,8 +121,13 @@ fn count_items(m: &Message) -> u64 {
 
 impl Outbound {
     /// Blocking send with backpressure accounting. SCATTER round-robins the
-    /// message to one inbound process; GATHER/BROADCAST have a single slot.
+    /// message to one inbound process; GATHER/BROADCAST have a single slot;
+    /// GROUP-ROUTED splits the message's trajectories by `group_id % n`
+    /// and delivers each part to its owning consumer.
     pub fn send(&self, msg: Message) -> Result<()> {
+        if self.route_by_group && self.senders.len() > 1 {
+            return self.send_routed(msg);
+        }
         let items = count_items(&msg);
         let idx = self.next.get() % self.senders.len();
         self.next.set(idx + 1);
@@ -129,7 +144,14 @@ impl Outbound {
     }
 
     /// Non-blocking send; returns the message back if the channel is full.
+    /// Not supported on a multi-consumer GROUP-ROUTED channel — a split
+    /// delivery cannot be un-sent when one part's consumer is full, so
+    /// rather than silently violating group integrity the message is
+    /// handed back unsent (use the blocking [`Outbound::send`] there).
     pub fn try_send(&self, msg: Message) -> std::result::Result<(), Message> {
+        if self.route_by_group && self.senders.len() > 1 {
+            return Err(msg);
+        }
         let items = count_items(&msg);
         let idx = self.next.get() % self.senders.len();
         match self.senders[idx].try_send(msg) {
@@ -141,6 +163,48 @@ impl Outbound {
             }
             Err(TrySendError::Full(m)) | Err(TrySendError::Disconnected(m)) => Err(m),
         }
+    }
+
+    /// GROUP-ROUTED delivery: split the trajectories by `group_id % n` and
+    /// send each non-empty part to its owning consumer, so every replica of
+    /// a prompt's advantage group lands on the same inbound process. EOF
+    /// broadcasts (same as [`Outbound::send_eof`]).
+    fn send_routed(&self, msg: Message) -> Result<()> {
+        let n = self.senders.len();
+        let (scored, items) = match msg {
+            Message::Trajectories(v) => (false, v),
+            Message::Scored(v) => (true, v),
+            Message::Eof => {
+                self.send_eof();
+                return Ok(());
+            }
+        };
+        let mut parts: Vec<Vec<Trajectory>> = (0..n).map(|_| Vec::new()).collect();
+        for t in items {
+            parts[(t.group_id % n as u64) as usize].push(t);
+        }
+        let t0 = Instant::now();
+        for (i, part) in parts.into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            let count = part.len() as u64;
+            let wrapped = if scored {
+                Message::Scored(part)
+            } else {
+                Message::Trajectories(part)
+            };
+            self.senders[i]
+                .send(wrapped)
+                .map_err(|_| Error::ChannelClosed(self.name.clone()))?;
+            self.stats.items.fetch_add(count, Ordering::Relaxed);
+        }
+        // one message + one blocked-time sample per send() CALL, however
+        // many parts it split into — keeps the counter comparable with the
+        // non-routed path and across reward-fleet sizes
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.add_send_blocked(t0.elapsed());
+        Ok(())
     }
 
     /// Signal EOF to every inbound process.
@@ -184,6 +248,7 @@ pub fn gather_channel(name: &str, capacity: usize) -> (Outbound, Inbound) {
             name: name.to_string(),
             senders: vec![tx],
             next: std::cell::Cell::new(0),
+            route_by_group: false,
             stats: stats.clone(),
         },
         Inbound {
@@ -194,8 +259,12 @@ pub fn gather_channel(name: &str, capacity: usize) -> (Outbound, Inbound) {
     )
 }
 
-/// SCATTER: one producer, `n` consumers, round-robin delivery.
-pub fn scatter_channel(name: &str, capacity: usize, n: usize) -> (Outbound, Vec<Inbound>) {
+fn fan_out_channel(
+    name: &str,
+    capacity: usize,
+    n: usize,
+    route_by_group: bool,
+) -> (Outbound, Vec<Inbound>) {
     let stats = Arc::new(ChannelStats::default());
     let mut senders = Vec::with_capacity(n);
     let mut inbounds = Vec::with_capacity(n);
@@ -213,10 +282,25 @@ pub fn scatter_channel(name: &str, capacity: usize, n: usize) -> (Outbound, Vec<
             name: name.to_string(),
             senders,
             next: std::cell::Cell::new(0),
+            route_by_group,
             stats,
         },
         inbounds,
     )
+}
+
+/// SCATTER: one producer, `n` consumers, round-robin delivery.
+pub fn scatter_channel(name: &str, capacity: usize, n: usize) -> (Outbound, Vec<Inbound>) {
+    fan_out_channel(name, capacity, n, false)
+}
+
+/// GROUP-ROUTED GATHER: many producers (clone the Outbound), `n` consumers;
+/// each trajectory is delivered to consumer `group_id % n`, so a prompt's
+/// whole advantage group — every one of its n_generations replicas,
+/// whichever generator worker decoded it — is scored by exactly one
+/// consumer. `capacity` bounds each consumer's queue independently.
+pub fn routed_channel(name: &str, capacity: usize, n: usize) -> (Outbound, Vec<Inbound>) {
+    fan_out_channel(name, capacity, n, true)
 }
 
 #[cfg(test)]
@@ -305,6 +389,41 @@ mod tests {
         let (tx, rxs) = scatter_channel("eof", 2, 3);
         tx.send_eof();
         for rx in &rxs {
+            assert!(matches!(rx.recv().unwrap(), Message::Eof));
+        }
+    }
+
+    #[test]
+    fn routed_channel_keeps_groups_on_one_consumer() {
+        let n = 3;
+        let (tx, rxs) = routed_channel("routed", 64, n);
+        // one mixed message: groups 0..6, two replicas each — the split
+        // must land every replica of group g on consumer g % n
+        let mut batch = Vec::new();
+        for gid in 0..6u64 {
+            batch.push(traj(gid));
+            batch.push(traj(gid));
+        }
+        tx.send(Message::Trajectories(batch)).unwrap();
+        for (i, rx) in rxs.iter().enumerate() {
+            let Message::Trajectories(v) = rx.recv().unwrap() else {
+                panic!("expected trajectories");
+            };
+            assert_eq!(v.len(), 4, "two groups x two replicas per consumer");
+            assert!(v.iter().all(|t| t.group_id % n as u64 == i as u64));
+        }
+    }
+
+    #[test]
+    fn routed_eof_broadcasts_per_producer() {
+        // fan-in drain contract: each producer's EOF reaches EVERY
+        // consumer, so a consumer expecting k producers counts k EOFs
+        let (tx, rxs) = routed_channel("routed_eof", 4, 2);
+        let tx2 = tx.clone();
+        tx.send(Message::Eof).unwrap(); // routed send of Eof broadcasts too
+        tx2.send_eof();
+        for rx in &rxs {
+            assert!(matches!(rx.recv().unwrap(), Message::Eof));
             assert!(matches!(rx.recv().unwrap(), Message::Eof));
         }
     }

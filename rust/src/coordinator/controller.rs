@@ -1,38 +1,36 @@
-//! The single Controller (paper §5.1.3, Algorithm 1): wires executors and
-//! channels into one training job and runs it to `max_steps`.
+//! The single Controller (paper §5.1.3, Algorithm 1): resolves the
+//! declarative execution graph for the configured mode, builds the shared
+//! planes (weight-sync, memory), and launches it through the one generic
+//! graph runtime ([`crate::coordinator::graph`]).
 //!
-//! Two execution architectures behind one entry point ([`run_training`]):
+//! Three modes, three *topology descriptions* — one runtime:
 //!
-//! * [`Mode::Sync`] — the DeepSpeed-Chat-like baseline (paper §8.1): one
-//!   thread drives generate → score → train strictly sequentially; every
-//!   step's batch is generated to completion under the current weights
-//!   (fully on-policy, with the all-rows-finish straggler bubble).
-//! * [`Mode::Async`] — LlamaRL: each executor free-runs on its own thread
-//!   (its own PJRT context = its own "processing group"), connected by
-//!   bounded GATHER/SCATTER channels; the trainer publishes weights over
-//!   the DDMA bus; generation is continuously batched with partial
-//!   rollouts. Off-policy lag is bounded by channel capacity and corrected
+//! * [`Mode::Sync`] — the DeepSpeed-Chat-like baseline (paper §8.1): the
+//!   same graph driven by the stepped scheduler, strictly sequential
+//!   generate → score → train ticks (fully on-policy, with the
+//!   all-rows-finish straggler bubble).
+//! * [`Mode::Async`] — LlamaRL: every fleet free-runs on its own threads
+//!   (own PJRT context = own "processing group"), connected by bounded
+//!   group-routed/gather channels; the trainer publishes weights over the
+//!   DDMA bus; off-policy lag is bounded by channel capacity and corrected
 //!   by AIPO.
 //! * [`Mode::AsyncBuffered`] — the streaming data plane: scored groups
-//!   land in a sharded [`RolloutStore`] instead of a SCATTER channel. The
-//!   store enforces an explicit max-staleness bound, applies a pluggable
-//!   admission/eviction policy and sampling strategy, and parks partial
-//!   rollouts at drain time. Generators never block on the trainer.
+//!   land in a sharded [`RolloutStore`](crate::dataplane::RolloutStore)
+//!   with an enforced max-staleness bound instead of a scored channel.
+//!
+//! In every mode reward scoring is a fleet (`n_reward_workers`), scattered
+//! over generation groups by group id with group integrity preserved.
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
 
-use crate::coordinator::channel::{gather_channel, scatter_channel};
-use crate::coordinator::evaluator::{eval_policy, EvalResult, EvaluatorConfig, EvaluatorExecutor};
-use crate::coordinator::executor::{run_executor_loop, Executor, ExecutorContext, StepOutcome};
-use crate::coordinator::generator::{GenTally, GeneratorConfig, GeneratorWorker};
-use crate::coordinator::reward::{RewardExecutor, ScoredSink};
-use crate::coordinator::trainer::{TrainStepRecord, Trainer, TrainerConfig, TrajectorySource};
-use crate::data::{task, PromptScheduler};
-use crate::dataplane::{DataPlaneSnapshot, RolloutStore, StoreConfig};
+use crate::coordinator::evaluator::EvalResult;
+use crate::coordinator::executor::ExecutorContext;
+use crate::coordinator::graph::{topology, LaunchEnv};
+use crate::coordinator::trainer::TrainStepRecord;
+use crate::data::PromptScheduler;
+use crate::dataplane::{DataPlaneSnapshot, StoreConfig};
 use crate::ddma::{BusOptions, WeightsBus};
-use crate::memplane::plan::Phase;
 use crate::memplane::pool::MemSpec;
 use crate::memplane::{MemPlane, MemPlaneConfig};
 use crate::model::load_init_params;
@@ -61,7 +59,8 @@ pub struct WeightSyncConfig {
     /// when the manifest's param layout allows it)
     pub generator_shards: usize,
     /// shard wire encoding: full f32, int8 (1 byte/elem + per-shard scale,
-    /// dequantized at attach), exact delta, or top-k sparse delta
+    /// dequantized at attach), exact delta, top-k sparse delta, or
+    /// adaptive per-publish full-vs-delta selection (`auto`)
     pub encoding: ShardEncoding,
     /// run publishes through the background streaming executor
     /// (enqueue-and-return, per-link-group worker threads) instead of the
@@ -90,9 +89,15 @@ impl Default for WeightSyncConfig {
 pub struct PipelineConfig {
     pub artifact_dir: PathBuf,
     pub mode: Mode,
-    /// data-parallel generator workers (async mode)
+    /// data-parallel generator workers (async modes)
     pub n_generator_workers: usize,
-    /// gen->reward channel capacity, in messages (bounds off-policy lag)
+    /// reward-scoring fleet size: generation groups scatter across N
+    /// reward executors by group id — every replica of a prompt's group
+    /// is scored by exactly one node, so the advantage baseline stays
+    /// intact while scoring throughput scales
+    pub n_reward_workers: usize,
+    /// gen->reward capacity per reward replica, in messages (bounds
+    /// off-policy lag)
     pub queue_capacity: usize,
     /// reward->trainer channel capacity, in groups
     pub scored_capacity: usize,
@@ -103,7 +108,7 @@ pub struct PipelineConfig {
     pub sync: WeightSyncConfig,
     /// colocated offloading memory plane (`colocate`, `offload_classes`,
     /// `offload_chunk_mb`, `prefetch_depth`); `concurrent_phases` is
-    /// derived from the mode at run time
+    /// derived from the topology at run time
     pub mem: MemPlaneConfig,
     /// generations per prompt (the advantage group, paper n=4)
     pub n_generations: usize,
@@ -123,6 +128,10 @@ pub struct PipelineConfig {
     /// start RL from this pretrained checkpoint (bare params) instead of
     /// the random init — see coordinator::pretrain
     pub init_checkpoint: Option<PathBuf>,
+    /// FAULT-INJECTION TEST HOOK: make every generator error out after N
+    /// decode chunks, exercising the graph runtime's error propagation.
+    /// Never settable from JSON/CLI.
+    pub debug_fail_generator_after: Option<u64>,
 }
 
 impl Default for PipelineConfig {
@@ -131,6 +140,7 @@ impl Default for PipelineConfig {
             artifact_dir: "artifacts/nano".into(),
             mode: Mode::Async,
             n_generator_workers: 1,
+            n_reward_workers: 1,
             queue_capacity: 4,
             scored_capacity: 8,
             store: StoreConfig::default(),
@@ -150,11 +160,14 @@ impl Default for PipelineConfig {
             seed: 0,
             out_dir: std::env::temp_dir().join("llamarl_run"),
             init_checkpoint: None,
+            debug_fail_generator_after: None,
         }
     }
 }
 
 /// Everything a finished run reports (examples and benches consume this).
+/// Assembled in exactly one place:
+/// [`crate::coordinator::graph::TelemetryHub::finish`].
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
     pub mode: String,
@@ -166,6 +179,10 @@ pub struct RunReport {
     pub trajectories: u64,
     pub chunks: u64,
     pub weight_refreshes: u64,
+    /// complete advantage groups the reward fleet emitted downstream
+    pub reward_groups: u64,
+    /// trajectories the reward fleet scored
+    pub reward_rows_scored: u64,
     pub ddma_publishes: u64,
     pub ddma_mean_publish_secs: f64,
     /// mean per-publish time of the slowest shard — the modelled parallel
@@ -183,7 +200,13 @@ pub struct RunReport {
     pub gen_swap_stall_secs: f64,
     pub gen_swaps: u64,
     pub gen_send_blocked_secs: f64,
+    /// seconds the trainer starved on the scored CHANNEL (sync / async
+    /// modes; 0 when the trainer samples a store instead)
     pub trainer_recv_blocked_secs: f64,
+    /// seconds the trainer waited inside rollout-STORE sampling
+    /// (Mode::AsyncBuffered; 0 otherwise) — kept distinct from the channel
+    /// field above, which the pre-graph drivers conflated
+    pub trainer_sample_wait_secs: f64,
     /// memplane telemetry: bytes the offload executor swapped to host
     /// (D2H) and prefetched back (H2D) across phase flips
     pub offload_d2h_bytes: u64,
@@ -204,7 +227,7 @@ pub struct RunReport {
 impl RunReport {
     /// Copy the memory-plane counters out of the executor context (called
     /// once per finished run, after the final flush).
-    fn fill_mem_telemetry(&mut self, ctx: &ExecutorContext) {
+    pub(crate) fn fill_mem_telemetry(&mut self, ctx: &ExecutorContext) {
         use std::sync::atomic::Ordering;
         if let Some(m) = &ctx.mem {
             let mm = m.metrics();
@@ -215,9 +238,7 @@ impl RunReport {
             self.offload_superseded = mm.superseded_targets.load(Ordering::Relaxed);
         }
     }
-}
 
-impl RunReport {
     pub fn mean_step_secs(&self) -> f64 {
         if self.steps == 0 {
             0.0
@@ -246,28 +267,8 @@ impl RunReport {
     }
 }
 
-fn gen_cfg(cfg: &PipelineConfig, worker: usize) -> GeneratorConfig {
-    GeneratorConfig {
-        artifact_dir: cfg.artifact_dir.clone(),
-        temperature: cfg.temperature,
-        top_k: cfg.top_k,
-        quantize_int8: cfg.quantize_generator,
-        max_response: cfg.max_response,
-        seed: cfg.seed.wrapping_add(1000 + worker as u64),
-    }
-}
-
-fn trainer_cfg(cfg: &PipelineConfig) -> TrainerConfig {
-    TrainerConfig {
-        artifact_dir: cfg.artifact_dir.clone(),
-        aipo: cfg.aipo,
-        max_steps: cfg.max_steps,
-        publish_every: 1,
-        checkpoint_every: cfg.checkpoint_every,
-    }
-}
-
-/// Entry point: build the topology for `cfg.mode` and train to completion.
+/// Entry point: resolve the execution graph for `cfg.mode`, build the
+/// shared planes, and launch it to completion.
 pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     std::fs::create_dir_all(&cfg.out_dir)?;
     let manifest = Manifest::load(&cfg.artifact_dir)?;
@@ -296,6 +297,12 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     if cfg.n_generations == 0 || cfg.max_steps == 0 {
         return Err(Error::Config("n_generations and max_steps must be > 0".into()));
     }
+
+    // Resolve the declarative topology FIRST: the planes below derive
+    // their mode-dependent behaviour from it (stepped vs free-running).
+    // `Graph::launch` validates it before anything is built or spawned.
+    let graph = topology(cfg, &manifest);
+
     // Build the weight-sync plane: FSDP source layout from the configured
     // trainer shard count, TP destination layout split per-tensor via the
     // manifest's param map (falling back to a flat split if the map has
@@ -309,22 +316,23 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
         .unwrap_or_else(|_| Layout::tp_flat(n_params, g_shards));
     let mut bus_opts = BusOptions::new(src_layout, dst_layout);
     bus_opts.encoding = cfg.sync.encoding;
-    // Sync mode registers no generator slots (the single thread re-attaches
-    // to the master directly), so background workers would wake per publish
-    // to stream to nobody — and the enqueue-only blocked-time metric would
-    // stop being comparable to the baseline. Force the inline plane there.
-    bus_opts.background = cfg.sync.background && cfg.mode != Mode::Sync;
+    // The stepped scheduler registers no generator slots (the single
+    // thread re-attaches to the master directly), so background workers
+    // would wake per publish to stream to nobody — and the enqueue-only
+    // blocked-time metric would stop being comparable to the baseline.
+    // Force the inline plane there.
+    bus_opts.background = cfg.sync.background && !graph.stepped;
     bus_opts.link_groups = cfg.sync.link_groups;
     bus_opts.topk_frac = cfg.sync.topk_frac;
     let bus = WeightsBus::with_options(init, bus_opts)?;
     // Build the colocated offloading memory plane: a testbed-scale MemSpec
     // derived from the artifact's parameter count, with `concurrent_phases`
-    // following the mode (async architectures overlap generate/train/sync
-    // on disjoint executors, so nothing may leave the device and the
-    // planner must prove the union fits). Infeasible colocations fail HERE,
-    // before any executor spawns.
+    // following the topology (free-running graphs overlap
+    // generate/train/sync on disjoint executors, so nothing may leave the
+    // device and the planner must prove the union fits). Infeasible
+    // colocations fail HERE, before any executor spawns.
     let mem_cfg = MemPlaneConfig {
-        concurrent_phases: cfg.mode != Mode::Sync,
+        concurrent_phases: !graph.stepped,
         ..cfg.mem.clone()
     };
     let spec = MemSpec::testbed(
@@ -342,435 +350,14 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     let metrics_path = cfg.out_dir.join("metrics.jsonl");
     let log = Arc::new(JsonlWriter::create(&metrics_path)?);
 
-    let mut report = match cfg.mode {
-        Mode::Sync => run_sync(cfg, &manifest, ctx, scheduler, log)?,
-        Mode::Async => run_async(cfg, &manifest, ctx, scheduler, log)?,
-        Mode::AsyncBuffered => run_async_buffered(cfg, &manifest, ctx, scheduler, log)?,
+    let env = LaunchEnv {
+        cfg,
+        manifest: &manifest,
+        ctx,
+        scheduler,
+        log,
     };
+    let mut report = graph.launch(&env)?;
     report.metrics_path = Some(metrics_path);
-    Ok(report)
-}
-
-/// Synchronous on-policy baseline: single thread, sequential phases.
-fn run_sync(
-    cfg: &PipelineConfig,
-    manifest: &Manifest,
-    ctx: Arc<ExecutorContext>,
-    scheduler: Arc<PromptScheduler>,
-    log: Arc<JsonlWriter>,
-) -> Result<RunReport> {
-    // Sync mode runs all executors on ONE thread; channels must absorb a
-    // whole step's traffic without blocking (worst case: one message per
-    // trajectory, one group per n_generations rows).
-    let rows_per_step = manifest.config.train_batch;
-    let (gen_tx, gen_rx) = gather_channel("generations", (2 * rows_per_step).max(64));
-    let (scored_tx, mut scored_rxs) =
-        scatter_channel("scored", (2 * rows_per_step).max(64), 1);
-
-    let mut gen = GeneratorWorker::new(0, gen_cfg(cfg, 0), ctx.clone(), scheduler, gen_tx);
-    let mut reward = RewardExecutor::new(
-        ctx.clone(),
-        gen_rx,
-        ScoredSink::Channel(scored_tx),
-        cfg.baseline,
-        manifest.config.vocab,
-        1,
-    )?;
-    let mut trainer = Trainer::new(
-        trainer_cfg(cfg),
-        ctx.clone(),
-        TrajectorySource::Channel(scored_rxs.remove(0)),
-        Some(log.clone()),
-    );
-
-    gen.init()?;
-    reward.init()?;
-    trainer.init()?;
-
-    let suites = task::eval_suites(cfg.eval_max_per_suite);
-    let mut evals = Vec::new();
-    let t0 = Instant::now();
-
-    for step in 0..cfg.max_steps {
-        // Phase 1: generation — all rows complete under current weights.
-        // The Generate lease swaps offloadable trainer state (optimizer
-        // moments, grads) to host behind decode, and the Train hint arms
-        // the prefetcher so the first optimizer shard is back on device
-        // before the batch finishes.
-        {
-            let _gen_lease = match &ctx.mem {
-                Some(m) => Some(m.lease(Phase::Generate)?),
-                None => None,
-            };
-            if let Some(m) = &ctx.mem {
-                m.hint_next(Phase::Train);
-            }
-            gen.generate_batch_sync(rows_per_step)?;
-        }
-        // Phase 2: scoring.
-        while reward.drain_once()? {}
-        // Phase 3: one train step (+ weight publication = in-place update);
-        // the trainer brackets itself with Train/Sync leases.
-        match trainer.step()? {
-            StepOutcome::Progress => {}
-            other => {
-                return Err(Error::Coordinator(format!(
-                    "sync trainer did not progress at step {step}: {other:?}"
-                )))
-            }
-        }
-        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-            let snap = ctx.weights.latest();
-            // co-located: eval borrows the generator's PJRT context
-            evals.extend(eval_policy(
-                gen.runtime_ref(),
-                &snap.data,
-                &suites,
-                cfg.eval_max_per_suite,
-                snap.version,
-            )?);
-        }
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    // settle any background stream before reading plane-wide counters
-    ctx.weights.flush();
-    if let Some(m) = &ctx.mem {
-        m.flush()?;
-    }
-
-    let mut report = RunReport {
-        mode: "sync".into(),
-        steps: trainer.current_step(),
-        wall_secs: wall,
-        records: trainer.records.clone(),
-        evals,
-        tokens_generated: gen.tokens_generated,
-        trajectories: gen.trajectories_emitted,
-        chunks: gen.chunks_run,
-        weight_refreshes: gen.weight_refreshes,
-        ddma_publishes: ctx.weights.publish_count(),
-        ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
-        ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
-        ddma_publish_blocked_secs: ctx.weights.publish_blocked_secs(),
-        ddma_coalesced_publishes: ctx.weights.coalesced_publishes(),
-        gen_swap_stall_secs: 0.0,
-        gen_swaps: 0,
-        gen_send_blocked_secs: 0.0,
-        trainer_recv_blocked_secs: 0.0,
-        dataplane: None,
-        metrics_path: None,
-        ..RunReport::default()
-    };
-    report.fill_mem_telemetry(&ctx);
-    Ok(report)
-}
-
-/// Asynchronous off-policy pipeline: executor-per-thread, bounded channels.
-fn run_async(
-    cfg: &PipelineConfig,
-    manifest: &Manifest,
-    ctx: Arc<ExecutorContext>,
-    scheduler: Arc<PromptScheduler>,
-    log: Arc<JsonlWriter>,
-) -> Result<RunReport> {
-    let n_workers = cfg.n_generator_workers.max(1);
-    let (gen_tx, gen_rx) = gather_channel("generations", cfg.queue_capacity);
-    let (scored_tx, mut scored_rxs) = scatter_channel("scored", cfg.scored_capacity, 1);
-    let gen_stats_ch = gen_tx.stats.clone();
-    let scored_stats_ch = scored_tx.stats.clone();
-
-    let mut gen_handles = Vec::new();
-    for w in 0..n_workers {
-        let ctx = ctx.clone();
-        let scheduler = scheduler.clone();
-        let out = gen_tx.clone();
-        let gcfg = gen_cfg(cfg, w);
-        // every publish streams the reshard plan into this slot's staging
-        // buffer; the worker swaps it in (fenced) at chunk boundaries
-        let sync_slot = ctx.weights.register_generator();
-        gen_handles.push(
-            std::thread::Builder::new()
-                .name(format!("generator-{w}"))
-                .spawn(move || -> Result<GenTally> {
-                    // the worker holds its Generate lease for its whole
-                    // lifetime: async phases overlap, so the lease is
-                    // feasibility + accounting, never an offload stall
-                    let _gen_lease = match &ctx.mem {
-                        Some(m) => Some(m.lease(Phase::Generate)?),
-                        None => None,
-                    };
-                    let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
-                    gen.set_sync_slot(sync_slot);
-                    run_executor_loop(&mut gen, &ctx, None)?;
-                    Ok(gen.tally())
-                })
-                .expect("spawn generator"),
-        );
-    }
-    drop(gen_tx);
-
-    let reward_handle = {
-        let ctx = ctx.clone();
-        let vocab = manifest.config.vocab;
-        let baseline = cfg.baseline;
-        std::thread::Builder::new()
-            .name("reward".into())
-            .spawn(move || -> Result<(u64, u64, f64)> {
-                let mut r = RewardExecutor::new(
-                    ctx.clone(),
-                    gen_rx,
-                    ScoredSink::Channel(scored_tx),
-                    baseline,
-                    vocab,
-                    n_workers,
-                )?;
-                run_executor_loop(&mut r, &ctx, None)?;
-                Ok((r.scored, r.groups_emitted, r.reward_sum))
-            })
-            .expect("spawn reward")
-    };
-
-    let eval_handle = if cfg.eval_every > 0 {
-        let ctx = ctx.clone();
-        let ecfg = EvaluatorConfig {
-            artifact_dir: cfg.artifact_dir.clone(),
-            every_versions: cfg.eval_every,
-            max_per_suite: cfg.eval_max_per_suite,
-        };
-        let log = log.clone();
-        Some(
-            std::thread::Builder::new()
-                .name("evaluator".into())
-                .spawn(move || -> Result<Vec<EvalResult>> {
-                    let mut e = EvaluatorExecutor::new(ecfg, ctx.clone(), Some(log));
-                    run_executor_loop(&mut e, &ctx, None)?;
-                    Ok(e.results)
-                })
-                .expect("spawn evaluator"),
-        )
-    } else {
-        None
-    };
-
-    // Trainer runs on the controller thread (Algorithm 1's "local executor").
-    // Init (artifact compilation) runs OUTSIDE the measured wall clock, like
-    // the sync driver's; the generator/reward threads warm up concurrently.
-    let scored_rx = scored_rxs.remove(0);
-    let mut trainer = Trainer::new(
-        trainer_cfg(cfg),
-        ctx.clone(),
-        TrajectorySource::Channel(scored_rx),
-        Some(log),
-    );
-    trainer.init()?;
-    let t0 = Instant::now();
-    crate::coordinator::executor::run_executor_loop_initialized(
-        &mut trainer,
-        &ctx,
-        if cfg.checkpoint_every > 0 {
-            Some(cfg.checkpoint_every)
-        } else {
-            None
-        },
-    )?;
-    ctx.request_stop();
-
-    let mut tally = GenTally::default();
-    for h in gen_handles {
-        let t = h.join().map_err(|_| Error::msg("generator panicked"))??;
-        tally.add(&t);
-    }
-    let _ = reward_handle
-        .join()
-        .map_err(|_| Error::msg("reward panicked"))??;
-    let evals = match eval_handle {
-        Some(h) => h.join().map_err(|_| Error::msg("evaluator panicked"))??,
-        None => Vec::new(),
-    };
-    let wall = t0.elapsed().as_secs_f64();
-    // settle any background stream before reading plane-wide counters
-    ctx.weights.flush();
-    if let Some(m) = &ctx.mem {
-        m.flush()?;
-    }
-
-    let mut report = RunReport {
-        mode: "async".into(),
-        steps: trainer.current_step(),
-        wall_secs: wall,
-        records: trainer.records.clone(),
-        evals,
-        tokens_generated: tally.tokens,
-        trajectories: tally.trajectories,
-        chunks: tally.chunks,
-        weight_refreshes: tally.weight_refreshes,
-        ddma_publishes: ctx.weights.publish_count(),
-        ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
-        ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
-        ddma_publish_blocked_secs: ctx.weights.publish_blocked_secs(),
-        ddma_coalesced_publishes: ctx.weights.coalesced_publishes(),
-        gen_swap_stall_secs: tally.swap_stall_secs,
-        gen_swaps: tally.swaps,
-        gen_send_blocked_secs: gen_stats_ch.send_blocked_secs(),
-        trainer_recv_blocked_secs: scored_stats_ch.recv_blocked_secs(),
-        dataplane: None,
-        metrics_path: None,
-        ..RunReport::default()
-    };
-    report.fill_mem_telemetry(&ctx);
-    Ok(report)
-}
-
-/// Buffered asynchronous pipeline (the streaming data plane): generators
-/// GATHER into the reward executor exactly as in async mode, but scored
-/// groups are admitted into a sharded [`RolloutStore`] instead of a
-/// SCATTER channel. The trainer samples microbatches from the store (per
-/// the configured strategy) and advances the staleness watermark with its
-/// optimizer step; generators park partial rollouts in the store at drain
-/// time instead of decoding stragglers to completion.
-fn run_async_buffered(
-    cfg: &PipelineConfig,
-    manifest: &Manifest,
-    ctx: Arc<ExecutorContext>,
-    scheduler: Arc<PromptScheduler>,
-    log: Arc<JsonlWriter>,
-) -> Result<RunReport> {
-    let n_workers = cfg.n_generator_workers.max(1);
-    let (gen_tx, gen_rx) = gather_channel("generations", cfg.queue_capacity);
-    let gen_stats_ch = gen_tx.stats.clone();
-    let store = Arc::new(RolloutStore::new(StoreConfig {
-        seed: cfg.seed ^ 0xB0FF_E12D,
-        ..cfg.store.clone()
-    }));
-
-    let mut gen_handles = Vec::new();
-    for w in 0..n_workers {
-        let ctx = ctx.clone();
-        let scheduler = scheduler.clone();
-        let out = gen_tx.clone();
-        let store = store.clone();
-        let gcfg = gen_cfg(cfg, w);
-        let sync_slot = ctx.weights.register_generator();
-        gen_handles.push(
-            std::thread::Builder::new()
-                .name(format!("generator-{w}"))
-                .spawn(move || -> Result<GenTally> {
-                    let _gen_lease = match &ctx.mem {
-                        Some(m) => Some(m.lease(Phase::Generate)?),
-                        None => None,
-                    };
-                    let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
-                    gen.set_resume_store(store);
-                    gen.set_sync_slot(sync_slot);
-                    run_executor_loop(&mut gen, &ctx, None)?;
-                    Ok(gen.tally())
-                })
-                .expect("spawn generator"),
-        );
-    }
-    drop(gen_tx);
-
-    let reward_handle = {
-        let ctx = ctx.clone();
-        let vocab = manifest.config.vocab;
-        let baseline = cfg.baseline;
-        let sink = ScoredSink::Store(store.clone());
-        std::thread::Builder::new()
-            .name("reward".into())
-            .spawn(move || -> Result<(u64, u64, f64)> {
-                let mut r = RewardExecutor::new(ctx.clone(), gen_rx, sink, baseline, vocab, n_workers)?;
-                run_executor_loop(&mut r, &ctx, None)?;
-                Ok((r.scored, r.groups_emitted, r.reward_sum))
-            })
-            .expect("spawn reward")
-    };
-
-    let eval_handle = if cfg.eval_every > 0 {
-        let ctx = ctx.clone();
-        let ecfg = EvaluatorConfig {
-            artifact_dir: cfg.artifact_dir.clone(),
-            every_versions: cfg.eval_every,
-            max_per_suite: cfg.eval_max_per_suite,
-        };
-        let log = log.clone();
-        Some(
-            std::thread::Builder::new()
-                .name("evaluator".into())
-                .spawn(move || -> Result<Vec<EvalResult>> {
-                    let mut e = EvaluatorExecutor::new(ecfg, ctx.clone(), Some(log));
-                    run_executor_loop(&mut e, &ctx, None)?;
-                    Ok(e.results)
-                })
-                .expect("spawn evaluator"),
-        )
-    } else {
-        None
-    };
-
-    // Trainer on the controller thread, sampling from the store.
-    let mut trainer = Trainer::new(
-        trainer_cfg(cfg),
-        ctx.clone(),
-        TrajectorySource::Store(store.clone()),
-        Some(log),
-    );
-    trainer.init()?;
-    let t0 = Instant::now();
-    crate::coordinator::executor::run_executor_loop_initialized(
-        &mut trainer,
-        &ctx,
-        if cfg.checkpoint_every > 0 {
-            Some(cfg.checkpoint_every)
-        } else {
-            None
-        },
-    )?;
-    ctx.request_stop();
-    store.close();
-
-    let mut tally = GenTally::default();
-    for h in gen_handles {
-        let t = h.join().map_err(|_| Error::msg("generator panicked"))??;
-        tally.add(&t);
-    }
-    let _ = reward_handle
-        .join()
-        .map_err(|_| Error::msg("reward panicked"))??;
-    let evals = match eval_handle {
-        Some(h) => h.join().map_err(|_| Error::msg("evaluator panicked"))??,
-        None => Vec::new(),
-    };
-    let wall = t0.elapsed().as_secs_f64();
-    let snapshot = store.snapshot();
-    // settle any background stream before reading plane-wide counters
-    ctx.weights.flush();
-    if let Some(m) = &ctx.mem {
-        m.flush()?;
-    }
-
-    let mut report = RunReport {
-        mode: "async_buffered".into(),
-        steps: trainer.current_step(),
-        wall_secs: wall,
-        records: trainer.records.clone(),
-        evals,
-        tokens_generated: tally.tokens,
-        trajectories: tally.trajectories,
-        chunks: tally.chunks,
-        weight_refreshes: tally.weight_refreshes,
-        ddma_publishes: ctx.weights.publish_count(),
-        ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
-        ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
-        ddma_publish_blocked_secs: ctx.weights.publish_blocked_secs(),
-        ddma_coalesced_publishes: ctx.weights.coalesced_publishes(),
-        gen_swap_stall_secs: tally.swap_stall_secs,
-        gen_swaps: tally.swaps,
-        gen_send_blocked_secs: gen_stats_ch.send_blocked_secs(),
-        trainer_recv_blocked_secs: snapshot.sample_wait_secs,
-        dataplane: Some(snapshot),
-        metrics_path: None,
-        ..RunReport::default()
-    };
-    report.fill_mem_telemetry(&ctx);
     Ok(report)
 }

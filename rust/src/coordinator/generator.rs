@@ -49,6 +49,11 @@ pub struct GeneratorConfig {
     /// cap on response tokens (forces FinishReason::Length past it)
     pub max_response: usize,
     pub seed: u64,
+    /// FAULT-INJECTION TEST HOOK: error out after this many decode chunks.
+    /// Exercises the graph runtime's error propagation (a mid-run node
+    /// failure must stop the whole topology and surface through a clean
+    /// join); never settable from JSON/CLI.
+    pub fail_after_chunks: Option<u64>,
 }
 
 impl Default for GeneratorConfig {
@@ -60,6 +65,7 @@ impl Default for GeneratorConfig {
             quantize_int8: false,
             max_response: usize::MAX,
             seed: 0,
+            fail_after_chunks: None,
         }
     }
 }
@@ -299,6 +305,14 @@ impl GeneratorWorker {
     /// Run one generate_chunk over the current slots; returns finished
     /// trajectories.
     fn run_chunk(&mut self) -> Result<Vec<Trajectory>> {
+        if let Some(k) = self.cfg.fail_after_chunks {
+            if self.chunks_run >= k {
+                return Err(Error::Coordinator(format!(
+                    "generator[{}] injected failure after {k} chunks (test hook)",
+                    self.worker_id
+                )));
+            }
+        }
         let rt = self.runtime.as_ref().unwrap();
         let mcfg = rt.config().clone();
         let (b, s, c) = (mcfg.gen_batch, mcfg.max_seq, mcfg.gen_chunk);

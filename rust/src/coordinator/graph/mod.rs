@@ -1,0 +1,42 @@
+//! The single-controller execution graph (paper §5.1.3, Algorithm 1).
+//!
+//! The controller used to be three hand-rolled ~140-line mode drivers that
+//! each re-implemented thread spawning, lease handling, EOF/stop plumbing
+//! and a triplicated report block. This subsystem makes the topology
+//! *data* — the way AsyncFlow exposes the RL pipeline as a rewirable
+//! streaming dataflow and Laminar treats trajectory flow between
+//! disaggregated workers as a first-class graph — and keeps exactly one
+//! runtime:
+//!
+//! * [`topology`] — [`NodeSpec`] / [`EdgeSpec`] / [`Graph`]: executor
+//!   fleets (generator / reward / trainer / evaluator) with replica
+//!   counts, memory-plane [`LeasePolicy`], weight-sync slot needs, and
+//!   bounded [`EdgeKind`] transports. `Mode::{Sync, Async, AsyncBuffered}`
+//!   are three small descriptions built by [`topology()`]; sync is the
+//!   same graph driven by the stepped scheduler rather than free-running
+//!   threads. [`Graph::to_dot`] renders the resolved topology
+//!   (`llamarl train --dump-graph`).
+//! * [`runtime`] — one generic [`Graph::launch`]: edge construction,
+//!   generator slot registration, named-thread spawning, lease policies,
+//!   stop/EOF propagation, panic→error conversion, clean joins — written
+//!   once, tested once (`tests/graph_runtime.rs`).
+//! * [`telemetry`] — the [`TelemetryHub`] every node reports its tally
+//!   into; the `RunReport` is assembled in exactly one place, with the
+//!   scored-channel starvation time (`trainer_recv_blocked_secs`) and the
+//!   store sampling wait (`trainer_sample_wait_secs`) as distinct fields.
+//!
+//! Reward scoring is a *fleet* like generation: `n_reward_workers`
+//! scatters generation groups across N reward executors by group id over
+//! the group-routed channel, so every replica of a prompt's advantage
+//! group is scored by exactly one node (group integrity), removing the
+//! single-scorer bottleneck of the old async drivers.
+
+pub mod runtime;
+pub mod telemetry;
+pub mod topology;
+
+pub use runtime::LaunchEnv;
+pub use telemetry::{RewardTally, TelemetryHub};
+pub use topology::{
+    topology, topology_with_rows, EdgeKind, EdgeSpec, Graph, LeasePolicy, NodeKind, NodeSpec,
+};

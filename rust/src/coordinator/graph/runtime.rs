@@ -1,0 +1,501 @@
+//! The runtime layer: one generic [`Graph::launch`] for every topology.
+//!
+//! This is the code the three hand-rolled mode drivers used to triplicate,
+//! written once: edge construction, weight-sync slot registration, named
+//! thread spawning with panic→error conversion, memory-plane lease
+//! handling per [`LeasePolicy`], stop/EOF propagation, and the join
+//! protocol. Two schedulers drive the same node/edge machinery:
+//!
+//! * **threaded** — every replica free-runs on its own named OS thread
+//!   (its own PJRT context = its own "processing group"); the trainer runs
+//!   on the controller thread (Algorithm 1's "local executor"). Any node
+//!   error or panic is recorded into a shared first-error slot, the global
+//!   stop fans out (and the store closes, waking blocked admission /
+//!   sampling), and every thread joins cleanly — the error surfaces from
+//!   `launch`, never a hung join.
+//! * **stepped** — the synchronous baseline: the SAME graph, driven
+//!   strictly sequentially on one thread (generate → score → train ticks
+//!   with the all-rows-finish straggler bubble). Nothing about the
+//!   topology changes except the channel capacities it was declared with.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::channel::{gather_channel, routed_channel, ChannelStats, Inbound, Outbound};
+use crate::coordinator::controller::{PipelineConfig, RunReport};
+use crate::coordinator::evaluator::{eval_policy, EvaluatorConfig, EvaluatorExecutor};
+use crate::coordinator::executor::{
+    run_executor_loop, run_executor_loop_initialized, Executor, ExecutorContext, StepOutcome,
+};
+use crate::coordinator::generator::{GeneratorConfig, GeneratorWorker};
+use crate::coordinator::graph::telemetry::{RewardTally, TelemetryHub};
+use crate::coordinator::graph::topology::{EdgeKind, Graph, LeasePolicy, NodeKind};
+use crate::coordinator::reward::{RewardExecutor, ScoredSink};
+use crate::coordinator::trainer::{Trainer, TrainerConfig, TrajectorySource};
+use crate::data::{task, PromptScheduler};
+use crate::dataplane::{RolloutStore, StoreConfig};
+use crate::memplane::plan::Phase;
+use crate::runtime::Manifest;
+use crate::util::error::{Error, Result};
+use crate::util::logging::JsonlWriter;
+
+/// Everything a launch needs beyond the graph itself: the resolved config,
+/// the loaded manifest, and the per-run shared state the controller built
+/// (executor context with the weight-sync and memory planes, the prompt
+/// scheduler, the metrics writer).
+pub struct LaunchEnv<'a> {
+    pub cfg: &'a PipelineConfig,
+    pub manifest: &'a Manifest,
+    pub ctx: Arc<ExecutorContext>,
+    pub scheduler: Arc<PromptScheduler>,
+    pub log: Arc<JsonlWriter>,
+}
+
+impl Graph {
+    /// Launch this topology and run it to completion. Validates the graph,
+    /// builds the edges, spawns (or steps) the fleets, and assembles the
+    /// report through the [`TelemetryHub`] — the single entry point all
+    /// three modes run through.
+    pub fn launch(&self, env: &LaunchEnv<'_>) -> Result<RunReport> {
+        self.check()?;
+        if self.stepped {
+            run_stepped(self, env)
+        } else {
+            run_threaded(self, env)
+        }
+    }
+}
+
+fn gen_cfg(cfg: &PipelineConfig, worker: usize) -> GeneratorConfig {
+    GeneratorConfig {
+        artifact_dir: cfg.artifact_dir.clone(),
+        temperature: cfg.temperature,
+        top_k: cfg.top_k,
+        quantize_int8: cfg.quantize_generator,
+        max_response: cfg.max_response,
+        seed: cfg.seed.wrapping_add(1000 + worker as u64),
+        fail_after_chunks: cfg.debug_fail_generator_after,
+    }
+}
+
+fn trainer_cfg(cfg: &PipelineConfig) -> TrainerConfig {
+    TrainerConfig {
+        artifact_dir: cfg.artifact_dir.clone(),
+        aipo: cfg.aipo,
+        max_steps: cfg.max_steps,
+        publish_every: 1,
+        checkpoint_every: cfg.checkpoint_every,
+    }
+}
+
+/// The scored edge, materialized.
+enum ScoredPlane {
+    Channel {
+        tx: Outbound,
+        rx: Inbound,
+        stats: Arc<ChannelStats>,
+    },
+    Store(Arc<RolloutStore>),
+}
+
+struct BuiltEdges {
+    gen_tx: Outbound,
+    gen_rxs: Vec<Inbound>,
+    gen_stats: Arc<ChannelStats>,
+    scored: ScoredPlane,
+}
+
+/// Materialize the graph's edges: the group-routed generations channel
+/// (one bounded queue per reward replica) and the scored plane (bounded
+/// gather channel or the rollout store).
+fn build_edges(graph: &Graph, cfg: &PipelineConfig) -> Result<BuiltEdges> {
+    let gen_edge = graph
+        .edge_into(NodeKind::Reward)
+        .ok_or_else(|| Error::Coordinator("reward fleet has no inbound edge".into()))?;
+    let EdgeKind::GroupRouted { capacity } = gen_edge.kind else {
+        return Err(Error::Coordinator("generations edge must be group-routed".into()));
+    };
+    let n_reward = graph.replicas(NodeKind::Reward);
+    let (gen_tx, gen_rxs) = routed_channel(gen_edge.name, capacity, n_reward);
+    let gen_stats = gen_tx.stats.clone();
+
+    let scored_edge = graph
+        .edge_into(NodeKind::Trainer)
+        .ok_or_else(|| Error::Coordinator("trainer has no inbound edge".into()))?;
+    let scored = match scored_edge.kind {
+        EdgeKind::Gather { capacity } => {
+            let (tx, rx) = gather_channel(scored_edge.name, capacity);
+            let stats = tx.stats.clone();
+            ScoredPlane::Channel { tx, rx, stats }
+        }
+        EdgeKind::Store => ScoredPlane::Store(Arc::new(RolloutStore::new(StoreConfig {
+            seed: cfg.seed ^ 0xB0FF_E12D,
+            ..cfg.store.clone()
+        }))),
+        EdgeKind::GroupRouted { .. } => {
+            return Err(Error::Coordinator(
+                "scored edge must be a gather channel or the store".into(),
+            ))
+        }
+    };
+    Ok(BuiltEdges {
+        gen_tx,
+        gen_rxs,
+        gen_stats,
+        scored,
+    })
+}
+
+/// First-error slot shared by every node thread. Recording an error (or a
+/// converted panic) requests the global stop and closes the store, so
+/// every other node unwinds through its graceful drain path and the
+/// subsequent joins cannot hang.
+struct FailState {
+    first: Mutex<Option<Error>>,
+    ctx: Arc<ExecutorContext>,
+    store: Option<Arc<RolloutStore>>,
+}
+
+impl FailState {
+    fn new(ctx: Arc<ExecutorContext>, store: Option<Arc<RolloutStore>>) -> Arc<FailState> {
+        Arc::new(FailState {
+            first: Mutex::new(None),
+            ctx,
+            store,
+        })
+    }
+
+    fn record(&self, node: &str, e: Error) {
+        {
+            let mut slot = self.first.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(Error::Coordinator(format!("node {node} failed: {e}")));
+            }
+        }
+        self.ctx.request_stop();
+        if let Some(s) = &self.store {
+            s.close();
+        }
+    }
+
+    fn take(&self) -> Option<Error> {
+        self.first.lock().unwrap().take()
+    }
+}
+
+/// Spawn one node replica on a named thread. The body's error — or panic,
+/// converted — lands in the shared [`FailState`] (stopping the whole
+/// graph); the tally comes back through the join.
+fn spawn_node<T, F>(name: String, fail: Arc<FailState>, body: F) -> JoinHandle<Option<T>>
+where
+    F: FnOnce() -> Result<T> + Send + 'static,
+    T: Send + 'static,
+{
+    let reported = name.clone();
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || match catch_unwind(AssertUnwindSafe(body)) {
+            Ok(Ok(tally)) => Some(tally),
+            Ok(Err(e)) => {
+                fail.record(&reported, e);
+                None
+            }
+            Err(_) => {
+                fail.record(&reported, Error::msg("panicked"));
+                None
+            }
+        })
+        .expect("spawn graph node thread")
+}
+
+/// Join a node thread; the in-thread catch_unwind already converted
+/// panics, so an Err here (a panic escaping the guard) is a backstop.
+fn join_node<T>(h: JoinHandle<Option<T>>, kind: &str, idx: usize) -> Result<Option<T>> {
+    h.join().map_err(|_| {
+        Error::Coordinator(format!("node {kind}-{idx} panicked outside the runtime guard"))
+    })
+}
+
+/// The free-running scheduler: one named thread per replica, trainer on
+/// the controller thread (async / async-buffered modes).
+fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
+    let cfg = env.cfg;
+    let BuiltEdges {
+        gen_tx,
+        gen_rxs,
+        gen_stats,
+        scored,
+    } = build_edges(graph, cfg)?;
+    let n_reward = graph.replicas(NodeKind::Reward);
+    let (shared_sink, source, scored_stats, store) = match scored {
+        ScoredPlane::Channel { tx, rx, stats } => (
+            ScoredSink::Channel(tx),
+            TrajectorySource::Channel { rx, producers: n_reward },
+            Some(stats),
+            None,
+        ),
+        ScoredPlane::Store(s) => (
+            ScoredSink::shared_store(s.clone(), n_reward),
+            TrajectorySource::Store(s.clone()),
+            None,
+            Some(s),
+        ),
+    };
+    let mut hub = TelemetryHub::new(graph.mode_name, gen_stats, scored_stats, store.clone());
+    let fail = FailState::new(env.ctx.clone(), store.clone());
+
+    // generator fleet: each replica registers its weight-sync slot (when
+    // the topology says so) and holds its lease per the node's policy
+    let gen_node = *graph
+        .node(NodeKind::Generator)
+        .expect("check(): generator present");
+    let mut gen_handles = Vec::new();
+    for w in 0..gen_node.replicas {
+        let ctx = env.ctx.clone();
+        let scheduler = env.scheduler.clone();
+        let out = gen_tx.clone();
+        let gcfg = gen_cfg(cfg, w);
+        let sync_slot = gen_node.sync_slot.then(|| env.ctx.weights.register_generator());
+        let resume = store.clone();
+        let lease = gen_node.lease;
+        gen_handles.push(spawn_node(format!("generator-{w}"), fail.clone(), move || {
+            // Lifetime lease: async phases overlap on disjoint executors,
+            // so the lease is feasibility + accounting, never an offload
+            // stall
+            let _lease = match (lease, &ctx.mem) {
+                (LeasePolicy::Lifetime(p), Some(m)) => Some(m.lease(p)?),
+                _ => None,
+            };
+            let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
+            if let Some(s) = resume {
+                gen.set_resume_store(s);
+            }
+            if let Some(slot) = sync_slot {
+                gen.set_sync_slot(slot);
+            }
+            run_executor_loop(&mut gen, &ctx, None)?;
+            Ok(gen.tally())
+        }));
+    }
+    drop(gen_tx);
+
+    // reward fleet: group-routed inbound queues, one shared scored sink
+    let n_gen = gen_node.replicas;
+    let vocab = env.manifest.config.vocab;
+    let mut reward_handles = Vec::new();
+    for (r, rx) in gen_rxs.into_iter().enumerate() {
+        let ctx = env.ctx.clone();
+        let sink = shared_sink.clone();
+        let baseline = cfg.baseline;
+        reward_handles.push(spawn_node(format!("reward-{r}"), fail.clone(), move || {
+            let mut rew = RewardExecutor::new(ctx.clone(), rx, sink, baseline, vocab, n_gen)?;
+            run_executor_loop(&mut rew, &ctx, None)?;
+            Ok(RewardTally {
+                scored: rew.scored,
+                groups: rew.groups_emitted,
+                reward_sum: rew.reward_sum,
+            })
+        }));
+    }
+    // only the reward workers' sink clones may signal EOF (store latch /
+    // channel senders)
+    drop(shared_sink);
+
+    let eval_handle = if graph.replicas(NodeKind::Evaluator) > 0 {
+        let ctx = env.ctx.clone();
+        let ecfg = EvaluatorConfig {
+            artifact_dir: cfg.artifact_dir.clone(),
+            every_versions: cfg.eval_every,
+            max_per_suite: cfg.eval_max_per_suite,
+        };
+        let log = env.log.clone();
+        Some(spawn_node("evaluator".into(), fail.clone(), move || {
+            let mut e = EvaluatorExecutor::new(ecfg, ctx.clone(), Some(log));
+            run_executor_loop(&mut e, &ctx, None)?;
+            Ok(e.results)
+        }))
+    } else {
+        None
+    };
+
+    // Trainer on the controller thread (Algorithm 1's "local executor").
+    // Init (artifact compilation) runs OUTSIDE the measured wall clock;
+    // the generator/reward threads warm up concurrently.
+    let mut trainer =
+        Trainer::new(trainer_cfg(cfg), env.ctx.clone(), source, Some(env.log.clone()));
+    let ckpt = (cfg.checkpoint_every > 0).then_some(cfg.checkpoint_every);
+    let mut t0 = Instant::now();
+    match trainer.init() {
+        Ok(()) => {
+            t0 = Instant::now();
+            if let Err(e) = run_executor_loop_initialized(&mut trainer, &env.ctx, ckpt) {
+                fail.record("trainer", e);
+            }
+        }
+        Err(e) => fail.record("trainer", e),
+    }
+
+    // shutdown fan-out: stop every loop, tear down the trainer's source
+    // (idempotent — on a trainer ERROR its own step() teardown never ran,
+    // and a blocked `send` into a full scored channel cannot observe the
+    // stop flag; dropping the receiver is what unblocks it), and close the
+    // store so blocked admission/sampling wakes. Then join everything.
+    trainer.drop_source();
+    env.ctx.request_stop();
+    if let Some(s) = &store {
+        s.close();
+    }
+    for (w, h) in gen_handles.into_iter().enumerate() {
+        if let Some(t) = join_node(h, "generator", w)? {
+            hub.add_generator(&t);
+        }
+    }
+    for (r, h) in reward_handles.into_iter().enumerate() {
+        if let Some(t) = join_node(h, "reward", r)? {
+            hub.add_reward(&t);
+        }
+    }
+    if let Some(h) = eval_handle {
+        if let Some(evals) = join_node(h, "evaluator", 0)? {
+            hub.add_evals(evals);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    if let Some(e) = fail.take() {
+        return Err(e);
+    }
+    // settle background planes before reading plane-wide counters
+    env.ctx.weights.flush();
+    if let Some(m) = &env.ctx.mem {
+        m.flush()?;
+    }
+    Ok(hub.finish(env.ctx.as_ref(), &trainer, wall))
+}
+
+/// The stepped scheduler: the same graph, driven strictly sequentially on
+/// one thread (the synchronous on-policy baseline). Generation runs under
+/// a per-step Generate lease with the Train prefetch hint armed, scoring
+/// drains every reward replica to empty, and one optimizer step closes
+/// the tick.
+fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
+    let cfg = env.cfg;
+    let ctx = &env.ctx;
+    let BuiltEdges {
+        gen_tx,
+        gen_rxs,
+        gen_stats,
+        scored,
+    } = build_edges(graph, cfg)?;
+    let n_reward = graph.replicas(NodeKind::Reward);
+    let ScoredPlane::Channel { tx, rx, stats } = scored else {
+        return Err(Error::Coordinator(
+            "the stepped scheduler requires a channel scored edge".into(),
+        ));
+    };
+    let mut hub = TelemetryHub::new(graph.mode_name, gen_stats, Some(stats), None);
+
+    let mut gen =
+        GeneratorWorker::new(0, gen_cfg(cfg, 0), ctx.clone(), env.scheduler.clone(), gen_tx);
+    let mut rewards = Vec::with_capacity(n_reward);
+    for rx in gen_rxs {
+        rewards.push(RewardExecutor::new(
+            ctx.clone(),
+            rx,
+            ScoredSink::Channel(tx.clone()),
+            cfg.baseline,
+            env.manifest.config.vocab,
+            1,
+        )?);
+    }
+    drop(tx);
+    let mut trainer = Trainer::new(
+        trainer_cfg(cfg),
+        ctx.clone(),
+        TrajectorySource::Channel { rx, producers: n_reward },
+        Some(env.log.clone()),
+    );
+
+    gen.init()?;
+    for r in rewards.iter_mut() {
+        r.init()?;
+    }
+    trainer.init()?;
+
+    let gen_lease_phase = match graph.node(NodeKind::Generator).map(|n| n.lease) {
+        Some(LeasePolicy::PerStep(p)) => Some(p),
+        _ => None,
+    };
+    let rows_per_step = env.manifest.config.train_batch;
+    // the topology is the source of truth for whether evals run; the
+    // stepped scheduler co-locates the declared evaluator node on the
+    // generator's PJRT context instead of spawning it
+    let run_evals = graph.replicas(NodeKind::Evaluator) > 0 && cfg.eval_every > 0;
+    let suites = task::eval_suites(cfg.eval_max_per_suite);
+    let t0 = Instant::now();
+
+    for step in 0..cfg.max_steps {
+        // Phase 1: generation — all rows complete under current weights.
+        // The Generate lease swaps offloadable trainer state to host
+        // behind decode, and the Train hint arms the prefetcher so the
+        // first optimizer shard is back on device before the batch ends.
+        {
+            let _gen_lease = match (&ctx.mem, gen_lease_phase) {
+                (Some(m), Some(p)) => Some(m.lease(p)?),
+                _ => None,
+            };
+            if let (Some(m), Some(_)) = (&ctx.mem, gen_lease_phase) {
+                m.hint_next(Phase::Train);
+            }
+            gen.generate_batch_sync(rows_per_step)?;
+        }
+        // Phase 2: scoring — drain every reward replica to empty.
+        loop {
+            let mut progressed = false;
+            for r in rewards.iter_mut() {
+                progressed |= r.drain_once()?;
+            }
+            if !progressed {
+                break;
+            }
+        }
+        // Phase 3: one train step (+ weight publication); the trainer
+        // brackets itself with Train/Sync leases.
+        match trainer.step()? {
+            StepOutcome::Progress => {}
+            other => {
+                return Err(Error::Coordinator(format!(
+                    "stepped trainer did not progress at step {step}: {other:?}"
+                )))
+            }
+        }
+        if run_evals && (step + 1) % cfg.eval_every == 0 {
+            // co-located: eval borrows the generator's PJRT context
+            let snap = ctx.weights.latest();
+            hub.add_evals(eval_policy(
+                gen.runtime_ref(),
+                &snap.data,
+                &suites,
+                cfg.eval_max_per_suite,
+                snap.version,
+            )?);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    // settle background planes before reading plane-wide counters
+    ctx.weights.flush();
+    if let Some(m) = &ctx.mem {
+        m.flush()?;
+    }
+    hub.add_generator(&gen.tally());
+    for r in &rewards {
+        hub.add_reward(&RewardTally {
+            scored: r.scored,
+            groups: r.groups_emitted,
+            reward_sum: r.reward_sum,
+        });
+    }
+    Ok(hub.finish(ctx.as_ref(), &trainer, wall))
+}

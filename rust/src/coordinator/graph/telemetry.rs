@@ -1,0 +1,125 @@
+//! The telemetry layer: every node reports its end-of-run tally into one
+//! [`TelemetryHub`], and the [`crate::coordinator::RunReport`] is assembled
+//! in exactly ONE place — [`TelemetryHub::finish`].
+//!
+//! This is where the old drivers' triplicated 25-field report blocks went,
+//! and it fixes their semantic drift: `trainer_recv_blocked_secs` is now
+//! *always* the scored-channel starvation time (0 when there is no scored
+//! channel) and the buffered store's sampling wait is its own field,
+//! `trainer_sample_wait_secs` — the two quantities the old async and
+//! buffered drivers used to cram into one name.
+
+use std::sync::Arc;
+
+use crate::coordinator::channel::ChannelStats;
+use crate::coordinator::controller::RunReport;
+use crate::coordinator::evaluator::EvalResult;
+use crate::coordinator::executor::ExecutorContext;
+use crate::coordinator::generator::GenTally;
+use crate::coordinator::trainer::Trainer;
+use crate::dataplane::RolloutStore;
+
+/// End-of-run counters a reward worker hands back.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RewardTally {
+    /// trajectories scored
+    pub scored: u64,
+    /// complete advantage groups emitted downstream
+    pub groups: u64,
+    pub reward_sum: f64,
+}
+
+impl RewardTally {
+    pub fn add(&mut self, other: &RewardTally) {
+        self.scored += other.scored;
+        self.groups += other.groups;
+        self.reward_sum += other.reward_sum;
+    }
+}
+
+/// Collects per-node tallies while a graph runs; one per launch.
+pub struct TelemetryHub {
+    mode_name: &'static str,
+    gen_stats: Arc<ChannelStats>,
+    scored_stats: Option<Arc<ChannelStats>>,
+    store: Option<Arc<RolloutStore>>,
+    gen: GenTally,
+    reward: RewardTally,
+    evals: Vec<EvalResult>,
+}
+
+impl TelemetryHub {
+    pub fn new(
+        mode_name: &'static str,
+        gen_stats: Arc<ChannelStats>,
+        scored_stats: Option<Arc<ChannelStats>>,
+        store: Option<Arc<RolloutStore>>,
+    ) -> TelemetryHub {
+        TelemetryHub {
+            mode_name,
+            gen_stats,
+            scored_stats,
+            store,
+            gen: GenTally::default(),
+            reward: RewardTally::default(),
+            evals: Vec::new(),
+        }
+    }
+
+    pub fn add_generator(&mut self, tally: &GenTally) {
+        self.gen.add(tally);
+    }
+
+    pub fn add_reward(&mut self, tally: &RewardTally) {
+        self.reward.add(tally);
+    }
+
+    pub fn add_evals(&mut self, evals: Vec<EvalResult>) {
+        self.evals.extend(evals);
+    }
+
+    /// Assemble the run report — the only constructor of a populated
+    /// [`RunReport`] in the codebase. Call after the weight-sync and
+    /// memory planes have been flushed, so plane-wide counters are final.
+    pub fn finish(self, ctx: &ExecutorContext, trainer: &Trainer, wall_secs: f64) -> RunReport {
+        let dataplane = self.store.as_ref().map(|s| s.snapshot());
+        // channel-sourced starvation vs store-sourced sampling wait: the
+        // two distinct fields the old drivers crammed into one name
+        let recv_blocked = match &self.scored_stats {
+            Some(s) => s.recv_blocked_secs(),
+            None => 0.0,
+        };
+        let sample_wait = match &dataplane {
+            Some(d) => d.sample_wait_secs,
+            None => 0.0,
+        };
+        let mut report = RunReport {
+            mode: self.mode_name.into(),
+            steps: trainer.current_step(),
+            wall_secs,
+            records: trainer.records.clone(),
+            evals: self.evals,
+            tokens_generated: self.gen.tokens,
+            trajectories: self.gen.trajectories,
+            chunks: self.gen.chunks,
+            weight_refreshes: self.gen.weight_refreshes,
+            reward_groups: self.reward.groups,
+            reward_rows_scored: self.reward.scored,
+            ddma_publishes: ctx.weights.publish_count(),
+            ddma_mean_publish_secs: ctx.weights.mean_publish_secs(),
+            ddma_mean_shard_max_secs: ctx.weights.mean_shard_max_secs(),
+            ddma_publish_blocked_secs: ctx.weights.publish_blocked_secs(),
+            ddma_coalesced_publishes: ctx.weights.coalesced_publishes(),
+            gen_swap_stall_secs: self.gen.swap_stall_secs,
+            gen_swaps: self.gen.swaps,
+            gen_send_blocked_secs: self.gen_stats.send_blocked_secs(),
+            trainer_recv_blocked_secs: recv_blocked,
+            trainer_sample_wait_secs: sample_wait,
+            dataplane,
+            metrics_path: None,
+            ..RunReport::default()
+        };
+        report.fill_mem_telemetry(ctx);
+        report
+    }
+}

@@ -1,0 +1,355 @@
+//! The topology layer: the training job as *data*.
+//!
+//! A [`Graph`] is a declarative description of the executor fleet and the
+//! links between them — how many replicas of each [`NodeKind`], which
+//! memory-plane lease each node's thread holds ([`LeasePolicy`]), whether
+//! it receives streamed weight versions, and what [`EdgeKind`] carries the
+//! trajectories. The three execution modes are three small *descriptions*
+//! built by [`topology`]; one generic runtime
+//! ([`super::runtime`]) launches any of them. Sync is not a separate
+//! engine: it is the same graph with step-sized channel capacities, driven
+//! by the stepped scheduler instead of free-running threads.
+
+use crate::coordinator::controller::{Mode, PipelineConfig};
+use crate::memplane::plan::Phase;
+use crate::runtime::Manifest;
+use crate::util::error::{Error, Result};
+
+/// The executor fleets a training topology is built from (paper §5.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// data-parallel inference replicas (continuous batching)
+    Generator,
+    /// rule-based scoring + group advantages; a fleet receives generation
+    /// groups scattered by group id
+    Reward,
+    /// the AIPO optimizer (always exactly one replica, on the controller
+    /// thread — Algorithm 1's "local executor")
+    Trainer,
+    /// optional held-out benchmark runs every K weight versions
+    Evaluator,
+}
+
+impl NodeKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            NodeKind::Generator => "generator",
+            NodeKind::Reward => "reward",
+            NodeKind::Trainer => "trainer",
+            NodeKind::Evaluator => "evaluator",
+        }
+    }
+}
+
+/// How a node's thread interacts with the colocated offloading memory
+/// plane ([`crate::memplane`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeasePolicy {
+    /// no lease at spawn — the executor manages its own phase brackets
+    /// internally (the trainer takes Train/Sync leases per step)
+    None,
+    /// hold the phase lease for the thread's whole lifetime (async modes:
+    /// phases overlap, so the lease is feasibility + accounting)
+    Lifetime(Phase),
+    /// the stepped scheduler brackets each step with the lease and hints
+    /// the next phase so the prefetcher can overlap the flip (sync mode)
+    PerStep(Phase),
+}
+
+/// One executor fleet in the topology.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeSpec {
+    pub kind: NodeKind,
+    /// replica count; 0 means the node is absent from this run
+    pub replicas: usize,
+    pub lease: LeasePolicy,
+    /// register a double-buffered weight-sync [`crate::weightsync::GeneratorSlot`]
+    /// per replica (async modes: publishes stream in behind decode)
+    pub sync_slot: bool,
+}
+
+/// The transport an edge runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// bounded group-routed gather: many producers, one consumer per
+    /// downstream replica, each trajectory delivered to replica
+    /// `group_id % n` (group integrity for the advantage baseline)
+    GroupRouted { capacity: usize },
+    /// bounded gather: many producers, one consumer
+    Gather { capacity: usize },
+    /// the sharded staleness-aware [`crate::dataplane::RolloutStore`]
+    Store,
+}
+
+/// One directed link between two fleets.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeSpec {
+    pub name: &'static str,
+    pub from: NodeKind,
+    pub to: NodeKind,
+    pub kind: EdgeKind,
+}
+
+/// A complete declarative topology: what [`Graph::launch`] runs. The
+/// graph IS the mode — `mode_name` labels it for reports/DOT, `stepped`
+/// selects the scheduler, and everything else is nodes and edges.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// the mode string reports carry ("sync" / "async" / "async_buffered")
+    pub mode_name: &'static str,
+    /// drive the graph with the stepped one-thread scheduler (strictly
+    /// sequential generate → score → train ticks) instead of free-running
+    /// threads; the nodes and edges are the same either way
+    pub stepped: bool,
+    pub nodes: Vec<NodeSpec>,
+    pub edges: Vec<EdgeSpec>,
+}
+
+/// Build the topology for `cfg` (mode, fleet sizes, channel capacities).
+/// The manifest only contributes the sync mode's rows-per-step (channels
+/// must absorb one whole step without blocking).
+pub fn topology(cfg: &PipelineConfig, manifest: &Manifest) -> Graph {
+    topology_with_rows(cfg, manifest.config.train_batch)
+}
+
+/// [`topology`] with the per-step row count passed explicitly (lets tests
+/// and `--dump-graph` describe a topology without loading artifacts).
+pub fn topology_with_rows(cfg: &PipelineConfig, rows_per_step: usize) -> Graph {
+    let n_reward = cfg.n_reward_workers.max(1);
+    let evaluator = NodeSpec {
+        kind: NodeKind::Evaluator,
+        replicas: usize::from(cfg.eval_every > 0),
+        lease: LeasePolicy::None,
+        sync_slot: false,
+    };
+    let trainer = NodeSpec {
+        kind: NodeKind::Trainer,
+        replicas: 1,
+        lease: LeasePolicy::None, // brackets its own Train/Sync leases per step
+        sync_slot: false,
+    };
+    match cfg.mode {
+        Mode::Sync => {
+            // one thread drives everything; channels must absorb a whole
+            // step's traffic (worst case: one message per trajectory)
+            let cap = (2 * rows_per_step).max(64);
+            Graph {
+                mode_name: "sync",
+                stepped: true,
+                nodes: vec![
+                    NodeSpec {
+                        kind: NodeKind::Generator,
+                        replicas: 1,
+                        lease: LeasePolicy::PerStep(Phase::Generate),
+                        sync_slot: false, // re-attaches to the DDMA master directly
+                    },
+                    NodeSpec {
+                        kind: NodeKind::Reward,
+                        replicas: n_reward,
+                        lease: LeasePolicy::None,
+                        sync_slot: false,
+                    },
+                    trainer,
+                    evaluator,
+                ],
+                edges: vec![
+                    EdgeSpec {
+                        name: "generations",
+                        from: NodeKind::Generator,
+                        to: NodeKind::Reward,
+                        kind: EdgeKind::GroupRouted { capacity: cap },
+                    },
+                    EdgeSpec {
+                        name: "scored",
+                        from: NodeKind::Reward,
+                        to: NodeKind::Trainer,
+                        kind: EdgeKind::Gather { capacity: cap },
+                    },
+                ],
+            }
+        }
+        Mode::Async | Mode::AsyncBuffered => {
+            let buffered = cfg.mode == Mode::AsyncBuffered;
+            Graph {
+                mode_name: if buffered { "async_buffered" } else { "async" },
+                stepped: false,
+                nodes: vec![
+                    NodeSpec {
+                        kind: NodeKind::Generator,
+                        replicas: cfg.n_generator_workers.max(1),
+                        lease: LeasePolicy::Lifetime(Phase::Generate),
+                        sync_slot: true,
+                    },
+                    NodeSpec {
+                        kind: NodeKind::Reward,
+                        replicas: n_reward,
+                        lease: LeasePolicy::None,
+                        sync_slot: false,
+                    },
+                    trainer,
+                    evaluator,
+                ],
+                edges: vec![
+                    EdgeSpec {
+                        name: "generations",
+                        from: NodeKind::Generator,
+                        to: NodeKind::Reward,
+                        kind: EdgeKind::GroupRouted { capacity: cfg.queue_capacity },
+                    },
+                    EdgeSpec {
+                        name: "scored",
+                        from: NodeKind::Reward,
+                        to: NodeKind::Trainer,
+                        kind: if buffered {
+                            EdgeKind::Store
+                        } else {
+                            EdgeKind::Gather { capacity: cfg.scored_capacity }
+                        },
+                    },
+                ],
+            }
+        }
+    }
+}
+
+impl Graph {
+    /// The node spec for `kind` (absent nodes — replicas 0 — still have a
+    /// spec; a missing entry means the topology never mentions the kind).
+    pub fn node(&self, kind: NodeKind) -> Option<&NodeSpec> {
+        self.nodes.iter().find(|n| n.kind == kind)
+    }
+
+    /// Replica count for `kind` (0 when absent).
+    pub fn replicas(&self, kind: NodeKind) -> usize {
+        self.node(kind).map(|n| n.replicas).unwrap_or(0)
+    }
+
+    /// The edge delivering into `kind`.
+    pub fn edge_into(&self, kind: NodeKind) -> Option<&EdgeSpec> {
+        self.edges.iter().find(|e| e.to == kind)
+    }
+
+    /// Structural validation, run before anything spawns: every launchable
+    /// topology has exactly one trainer, at least one generator and reward
+    /// replica, a group-routed generations edge (group integrity), and a
+    /// scored edge the trainer can consume. The stepped scheduler drives a
+    /// single generator.
+    pub fn check(&self) -> Result<()> {
+        let fail = |msg: String| Err(Error::Coordinator(format!("invalid topology: {msg}")));
+        if self.replicas(NodeKind::Trainer) != 1 {
+            return fail("exactly one trainer replica required".into());
+        }
+        if self.replicas(NodeKind::Generator) == 0 {
+            return fail("at least one generator replica required".into());
+        }
+        if self.replicas(NodeKind::Reward) == 0 {
+            return fail("at least one reward replica required".into());
+        }
+        if self.stepped {
+            // the stepped scheduler must be able to honor every declared
+            // field — reject combinations it cannot execute rather than
+            // silently running with different semantics
+            if self.replicas(NodeKind::Generator) != 1 {
+                return fail("the stepped scheduler drives exactly one generator".into());
+            }
+            if let Some(g) = self.node(NodeKind::Generator) {
+                if g.sync_slot {
+                    return fail(
+                        "stepped generators re-attach to the DDMA master; sync slots \
+                         require free-running threads"
+                            .into(),
+                    );
+                }
+                if matches!(g.lease, LeasePolicy::Lifetime(_)) {
+                    return fail(
+                        "lifetime leases require free-running threads; stepped graphs \
+                         use per-step leases"
+                            .into(),
+                    );
+                }
+            }
+            if self.edge_into(NodeKind::Trainer).map(|e| e.kind) == Some(EdgeKind::Store) {
+                return fail("the stepped scheduler requires a channel scored edge".into());
+            }
+        }
+        for e in &self.edges {
+            if self.node(e.from).is_none() || self.node(e.to).is_none() {
+                return fail(format!("edge '{}' references a missing node", e.name));
+            }
+        }
+        match self.edge_into(NodeKind::Reward) {
+            Some(e) if matches!(e.kind, EdgeKind::GroupRouted { .. }) => {}
+            Some(e) => {
+                return fail(format!(
+                    "generations edge '{}' must be group-routed so advantage \
+                     groups stay whole",
+                    e.name
+                ))
+            }
+            None => return fail("reward fleet has no inbound edge".into()),
+        }
+        match self.edge_into(NodeKind::Trainer) {
+            Some(e) if matches!(e.kind, EdgeKind::Gather { .. } | EdgeKind::Store) => {}
+            Some(e) => {
+                return fail(format!(
+                    "scored edge '{}' must be a gather channel or the store",
+                    e.name
+                ))
+            }
+            None => return fail("trainer has no inbound edge".into()),
+        }
+        Ok(())
+    }
+
+    /// Render the resolved topology as Graphviz DOT (`--dump-graph`).
+    pub fn to_dot(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "digraph llamarl {{\n  label=\"{} topology ({})\";\n  rankdir=LR;\n  \
+             node [shape=box, fontname=\"monospace\"];\n",
+            self.mode_name,
+            if self.stepped {
+                "stepped scheduler"
+            } else {
+                "free-running threads"
+            }
+        ));
+        for n in &self.nodes {
+            if n.replicas == 0 {
+                continue;
+            }
+            let lease = match n.lease {
+                LeasePolicy::None => String::new(),
+                LeasePolicy::Lifetime(p) => format!("\\nlease: {p:?} (lifetime)"),
+                LeasePolicy::PerStep(p) => format!("\\nlease: {p:?} (per step)"),
+            };
+            let slot = if n.sync_slot { "\\nweight-sync slot" } else { "" };
+            out.push_str(&format!(
+                "  {} [label=\"{} x{}{}{}\"];\n",
+                n.kind.label(),
+                n.kind.label(),
+                n.replicas,
+                lease,
+                slot
+            ));
+        }
+        for e in &self.edges {
+            let kind = match e.kind {
+                EdgeKind::GroupRouted { capacity } => format!("group-routed, cap {capacity}"),
+                EdgeKind::Gather { capacity } => format!("gather, cap {capacity}"),
+                EdgeKind::Store => "rollout store".to_string(),
+            };
+            out.push_str(&format!(
+                "  {} -> {} [label=\"{} ({})\"];\n",
+                e.from.label(),
+                e.to.label(),
+                e.name,
+                kind
+            ));
+        }
+        // the DDMA weights path is not a data edge; show it dashed
+        out.push_str("  trainer -> generator [style=dashed, label=\"DDMA weights bus\"];\n");
+        out.push_str("}\n");
+        out
+    }
+}

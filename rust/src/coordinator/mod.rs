@@ -1,55 +1,69 @@
 //! The paper's system contribution (L3): executors, communication channels,
-//! and the single controller (paper §5), plus the synchronous baseline, the
-//! asynchronous off-policy pipeline (paper §4), and the buffered pipeline
-//! over the streaming trajectory data plane ([`crate::dataplane`]).
+//! and the single controller (paper §5) — expressed as a declarative
+//! execution graph ([`graph`]) that one generic runtime launches for the
+//! synchronous baseline, the asynchronous off-policy pipeline (paper §4),
+//! and the buffered pipeline over the streaming trajectory data plane
+//! ([`crate::dataplane`]).
 //!
 //! Topology (the Figure-1/Algorithm-2 flow, critic-free with rule-based
-//! scorers):
+//! scorers; render any resolved instance with `llamarl train --dump-graph`):
 //!
 //! ```text
-//!   PromptScheduler ──► Generator workers (DP) ──GATHER──► Reward executor
-//!        ▲                  ▲      │ park/resume                │ ScoredSink
-//!        │                  │      │ partial rollouts   ┌───────┴────────┐
-//!        │   DDMA weights   │      ▼              SCATTER (async)   push (buffered)
-//!        │   bus            │  ┌──────────────┐        │                │
-//!        │                  │  │ RolloutStore │◄───────┼────────────────┘
-//!        │                  │  │ shard│shard│… │       │
-//!        │                  │  └──────┬───────┘  scored channel
-//!        │                  │  sample │ ▲ watermark    │
-//!        │                  │         ▼ │              ▼
-//!        └─────────────── Trainer executor ◄───────────┘
+//!   PromptScheduler ──► Generator fleet (DP) ──GROUP-ROUTED──► Reward fleet
+//!        ▲                  ▲      │ park/resume   (group_id % n) │ ScoredSink
+//!        │                  │      │ partial rollouts     ┌───────┴────────┐
+//!        │   DDMA weights   │      ▼                gather (async)    push (buffered)
+//!        │   bus            │  ┌──────────────┐          │                │
+//!        │                  │  │ RolloutStore │◄─────────┼────────────────┘
+//!        │                  │  │ shard│shard│… │         │
+//!        │                  │  └──────┬───────┘   scored channel
+//!        │                  │  sample │ ▲ watermark      │
+//!        │                  │         ▼ │                ▼
+//!        └─────────────── Trainer executor ◄─────────────┘
 //! ```
 //!
-//! * **Sync mode** (DeepSpeed-Chat-like baseline): one thread, one PJRT
-//!   context shared by generation and training ("co-located"), strictly
-//!   sequential generate → score → train ticks.
-//! * **Async mode** (LlamaRL): every executor runs free on its own thread
-//!   with its own PJRT context, connected by bounded channels (backpressure
-//!   bounds off-policy lag) and the DDMA weights bus. Each generator owns a
-//!   double-buffered [`crate::weightsync::GeneratorSlot`]: publishes stream
-//!   the reshard plan into its staging buffer and the worker promotes the
-//!   new version with a fenced swap at chunk boundaries, so per-trajectory
-//!   weight versions always come from a complete snapshot.
+//! * **[`graph`]** — the topology/runtime/telemetry subsystem: modes are
+//!   *data* (`NodeSpec` fleets + `EdgeSpec` transports), launched by one
+//!   `Graph::launch` with named threads, lease policies, stop/EOF
+//!   propagation and panic→error joins; the `RunReport` is assembled in
+//!   exactly one place (`TelemetryHub`).
+//! * **Sync mode** (DeepSpeed-Chat-like baseline): the same graph driven
+//!   by the stepped scheduler — one thread, one PJRT context shared by
+//!   generation and training ("co-located"), strictly sequential
+//!   generate → score → train ticks.
+//! * **Async mode** (LlamaRL): every fleet runs free on its own threads
+//!   with its own PJRT context, connected by bounded channels
+//!   (backpressure bounds off-policy lag) and the DDMA weights bus. Each
+//!   generator owns a double-buffered
+//!   [`crate::weightsync::GeneratorSlot`]: publishes stream the reshard
+//!   plan into its staging buffer and the worker promotes the new version
+//!   with a fenced swap at chunk boundaries.
 //! * **AsyncBuffered mode** (streaming data plane): scored groups are
 //!   admitted into a staleness-aware [`crate::dataplane::RolloutStore`];
 //!   the trainer samples microbatches per a pluggable strategy and its
-//!   optimizer step drives the staleness watermark, so off-policy lag is
-//!   an enforced bound rather than a channel-capacity side effect.
+//!   optimizer step drives the staleness watermark.
+//! * **Reward fleet**: in every mode `n_reward_workers` scales scoring
+//!   like generation — the group-routed channel scatters whole advantage
+//!   groups by group id, so group integrity is structural.
 
 pub mod channel;
 pub mod controller;
 pub mod evaluator;
 pub mod executor;
 pub mod generator;
+pub mod graph;
 pub mod pretrain;
 pub mod reward;
 pub mod trainer;
 
-pub use channel::{gather_channel, scatter_channel, ChannelStats, Inbound, Message, Outbound};
+pub use channel::{
+    gather_channel, routed_channel, scatter_channel, ChannelStats, Inbound, Message, Outbound,
+};
 pub use controller::{run_training, Mode, PipelineConfig, RunReport, WeightSyncConfig};
 pub use evaluator::{eval_policy, EvalResult, EvaluatorConfig, EvaluatorExecutor};
 pub use executor::{run_executor_loop, Executor, ExecutorContext, StepOutcome};
 pub use generator::{GenTally, GeneratorConfig, GeneratorWorker};
+pub use graph::{topology, topology_with_rows, Graph, LaunchEnv, TelemetryHub};
 pub use pretrain::{run_pretraining, PretrainConfig, PretrainReport};
 pub use reward::{RewardExecutor, ScoredSink};
 pub use trainer::{TrainStepRecord, Trainer, TrainerConfig, TrajectorySource};

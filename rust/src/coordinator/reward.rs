@@ -10,6 +10,7 @@
 //! staleness-aware rollout store (Mode::AsyncBuffered).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -25,23 +26,43 @@ use crate::util::error::Result;
 /// pipeline, or the rollout store of the buffered one. The reward executor
 /// is agnostic — admission policy, eviction and staleness bookkeeping all
 /// live behind this seam.
+///
+/// A reward *fleet* shares one sink: channel EOFs fan in naturally (the
+/// trainer counts one per producer), while a shared store must only close
+/// once the LAST worker drains — the cloned sink carries that countdown
+/// latch.
+#[derive(Clone)]
 pub enum ScoredSink {
     Channel(Outbound),
-    Store(Arc<RolloutStore>),
+    /// shared store + remaining-producers latch (fan-in close)
+    Store(Arc<RolloutStore>, Arc<AtomicUsize>),
 }
 
 impl ScoredSink {
+    /// Store sink shared by `producers` reward workers; clone it once per
+    /// worker. The store closes when the last clone signals EOF.
+    pub fn shared_store(store: Arc<RolloutStore>, producers: usize) -> ScoredSink {
+        ScoredSink::Store(store, Arc::new(AtomicUsize::new(producers.max(1))))
+    }
+
     pub fn send_group(&self, group: Vec<Trajectory>) -> Result<()> {
         match self {
             ScoredSink::Channel(out) => out.send(Message::Scored(group)),
-            ScoredSink::Store(store) => store.push_group(group),
+            ScoredSink::Store(store, _) => store.push_group(group),
         }
     }
 
     pub fn send_eof(&self) {
         match self {
             ScoredSink::Channel(out) => out.send_eof(),
-            ScoredSink::Store(store) => store.close(),
+            ScoredSink::Store(store, latch) => {
+                // countdown never underflows: a second EOF from the same
+                // worker (impossible today, cheap to guard) is a no-op
+                let sub = |v: usize| v.checked_sub(1);
+                if latch.fetch_update(Ordering::AcqRel, Ordering::Acquire, sub) == Ok(1) {
+                    store.close();
+                }
+            }
         }
     }
 }

@@ -63,13 +63,15 @@ pub struct TrainStepRecord {
     pub rows: usize,
 }
 
-/// Where the trainer's microbatches come from: the scored SCATTER channel
+/// Where the trainer's microbatches come from: the scored channel
 /// (Mode::Sync / Mode::Async) or the rollout store (Mode::AsyncBuffered).
 /// With a store, microbatch assembly — sampling strategy, staleness
 /// enforcement — belongs to the store; the trainer only reports its clock
 /// back via the watermark.
 pub enum TrajectorySource {
-    Channel(Inbound),
+    /// bounded channel fed by `producers` reward workers; each sends one
+    /// EOF at drain, and the stream only ends once ALL have (fan-in)
+    Channel { rx: Inbound, producers: usize },
     Store(Arc<RolloutStore>),
 }
 
@@ -85,6 +87,9 @@ pub struct Trainer {
     step: u64,
     pending: VecDeque<Trajectory>,
     eof: bool,
+    /// channel-source EOFs received so far (fan-in: the stream ends when
+    /// every producer's EOF has arrived)
+    eofs_seen: usize,
     started: Option<Instant>,
     pub records: Vec<TrainStepRecord>,
     /// seconds blocked inside `WeightsBus::publish` (the DDMA handoff;
@@ -112,6 +117,7 @@ impl Trainer {
             step: 0,
             pending: VecDeque::new(),
             eof: false,
+            eofs_seen: 0,
             started: None,
             records: Vec::new(),
             publish_secs_total: 0.0,
@@ -133,15 +139,20 @@ impl Trainer {
         };
         while self.pending.len() < need && !self.eof {
             match source {
-                TrajectorySource::Channel(inbound) => {
-                    match inbound.recv_timeout(Duration::from_millis(50)) {
+                TrajectorySource::Channel { rx, producers } => {
+                    match rx.recv_timeout(Duration::from_millis(50)) {
                         Ok(Message::Scored(g)) => self.pending.extend(g),
                         Ok(Message::Trajectories(_)) => {
                             return Err(crate::util::error::Error::Coordinator(
                                 "trainer received unscored trajectories".into(),
                             ))
                         }
-                        Ok(Message::Eof) => self.eof = true,
+                        Ok(Message::Eof) => {
+                            self.eofs_seen += 1;
+                            if self.eofs_seen >= *producers {
+                                self.eof = true;
+                            }
+                        }
                         Err(_) => {
                             if self.ctx.should_stop() {
                                 return Ok(());
@@ -169,8 +180,11 @@ impl Trainer {
 
     /// Tear down the trajectory source (shutdown path): dropping a channel
     /// unblocks senders with ChannelClosed; a store is closed explicitly so
-    /// Block-admission producers wake up too.
-    fn drop_source(&mut self) {
+    /// Block-admission producers wake up too. Idempotent; the graph runtime
+    /// also calls it after a trainer *error*, where `step()`'s own teardown
+    /// never ran — without it, reward workers blocked in a full scored
+    /// channel could never observe the stop and the join would hang.
+    pub(crate) fn drop_source(&mut self) {
         if let Some(TrajectorySource::Store(store)) = &self.source {
             store.close();
         }

@@ -11,7 +11,8 @@
 //!   resharding plan between the trainer-side FSDP layout and the
 //!   generator-side TP layout ([`crate::weightsync::plan_reshard`]):
 //!   per-shard [`crate::weightsync::ShardPacket`]s (f32 / int8 / delta /
-//!   top-k) stream into every registered generator's double-buffered
+//!   top-k / density-adaptive auto) stream into every registered
+//!   generator's double-buffered
 //!   [`crate::weightsync::GeneratorSlot`], where decode keeps running on
 //!   version N until the fenced swap at a sequence boundary. With
 //!   [`BusOptions::background`] the fan-out runs on the
@@ -402,6 +403,14 @@ impl WeightsBus {
     /// as full f32.
     pub fn delta_full_resends(&self) -> u64 {
         self.metrics.delta_full_resends.load(Ordering::Relaxed)
+    }
+
+    /// Mean measured update density across adaptive-encoding ops
+    /// (`sync_encoding=auto`; 0.0 when the plane never measured one). The
+    /// full-vs-delta pick counts live in [`SyncMetrics::auto_full_ops`] /
+    /// [`SyncMetrics::auto_delta_ops`] via [`WeightsBus::metrics`].
+    pub fn mean_update_density(&self) -> f64 {
+        self.metrics.mean_update_density()
     }
 
     /// The shared counter block (bus + executor sides).

@@ -4,12 +4,14 @@
 //! LLM post-training, reproducing *LlamaRL* (Meta GenAI, 2025) as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the paper's system contribution: a
-//!   single-[`coordinator::Controller`] orchestrating [`coordinator::Executor`]s
-//!   over [`coordinator::channel`]s, with the asynchronous off-policy
+//! * **L3 (this crate)** — the paper's system contribution: a single
+//!   controller that resolves a declarative execution graph
+//!   ([`coordinator::graph`]) of [`coordinator::Executor`] fleets over
+//!   [`coordinator::channel`]s, with the asynchronous off-policy
 //!   pipeline, [`ddma`] weight synchronization, partial rollouts, the
-//!   synchronous DeepSpeed-Chat-like baseline, and a [`simulator`] that
-//!   re-derives the paper's H100-scale evaluation from its own cost model.
+//!   synchronous DeepSpeed-Chat-like baseline (the same graph, stepped),
+//!   and a [`simulator`] that re-derives the paper's H100-scale
+//!   evaluation from its own cost model.
 //! * **L2/L1 (build-time Python)** — `python/compile/` lowers the policy
 //!   model (JAX) and its Pallas kernels (fused AIPO loss, decode attention)
 //!   once into `artifacts/<config>/*.hlo.txt`; the [`runtime`] loads and
@@ -23,9 +25,9 @@
 //! | runtime | [`runtime`] (PJRT artifact loading & execution), [`model`] (flat params, tokenizer, checkpoints, quantization) |
 //! | RL | [`data`] (synthetic verifiable-reward tasks), [`rl`] (advantages, trajectories, AIPO config) |
 //! | data plane | [`dataplane`] (staleness-aware rollout store: admission/eviction policies, sampling strategies, partial-rollout resumption, lag telemetry) |
-//! | weight plane | [`weightsync`] (FSDP/TP shard layouts, bandwidth-balanced resharding planner, f32/int8/delta(+RLE)/top-k per-shard transfer, generation-overlapped double-buffered swap, background per-link-group streaming executor) |
+//! | weight plane | [`weightsync`] (FSDP/TP shard layouts, bandwidth-balanced resharding planner, f32/int8/delta(+RLE)/top-k/adaptive-auto per-shard transfer, generation-overlapped double-buffered swap, background per-link-group streaming executor) |
 //! | memory plane | [`memplane`] (per-rank HBM/host pool accounting over tracked allocation classes, phase-aware colocation planner with hard-capacity rejection, background offload/prefetch executor behind the phase-lease protocol) |
-//! | system | [`coordinator`] (executors, channels, controller, sync/async/buffered pipelines), [`ddma`] (the DDMA facade over [`weightsync`] + cluster link models) |
+//! | system | [`coordinator`] (executors, channels, and the single-controller execution graph: declarative `NodeSpec`/`EdgeSpec` topologies per mode, one generic `Graph::launch` runtime, `TelemetryHub` report assembly, reward fleets over group-routed channels), [`ddma`] (the DDMA facade over [`weightsync`] + cluster link models) |
 //! | evaluation | [`simulator`] (memory/cost models, Theorem 7.5 optimizer, discrete-event timelines), [`metrics`] |
 
 pub mod config;

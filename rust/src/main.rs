@@ -37,6 +37,7 @@ const BOOL_FLAGS: &[&str] = &[
     "sync-inline",
     "colocate",
     "offload-eager",
+    "dump-graph",
     "help",
 ];
 
@@ -88,13 +89,19 @@ USAGE: llamarl <subcommand> [flags]
             --steps N [--config file.json] [--workers N] [--rho X] [--lr X]
             [--quantize-generator] [--eval-every K] [--out DIR]
             [--init-checkpoint DIR]
+            [--reward-workers N (scatter generation groups across N reward
+             executors by group id; groups stay whole)]
+            [--dump-graph (print the resolved topology as Graphviz DOT and
+             exit without training)]
             buffered data plane: [--store-capacity N] [--store-shards N]
             [--max-staleness K (0=unbounded)]
             [--admission block|drop_newest|evict_oldest]
             [--sampling fifo|freshest|staleness_weighted]
             weight-sync plane: [--sync-trainer-shards N]
             [--sync-generator-shards N] [--sync-quantized]
-            [--sync-encoding full|int8|delta|topk] [--sync-topk-frac X]
+            [--sync-encoding full|int8|delta|topk|auto (auto measures the
+             update density per publish and picks full vs delta)]
+            [--sync-topk-frac X]
             [--sync-inline (disable the background streaming executor)]
             [--sync-link-groups N (0 = one worker per generator shard;
              explicit N uses bandwidth-balanced link groups)]
@@ -114,6 +121,18 @@ USAGE: llamarl <subcommand> [flags]
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config::resolve(args)?;
+    if args.flag("dump-graph") {
+        // Resolve and print the declarative topology as DOT instead of
+        // running it. The manifest only contributes sync-mode channel
+        // capacities; without artifacts the nano default (4 rows) applies.
+        let graph = match Manifest::load(&cfg.artifact_dir) {
+            Ok(m) => llamarl::coordinator::topology(&cfg, &m),
+            Err(_) => llamarl::coordinator::topology_with_rows(&cfg, 4),
+        };
+        graph.check()?;
+        print!("{}", graph.to_dot());
+        return Ok(());
+    }
     llamarl::log_info!(
         "main",
         "training: mode={:?} artifacts={} steps={}",

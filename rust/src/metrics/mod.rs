@@ -25,9 +25,12 @@ pub fn print_report(r: &RunReport) {
             r.records.iter().map(|x| x.max_lag).max().unwrap_or(0)
         );
     }
+    // channel starvation and store sampling waits are distinct quantities
+    // (the scored channel does not exist in buffered mode and vice versa)
     println!(
-        "backpressure: generators blocked {:.2}s sending, trainer starved {:.2}s receiving",
-        r.gen_send_blocked_secs, r.trainer_recv_blocked_secs
+        "backpressure: generators blocked {:.2}s sending, trainer starved \
+         {:.2}s on the scored channel, {:.2}s sampling the store",
+        r.gen_send_blocked_secs, r.trainer_recv_blocked_secs, r.trainer_sample_wait_secs
     );
     println!(
         "weight sync: trainer blocked {:.3}s publishing ({} coalesced), \
@@ -131,6 +134,15 @@ pub fn report_json(r: &RunReport) -> Value {
         (
             "trainer_recv_blocked_secs",
             Value::num(r.trainer_recv_blocked_secs),
+        ),
+        (
+            "trainer_sample_wait_secs",
+            Value::num(r.trainer_sample_wait_secs),
+        ),
+        ("reward_groups", Value::num(r.reward_groups as f64)),
+        (
+            "reward_rows_scored",
+            Value::num(r.reward_rows_scored as f64),
         ),
         (
             "offload_d2h_bytes",

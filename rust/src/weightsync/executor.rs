@@ -43,7 +43,8 @@ use crate::model::VersionedParams;
 use crate::weightsync::plan::{ReshardPlan, TransferOp};
 use crate::weightsync::swap::{GeneratorSlot, RecvOutcome};
 use crate::weightsync::transfer::{
-    encode_shard, encode_shard_delta, ShardEncoding, ShardPacket, ShardPayload,
+    encode_shard, encode_shard_auto, encode_shard_delta, ShardEncoding, ShardPacket,
+    ShardPayload,
 };
 
 /// Shared counters for one weight-sync plane. The bus owns the publisher
@@ -72,6 +73,17 @@ pub struct SyncMetrics {
     pub sparse_packets: AtomicU64,
     /// zero-run-encoded dense-XOR delta packets shipped
     pub rle_packets: AtomicU64,
+    /// adaptive-encoding ops that shipped self-contained full f32 (the
+    /// measured density was at or above the sparse break-even)
+    pub auto_full_ops: AtomicU64,
+    /// adaptive-encoding ops that shipped an exact delta
+    pub auto_delta_ops: AtomicU64,
+    /// sum of measured per-op update densities, in parts per million (so
+    /// the ultra-sparse regimes auto targets don't round to zero), with
+    /// its sample count below (adaptive encoding only) — the density row
+    /// of `BENCH_weightsync.json`
+    pub density_ppm_sum: AtomicU64,
+    pub density_samples: AtomicU64,
     /// nanoseconds worker threads spent streaming (background mode)
     pub stream_nanos: AtomicU64,
 }
@@ -103,6 +115,17 @@ impl SyncMetrics {
             self.shard_max_nanos.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
         }
     }
+
+    /// Mean measured update density across adaptive-encoding ops (0.0 when
+    /// the plane never ran `sync_encoding=auto`).
+    pub fn mean_update_density(&self) -> f64 {
+        let n = self.density_samples.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.density_ppm_sum.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        }
+    }
 }
 
 /// One enqueued publish: the minted snapshot plus the delta base (the
@@ -129,6 +152,8 @@ pub(crate) fn begin_on(subs: &[Arc<GeneratorSlot>], version: u64, expected: usiz
 /// wherever the base-version fence rejects a delta. Returns payload bytes
 /// moved (primary once, plus the fallback if one was needed — matching the
 /// inline path's op-granular accounting).
+// internal fan-out kernel shared by the inline and background paths
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn fan_out_op(
     data: &[f32],
     base: Option<&VersionedParams>,
@@ -146,6 +171,20 @@ pub(crate) fn fan_out_op(
         (ShardEncoding::TopK, Some(b)) => {
             let k = ((op.len as f64 * topk_frac).ceil() as usize).max(1);
             encode_shard_delta(data, &b.data, b.version, version, op, Some(k)).0
+        }
+        (ShardEncoding::Auto, Some(b)) => {
+            // adaptive: measure density at encode time, pick full vs delta
+            let (pkt, density) = encode_shard_auto(data, &b.data, b.version, version, op);
+            metrics
+                .density_ppm_sum
+                .fetch_add((density * 1e6).round() as u64, Ordering::Relaxed);
+            metrics.density_samples.fetch_add(1, Ordering::Relaxed);
+            if matches!(pkt.payload, ShardPayload::F32(_)) {
+                metrics.auto_full_ops.fetch_add(1, Ordering::Relaxed);
+            } else {
+                metrics.auto_delta_ops.fetch_add(1, Ordering::Relaxed);
+            }
+            pkt
         }
         // first publish of a delta plane has no base yet -> full f32
         _ => encode_shard(data, version, op, encoding),
@@ -446,6 +485,50 @@ mod tests {
                 .all(|(a, b)| a.to_bits() == b.to_bits()),
             "delta-streamed weights must match the published snapshot bit-exactly"
         );
+    }
+
+    #[test]
+    fn auto_stream_splits_full_and_delta_by_density() {
+        let n = 256;
+        let (exec, subs, metrics) = spawn_exec(n, ShardEncoding::Auto, 1);
+        let slot = GeneratorSlot::new(Arc::new(VersionedParams::new(0, vec![0.0; n])));
+        subs.lock().unwrap().push(slot.clone());
+
+        let mut prev = Arc::new(VersionedParams::new(0, vec![0.0; n]));
+        for v in 1..=10u64 {
+            let mut data = prev.data.as_ref().clone();
+            if v % 2 == 0 {
+                data[(v as usize * 31) % n] += 1.0; // sparse publish
+            } else {
+                for x in data.iter_mut() {
+                    *x += 0.5; // dense publish
+                }
+            }
+            let snap = Arc::new(VersionedParams::new(v, data));
+            exec.enqueue(PublishJob {
+                params: snap.clone(),
+                base: Some(prev.clone()),
+            });
+            exec.flush();
+            prev = snap;
+        }
+        while slot.swap_at_boundary().is_some() {}
+        let front = slot.attach();
+        assert_eq!(front.version, 10);
+        assert!(
+            front
+                .data
+                .iter()
+                .zip(prev.data.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "auto-streamed weights must match the published snapshot bit-exactly"
+        );
+        // both regimes must have been picked at least once, and the mean
+        // measured density must sit strictly between them
+        assert!(metrics.auto_full_ops.load(Ordering::Relaxed) > 0);
+        assert!(metrics.auto_delta_ops.load(Ordering::Relaxed) > 0);
+        let d = metrics.mean_update_density();
+        assert!(d > 0.0 && d < 1.0, "mean density {d} out of range");
     }
 
     #[test]

@@ -31,10 +31,12 @@
 //!   f32, int8-per-shard (via `model::quant`, dequantized at attach, error
 //!   within [`crate::model::int8_error_bound`]), exact delta (sparse
 //!   index+value or dense bitwise-XOR vs the previous published version,
-//!   bit-exact), and top-k sparse delta (k largest updates, error bounded
+//!   bit-exact), top-k sparse delta (k largest updates, error bounded
 //!   by the largest dropped update, full-f32 fallback past the density
-//!   break-even). [`TransferTiming`] models DDMA time = max over parallel
-//!   shards.
+//!   break-even), and adaptive `auto` (measure the update density at
+//!   encode time per publish, pick exact delta below the break-even and
+//!   self-contained full f32 above it — [`encode_shard_auto`]).
+//!   [`TransferTiming`] models DDMA time = max over parallel shards.
 //! * [`swap`] — [`GeneratorSlot`]: double-buffered receive slots with
 //!   version fencing (only complete versions promote, at a boundary the
 //!   generator chooses) and base-version fencing (a delta packet against a
@@ -65,6 +67,6 @@ pub use layout::{contiguous_entries, even_entries, Layout, LayoutKind, ShardInte
 pub use plan::{group_balance_ratio, plan_reshard, ReshardPlan, TransferOp};
 pub use swap::{GeneratorSlot, RecvOutcome};
 pub use transfer::{
-    apply_packet, encode_shard, encode_shard_delta, rle_encode_xor, run_transfer,
-    run_transfer_delta, ShardEncoding, ShardPacket, ShardPayload, TransferTiming,
+    apply_packet, encode_shard, encode_shard_auto, encode_shard_delta, rle_encode_xor,
+    run_transfer, run_transfer_delta, ShardEncoding, ShardPacket, ShardPayload, TransferTiming,
 };

@@ -70,13 +70,24 @@ pub enum ShardEncoding {
     /// top-k sparse delta: only the k largest |updates| ship; bounded error,
     /// base-version fenced, full-f32 fallback past the density threshold
     TopK,
+    /// adaptive per-publish selection: measure the update density against
+    /// the base at encode time and pick exact delta (smallest of
+    /// sparse/RLE/dense) below [`SPARSE_BREAK_EVEN_DENSITY`], full f32 at
+    /// or above it — a dense update gains nothing from the delta machinery
+    /// and the full form needs no base fence
+    Auto,
 }
 
 impl ShardEncoding {
     /// Delta-family encodings need a base snapshot and the base-version
-    /// fence on the receive side.
+    /// fence on the receive side. `Auto` is included: it *may* ship deltas,
+    /// so receivers must seed staging from their front and keep the fence
+    /// armed (full-f32 payloads apply fine on a delta-seeded staging).
     pub fn is_delta(self) -> bool {
-        matches!(self, ShardEncoding::Delta | ShardEncoding::TopK)
+        matches!(
+            self,
+            ShardEncoding::Delta | ShardEncoding::TopK | ShardEncoding::Auto
+        )
     }
 }
 
@@ -177,9 +188,10 @@ pub fn encode_shard(
 ) -> ShardPacket {
     let chunk = &params[op.start..op.end()];
     let payload = match encoding {
-        ShardEncoding::F32 | ShardEncoding::Delta | ShardEncoding::TopK => {
-            ShardPayload::F32(chunk.to_vec())
-        }
+        ShardEncoding::F32
+        | ShardEncoding::Delta
+        | ShardEncoding::TopK
+        | ShardEncoding::Auto => ShardPayload::F32(chunk.to_vec()),
         ShardEncoding::Int8 => {
             ShardPayload::Int8(quantize_int8(chunk, &shard_entry(chunk.len())))
         }
@@ -291,6 +303,38 @@ pub fn encode_shard_delta(
         },
         dropped_bound,
     )
+}
+
+/// Adaptive per-publish encoding ([`ShardEncoding::Auto`]): measure the
+/// op's bitwise update density against `base` and pick the wire form at
+/// encode time — exact delta (the usual smallest-of sparse/RLE/dense
+/// selection of [`encode_shard_delta`]) below
+/// [`SPARSE_BREAK_EVEN_DENSITY`], full f32 at or above it. Both forms are
+/// bit-exact; the full form is additionally self-contained (no base fence,
+/// so a receiver whose staging lost the base needs no re-send). Returns
+/// the packet plus the measured density, which the sync plane accumulates
+/// into its telemetry (`BENCH_weightsync.json` density row).
+pub fn encode_shard_auto(
+    params: &[f32],
+    base: &[f32],
+    base_version: u64,
+    version: u64,
+    op: TransferOp,
+) -> (ShardPacket, f64) {
+    let chunk = &params[op.start..op.end()];
+    let base_chunk = &base[op.start..op.end()];
+    let changed = chunk
+        .iter()
+        .zip(base_chunk)
+        .filter(|(n, b)| n.to_bits() != b.to_bits())
+        .count();
+    let density = changed as f64 / op.len.max(1) as f64;
+    let pkt = if density >= SPARSE_BREAK_EVEN_DENSITY {
+        encode_shard(params, version, op, ShardEncoding::F32)
+    } else {
+        encode_shard_delta(params, base, base_version, version, op, None).0
+    };
+    (pkt, density)
 }
 
 /// Apply a packet into the receive buffer (the destination rank's attach);
@@ -634,6 +678,45 @@ mod tests {
         let mut dst = vec![0.0; 64]; // full payload needs no base seeding
         apply_packet(&mut dst, &pkt);
         assert_eq!(dst, new);
+    }
+
+    #[test]
+    fn auto_encoding_adapts_to_update_density() {
+        let base = params(400);
+        let op = TransferOp {
+            src: 0,
+            dst: 0,
+            start: 0,
+            len: 400,
+        };
+        // sparse update (2%): auto must pick a delta form and stay bit-exact
+        let mut sparse_new = base.clone();
+        for i in (0..400).step_by(50) {
+            sparse_new[i] += 0.25;
+        }
+        let (pkt, density) = encode_shard_auto(&sparse_new, &base, 1, 2, op);
+        assert!(density < 0.05, "measured density {density}");
+        assert!(
+            pkt.base_version().is_some(),
+            "sparse auto publish must ship a delta"
+        );
+        assert!(pkt.payload_bytes() < 400 * 4 / 4);
+        let mut dst = base.clone();
+        apply_packet(&mut dst, &pkt);
+        assert!(dst
+            .iter()
+            .zip(&sparse_new)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        // dense update (every element): auto must ship self-contained f32
+        let dense_new: Vec<f32> = base.iter().map(|x| x + 1.0).collect();
+        let (pkt, density) = encode_shard_auto(&dense_new, &base, 1, 2, op);
+        assert_eq!(density, 1.0);
+        assert!(matches!(pkt.payload, ShardPayload::F32(_)));
+        assert_eq!(pkt.base_version(), None, "full form carries no base fence");
+        let mut dst = vec![0.0f32; 400]; // needs no base seeding
+        apply_packet(&mut dst, &pkt);
+        assert_eq!(dst, dense_new);
     }
 
     #[test]

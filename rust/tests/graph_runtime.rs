@@ -1,0 +1,418 @@
+//! The single-controller execution graph: topology unit tests (no
+//! artifacts needed), group-routing/EOF fan-in behaviour, a mid-run
+//! generator-failure stress test (clean join, no hang), and a mode-parity
+//! suite asserting each mode's report invariants match the pre-refactor
+//! drivers on the nano artifacts at fixed seed.
+
+use llamarl::coordinator::channel::{routed_channel, Message};
+use llamarl::coordinator::graph::{topology_with_rows, EdgeKind, Graph, LeasePolicy, NodeKind};
+use llamarl::coordinator::{run_training, Mode, PipelineConfig};
+use llamarl::data::{Difficulty, Problem};
+use llamarl::rl::{FinishReason, Trajectory};
+
+fn cfg_for(mode: Mode) -> PipelineConfig {
+    PipelineConfig {
+        mode,
+        ..PipelineConfig::default()
+    }
+}
+
+#[test]
+fn sync_topology_is_the_same_graph_stepped() {
+    let mut cfg = cfg_for(Mode::Sync);
+    cfg.n_reward_workers = 2;
+    cfg.eval_every = 2;
+    let g = topology_with_rows(&cfg, 8);
+    g.check().unwrap();
+    assert!(g.stepped, "sync is the stepped scheduler, not a separate engine");
+    assert_eq!(g.mode_name, "sync");
+    assert_eq!(g.replicas(NodeKind::Generator), 1);
+    assert_eq!(g.replicas(NodeKind::Reward), 2);
+    assert_eq!(g.replicas(NodeKind::Trainer), 1);
+    assert_eq!(g.replicas(NodeKind::Evaluator), 1);
+    // sync generator leases per step; no weight-sync slot (re-attaches to
+    // the DDMA master directly)
+    let gen = g.node(NodeKind::Generator).unwrap();
+    assert!(matches!(gen.lease, LeasePolicy::PerStep(_)));
+    assert!(!gen.sync_slot);
+    // channels must absorb a whole step: capacity (2*rows).max(64)
+    let Some(e) = g.edge_into(NodeKind::Reward) else {
+        panic!("generations edge missing")
+    };
+    assert_eq!(e.kind, EdgeKind::GroupRouted { capacity: 64 });
+    let Some(e) = g.edge_into(NodeKind::Trainer) else {
+        panic!("scored edge missing")
+    };
+    assert_eq!(e.kind, EdgeKind::Gather { capacity: 64 });
+}
+
+#[test]
+fn async_topology_replicas_and_edges() {
+    let mut cfg = cfg_for(Mode::Async);
+    cfg.n_generator_workers = 3;
+    cfg.n_reward_workers = 2;
+    cfg.queue_capacity = 5;
+    cfg.scored_capacity = 7;
+    let g = topology_with_rows(&cfg, 8);
+    g.check().unwrap();
+    assert!(!g.stepped);
+    assert_eq!(g.mode_name, "async");
+    assert_eq!(g.replicas(NodeKind::Generator), 3);
+    assert_eq!(g.replicas(NodeKind::Reward), 2);
+    assert_eq!(g.replicas(NodeKind::Evaluator), 0, "eval_every=0 -> absent");
+    let gen = g.node(NodeKind::Generator).unwrap();
+    assert!(matches!(gen.lease, LeasePolicy::Lifetime(_)));
+    assert!(gen.sync_slot, "async generators receive streamed versions");
+    assert_eq!(
+        g.edge_into(NodeKind::Reward).unwrap().kind,
+        EdgeKind::GroupRouted { capacity: 5 }
+    );
+    assert_eq!(
+        g.edge_into(NodeKind::Trainer).unwrap().kind,
+        EdgeKind::Gather { capacity: 7 }
+    );
+}
+
+#[test]
+fn buffered_topology_routes_scored_through_the_store() {
+    let mut cfg = cfg_for(Mode::AsyncBuffered);
+    cfg.n_generator_workers = 2;
+    let g = topology_with_rows(&cfg, 8);
+    g.check().unwrap();
+    assert_eq!(g.mode_name, "async_buffered");
+    assert_eq!(g.edge_into(NodeKind::Trainer).unwrap().kind, EdgeKind::Store);
+    assert!(matches!(
+        g.edge_into(NodeKind::Reward).unwrap().kind,
+        EdgeKind::GroupRouted { .. }
+    ));
+}
+
+#[test]
+fn check_rejects_malformed_topologies() {
+    let base = topology_with_rows(&cfg_for(Mode::Async), 8);
+    base.check().unwrap();
+
+    // no trainer
+    let mut g: Graph = base.clone();
+    g.nodes.retain(|n| n.kind != NodeKind::Trainer);
+    assert!(g.check().is_err());
+
+    // zero reward replicas
+    let mut g = base.clone();
+    for n in g.nodes.iter_mut() {
+        if n.kind == NodeKind::Reward {
+            n.replicas = 0;
+        }
+    }
+    assert!(g.check().is_err());
+
+    // non-routed generations edge would split advantage groups
+    let mut g = base.clone();
+    for e in g.edges.iter_mut() {
+        if e.to == NodeKind::Reward {
+            e.kind = EdgeKind::Gather { capacity: 4 };
+        }
+    }
+    assert!(g.check().is_err());
+
+    // the stepped scheduler drives exactly one generator
+    let mut g = base.clone();
+    g.stepped = true;
+    for n in g.nodes.iter_mut() {
+        if n.kind == NodeKind::Generator {
+            n.replicas = 2;
+        }
+    }
+    assert!(g.check().is_err());
+
+    // stepped graphs cannot honor sync slots, lifetime leases, or a store
+    // scored edge — check() must reject them rather than silently running
+    // with different semantics (the async topology declares all three)
+    let mut g = base.clone();
+    g.stepped = true;
+    for n in g.nodes.iter_mut() {
+        if n.kind == NodeKind::Generator {
+            n.replicas = 1;
+        }
+    }
+    assert!(g.check().is_err(), "stepped + sync_slot/lifetime lease must fail");
+
+    let mut g = topology_with_rows(&cfg_for(Mode::Sync), 8);
+    g.edges.retain(|e| e.to != NodeKind::Trainer);
+    g.edges.push(llamarl::coordinator::graph::EdgeSpec {
+        name: "scored",
+        from: NodeKind::Reward,
+        to: NodeKind::Trainer,
+        kind: EdgeKind::Store,
+    });
+    assert!(g.check().is_err(), "stepped + store scored edge must fail");
+}
+
+#[test]
+fn dot_rendering_names_every_fleet_and_edge() {
+    let mut cfg = cfg_for(Mode::AsyncBuffered);
+    cfg.n_generator_workers = 2;
+    cfg.n_reward_workers = 3;
+    let dot = topology_with_rows(&cfg, 8).to_dot();
+    assert!(dot.starts_with("digraph llamarl {"));
+    assert!(dot.contains("generator x2"));
+    assert!(dot.contains("reward x3"));
+    assert!(dot.contains("trainer x1"));
+    assert!(dot.contains("rollout store"));
+    assert!(dot.contains("group-routed"));
+    assert!(dot.contains("DDMA weights bus"));
+    assert!(dot.ends_with("}\n"));
+}
+
+fn traj(group_id: u64, replica: usize, n_replicas: usize) -> Trajectory {
+    Trajectory {
+        group_id,
+        replica,
+        n_replicas,
+        problem: Problem {
+            prompt: "1+1=".into(),
+            answer: "2".into(),
+            difficulty: Difficulty::Add1,
+        },
+        prompt_tokens: vec![1],
+        response_tokens: vec![2],
+        behavior_logp: vec![-0.5],
+        gen_version: 0,
+        chunks: 1,
+        finish: FinishReason::Eos,
+        reward: 0.0,
+        advantage: 0.0,
+    }
+}
+
+#[test]
+fn group_routing_preserves_group_integrity_across_producers() {
+    // Many producer threads emit interleaved replicas of many groups; the
+    // routed channel must land EVERY replica of group g on consumer g % n,
+    // and deliver every trajectory exactly once.
+    let n_consumers = 3;
+    let n_producers = 4;
+    let n_groups = 24u64;
+    let n_replicas = 4;
+    let (tx, rxs) = routed_channel("integrity", 256, n_consumers);
+    let mut handles = Vec::new();
+    for p in 0..n_producers {
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            // producer p emits replica p of every group, one mixed batch
+            // per few groups (exercises the per-message split)
+            for chunk in (0..n_groups).collect::<Vec<_>>().chunks(5) {
+                let batch: Vec<Trajectory> =
+                    chunk.iter().map(|g| traj(*g, p, n_replicas)).collect();
+                tx.send(Message::Trajectories(batch)).unwrap();
+            }
+            tx.send_eof();
+        }));
+    }
+    drop(tx);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut total = 0usize;
+    for (i, rx) in rxs.iter().enumerate() {
+        let mut eofs = 0;
+        while eofs < n_producers {
+            match rx.recv().unwrap() {
+                Message::Trajectories(v) => {
+                    for t in &v {
+                        assert_eq!(
+                            t.group_id % n_consumers as u64,
+                            i as u64,
+                            "replica of group {} routed to the wrong consumer",
+                            t.group_id
+                        );
+                    }
+                    total += v.len();
+                }
+                Message::Eof => eofs += 1,
+                Message::Scored(_) => panic!("unexpected scored message"),
+            }
+        }
+        // EOF fan-in: every producer's EOF reached this consumer — n_eofs
+        // is exactly the producer count, the contract the reward fleet's
+        // drain counting relies on
+        assert_eq!(eofs, n_producers);
+    }
+    assert_eq!(total, n_groups as usize * n_producers);
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated suites (skip gracefully without `make artifacts`, exactly
+// like tests/integration.rs).
+// ---------------------------------------------------------------------------
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/nano/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/nano missing (run `make artifacts`)");
+    }
+    ok
+}
+
+fn base_cfg(tag: &str) -> PipelineConfig {
+    PipelineConfig {
+        artifact_dir: "artifacts/nano".into(),
+        max_steps: 3,
+        max_response: 10,
+        n_generations: 4,
+        seed: 17,
+        out_dir: std::env::temp_dir().join(format!("llamarl_graph_{tag}")),
+        ..PipelineConfig::default()
+    }
+}
+
+/// Mode parity: the graph runtime must report exactly what the
+/// pre-refactor drivers reported for each mode — steps, zero-lag sync
+/// semantics, channel-vs-store wait accounting — at a fixed seed.
+#[test]
+fn mode_parity_sync_matches_prerefactor_invariants() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = PipelineConfig {
+        mode: Mode::Sync,
+        ..base_cfg("parity_sync")
+    };
+    let r1 = run_training(&cfg).unwrap();
+    assert_eq!(r1.mode, "sync");
+    assert_eq!(r1.steps, 3);
+    assert_eq!(r1.records.len(), 3);
+    assert!(r1.trajectories >= 3 * 4);
+    assert!(r1.reward_groups > 0, "reward tally must flow through the hub");
+    assert_eq!(r1.reward_rows_scored, r1.trajectories);
+    for rec in &r1.records {
+        assert_eq!(rec.max_lag, 0, "sync mode must stay on-policy");
+        assert!((rec.mean_ratio - 1.0).abs() < 1e-2);
+    }
+    // no store in sync mode: the sampling-wait field stays zero
+    assert_eq!(r1.trainer_sample_wait_secs, 0.0);
+    assert!(r1.dataplane.is_none());
+
+    // the stepped scheduler is single-threaded and seeded: a second run at
+    // the same seed reproduces the training trajectory exactly
+    let cfg2 = PipelineConfig {
+        out_dir: std::env::temp_dir().join("llamarl_graph_parity_sync2"),
+        ..cfg
+    };
+    let r2 = run_training(&cfg2).unwrap();
+    assert_eq!(r1.records.len(), r2.records.len());
+    for (a, b) in r1.records.iter().zip(&r2.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {} loss differs", a.step);
+        assert_eq!(a.reward_mean.to_bits(), b.reward_mean.to_bits());
+        assert_eq!(a.rows, b.rows);
+    }
+    assert_eq!(r1.tokens_generated, r2.tokens_generated);
+    assert_eq!(r1.trajectories, r2.trajectories);
+}
+
+#[test]
+fn mode_parity_async_and_buffered_report_distinct_wait_fields() {
+    if !have_artifacts() {
+        return;
+    }
+    let asy = run_training(&PipelineConfig {
+        mode: Mode::Async,
+        n_generator_workers: 2,
+        max_steps: 4,
+        ..base_cfg("parity_async")
+    })
+    .unwrap();
+    assert_eq!(asy.mode, "async");
+    assert_eq!(asy.steps, 4);
+    assert!(asy.ddma_publishes >= 4);
+    assert!(asy.dataplane.is_none());
+    // async trainer waits on the scored CHANNEL, never the store
+    assert_eq!(asy.trainer_sample_wait_secs, 0.0);
+    for rec in &asy.records {
+        assert!(rec.mean_ratio.is_finite() && rec.mean_ratio > 0.0);
+    }
+
+    let mut cfg = PipelineConfig {
+        mode: Mode::AsyncBuffered,
+        n_generator_workers: 2,
+        max_steps: 4,
+        ..base_cfg("parity_buf")
+    };
+    cfg.store.capacity = 64;
+    cfg.store.max_staleness = Some(3);
+    let buf = run_training(&cfg).unwrap();
+    assert_eq!(buf.mode, "async_buffered");
+    assert_eq!(buf.steps, 4);
+    let dp = buf.dataplane.expect("buffered mode must report store telemetry");
+    assert!(dp.admitted > 0);
+    assert!(dp.max_sampled_lag <= 3);
+    // buffered trainer waits inside store sampling, never the channel —
+    // the fixed semantic split the old drivers conflated
+    assert_eq!(buf.trainer_recv_blocked_secs, 0.0);
+    assert_eq!(buf.trainer_sample_wait_secs, dp.sample_wait_secs);
+}
+
+#[test]
+fn reward_fleet_scales_scoring_with_group_integrity() {
+    if !have_artifacts() {
+        return;
+    }
+    // A full group (n_generations replicas) must assemble on exactly one
+    // reward node for the advantage baseline to be computable at all: if
+    // routing ever split a group, no node would reach n_replicas rows and
+    // the run could not complete its steps.
+    for mode in [Mode::Async, Mode::AsyncBuffered] {
+        let mut cfg = PipelineConfig {
+            mode,
+            n_generator_workers: 2,
+            n_reward_workers: 3,
+            max_steps: 3,
+            ..base_cfg("fleet")
+        };
+        cfg.store.capacity = 64;
+        let r = run_training(&cfg).unwrap();
+        assert_eq!(r.steps, 3, "{mode:?} with a reward fleet must complete");
+        assert!(r.reward_groups > 0);
+        assert!(
+            r.records.iter().all(|rec| rec.rows > 0),
+            "every step trained on assembled groups"
+        );
+    }
+    // sync mode drives the same fleet through the stepped scheduler
+    let cfg = PipelineConfig {
+        mode: Mode::Sync,
+        n_reward_workers: 2,
+        max_steps: 2,
+        ..base_cfg("fleet_sync")
+    };
+    let r = run_training(&cfg).unwrap();
+    assert_eq!(r.steps, 2);
+    assert!(r.reward_groups > 0);
+}
+
+#[test]
+fn midrun_generator_error_propagates_to_a_clean_join() {
+    if !have_artifacts() {
+        return;
+    }
+    // The injected failure hits after 2 decode chunks, mid-pipeline. The
+    // graph runtime must record it, fan the stop out (closing the store in
+    // buffered mode so nothing blocks), join every thread, and surface
+    // the error — not hang, not panic, not return a bogus report.
+    for mode in [Mode::Async, Mode::AsyncBuffered] {
+        let cfg = PipelineConfig {
+            mode,
+            n_generator_workers: 2,
+            n_reward_workers: 2,
+            max_steps: 50, // far more steps than the failure allows
+            debug_fail_generator_after: Some(2),
+            ..base_cfg("failprop")
+        };
+        let err = run_training(&cfg).expect_err("injected failure must surface");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("injected failure"),
+            "{mode:?}: unexpected error: {msg}"
+        );
+    }
+}

@@ -103,6 +103,7 @@ require_true publish_blocked_5x
 require_true delta_exact
 require_true rle_below_full
 require_true topk_within_bound
+require_true auto_adaptive
 require_ratio overlap_stall_speedup
 require_ratio publish_blocked_speedup 5
 
