@@ -267,12 +267,5 @@ fn main() {
             llamarl::util::json::Value::Bool(sampled_lag_bounded),
         ),
     ]);
-    let line = json.to_string();
-    println!("BENCH_dataplane.json {line}");
-    let target_dir = std::env::var("CARGO_TARGET_DIR")
-        .unwrap_or_else(|_| format!("{}/../target", env!("CARGO_MANIFEST_DIR")));
-    let path = format!("{target_dir}/BENCH_dataplane.json");
-    if let Err(e) = std::fs::write(&path, &line) {
-        eprintln!("warning: could not write {path}: {e}");
-    }
+    llamarl::util::bench::emit_summary("BENCH_dataplane.json", &json);
 }

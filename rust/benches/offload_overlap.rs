@@ -341,12 +341,5 @@ fn main() {
         ("integrity_ok", Value::Bool(integrity_ok)),
         ("moved_full_volume", Value::Bool(moved_ok)),
     ]);
-    let line = json.to_string();
-    println!("BENCH_offload.json {line}");
-    let target_dir = std::env::var("CARGO_TARGET_DIR")
-        .unwrap_or_else(|_| format!("{}/../target", env!("CARGO_MANIFEST_DIR")));
-    let path = format!("{target_dir}/BENCH_offload.json");
-    if let Err(e) = std::fs::write(&path, &line) {
-        eprintln!("warning: could not write {path}: {e}");
-    }
+    llamarl::util::bench::emit_summary("BENCH_offload.json", &json);
 }

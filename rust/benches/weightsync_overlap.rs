@@ -539,14 +539,5 @@ fn main() {
         ("topk_within_bound", Value::Bool(topk_ok)),
         ("auto_adaptive", Value::Bool(auto_adaptive)),
     ]);
-    let line = json.to_string();
-    println!("BENCH_weightsync.json {line}");
-    // cargo runs benches with CWD = the package dir; the workspace target
-    // dir lives one level up unless CARGO_TARGET_DIR overrides it
-    let target_dir = std::env::var("CARGO_TARGET_DIR")
-        .unwrap_or_else(|_| format!("{}/../target", env!("CARGO_MANIFEST_DIR")));
-    let path = format!("{target_dir}/BENCH_weightsync.json");
-    if let Err(e) = std::fs::write(&path, &line) {
-        eprintln!("warning: could not write {path}: {e}");
-    }
+    llamarl::util::bench::emit_summary("BENCH_weightsync.json", &json);
 }

@@ -178,6 +178,10 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             "init_checkpoint" => {
                 cfg.init_checkpoint = Some(PathBuf::from(val.as_str().unwrap_or("")))
             }
+            "trace" => cfg.trace = Some(PathBuf::from(val.as_str().unwrap_or(""))),
+            "metrics_interval_secs" => {
+                cfg.metrics_interval_secs = val.as_f64().unwrap_or(0.0).max(0.0)
+            }
             other => return Err(Error::Config(format!("unknown config key '{other}'"))),
         }
     }
@@ -271,6 +275,12 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.str_opt("init-checkpoint") {
         cfg.init_checkpoint = Some(PathBuf::from(v));
     }
+    if let Some(v) = args.str_opt("trace") {
+        cfg.trace = Some(PathBuf::from(v));
+    }
+    cfg.metrics_interval_secs = args
+        .f64_or("metrics-interval", cfg.metrics_interval_secs)?
+        .max(0.0);
     Ok(())
 }
 
@@ -452,6 +462,28 @@ mod tests {
         let v = Value::parse(r#"{"n_reward_workers":0}"#).unwrap();
         apply_json(&mut cfg, &v).unwrap();
         assert_eq!(cfg.n_reward_workers, 1);
+    }
+
+    #[test]
+    fn trace_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        assert!(cfg.trace.is_none(), "tracing is opt-in");
+        assert_eq!(cfg.metrics_interval_secs, 0.0);
+        let v = Value::parse(r#"{"trace":"out/t.json","metrics_interval_secs":0.5}"#).unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some(std::path::Path::new("out/t.json")));
+        assert_eq!(cfg.metrics_interval_secs, 0.5);
+
+        let args = Args::parse(
+            ["--trace", "t2.json", "--metrics-interval", "1.5"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some(std::path::Path::new("t2.json")));
+        assert_eq!(cfg.metrics_interval_secs, 1.5);
     }
 
     #[test]

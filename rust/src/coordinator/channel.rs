@@ -29,6 +29,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::rl::Trajectory;
+use crate::trace;
 use crate::util::error::{Error, Result};
 
 /// Data messages flowing between executors.
@@ -132,9 +133,11 @@ impl Outbound {
         let idx = self.next.get() % self.senders.len();
         self.next.set(idx + 1);
         let t0 = Instant::now();
+        let span = trace::span(trace::SEND_BLOCKED);
         self.senders[idx]
             .send(msg)
             .map_err(|_| Error::ChannelClosed(self.name.clone()))?;
+        drop(span);
         // (send on a non-full channel is ~free; anything measurable is
         // backpressure block time)
         self.stats.add_send_blocked(t0.elapsed());
@@ -184,6 +187,7 @@ impl Outbound {
             parts[(t.group_id % n as u64) as usize].push(t);
         }
         let t0 = Instant::now();
+        let _span = trace::span(trace::SEND_BLOCKED);
         for (i, part) in parts.into_iter().enumerate() {
             if part.is_empty() {
                 continue;
@@ -219,17 +223,21 @@ impl Inbound {
     /// Blocking receive with starvation accounting.
     pub fn recv(&self) -> Result<Message> {
         let t0 = Instant::now();
+        let span = trace::span(trace::RECV_BLOCKED);
         let m = self
             .rx
             .recv()
             .map_err(|_| Error::ChannelClosed(self.name.clone()))?;
+        drop(span);
         self.stats.add_recv_blocked(t0.elapsed());
         Ok(m)
     }
 
     pub fn recv_timeout(&self, d: Duration) -> std::result::Result<Message, RecvTimeoutError> {
         let t0 = Instant::now();
+        let span = trace::span(trace::RECV_BLOCKED);
         let r = self.rx.recv_timeout(d);
+        drop(span);
         self.stats.add_recv_blocked(t0.elapsed());
         r
     }

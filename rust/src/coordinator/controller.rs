@@ -36,6 +36,7 @@ use crate::memplane::{MemPlane, MemPlaneConfig};
 use crate::model::load_init_params;
 use crate::rl::{AipoConfig, Baseline};
 use crate::runtime::Manifest;
+use crate::trace::{chrome, Collector};
 use crate::util::error::{Error, Result};
 use crate::util::logging::JsonlWriter;
 use crate::weightsync::{Layout, ShardEncoding};
@@ -128,6 +129,13 @@ pub struct PipelineConfig {
     /// start RL from this pretrained checkpoint (bare params) instead of
     /// the random init — see coordinator::pretrain
     pub init_checkpoint: Option<PathBuf>,
+    /// arm the tracing plane and export a Chrome Trace Event Format file
+    /// here at run end; the streaming JSONL event log rides along at
+    /// `out_dir/trace_events.jsonl` (see [`crate::trace`])
+    pub trace: Option<PathBuf>,
+    /// periodic live-telemetry snapshot cadence in seconds (0 disables);
+    /// snapshots append to `out_dir/telemetry_snapshots.jsonl`
+    pub metrics_interval_secs: f64,
     /// FAULT-INJECTION TEST HOOK: make every generator error out after N
     /// decode chunks, exercising the graph runtime's error propagation.
     /// Never settable from JSON/CLI.
@@ -160,6 +168,8 @@ impl Default for PipelineConfig {
             seed: 0,
             out_dir: std::env::temp_dir().join("llamarl_run"),
             init_checkpoint: None,
+            trace: None,
+            metrics_interval_secs: 0.0,
             debug_fail_generator_after: None,
         }
     }
@@ -350,6 +360,15 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     let metrics_path = cfg.out_dir.join("metrics.jsonl");
     let log = Arc::new(JsonlWriter::create(&metrics_path)?);
 
+    // Arm the tracing plane (opt-in via --trace): the recorder + collector
+    // live for exactly the duration of the launch, streaming the JSONL
+    // event log incrementally; the Chrome export happens after the graph
+    // joins — on the error path too, where a timeline is most useful.
+    let collector = match &cfg.trace {
+        Some(_) => Some(Collector::start(cfg.out_dir.join("trace_events.jsonl"))?),
+        None => None,
+    };
+
     let env = LaunchEnv {
         cfg,
         manifest: &manifest,
@@ -357,7 +376,18 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
         scheduler,
         log,
     };
-    let mut report = graph.launch(&env)?;
+    let launched = graph.launch(&env);
+    if let Some(c) = collector {
+        let exported = c.finish().and_then(|trace_log| match &cfg.trace {
+            Some(path) => chrome::export(&trace_log, path),
+            None => Ok(()),
+        });
+        // never mask the run's own error with an export error
+        if launched.is_ok() {
+            exported?;
+        }
+    }
+    let mut report = launched?;
     report.metrics_path = Some(metrics_path);
     Ok(report)
 }

@@ -38,6 +38,7 @@ use crate::data::{task, PromptScheduler};
 use crate::dataplane::{RolloutStore, StoreConfig};
 use crate::memplane::plan::Phase;
 use crate::runtime::Manifest;
+use crate::trace::{self, Sampler};
 use crate::util::error::{Error, Result};
 use crate::util::logging::JsonlWriter;
 
@@ -196,16 +197,22 @@ where
     let reported = name.clone();
     std::thread::Builder::new()
         .name(name)
-        .spawn(move || match catch_unwind(AssertUnwindSafe(body)) {
-            Ok(Ok(tally)) => Some(tally),
-            Ok(Err(e)) => {
-                fail.record(&reported, e);
-                None
-            }
-            Err(_) => {
-                fail.record(&reported, Error::msg("panicked"));
-                None
-            }
+        .spawn(move || {
+            // the thread name doubles as the trace track identity
+            trace::instant(trace::NODE_START, 0.0);
+            let out = match catch_unwind(AssertUnwindSafe(body)) {
+                Ok(Ok(tally)) => Some(tally),
+                Ok(Err(e)) => {
+                    fail.record(&reported, e);
+                    None
+                }
+                Err(_) => {
+                    fail.record(&reported, Error::msg("panicked"));
+                    None
+                }
+            };
+            trace::instant(trace::NODE_STOP, 0.0);
+            out
         })
         .expect("spawn graph node thread")
 }
@@ -216,6 +223,24 @@ fn join_node<T>(h: JoinHandle<Option<T>>, kind: &str, idx: usize) -> Result<Opti
     h.join().map_err(|_| {
         Error::Coordinator(format!("node {kind}-{idx} panicked outside the runtime guard"))
     })
+}
+
+/// Start the `--metrics-interval` live-telemetry sampler when configured.
+/// The handle keeps the snapshot thread alive; stopping (or dropping) it
+/// writes one final snapshot so the series covers the whole run.
+fn start_sampler(
+    cfg: &PipelineConfig,
+    hub: &TelemetryHub,
+    ctx: Arc<ExecutorContext>,
+) -> Result<Option<Sampler>> {
+    if cfg.metrics_interval_secs <= 0.0 {
+        return Ok(None);
+    }
+    Ok(Some(Sampler::start(
+        cfg.out_dir.join("telemetry_snapshots.jsonl"),
+        cfg.metrics_interval_secs,
+        hub.live_sampler(ctx),
+    )?))
 }
 
 /// The free-running scheduler: one named thread per replica, trainer on
@@ -245,6 +270,7 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     };
     let mut hub = TelemetryHub::new(graph.mode_name, gen_stats, scored_stats, store.clone());
     let fail = FailState::new(env.ctx.clone(), store.clone());
+    let sampler = start_sampler(cfg, &hub, env.ctx.clone())?;
 
     // generator fleet: each replica registers its weight-sync slot (when
     // the topology says so) and holds its lease per the node's policy
@@ -326,6 +352,9 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     let mut trainer =
         Trainer::new(trainer_cfg(cfg), env.ctx.clone(), source, Some(env.log.clone()));
     let ckpt = (cfg.checkpoint_every > 0).then_some(cfg.checkpoint_every);
+    // the controller thread hosts the trainer; name its trace track so
+    // publish/store spans land on a "trainer" timeline
+    trace::set_track("trainer");
     let mut t0 = Instant::now();
     match trainer.init() {
         Ok(()) => {
@@ -372,6 +401,9 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     if let Some(m) = &env.ctx.mem {
         m.flush()?;
     }
+    if let Some(s) = sampler {
+        s.stop();
+    }
     Ok(hub.finish(env.ctx.as_ref(), &trainer, wall))
 }
 
@@ -396,6 +428,10 @@ fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
         ));
     };
     let mut hub = TelemetryHub::new(graph.mode_name, gen_stats, Some(stats), None);
+    let sampler = start_sampler(cfg, &hub, env.ctx.clone())?;
+    // one thread drives every phase here; the generate/score/train spans
+    // below mark which phase the controller timeline is in
+    trace::set_track("controller");
 
     let mut gen =
         GeneratorWorker::new(0, gen_cfg(cfg, 0), ctx.clone(), env.scheduler.clone(), gen_tx);
@@ -442,6 +478,7 @@ fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
         // behind decode, and the Train hint arms the prefetcher so the
         // first optimizer shard is back on device before the batch ends.
         {
+            let _span = trace::span_with(trace::GENERATE, step as f64);
             let _gen_lease = match (&ctx.mem, gen_lease_phase) {
                 (Some(m), Some(p)) => Some(m.lease(p)?),
                 _ => None,
@@ -452,23 +489,29 @@ fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
             gen.generate_batch_sync(rows_per_step)?;
         }
         // Phase 2: scoring — drain every reward replica to empty.
-        loop {
-            let mut progressed = false;
-            for r in rewards.iter_mut() {
-                progressed |= r.drain_once()?;
-            }
-            if !progressed {
-                break;
+        {
+            let _span = trace::span_with(trace::SCORE, step as f64);
+            loop {
+                let mut progressed = false;
+                for r in rewards.iter_mut() {
+                    progressed |= r.drain_once()?;
+                }
+                if !progressed {
+                    break;
+                }
             }
         }
         // Phase 3: one train step (+ weight publication); the trainer
         // brackets itself with Train/Sync leases.
-        match trainer.step()? {
-            StepOutcome::Progress => {}
-            other => {
-                return Err(Error::Coordinator(format!(
-                    "stepped trainer did not progress at step {step}: {other:?}"
-                )))
+        {
+            let _span = trace::span_with(trace::TRAIN, step as f64);
+            match trainer.step()? {
+                StepOutcome::Progress => {}
+                other => {
+                    return Err(Error::Coordinator(format!(
+                        "stepped trainer did not progress at step {step}: {other:?}"
+                    )))
+                }
             }
         }
         if run_evals && (step + 1) % cfg.eval_every == 0 {
@@ -488,6 +531,9 @@ fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     ctx.weights.flush();
     if let Some(m) = &ctx.mem {
         m.flush()?;
+    }
+    if let Some(s) = sampler {
+        s.stop();
     }
     hub.add_generator(&gen.tally());
     for r in &rewards {

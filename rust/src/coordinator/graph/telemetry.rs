@@ -18,6 +18,7 @@ use crate::coordinator::executor::ExecutorContext;
 use crate::coordinator::generator::GenTally;
 use crate::coordinator::trainer::Trainer;
 use crate::dataplane::RolloutStore;
+use crate::util::json::Value;
 
 /// End-of-run counters a reward worker hands back.
 #[derive(Debug, Clone, Copy, Default)]
@@ -76,6 +77,72 @@ impl TelemetryHub {
 
     pub fn add_evals(&mut self, evals: Vec<EvalResult>) {
         self.evals.extend(evals);
+    }
+
+    /// Build the closure the `--metrics-interval` sampler drives: clones
+    /// of the hub's shared counter handles, read lock-free into one flat
+    /// JSONL object per tick — the same counters [`TelemetryHub::finish`]
+    /// aggregates at run end, observable while the run is still going.
+    pub fn live_sampler(&self, ctx: Arc<ExecutorContext>) -> impl Fn() -> Value + Send + 'static {
+        use std::sync::atomic::Ordering;
+        let mode = self.mode_name;
+        let gen_stats = self.gen_stats.clone();
+        let scored_stats = self.scored_stats.clone();
+        let store = self.store.clone();
+        move || {
+            let mut pairs = vec![
+                ("mode", Value::str(mode)),
+                (
+                    "trainer_step",
+                    Value::num(ctx.trainer_step.load(Ordering::Relaxed) as f64),
+                ),
+                ("ddma_publishes", Value::num(ctx.weights.publish_count() as f64)),
+                (
+                    "ddma_publish_blocked_secs",
+                    Value::num(ctx.weights.publish_blocked_secs()),
+                ),
+                (
+                    "ddma_coalesced_publishes",
+                    Value::num(ctx.weights.coalesced_publishes() as f64),
+                ),
+                (
+                    "gen_send_blocked_secs",
+                    Value::num(gen_stats.send_blocked_secs()),
+                ),
+            ];
+            if let Some(s) = &scored_stats {
+                pairs.push((
+                    "trainer_recv_blocked_secs",
+                    Value::num(s.recv_blocked_secs()),
+                ));
+            }
+            if let Some(s) = &store {
+                let d = s.snapshot();
+                pairs.push(("store_occupancy", Value::num(d.occupancy as f64)));
+                pairs.push(("store_admitted", Value::num(d.admitted as f64)));
+                pairs.push(("store_evicted", Value::num(d.evicted as f64)));
+                pairs.push(("store_dropped_stale", Value::num(d.dropped_stale as f64)));
+                pairs.push(("store_sampled", Value::num(d.sampled as f64)));
+                pairs.push(("store_sample_wait_secs", Value::num(d.sample_wait_secs)));
+            }
+            if let Some(m) = &ctx.mem {
+                let mm = m.metrics();
+                pairs.push((
+                    "offload_d2h_bytes",
+                    Value::num(mm.d2h_bytes.load(Ordering::Relaxed) as f64),
+                ));
+                pairs.push((
+                    "offload_h2d_bytes",
+                    Value::num(mm.h2d_bytes.load(Ordering::Relaxed) as f64),
+                ));
+                pairs.push(("offload_wait_secs", Value::num(mm.wait_secs())));
+                pairs.push((
+                    "offload_prefetch_hits",
+                    Value::num(mm.prefetch_hits.load(Ordering::Relaxed) as f64),
+                ));
+            }
+            Value::object(pairs)
+        }
     }
 
     /// Assemble the run report — the only constructor of a populated

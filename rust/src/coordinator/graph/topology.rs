@@ -324,11 +324,25 @@ impl Graph {
                 LeasePolicy::PerStep(p) => format!("\\nlease: {p:?} (per step)"),
             };
             let slot = if n.sync_slot { "\\nweight-sync slot" } else { "" };
+            // replicated nodes run one named thread per replica; single
+            // nodes one thread. The same names are the telemetry/trace
+            // track identities, so a dumped graph maps 1:1 onto the
+            // tracks in trace exports and snapshot series.
+            let tracks = match n.replicas {
+                1 => format!("\\ntrack: {}", n.kind.label()),
+                r => format!(
+                    "\\ntracks: {}-0..{}-{}",
+                    n.kind.label(),
+                    n.kind.label(),
+                    r - 1
+                ),
+            };
             out.push_str(&format!(
-                "  {} [label=\"{} x{}{}{}\"];\n",
+                "  {} [label=\"{} x{}{}{}{}\"];\n",
                 n.kind.label(),
                 n.kind.label(),
                 n.replicas,
+                tracks,
                 lease,
                 slot
             ));

@@ -33,6 +33,7 @@ use crate::data::PromptTask;
 use crate::dataplane::policy::{AdmissionPolicy, SamplingStrategy};
 use crate::dataplane::stats::{DataPlaneSnapshot, DataPlaneStats};
 use crate::rl::Trajectory;
+use crate::trace;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
@@ -222,6 +223,7 @@ impl RolloutStore {
         if evicted > 0 {
             self.release(evicted);
             self.stats.evicted.fetch_add(evicted as u64, Ordering::Relaxed);
+            trace::instant(trace::STORE_EVICT, evicted as f64);
         }
         evicted
     }
@@ -245,6 +247,7 @@ impl RolloutStore {
             self.stats
                 .dropped_stale
                 .fetch_add(purged as u64, Ordering::Relaxed);
+            trace::instant(trace::STORE_DROP_STALE, purged as f64);
         }
         purged
     }
@@ -268,6 +271,7 @@ impl RolloutStore {
         }
         if stale > 0 {
             self.stats.dropped_stale.fetch_add(stale, Ordering::Relaxed);
+            trace::instant(trace::STORE_DROP_STALE, stale as f64);
         }
         // a group larger than the whole store can only ever keep its
         // newest `capacity` rows
@@ -277,6 +281,7 @@ impl RolloutStore {
             self.stats
                 .dropped_capacity
                 .fetch_add(excess as u64, Ordering::Relaxed);
+            trace::instant(trace::STORE_DROP_CAPACITY, excess as f64);
         }
         if rows.is_empty() {
             return Ok(());
@@ -314,6 +319,7 @@ impl RolloutStore {
                     self.stats
                         .dropped_capacity
                         .fetch_add(n as u64, Ordering::Relaxed);
+                    trace::instant(trace::STORE_DROP_CAPACITY, n as f64);
                     return Ok(());
                 }
             }
@@ -338,6 +344,7 @@ impl RolloutStore {
                 .push_back(Entry { seq, traj: t });
         }
         self.stats.admitted.fetch_add(n as u64, Ordering::Relaxed);
+        trace::instant(trace::STORE_ADMIT, n as f64);
         self.stats.note_occupancy(self.occupancy());
         self.cv.notify_all();
         Ok(())
@@ -444,6 +451,7 @@ impl RolloutStore {
     pub fn sample(&self, max_rows: usize, timeout: Duration) -> Option<Vec<Trajectory>> {
         let deadline = Instant::now() + timeout;
         let t0 = Instant::now();
+        let _span = trace::span_with(trace::STORE_SAMPLE, max_rows as f64);
         // consumer-side starvation accounting covers every exit path —
         // timeouts and EOF included — so buffered-mode "trainer starved"
         // numbers stay comparable with channel recv accounting

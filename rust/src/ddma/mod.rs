@@ -46,6 +46,7 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::model::VersionedParams;
+use crate::trace;
 use crate::util::error::Result;
 use crate::weightsync::executor::{begin_on, fan_out_op, PublishJob};
 use crate::weightsync::{
@@ -239,6 +240,10 @@ impl WeightsBus {
         // encode/fan-out work.
         let _serial = self.publish_lock.lock().unwrap();
         let version = self.version.load(Ordering::SeqCst) + 1;
+        trace::instant(trace::VERSION_MINT, version as f64);
+        // publish_block: how long THIS thread is stuck inside publish —
+        // enqueue-only with the executor, the whole fan-out inline
+        let _block_span = trace::span_with(trace::PUBLISH_BLOCK, version as f64);
         // the previous master snapshot is the delta base
         let base = self.latest();
         let snap = Arc::new(VersionedParams::new(version, data));
@@ -264,6 +269,7 @@ impl WeightsBus {
                 // front buffer.
                 let subs = self.subscribers.lock().unwrap().clone();
                 if !subs.is_empty() {
+                    let _sync_span = trace::span_with(trace::WEIGHT_SYNC, version as f64);
                     begin_on(&subs, version, self.plan.ops.len(), self.encoding.is_delta());
                     let delta_base = if self.encoding.is_delta() {
                         Some(base.as_ref())

@@ -28,6 +28,7 @@
 //! | weight plane | [`weightsync`] (FSDP/TP shard layouts, bandwidth-balanced resharding planner, f32/int8/delta(+RLE)/top-k/adaptive-auto per-shard transfer, generation-overlapped double-buffered swap, background per-link-group streaming executor) |
 //! | memory plane | [`memplane`] (per-rank HBM/host pool accounting over tracked allocation classes, phase-aware colocation planner with hard-capacity rejection, background offload/prefetch executor behind the phase-lease protocol) |
 //! | system | [`coordinator`] (executors, channels, and the single-controller execution graph: declarative `NodeSpec`/`EdgeSpec` topologies per mode, one generic `Graph::launch` runtime, `TelemetryHub` report assembly, reward fleets over group-routed channels), [`ddma`] (the DDMA facade over [`weightsync`] + cluster link models) |
+//! | observability | [`trace`] (per-thread lock-free span/instant recorder, background collector → streaming JSONL event log, Chrome Trace Event Format export, periodic live telemetry snapshots — all four planes instrumented) |
 //! | evaluation | [`simulator`] (memory/cost models, Theorem 7.5 optimizer, discrete-event timelines), [`metrics`] |
 
 pub mod config;
@@ -41,6 +42,7 @@ pub mod model;
 pub mod rl;
 pub mod runtime;
 pub mod simulator;
+pub mod trace;
 pub mod util;
 pub mod weightsync;
 

@@ -9,6 +9,7 @@
 //!   dataplane synthetic channel-vs-store data-plane comparison (no
 //!             artifacts needed)
 //!   info      inspect an artifact bundle
+//!   tracecheck  validate a Chrome trace file emitted by `train --trace`
 //!
 //! Examples:
 //!   llamarl train --preset nano --mode async --steps 5
@@ -72,6 +73,7 @@ fn run(args: &Args) -> Result<()> {
         Some("timeline") => cmd_timeline(args),
         Some("dataplane") => cmd_dataplane(args),
         Some("info") => cmd_info(args),
+        Some("tracecheck") => cmd_tracecheck(args),
         _ => {
             print_help();
             Ok(())
@@ -108,6 +110,11 @@ USAGE: llamarl <subcommand> [flags]
             memory plane: [--colocate (trainer+generator share the rank)]
             [--offload-classes grads,optim] [--offload-chunk-mb N]
             [--prefetch-depth N] [--offload-eager (no background executor)]
+            tracing plane: [--trace FILE (Chrome Trace Event Format export,
+             load in chrome://tracing or Perfetto; also streams the raw
+             event log to OUT/trace_events.jsonl)]
+            [--metrics-interval SECS (periodic telemetry snapshots to
+             OUT/telemetry_snapshots.jsonl; 0 = off)]
   pretrain  --artifacts DIR --steps N --lr X --out DIR
             supervised warm-up producing the RL init checkpoint
   simulate  reproduce Table 3 from the calibrated cluster cost model
@@ -115,7 +122,9 @@ USAGE: llamarl <subcommand> [flags]
   timeline  [--sigma X] discrete-event bubble analysis (Figure 2)
   dataplane [--steps N] [--max-staleness K] synthetic channel-vs-store
             comparison on real threads (no artifacts needed)
-  info      --artifacts DIR  inspect an artifact bundle"
+  info      --artifacts DIR  inspect an artifact bundle
+  tracecheck --file trace.json  validate a Chrome trace export: parses the
+            file with the built-in JSON reader and reports the event count"
     );
 }
 
@@ -306,6 +315,40 @@ fn cmd_dataplane(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+fn cmd_tracecheck(args: &Args) -> Result<()> {
+    use llamarl::util::error::Error;
+    use llamarl::util::json::Value;
+    let path = args.str_or("file", "trace.json");
+    let text = std::fs::read_to_string(&path)?;
+    let v = Value::parse(&text)?;
+    let events = v.req_array("traceEvents")?;
+    if events.is_empty() {
+        return Err(Error::msg(format!("{path}: traceEvents is empty")));
+    }
+    let mut spans = 0usize;
+    let mut instants = 0usize;
+    let mut tracks = 0usize;
+    for e in events {
+        match e.req_str("ph")? {
+            "B" => spans += 1,
+            "i" => instants += 1,
+            "M" => tracks += 1,
+            _ => {}
+        }
+    }
+    let dropped = v
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(Value::as_f64)
+        .unwrap_or(0.0);
+    println!(
+        "{path}: {} events ({spans} spans, {instants} instants, {tracks} tracks, \
+         {dropped} dropped)",
+        events.len()
+    );
     Ok(())
 }
 

@@ -52,6 +52,7 @@ use std::time::Instant;
 
 use crate::memplane::plan::{ColocationPlan, Phase, Residency};
 use crate::memplane::pool::{AllocClass, AllocId, MemPool, Placement};
+use crate::trace;
 use crate::util::error::{Error, Result};
 
 /// Shared counters for one memplane (lease side + worker side).
@@ -345,6 +346,7 @@ impl OffloadExecutor {
     /// [`OffloadMetrics::wait_nanos`].
     pub fn wait_shard(&self, class: AllocClass, idx: usize) -> Result<()> {
         let t0 = Instant::now();
+        let _span = trace::span_with(trace::OFFLOAD_WAIT, idx as f64);
         let mut st = self.inner.state.lock().unwrap();
         let mut blocked = false;
         loop {
@@ -613,6 +615,14 @@ fn run_one_action(inner: &ExecInner) -> Result<bool> {
             let src = std::mem::take(&mut shard.words);
             drop(st);
             // the transfer itself: chunked copy into the destination tier
+            let _span = trace::span_with(
+                if to_device {
+                    trace::OFFLOAD_H2D
+                } else {
+                    trace::OFFLOAD_D2H
+                },
+                idx as f64,
+            );
             let mut dst: Vec<u64> = Vec::with_capacity(src.len());
             for chunk in src.chunks(inner.chunk_words.max(1)) {
                 dst.extend_from_slice(chunk);

@@ -76,6 +76,7 @@ use std::time::Instant;
 use crate::memplane::executor::{OffloadExecutor, OffloadMetrics};
 use crate::memplane::plan::{plan_colocation, auto_device_cap, ColocationPlan, Phase, Residency};
 use crate::memplane::pool::{AllocClass, MemPool, MemSpec, PoolUsage};
+use crate::trace;
 use crate::util::error::{Error, Result};
 
 pub use executor::OffloadMetrics as Metrics;
@@ -290,6 +291,7 @@ impl MemPlane {
             self.release(phase);
             return Err(e);
         }
+        trace::instant(trace::LEASE_ACQUIRE, phase.index() as f64);
         Ok(PhaseLease {
             plane: self.me.upgrade().expect("plane alive while leasing"),
             phase,
@@ -358,6 +360,7 @@ impl MemPlane {
     }
 
     fn release(&self, phase: Phase) {
+        trace::instant(trace::LEASE_RELEASE, phase.index() as f64);
         let mut act = self.active.lock().unwrap();
         let c = &mut act.counts[phase.index()];
         debug_assert!(*c > 0, "lease refcount underflow");

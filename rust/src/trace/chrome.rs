@@ -1,0 +1,97 @@
+//! Chrome Trace Event Format exporter (`--trace <path>`).
+//!
+//! Converts a [`TraceLog`] into the `{"traceEvents":[...]}` JSON that
+//! `chrome://tracing` and Perfetto load: one track (tid) per node
+//! replica / worker thread, named via `thread_name` metadata events, with
+//! `B`/`E` duration pairs, scoped `i` instants and `C` counter samples.
+//! Timestamps are microseconds since the shared trace epoch.
+//!
+//! Span names match the DES timeline segment vocabulary (`sync_overlap`,
+//! `offload_d2h`, ...) so a simulated timeline and a measured one are
+//! directly comparable side by side.
+//!
+//! The file is built and serialized entirely through [`crate::util::json`]
+//! — the CI traced arm re-parses it with the same module (`llamarl
+//! tracecheck`), closing the round-trip.
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::trace::collector::TraceLog;
+use crate::trace::recorder::EventKind;
+use crate::util::error::Result;
+use crate::util::json::Value;
+
+/// All tracks share one process in the exported trace.
+const PID: f64 = 1.0;
+
+fn args_value(v: f64) -> Value {
+    Value::object(vec![("value", Value::num(v))])
+}
+
+/// Write `log` to `path` in Chrome Trace Event Format.
+pub fn export(log: &TraceLog, path: impl AsRef<Path>) -> Result<()> {
+    // stable tid per track, in order of first appearance
+    let mut tids: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut order: Vec<&str> = Vec::new();
+    for ev in &log.events {
+        if let Entry::Vacant(slot) = tids.entry(ev.track.as_str()) {
+            slot.insert(order.len() + 1);
+            order.push(ev.track.as_str());
+        }
+    }
+
+    let mut events: Vec<Value> = Vec::with_capacity(log.events.len() + order.len());
+    for track in &order {
+        let tid = tids[track] as f64;
+        events.push(Value::object(vec![
+            ("ph", Value::str("M")),
+            ("name", Value::str("thread_name")),
+            ("pid", Value::num(PID)),
+            ("tid", Value::num(tid)),
+            ("args", Value::object(vec![("name", Value::str(*track))])),
+        ]));
+    }
+    for ev in &log.events {
+        let tid = tids[ev.track.as_str()] as f64;
+        let ts = ev.t_nanos as f64 / 1e3;
+        let ph = match ev.kind {
+            EventKind::Begin => "B",
+            EventKind::End => "E",
+            EventKind::Instant => "i",
+            EventKind::Counter => "C",
+        };
+        let mut pairs = vec![
+            ("ph", Value::str(ph)),
+            ("name", Value::str(ev.name)),
+            ("pid", Value::num(PID)),
+            ("tid", Value::num(tid)),
+            ("ts", Value::num(ts)),
+        ];
+        match ev.kind {
+            EventKind::Begin | EventKind::Counter => pairs.push(("args", args_value(ev.value))),
+            EventKind::Instant => {
+                // thread-scoped instant
+                pairs.push(("s", Value::str("t")));
+                pairs.push(("args", args_value(ev.value)));
+            }
+            EventKind::End => {}
+        }
+        events.push(Value::object(pairs));
+    }
+
+    let top = Value::object(vec![
+        ("traceEvents", Value::Array(events)),
+        ("displayTimeUnit", Value::str("ms")),
+        (
+            "otherData",
+            Value::object(vec![("dropped_events", Value::num(log.dropped as f64))]),
+        ),
+    ]);
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, top.to_string())?;
+    Ok(())
+}

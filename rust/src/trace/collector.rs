@@ -1,0 +1,143 @@
+//! Background drain thread: merges the per-thread recorder rings into an
+//! append-only streaming JSONL event log.
+//!
+//! The collector is the single consumer of every recorder ring. At a
+//! ~10 ms cadence it drains all rings, appends each event as one JSONL
+//! line (via [`crate::util::logging::JsonlWriter`], the same writer the
+//! metrics log uses), and retains the merged stream in memory so
+//! [`Collector::finish`] can hand the whole run to the Chrome exporter.
+//!
+//! The JSONL log is written *incrementally* — each line is flushed as it
+//! is drained — so a crashed or killed run still leaves a readable event
+//! log up to its last collector pass. This streaming, append-only shape
+//! is the deliberate seed of the ROADMAP's durable run-journal item.
+//!
+//! Line schema (see the [`crate::trace`] module docs for the event
+//! taxonomy):
+//!
+//! ```json
+//! {"t_us":1234.5,"track":"generator-0","ph":"B","name":"generate","value":0}
+//! ```
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::trace::recorder::{self, EventKind, TraceEvent};
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+use crate::util::logging::JsonlWriter;
+
+/// Drain cadence: small enough that a 4096-slot ring absorbs bursts,
+/// large enough that the collector thread is invisible in profiles.
+const DRAIN_INTERVAL: Duration = Duration::from_millis(10);
+
+/// The merged result of one trace session.
+pub struct TraceLog {
+    /// every drained event, in per-ring order (per-track timestamps are
+    /// monotone; cross-track order is whatever the drain interleaved)
+    pub events: Vec<TraceEvent>,
+    /// events lost to full rings (0 in a healthy run)
+    pub dropped: u64,
+}
+
+fn ph(kind: EventKind) -> &'static str {
+    match kind {
+        EventKind::Begin => "B",
+        EventKind::End => "E",
+        EventKind::Instant => "i",
+        EventKind::Counter => "C",
+    }
+}
+
+fn event_line(ev: &TraceEvent) -> Value {
+    Value::object(vec![
+        ("t_us", Value::num(ev.t_nanos as f64 / 1e3)),
+        ("track", Value::str(ev.track.clone())),
+        ("ph", Value::str(ph(ev.kind))),
+        ("name", Value::str(ev.name)),
+        ("value", Value::num(ev.value)),
+    ])
+}
+
+/// The background collector. Construct with [`Collector::start`], stop
+/// with [`Collector::finish`]; exactly one may run at a time (the
+/// recorder rings have a single consumer).
+pub struct Collector {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<(Vec<TraceEvent>, Option<Error>)>>,
+}
+
+impl Collector {
+    /// Arm the recorder, clear any stale ring contents, open the event
+    /// log at `path` (parent dirs created) and spawn the drain thread.
+    pub fn start(path: impl AsRef<Path>) -> Result<Collector> {
+        let writer = JsonlWriter::create(path)?;
+        recorder::reset();
+        recorder::enable();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("trace-collector".into())
+            .spawn(move || {
+                let mut retained: Vec<TraceEvent> = Vec::new();
+                let mut first_err: Option<Error> = None;
+                loop {
+                    let stopping = stop2.load(Ordering::Acquire);
+                    let from = retained.len();
+                    recorder::drain_all(&mut retained);
+                    if first_err.is_none() {
+                        for ev in &retained[from..] {
+                            if let Err(e) = writer.write(&event_line(ev)) {
+                                first_err = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                    if stopping {
+                        // the stop flag was observed *before* this final
+                        // drain, so every event recorded before finish()
+                        // was captured
+                        return (retained, first_err);
+                    }
+                    std::thread::sleep(DRAIN_INTERVAL);
+                }
+            })
+            .map_err(|e| Error::Msg(format!("spawn trace collector: {e}")))?;
+        Ok(Collector {
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// Disarm the recorder, run one final drain, and return the merged
+    /// log. Surfaces the first event-log write error, if any.
+    pub fn finish(mut self) -> Result<TraceLog> {
+        recorder::disable();
+        self.stop.store(true, Ordering::Release);
+        let handle = self.handle.take().expect("collector joined once");
+        let (events, err) = handle
+            .join()
+            .map_err(|_| Error::Msg("trace collector thread panicked".into()))?;
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok(TraceLog {
+            events,
+            dropped: recorder::dropped_total(),
+        })
+    }
+}
+
+impl Drop for Collector {
+    fn drop(&mut self) {
+        // finish() not called (error path): stop the thread, drop the log
+        if let Some(h) = self.handle.take() {
+            recorder::disable();
+            self.stop.store(true, Ordering::Release);
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Run-wide tracing plane: spans + streaming event log, Chrome-trace
+//! export, and live telemetry snapshots.
+//!
+//! LlamaRL's headline claims are about *where time goes* — overlapped
+//! weight-sync, hidden offload transfers, asynchronous generation — but
+//! tallies assembled at run end cannot localize a mid-run stall to a
+//! node, phase, or plane. This module turns every claim the benches gate
+//! into an inspectable timeline:
+//!
+//! * [`recorder`] — per-thread lock-free ring buffers behind a cheap
+//!   [`span`]/[`instant`]/[`counter`] API ([`TraceSpan`] RAII guards, one
+//!   shared monotonic epoch, track identity = node thread name). One
+//!   relaxed atomic load when disabled.
+//! * [`collector`] — a background drain thread merging the rings into an
+//!   append-only **streaming JSONL event log** (the deliberate seed of
+//!   the ROADMAP's durable run-journal item).
+//! * [`chrome`] — `--trace <path>` export in Chrome Trace Event Format,
+//!   loadable in Perfetto, one track per node replica, span names shared
+//!   with the DES timeline segments so simulated and measured timelines
+//!   are directly comparable.
+//! * [`snapshot`] — `--metrics-interval <secs>` periodic JSONL snapshots
+//!   of the live telemetry counters instead of end-of-run-only tallies.
+//!
+//! All four planes are instrumented: the dataplane store, the weightsync
+//! executor's link-group workers, the memplane offload executor, and the
+//! graph runtime's node lifecycle + channel blocked sections.
+//!
+//! # Event schema
+//!
+//! Every event carries `(t_us, track, ph, name, value)` in the JSONL log;
+//! `ph` follows Chrome phase letters (`B`/`E` span, `i` instant, `C`
+//! counter). The vocabulary (spans share names with the DES timeline
+//! segment/config stems):
+//!
+//! | name | ph | plane / track | value |
+//! |---|---|---|---|
+//! | `generate` / `score` / `train` | B/E | stepped-graph phases (controller) | step |
+//! | `weight_sync` | B/E | ddma inline publish fan-out (trainer) | version |
+//! | `sync_overlap` | B/E | weightsync link-group stream (`weightsync-link{g}`) | version |
+//! | `publish_block` | B/E | trainer blocked inside `publish` | version |
+//! | `offload_d2h` / `offload_h2d` | B/E | memplane shard move (`memplane-offload`) | shard idx |
+//! | `offload_wait` | B/E | lease holder blocked on residency | shard idx |
+//! | `send_blocked` / `recv_blocked` | B/E | channel back-pressure (producing node) | 0 |
+//! | `store_sample` | B/E | rollout-store batch assembly (trainer) | rows |
+//! | `version_mint` | i | ddma version counter bump (trainer) | version |
+//! | `store_admit` | i | rollout-store group admission | rows |
+//! | `store_evict` | i | EvictOldest made room | rows |
+//! | `store_drop_stale` / `store_drop_capacity` | i | admission drops | rows |
+//! | `lease_acquire` / `lease_release` | i | memplane phase lease | phase idx |
+//! | `node_start` / `node_stop` | i | graph node lifecycle | 0 |
+//!
+//! # Lifecycle
+//!
+//! The controller owns the session: [`Collector::start`] arms the
+//! recorder and opens `out_dir/trace_events.jsonl`; after the graph
+//! joins, [`Collector::finish`] returns the merged [`TraceLog`] and
+//! [`chrome::export`] writes the `--trace` file. The [`Sampler`] runs
+//! independently (snapshots need no recorder) and is active whenever
+//! `--metrics-interval` is positive.
+
+pub mod chrome;
+pub mod collector;
+pub mod recorder;
+pub mod snapshot;
+
+pub use collector::{Collector, TraceLog};
+pub use recorder::{
+    counter, disable, enable, enabled, instant, set_track, span, span_with, Event, EventKind,
+    TraceEvent, TraceSpan, RING_CAP,
+};
+pub use snapshot::Sampler;
+
+// ---------------------------------------------------------------------------
+// Span vocabulary (shared with the DES timeline segment names)
+
+pub const GENERATE: &str = "generate";
+pub const SCORE: &str = "score";
+pub const TRAIN: &str = "train";
+pub const WEIGHT_SYNC: &str = "weight_sync";
+pub const SYNC_OVERLAP: &str = "sync_overlap";
+pub const PUBLISH_BLOCK: &str = "publish_block";
+pub const OFFLOAD_D2H: &str = "offload_d2h";
+pub const OFFLOAD_H2D: &str = "offload_h2d";
+pub const OFFLOAD_WAIT: &str = "offload_wait";
+pub const SEND_BLOCKED: &str = "send_blocked";
+pub const RECV_BLOCKED: &str = "recv_blocked";
+pub const STORE_SAMPLE: &str = "store_sample";
+
+// instants
+pub const VERSION_MINT: &str = "version_mint";
+pub const STORE_ADMIT: &str = "store_admit";
+pub const STORE_EVICT: &str = "store_evict";
+pub const STORE_DROP_STALE: &str = "store_drop_stale";
+pub const STORE_DROP_CAPACITY: &str = "store_drop_capacity";
+pub const LEASE_ACQUIRE: &str = "lease_acquire";
+pub const LEASE_RELEASE: &str = "lease_release";
+pub const NODE_START: &str = "node_start";
+pub const NODE_STOP: &str = "node_stop";

@@ -1,0 +1,317 @@
+//! Per-thread lock-free event recorder: the hot-path half of the tracing
+//! plane.
+//!
+//! Every instrumented thread owns a fixed-capacity single-producer /
+//! single-consumer ring ([`RING_CAP`] slots, power of two). The producer
+//! (the instrumented code) appends with one relaxed head load, one
+//! acquire tail load, a plain slot write and a release head store — no
+//! locks, no allocation, no syscalls. The single consumer (the
+//! [`crate::trace::collector`] drain thread) reads `[tail, head)` under
+//! an acquire head load and publishes the new tail with a release store.
+//! A full ring drops the event and bumps a counter instead of blocking:
+//! tracing must never introduce the stall it is measuring.
+//!
+//! The disabled path is one relaxed atomic load per call site
+//! ([`enabled`]); no ring is touched and no thread state is created, so
+//! an untraced run pays effectively nothing (the overhead smoke test in
+//! `tests/trace_plane.rs` bounds it).
+//!
+//! Track identity: each ring is registered under the owning thread's name
+//! (the graph runtime names every node thread `generator-{i}`,
+//! `reward-{i}`, `evaluator`, `weightsync-link{g}`, `memplane-offload`),
+//! which becomes the Chrome-trace track. Threads that predate naming —
+//! the controller thread running the trainer — call [`set_track`].
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Slots per thread ring. Power of two; at the collector's drain cadence
+/// (~10 ms) this absorbs hundreds of thousands of events per second per
+/// thread before dropping.
+pub const RING_CAP: usize = 4096;
+
+/// What a ring slot records. `Begin`/`End` bracket a [`TraceSpan`];
+/// `Instant` marks a point event; `Counter` samples a monotonically
+/// interesting value (both carry it in `value`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Begin,
+    End,
+    Instant,
+    Counter,
+}
+
+/// One recorded event: plain-old-data so the ring slot write is a single
+/// memcpy with no drop glue.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// nanoseconds since the shared trace epoch (monotonic clock)
+    pub t_nanos: u64,
+    pub kind: EventKind,
+    /// static span/instant name from the [`crate::trace`] vocabulary
+    pub name: &'static str,
+    /// span payload / instant argument / counter sample
+    pub value: f64,
+}
+
+const EMPTY_EVENT: Event = Event {
+    t_nanos: 0,
+    kind: EventKind::Instant,
+    name: "",
+    value: 0.0,
+};
+
+/// A drained event stamped with the producing thread's track name.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub track: String,
+    pub t_nanos: u64,
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub value: f64,
+}
+
+// ---------------------------------------------------------------------------
+// SPSC ring
+
+struct Ring {
+    slots: Box<[UnsafeCell<Event>]>,
+    /// next slot the producer writes (monotonic, wraps via masking)
+    head: AtomicUsize,
+    /// next slot the consumer reads
+    tail: AtomicUsize,
+    /// events discarded because the ring was full
+    dropped: AtomicU64,
+}
+
+// SAFETY: the producer is the owning thread and the consumer is the single
+// collector thread; `head`/`tail` release/acquire pairs order every slot
+// write before the matching read, and `[tail, head)` never aliases a slot
+// the producer may touch (it refuses to write when the ring is full).
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring {
+            slots: (0..RING_CAP)
+                .map(|_| UnsafeCell::new(EMPTY_EVENT))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Producer side; owning thread only.
+    fn push(&self, ev: Event) {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= RING_CAP {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: slot `head` is outside the consumer's [tail, head) window
+        // until the release store below publishes it.
+        unsafe {
+            *self.slots[head & (RING_CAP - 1)].get() = ev;
+        }
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Consumer side; collector thread only.
+    fn drain_into(&self, out: &mut Vec<Event>) {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        while tail != head {
+            // SAFETY: the acquire head load ordered the producer's slot
+            // write before this read; the producer will not reuse the slot
+            // until the release tail store below.
+            out.push(unsafe { *self.slots[tail & (RING_CAP - 1)].get() });
+            tail = tail.wrapping_add(1);
+        }
+        self.tail.store(tail, Ordering::Release);
+    }
+}
+
+struct RingEntry {
+    ring: Ring,
+    /// Chrome-trace track name; defaults to the thread name at lazy
+    /// registration, overridable via [`set_track`].
+    track: Mutex<String>,
+}
+
+static REGISTRY: Mutex<Vec<Arc<RingEntry>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL: Arc<RingEntry> = register_current_thread();
+}
+
+fn register_current_thread() -> Arc<RingEntry> {
+    let cur = std::thread::current();
+    let track = match cur.name() {
+        Some(n) => n.to_string(),
+        None => format!("thread-{:?}", cur.id()),
+    };
+    let entry = Arc::new(RingEntry {
+        ring: Ring::new(),
+        track: Mutex::new(track),
+    });
+    REGISTRY.lock().unwrap().push(entry.clone());
+    entry
+}
+
+// ---------------------------------------------------------------------------
+// Clock + enablement
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the shared monotonic trace epoch (pinned at the first
+/// [`enable`]).
+pub fn now_nanos() -> u64 {
+    u64::try_from(epoch().elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Arm the recorder. Pins the shared epoch on first use so every thread's
+/// timestamps share one origin.
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm the recorder: subsequent `span`/`instant`/`counter` calls return
+/// to the one-relaxed-load fast path.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// The per-call-site gate: one relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn record(kind: EventKind, name: &'static str, value: f64) {
+    let ev = Event {
+        t_nanos: now_nanos(),
+        kind,
+        name,
+        value,
+    };
+    // try_with: a Drop running during thread-local teardown must not panic
+    let _ = LOCAL.try_with(|e| e.ring.push(ev));
+}
+
+// ---------------------------------------------------------------------------
+// Recording API
+
+/// RAII span guard: records `Begin` on creation (when tracing is enabled)
+/// and the matching `End` on drop. Cheap to construct on the disabled
+/// path — a bool, no ring touch.
+#[must_use = "a span measures the scope it is alive for"]
+pub struct TraceSpan {
+    name: &'static str,
+    armed: bool,
+}
+
+impl Drop for TraceSpan {
+    fn drop(&mut self) {
+        if self.armed {
+            record(EventKind::End, self.name, 0.0);
+        }
+    }
+}
+
+/// Open a span named from the [`crate::trace`] vocabulary.
+#[inline]
+pub fn span(name: &'static str) -> TraceSpan {
+    span_with(name, 0.0)
+}
+
+/// Open a span carrying a payload value (e.g. the streamed version).
+#[inline]
+pub fn span_with(name: &'static str, value: f64) -> TraceSpan {
+    if !enabled() {
+        return TraceSpan { name, armed: false };
+    }
+    record(EventKind::Begin, name, value);
+    TraceSpan { name, armed: true }
+}
+
+/// Record a point event (e.g. a version mint or store admission).
+#[inline]
+pub fn instant(name: &'static str, value: f64) {
+    if enabled() {
+        record(EventKind::Instant, name, value);
+    }
+}
+
+/// Sample a counter value onto the current thread's track.
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if enabled() {
+        record(EventKind::Counter, name, value);
+    }
+}
+
+/// Rename the current thread's track (for threads whose OS name is not the
+/// node identity — the controller thread hosting the trainer executor).
+pub fn set_track(name: &str) {
+    let _ = LOCAL.try_with(|e| *e.track.lock().unwrap() = name.to_string());
+}
+
+// ---------------------------------------------------------------------------
+// Consumer API (collector only)
+
+/// Drain every registered ring into `out`, stamping each event with its
+/// ring's track name. Single consumer: only the collector thread calls
+/// this.
+pub(crate) fn drain_all(out: &mut Vec<TraceEvent>) {
+    let entries: Vec<Arc<RingEntry>> = REGISTRY.lock().unwrap().clone();
+    let mut scratch = Vec::new();
+    for e in entries {
+        scratch.clear();
+        e.ring.drain_into(&mut scratch);
+        if scratch.is_empty() {
+            continue;
+        }
+        let track = e.track.lock().unwrap().clone();
+        out.extend(scratch.iter().map(|ev| TraceEvent {
+            track: track.clone(),
+            t_nanos: ev.t_nanos,
+            kind: ev.kind,
+            name: ev.name,
+            value: ev.value,
+        }));
+    }
+}
+
+/// Total events dropped to full rings since the last [`reset`].
+pub(crate) fn dropped_total() -> u64 {
+    REGISTRY
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|e| e.ring.dropped.load(Ordering::Relaxed))
+        .sum()
+}
+
+/// Discard any events left in the rings from a previous trace session and
+/// zero the drop counters. Called by the collector at start so a new
+/// session begins clean.
+pub(crate) fn reset() {
+    let entries: Vec<Arc<RingEntry>> = REGISTRY.lock().unwrap().clone();
+    let mut scratch = Vec::new();
+    for e in entries {
+        scratch.clear();
+        e.ring.drain_into(&mut scratch);
+        e.ring.dropped.store(0, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,95 @@
+//! Live telemetry snapshots (`--metrics-interval <secs>`).
+//!
+//! End-of-run tallies ([`crate::coordinator::graph::TelemetryHub`]) say
+//! *how much* time went where, never *when*. The [`Sampler`] closes that
+//! gap: a background thread calls a caller-supplied sampling closure at a
+//! fixed cadence and appends each snapshot as one JSONL line, producing a
+//! time series of the same counters the final report aggregates —
+//! publishes, blocked seconds, store occupancy, offload bytes — while the
+//! run is still going.
+//!
+//! The closure samples atomics and lock-free snapshots only; taking a
+//! sample never blocks a plane. A final sample is always written at
+//! [`Sampler::stop`] so the series covers the whole run.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+use crate::util::logging::JsonlWriter;
+
+/// Periodic JSONL telemetry sampler. Construct with [`Sampler::start`],
+/// stop with [`Sampler::stop`] (dropping it also stops the thread).
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Sampler {
+    /// Spawn the sampling thread: every `interval_secs` (floored at 10 ms)
+    /// it appends `sample()` — an object; an `elapsed_secs` field is
+    /// injected — to the JSONL file at `path`.
+    pub fn start(
+        path: impl AsRef<Path>,
+        interval_secs: f64,
+        sample: impl Fn() -> Value + Send + 'static,
+    ) -> Result<Sampler> {
+        let writer = JsonlWriter::create(path)?;
+        let interval = Duration::from_secs_f64(interval_secs.max(0.01));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("telemetry-snapshot".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                loop {
+                    // sleep in small increments so stop() returns promptly
+                    let mut waited = Duration::ZERO;
+                    while waited < interval && !stop2.load(Ordering::Acquire) {
+                        let step = (interval - waited).min(Duration::from_millis(10));
+                        std::thread::sleep(step);
+                        waited += step;
+                    }
+                    let stopping = stop2.load(Ordering::Acquire);
+                    let mut v = sample();
+                    if let Value::Object(m) = &mut v {
+                        m.insert(
+                            "elapsed_secs".into(),
+                            Value::num(t0.elapsed().as_secs_f64()),
+                        );
+                    }
+                    let _ = writer.write(&v);
+                    if stopping {
+                        return;
+                    }
+                }
+            })
+            .map_err(|e| Error::Msg(format!("spawn telemetry sampler: {e}")))?;
+        Ok(Sampler {
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// Signal the thread, let it write one final snapshot, and join.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.stop.store(true, Ordering::Release);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}

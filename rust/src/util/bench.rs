@@ -6,6 +6,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::Value;
 use crate::util::stats::{summarize, Summary};
 
 /// Time `f` for `iters` iterations after `warmup` runs; returns per-iteration
@@ -63,6 +64,23 @@ pub fn bench_rounds(default: usize) -> usize {
             _ => default,
         },
         Err(_) => default,
+    }
+}
+
+/// Emit a bench's machine-readable summary the way `tools/bench_gate.sh`
+/// and CI expect it: the flat JSON object on ONE stdout line prefixed with
+/// its file name, then persisted under the cargo target dir (so the gate
+/// can re-check ratios without re-running the bench). Every `BENCH_*.json`
+/// goes through this single `util::json` serializer — no hand-formatted
+/// JSON strings in bench code.
+pub fn emit_summary(file_name: &str, json: &Value) {
+    let line = json.to_string();
+    println!("{file_name} {line}");
+    let target_dir = std::env::var("CARGO_TARGET_DIR")
+        .unwrap_or_else(|_| format!("{}/../target", env!("CARGO_MANIFEST_DIR")));
+    let path = format!("{target_dir}/{file_name}");
+    if let Err(e) = std::fs::write(&path, &line) {
+        eprintln!("warning: could not write {path}: {e}");
     }
 }
 

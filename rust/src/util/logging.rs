@@ -1,15 +1,16 @@
 //! Leveled stderr logging + JSONL metric writers (env_logger/serde are not
 //! in the offline vendor set).
 //!
-//! Level comes from `LLAMARL_LOG` (error|warn|info|debug|trace), default
-//! `info`. The JSONL writer is what examples/benches use to persist curves
-//! for EXPERIMENTS.md.
+//! Level comes from `LLAMARL_LOG` (off|error|warn|info|debug|trace),
+//! default `info`; an unrecognized value falls back to `info` with a
+//! one-time warning. The JSONL writer is what examples/benches use to
+//! persist curves for EXPERIMENTS.md.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, Once};
 use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::util::error::Result;
@@ -24,19 +25,44 @@ pub enum Level {
     Trace = 4,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(255);
+/// Sentinel: level not yet resolved from the environment.
+const LEVEL_UNSET: u8 = 255;
+/// Sentinel: logging disabled entirely (`LLAMARL_LOG=off`).
+const LEVEL_OFF: u8 = 254;
+
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+static BAD_SPEC_WARNING: Once = Once::new();
+
+/// Map a `LLAMARL_LOG` spec to the stored level byte. `None` means the
+/// spec was not recognized (caller warns once and falls back to info).
+fn parse_spec(spec: &str) -> Option<u8> {
+    match spec {
+        "off" => Some(LEVEL_OFF),
+        "error" => Some(Level::Error as u8),
+        "warn" => Some(Level::Warn as u8),
+        "info" => Some(Level::Info as u8),
+        "debug" => Some(Level::Debug as u8),
+        "trace" => Some(Level::Trace as u8),
+        _ => None,
+    }
+}
 
 fn level() -> u8 {
     let cur = LEVEL.load(Ordering::Relaxed);
-    if cur != 255 {
+    if cur != LEVEL_UNSET {
         return cur;
     }
     let parsed = match std::env::var("LLAMARL_LOG").as_deref() {
-        Ok("error") => 0,
-        Ok("warn") => 1,
-        Ok("debug") => 3,
-        Ok("trace") => 4,
-        _ => 2,
+        Ok(spec) => parse_spec(spec).unwrap_or_else(|| {
+            BAD_SPEC_WARNING.call_once(|| {
+                eprintln!(
+                    "[WARN llamarl::logging] unrecognized LLAMARL_LOG={spec:?} \
+                     (expected off|error|warn|info|debug|trace); using info"
+                );
+            });
+            Level::Info as u8
+        }),
+        Err(_) => Level::Info as u8,
     };
     LEVEL.store(parsed, Ordering::Relaxed);
     parsed
@@ -47,7 +73,8 @@ pub fn set_level(l: Level) {
 }
 
 pub fn enabled(l: Level) -> bool {
-    (l as u8) <= level()
+    let cur = level();
+    cur != LEVEL_OFF && (l as u8) <= cur
 }
 
 pub fn log(l: Level, target: &str, msg: &str) {
@@ -126,6 +153,30 @@ impl JsonlWriter {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn spec_parser_accepts_all_levels_and_off() {
+        assert_eq!(parse_spec("off"), Some(LEVEL_OFF));
+        assert_eq!(parse_spec("error"), Some(Level::Error as u8));
+        assert_eq!(parse_spec("warn"), Some(Level::Warn as u8));
+        assert_eq!(parse_spec("info"), Some(Level::Info as u8));
+        assert_eq!(parse_spec("debug"), Some(Level::Debug as u8));
+        assert_eq!(parse_spec("trace"), Some(Level::Trace as u8));
+        assert_eq!(parse_spec("verbose"), None);
+        assert_eq!(parse_spec(""), None);
+        assert_eq!(parse_spec("INFO"), None); // specs are case-sensitive
+    }
+
+    #[test]
+    fn off_level_disables_every_tier() {
+        // set_level/enabled go through the same atomic the env parser
+        // fills in; drive the OFF sentinel directly to keep the test
+        // independent of the process environment
+        let prev = LEVEL.swap(LEVEL_OFF, Ordering::Relaxed);
+        assert!(!enabled(Level::Error));
+        assert!(!enabled(Level::Trace));
+        LEVEL.store(prev, Ordering::Relaxed);
+    }
 
     #[test]
     fn jsonl_roundtrip() {

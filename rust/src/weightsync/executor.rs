@@ -40,6 +40,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::model::VersionedParams;
+use crate::trace;
 use crate::weightsync::plan::{ReshardPlan, TransferOp};
 use crate::weightsync::swap::{GeneratorSlot, RecvOutcome};
 use crate::weightsync::transfer::{
@@ -371,6 +372,9 @@ fn stream_group(inner: &ExecInner, g: usize, job: &PublishJob) {
     }
     let t0 = Instant::now();
     let version = job.params.version;
+    // sync_overlap: this stream runs on a `weightsync-link{g}` worker
+    // while decode keeps going — the overlapped region the DES models
+    let _span = trace::span_with(trace::SYNC_OVERLAP, version as f64);
     begin_on(&subs, version, inner.expected_ops, inner.encoding.is_delta());
     let mut bytes = 0usize;
     let mut max_op = 0f64;

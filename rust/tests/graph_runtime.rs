@@ -158,6 +158,11 @@ fn dot_rendering_names_every_fleet_and_edge() {
     assert!(dot.contains("generator x2"));
     assert!(dot.contains("reward x3"));
     assert!(dot.contains("trainer x1"));
+    // node labels carry the telemetry/trace track names so a dumped
+    // graph maps 1:1 onto trace-export tracks
+    assert!(dot.contains("tracks: generator-0..generator-1"));
+    assert!(dot.contains("tracks: reward-0..reward-2"));
+    assert!(dot.contains("track: trainer"));
     assert!(dot.contains("rollout store"));
     assert!(dot.contains("group-routed"));
     assert!(dot.contains("DDMA weights bus"));

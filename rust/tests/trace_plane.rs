@@ -1,0 +1,248 @@
+//! Tracing-plane tests: recorder correctness under threaded contention,
+//! span nesting discipline, the disabled-path overhead bound, the Chrome
+//! export ↔ `util::json` round trip, and the telemetry snapshot sampler.
+//!
+//! The recorder is process-global (one ring registry, one enable flag), so
+//! every test serializes on `TEST_LOCK`; `Collector::start` additionally
+//! clears stale ring contents, so each session begins clean.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use llamarl::trace::{self, chrome, Collector, EventKind, Sampler};
+use llamarl::util::json::Value;
+use llamarl::util::prop::{run_prop, Gen};
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join("llamarl_trace_plane").join(name)
+}
+
+#[test]
+fn threaded_recorder_loses_nothing_under_contention() {
+    let _g = lock();
+    let path = tmp("stress_events.jsonl");
+    let c = Collector::start(&path).unwrap();
+
+    const THREADS: usize = 8;
+    const PER: usize = 1500; // < RING_CAP even with zero intermediate drains
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("stress-{t}"))
+                .spawn(move || {
+                    for i in 0..PER {
+                        trace::instant(trace::STORE_ADMIT, i as f64);
+                        if i % 256 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                })
+                .unwrap(),
+        );
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let log = c.finish().unwrap();
+    assert_eq!(log.dropped, 0, "no ring overflow");
+
+    for t in 0..THREADS {
+        let track = format!("stress-{t}");
+        let evs: Vec<_> = log.events.iter().filter(|e| e.track == track).collect();
+        assert_eq!(evs.len(), PER, "track {track} lost or duplicated events");
+        for (i, e) in evs.iter().enumerate() {
+            // SPSC order preserved: no torn or reordered slots
+            assert_eq!(e.value, i as f64, "track {track} event {i}");
+            assert_eq!(e.name, trace::STORE_ADMIT);
+        }
+        for w in evs.windows(2) {
+            assert!(
+                w[0].t_nanos <= w[1].t_nanos,
+                "track {track} timestamps must be monotone"
+            );
+        }
+    }
+
+    // the streaming JSONL log carries every event with the line schema
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut lines = 0usize;
+    for line in text.lines() {
+        let v = Value::parse(line).unwrap();
+        v.req_f64("t_us").unwrap();
+        v.req_str("track").unwrap();
+        assert_eq!(v.req_str("ph").unwrap(), "i");
+        v.req_str("name").unwrap();
+        v.req_f64("value").unwrap();
+        lines += 1;
+    }
+    assert_eq!(lines, THREADS * PER);
+}
+
+#[test]
+fn span_nesting_preserves_stack_discipline() {
+    let _g = lock();
+    let path = tmp("nesting_events.jsonl");
+    let c = Collector::start(&path).unwrap();
+
+    const NAMES: [&str; 4] = [
+        trace::GENERATE,
+        trace::SCORE,
+        trace::TRAIN,
+        trace::WEIGHT_SYNC,
+    ];
+
+    fn nest(g: &mut Gen, depth: usize, exp: &Mutex<Vec<(&'static str, bool)>>) {
+        let name = *g.choice(&NAMES);
+        exp.lock().unwrap().push((name, true));
+        let s = trace::span_with(name, depth as f64);
+        if depth < 4 {
+            let kids = g.usize(0, 2);
+            for _ in 0..kids {
+                nest(g, depth + 1, exp);
+            }
+        }
+        drop(s);
+        exp.lock().unwrap().push((name, false));
+    }
+
+    // a dedicated named thread makes the track unambiguous
+    let expected = std::thread::Builder::new()
+        .name("prop-spans".into())
+        .spawn(|| {
+            let expected = Mutex::new(Vec::new());
+            run_prop("span_nesting", 30, |g| nest(g, 0, &expected));
+            expected.into_inner().unwrap()
+        })
+        .unwrap()
+        .join()
+        .unwrap();
+
+    let log = c.finish().unwrap();
+    assert_eq!(log.dropped, 0);
+    let got: Vec<(&str, bool)> = log
+        .events
+        .iter()
+        .filter(|e| e.track == "prop-spans")
+        .map(|e| (e.name, matches!(e.kind, EventKind::Begin)))
+        .collect();
+    assert_eq!(got, expected, "recorded B/E stream must match the program");
+
+    // replay: every End closes the innermost open Begin of the same name
+    let mut stack: Vec<&str> = Vec::new();
+    for (name, is_begin) in &got {
+        if *is_begin {
+            stack.push(name);
+        } else {
+            assert_eq!(stack.pop(), Some(*name), "unbalanced span nesting");
+        }
+    }
+    assert!(stack.is_empty(), "every span must close");
+}
+
+#[test]
+fn disabled_path_adds_no_measurable_overhead() {
+    let _g = lock();
+    trace::disable();
+    let t0 = Instant::now();
+    const N: u64 = 1_000_000;
+    for i in 0..N {
+        let _s = trace::span_with(trace::GENERATE, i as f64);
+        trace::instant(trace::VERSION_MINT, i as f64);
+        std::hint::black_box(i);
+    }
+    let per_call = t0.elapsed().as_secs_f64() / (2 * N) as f64;
+    // one relaxed atomic load per call; 1 µs is ~2 orders of magnitude of
+    // headroom even for an unoptimized build on a loaded CI machine
+    assert!(
+        per_call < 1e-6,
+        "disabled trace call cost {per_call:.2e}s per call"
+    );
+}
+
+#[test]
+fn chrome_export_round_trips_through_util_json() {
+    let _g = lock();
+    let events_path = tmp("chrome_events.jsonl");
+    let chrome_path = tmp("chrome_trace.json");
+    let c = Collector::start(&events_path).unwrap();
+
+    std::thread::Builder::new()
+        .name("chrome-track".into())
+        .spawn(|| {
+            let s = trace::span_with(trace::SYNC_OVERLAP, 7.0);
+            trace::instant(trace::VERSION_MINT, 7.0);
+            trace::counter("store_occupancy", 3.0);
+            drop(s);
+        })
+        .unwrap()
+        .join()
+        .unwrap();
+
+    let log = c.finish().unwrap();
+    chrome::export(&log, &chrome_path).unwrap();
+
+    let v = Value::parse(&std::fs::read_to_string(&chrome_path).unwrap()).unwrap();
+    let events = v.req_array("traceEvents").unwrap();
+    assert!(!events.is_empty());
+    assert_eq!(v.req_str("displayTimeUnit").unwrap(), "ms");
+    assert_eq!(
+        v.req("otherData").unwrap().req_f64("dropped_events").unwrap(),
+        0.0
+    );
+
+    let ph_of = |e: &Value| e.get("ph").and_then(|p| p.as_str()).map(str::to_string);
+    // one thread_name metadata event names our track
+    assert!(events.iter().any(|e| {
+        ph_of(e).as_deref() == Some("M")
+            && e.get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(|n| n.as_str())
+                == Some("chrome-track")
+    }));
+    // every phase letter appears, and real events carry pid/tid/ts
+    for want in ["B", "E", "i", "C"] {
+        let ev = events
+            .iter()
+            .find(|e| ph_of(e).as_deref() == Some(want))
+            .unwrap_or_else(|| panic!("no {want} event in export"));
+        ev.req_f64("pid").unwrap();
+        ev.req_f64("tid").unwrap();
+        ev.req_f64("ts").unwrap();
+    }
+    // span names stay in the DES timeline vocabulary
+    assert!(events
+        .iter()
+        .any(|e| e.get("name").and_then(|n| n.as_str()) == Some(trace::SYNC_OVERLAP)));
+}
+
+#[test]
+fn snapshot_sampler_writes_periodic_series() {
+    let _g = lock();
+    let path = tmp("snapshots.jsonl");
+    let s = Sampler::start(&path, 0.02, || {
+        Value::object(vec![("trainer_step", Value::num(42.0))])
+    })
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(70));
+    s.stop();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut last_elapsed = -1.0f64;
+    let mut lines = 0usize;
+    for line in text.lines() {
+        let v = Value::parse(line).unwrap();
+        assert_eq!(v.req_f64("trainer_step").unwrap(), 42.0);
+        let e = v.req_f64("elapsed_secs").unwrap();
+        assert!(e >= last_elapsed, "elapsed_secs must be non-decreasing");
+        last_elapsed = e;
+        lines += 1;
+    }
+    assert!(lines >= 2, "expected a series, got {lines} snapshot(s)");
+}
