@@ -182,6 +182,10 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             "metrics_interval_secs" => {
                 cfg.metrics_interval_secs = val.as_f64().unwrap_or(0.0).max(0.0)
             }
+            "journal" => cfg.journal = val.as_bool().unwrap_or(true),
+            "journal_snapshot_secs" => {
+                cfg.journal_snapshot_secs = val.as_f64().unwrap_or(0.25).max(0.01)
+            }
             other => return Err(Error::Config(format!("unknown config key '{other}'"))),
         }
     }
@@ -281,7 +285,114 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
     cfg.metrics_interval_secs = args
         .f64_or("metrics-interval", cfg.metrics_interval_secs)?
         .max(0.0);
+    if args.flag("no-journal") {
+        cfg.journal = false;
+    }
+    cfg.journal_snapshot_secs = args
+        .f64_or("journal-snapshot-secs", cfg.journal_snapshot_secs)?
+        .max(0.01);
     Ok(())
+}
+
+fn encoding_name(e: ShardEncoding) -> &'static str {
+    match e {
+        ShardEncoding::F32 => "full",
+        ShardEncoding::Int8 => "int8",
+        ShardEncoding::Delta => "delta",
+        ShardEncoding::TopK => "topk",
+        ShardEncoding::Auto => "auto",
+    }
+}
+
+fn mode_name(m: Mode) -> &'static str {
+    match m {
+        Mode::Sync => "sync",
+        Mode::Async => "async",
+        Mode::AsyncBuffered => "async_buffered",
+    }
+}
+
+fn baseline_name(b: Baseline) -> &'static str {
+    match b {
+        Baseline::GroupMean => "group_mean",
+        Baseline::LeaveOneOut => "rloo",
+        Baseline::None => "none",
+    }
+}
+
+/// Serialize a fully-resolved config into the exact key set [`apply_json`]
+/// accepts, so `apply_json(&mut default, &to_json(cfg))` round-trips. This
+/// is the run-journal's meta record: `llamarl resume` / `llamarl replay`
+/// rebuild the recorded run from it with no side channel.
+pub fn to_json(cfg: &PipelineConfig) -> Value {
+    let classes = cfg
+        .mem
+        .offload_classes
+        .iter()
+        .map(|c| c.name())
+        .collect::<Vec<_>>()
+        .join(",");
+    let mut pairs = vec![
+        (
+            "artifact_dir",
+            Value::str(cfg.artifact_dir.to_string_lossy().into_owned()),
+        ),
+        ("mode", Value::str(mode_name(cfg.mode))),
+        ("n_generator_workers", Value::num(cfg.n_generator_workers as f64)),
+        ("n_reward_workers", Value::num(cfg.n_reward_workers as f64)),
+        ("queue_capacity", Value::num(cfg.queue_capacity as f64)),
+        ("scored_capacity", Value::num(cfg.scored_capacity as f64)),
+        ("store_capacity", Value::num(cfg.store.capacity as f64)),
+        ("store_shards", Value::num(cfg.store.shards as f64)),
+        (
+            "max_staleness",
+            Value::num(cfg.store.max_staleness.unwrap_or(0) as f64),
+        ),
+        ("admission", Value::str(cfg.store.admission.name())),
+        ("sampling", Value::str(cfg.store.sampling.name())),
+        ("sync_trainer_shards", Value::num(cfg.sync.trainer_shards as f64)),
+        (
+            "sync_generator_shards",
+            Value::num(cfg.sync.generator_shards as f64),
+        ),
+        ("sync_encoding", Value::str(encoding_name(cfg.sync.encoding))),
+        ("sync_background", Value::Bool(cfg.sync.background)),
+        ("sync_link_groups", Value::num(cfg.sync.link_groups as f64)),
+        ("sync_topk_frac", Value::num(cfg.sync.topk_frac)),
+        ("colocate", Value::Bool(cfg.mem.colocate)),
+        ("offload_classes", Value::str(classes)),
+        ("offload_chunk_mb", Value::num(cfg.mem.offload_chunk_mb as f64)),
+        ("prefetch_depth", Value::num(cfg.mem.prefetch_depth as f64)),
+        ("offload_background", Value::Bool(cfg.mem.background)),
+        ("n_generations", Value::num(cfg.n_generations as f64)),
+        ("baseline", Value::str(baseline_name(cfg.baseline))),
+        ("max_steps", Value::num(cfg.max_steps as f64)),
+        ("lr", Value::num(cfg.aipo.lr as f64)),
+        ("rho", Value::num(cfg.aipo.rho as f64)),
+        ("grad_clip", Value::num(cfg.aipo.grad_clip as f64)),
+        ("temperature", Value::num(cfg.temperature as f64)),
+        ("top_k", Value::num(cfg.top_k as f64)),
+        ("quantize_generator", Value::Bool(cfg.quantize_generator)),
+        ("max_response", Value::num(cfg.max_response as f64)),
+        ("eval_every", Value::num(cfg.eval_every as f64)),
+        ("eval_max_per_suite", Value::num(cfg.eval_max_per_suite as f64)),
+        ("checkpoint_every", Value::num(cfg.checkpoint_every as f64)),
+        ("seed", Value::num(cfg.seed as f64)),
+        (
+            "out_dir",
+            Value::str(cfg.out_dir.to_string_lossy().into_owned()),
+        ),
+        ("metrics_interval_secs", Value::num(cfg.metrics_interval_secs)),
+        ("journal", Value::Bool(cfg.journal)),
+        ("journal_snapshot_secs", Value::num(cfg.journal_snapshot_secs)),
+    ];
+    if let Some(p) = &cfg.init_checkpoint {
+        pairs.push(("init_checkpoint", Value::str(p.to_string_lossy().into_owned())));
+    }
+    if let Some(p) = &cfg.trace {
+        pairs.push(("trace", Value::str(p.to_string_lossy().into_owned())));
+    }
+    Value::object(pairs)
 }
 
 /// Full resolution: preset -> optional --config file -> CLI flags.
@@ -484,6 +595,57 @@ mod tests {
         apply_cli(&mut cfg, &args).unwrap();
         assert_eq!(cfg.trace.as_deref(), Some(std::path::Path::new("t2.json")));
         assert_eq!(cfg.metrics_interval_secs, 1.5);
+    }
+
+    #[test]
+    fn to_json_round_trips() {
+        let mut cfg = preset("e2e").unwrap();
+        cfg.mode = Mode::AsyncBuffered;
+        cfg.store.max_staleness = Some(3);
+        cfg.sync.encoding = ShardEncoding::TopK;
+        cfg.sync.topk_frac = 0.05;
+        cfg.mem.colocate = true;
+        cfg.mem.offload_classes = vec![AllocClass::Grads, AllocClass::OptimState];
+        cfg.journal_snapshot_secs = 0.5;
+        cfg.seed = 42;
+        let v = to_json(&cfg);
+        let mut rebuilt = PipelineConfig::default();
+        apply_json(&mut rebuilt, &v).unwrap();
+        assert_eq!(rebuilt.mode, cfg.mode);
+        assert_eq!(rebuilt.artifact_dir, cfg.artifact_dir);
+        assert_eq!(rebuilt.store.max_staleness, Some(3));
+        assert_eq!(rebuilt.sync.encoding, ShardEncoding::TopK);
+        assert_eq!(rebuilt.sync.topk_frac, 0.05);
+        assert!(rebuilt.mem.colocate);
+        assert_eq!(rebuilt.mem.offload_classes, cfg.mem.offload_classes);
+        assert_eq!(rebuilt.max_steps, cfg.max_steps);
+        assert_eq!(rebuilt.aipo.lr, cfg.aipo.lr);
+        assert_eq!(rebuilt.eval_every, cfg.eval_every);
+        assert_eq!(rebuilt.seed, 42);
+        assert_eq!(rebuilt.journal_snapshot_secs, 0.5);
+        assert!(rebuilt.journal);
+        assert!(rebuilt.init_checkpoint.is_none());
+    }
+
+    #[test]
+    fn journal_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        assert!(cfg.journal, "journaling is on by default");
+        let v = Value::parse(r#"{"journal":false,"journal_snapshot_secs":1.5}"#).unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert!(!cfg.journal);
+        assert_eq!(cfg.journal_snapshot_secs, 1.5);
+
+        let args = Args::parse(
+            ["--journal-snapshot-secs", "0.5"].iter().map(|s| s.to_string()),
+            &["no-journal"],
+        )
+        .unwrap();
+        let mut cfg2 = preset("nano").unwrap();
+        apply_cli(&mut cfg2, &args).unwrap();
+        assert_eq!(cfg2.journal_snapshot_secs, 0.5);
+        // --no-journal was not passed, so the default stands
+        assert!(cfg2.journal);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::coordinator::trainer::TrainStepRecord;
 use crate::data::PromptScheduler;
 use crate::dataplane::{DataPlaneSnapshot, StoreConfig};
 use crate::ddma::{BusOptions, WeightsBus};
+use crate::journal::{JournalRecord, JournalWriter, ResumeState};
 use crate::memplane::pool::MemSpec;
 use crate::memplane::{MemPlane, MemPlaneConfig};
 use crate::model::load_init_params;
@@ -136,6 +137,15 @@ pub struct PipelineConfig {
     /// periodic live-telemetry snapshot cadence in seconds (0 disables);
     /// snapshots append to `out_dir/telemetry_snapshots.jsonl`
     pub metrics_interval_secs: f64,
+    /// write the durable run-journal to `out_dir/journal.jsonl` (on by
+    /// default; `--no-journal` disables) — see [`crate::journal`]
+    pub journal: bool,
+    /// cadence of the journal's consistent snapshot records, in seconds
+    pub journal_snapshot_secs: f64,
+    /// crash-resume state reconstructed from a recorded journal by
+    /// [`crate::journal::plan_resume`] (`llamarl resume`). Never settable
+    /// from JSON/CLI — only the resume path threads it through.
+    pub resume: Option<ResumeState>,
     /// FAULT-INJECTION TEST HOOK: make every generator error out after N
     /// decode chunks, exercising the graph runtime's error propagation.
     /// Never settable from JSON/CLI.
@@ -170,6 +180,9 @@ impl Default for PipelineConfig {
             init_checkpoint: None,
             trace: None,
             metrics_interval_secs: 0.0,
+            journal: true,
+            journal_snapshot_secs: 0.25,
+            resume: None,
             debug_fail_generator_after: None,
         }
     }
@@ -232,6 +245,11 @@ pub struct RunReport {
     /// rollout-store telemetry (Mode::AsyncBuffered only)
     pub dataplane: Option<DataPlaneSnapshot>,
     pub metrics_path: Option<PathBuf>,
+    /// trace events lost to full recorder rings (0 in a healthy traced
+    /// run; always 0 untraced) — nonzero prints a warning at run finish
+    pub trace_dropped_events: u64,
+    /// optimizer step a crash-resumed run continued from (0: fresh run)
+    pub resumed_from_step: u64,
 }
 
 impl RunReport {
@@ -282,9 +300,19 @@ impl RunReport {
 pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     std::fs::create_dir_all(&cfg.out_dir)?;
     let manifest = Manifest::load(&cfg.artifact_dir)?;
-    let init = match &cfg.init_checkpoint {
-        None => load_init_params(&manifest)?,
-        Some(path) => {
+    // Crash-resume: the bus's starting weights come from the recovered
+    // packed trainer state (its params prefix), so generators pick up the
+    // checkpointed policy, not the random init.
+    let resumed_params: Option<Vec<f32>> = cfg
+        .resume
+        .as_ref()
+        .and_then(|r| r.init_state.as_ref())
+        .filter(|s| s.len() >= manifest.num_params)
+        .map(|s| s[..manifest.num_params].to_vec());
+    let init = match (resumed_params, &cfg.init_checkpoint) {
+        (Some(params), _) => params,
+        (None, None) => load_init_params(&manifest)?,
+        (None, Some(path)) => {
             let ckpt = crate::model::load_checkpoint(path)?;
             if ckpt.state.len() != manifest.num_params {
                 return Err(Error::Config(format!(
@@ -334,6 +362,8 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     bus_opts.background = cfg.sync.background && !graph.stepped;
     bus_opts.link_groups = cfg.sync.link_groups;
     bus_opts.topk_frac = cfg.sync.topk_frac;
+    // crash-resume: version mints continue above the recorded bus front
+    bus_opts.initial_version = cfg.resume.as_ref().map(|r| r.bus_version).unwrap_or(0);
     let bus = WeightsBus::with_options(init, bus_opts)?;
     // Build the colocated offloading memory plane: a testbed-scale MemSpec
     // derived from the artifact's parameter count, with `concurrent_phases`
@@ -351,12 +381,59 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
         manifest.config.gen_batch,
     );
     let mem = MemPlane::new(spec, &mem_cfg)?;
-    let ctx = ExecutorContext::with_mem(bus, Some(mem), cfg.out_dir.clone());
+
+    // Open the durable run-journal (on by default). A fresh run starts a
+    // new journal whose record 0 is the fully-resolved config; a resumed
+    // run APPENDS, continuing the seq stream above the recorded tail so
+    // the journal stays a single replayable document across crashes.
+    let journal: Option<Arc<JournalWriter>> = if cfg.journal {
+        let path = cfg.out_dir.join("journal.jsonl");
+        let w = match &cfg.resume {
+            Some(r) => JournalWriter::append(&path, r.next_seq)?,
+            None => {
+                let w = JournalWriter::create(&path)?;
+                w.write(&JournalRecord::Meta {
+                    config: crate::config::to_json(cfg),
+                })?;
+                w
+            }
+        };
+        Some(Arc::new(w))
+    } else {
+        None
+    };
+
+    let ctx =
+        ExecutorContext::with_journal(bus, Some(mem), cfg.out_dir.clone(), journal.clone());
+    if let Some(jw) = &journal {
+        // journal every weight-sync version mint (suffix replay advances
+        // the bus front past the last snapshot with these)
+        let jw = jw.clone();
+        ctx.weights.set_mint_hook(Box::new(move |version, publisher| {
+            jw.write_infallible(&JournalRecord::Mint { version, publisher });
+        }));
+    }
     let scheduler = Arc::new(PromptScheduler::new(
         cfg.seed,
         manifest.config.vocab,
         cfg.n_generations,
     )?);
+    // crash-resume: replay the prompt stream past what the recorded run
+    // consumed, so the resumed run's problems continue the same fixed-seed
+    // sequence instead of restarting it
+    let prior_trajectories = cfg.resume.as_ref().map(|r| {
+        if graph.stepped {
+            // stepped mode consumes exactly train_batch prompts per step
+            // (exact even when the kill landed between a step record and
+            // its progress tick)
+            r.start_step * manifest.config.train_batch as u64
+        } else {
+            r.prior.trajectories
+        }
+    });
+    if let Some(n) = prior_trajectories {
+        scheduler.fast_forward(n);
+    }
     let metrics_path = cfg.out_dir.join("metrics.jsonl");
     let log = Arc::new(JsonlWriter::create(&metrics_path)?);
 
@@ -364,8 +441,12 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     // live for exactly the duration of the launch, streaming the JSONL
     // event log incrementally; the Chrome export happens after the graph
     // joins — on the error path too, where a timeline is most useful.
+    // When the journal is on, drained events are mirrored into it too.
     let collector = match &cfg.trace {
-        Some(_) => Some(Collector::start(cfg.out_dir.join("trace_events.jsonl"))?),
+        Some(_) => Some(Collector::start_with_journal(
+            cfg.out_dir.join("trace_events.jsonl"),
+            journal.clone(),
+        )?),
         None => None,
     };
 
@@ -377,10 +458,14 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
         log,
     };
     let launched = graph.launch(&env);
+    let mut trace_dropped = 0u64;
     if let Some(c) = collector {
-        let exported = c.finish().and_then(|trace_log| match &cfg.trace {
-            Some(path) => chrome::export(&trace_log, path),
-            None => Ok(()),
+        let exported = c.finish().and_then(|trace_log| {
+            trace_dropped = trace_log.dropped;
+            match &cfg.trace {
+                Some(path) => chrome::export(&trace_log, path),
+                None => Ok(()),
+            }
         });
         // never mask the run's own error with an export error
         if launched.is_ok() {
@@ -389,5 +474,30 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     }
     let mut report = launched?;
     report.metrics_path = Some(metrics_path);
+    report.trace_dropped_events = trace_dropped;
+    if trace_dropped > 0 {
+        crate::log_warn!(
+            "trace",
+            "{trace_dropped} trace events dropped (recorder rings overflowed); \
+             the event log and journal are incomplete"
+        );
+    }
+    // Merge the journaled prefix into the resumed run's report so curves
+    // and totals describe the WHOLE run, not just the post-crash suffix.
+    if let Some(r) = &cfg.resume {
+        report.resumed_from_step = r.start_step;
+        let mut records = r.prior.records.clone();
+        records.extend(std::mem::take(&mut report.records));
+        report.records = records;
+        report.trajectories += prior_trajectories.unwrap_or(0);
+        report.tokens_generated += r.prior.tokens;
+        report.chunks += r.prior.chunks;
+    }
+    if let Some(jw) = &journal {
+        jw.write(&JournalRecord::Finish {
+            steps: report.steps,
+            trajectories: report.trajectories,
+        })?;
+    }
     Ok(report)
 }

@@ -12,6 +12,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::ddma::WeightsBus;
+use crate::journal::JournalWriter;
 use crate::memplane::MemPlane;
 use crate::util::error::Result;
 
@@ -41,6 +42,9 @@ pub struct ExecutorContext {
     pub mem: Option<Arc<MemPlane>>,
     /// where executors write metrics/checkpoints
     pub out_dir: PathBuf,
+    /// durable run-journal (None when journaling is disabled); executors
+    /// append step records, node lifecycle and version mints through it
+    pub journal: Option<Arc<JournalWriter>>,
 }
 
 impl ExecutorContext {
@@ -53,12 +57,22 @@ impl ExecutorContext {
         mem: Option<Arc<MemPlane>>,
         out_dir: PathBuf,
     ) -> Arc<Self> {
+        ExecutorContext::with_journal(weights, mem, out_dir, None)
+    }
+
+    pub fn with_journal(
+        weights: WeightsBus,
+        mem: Option<Arc<MemPlane>>,
+        out_dir: PathBuf,
+        journal: Option<Arc<JournalWriter>>,
+    ) -> Arc<Self> {
         Arc::new(ExecutorContext {
             stop: AtomicBool::new(false),
             trainer_step: AtomicU64::new(0),
             weights,
             mem,
             out_dir,
+            journal,
         })
     }
 

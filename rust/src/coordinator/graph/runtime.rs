@@ -35,7 +35,8 @@ use crate::coordinator::graph::topology::{EdgeKind, Graph, LeasePolicy, NodeKind
 use crate::coordinator::reward::{RewardExecutor, ScoredSink};
 use crate::coordinator::trainer::{Trainer, TrainerConfig, TrajectorySource};
 use crate::data::{task, PromptScheduler};
-use crate::dataplane::{RolloutStore, StoreConfig};
+use crate::dataplane::{RolloutStore, StoreConfig, StoreDump};
+use crate::journal::{JournalRecord, SnapshotDaemon, SnapshotRecord, StoreSnapshot};
 use crate::memplane::plan::Phase;
 use crate::runtime::Manifest;
 use crate::trace::{self, Sampler};
@@ -88,6 +89,10 @@ fn trainer_cfg(cfg: &PipelineConfig) -> TrainerConfig {
         max_steps: cfg.max_steps,
         publish_every: 1,
         checkpoint_every: cfg.checkpoint_every,
+        // crash-resume: the optimizer clock continues from the journaled
+        // step, seeded from the newest on-disk checkpoint when one exists
+        start_step: cfg.resume.as_ref().map(|r| r.start_step).unwrap_or(0),
+        resume_state: cfg.resume.as_ref().and_then(|r| r.init_state.clone()),
     }
 }
 
@@ -110,8 +115,15 @@ struct BuiltEdges {
 
 /// Materialize the graph's edges: the group-routed generations channel
 /// (one bounded queue per reward replica) and the scored plane (bounded
-/// gather channel or the rollout store).
-fn build_edges(graph: &Graph, cfg: &PipelineConfig) -> Result<BuiltEdges> {
+/// gather channel or the rollout store). When the run-journal is on, the
+/// store is wired to it as its durable replica (admit/consume records),
+/// and a crash-resumed run re-seeds the store from the recovered cut
+/// BEFORE the observer attaches (restored rows are not re-journaled).
+fn build_edges(
+    graph: &Graph,
+    cfg: &PipelineConfig,
+    journal: Option<&Arc<crate::journal::JournalWriter>>,
+) -> Result<BuiltEdges> {
     let gen_edge = graph
         .edge_into(NodeKind::Reward)
         .ok_or_else(|| Error::Coordinator("reward fleet has no inbound edge".into()))?;
@@ -131,10 +143,24 @@ fn build_edges(graph: &Graph, cfg: &PipelineConfig) -> Result<BuiltEdges> {
             let stats = tx.stats.clone();
             ScoredPlane::Channel { tx, rx, stats }
         }
-        EdgeKind::Store => ScoredPlane::Store(Arc::new(RolloutStore::new(StoreConfig {
-            seed: cfg.seed ^ 0xB0FF_E12D,
-            ..cfg.store.clone()
-        }))),
+        EdgeKind::Store => {
+            let store = Arc::new(RolloutStore::new(StoreConfig {
+                seed: cfg.seed ^ 0xB0FF_E12D,
+                ..cfg.store.clone()
+            }));
+            if let Some(st) = cfg.resume.as_ref().and_then(|r| r.store.clone()) {
+                store.restore(StoreDump {
+                    next_seq: st.next_seq,
+                    watermark: st.watermark,
+                    rows: st.rows,
+                    partials: st.partials,
+                });
+            }
+            if let Some(j) = journal {
+                store.set_observer(j.clone());
+            }
+            ScoredPlane::Store(store)
+        }
         EdgeKind::GroupRouted { .. } => {
             return Err(Error::Coordinator(
                 "scored edge must be a gather channel or the store".into(),
@@ -200,6 +226,9 @@ where
         .spawn(move || {
             // the thread name doubles as the trace track identity
             trace::instant(trace::NODE_START, 0.0);
+            if let Some(j) = &fail.ctx.journal {
+                j.note_node(&reported, "start");
+            }
             let out = match catch_unwind(AssertUnwindSafe(body)) {
                 Ok(Ok(tally)) => Some(tally),
                 Ok(Err(e)) => {
@@ -212,6 +241,9 @@ where
                 }
             };
             trace::instant(trace::NODE_STOP, 0.0);
+            if let Some(j) = &fail.ctx.journal {
+                j.note_node(&reported, "stop");
+            }
             out
         })
         .expect("spawn graph node thread")
@@ -243,6 +275,54 @@ fn start_sampler(
     )?))
 }
 
+/// Gather one consistent cut of the run's durable state for the journal's
+/// snapshot records. Called from inside [`JournalWriter::write_snapshot`]'s
+/// closure, i.e. under the journal writer lock and NEVER under store shard
+/// locks (`RolloutStore::dump` takes and releases them internally —
+/// journal → shards is the one legal lock order).
+///
+/// [`JournalWriter::write_snapshot`]: crate::journal::JournalWriter::write_snapshot
+fn build_snapshot(ctx: &ExecutorContext, store: Option<&RolloutStore>) -> SnapshotRecord {
+    use std::sync::atomic::Ordering;
+    let mut snap = SnapshotRecord {
+        trainer_step: ctx.trainer_step.load(Ordering::SeqCst),
+        bus_version: ctx.weights.version(),
+        bus_publishes: ctx.weights.publish_count(),
+        slot_fronts: ctx.weights.subscriber_fronts(),
+        store: store.map(|s| {
+            let d = s.dump();
+            StoreSnapshot {
+                next_seq: d.next_seq,
+                watermark: d.watermark,
+                rows: d.rows,
+                partials: d.partials,
+            }
+        }),
+        ..SnapshotRecord::default()
+    };
+    if let Some(m) = &ctx.mem {
+        let u = m.usage();
+        snap.mem_device_used = u.device_used;
+        snap.mem_host_used = u.host_used;
+    }
+    snap
+}
+
+/// Start the journal's periodic snapshot daemon when the journal is on.
+fn start_snapshotter(
+    cfg: &PipelineConfig,
+    ctx: &Arc<ExecutorContext>,
+    store: Option<Arc<RolloutStore>>,
+) -> Option<SnapshotDaemon> {
+    let journal = ctx.journal.clone()?;
+    let ctx = ctx.clone();
+    Some(SnapshotDaemon::start(
+        journal,
+        cfg.journal_snapshot_secs,
+        move || build_snapshot(&ctx, store.as_deref()),
+    ))
+}
+
 /// The free-running scheduler: one named thread per replica, trainer on
 /// the controller thread (async / async-buffered modes).
 fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
@@ -252,7 +332,7 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
         gen_rxs,
         gen_stats,
         scored,
-    } = build_edges(graph, cfg)?;
+    } = build_edges(graph, cfg, env.ctx.journal.as_ref())?;
     let n_reward = graph.replicas(NodeKind::Reward);
     let (shared_sink, source, scored_stats, store) = match scored {
         ScoredPlane::Channel { tx, rx, stats } => (
@@ -271,6 +351,7 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     let mut hub = TelemetryHub::new(graph.mode_name, gen_stats, scored_stats, store.clone());
     let fail = FailState::new(env.ctx.clone(), store.clone());
     let sampler = start_sampler(cfg, &hub, env.ctx.clone())?;
+    let snapshotter = start_snapshotter(cfg, &env.ctx, store.clone());
 
     // generator fleet: each replica registers its weight-sync slot (when
     // the topology says so) and holds its lease per the node's policy
@@ -404,6 +485,11 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     if let Some(s) = sampler {
         s.stop();
     }
+    // final consistent cut after the planes settled (ahead of the
+    // controller's finish record)
+    if let Some(d) = snapshotter {
+        d.stop();
+    }
     Ok(hub.finish(env.ctx.as_ref(), &trainer, wall))
 }
 
@@ -420,7 +506,7 @@ fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
         gen_rxs,
         gen_stats,
         scored,
-    } = build_edges(graph, cfg)?;
+    } = build_edges(graph, cfg, env.ctx.journal.as_ref())?;
     let n_reward = graph.replicas(NodeKind::Reward);
     let ScoredPlane::Channel { tx, rx, stats } = scored else {
         return Err(Error::Coordinator(
@@ -429,6 +515,7 @@ fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     };
     let mut hub = TelemetryHub::new(graph.mode_name, gen_stats, Some(stats), None);
     let sampler = start_sampler(cfg, &hub, env.ctx.clone())?;
+    let snapshotter = start_snapshotter(cfg, ctx, None);
     // one thread drives every phase here; the generate/score/train spans
     // below mark which phase the controller timeline is in
     trace::set_track("controller");
@@ -470,9 +557,20 @@ fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     // generator's PJRT context instead of spawning it
     let run_evals = graph.replicas(NodeKind::Evaluator) > 0 && cfg.eval_every > 0;
     let suites = task::eval_suites(cfg.eval_max_per_suite);
+    // Crash-resume: the tick loop continues from the recorded step. The
+    // generator's tally restarts at zero, so progress ticks carry the
+    // journaled prior on top of the live counters — tick totals stay
+    // cumulative across any number of kill/resume cycles.
+    let start_step = cfg.resume.as_ref().map(|r| r.start_step).unwrap_or(0);
+    let rows_u64 = rows_per_step as u64;
+    let (prior_tokens, prior_chunks) = cfg
+        .resume
+        .as_ref()
+        .map(|r| (r.prior.tokens, r.prior.chunks))
+        .unwrap_or((0, 0));
     let t0 = Instant::now();
 
-    for step in 0..cfg.max_steps {
+    for step in start_step..cfg.max_steps {
         // Phase 1: generation — all rows complete under current weights.
         // The Generate lease swaps offloadable trainer state to host
         // behind decode, and the Train hint arms the prefetcher so the
@@ -514,6 +612,23 @@ fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
                 }
             }
         }
+        // Progress tick, AFTER the step record: a kill between the two
+        // resumes one step back, never one step ahead. Trajectory count is
+        // exact (train_batch rows per tick); tokens/chunks ride the tally.
+        if let Some(j) = &ctx.journal {
+            let t = gen.tally();
+            j.write(&JournalRecord::Tick {
+                step: step + 1,
+                tokens: prior_tokens + t.tokens,
+                trajectories: (step + 1) * rows_u64,
+                chunks: prior_chunks + t.chunks,
+            })?;
+        }
+        if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
+            // the stepped loop drives checkpointing itself (the threaded
+            // path gets it from run_executor_loop)
+            trainer.save_checkpoint()?;
+        }
         if run_evals && (step + 1) % cfg.eval_every == 0 {
             // co-located: eval borrows the generator's PJRT context
             let snap = ctx.weights.latest();
@@ -534,6 +649,9 @@ fn run_stepped(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     }
     if let Some(s) = sampler {
         s.stop();
+    }
+    if let Some(d) = snapshotter {
+        d.stop();
     }
     hub.add_generator(&gen.tally());
     for r in &rewards {

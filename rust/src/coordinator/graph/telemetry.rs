@@ -141,6 +141,25 @@ impl TelemetryHub {
                     Value::num(mm.prefetch_hits.load(Ordering::Relaxed) as f64),
                 ));
             }
+            // journal lag: how far the durable record trails the live run
+            if let Some(j) = &ctx.journal {
+                pairs.push((
+                    "journal_bytes_written",
+                    Value::num(j.bytes_written() as f64),
+                ));
+                pairs.push((
+                    "journal_records_flushed",
+                    Value::num(j.records_flushed() as f64),
+                ));
+                pairs.push((
+                    "journal_secs_since_snapshot",
+                    Value::num(j.secs_since_snapshot()),
+                ));
+            }
+            pairs.push((
+                "trace_dropped_events",
+                Value::num(crate::trace::dropped_events() as f64),
+            ));
             Value::object(pairs)
         }
     }

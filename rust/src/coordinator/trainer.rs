@@ -32,6 +32,14 @@ pub struct TrainerConfig {
     /// publish weights to the DDMA bus every k optimizer steps
     pub publish_every: u64,
     pub checkpoint_every: u64,
+    /// crash-resume: optimizer step to continue counting from (0 for a
+    /// fresh run); the step clock and `max_steps` horizon pick up exactly
+    /// where the journaled run left off
+    pub start_step: u64,
+    /// crash-resume: packed train state recovered from the newest on-disk
+    /// checkpoint (None: `init()` builds fresh state from the bus's
+    /// version-front weights)
+    pub resume_state: Option<Vec<f32>>,
 }
 
 impl Default for TrainerConfig {
@@ -42,6 +50,8 @@ impl Default for TrainerConfig {
             max_steps: 10,
             publish_every: 1,
             checkpoint_every: 0,
+            start_step: 0,
+            resume_state: None,
         }
     }
 }
@@ -107,6 +117,7 @@ impl Trainer {
         source: TrajectorySource,
         log: Option<Arc<JsonlWriter>>,
     ) -> Trainer {
+        let start_step = cfg.start_step;
         Trainer {
             cfg,
             ctx,
@@ -114,7 +125,7 @@ impl Trainer {
             log,
             runtime: None,
             state_buf: None,
-            step: 0,
+            step: start_step,
             pending: VecDeque::new(),
             eof: false,
             eofs_seen: 0,
@@ -127,6 +138,18 @@ impl Trainer {
 
     fn runtime(&self) -> &Runtime {
         self.runtime.as_ref().expect("init() not called")
+    }
+
+    /// Fresh train state: the bus's current weight front zero-padded to the
+    /// full packed layout [params | m | v | step | metrics].
+    fn fresh_state(&self, rt: &Runtime) -> Vec<f32> {
+        let snap = self.ctx.weights.latest();
+        let total = rt.manifest.train_state.total;
+        let mut state = Vec::with_capacity(total);
+        state.extend_from_slice(&snap.data);
+        state.resize(total, 0.0);
+        debug_assert_eq!(snap.data.len(), rt.manifest.num_params);
+        state
     }
 
     /// Pull from the trajectory source until we can fill a microbatch (or
@@ -327,6 +350,11 @@ impl Trainer {
                 ("rows", Value::num(rec.rows as f64)),
             ]))?;
         }
+        // durable copy: resume restarts the clock from the last journaled
+        // step record, replay re-drives against this exact trajectory
+        if let Some(journal) = &self.ctx.journal {
+            journal.write(&crate::journal::JournalRecord::Step { record: rec.clone() })?;
+        }
         Ok(rec)
     }
 
@@ -351,16 +379,33 @@ impl Executor for Trainer {
         rt.prepare("train_step")?;
         rt.prepare("extract_metrics")?;
         rt.prepare("extract_params")?;
-        // Initial train state from the bus's version-0 weights.
-        let snap = self.ctx.weights.latest();
-        let p = rt.manifest.num_params;
         let total = rt.manifest.train_state.total;
-        let mut state = Vec::with_capacity(total);
-        state.extend_from_slice(&snap.data);
-        state.resize(total, 0.0);
-        debug_assert_eq!(snap.data.len(), p);
+        // Crash-resume: prefer the checkpointed packed state (params +
+        // optimizer moments + step counter all intact); fall back to fresh
+        // state from the bus's version-front weights.
+        let state = match self.cfg.resume_state.take() {
+            Some(s) if s.len() == total => s,
+            Some(s) => {
+                crate::log_warn!(
+                    "trainer",
+                    "resume state len {} != train_state.total {}; re-initializing",
+                    s.len(),
+                    total
+                );
+                self.fresh_state(&rt)
+            }
+            None => self.fresh_state(&rt),
+        };
         self.state_buf = Some(rt.upload(&HostTensor::F32(state, vec![total]))?);
         self.runtime = Some(rt);
+        // publish the resumed clock so store staleness/lag math is correct
+        // from the first sampled batch
+        self.ctx
+            .trainer_step
+            .store(self.step, std::sync::atomic::Ordering::SeqCst);
+        if let Some(TrajectorySource::Store(store)) = &self.source {
+            store.advance_watermark(self.step);
+        }
         self.started = Some(Instant::now());
         Ok(())
     }

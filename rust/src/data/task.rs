@@ -178,6 +178,15 @@ impl PromptScheduler {
     pub fn issued(&self) -> u64 {
         self.inner.lock().unwrap().issued
     }
+
+    /// Crash-resume: advance the fixed-seed prompt stream past the `n`
+    /// tasks a recorded run already consumed, so a resumed run continues
+    /// the same sequence instead of regenerating it from the start.
+    pub fn fast_forward(&self, n: u64) {
+        for _ in 0..n {
+            self.next();
+        }
+    }
 }
 
 /// Held-out evaluation suites, mirroring the paper's three benchmarks:

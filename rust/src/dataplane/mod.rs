@@ -46,4 +46,6 @@ pub mod store;
 pub use driver::{run_driver, DriverConfig, DriverReport, Transport};
 pub use policy::{AdmissionPolicy, SamplingStrategy};
 pub use stats::{DataPlaneSnapshot, DataPlaneStats, LAG_BUCKETS};
-pub use store::{PartialRollout, RolloutStore, StoreConfig};
+pub use store::{
+    ConsumeReason, PartialRollout, RolloutStore, StoreConfig, StoreDump, StoreObserver,
+};

@@ -26,7 +26,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::data::PromptTask;
@@ -83,6 +83,56 @@ pub struct PartialRollout {
     pub gen_version: u64,
 }
 
+/// Why resident rows left the store, as reported to a [`StoreObserver`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConsumeReason {
+    /// handed to the trainer by `sample`
+    Sample,
+    /// displaced by `EvictOldest` admission
+    Evict,
+    /// aged past `max_staleness`
+    Stale,
+}
+
+impl ConsumeReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConsumeReason::Sample => "sample",
+            ConsumeReason::Evict => "evict",
+            ConsumeReason::Stale => "stale",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ConsumeReason> {
+        match s {
+            "sample" => Some(ConsumeReason::Sample),
+            "evict" => Some(ConsumeReason::Evict),
+            "stale" => Some(ConsumeReason::Stale),
+            _ => None,
+        }
+    }
+}
+
+/// Durable-state hook: the run-journal registers one of these to record
+/// every admission (with the row payloads) and every consumption (by
+/// admission seq), making the journal an authoritative replica of the
+/// resident set. Callbacks fire *after* all shard guards are released, so
+/// implementations may take their own locks freely; the one rule is that
+/// they must never call back into the store.
+pub trait StoreObserver: Send + Sync {
+    fn on_admit(&self, rows: &[(u64, Trajectory)]);
+    fn on_consume(&self, seqs: &[u64], reason: ConsumeReason);
+}
+
+/// A consistent copy of the store's durable state: resident rows tagged
+/// with their admission seqs, parked partials, and both clocks.
+pub struct StoreDump {
+    pub next_seq: u64,
+    pub watermark: u64,
+    pub rows: Vec<(u64, Trajectory)>,
+    pub partials: Vec<PartialRollout>,
+}
+
 /// One resident row: the trajectory plus its global admission sequence
 /// number (FIFO order across shards).
 struct Entry {
@@ -111,6 +161,7 @@ pub struct RolloutStore {
     cv: Condvar,
     partial: Mutex<HashMap<(u64, usize), PartialRollout>>,
     rng: Mutex<Rng>,
+    observer: OnceLock<std::sync::Arc<dyn StoreObserver>>,
     pub stats: DataPlaneStats,
 }
 
@@ -129,9 +180,20 @@ impl RolloutStore {
             cv: Condvar::new(),
             partial: Mutex::new(HashMap::new()),
             rng: Mutex::new(Rng::new(seed ^ 0xDA7A_91A5)),
+            observer: OnceLock::new(),
             cfg,
             stats: DataPlaneStats::default(),
         }
+    }
+
+    /// Register the (single) durable-state observer. Later calls are
+    /// ignored — one journal per store.
+    pub fn set_observer(&self, obs: std::sync::Arc<dyn StoreObserver>) {
+        let _ = self.observer.set(obs);
+    }
+
+    fn observer(&self) -> Option<&std::sync::Arc<dyn StoreObserver>> {
+        self.observer.get()
     }
 
     pub fn config(&self) -> &StoreConfig {
@@ -201,11 +263,12 @@ impl RolloutStore {
         self.shards.iter().map(|s| s.lock().unwrap()).collect()
     }
 
-    /// Evict up to `want` globally-oldest rows. Returns how many went.
-    fn evict_oldest(&self, want: usize) -> usize {
+    /// Evict up to `want` globally-oldest rows. Returns the admission seqs
+    /// of the rows that went.
+    fn evict_oldest(&self, want: usize) -> Vec<u64> {
         let mut guards = self.lock_all();
-        let mut evicted = 0;
-        while evicted < want {
+        let mut evicted = Vec::new();
+        while evicted.len() < want {
             // find the shard whose front entry is globally oldest
             let oldest = guards
                 .iter()
@@ -213,41 +276,51 @@ impl RolloutStore {
                 .filter_map(|(i, g)| g.rows.front().map(|e| (e.seq, i)))
                 .min();
             match oldest {
-                Some((_, i)) => {
+                Some((seq, i)) => {
                     guards[i].rows.pop_front();
-                    evicted += 1;
+                    evicted.push(seq);
                 }
                 None => break, // store empty
             }
         }
-        if evicted > 0 {
-            self.release(evicted);
-            self.stats.evicted.fetch_add(evicted as u64, Ordering::Relaxed);
-            trace::instant(trace::STORE_EVICT, evicted as f64);
+        drop(guards);
+        if !evicted.is_empty() {
+            self.release(evicted.len());
+            self.stats
+                .evicted
+                .fetch_add(evicted.len() as u64, Ordering::Relaxed);
+            trace::instant(trace::STORE_EVICT, evicted.len() as f64);
+            if let Some(obs) = self.observer() {
+                obs.on_consume(&evicted, ConsumeReason::Evict);
+            }
         }
         evicted
     }
 
     /// Drop resident rows that aged past max_staleness. Caller holds all
-    /// shard guards. Returns how many were purged.
-    fn purge_stale_locked(&self, guards: &mut [MutexGuard<'_, Shard>]) -> usize {
+    /// shard guards. Returns the purged admission seqs; the caller reports
+    /// them to the observer once the guards are released.
+    fn purge_stale_locked(&self, guards: &mut [MutexGuard<'_, Shard>]) -> Vec<u64> {
         let Some(bound) = self.cfg.max_staleness else {
-            return 0;
+            return Vec::new();
         };
         let watermark = self.watermark();
-        let mut purged = 0;
+        let mut purged = Vec::new();
         for g in guards.iter_mut() {
-            let before = g.rows.len();
-            g.rows
-                .retain(|e| watermark.saturating_sub(e.traj.gen_version) <= bound);
-            purged += before - g.rows.len();
+            g.rows.retain(|e| {
+                let keep = watermark.saturating_sub(e.traj.gen_version) <= bound;
+                if !keep {
+                    purged.push(e.seq);
+                }
+                keep
+            });
         }
-        if purged > 0 {
-            self.release(purged);
+        if !purged.is_empty() {
+            self.release(purged.len());
             self.stats
                 .dropped_stale
-                .fetch_add(purged as u64, Ordering::Relaxed);
-            trace::instant(trace::STORE_DROP_STALE, purged as f64);
+                .fetch_add(purged.len() as u64, Ordering::Relaxed);
+            trace::instant(trace::STORE_DROP_STALE, purged.len() as f64);
         }
         purged
     }
@@ -325,7 +398,7 @@ impl RolloutStore {
             }
             AdmissionPolicy::EvictOldest => {
                 while !self.try_reserve(n) {
-                    if self.evict_oldest(n) == 0 {
+                    if self.evict_oldest(n).is_empty() {
                         // nothing evictable (a racing producer reserved the
                         // space first): yield and retry
                         std::thread::yield_now();
@@ -334,14 +407,21 @@ impl RolloutStore {
             }
         }
 
+        let mut journaled = self.observer().map(|_| Vec::with_capacity(n));
         for t in rows {
             let seq = self.seq.fetch_add(1, Ordering::Relaxed);
             let shard = self.shard_for(t.group_id);
+            if let Some(j) = journaled.as_mut() {
+                j.push((seq, t.clone()));
+            }
             self.shards[shard]
                 .lock()
                 .unwrap()
                 .rows
                 .push_back(Entry { seq, traj: t });
+        }
+        if let (Some(obs), Some(j)) = (self.observer(), journaled) {
+            obs.on_admit(&j);
         }
         self.stats.admitted.fetch_add(n as u64, Ordering::Relaxed);
         trace::instant(trace::STORE_ADMIT, n as f64);
@@ -463,13 +543,24 @@ impl RolloutStore {
         };
         loop {
             let mut out = Vec::new();
+            let mut taken_seqs = Vec::new();
+            let purged;
             {
                 let mut guards = self.lock_all();
-                self.purge_stale_locked(&mut guards);
+                purged = self.purge_stale_locked(&mut guards);
                 for e in self.take_batch_locked(&mut guards, max_rows) {
                     self.stats
                         .record_sampled_lag(self.lag_of(e.traj.gen_version));
+                    taken_seqs.push(e.seq);
                     out.push(e.traj);
+                }
+            }
+            if let Some(obs) = self.observer() {
+                if !purged.is_empty() {
+                    obs.on_consume(&purged, ConsumeReason::Stale);
+                }
+                if !taken_seqs.is_empty() {
+                    obs.on_consume(&taken_seqs, ConsumeReason::Sample);
                 }
             }
             if !out.is_empty() {
@@ -534,6 +625,64 @@ impl RolloutStore {
 
     pub fn snapshot(&self) -> DataPlaneSnapshot {
         DataPlaneSnapshot::from_stats(&self.stats, self.occupancy(), self.watermark())
+    }
+
+    // -- durable state (run-journal) ----------------------------------------
+
+    /// Copy the durable state out in one consistent cut: all shard locks
+    /// are held while rows are gathered (ascending index order, per the
+    /// module lock rule), so the dump observes no admission or sampling
+    /// half-applied. Rows come back in admission order.
+    pub fn dump(&self) -> StoreDump {
+        let guards = self.lock_all();
+        let mut rows: Vec<(u64, Trajectory)> = guards
+            .iter()
+            .flat_map(|g| g.rows.iter().map(|e| (e.seq, e.traj.clone())))
+            .collect();
+        drop(guards);
+        rows.sort_by_key(|(seq, _)| *seq);
+        let partials = self.partial.lock().unwrap().values().cloned().collect();
+        StoreDump {
+            next_seq: self.seq.load(Ordering::Acquire),
+            watermark: self.watermark(),
+            rows,
+            partials,
+        }
+    }
+
+    /// Re-seed a freshly-constructed store from a dump (crash-resume).
+    /// Must run before any producer/consumer thread touches the store;
+    /// admission seqs are preserved so FIFO order and journal identity
+    /// survive the restart. Rows beyond capacity keep the newest.
+    pub fn restore(&self, dump: StoreDump) {
+        assert_eq!(self.occupancy(), 0, "restore requires an empty store");
+        let mut rows = dump.rows;
+        rows.sort_by_key(|(seq, _)| *seq);
+        if rows.len() > self.cfg.capacity {
+            let excess = rows.len() - self.cfg.capacity;
+            rows.drain(..excess);
+        }
+        let next_seq = dump
+            .next_seq
+            .max(rows.last().map(|(s, _)| s + 1).unwrap_or(0));
+        self.seq.store(next_seq, Ordering::Release);
+        self.watermark.store(dump.watermark, Ordering::Release);
+        self.occupancy.store(rows.len(), Ordering::Release);
+        self.stats.note_occupancy(rows.len());
+        for (seq, traj) in rows {
+            let shard = self.shard_for(traj.group_id);
+            self.shards[shard]
+                .lock()
+                .unwrap()
+                .rows
+                .push_back(Entry { seq, traj });
+        }
+        let mut partial = self.partial.lock().unwrap();
+        for p in dump.partials {
+            partial.insert((p.task.group_id, p.task.replica), p);
+        }
+        drop(partial);
+        self.cv.notify_all();
     }
 }
 

@@ -42,7 +42,7 @@ pub mod ps_baseline;
 pub mod topology;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::time::Instant;
 
 use crate::model::VersionedParams;
@@ -69,6 +69,10 @@ pub struct BusOptions {
     pub link_groups: usize,
     /// per-shard kept fraction for [`ShardEncoding::TopK`]
     pub topk_frac: f64,
+    /// version the initial snapshot carries and the mint counter continues
+    /// from (crash-resume restores the recorded bus front here; 0 for a
+    /// fresh run)
+    pub initial_version: u64,
 }
 
 impl BusOptions {
@@ -80,6 +84,7 @@ impl BusOptions {
             background: false,
             link_groups: 0,
             topk_frac: 0.01,
+            initial_version: 0,
         }
     }
 }
@@ -109,6 +114,10 @@ pub struct WeightsBus {
     /// ever held for the microsecond counter-update + wakeup
     publish_lock: Mutex<()>,
     notify: (Mutex<u64>, Condvar),
+    /// run-journal hook: called with (version, publisher) after every mint
+    /// (under the publish lock, after the version store — so journal mint
+    /// order is version order)
+    mint_hook: OnceLock<Box<dyn Fn(u64, usize) + Send + Sync>>,
 }
 
 impl WeightsBus {
@@ -162,15 +171,21 @@ impl WeightsBus {
             plan,
             encoding: opts.encoding,
             topk_frac: opts.topk_frac,
-            slot: RwLock::new(Arc::new(VersionedParams::new(0, init))),
+            slot: RwLock::new(Arc::new(VersionedParams::new(opts.initial_version, init))),
             subscribers,
-            version: AtomicU64::new(0),
+            version: AtomicU64::new(opts.initial_version),
             metrics,
             publishers: Mutex::new(vec![0]),
             executor,
             publish_lock: Mutex::new(()),
-            notify: (Mutex::new(0), Condvar::new()),
+            notify: (Mutex::new(opts.initial_version), Condvar::new()),
+            mint_hook: OnceLock::new(),
         })
+    }
+
+    /// Install the run-journal mint hook (once; later calls are ignored).
+    pub fn set_mint_hook(&self, hook: Box<dyn Fn(u64, usize) + Send + Sync>) {
+        let _ = self.mint_hook.set(hook);
     }
 
     /// Register an additional trainer-side publisher sharing this bus's
@@ -306,6 +321,9 @@ impl WeightsBus {
             }
         }
 
+        if let Some(hook) = self.mint_hook.get() {
+            hook(version, publisher);
+        }
         self.publishers.lock().unwrap()[publisher] += 1;
         self.metrics.publishes.fetch_add(1, Ordering::Relaxed);
         self.metrics
@@ -431,6 +449,17 @@ impl WeightsBus {
 
     pub fn subscriber_count(&self) -> usize {
         self.subscribers.lock().unwrap().len()
+    }
+
+    /// Front version of every registered generator slot — the fence
+    /// positions the run-journal folds into its snapshot records.
+    pub fn subscriber_fronts(&self) -> Vec<u64> {
+        self.subscribers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.front_version())
+            .collect()
     }
 }
 

@@ -1,0 +1,45 @@
+//! The durable run-journal: the authoritative, replayable record of a run.
+//!
+//! PR 6's trace collector streams an append-only JSONL *event log*; this
+//! module promotes that idiom into a durable-state subsystem. A training
+//! run (when `journal = true`, the default) writes `out_dir/journal.jsonl`
+//! alongside the event log: every line carries a monotonic `seq` and a
+//! typed `kind`, and four record families make the journal self-contained:
+//!
+//! * **state deltas** — store admissions (with full row payloads),
+//!   consumptions (by admission seq), weight-sync version mints, trainer
+//!   step records, stepped-mode progress ticks, node lifecycle;
+//! * **snapshot records** — periodic consistent cuts (store shard
+//!   contents + staleness watermark, bus front version + registered-slot
+//!   fences, memplane residency, node states) taken *under the journal
+//!   writer lock*, so a snapshot plus the suffix after it reconstructs
+//!   the run exactly;
+//! * **meta** — the fully-resolved run config as record 0, making the
+//!   journal replayable with no side channel;
+//! * **finish** — the clean-shutdown marker whose absence identifies a
+//!   killed run.
+//!
+//! Consumers pull through [`JournalReader`] — an iterator of typed
+//! records over `util::json`, one line at a time, never materializing the
+//! document, tolerant of the half-written final line a SIGKILL leaves
+//! (the `kaleidawave__json-iterator-reader` / `thomcc__smoljson` reading
+//! idiom). On top of it sit [`plan_resume`] (`llamarl resume`: latest
+//! snapshot + suffix replay → continue the run), deterministic replay
+//! (`llamarl replay`: re-drive the recorded config and compare training
+//! trajectories field-for-field), and the `llamarl journal`
+//! tail/filter/stats query command.
+
+pub mod reader;
+pub mod record;
+pub mod resume;
+pub mod snapshot;
+pub mod writer;
+
+pub use reader::JournalReader;
+pub use record::{JournalRecord, SnapshotRecord, StoreSnapshot};
+pub use resume::{
+    compare_steps, find_checkpoint_state, plan_resume, PriorTotals, ResumePlan, ResumeState,
+    StepMismatch,
+};
+pub use snapshot::SnapshotDaemon;
+pub use writer::JournalWriter;

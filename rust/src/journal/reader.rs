@@ -1,0 +1,109 @@
+//! Pull-based streaming journal reader.
+//!
+//! The reader is an iterator of typed records over a JSONL journal — one
+//! line parsed (`util::json`) and decoded at a time, never materializing
+//! the document (the `kaleidawave__json-iterator-reader` /
+//! `thomcc__smoljson` idiom: resume on a multi-hour journal reads O(line)
+//! memory, not O(file)). A killed run may leave a half-written final
+//! line; the reader tolerates exactly that — a parse/decode failure on
+//! the *last* line of the file ends the stream and sets
+//! [`JournalReader::truncated_tail`], while the same failure with more
+//! content after it is a hard corruption error.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use crate::journal::record::JournalRecord;
+use crate::util::error::{Error, Result};
+
+pub struct JournalReader {
+    r: BufReader<File>,
+    line_no: usize,
+    truncated: bool,
+    done: bool,
+}
+
+impl JournalReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<JournalReader> {
+        Ok(JournalReader {
+            r: BufReader::new(File::open(path)?),
+            line_no: 0,
+            truncated: false,
+            done: false,
+        })
+    }
+
+    /// True once the stream ended on a half-written final line (the
+    /// signature of a killed run). Only meaningful after the iterator
+    /// returns `None`.
+    pub fn truncated_tail(&self) -> bool {
+        self.truncated
+    }
+
+    /// Complete lines consumed so far.
+    pub fn lines_read(&self) -> usize {
+        self.line_no
+    }
+
+    fn at_eof(&mut self) -> bool {
+        matches!(self.r.fill_buf(), Ok(buf) if buf.is_empty())
+    }
+
+    /// Pull the next `(journal_seq, record)`. `None` is end-of-stream
+    /// (clean, or tolerated truncated tail — check `truncated_tail`).
+    #[allow(clippy::should_implement_trait)] // also exposed via Iterator
+    pub fn next_record(&mut self) -> Option<Result<(u64, JournalRecord)>> {
+        if self.done {
+            return None;
+        }
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match self.r.read_line(&mut line) {
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(Error::Io(e)));
+                }
+                Ok(0) => {
+                    self.done = true;
+                    return None;
+                }
+                Ok(_) => {}
+            }
+            let text = line.trim_end_matches(['\n', '\r']);
+            if text.trim().is_empty() {
+                continue; // blank line (never written, but harmless)
+            }
+            let decoded = crate::util::json::Value::parse(text)
+                .and_then(|v| JournalRecord::from_value(&v));
+            match decoded {
+                Ok(rec) => {
+                    self.line_no += 1;
+                    return Some(Ok(rec));
+                }
+                Err(e) => {
+                    self.done = true;
+                    // a bad *final* line is the torn tail of a killed run:
+                    // end the stream; bad lines mid-file are corruption
+                    if self.at_eof() {
+                        self.truncated = true;
+                        return None;
+                    }
+                    return Some(Err(Error::Manifest(format!(
+                        "journal corrupt at line {}: {e}",
+                        self.line_no + 1
+                    ))));
+                }
+            }
+        }
+    }
+}
+
+impl Iterator for JournalReader {
+    type Item = Result<(u64, JournalRecord)>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_record()
+    }
+}

@@ -1,0 +1,539 @@
+//! Typed journal records and their `util::json` wire forms.
+//!
+//! Every journal line is one JSON object with two universal keys — `seq`
+//! (the monotonic journal sequence number) and `kind` (the record tag) —
+//! plus the kind-specific payload, flattened where the field names cannot
+//! collide. Serialization goes through [`crate::util::json::Value`] like
+//! every other writer in the tree, so the shortest-roundtrip f64 format
+//! makes numeric payloads (train metrics, behaviour log-probs) exact
+//! across a write → stream-read → replay cycle.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::TrainStepRecord;
+use crate::data::{Difficulty, Problem, PromptTask};
+use crate::dataplane::{ConsumeReason, PartialRollout};
+use crate::rl::{FinishReason, Trajectory};
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+/// One record in the run-journal stream.
+#[derive(Debug, Clone)]
+pub enum JournalRecord {
+    /// First record of a fresh journal: the fully-resolved run config
+    /// (the `config::to_json` form), so `resume`/`replay` can rebuild the
+    /// exact `PipelineConfig` without any side channel.
+    Meta { config: Value },
+    /// One trace-plane event mirrored into the journal (same line schema
+    /// as the collector's event log: B/E spans, i instants, C counters).
+    Event {
+        t_us: f64,
+        track: String,
+        ph: String,
+        name: String,
+        value: f64,
+    },
+    /// Rows admitted into the rollout store, with their admission seqs.
+    Admit { rows: Vec<(u64, Trajectory)> },
+    /// Rows that left the store (sampled / evicted / aged out), by seq.
+    Consume {
+        store_seqs: Vec<u64>,
+        reason: ConsumeReason,
+    },
+    /// A weight-sync version mint on the DDMA bus.
+    Mint { version: u64, publisher: usize },
+    /// One completed optimizer step with its full metric record.
+    Step { record: TrainStepRecord },
+    /// Stepped-mode progress fence: cumulative generation totals after
+    /// `step` ticks (what scheduler fast-forward and count-parity use).
+    Tick {
+        step: u64,
+        tokens: u64,
+        trajectories: u64,
+        chunks: u64,
+    },
+    /// Graph node lifecycle ("start" / "stop").
+    Node { name: String, state: String },
+    /// Periodic consistent snapshot of the durable run state.
+    Snapshot(SnapshotRecord),
+    /// Clean end of run. A journal without one was killed mid-flight.
+    Finish { steps: u64, trajectories: u64 },
+}
+
+/// The payload of a [`JournalRecord::Snapshot`]: everything `resume` needs
+/// to reconstruct the run without reading the prefix before it.
+#[derive(Debug, Clone, Default)]
+pub struct SnapshotRecord {
+    /// trainer optimizer clock at the cut
+    pub trainer_step: u64,
+    /// weight-sync bus front (latest minted version)
+    pub bus_version: u64,
+    pub bus_publishes: u64,
+    /// per-registered-generator fence positions (front versions)
+    pub slot_fronts: Vec<u64>,
+    /// rollout-store durable state (None in channel-scored modes)
+    pub store: Option<StoreSnapshot>,
+    /// memplane residency at the cut (bytes in each pool)
+    pub mem_device_used: u64,
+    pub mem_host_used: u64,
+    /// graph node lifecycle states at the cut (name -> start|stop)
+    pub nodes: BTreeMap<String, String>,
+}
+
+/// Rollout-store contents inside a snapshot record.
+#[derive(Debug, Clone, Default)]
+pub struct StoreSnapshot {
+    pub next_seq: u64,
+    pub watermark: u64,
+    pub rows: Vec<(u64, Trajectory)>,
+    pub partials: Vec<PartialRollout>,
+}
+
+impl JournalRecord {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JournalRecord::Meta { .. } => "meta",
+            JournalRecord::Event { .. } => "event",
+            JournalRecord::Admit { .. } => "admit",
+            JournalRecord::Consume { .. } => "consume",
+            JournalRecord::Mint { .. } => "mint",
+            JournalRecord::Step { .. } => "step",
+            JournalRecord::Tick { .. } => "tick",
+            JournalRecord::Node { .. } => "node",
+            JournalRecord::Snapshot(_) => "snapshot",
+            JournalRecord::Finish { .. } => "finish",
+        }
+    }
+
+    /// Wire form for journal seq `seq`.
+    pub fn to_value(&self, seq: u64) -> Value {
+        let mut pairs: Vec<(&str, Value)> = vec![
+            ("seq", Value::num(seq as f64)),
+            ("kind", Value::str(self.kind())),
+        ];
+        match self {
+            JournalRecord::Meta { config } => pairs.push(("config", config.clone())),
+            JournalRecord::Event {
+                t_us,
+                track,
+                ph,
+                name,
+                value,
+            } => {
+                pairs.push(("t_us", Value::num(*t_us)));
+                pairs.push(("track", Value::str(track.clone())));
+                pairs.push(("ph", Value::str(ph.clone())));
+                pairs.push(("name", Value::str(name.clone())));
+                pairs.push(("value", Value::num(*value)));
+            }
+            JournalRecord::Admit { rows } => {
+                pairs.push(("rows", admitted_rows_to_value(rows)));
+            }
+            JournalRecord::Consume { store_seqs, reason } => {
+                pairs.push(("store_seqs", u64_array(store_seqs)));
+                pairs.push(("reason", Value::str(reason.name())));
+            }
+            JournalRecord::Mint { version, publisher } => {
+                pairs.push(("version", Value::num(*version as f64)));
+                pairs.push(("publisher", Value::num(*publisher as f64)));
+            }
+            JournalRecord::Step { record } => {
+                pairs.push(("record", step_record_to_value(record)));
+            }
+            JournalRecord::Tick {
+                step,
+                tokens,
+                trajectories,
+                chunks,
+            } => {
+                pairs.push(("step", Value::num(*step as f64)));
+                pairs.push(("tokens", Value::num(*tokens as f64)));
+                pairs.push(("trajectories", Value::num(*trajectories as f64)));
+                pairs.push(("chunks", Value::num(*chunks as f64)));
+            }
+            JournalRecord::Node { name, state } => {
+                pairs.push(("name", Value::str(name.clone())));
+                pairs.push(("state", Value::str(state.clone())));
+            }
+            JournalRecord::Snapshot(s) => {
+                pairs.push(("trainer_step", Value::num(s.trainer_step as f64)));
+                pairs.push(("bus_version", Value::num(s.bus_version as f64)));
+                pairs.push(("bus_publishes", Value::num(s.bus_publishes as f64)));
+                pairs.push(("slot_fronts", u64_array(&s.slot_fronts)));
+                pairs.push((
+                    "store",
+                    match &s.store {
+                        None => Value::Null,
+                        Some(st) => Value::object(vec![
+                            ("next_seq", Value::num(st.next_seq as f64)),
+                            ("watermark", Value::num(st.watermark as f64)),
+                            ("rows", admitted_rows_to_value(&st.rows)),
+                            (
+                                "partials",
+                                Value::Array(
+                                    st.partials.iter().map(partial_to_value).collect(),
+                                ),
+                            ),
+                        ]),
+                    },
+                ));
+                pairs.push(("mem_device_used", Value::num(s.mem_device_used as f64)));
+                pairs.push(("mem_host_used", Value::num(s.mem_host_used as f64)));
+                pairs.push((
+                    "nodes",
+                    Value::Object(
+                        s.nodes
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Value::str(v.clone())))
+                            .collect(),
+                    ),
+                ));
+            }
+            JournalRecord::Finish {
+                steps,
+                trajectories,
+            } => {
+                pairs.push(("steps", Value::num(*steps as f64)));
+                pairs.push(("trajectories", Value::num(*trajectories as f64)));
+            }
+        }
+        Value::object(pairs)
+    }
+
+    /// Decode one journal line. Lines without a `kind` key but with a `ph`
+    /// key are accepted as bare trace events (seq 0), so the streaming
+    /// reader also validates the collector's raw `trace_events.jsonl`.
+    pub fn from_value(v: &Value) -> Result<(u64, JournalRecord)> {
+        let kind = match v.get("kind").and_then(|k| k.as_str()) {
+            Some(k) => k.to_string(),
+            None if v.get("ph").is_some() => "event".to_string(),
+            None => return Err(bad("record has no 'kind'")),
+        };
+        let seq = v.get("seq").and_then(|s| s.as_f64()).unwrap_or(0.0) as u64;
+        let rec = match kind.as_str() {
+            "meta" => JournalRecord::Meta {
+                config: v.req("config")?.clone(),
+            },
+            "event" => JournalRecord::Event {
+                t_us: v.req_f64("t_us")?,
+                track: v.req_str("track")?.to_string(),
+                ph: v.req_str("ph")?.to_string(),
+                name: v.req_str("name")?.to_string(),
+                value: v.req_f64("value")?,
+            },
+            "admit" => JournalRecord::Admit {
+                rows: admitted_rows_from_value(v.req("rows")?)?,
+            },
+            "consume" => JournalRecord::Consume {
+                store_seqs: u64_array_from(v.req("store_seqs")?)?,
+                reason: ConsumeReason::parse(v.req_str("reason")?)
+                    .ok_or_else(|| bad("unknown consume reason"))?,
+            },
+            "mint" => JournalRecord::Mint {
+                version: v.req_f64("version")? as u64,
+                publisher: v.req_usize("publisher")?,
+            },
+            "step" => JournalRecord::Step {
+                record: step_record_from_value(v.req("record")?)?,
+            },
+            "tick" => JournalRecord::Tick {
+                step: v.req_f64("step")? as u64,
+                tokens: v.req_f64("tokens")? as u64,
+                trajectories: v.req_f64("trajectories")? as u64,
+                chunks: v.req_f64("chunks")? as u64,
+            },
+            "node" => JournalRecord::Node {
+                name: v.req_str("name")?.to_string(),
+                state: v.req_str("state")?.to_string(),
+            },
+            "snapshot" => {
+                let store = match v.req("store")? {
+                    Value::Null => None,
+                    st => Some(StoreSnapshot {
+                        next_seq: st.req_f64("next_seq")? as u64,
+                        watermark: st.req_f64("watermark")? as u64,
+                        rows: admitted_rows_from_value(st.req("rows")?)?,
+                        partials: st
+                            .req_array("partials")?
+                            .iter()
+                            .map(partial_from_value)
+                            .collect::<Result<Vec<_>>>()?,
+                    }),
+                };
+                let nodes = v
+                    .req("nodes")?
+                    .as_object()
+                    .ok_or_else(|| bad("'nodes' is not an object"))?
+                    .iter()
+                    .map(|(k, val)| {
+                        val.as_str()
+                            .map(|s| (k.clone(), s.to_string()))
+                            .ok_or_else(|| bad("node state is not a string"))
+                    })
+                    .collect::<Result<BTreeMap<_, _>>>()?;
+                JournalRecord::Snapshot(SnapshotRecord {
+                    trainer_step: v.req_f64("trainer_step")? as u64,
+                    bus_version: v.req_f64("bus_version")? as u64,
+                    bus_publishes: v.req_f64("bus_publishes")? as u64,
+                    slot_fronts: u64_array_from(v.req("slot_fronts")?)?,
+                    store,
+                    mem_device_used: v.req_f64("mem_device_used")? as u64,
+                    mem_host_used: v.req_f64("mem_host_used")? as u64,
+                    nodes,
+                })
+            }
+            "finish" => JournalRecord::Finish {
+                steps: v.req_f64("steps")? as u64,
+                trajectories: v.req_f64("trajectories")? as u64,
+            },
+            other => return Err(bad(&format!("unknown record kind '{other}'"))),
+        };
+        Ok((seq, rec))
+    }
+}
+
+fn bad(msg: &str) -> Error {
+    Error::Manifest(format!("journal record: {msg}"))
+}
+
+// -- scalar array helpers ---------------------------------------------------
+
+fn u64_array(xs: &[u64]) -> Value {
+    Value::Array(xs.iter().map(|x| Value::num(*x as f64)).collect())
+}
+
+fn u64_array_from(v: &Value) -> Result<Vec<u64>> {
+    v.as_array()
+        .ok_or_else(|| bad("expected a number array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as u64)
+                .ok_or_else(|| bad("non-number in array"))
+        })
+        .collect()
+}
+
+fn i32_array(xs: &[i32]) -> Value {
+    Value::Array(xs.iter().map(|x| Value::num(*x as f64)).collect())
+}
+
+fn i32_array_from(v: &Value) -> Result<Vec<i32>> {
+    v.as_array()
+        .ok_or_else(|| bad("expected a number array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as i32)
+                .ok_or_else(|| bad("non-number in array"))
+        })
+        .collect()
+}
+
+/// f32 → f64 widening is exact, and the f64 JSON format is shortest
+/// roundtrip, so behaviour log-probs survive the journal bit-for-bit.
+fn f32_array(xs: &[f32]) -> Value {
+    Value::Array(xs.iter().map(|x| Value::num(*x as f64)).collect())
+}
+
+fn f32_array_from(v: &Value) -> Result<Vec<f32>> {
+    v.as_array()
+        .ok_or_else(|| bad("expected a number array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| bad("non-number in array"))
+        })
+        .collect()
+}
+
+// -- domain payloads --------------------------------------------------------
+
+fn difficulty_name(d: Difficulty) -> &'static str {
+    match d {
+        Difficulty::Add1 => "add1",
+        Difficulty::AddSub2 => "addsub2",
+        Difficulty::Mul => "mul",
+        Difficulty::ThreeTerm => "three_term",
+    }
+}
+
+fn difficulty_from(s: &str) -> Result<Difficulty> {
+    match s {
+        "add1" => Ok(Difficulty::Add1),
+        "addsub2" => Ok(Difficulty::AddSub2),
+        "mul" => Ok(Difficulty::Mul),
+        "three_term" => Ok(Difficulty::ThreeTerm),
+        _ => Err(bad("unknown difficulty")),
+    }
+}
+
+fn problem_to_value(p: &Problem) -> Value {
+    Value::object(vec![
+        ("prompt", Value::str(p.prompt.clone())),
+        ("answer", Value::str(p.answer.clone())),
+        ("difficulty", Value::str(difficulty_name(p.difficulty))),
+    ])
+}
+
+fn problem_from_value(v: &Value) -> Result<Problem> {
+    Ok(Problem {
+        prompt: v.req_str("prompt")?.to_string(),
+        answer: v.req_str("answer")?.to_string(),
+        difficulty: difficulty_from(v.req_str("difficulty")?)?,
+    })
+}
+
+pub fn trajectory_to_value(t: &Trajectory) -> Value {
+    Value::object(vec![
+        ("group_id", Value::num(t.group_id as f64)),
+        ("replica", Value::num(t.replica as f64)),
+        ("n_replicas", Value::num(t.n_replicas as f64)),
+        ("problem", problem_to_value(&t.problem)),
+        ("prompt_tokens", i32_array(&t.prompt_tokens)),
+        ("response_tokens", i32_array(&t.response_tokens)),
+        ("behavior_logp", f32_array(&t.behavior_logp)),
+        ("gen_version", Value::num(t.gen_version as f64)),
+        ("chunks", Value::num(t.chunks as f64)),
+        (
+            "finish",
+            Value::str(match t.finish {
+                FinishReason::Eos => "eos",
+                FinishReason::Length => "length",
+            }),
+        ),
+        ("reward", Value::num(t.reward as f64)),
+        ("advantage", Value::num(t.advantage as f64)),
+    ])
+}
+
+pub fn trajectory_from_value(v: &Value) -> Result<Trajectory> {
+    Ok(Trajectory {
+        group_id: v.req_f64("group_id")? as u64,
+        replica: v.req_usize("replica")?,
+        n_replicas: v.req_usize("n_replicas")?,
+        problem: problem_from_value(v.req("problem")?)?,
+        prompt_tokens: i32_array_from(v.req("prompt_tokens")?)?,
+        response_tokens: i32_array_from(v.req("response_tokens")?)?,
+        behavior_logp: f32_array_from(v.req("behavior_logp")?)?,
+        gen_version: v.req_f64("gen_version")? as u64,
+        chunks: v.req_f64("chunks")? as u32,
+        finish: match v.req_str("finish")? {
+            "eos" => FinishReason::Eos,
+            "length" => FinishReason::Length,
+            _ => return Err(bad("unknown finish reason")),
+        },
+        reward: v.req_f64("reward")? as f32,
+        advantage: v.req_f64("advantage")? as f32,
+    })
+}
+
+fn admitted_rows_to_value(rows: &[(u64, Trajectory)]) -> Value {
+    Value::Array(
+        rows.iter()
+            .map(|(seq, t)| {
+                Value::object(vec![
+                    ("store_seq", Value::num(*seq as f64)),
+                    ("traj", trajectory_to_value(t)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn admitted_rows_from_value(v: &Value) -> Result<Vec<(u64, Trajectory)>> {
+    v.as_array()
+        .ok_or_else(|| bad("'rows' is not an array"))?
+        .iter()
+        .map(|r| {
+            Ok((
+                r.req_f64("store_seq")? as u64,
+                trajectory_from_value(r.req("traj")?)?,
+            ))
+        })
+        .collect()
+}
+
+fn partial_to_value(p: &PartialRollout) -> Value {
+    Value::object(vec![
+        (
+            "task",
+            Value::object(vec![
+                ("group_id", Value::num(p.task.group_id as f64)),
+                ("replica", Value::num(p.task.replica as f64)),
+                ("n_replicas", Value::num(p.task.n_replicas as f64)),
+                ("problem", problem_to_value(&p.task.problem)),
+                ("prompt_tokens", i32_array(&p.task.prompt_tokens)),
+            ]),
+        ),
+        ("tokens", i32_array(&p.tokens)),
+        ("prompt_len", Value::num(p.prompt_len as f64)),
+        ("logps", f32_array(&p.logps)),
+        ("chunks", Value::num(p.chunks as f64)),
+        ("gen_version", Value::num(p.gen_version as f64)),
+    ])
+}
+
+fn partial_from_value(v: &Value) -> Result<PartialRollout> {
+    let task = v.req("task")?;
+    Ok(PartialRollout {
+        task: PromptTask {
+            group_id: task.req_f64("group_id")? as u64,
+            replica: task.req_usize("replica")?,
+            n_replicas: task.req_usize("n_replicas")?,
+            problem: problem_from_value(task.req("problem")?)?,
+            prompt_tokens: i32_array_from(task.req("prompt_tokens")?)?,
+        },
+        tokens: i32_array_from(v.req("tokens")?)?,
+        prompt_len: v.req_usize("prompt_len")?,
+        logps: f32_array_from(v.req("logps")?)?,
+        chunks: v.req_f64("chunks")? as u32,
+        gen_version: v.req_f64("gen_version")? as u64,
+    })
+}
+
+fn step_record_to_value(r: &TrainStepRecord) -> Value {
+    Value::object(vec![
+        ("step", Value::num(r.step as f64)),
+        ("wall_secs", Value::num(r.wall_secs)),
+        ("loss", Value::num(r.loss)),
+        ("reward_mean", Value::num(r.reward_mean)),
+        ("mean_ratio", Value::num(r.mean_ratio)),
+        ("clip_frac", Value::num(r.clip_frac)),
+        ("approx_kl", Value::num(r.approx_kl)),
+        ("entropy", Value::num(r.entropy)),
+        ("grad_norm", Value::num(r.grad_norm)),
+        ("mean_lag", Value::num(r.mean_lag)),
+        ("max_lag", Value::num(r.max_lag as f64)),
+        ("rows", Value::num(r.rows as f64)),
+    ])
+}
+
+/// NaN metric fields (a kernel not exporting a metric) serialize as JSON
+/// null; read them back as NaN so replay comparison treats NaN == NaN.
+fn opt_f64(v: &Value, key: &str) -> Result<f64> {
+    match v.req(key)? {
+        Value::Null => Ok(f64::NAN),
+        x => x
+            .as_f64()
+            .ok_or_else(|| bad(&format!("'{key}' is not a number"))),
+    }
+}
+
+fn step_record_from_value(v: &Value) -> Result<TrainStepRecord> {
+    Ok(TrainStepRecord {
+        step: v.req_f64("step")? as u64,
+        wall_secs: opt_f64(v, "wall_secs")?,
+        loss: opt_f64(v, "loss")?,
+        reward_mean: opt_f64(v, "reward_mean")?,
+        mean_ratio: opt_f64(v, "mean_ratio")?,
+        clip_frac: opt_f64(v, "clip_frac")?,
+        approx_kl: opt_f64(v, "approx_kl")?,
+        entropy: opt_f64(v, "entropy")?,
+        grad_norm: opt_f64(v, "grad_norm")?,
+        mean_lag: opt_f64(v, "mean_lag")?,
+        max_lag: v.req_f64("max_lag")? as u64,
+        rows: v.req_usize("rows")?,
+    })
+}

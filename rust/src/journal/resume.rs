@@ -1,0 +1,234 @@
+//! Crash-resume planning and replay comparison over a recorded journal.
+//!
+//! [`plan_resume`] makes one streaming pass (constant memory in the
+//! journal length, modulo the resident-row working set): it keeps the
+//! latest snapshot as the base cut and folds the *suffix* of
+//! admissions/consumptions/version-mints on top of it, exactly the way
+//! the ROADMAP's durable-journal item specifies — resume never loads the
+//! whole journal, and everything before the last snapshot is skipped as
+//! soon as a newer snapshot supersedes it.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use crate::coordinator::TrainStepRecord;
+use crate::journal::reader::JournalReader;
+use crate::journal::record::{JournalRecord, StoreSnapshot};
+use crate::model::load_checkpoint;
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+/// What a resumed run inherits from the journaled prefix (report merging
+/// and scheduler fast-forward).
+#[derive(Debug, Clone, Default)]
+pub struct PriorTotals {
+    pub tokens: u64,
+    pub trajectories: u64,
+    pub chunks: u64,
+    /// every completed step record, in order (prepended to the resumed
+    /// run's report so curves stay continuous)
+    pub records: Vec<TrainStepRecord>,
+}
+
+/// Reconstructed run state: the controller threads this through
+/// `PipelineConfig.resume` to re-seed the store, bus front, trainer clock
+/// and prompt scheduler before the graph launches.
+#[derive(Debug, Clone, Default)]
+pub struct ResumeState {
+    /// optimizer step to continue from (last journaled step record)
+    pub start_step: u64,
+    /// bus front: new version mints continue above this
+    pub bus_version: u64,
+    /// journal seq the resumed run appends from
+    pub next_seq: u64,
+    /// rollout-store durable state (None in channel-scored modes)
+    pub store: Option<StoreSnapshot>,
+    pub prior: PriorTotals,
+    /// packed trainer state from the newest on-disk checkpoint at or
+    /// below `start_step` (None: trainer re-inits from scratch — counts
+    /// still line up, weights restart)
+    pub init_state: Option<Vec<f32>>,
+}
+
+/// A planned resume: the recorded config plus the reconstructed state.
+pub struct ResumePlan {
+    /// the `config::to_json` object from the journal's meta record
+    pub config: Value,
+    /// true when the journal ends with a finish record (nothing to resume)
+    pub finished: bool,
+    /// true when the journal ended on a torn final line (killed run)
+    pub truncated_tail: bool,
+    pub state: ResumeState,
+}
+
+/// Stream the journal once and reconstruct the latest consistent state.
+pub fn plan_resume(journal_path: impl AsRef<Path>) -> Result<ResumePlan> {
+    let mut reader = JournalReader::open(&journal_path)?;
+    let mut config: Option<Value> = None;
+    let mut base: Option<StoreSnapshot> = None;
+    let mut base_bus_version = 0u64;
+    let mut suffix_admits: Vec<(u64, crate::rl::Trajectory)> = Vec::new();
+    let mut consumed: HashSet<u64> = HashSet::new();
+    let mut max_mint = 0u64;
+    let mut records: Vec<TrainStepRecord> = Vec::new();
+    let mut last_tick: Option<(u64, u64, u64, u64)> = None;
+    let mut admitted_total = 0u64;
+    let mut finished = false;
+    let mut last_seq = 0u64;
+    let mut any = false;
+
+    while let Some(item) = reader.next_record() {
+        let (seq, rec) = item?;
+        last_seq = last_seq.max(seq);
+        any = true;
+        match rec {
+            JournalRecord::Meta { config: c } => config = Some(c),
+            JournalRecord::Snapshot(s) => {
+                base_bus_version = base_bus_version.max(s.bus_version);
+                if let Some(st) = s.store {
+                    base = Some(st);
+                    // the snapshot already excludes earlier consumptions;
+                    // start the suffix fresh from this cut
+                    suffix_admits.clear();
+                    consumed.clear();
+                }
+            }
+            JournalRecord::Admit { rows } => {
+                admitted_total += rows.len() as u64;
+                suffix_admits.extend(rows);
+            }
+            JournalRecord::Consume { store_seqs, .. } => {
+                consumed.extend(store_seqs);
+            }
+            JournalRecord::Mint { version, .. } => max_mint = max_mint.max(version),
+            JournalRecord::Step { record } => records.push(record),
+            JournalRecord::Tick {
+                step,
+                tokens,
+                trajectories,
+                chunks,
+            } => last_tick = Some((step, tokens, trajectories, chunks)),
+            JournalRecord::Finish { .. } => finished = true,
+            JournalRecord::Event { .. } | JournalRecord::Node { .. } => {}
+        }
+    }
+    let config = config.ok_or_else(|| {
+        Error::Manifest("journal has no meta record (not a run journal?)".into())
+    })?;
+
+    let start_step = records.last().map(|r| r.step).unwrap_or(0);
+    // rebuild the resident set: base cut + suffix admissions (deduped by
+    // admission seq — an admit can be journaled just after the cut that
+    // already contains its rows) minus everything consumed since
+    let mut store = base;
+    let had_admits = !suffix_admits.is_empty() || store.is_some();
+    if had_admits {
+        let st = store.get_or_insert_with(StoreSnapshot::default);
+        let mut present: HashSet<u64> = st.rows.iter().map(|(s, _)| *s).collect();
+        for (seq, traj) in suffix_admits {
+            if present.insert(seq) {
+                st.rows.push((seq, traj));
+            }
+        }
+        st.rows.retain(|(s, _)| !consumed.contains(s));
+        st.rows.sort_by_key(|(s, _)| *s);
+        st.next_seq = st
+            .next_seq
+            .max(st.rows.last().map(|(s, _)| s + 1).unwrap_or(0));
+        st.watermark = st.watermark.max(start_step);
+    }
+
+    let prior = PriorTotals {
+        tokens: last_tick.map(|t| t.1).unwrap_or(0),
+        trajectories: last_tick.map(|t| t.2).unwrap_or(admitted_total),
+        chunks: last_tick.map(|t| t.3).unwrap_or(0),
+        records,
+    };
+
+    Ok(ResumePlan {
+        config,
+        finished,
+        truncated_tail: reader.truncated_tail(),
+        state: ResumeState {
+            start_step,
+            bus_version: base_bus_version.max(max_mint),
+            next_seq: if any { last_seq + 1 } else { 0 },
+            store,
+            prior,
+            init_state: None,
+        },
+    })
+}
+
+/// Find the newest `ckpt_step{N}` directory with `N <= start_step` under
+/// the run's out_dir and load its packed state. Best-effort: a missing or
+/// unreadable checkpoint resumes with fresh trainer state.
+pub fn find_checkpoint_state(out_dir: &Path, start_step: u64) -> Option<(u64, Vec<f32>)> {
+    let mut best: Option<(u64, std::path::PathBuf)> = None;
+    for entry in std::fs::read_dir(out_dir).ok()?.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(n) = name.strip_prefix("ckpt_step") {
+            if let Ok(step) = n.parse::<u64>() {
+                if step <= start_step && best.as_ref().map(|(b, _)| step > *b).unwrap_or(true)
+                {
+                    best = Some((step, entry.path()));
+                }
+            }
+        }
+    }
+    let (step, dir) = best?;
+    load_checkpoint(&dir).ok().map(|c| (step, c.state))
+}
+
+/// One replay mismatch, rendered for the CLI.
+pub struct StepMismatch {
+    pub step: u64,
+    pub field: &'static str,
+    pub recorded: f64,
+    pub live: f64,
+}
+
+/// Compare a recorded training trajectory against a re-driven one,
+/// field by field. `wall_secs` is excluded (timing is not replayable);
+/// everything else must match exactly — values round-trip the journal via
+/// the shortest-roundtrip f64 format, so equality here is bit-equality up
+/// to JSON's `-0.0`/NaN collapse (NaN == NaN counts as a match).
+pub fn compare_steps(recorded: &[TrainStepRecord], live: &[TrainStepRecord]) -> Vec<StepMismatch> {
+    let mut out = Vec::new();
+    let same = |a: f64, b: f64| a == b || (a.is_nan() && b.is_nan());
+    if recorded.len() != live.len() {
+        out.push(StepMismatch {
+            step: 0,
+            field: "step_count",
+            recorded: recorded.len() as f64,
+            live: live.len() as f64,
+        });
+    }
+    for (r, l) in recorded.iter().zip(live.iter()) {
+        let fields: [(&'static str, f64, f64); 11] = [
+            ("step", r.step as f64, l.step as f64),
+            ("loss", r.loss, l.loss),
+            ("reward_mean", r.reward_mean, l.reward_mean),
+            ("mean_ratio", r.mean_ratio, l.mean_ratio),
+            ("clip_frac", r.clip_frac, l.clip_frac),
+            ("approx_kl", r.approx_kl, l.approx_kl),
+            ("entropy", r.entropy, l.entropy),
+            ("grad_norm", r.grad_norm, l.grad_norm),
+            ("mean_lag", r.mean_lag, l.mean_lag),
+            ("max_lag", r.max_lag as f64, l.max_lag as f64),
+            ("rows", r.rows as f64, l.rows as f64),
+        ];
+        for (field, rv, lv) in fields {
+            if !same(rv, lv) {
+                out.push(StepMismatch {
+                    step: r.step,
+                    field,
+                    recorded: rv,
+                    live: lv,
+                });
+            }
+        }
+    }
+    out
+}

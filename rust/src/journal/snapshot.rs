@@ -1,0 +1,72 @@
+//! Background snapshot daemon: periodically folds a consistent cut of the
+//! run's durable state (rollout store, bus front + slot fences, memplane
+//! residency, node lifecycle) into the journal stream.
+//!
+//! The daemon owns no state of its own — the runtime hands it a `build`
+//! closure that gathers from the live planes, and
+//! [`JournalWriter::write_snapshot`] runs it under the writer lock so the
+//! cut is atomic with respect to journal order. One snapshot is written
+//! immediately at start (so even a run killed in its first interval has a
+//! resume point) and one at stop (so a *clean* journal always ends with a
+//! fresh cut ahead of the finish record).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::journal::record::SnapshotRecord;
+use crate::journal::writer::JournalWriter;
+
+pub struct SnapshotDaemon {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl SnapshotDaemon {
+    pub fn start(
+        journal: Arc<JournalWriter>,
+        interval_secs: f64,
+        build: impl Fn() -> SnapshotRecord + Send + 'static,
+    ) -> SnapshotDaemon {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let interval = Duration::from_secs_f64(interval_secs.max(0.01));
+        let handle = std::thread::Builder::new()
+            .name("journal-snapshot".into())
+            .spawn(move || {
+                journal.write_snapshot(&build);
+                let mut last = Instant::now();
+                while !stop2.load(Ordering::Acquire) {
+                    std::thread::sleep(Duration::from_millis(5).min(interval));
+                    if last.elapsed() >= interval {
+                        journal.write_snapshot(&build);
+                        last = Instant::now();
+                    }
+                }
+                journal.write_snapshot(&build);
+            })
+            .expect("spawn journal-snapshot");
+        SnapshotDaemon {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Write the final cut and join the daemon.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SnapshotDaemon {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! The durable journal writer: one append-only JSONL file, one mutex.
+//!
+//! Every record is stamped with the next monotonic `seq`, serialized
+//! through `util::json`, written and flushed while the writer lock is
+//! held — so journal order *is* seq order, and a snapshot built inside
+//! [`JournalWriter::write_snapshot`]'s closure is a consistent cut: no
+//! admit/consume/mint record can interleave with it. Hook-path writes
+//! (store observer callbacks, bus mint hook) must not propagate errors
+//! into the data path, so they count failures instead; the run surfaces
+//! `write_errors` at finish.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::dataplane::{ConsumeReason, StoreObserver};
+use crate::journal::record::{JournalRecord, SnapshotRecord};
+use crate::rl::Trajectory;
+use crate::util::error::Result;
+
+struct Inner {
+    w: BufWriter<File>,
+    next_seq: u64,
+}
+
+pub struct JournalWriter {
+    inner: Mutex<Inner>,
+    bytes_written: AtomicU64,
+    records_flushed: AtomicU64,
+    write_errors: AtomicU64,
+    /// wall-clock origin for the snapshot-lag metric
+    epoch: Instant,
+    /// nanos-since-epoch of the last snapshot record (0 = none yet)
+    last_snapshot_nanos: AtomicU64,
+    /// graph node lifecycle mirror, folded into every snapshot
+    nodes: Mutex<BTreeMap<String, String>>,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal at `path` (truncating), seq starting at 0.
+    pub fn create(path: impl AsRef<Path>) -> Result<JournalWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = File::create(path)?;
+        Ok(Self::with_file(f, 0))
+    }
+
+    /// Reopen an existing journal for a resumed run, appending records
+    /// from `next_seq` (one past the last fully-written record; a
+    /// truncated tail line is simply overwritten-by-append — the reader
+    /// tolerates it either way).
+    pub fn append(path: impl AsRef<Path>, next_seq: u64) -> Result<JournalWriter> {
+        let f = OpenOptions::new().append(true).open(path)?;
+        Ok(Self::with_file(f, next_seq))
+    }
+
+    fn with_file(f: File, next_seq: u64) -> JournalWriter {
+        JournalWriter {
+            inner: Mutex::new(Inner {
+                w: BufWriter::new(f),
+                next_seq,
+            }),
+            bytes_written: AtomicU64::new(0),
+            records_flushed: AtomicU64::new(0),
+            write_errors: AtomicU64::new(0),
+            epoch: Instant::now(),
+            last_snapshot_nanos: AtomicU64::new(0),
+            nodes: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn write_locked(&self, inner: &mut Inner, rec: &JournalRecord) -> Result<()> {
+        let seq = inner.next_seq;
+        let line = rec.to_value(seq).to_string();
+        writeln!(inner.w, "{line}")?;
+        inner.w.flush()?;
+        inner.next_seq = seq + 1;
+        self.bytes_written
+            .fetch_add(line.len() as u64 + 1, Ordering::Relaxed);
+        self.records_flushed.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Append one record; each record is flushed before the lock drops,
+    /// so a SIGKILL can lose at most the line being written.
+    pub fn write(&self, rec: &JournalRecord) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        self.write_locked(&mut inner, rec)
+    }
+
+    /// Hook-path append: never propagates the error into the caller's
+    /// data path, only counts it.
+    pub fn write_infallible(&self, rec: &JournalRecord) {
+        if self.write(rec).is_err() {
+            self.write_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Build and append a snapshot record *while holding the writer lock*.
+    /// Because every other record also serializes through that lock, the
+    /// state gathered by `build` (store dump, bus front, node states) is
+    /// exactly the state as of this journal position — the consistent cut
+    /// crash-resume reconstructs from. `build` must not write journal
+    /// records itself (it would self-deadlock) and must not be called
+    /// from a thread holding store shard locks (lock order is journal →
+    /// shards, never the reverse).
+    pub fn write_snapshot(&self, build: impl FnOnce() -> SnapshotRecord) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut snap = build();
+        snap.nodes = self.nodes.lock().unwrap().clone();
+        if self
+            .write_locked(&mut inner, &JournalRecord::Snapshot(snap))
+            .is_err()
+        {
+            self.write_errors.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let nanos = u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX);
+            self.last_snapshot_nanos.store(nanos, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a graph-node lifecycle transition (also mirrored into every
+    /// later snapshot's `nodes` map).
+    pub fn note_node(&self, name: &str, state: &str) {
+        self.nodes
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), state.to_string());
+        self.write_infallible(&JournalRecord::Node {
+            name: name.to_string(),
+            state: state.to_string(),
+        });
+    }
+
+    // -- lag metrics (the --metrics-interval snapshot series) ---------------
+
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.load(Ordering::Relaxed)
+    }
+
+    pub fn records_flushed(&self) -> u64 {
+        self.records_flushed.load(Ordering::Relaxed)
+    }
+
+    pub fn write_errors(&self) -> u64 {
+        self.write_errors.load(Ordering::Relaxed)
+    }
+
+    /// Seconds since the last snapshot record (time since writer creation
+    /// when none has been written yet).
+    pub fn secs_since_snapshot(&self) -> f64 {
+        let now = u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        let last = self.last_snapshot_nanos.load(Ordering::Relaxed);
+        now.saturating_sub(last) as f64 / 1e9
+    }
+}
+
+/// The journal is the rollout store's durable replica: admissions carry
+/// the full row payload, consumptions reference admission seqs — together
+/// with periodic snapshots, replaying a suffix of these reconstructs the
+/// resident set exactly.
+impl StoreObserver for JournalWriter {
+    fn on_admit(&self, rows: &[(u64, Trajectory)]) {
+        self.write_infallible(&JournalRecord::Admit {
+            rows: rows.to_vec(),
+        });
+    }
+
+    fn on_consume(&self, seqs: &[u64], reason: ConsumeReason) {
+        self.write_infallible(&JournalRecord::Consume {
+            store_seqs: seqs.to_vec(),
+            reason,
+        });
+    }
+}

@@ -9,11 +9,17 @@
 //!   dataplane synthetic channel-vs-store data-plane comparison (no
 //!             artifacts needed)
 //!   info      inspect an artifact bundle
-//!   tracecheck  validate a Chrome trace file emitted by `train --trace`
+//!   tracecheck  validate a Chrome trace file emitted by `train --trace`,
+//!             or (with --log) a raw JSONL event-log/journal stream
+//!   resume    continue a killed run from its durable journal
+//!   replay    re-drive a recorded run and diff the training trajectories
+//!   journal   tail / filter / summarize a run journal
 //!
 //! Examples:
 //!   llamarl train --preset nano --mode async --steps 5
 //!   llamarl train --preset nano --mode async_buffered --max-staleness 4
+//!   llamarl resume --journal /tmp/llamarl_out
+//!   llamarl replay --journal /tmp/llamarl_out/journal.jsonl
 //!   llamarl simulate
 //!   llamarl dataplane --steps 60
 //!   llamarl info --artifacts artifacts/nano
@@ -39,6 +45,8 @@ const BOOL_FLAGS: &[&str] = &[
     "colocate",
     "offload-eager",
     "dump-graph",
+    "no-journal",
+    "stats",
     "help",
 ];
 
@@ -74,6 +82,9 @@ fn run(args: &Args) -> Result<()> {
         Some("dataplane") => cmd_dataplane(args),
         Some("info") => cmd_info(args),
         Some("tracecheck") => cmd_tracecheck(args),
+        Some("resume") => cmd_resume(args),
+        Some("replay") => cmd_replay(args),
+        Some("journal") => cmd_journal(args),
         _ => {
             print_help();
             Ok(())
@@ -115,6 +126,9 @@ USAGE: llamarl <subcommand> [flags]
              event log to OUT/trace_events.jsonl)]
             [--metrics-interval SECS (periodic telemetry snapshots to
              OUT/telemetry_snapshots.jsonl; 0 = off)]
+            durable journal: on by default, streams OUT/journal.jsonl
+            [--no-journal] [--journal-snapshot-secs SECS (consistent-cut
+             snapshot cadence, default 0.25)]
   pretrain  --artifacts DIR --steps N --lr X --out DIR
             supervised warm-up producing the RL init checkpoint
   simulate  reproduce Table 3 from the calibrated cluster cost model
@@ -124,7 +138,17 @@ USAGE: llamarl <subcommand> [flags]
             comparison on real threads (no artifacts needed)
   info      --artifacts DIR  inspect an artifact bundle
   tracecheck --file trace.json  validate a Chrome trace export: parses the
-            file with the built-in JSON reader and reports the event count"
+            file with the built-in JSON reader and reports the event count;
+            or --log FILE to validate a raw JSONL stream (the journal or
+            the trace event log) with the streaming journal reader
+  resume    --journal DIR-or-FILE  reconstruct store+bus from the journal's
+            latest snapshot, replay the suffix, and continue the run to its
+            configured step count (a finished journal is a success no-op)
+  replay    --journal FILE [--out DIR]  re-drive the recorded config into a
+            fresh out dir and diff live step records against the recorded
+            trajectory (bit-exact required in sync mode; report-only async)
+  journal   --journal DIR-or-FILE [--tail N] [--filter KIND] [--stats]
+            tail/filter records and summarize kind counts"
     );
 }
 
@@ -318,9 +342,211 @@ fn cmd_dataplane(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the journal path argument: `--journal` may name the run's out
+/// dir (the conventional `journal.jsonl` inside it) or the file itself.
+fn journal_path(args: &Args) -> Result<std::path::PathBuf> {
+    use llamarl::util::error::Error;
+    let raw = args
+        .str_opt("journal")
+        .map(String::from)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| Error::Cli("expected --journal DIR-or-FILE".into()))?;
+    let p = std::path::PathBuf::from(raw);
+    Ok(if p.is_dir() { p.join("journal.jsonl") } else { p })
+}
+
+fn cmd_resume(args: &Args) -> Result<()> {
+    use llamarl::coordinator::PipelineConfig;
+    use llamarl::journal::{find_checkpoint_state, plan_resume};
+    let path = journal_path(args)?;
+    let plan = plan_resume(&path)?;
+    if plan.finished {
+        // success no-op: lets supervisors (and the CI kill arm) race the
+        // kill against run completion without a spurious failure
+        println!("{}: run finished cleanly; nothing to resume", path.display());
+        return Ok(());
+    }
+    let mut cfg = PipelineConfig::default();
+    config::apply_json(&mut cfg, &plan.config)?;
+    let mut state = plan.state;
+    if state.start_step >= cfg.max_steps {
+        // killed in the gap between the last step record and the finish
+        // marker — every step is already durable
+        println!(
+            "{}: all {} steps already recorded; nothing to resume",
+            path.display(),
+            cfg.max_steps
+        );
+        return Ok(());
+    }
+    match find_checkpoint_state(&cfg.out_dir, state.start_step) {
+        Some((ck_step, packed)) => {
+            llamarl::log_info!("main", "resume: trainer state from ckpt_step{ck_step}");
+            state.init_state = Some(packed);
+        }
+        None => llamarl::log_warn!(
+            "main",
+            "resume: no checkpoint at or below step {}; trainer weights \
+             restart (trajectory counts still line up)",
+            state.start_step
+        ),
+    }
+    llamarl::log_info!(
+        "main",
+        "resuming {} from step {}/{} (bus v{}, {} stored rows, torn tail: {})",
+        path.display(),
+        state.start_step,
+        cfg.max_steps,
+        state.bus_version,
+        state.store.as_ref().map(|s| s.rows.len()).unwrap_or(0),
+        plan.truncated_tail
+    );
+    cfg.resume = Some(state);
+    let report = run_training(&cfg)?;
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    use llamarl::coordinator::{Mode, PipelineConfig};
+    use llamarl::journal::{compare_steps, plan_resume};
+    use llamarl::util::error::Error;
+    let path = journal_path(args)?;
+    let plan = plan_resume(&path)?;
+    let recorded = plan.state.prior.records;
+    if recorded.is_empty() {
+        return Err(Error::Cli(format!(
+            "{}: journal has no step records to replay",
+            path.display()
+        )));
+    }
+    let mut cfg = PipelineConfig::default();
+    config::apply_json(&mut cfg, &plan.config)?;
+    // re-drive only the recorded prefix (a killed run stops short of
+    // max_steps) into a fresh out dir so the recorded journal is untouched
+    cfg.max_steps = recorded.last().map(|r| r.step).unwrap_or(cfg.max_steps);
+    let out = args.str_or("out", &format!("{}_replay", cfg.out_dir.display()));
+    cfg.out_dir = out.into();
+    cfg.resume = None;
+    let strict = cfg.mode == Mode::Sync;
+    llamarl::log_info!(
+        "main",
+        "replaying {} recorded steps (mode {:?}, {})",
+        recorded.len(),
+        cfg.mode,
+        if strict { "strict" } else { "report-only" }
+    );
+    let report = run_training(&cfg)?;
+    let mismatches = compare_steps(&recorded, &report.records);
+    if mismatches.is_empty() {
+        println!(
+            "replay OK: {} steps match the recorded trajectory bit-for-bit",
+            recorded.len()
+        );
+        return Ok(());
+    }
+    println!("replay diverged: {} field mismatches", mismatches.len());
+    for m in mismatches.iter().take(10) {
+        println!(
+            "  step {} {}: recorded {} vs live {}",
+            m.step, m.field, m.recorded, m.live
+        );
+    }
+    if mismatches.len() > 10 {
+        println!("  ... and {} more", mismatches.len() - 10);
+    }
+    if strict {
+        Err(Error::Cli(
+            "replay mismatch in sync mode (expected bit-exact)".into(),
+        ))
+    } else {
+        println!("(async replay is timing-dependent; divergence is report-only)");
+        Ok(())
+    }
+}
+
+fn cmd_journal(args: &Args) -> Result<()> {
+    use llamarl::journal::JournalReader;
+    use std::collections::{BTreeMap, VecDeque};
+    let path = journal_path(args)?;
+    let tail = args.usize_or("tail", 0)?;
+    let filter = args.str_opt("filter").map(String::from);
+    let mut reader = JournalReader::open(&path)?;
+    let mut counts: BTreeMap<&'static str, u64> = BTreeMap::new();
+    let mut kept: VecDeque<String> = VecDeque::new();
+    let mut last_seq = 0u64;
+    let mut total = 0u64;
+    while let Some(item) = reader.next_record() {
+        let (seq, rec) = item?;
+        total += 1;
+        last_seq = last_seq.max(seq);
+        *counts.entry(rec.kind()).or_insert(0) += 1;
+        let wanted = filter.as_deref().map(|f| f == rec.kind()).unwrap_or(true);
+        if tail > 0 && wanted {
+            kept.push_back(rec.to_value(seq).to_string());
+            if kept.len() > tail {
+                kept.pop_front();
+            }
+        }
+    }
+    for line in &kept {
+        println!("{line}");
+    }
+    if args.flag("stats") || tail == 0 {
+        let steps = counts.get("step").copied().unwrap_or(0);
+        let finished = counts.contains_key("finish");
+        let kinds: Vec<String> = counts.iter().map(|(k, n)| format!("{k}:{n}")).collect();
+        println!(
+            "{}: {} records (last seq {}), {} steps, finished: {}, torn tail: {}",
+            path.display(),
+            total,
+            last_seq,
+            steps,
+            finished,
+            reader.truncated_tail()
+        );
+        println!("kinds: {}", kinds.join(" "));
+    }
+    Ok(())
+}
+
+/// Validate a raw JSONL stream (the journal or the trace event log) with
+/// the streaming journal reader: counts records per kind, errors on a
+/// corrupt interior line, tolerates the torn final line a SIGKILL leaves.
+fn tracecheck_log(path: &str) -> Result<()> {
+    use llamarl::journal::JournalReader;
+    use llamarl::util::error::Error;
+    use std::collections::BTreeMap;
+    let mut reader = JournalReader::open(path)?;
+    let mut counts: BTreeMap<&'static str, u64> = BTreeMap::new();
+    let mut total = 0u64;
+    while let Some(item) = reader.next_record() {
+        let (_seq, rec) = item?;
+        total += 1;
+        *counts.entry(rec.kind()).or_insert(0) += 1;
+    }
+    if total == 0 && !reader.truncated_tail() {
+        return Err(Error::Cli(format!("{path}: no records")));
+    }
+    let kinds: Vec<String> = counts.iter().map(|(k, n)| format!("{k}:{n}")).collect();
+    println!(
+        "{path}: {total} records ok ({}){}",
+        kinds.join(" "),
+        if reader.truncated_tail() {
+            ", torn final line tolerated"
+        } else {
+            ""
+        }
+    );
+    Ok(())
+}
+
 fn cmd_tracecheck(args: &Args) -> Result<()> {
     use llamarl::util::error::Error;
     use llamarl::util::json::Value;
+    if let Some(log) = args.str_opt("log") {
+        return tracecheck_log(log);
+    }
     let path = args.str_or("file", "trace.json");
     let text = std::fs::read_to_string(&path)?;
     let v = Value::parse(&text)?;

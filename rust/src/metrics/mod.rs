@@ -9,6 +9,19 @@ use crate::util::stats::summarize;
 /// Print a human-readable report of a finished training run.
 pub fn print_report(r: &RunReport) {
     println!("== {} ==", r.summary());
+    if r.resumed_from_step > 0 {
+        println!(
+            "resumed from journal at step {} (totals span the whole run)",
+            r.resumed_from_step
+        );
+    }
+    if r.trace_dropped_events > 0 {
+        println!(
+            "WARNING: {} trace events dropped (recorder rings overflowed) — \
+             the event log and journal are incomplete",
+            r.trace_dropped_events
+        );
+    }
     let step_times: Vec<f64> = r.records.iter().map(|x| x.wall_secs).collect();
     if !step_times.is_empty() {
         let s = summarize(&step_times);
@@ -105,6 +118,11 @@ pub fn report_json(r: &RunReport) -> Value {
         ("trajectories", Value::num(r.trajectories as f64)),
         ("chunks", Value::num(r.chunks as f64)),
         ("final_reward", Value::num(r.final_reward())),
+        (
+            "trace_dropped_events",
+            Value::num(r.trace_dropped_events as f64),
+        ),
+        ("resumed_from_step", Value::num(r.resumed_from_step as f64)),
         ("ddma_publishes", Value::num(r.ddma_publishes as f64)),
         (
             "ddma_mean_publish_secs",

@@ -25,6 +25,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::journal::{JournalRecord, JournalWriter};
 use crate::trace::recorder::{self, EventKind, TraceEvent};
 use crate::util::error::{Error, Result};
 use crate::util::json::Value;
@@ -74,6 +75,17 @@ impl Collector {
     /// Arm the recorder, clear any stale ring contents, open the event
     /// log at `path` (parent dirs created) and spawn the drain thread.
     pub fn start(path: impl AsRef<Path>) -> Result<Collector> {
+        Collector::start_with_journal(path, None)
+    }
+
+    /// [`Collector::start`], additionally mirroring every drained event
+    /// into the run-journal as a [`JournalRecord::Event`] (best-effort:
+    /// journal write failures are counted on the writer, never fatal to
+    /// the drain loop).
+    pub fn start_with_journal(
+        path: impl AsRef<Path>,
+        journal: Option<Arc<JournalWriter>>,
+    ) -> Result<Collector> {
         let writer = JsonlWriter::create(path)?;
         recorder::reset();
         recorder::enable();
@@ -94,6 +106,17 @@ impl Collector {
                                 first_err = Some(e);
                                 break;
                             }
+                        }
+                    }
+                    if let Some(j) = &journal {
+                        for ev in &retained[from..] {
+                            j.write_infallible(&JournalRecord::Event {
+                                t_us: ev.t_nanos as f64 / 1e3,
+                                track: ev.track.clone(),
+                                ph: ph(ev.kind).to_string(),
+                                name: ev.name.to_string(),
+                                value: ev.value,
+                            });
                         }
                     }
                     if stopping {

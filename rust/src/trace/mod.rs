@@ -49,6 +49,31 @@
 //! | `lease_acquire` / `lease_release` | i | memplane phase lease | phase idx |
 //! | `node_start` / `node_stop` | i | graph node lifecycle | 0 |
 //!
+//! # Journal records
+//!
+//! The durable run-journal (`out_dir/journal.jsonl`, [`crate::journal`])
+//! is a second JSONL stream layered over the same `util::json` plumbing.
+//! Every line carries a monotonic `seq` plus a `kind` tag; trace events
+//! are mirrored into it as `kind: "event"` lines so one file replays the
+//! whole run. Record kinds:
+//!
+//! | kind | payload | written by |
+//! |---|---|---|
+//! | `meta` | resolved `PipelineConfig` JSON | controller, line 0 of a fresh run |
+//! | `event` | `(t_us, track, ph, name, value)` trace event | trace collector drain |
+//! | `admit` | `[{store_seq, traj}]` rows admitted | store observer hook |
+//! | `consume` | `store_seqs` + reason (`sample`/`evict`/`stale`) | store observer hook |
+//! | `mint` | weights `version` + publisher | ddma mint hook |
+//! | `step` | full `TrainStepRecord` | trainer, after each step |
+//! | `tick` | cumulative step/tokens/trajectories/chunks | stepped scheduler |
+//! | `node` | node name + `start`/`stop` | graph runtime |
+//! | `snapshot` | store dump, bus fronts, memplane residency, node states | snapshot daemon |
+//! | `finish` | final steps + trajectories | controller, last line |
+//!
+//! `llamarl resume --journal` rebuilds store+bus from the latest
+//! `snapshot` and replays the suffix; `llamarl replay` re-drives the
+//! recorded config and diffs live step records against `step` lines.
+//!
 //! # Lifecycle
 //!
 //! The controller owns the session: [`Collector::start`] arms the
@@ -69,6 +94,14 @@ pub use recorder::{
     TraceEvent, TraceSpan, RING_CAP,
 };
 pub use snapshot::Sampler;
+
+/// Events lost so far to full recorder rings (0 when tracing is off or
+/// healthy). Surfaced in the [`RunReport`] and the live snapshot series.
+///
+/// [`RunReport`]: crate::coordinator::RunReport
+pub fn dropped_events() -> u64 {
+    recorder::dropped_total()
+}
 
 // ---------------------------------------------------------------------------
 // Span vocabulary (shared with the DES timeline segment names)
