@@ -20,6 +20,9 @@ use crate::util::error::{Error, Result};
 pub struct JournalReader {
     r: BufReader<File>,
     line_no: usize,
+    /// physical lines read from the file, blank or not — the 1-based
+    /// line number a text editor would show for the corruption site
+    phys_line: usize,
     truncated: bool,
     done: bool,
 }
@@ -29,6 +32,7 @@ impl JournalReader {
         Ok(JournalReader {
             r: BufReader::new(File::open(path)?),
             line_no: 0,
+            phys_line: 0,
             truncated: false,
             done: false,
         })
@@ -69,7 +73,7 @@ impl JournalReader {
                     self.done = true;
                     return None;
                 }
-                Ok(_) => {}
+                Ok(_) => self.phys_line += 1,
             }
             let text = line.trim_end_matches(['\n', '\r']);
             if text.trim().is_empty() {
@@ -92,7 +96,7 @@ impl JournalReader {
                     }
                     return Some(Err(Error::Manifest(format!(
                         "journal corrupt at line {}: {e}",
-                        self.line_no + 1
+                        self.phys_line
                     ))));
                 }
             }

@@ -69,6 +69,7 @@ pub fn plan_resume(journal_path: impl AsRef<Path>) -> Result<ResumePlan> {
     let mut base_bus_version = 0u64;
     let mut suffix_admits: Vec<(u64, crate::rl::Trajectory)> = Vec::new();
     let mut consumed: HashSet<u64> = HashSet::new();
+    let mut max_admit_next = 0u64;
     let mut max_mint = 0u64;
     let mut records: Vec<TrainStepRecord> = Vec::new();
     let mut last_tick: Option<(u64, u64, u64, u64)> = None;
@@ -95,6 +96,15 @@ pub fn plan_resume(journal_path: impl AsRef<Path>) -> Result<ResumePlan> {
             }
             JournalRecord::Admit { rows } => {
                 admitted_total += rows.len() as u64;
+                // tracked across the whole stream (admission seqs are
+                // monotonic), BEFORE consumptions are retained out: even
+                // when the newest admissions were all consumed, the
+                // resumed store must not re-mint their seqs — duplicate
+                // store_seqs in the journal would poison the next
+                // resume's dedup-by-seq and shared consumed set
+                for (s, _) in &rows {
+                    max_admit_next = max_admit_next.max(s + 1);
+                }
                 suffix_admits.extend(rows);
             }
             JournalRecord::Consume { store_seqs, .. } => {
@@ -134,6 +144,7 @@ pub fn plan_resume(journal_path: impl AsRef<Path>) -> Result<ResumePlan> {
         st.rows.sort_by_key(|(s, _)| *s);
         st.next_seq = st
             .next_seq
+            .max(max_admit_next)
             .max(st.rows.last().map(|(s, _)| s + 1).unwrap_or(0));
         st.watermark = st.watermark.max(start_step);
     }

@@ -11,7 +11,7 @@
 
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
-use std::io::{BufWriter, Write};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -51,11 +51,16 @@ impl JournalWriter {
     }
 
     /// Reopen an existing journal for a resumed run, appending records
-    /// from `next_seq` (one past the last fully-written record; a
-    /// truncated tail line is simply overwritten-by-append — the reader
-    /// tolerates it either way).
+    /// from `next_seq` (one past the last fully-written record). A
+    /// SIGKILL can leave a torn final line with no trailing newline;
+    /// appending onto it would fuse the new record into the partial
+    /// line and turn a tolerated torn *tail* into hard *interior*
+    /// corruption, so the file is first truncated back to its last
+    /// newline (to empty when there is none).
     pub fn append(path: impl AsRef<Path>, next_seq: u64) -> Result<JournalWriter> {
-        let f = OpenOptions::new().append(true).open(path)?;
+        let mut f = OpenOptions::new().read(true).write(true).open(path)?;
+        truncate_torn_tail(&mut f)?;
+        f.seek(SeekFrom::End(0))?;
         Ok(Self::with_file(f, next_seq))
     }
 
@@ -158,6 +163,31 @@ impl JournalWriter {
         let last = self.last_snapshot_nanos.load(Ordering::Relaxed);
         now.saturating_sub(last) as f64 / 1e9
     }
+}
+
+/// Truncate `f` back to one past its last `'\n'` (to empty when it has
+/// none), scanning backwards in chunks so a long torn record costs one
+/// tail read, not a full-file pass. A file already ending in a newline
+/// is left untouched.
+fn truncate_torn_tail(f: &mut File) -> Result<()> {
+    let end = f.seek(SeekFrom::End(0))?;
+    let mut buf = [0u8; 4096];
+    let mut pos = end;
+    let mut keep = 0u64;
+    while pos > 0 {
+        let chunk = buf.len().min(pos as usize);
+        pos -= chunk as u64;
+        f.seek(SeekFrom::Start(pos))?;
+        f.read_exact(&mut buf[..chunk])?;
+        if let Some(i) = buf[..chunk].iter().rposition(|&b| b == b'\n') {
+            keep = pos + i as u64 + 1;
+            break;
+        }
+    }
+    if keep != end {
+        f.set_len(keep)?;
+    }
+    Ok(())
 }
 
 /// The journal is the rollout store's durable replica: admissions carry

@@ -11,7 +11,7 @@ use llamarl::dataplane::{ConsumeReason, PartialRollout};
 use llamarl::journal::record::{trajectory_from_value, trajectory_to_value};
 use llamarl::journal::{
     compare_steps, find_checkpoint_state, plan_resume, JournalReader, JournalRecord,
-    SnapshotRecord, StoreSnapshot,
+    JournalWriter, SnapshotRecord, StoreSnapshot,
 };
 use llamarl::rl::{FinishReason, Trajectory};
 use llamarl::util::json::Value;
@@ -303,6 +303,101 @@ fn reader_rejects_interior_corruption() {
     assert!(r.next_record().is_none(), "the stream ends after the error");
 }
 
+#[test]
+fn corruption_diagnostic_reports_the_physical_line_number() {
+    let path = tmp("corrupt_line_no.jsonl");
+    let good = JournalRecord::Mint {
+        version: 1,
+        publisher: 0,
+    }
+    .to_value(0)
+    .to_string();
+    // physical line 3 is the corrupt one (line 2 is blank)
+    std::fs::write(&path, format!("{good}\n\n{{torn garbage\n{good}\n")).unwrap();
+    let mut r = JournalReader::open(&path).unwrap();
+    assert!(r.next_record().unwrap().is_ok());
+    match r.next_record() {
+        Some(Err(e)) => {
+            let msg = e.to_string();
+            assert!(msg.contains("line 3"), "wrong corruption site: {msg}");
+        }
+        other => panic!("expected a corruption error, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer reopen: the torn tail a SIGKILL leaves must be trimmed before
+// the first appended record, or a tolerated torn *tail* becomes hard
+// *interior* corruption and every later read/resume of the journal fails
+
+#[test]
+fn append_trims_the_torn_tail_so_a_resumed_journal_stays_readable() {
+    let path = tmp("torn_append.jsonl");
+    let mint = |version: u64, seq: u64| {
+        JournalRecord::Mint {
+            version,
+            publisher: 0,
+        }
+        .to_value(seq)
+        .to_string()
+    };
+    // two kill→resume cycles: the second exercises re-reading a journal
+    // that was already resumed once from a torn tail
+    let mut expect_versions = vec![1u64, 2];
+    for cycle in 0..2u64 {
+        let mut full = String::new();
+        for (i, v) in expect_versions.iter().enumerate() {
+            full.push_str(&mint(*v, i as u64));
+            full.push('\n');
+        }
+        // the SIGKILL tears the final line mid-record
+        full.push_str(&mint(90 + cycle, expect_versions.len() as u64));
+        std::fs::write(&path, &full.as_bytes()[..full.len() - 4]).unwrap();
+
+        let appended_version = 10 + cycle;
+        let w = JournalWriter::append(&path, expect_versions.len() as u64).unwrap();
+        w.write(&JournalRecord::Mint {
+            version: appended_version,
+            publisher: 0,
+        })
+        .unwrap();
+        drop(w);
+        expect_versions.push(appended_version);
+
+        let mut r = JournalReader::open(&path).unwrap();
+        let mut got = Vec::new();
+        while let Some(item) = r.next_record() {
+            let (seq, rec) = item.expect("resumed journal must have no interior corruption");
+            assert_eq!(seq, got.len() as u64, "seq stream stays contiguous");
+            match rec {
+                JournalRecord::Mint { version, .. } => got.push(version),
+                other => panic!("unexpected record {other:?}"),
+            }
+        }
+        assert!(!r.truncated_tail(), "the trimmed+appended tail is clean");
+        assert_eq!(got, expect_versions, "cycle {cycle}");
+    }
+}
+
+#[test]
+fn append_truncates_a_journal_with_no_complete_line_to_empty() {
+    let path = tmp("torn_append_empty.jsonl");
+    std::fs::write(&path, b"{\"seq\":0,\"kind\":\"mi").unwrap();
+    let w = JournalWriter::append(&path, 0).unwrap();
+    w.write(&JournalRecord::Mint {
+        version: 7,
+        publisher: 0,
+    })
+    .unwrap();
+    drop(w);
+    let recs: Vec<_> = JournalReader::open(&path)
+        .unwrap()
+        .map(|r| r.expect("journal must be readable"))
+        .collect();
+    assert_eq!(recs.len(), 1);
+    assert_eq!(recs[0].0, 0);
+}
+
 // ---------------------------------------------------------------------------
 // Resume planning over a synthetic journal
 
@@ -427,6 +522,48 @@ fn plan_resume_folds_suffix_onto_latest_snapshot() {
     assert!(plan_resume(&path).unwrap().finished);
 }
 
+/// The newest suffix admissions were all consumed: the resumed store must
+/// still mint fresh seqs *above* them — re-minting a journaled store_seq
+/// would poison the next resume's dedup-by-seq and shared consumed set.
+#[test]
+fn plan_resume_advances_next_seq_past_consumed_suffix_admissions() {
+    let path = tmp("plan_resume_consumed_suffix.jsonl");
+    let records = vec![
+        JournalRecord::Meta {
+            config: Value::object(vec![("mode", Value::str("async_buffered"))]),
+        },
+        JournalRecord::Snapshot(SnapshotRecord {
+            store: Some(StoreSnapshot {
+                next_seq: 5,
+                watermark: 0,
+                rows: Vec::new(),
+                partials: Vec::new(),
+            }),
+            ..SnapshotRecord::default()
+        }),
+        JournalRecord::Admit {
+            rows: vec![(5, traj_fixed(5)), (6, traj_fixed(6))],
+        },
+        JournalRecord::Consume {
+            store_seqs: vec![5, 6],
+            reason: ConsumeReason::Sample,
+        },
+    ];
+    let mut text = String::new();
+    for (i, r) in records.iter().enumerate() {
+        text.push_str(&r.to_value(i as u64).to_string());
+        text.push('\n');
+    }
+    std::fs::write(&path, &text).unwrap();
+
+    let store = plan_resume(&path).unwrap().state.store.unwrap();
+    assert!(store.rows.is_empty(), "everything admitted was consumed");
+    assert_eq!(
+        store.next_seq, 7,
+        "next_seq must clear the consumed admissions, not fall back to the snapshot's"
+    );
+}
+
 #[test]
 fn plan_resume_requires_a_meta_record() {
     let path = tmp("no_meta.jsonl");
@@ -514,6 +651,19 @@ fn kill_and_resume_reaches_reference_trajectory_count() {
         assert_eq!(
             resumed.trajectories, reference.trajectories,
             "count parity after kill at byte {cut}"
+        );
+
+        // the resumed journal must remain one readable document: append
+        // trimmed the torn tail, so a full re-read sees no interior
+        // corruption and a second resume of the same journal still works
+        let mut reader = JournalReader::open(&journal).unwrap();
+        while let Some(item) = reader.next_record() {
+            item.expect("journal must stay readable after a torn-tail resume");
+        }
+        assert!(!reader.truncated_tail());
+        assert!(
+            plan_resume(&journal).unwrap().finished,
+            "re-planning the completed resumed journal finds its finish marker"
         );
     }
 }
