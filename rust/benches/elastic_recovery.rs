@@ -1,0 +1,321 @@
+//! Bench: elastic fleet recovery under a seeded chaos kill schedule.
+//!
+//! Two arms drive the identical synthetic rollout workload — a fleet of
+//! worker threads decoding rows chunk by chunk into a real
+//! [`RolloutStore`] while a consumer samples it down:
+//!
+//! * **unperturbed** — every worker runs clean under
+//!   `RestartPolicy::Never`; this is the throughput ceiling;
+//! * **chaos** — a seeded [`ChaosSchedule`] kills every worker twice,
+//!   early in the attempt (1-3 chunks in, exactly what the runtime's
+//!   injection hook does). The dying attempt parks its in-flight partial
+//!   row in the store; [`supervise`] backs off and respawns; the
+//!   replacement's first act is to reclaim a parked partial and finish it
+//!   at the recorded chunk offset.
+//!
+//! Measured per kill: **recovery time** — restart hook to the replacement's
+//! first admitted row (backoff + resume + remaining chunks). Measured per
+//! arm: **rows/sec**, giving the throughput retained under churn.
+//!
+//! Shape checks (acceptance): no kill may escalate (the supervisor absorbs
+//! the whole schedule), every restart lands (journal-equivalent count),
+//! every parked partial is resumed exactly once (no lost and no duplicated
+//! work), and the chaos arm retains a sane fraction of clean throughput.
+//!
+//! Emits `BENCH_elastic.json` (stdout line + target/BENCH_elastic.json;
+//! gated against the committed repo-root baseline by tools/bench_gate.sh).
+//!
+//! CI smoke: `LLAMARL_BENCH_ROUNDS=3` caps the workload.
+
+use std::cell::Cell;
+use std::hint::black_box;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use llamarl::coordinator::graph::{supervise, ChaosSchedule, RestartPolicy};
+use llamarl::data::{Difficulty, Problem, PromptTask};
+use llamarl::dataplane::{PartialRollout, RolloutStore, StoreConfig};
+use llamarl::rl::{FinishReason, Trajectory};
+use llamarl::util::bench::{bench_rounds, fmt_secs};
+use llamarl::util::json::Value;
+
+const WORKERS: usize = 4;
+const CHUNKS_PER_ROW: u64 = 4;
+const KILLS_PER_WORKER: u64 = 2;
+const CHAOS_SEED: u64 = 42;
+
+/// A few hundred microseconds of real compute per decode chunk — the unit
+/// of work a kill interrupts and a resume recovers.
+fn decode_chunk(scratch: &mut [u64]) {
+    let mut acc = 0x9E37u64;
+    for w in scratch.iter_mut() {
+        acc = acc.wrapping_add(*w).rotate_left(7);
+        *w ^= acc;
+    }
+    black_box(acc);
+}
+
+fn fresh_partial(worker: usize, id: u64) -> PartialRollout {
+    let prompt = vec![1, 2, 3];
+    PartialRollout {
+        task: PromptTask {
+            // globally unique per (worker, row): parked partials never
+            // collide in the store's resumption slot
+            group_id: ((worker as u64) << 32) | id,
+            replica: worker,
+            n_replicas: WORKERS,
+            problem: Problem {
+                prompt: "2+2=".into(),
+                answer: "4".into(),
+                difficulty: Difficulty::Add1,
+            },
+            prompt_tokens: prompt.clone(),
+        },
+        prompt_len: prompt.len(),
+        tokens: prompt,
+        logps: Vec::new(),
+        chunks: 0,
+        gen_version: 0,
+    }
+}
+
+fn finish_row(p: PartialRollout) -> Trajectory {
+    Trajectory {
+        group_id: p.task.group_id,
+        replica: p.task.replica,
+        n_replicas: p.task.n_replicas,
+        problem: p.task.problem,
+        prompt_tokens: p.task.prompt_tokens,
+        response_tokens: p.tokens[p.prompt_len..].to_vec(),
+        behavior_logp: p.logps,
+        gen_version: p.gen_version,
+        chunks: p.chunks,
+        finish: FinishReason::Eos,
+        reward: 0.0,
+        advantage: 0.0,
+    }
+}
+
+struct WorkerOut {
+    rows: u64,
+    restarts: u64,
+    /// restart-hook -> first-admitted-row, one sample per restart that
+    /// went on to admit anything
+    recoveries: Vec<f64>,
+    escalated: bool,
+}
+
+struct ArmResult {
+    wall_secs: f64,
+    rows: u64,
+    restarts: u64,
+    recoveries: Vec<f64>,
+    escalations: u64,
+    parked: u64,
+    resumed: u64,
+}
+
+/// Drive the fleet to a fixed row quota per worker, with or without the
+/// chaos schedule, and collect the recovery telemetry.
+fn run_arm(rows_per_worker: u64, chaos: Option<ChaosSchedule>) -> ArmResult {
+    let store = Arc::new(RolloutStore::new(StoreConfig {
+        capacity: 256,
+        max_staleness: None,
+        ..StoreConfig::default()
+    }));
+    let done = Arc::new(AtomicBool::new(false));
+
+    // consumer: keeps the store drained the way the trainer does
+    let consumer = {
+        let store = store.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            while !done.load(Ordering::Acquire) {
+                let _ = store.sample(32, Duration::from_millis(5));
+            }
+        })
+    };
+
+    let policy = match chaos {
+        Some(c) => RestartPolicy::BoundedRetries {
+            max: c.max_kills_per_worker() as u32 + 1,
+            backoff: Duration::from_millis(2),
+        },
+        None => RestartPolicy::Never,
+    };
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..WORKERS {
+        let store = store.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut scratch = vec![1u64; 8 * 1024];
+            let mut rows_done = 0u64;
+            let mut next_id = 0u64;
+            let mut restarts = 0u64;
+            let mut recoveries = Vec::new();
+            // written by the restart hook, read at the next admitted row
+            let restart_at: Cell<Option<Instant>> = Cell::new(None);
+            let r = supervise(
+                policy,
+                || false,
+                |_, _, _| {
+                    restarts += 1;
+                    restart_at.set(Some(Instant::now()));
+                },
+                |attempt| {
+                    let kill_after = chaos.and_then(|c| c.kill_after(w, attempt));
+                    let mut chunks_this_attempt = 0u64;
+                    while rows_done < rows_per_worker {
+                        // a replacement reclaims parked work first — its own
+                        // or a dead peer's — before starting fresh rows
+                        let mut p = store.take_partial_any().unwrap_or_else(|| {
+                            next_id += 1;
+                            fresh_partial(w, next_id)
+                        });
+                        while u64::from(p.chunks) < CHUNKS_PER_ROW {
+                            decode_chunk(&mut scratch);
+                            p.tokens.push(7);
+                            p.logps.push(-0.5);
+                            p.chunks += 1;
+                            chunks_this_attempt += 1;
+                            if kill_after.is_some_and(|k| chunks_this_attempt >= k) {
+                                // mirror the runtime's crash path: park the
+                                // in-flight row for a survivor, then die
+                                store.park_partial(p);
+                                return Err(llamarl::Error::msg(format!(
+                                    "chaos kill: worker {w} attempt {attempt}"
+                                )));
+                            }
+                        }
+                        store.push_group(vec![finish_row(p)])?;
+                        rows_done += 1;
+                        if let Some(at) = restart_at.take() {
+                            recoveries.push(at.elapsed().as_secs_f64());
+                        }
+                    }
+                    Ok(())
+                },
+            );
+            WorkerOut {
+                rows: rows_done,
+                restarts,
+                recoveries,
+                escalated: r.is_err(),
+            }
+        }));
+    }
+
+    let outs: Vec<WorkerOut> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall_secs = t0.elapsed().as_secs_f64();
+    done.store(true, Ordering::Release);
+    store.close();
+    consumer.join().unwrap();
+
+    let snap = store.snapshot();
+    ArmResult {
+        wall_secs,
+        rows: outs.iter().map(|o| o.rows).sum(),
+        restarts: outs.iter().map(|o| o.restarts).sum(),
+        recoveries: outs.iter().flat_map(|o| o.recoveries.iter().copied()).collect(),
+        escalations: outs.iter().filter(|o| o.escalated).count() as u64,
+        parked: snap.parked,
+        resumed: snap.resumed,
+    }
+}
+
+fn main() {
+    println!("\n=== elastic recovery: supervised restarts under a chaos kill schedule ===\n");
+    let rounds = bench_rounds(12);
+    let rows_per_worker = rounds as u64 * 5;
+    let kills = KILLS_PER_WORKER * WORKERS as u64;
+    let chaos = ChaosSchedule::new(CHAOS_SEED, kills, WORKERS).expect("kills > 0");
+    println!(
+        "fleet: {WORKERS} workers x {rows_per_worker} rows ({CHUNKS_PER_ROW} chunks/row), \
+         chaos: {kills} kills, seed {CHAOS_SEED}\n"
+    );
+
+    let base = run_arm(rows_per_worker, None);
+    let churn = run_arm(rows_per_worker, Some(chaos));
+
+    let base_rps = base.rows as f64 / base.wall_secs.max(1e-9);
+    let churn_rps = churn.rows as f64 / churn.wall_secs.max(1e-9);
+    let retained = churn_rps / base_rps.max(1e-9);
+    let recovery_mean = if churn.recoveries.is_empty() {
+        f64::INFINITY
+    } else {
+        churn.recoveries.iter().sum::<f64>() / churn.recoveries.len() as f64
+    };
+    let recovery_speed = if recovery_mean.is_finite() && recovery_mean > 0.0 {
+        1.0 / recovery_mean
+    } else {
+        0.0
+    };
+
+    println!(
+        "unperturbed: {} rows in {} ({:.0} rows/s)",
+        base.rows,
+        fmt_secs(base.wall_secs),
+        base_rps
+    );
+    println!(
+        "chaos:       {} rows in {} ({:.0} rows/s, {:.1}% retained)",
+        churn.rows,
+        fmt_secs(churn.wall_secs),
+        churn_rps,
+        retained * 100.0
+    );
+    println!(
+        "recovery:    {} restarts, mean kill->first-row {} ({} partials parked, {} resumed)\n",
+        churn.restarts,
+        fmt_secs(recovery_mean),
+        churn.parked,
+        churn.resumed
+    );
+
+    // acceptance: the supervisor must absorb the WHOLE schedule (zero
+    // escalations in either arm), land every scheduled restart, and lose
+    // no parked work — every park resumed exactly once
+    let no_global_stop = base.escalations == 0 && churn.escalations == 0;
+    let restarts_complete = churn.restarts == kills && base.restarts == 0;
+    let partials_migrated_ok = churn.parked >= 1 && churn.resumed == churn.parked;
+    let rows_complete =
+        base.rows == rows_per_worker * WORKERS as u64 && churn.rows == base.rows;
+    println!(
+        "shape checks: no escalation under chaos: {}; all {} scheduled kills \
+         restarted: {}; parked == resumed (no lost work): {}; both arms hit \
+         the full row quota: {}\n",
+        if no_global_stop { "PASS" } else { "FAIL" },
+        kills,
+        if restarts_complete { "PASS" } else { "FAIL" },
+        if partials_migrated_ok { "PASS" } else { "FAIL" },
+        if rows_complete { "PASS" } else { "FAIL" },
+    );
+
+    let json = Value::object(vec![
+        ("rounds", Value::num(rounds as f64)),
+        ("workers", Value::num(WORKERS as f64)),
+        ("rows_per_worker", Value::num(rows_per_worker as f64)),
+        ("chaos_kills", Value::num(kills as f64)),
+        ("chaos_seed", Value::num(CHAOS_SEED as f64)),
+        ("base_rows_per_sec", Value::num(base_rps)),
+        ("chaos_rows_per_sec", Value::num(churn_rps)),
+        ("throughput_retained_frac", Value::num(retained)),
+        // JSON has no Infinity: a no-recovery run (restarts_complete
+        // already FAIL) emits 0 here and 0 speed below
+        (
+            "recovery_secs_mean",
+            Value::num(if recovery_mean.is_finite() { recovery_mean } else { 0.0 }),
+        ),
+        ("recovery_speed", Value::num(recovery_speed)),
+        ("restarts", Value::num(churn.restarts as f64)),
+        ("partials_parked", Value::num(churn.parked as f64)),
+        ("partials_resumed", Value::num(churn.resumed as f64)),
+        ("no_global_stop", Value::Bool(no_global_stop)),
+        ("restarts_complete", Value::Bool(restarts_complete)),
+        ("partials_migrated_ok", Value::Bool(partials_migrated_ok)),
+        ("rows_complete", Value::Bool(rows_complete)),
+    ]);
+    llamarl::util::bench::emit_summary("BENCH_elastic.json", &json);
+}

@@ -186,6 +186,15 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             "journal_snapshot_secs" => {
                 cfg.journal_snapshot_secs = val.as_f64().unwrap_or(0.25).max(0.01)
             }
+            // elastic fleets: restart budget, chaos injection, resize
+            "restart_max" => cfg.restart_max = val.as_i64().unwrap_or(0).max(0) as u32,
+            "restart_backoff_ms" => {
+                cfg.restart_backoff_ms = val.as_i64().unwrap_or(50).max(1) as u64
+            }
+            "chaos_kills" => cfg.chaos_kills = val.as_i64().unwrap_or(0).max(0) as u64,
+            "chaos_seed" => cfg.chaos_seed = val.as_i64().unwrap_or(0) as u64,
+            "elastic_resize" => cfg.elastic_resize = val.as_bool().unwrap_or(false),
+            "resize_max_extra" => cfg.resize_max_extra = val.as_usize().unwrap_or(2),
             other => return Err(Error::Config(format!("unknown config key '{other}'"))),
         }
     }
@@ -291,6 +300,16 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
     cfg.journal_snapshot_secs = args
         .f64_or("journal-snapshot-secs", cfg.journal_snapshot_secs)?
         .max(0.01);
+    cfg.restart_max = args.u64_or("restart-max", cfg.restart_max as u64)? as u32;
+    cfg.restart_backoff_ms = args
+        .u64_or("restart-backoff-ms", cfg.restart_backoff_ms)?
+        .max(1);
+    cfg.chaos_kills = args.u64_or("chaos-kills", cfg.chaos_kills)?;
+    cfg.chaos_seed = args.u64_or("chaos-seed", cfg.chaos_seed)?;
+    if args.flag("elastic-resize") {
+        cfg.elastic_resize = true;
+    }
+    cfg.resize_max_extra = args.usize_or("resize-max-extra", cfg.resize_max_extra)?;
     Ok(())
 }
 
@@ -385,6 +404,12 @@ pub fn to_json(cfg: &PipelineConfig) -> Value {
         ("metrics_interval_secs", Value::num(cfg.metrics_interval_secs)),
         ("journal", Value::Bool(cfg.journal)),
         ("journal_snapshot_secs", Value::num(cfg.journal_snapshot_secs)),
+        ("restart_max", Value::num(cfg.restart_max as f64)),
+        ("restart_backoff_ms", Value::num(cfg.restart_backoff_ms as f64)),
+        ("chaos_kills", Value::num(cfg.chaos_kills as f64)),
+        ("chaos_seed", Value::num(cfg.chaos_seed as f64)),
+        ("elastic_resize", Value::Bool(cfg.elastic_resize)),
+        ("resize_max_extra", Value::num(cfg.resize_max_extra as f64)),
     ];
     if let Some(p) = &cfg.init_checkpoint {
         pairs.push(("init_checkpoint", Value::str(p.to_string_lossy().into_owned())));
@@ -608,6 +633,12 @@ mod tests {
         cfg.mem.offload_classes = vec![AllocClass::Grads, AllocClass::OptimState];
         cfg.journal_snapshot_secs = 0.5;
         cfg.seed = 42;
+        cfg.restart_max = 3;
+        cfg.restart_backoff_ms = 25;
+        cfg.chaos_kills = 4;
+        cfg.chaos_seed = 99;
+        cfg.elastic_resize = true;
+        cfg.resize_max_extra = 1;
         let v = to_json(&cfg);
         let mut rebuilt = PipelineConfig::default();
         apply_json(&mut rebuilt, &v).unwrap();
@@ -625,6 +656,45 @@ mod tests {
         assert_eq!(rebuilt.journal_snapshot_secs, 0.5);
         assert!(rebuilt.journal);
         assert!(rebuilt.init_checkpoint.is_none());
+        assert_eq!(rebuilt.restart_max, 3);
+        assert_eq!(rebuilt.restart_backoff_ms, 25);
+        assert_eq!(rebuilt.chaos_kills, 4);
+        assert_eq!(rebuilt.chaos_seed, 99);
+        assert!(rebuilt.elastic_resize);
+        assert_eq!(rebuilt.resize_max_extra, 1);
+    }
+
+    #[test]
+    fn elastic_flags_apply() {
+        let mut cfg = preset("nano").unwrap();
+        assert_eq!(cfg.restart_max, 0, "restarts are opt-in");
+        assert!(!cfg.elastic_resize, "resize is opt-in");
+        let args = Args::parse(
+            [
+                "--restart-max",
+                "2",
+                "--restart-backoff-ms",
+                "10",
+                "--chaos-kills",
+                "3",
+                "--chaos-seed",
+                "7",
+                "--resize-max-extra",
+                "1",
+                "--elastic-resize",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            &["elastic-resize"],
+        )
+        .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.restart_max, 2);
+        assert_eq!(cfg.restart_backoff_ms, 10);
+        assert_eq!(cfg.chaos_kills, 3);
+        assert_eq!(cfg.chaos_seed, 7);
+        assert!(cfg.elastic_resize);
+        assert_eq!(cfg.resize_max_extra, 1);
     }
 
     #[test]

@@ -146,6 +146,25 @@ pub struct PipelineConfig {
     /// [`crate::journal::plan_resume`] (`llamarl resume`). Never settable
     /// from JSON/CLI — only the resume path threads it through.
     pub resume: Option<ResumeState>,
+    /// supervised restarts each generator/reward replica may consume
+    /// before its failure escalates to the global stop (0 = Never, the
+    /// pre-elastic behavior; async modes only)
+    pub restart_max: u32,
+    /// base backoff before the first supervised restart, in milliseconds
+    /// (doubles per attempt)
+    pub restart_backoff_ms: u64,
+    /// CHAOS MODE: inject this many seeded generator kills, spread
+    /// round-robin across the fleet's (worker, attempt) grid — the CI
+    /// chaos arm's randomized kill schedule (0 disables)
+    pub chaos_kills: u64,
+    /// seed for the chaos kill schedule (same seed = same schedule)
+    pub chaos_seed: u64,
+    /// enable the queue-depth-driven fleet controller: spawn dynamic
+    /// generator replicas while the trainer starves on the store, retire
+    /// them when admission backs up (Mode::AsyncBuffered only)
+    pub elastic_resize: bool,
+    /// cap on dynamic replicas the fleet controller may add
+    pub resize_max_extra: usize,
     /// FAULT-INJECTION TEST HOOK: make every generator error out after N
     /// decode chunks, exercising the graph runtime's error propagation.
     /// Never settable from JSON/CLI.
@@ -183,6 +202,12 @@ impl Default for PipelineConfig {
             journal: true,
             journal_snapshot_secs: 0.25,
             resume: None,
+            restart_max: 0,
+            restart_backoff_ms: 50,
+            chaos_kills: 0,
+            chaos_seed: 0,
+            elastic_resize: false,
+            resize_max_extra: 2,
             debug_fail_generator_after: None,
         }
     }
@@ -230,6 +255,14 @@ pub struct RunReport {
     /// (Mode::AsyncBuffered; 0 otherwise) — kept distinct from the channel
     /// field above, which the pre-graph drivers conflated
     pub trainer_sample_wait_secs: f64,
+    /// supervised replica restarts absorbed without a global stop
+    pub node_restarts: u64,
+    /// partial rollouts parked by dying replicas and migrated through the
+    /// store's resumption slot to a survivor
+    pub partials_migrated: u64,
+    /// dynamic generator replicas the fleet controller spawned / retired
+    pub fleet_scale_ups: u64,
+    pub fleet_scale_downs: u64,
     /// memplane telemetry: bytes the offload executor swapped to host
     /// (D2H) and prefetched back (H2D) across phase flips
     pub offload_d2h_bytes: u64,

@@ -126,6 +126,10 @@ pub struct GeneratorWorker {
     /// stream into its staging buffer while this worker decodes; the fenced
     /// swap happens here, at chunk boundaries
     sync_slot: Option<Arc<GeneratorSlot>>,
+    /// false for dynamic (fleet-resize) replicas: downstream EOF fan-in
+    /// counts are sized to the static fleet, so an elastically added
+    /// worker must never signal drain
+    eof_on_finish: bool,
     // telemetry
     pub chunks_run: u64,
     pub tokens_generated: u64,
@@ -155,6 +159,7 @@ impl GeneratorWorker {
             slots: Vec::new(),
             resume: None,
             sync_slot: None,
+            eof_on_finish: true,
             chunks_run: 0,
             tokens_generated: 0,
             trajectories_emitted: 0,
@@ -229,6 +234,23 @@ impl GeneratorWorker {
             }
         }
         parked
+    }
+
+    /// Mark this worker as a dynamic (fleet-resize) replica: it must
+    /// never signal EOF, because every drain fan-in count downstream was
+    /// sized to the static fleet at launch.
+    pub(crate) fn suppress_eof(&mut self) {
+        self.eof_on_finish = false;
+    }
+
+    /// Crash path: a supervised replica parks its in-flight sequences
+    /// before the supervisor backs off and respawns it, so a survivor (or
+    /// the replacement) resumes them through the normal refill path. The
+    /// executor loop only runs `drain()` on clean exits — an erroring
+    /// `step()` propagates first — so the supervisor calls this
+    /// explicitly on the error path. Returns how many were parked.
+    pub(crate) fn park_for_restart(&mut self) -> u64 {
+        self.park_live_slots() as u64
     }
 
     /// Upload a weight snapshot to this worker's PJRT context.
@@ -431,7 +453,9 @@ impl Executor for GeneratorWorker {
         self.fill_slots();
         if self.slots.iter().all(|s| s.is_none()) {
             // stop requested and every in-flight sequence drained
-            self.out.send_eof();
+            if self.eof_on_finish {
+                self.out.send_eof();
+            }
             return Ok(StepOutcome::Finished);
         }
         let finished = self.run_chunk()?;

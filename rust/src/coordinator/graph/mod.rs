@@ -30,13 +30,37 @@
 //! the group-routed channel, so every replica of a prompt's advantage
 //! group is scored by exactly one node (group integrity), removing the
 //! single-scorer bottleneck of the old async drivers.
+//!
+//! # Restart protocol (elastic fleets)
+//!
+//! Generator and reward replicas are *supervised* ([`supervisor`]): when
+//! a node's [`topology::RestartPolicy`] grants retries, a replica's error
+//! or panic stays local instead of landing in the global first-error
+//! slot. The dying attempt parks its in-flight partial rollouts in the
+//! store's resumption slot (reclaimed by any survivor's next refill — the
+//! rows were never admitted, so no admission seq can duplicate), the
+//! supervisor journals a `node_restart` record, sleeps an exponential
+//! backoff (interruptibly — a global stop cancels the respawn), then
+//! builds a fresh worker on the SAME retained edges: the cloned outbound
+//! channel, the shared store handle, and the weight-sync slot registered
+//! once at launch, whose front re-seeds the new worker's parameters on
+//! its first chunk. Exhausting the budget falls through to the old
+//! global-stop path unchanged. When `elastic_resize` is on, a fleet
+//! controller thread also watches the store's queue depth and spawns (or
+//! retires) dynamic generator replicas between `n_generator_workers` and
+//! `n_generator_workers + resize_max_extra`, journaling `fleet_resize`
+//! records; dynamic replicas never signal EOF, so drain fan-in counts
+//! stay exact.
 
 pub mod runtime;
+pub mod supervisor;
 pub mod telemetry;
 pub mod topology;
 
 pub use runtime::LaunchEnv;
-pub use telemetry::{RewardTally, TelemetryHub};
+pub use supervisor::{supervise, ChaosSchedule, Supervised};
+pub use telemetry::{ElasticStats, RewardTally, TelemetryHub};
 pub use topology::{
     topology, topology_with_rows, EdgeKind, EdgeSpec, Graph, LeasePolicy, NodeKind, NodeSpec,
+    RestartPolicy,
 };

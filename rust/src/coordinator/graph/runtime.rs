@@ -18,10 +18,12 @@
 //!   with the all-rows-finish straggler bubble). Nothing about the
 //!   topology changes except the channel capacities it was declared with.
 
+use std::cell::Cell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::channel::{gather_channel, routed_channel, ChannelStats, Inbound, Outbound};
 use crate::coordinator::controller::{PipelineConfig, RunReport};
@@ -29,8 +31,9 @@ use crate::coordinator::evaluator::{eval_policy, EvaluatorConfig, EvaluatorExecu
 use crate::coordinator::executor::{
     run_executor_loop, run_executor_loop_initialized, Executor, ExecutorContext, StepOutcome,
 };
-use crate::coordinator::generator::{GeneratorConfig, GeneratorWorker};
-use crate::coordinator::graph::telemetry::{RewardTally, TelemetryHub};
+use crate::coordinator::generator::{GenTally, GeneratorConfig, GeneratorWorker};
+use crate::coordinator::graph::supervisor::{supervise, ChaosSchedule};
+use crate::coordinator::graph::telemetry::{ElasticStats, RewardTally, TelemetryHub};
 use crate::coordinator::graph::topology::{EdgeKind, Graph, LeasePolicy, NodeKind};
 use crate::coordinator::reward::{RewardExecutor, ScoredSink};
 use crate::coordinator::trainer::{Trainer, TrainerConfig, TrajectorySource};
@@ -257,6 +260,132 @@ fn join_node<T>(h: JoinHandle<Option<T>>, kind: &str, idx: usize) -> Result<Opti
     })
 }
 
+/// Everything the elastic fleet controller needs to spawn dynamic
+/// generator replicas on the same edges the static fleet uses.
+struct FleetCtl {
+    ctx: Arc<ExecutorContext>,
+    scheduler: Arc<PromptScheduler>,
+    out: Outbound,
+    store: Arc<RolloutStore>,
+    fail: Arc<FailState>,
+    elastic: Arc<ElasticStats>,
+    gcfg: GeneratorConfig,
+    base_seed: u64,
+    base_replicas: usize,
+    max_extra: usize,
+    low_water: usize,
+    capacity: usize,
+    sync_slot: bool,
+}
+
+/// Queue-depth-driven elastic resize (buffered topologies only): scale the
+/// generator fleet UP when the trainer is starving (store occupancy stays
+/// below one training batch — the condition that surfaces as
+/// `trainer_sample_wait_secs`), and DOWN when admission backs up (occupancy
+/// pins above 3/4 capacity, where the store starts evicting). Dynamic
+/// replicas never signal EOF — drain fan-in counts are sized to the static
+/// fleet — and register their own weight-sync slots, seeded from the bus
+/// front like any late subscriber. A retired replica parks its in-flight
+/// partials for the static fleet to resume. The returned handle joins
+/// every dynamic replica and hands back their summed tally.
+fn spawn_fleet_controller(f: FleetCtl) -> JoinHandle<GenTally> {
+    std::thread::Builder::new()
+        .name("fleet-controller".into())
+        .spawn(move || {
+            let mut live: Vec<(Arc<AtomicBool>, JoinHandle<Option<GenTally>>)> = Vec::new();
+            let mut retired: Vec<JoinHandle<Option<GenTally>>> = Vec::new();
+            let mut next_id = f.base_replicas;
+            let (mut low_streak, mut high_streak) = (0u32, 0u32);
+            while !f.ctx.should_stop() {
+                std::thread::sleep(Duration::from_millis(20));
+                let occ = f.store.snapshot().occupancy;
+                low_streak = if occ < f.low_water { low_streak + 1 } else { 0 };
+                high_streak = if occ * 4 > f.capacity * 3 { high_streak + 1 } else { 0 };
+                if low_streak >= 5 && live.len() < f.max_extra {
+                    low_streak = 0;
+                    let id = next_id;
+                    next_id += 1;
+                    let from = f.base_replicas + live.len();
+                    live.push(spawn_dynamic_generator(&f, id));
+                    f.elastic.scale_ups.fetch_add(1, Ordering::Relaxed);
+                    note_resize(&f, from, from + 1, format!("occupancy {occ} < batch {}", f.low_water));
+                } else if high_streak >= 5 && !live.is_empty() {
+                    high_streak = 0;
+                    let (flag, h) = live.pop().expect("non-empty");
+                    flag.store(true, Ordering::Relaxed);
+                    retired.push(h);
+                    let from = f.base_replicas + live.len() + 1;
+                    f.elastic.scale_downs.fetch_add(1, Ordering::Relaxed);
+                    note_resize(&f, from, from - 1, format!("occupancy {occ} > 3/4 of {}", f.capacity));
+                }
+            }
+            // shutdown: retire everything still live, then fold the tallies
+            let mut tally = GenTally::default();
+            for (flag, h) in live {
+                flag.store(true, Ordering::Relaxed);
+                retired.push(h);
+            }
+            for h in retired {
+                if let Ok(Some(t)) = h.join() {
+                    tally.add(&t);
+                }
+            }
+            tally
+        })
+        .expect("spawn fleet controller thread")
+}
+
+fn note_resize(f: &FleetCtl, from: usize, to: usize, reason: String) {
+    crate::log_info!("graph", "fleet resize: generator {from} -> {to} ({reason})");
+    if let Some(j) = &f.ctx.journal {
+        j.write_infallible(&JournalRecord::FleetResize {
+            node: "generator".into(),
+            from: from as u64,
+            to: to as u64,
+            reason,
+        });
+    }
+}
+
+/// One dynamic generator replica: the static worker loop minus EOF (fan-in
+/// counts stay exact) plus a retire flag the controller flips to shed it.
+fn spawn_dynamic_generator(
+    f: &FleetCtl,
+    id: usize,
+) -> (Arc<AtomicBool>, JoinHandle<Option<GenTally>>) {
+    let retire = Arc::new(AtomicBool::new(false));
+    let flag = retire.clone();
+    let ctx = f.ctx.clone();
+    let scheduler = f.scheduler.clone();
+    let out = f.out.clone();
+    let store = f.store.clone();
+    let mut gcfg = f.gcfg.clone();
+    gcfg.seed = f.base_seed.wrapping_add(1000 + id as u64);
+    let sync_slot = f.sync_slot;
+    // deliberately NO memory-plane lease: a dynamic replica is
+    // opportunistic, and a capacity-full lease error must not escalate to
+    // a global stop the way a static replica's launch failure does
+    let h = spawn_node(format!("generator-dyn-{id}"), f.fail.clone(), move || {
+        let mut gen = GeneratorWorker::new(id, gcfg, ctx.clone(), scheduler, out);
+        gen.suppress_eof();
+        gen.set_resume_store(store);
+        if sync_slot {
+            gen.set_sync_slot(ctx.weights.register_generator());
+        }
+        gen.init()?;
+        while !ctx.should_stop() && !retire.load(Ordering::Relaxed) {
+            if matches!(gen.step()?, StepOutcome::Finished) {
+                break;
+            }
+        }
+        // hand in-flight work back: parked partials resume on the static
+        // fleet's next refill
+        gen.drain()?;
+        Ok(gen.tally())
+    });
+    (flag, h)
+}
+
 /// Start the `--metrics-interval` live-telemetry sampler when configured.
 /// The handle keeps the snapshot thread alive; stopping (or dropping) it
 /// writes one final snapshot so the series covers the whole run.
@@ -283,7 +412,6 @@ fn start_sampler(
 ///
 /// [`JournalWriter::write_snapshot`]: crate::journal::JournalWriter::write_snapshot
 fn build_snapshot(ctx: &ExecutorContext, store: Option<&RolloutStore>) -> SnapshotRecord {
-    use std::sync::atomic::Ordering;
     let mut snap = SnapshotRecord {
         trainer_step: ctx.trainer_step.load(Ordering::SeqCst),
         bus_version: ctx.weights.version(),
@@ -354,10 +482,17 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
     let snapshotter = start_snapshotter(cfg, &env.ctx, store.clone());
 
     // generator fleet: each replica registers its weight-sync slot (when
-    // the topology says so) and holds its lease per the node's policy
+    // the topology says so) and holds its lease per the node's policy.
+    // Replicas run *supervised*: within the node's restart budget an error
+    // (or an injected chaos kill) parks the worker's in-flight partials,
+    // journals the restart, and respawns a fresh worker on the SAME edges —
+    // the cloned outbound, the shared store, and the slot registered once
+    // below, whose front re-seeds the new worker's weights.
     let gen_node = *graph
         .node(NodeKind::Generator)
         .expect("check(): generator present");
+    let chaos = ChaosSchedule::new(cfg.chaos_seed, cfg.chaos_kills, gen_node.replicas);
+    let elastic = hub.elastic();
     let mut gen_handles = Vec::new();
     for w in 0..gen_node.replicas {
         let ctx = env.ctx.clone();
@@ -367,6 +502,8 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
         let sync_slot = gen_node.sync_slot.then(|| env.ctx.weights.register_generator());
         let resume = store.clone();
         let lease = gen_node.lease;
+        let restart = gen_node.restart;
+        let elastic = elastic.clone();
         gen_handles.push(spawn_node(format!("generator-{w}"), fail.clone(), move || {
             // Lifetime lease: async phases overlap on disjoint executors,
             // so the lease is feasibility + accounting, never an offload
@@ -375,35 +512,149 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
                 (LeasePolicy::Lifetime(p), Some(m)) => Some(m.lease(p)?),
                 _ => None,
             };
-            let mut gen = GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler, out);
-            if let Some(s) = resume {
-                gen.set_resume_store(s);
-            }
-            if let Some(slot) = sync_slot {
-                gen.set_sync_slot(slot);
-            }
-            run_executor_loop(&mut gen, &ctx, None)?;
-            Ok(gen.tally())
+            let mut tally = GenTally::default();
+            // partials parked by the failing attempt, read by on_restart
+            let parked = Cell::new(0u64);
+            supervise(
+                restart,
+                || ctx.should_stop(),
+                |attempt, backoff, err| {
+                    let migrated = parked.replace(0);
+                    elastic.note_restart(migrated);
+                    crate::log_warn!(
+                        "graph",
+                        "generator-{w} restart #{}: {err} (backoff {backoff:?}, {migrated} partials parked)",
+                        attempt + 1
+                    );
+                    if let Some(j) = &ctx.journal {
+                        j.write_infallible(&JournalRecord::NodeRestart {
+                            node: format!("generator-{w}"),
+                            attempt: u64::from(attempt) + 1,
+                            backoff_ms: backoff.as_millis() as u64,
+                            migrated,
+                            error: err.to_string(),
+                        });
+                    }
+                },
+                |attempt| {
+                    let mut gcfg = gcfg.clone();
+                    // chaos injection: the seeded (worker, attempt) schedule
+                    // generalizes the single-shot debug hook, which keeps
+                    // precedence when both are set
+                    if gcfg.fail_after_chunks.is_none() {
+                        gcfg.fail_after_chunks = chaos.and_then(|c| c.kill_after(w, attempt));
+                    }
+                    let mut gen =
+                        GeneratorWorker::new(w, gcfg, ctx.clone(), scheduler.clone(), out.clone());
+                    if let Some(s) = &resume {
+                        gen.set_resume_store(s.clone());
+                    }
+                    if let Some(slot) = &sync_slot {
+                        gen.set_sync_slot(slot.clone());
+                    }
+                    let r = run_executor_loop(&mut gen, &ctx, None);
+                    if r.is_err() {
+                        // the executor loop skips drain() on error — park
+                        // live slots here so survivors resume them
+                        parked.set(gen.park_for_restart());
+                    }
+                    tally.add(&gen.tally());
+                    r
+                },
+            )?;
+            // Done or Stopped (global shutdown during backoff): either way
+            // the replica exits clean with whatever it accomplished
+            Ok(tally)
         }));
     }
+
+    // elastic fleet controller (opt-in, buffered topologies only): watches
+    // the store's queue depth and grows/shrinks the generator fleet with
+    // dynamic replicas — spawned here so it can clone the generations edge
+    // before the static fan-in count is sealed below
+    let fleet = match (&store, cfg.elastic_resize) {
+        (Some(s), true) => Some(spawn_fleet_controller(FleetCtl {
+            ctx: env.ctx.clone(),
+            scheduler: env.scheduler.clone(),
+            out: gen_tx.clone(),
+            store: s.clone(),
+            fail: fail.clone(),
+            elastic: elastic.clone(),
+            gcfg: gen_cfg(cfg, 0),
+            base_seed: cfg.seed,
+            base_replicas: gen_node.replicas,
+            max_extra: cfg.resize_max_extra,
+            low_water: env.manifest.config.train_batch,
+            capacity: cfg.store.capacity,
+            sync_slot: gen_node.sync_slot,
+        })),
+        _ => None,
+    };
     drop(gen_tx);
 
-    // reward fleet: group-routed inbound queues, one shared scored sink
+    // reward fleet: group-routed inbound queues, one shared scored sink.
+    // Supervised like the generators, with one twist: the inbound receiver
+    // is not cloneable, so a dead attempt is *salvaged* — its queue, EOF
+    // count, and buffered (already-scored) partial groups carry into the
+    // replacement executor instead of being rebuilt.
     let n_gen = gen_node.replicas;
     let vocab = env.manifest.config.vocab;
+    let reward_node = *graph.node(NodeKind::Reward).expect("check(): reward present");
     let mut reward_handles = Vec::new();
     for (r, rx) in gen_rxs.into_iter().enumerate() {
         let ctx = env.ctx.clone();
         let sink = shared_sink.clone();
         let baseline = cfg.baseline;
+        let restart = reward_node.restart;
+        let elastic = elastic.clone();
         reward_handles.push(spawn_node(format!("reward-{r}"), fail.clone(), move || {
-            let mut rew = RewardExecutor::new(ctx.clone(), rx, sink, baseline, vocab, n_gen)?;
-            run_executor_loop(&mut rew, &ctx, None)?;
-            Ok(RewardTally {
-                scored: rew.scored,
-                groups: rew.groups_emitted,
-                reward_sum: rew.reward_sum,
-            })
+            let mut tally = RewardTally::default();
+            let mut carried = Some((rx, 0usize, Vec::new()));
+            supervise(
+                restart,
+                || ctx.should_stop(),
+                |attempt, backoff, err| {
+                    elastic.note_restart(0);
+                    crate::log_warn!(
+                        "graph",
+                        "reward-{r} restart #{}: {err} (backoff {backoff:?})",
+                        attempt + 1
+                    );
+                    if let Some(j) = &ctx.journal {
+                        j.write_infallible(&JournalRecord::NodeRestart {
+                            node: format!("reward-{r}"),
+                            attempt: u64::from(attempt) + 1,
+                            backoff_ms: backoff.as_millis() as u64,
+                            migrated: 0,
+                            error: err.to_string(),
+                        });
+                    }
+                },
+                |_attempt| {
+                    // an attempt that panicked (or died constructing) took
+                    // the receiver down with it — that loss is terminal
+                    let (rx, eofs, buffered) = carried.take().ok_or_else(|| {
+                        Error::Coordinator(format!("reward-{r}: inbound not recoverable"))
+                    })?;
+                    let mut rew =
+                        RewardExecutor::new(ctx.clone(), rx, sink.clone(), baseline, vocab, n_gen)?;
+                    rew.adopt(eofs, buffered);
+                    let res = run_executor_loop(&mut rew, &ctx, None);
+                    tally.add(&RewardTally {
+                        scored: rew.scored,
+                        groups: rew.groups_emitted,
+                        reward_sum: rew.reward_sum,
+                    });
+                    match res {
+                        Ok(()) => Ok(()),
+                        Err(e) => {
+                            carried = Some(rew.salvage());
+                            Err(e)
+                        }
+                    }
+                },
+            )?;
+            Ok(tally)
         }));
     }
     // only the reward workers' sink clones may signal EOF (store latch /
@@ -461,6 +712,12 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
         if let Some(t) = join_node(h, "generator", w)? {
             hub.add_generator(&t);
         }
+    }
+    if let Some(h) = fleet {
+        let t = h
+            .join()
+            .map_err(|_| Error::Coordinator("fleet controller panicked".into()))?;
+        hub.add_generator(&t);
     }
     for (r, h) in reward_handles.into_iter().enumerate() {
         if let Some(t) = join_node(h, "reward", r)? {

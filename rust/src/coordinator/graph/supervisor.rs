@@ -1,0 +1,274 @@
+//! The supervisor layer: per-replica restart with bounded retries.
+//!
+//! Before this layer, any node failure landed in the runtime's global
+//! first-error slot and stopped the world — correct for a trainer, but
+//! wrong for a fleet replica on a large cluster where worker churn is
+//! routine (the paper pitches the single-controller design at thousands
+//! of devices). [`supervise`] wraps one replica's lifecycle: each attempt
+//! runs under its own panic guard, a failure consults the node's
+//! [`RestartPolicy`], and within budget the replica backs off
+//! (exponentially) and respawns instead of escalating. Only an exhausted
+//! budget (or `RestartPolicy::Never`) returns the error to the caller —
+//! which in the graph runtime means the old global-stop path, unchanged.
+//!
+//! What makes a restart *safe* lives in the planes, not here:
+//!
+//! * **partial rollouts** — the attempt body parks its in-flight
+//!   sequences in the rollout store's resumption slot before returning
+//!   the error, so a surviving or restarted replica reclaims them via the
+//!   normal refill path (no duplicate admission seqs: parked work has not
+//!   been admitted yet).
+//! * **weights** — a respawned worker starts with no parameter buffer and
+//!   re-seeds from its weight-sync slot's front (the slot is registered
+//!   once per logical replica and survives the worker it fed).
+//! * **accounting** — tallies accumulate across attempts; restarts and
+//!   migrated-partial counts surface through the telemetry hub and the
+//!   journal's `node_restart` records.
+//!
+//! [`ChaosSchedule`] is the test/CI injection surface: a seeded,
+//! deterministic map from (worker, attempt) to a kill-after-N-chunks
+//! fault, generalizing the single-shot `fail_after_chunks` debug hook
+//! into the randomized kill schedules the chaos CI arm drives.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::graph::topology::RestartPolicy;
+use crate::util::error::{Error, Result};
+
+/// How a supervised replica's lifecycle ended when it did NOT escalate.
+#[derive(Debug)]
+pub enum Supervised<T> {
+    /// the attempt body completed (possibly after restarts)
+    Done(T),
+    /// the global stop arrived while backing off between attempts; the
+    /// replica exits quietly (the run is shutting down anyway)
+    Stopped,
+}
+
+/// Run `attempt` under the node's restart policy. Each attempt executes
+/// inside its own panic guard (a panic restarts like an error does, but
+/// skips the attempt's own error-path cleanup). On failure within budget,
+/// `on_restart(attempt_no, backoff, err)` fires (journal/telemetry hook),
+/// then the thread backs off — interruptibly: a global stop during the
+/// sleep exits with [`Supervised::Stopped`] instead of respawning. An
+/// exhausted budget returns the last error, which in the graph runtime
+/// escalates to the global stop exactly as before this layer existed.
+pub fn supervise<T>(
+    policy: RestartPolicy,
+    should_stop: impl Fn() -> bool,
+    mut on_restart: impl FnMut(u32, Duration, &Error),
+    mut attempt: impl FnMut(u32) -> Result<T>,
+) -> Result<Supervised<T>> {
+    let mut n: u32 = 0;
+    loop {
+        let err = match catch_unwind(AssertUnwindSafe(|| attempt(n))) {
+            Ok(Ok(v)) => return Ok(Supervised::Done(v)),
+            Ok(Err(e)) => e,
+            Err(_) => Error::msg("panicked"),
+        };
+        let Some(delay) = policy.backoff_for(n) else {
+            return Err(err);
+        };
+        on_restart(n, delay, &err);
+        let t0 = Instant::now();
+        while t0.elapsed() < delay {
+            if should_stop() {
+                return Ok(Supervised::Stopped);
+            }
+            let left = delay.saturating_sub(t0.elapsed());
+            std::thread::sleep(left.min(Duration::from_millis(2)));
+        }
+        if should_stop() {
+            return Ok(Supervised::Stopped);
+        }
+        n += 1;
+    }
+}
+
+/// A seeded, deterministic kill schedule over (worker, attempt): the
+/// chaos-mode generalization of the `fail_after_chunks` debug hook. Kill
+/// `j` (0-based) lands on worker `j % workers` at that worker's attempt
+/// `j / workers`, so `kills` faults spread round-robin across the fleet
+/// and a worker's restart budget only needs to cover its own share. The
+/// chunk count for each fault derives from the seed (1..=3 chunks in),
+/// so two runs with the same seed inject byte-identical schedules.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosSchedule {
+    seed: u64,
+    kills: u64,
+    workers: u64,
+}
+
+impl ChaosSchedule {
+    /// `None` when no kills are scheduled (`kills == 0`) — callers skip
+    /// the lookup entirely.
+    pub fn new(seed: u64, kills: u64, workers: usize) -> Option<ChaosSchedule> {
+        (kills > 0).then_some(ChaosSchedule {
+            seed,
+            kills,
+            workers: workers.max(1) as u64,
+        })
+    }
+
+    /// The fault for this worker's attempt: kill after N chunks, or run
+    /// clean. Attempt numbers past the schedule always run clean, which
+    /// is what lets a bounded-retry policy converge.
+    pub fn kill_after(&self, worker: usize, attempt: u32) -> Option<u64> {
+        let j = (attempt as u64).checked_mul(self.workers)?.checked_add(worker as u64)?;
+        if worker as u64 >= self.workers || j >= self.kills {
+            return None;
+        }
+        Some(1 + splitmix(self.seed ^ j.wrapping_mul(0x9E37_79B9_7F4A_7C15)) % 3)
+    }
+
+    /// Restarts any single worker needs to absorb its share of the
+    /// schedule (the chaos test sizes `restart_max` from this).
+    pub fn max_kills_per_worker(&self) -> u64 {
+        self.kills.div_ceil(self.workers)
+    }
+}
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    fn retries(max: u32, backoff_ms: u64) -> RestartPolicy {
+        RestartPolicy::BoundedRetries {
+            max,
+            backoff: Duration::from_millis(backoff_ms),
+        }
+    }
+
+    #[test]
+    fn backoff_schedule_doubles_and_exhausts() {
+        let p = retries(3, 10);
+        assert_eq!(p.backoff_for(0), Some(Duration::from_millis(10)));
+        assert_eq!(p.backoff_for(1), Some(Duration::from_millis(20)));
+        assert_eq!(p.backoff_for(2), Some(Duration::from_millis(40)));
+        assert_eq!(p.backoff_for(3), None, "budget of 3 restarts is spent");
+        assert_eq!(RestartPolicy::Never.backoff_for(0), None);
+        // the shift cap keeps huge attempt numbers from overflowing
+        let far = retries(u32::MAX, 10).backoff_for(1000).unwrap();
+        assert_eq!(far, Duration::from_millis(10) * (1 << 16));
+    }
+
+    #[test]
+    fn never_policy_escalates_first_failure() {
+        let mut calls = 0;
+        let r: Result<Supervised<()>> = supervise(
+            RestartPolicy::Never,
+            || false,
+            |_, _, _| panic!("must not restart"),
+            |_| {
+                calls += 1;
+                Err(Error::msg("boom"))
+            },
+        );
+        assert!(r.is_err());
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn bounded_retries_recover_then_exhaust() {
+        // fails twice, then succeeds — within a budget of 2
+        let mut restarts = Vec::new();
+        let r = supervise(
+            retries(2, 1),
+            || false,
+            |n, d, _| restarts.push((n, d)),
+            |n| {
+                if n < 2 {
+                    Err(Error::msg("flaky"))
+                } else {
+                    Ok(n)
+                }
+            },
+        )
+        .unwrap();
+        assert!(matches!(r, Supervised::Done(2)));
+        assert_eq!(restarts.len(), 2);
+        assert!(restarts[1].1 > restarts[0].1, "backoff grows");
+
+        // always fails — budget of 2 means exactly 3 attempts then Err
+        let mut attempts = 0;
+        let r: Result<Supervised<()>> = supervise(
+            retries(2, 1),
+            || false,
+            |_, _, _| {},
+            |_| {
+                attempts += 1;
+                Err(Error::msg("dead"))
+            },
+        );
+        assert!(r.is_err());
+        assert_eq!(attempts, 3);
+    }
+
+    #[test]
+    fn panics_restart_like_errors() {
+        let r = supervise(
+            retries(1, 1),
+            || false,
+            |_, _, _| {},
+            |n| {
+                if n == 0 {
+                    panic!("worker crashed hard");
+                }
+                Ok("recovered")
+            },
+        )
+        .unwrap();
+        assert!(matches!(r, Supervised::Done("recovered")));
+    }
+
+    #[test]
+    fn global_stop_interrupts_backoff() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = stop.clone();
+        let t0 = Instant::now();
+        let r: Result<Supervised<()>> = supervise(
+            retries(1, 60_000), // a minute of backoff — must not be slept
+            move || stop.load(Ordering::Relaxed),
+            move |_, _, _| s2.store(true, Ordering::Relaxed),
+            |_| Err(Error::msg("died during shutdown")),
+        );
+        assert!(matches!(r, Ok(Supervised::Stopped)));
+        assert!(t0.elapsed() < Duration::from_secs(10), "stop must cut the sleep short");
+    }
+
+    #[test]
+    fn chaos_schedule_is_seeded_and_round_robin() {
+        assert!(ChaosSchedule::new(7, 0, 4).is_none(), "no kills, no schedule");
+        let s = ChaosSchedule::new(42, 5, 3).unwrap();
+        let t = ChaosSchedule::new(42, 5, 3).unwrap();
+        let mut scheduled = 0;
+        for w in 0..3 {
+            for a in 0..4u32 {
+                assert_eq!(s.kill_after(w, a), t.kill_after(w, a), "same seed, same schedule");
+                if let Some(k) = s.kill_after(w, a) {
+                    scheduled += 1;
+                    assert!((1..=3).contains(&k));
+                }
+            }
+        }
+        assert_eq!(scheduled, 5, "every scheduled kill lands exactly once");
+        // round-robin: 5 kills over 3 workers = attempts (2,2,1)
+        assert!(s.kill_after(0, 0).is_some() && s.kill_after(0, 1).is_some());
+        assert!(s.kill_after(2, 1).is_none());
+        assert_eq!(s.max_kills_per_worker(), 2);
+        // attempts past the schedule run clean — the fleet converges
+        for w in 0..3 {
+            assert!(s.kill_after(w, 9).is_none());
+        }
+    }
+}

@@ -9,6 +9,7 @@
 //! `trainer_sample_wait_secs` — the two quantities the old async and
 //! buffered drivers used to cram into one name.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::channel::ChannelStats;
@@ -38,12 +39,36 @@ impl RewardTally {
     }
 }
 
+/// Live elastic-fleet counters, shared between the supervisors, the
+/// fleet controller, the live sampler and the final report. Written from
+/// node threads as churn happens, so the `--metrics-interval` series
+/// shows restarts while the run is still going.
+#[derive(Debug, Default)]
+pub struct ElasticStats {
+    /// supervised replica restarts (error or panic, within budget)
+    pub restarts: AtomicU64,
+    /// partial rollouts parked by dying replicas for survivors to resume
+    pub partials_migrated: AtomicU64,
+    /// dynamic generator replicas spawned by the fleet controller
+    pub scale_ups: AtomicU64,
+    /// dynamic generator replicas retired by the fleet controller
+    pub scale_downs: AtomicU64,
+}
+
+impl ElasticStats {
+    pub fn note_restart(&self, migrated: u64) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+        self.partials_migrated.fetch_add(migrated, Ordering::Relaxed);
+    }
+}
+
 /// Collects per-node tallies while a graph runs; one per launch.
 pub struct TelemetryHub {
     mode_name: &'static str,
     gen_stats: Arc<ChannelStats>,
     scored_stats: Option<Arc<ChannelStats>>,
     store: Option<Arc<RolloutStore>>,
+    elastic: Arc<ElasticStats>,
     gen: GenTally,
     reward: RewardTally,
     evals: Vec<EvalResult>,
@@ -61,10 +86,17 @@ impl TelemetryHub {
             gen_stats,
             scored_stats,
             store,
+            elastic: Arc::new(ElasticStats::default()),
             gen: GenTally::default(),
             reward: RewardTally::default(),
             evals: Vec::new(),
         }
+    }
+
+    /// The shared elastic-fleet counter block (supervisors and the fleet
+    /// controller hold clones of this handle).
+    pub fn elastic(&self) -> Arc<ElasticStats> {
+        self.elastic.clone()
     }
 
     pub fn add_generator(&mut self, tally: &GenTally) {
@@ -84,11 +116,11 @@ impl TelemetryHub {
     /// JSONL object per tick — the same counters [`TelemetryHub::finish`]
     /// aggregates at run end, observable while the run is still going.
     pub fn live_sampler(&self, ctx: Arc<ExecutorContext>) -> impl Fn() -> Value + Send + 'static {
-        use std::sync::atomic::Ordering;
         let mode = self.mode_name;
         let gen_stats = self.gen_stats.clone();
         let scored_stats = self.scored_stats.clone();
         let store = self.store.clone();
+        let elastic = self.elastic.clone();
         move || {
             let mut pairs = vec![
                 ("mode", Value::str(mode)),
@@ -157,6 +189,22 @@ impl TelemetryHub {
                 ));
             }
             pairs.push((
+                "node_restarts",
+                Value::num(elastic.restarts.load(Ordering::Relaxed) as f64),
+            ));
+            pairs.push((
+                "partials_migrated",
+                Value::num(elastic.partials_migrated.load(Ordering::Relaxed) as f64),
+            ));
+            pairs.push((
+                "fleet_scale_ups",
+                Value::num(elastic.scale_ups.load(Ordering::Relaxed) as f64),
+            ));
+            pairs.push((
+                "fleet_scale_downs",
+                Value::num(elastic.scale_downs.load(Ordering::Relaxed) as f64),
+            ));
+            pairs.push((
                 "trace_dropped_events",
                 Value::num(crate::trace::dropped_events() as f64),
             ));
@@ -201,6 +249,10 @@ impl TelemetryHub {
             gen_send_blocked_secs: self.gen_stats.send_blocked_secs(),
             trainer_recv_blocked_secs: recv_blocked,
             trainer_sample_wait_secs: sample_wait,
+            node_restarts: self.elastic.restarts.load(Ordering::Relaxed),
+            partials_migrated: self.elastic.partials_migrated.load(Ordering::Relaxed),
+            fleet_scale_ups: self.elastic.scale_ups.load(Ordering::Relaxed),
+            fleet_scale_downs: self.elastic.scale_downs.load(Ordering::Relaxed),
             dataplane,
             metrics_path: None,
             ..RunReport::default()

@@ -10,6 +10,8 @@
 //! engine: it is the same graph with step-sized channel capacities, driven
 //! by the stepped scheduler instead of free-running threads.
 
+use std::time::Duration;
+
 use crate::coordinator::controller::{Mode, PipelineConfig};
 use crate::memplane::plan::Phase;
 use crate::runtime::Manifest;
@@ -56,6 +58,43 @@ pub enum LeasePolicy {
     PerStep(Phase),
 }
 
+/// What the supervisor does when a replica of this fleet dies (error or
+/// panic). `Never` preserves the pre-elastic behavior: the first failure
+/// lands in the global `FailState` and stops the world. `BoundedRetries`
+/// keeps the death local to the supervisor — the replica's partial
+/// rollouts are parked for a survivor, the thread backs off
+/// (exponentially, doubling per attempt) and respawns a fresh worker that
+/// re-seeds weights from the bus front; only exhausting `max` attempts
+/// escalates to the global stop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RestartPolicy {
+    Never,
+    BoundedRetries { max: u32, backoff: Duration },
+}
+
+impl RestartPolicy {
+    /// The backoff to sleep before restart attempt `attempt` (0-based:
+    /// the first restart is attempt 0), or `None` when the policy says
+    /// the failure must escalate instead. Exponential: `backoff << attempt`,
+    /// with the shift capped so the duration arithmetic can't overflow.
+    pub fn backoff_for(&self, attempt: u32) -> Option<Duration> {
+        match self {
+            RestartPolicy::Never => None,
+            RestartPolicy::BoundedRetries { max, backoff } => {
+                (attempt < *max).then(|| *backoff * 2u32.saturating_pow(attempt.min(16)))
+            }
+        }
+    }
+
+    /// Total restarts the policy allows (0 for `Never`).
+    pub fn max_restarts(&self) -> u32 {
+        match self {
+            RestartPolicy::Never => 0,
+            RestartPolicy::BoundedRetries { max, .. } => *max,
+        }
+    }
+}
+
 /// One executor fleet in the topology.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeSpec {
@@ -66,6 +105,8 @@ pub struct NodeSpec {
     /// register a double-buffered weight-sync [`crate::weightsync::GeneratorSlot`]
     /// per replica (async modes: publishes stream in behind decode)
     pub sync_slot: bool,
+    /// per-replica supervision on failure (see [`RestartPolicy`])
+    pub restart: RestartPolicy,
 }
 
 /// The transport an edge runs on.
@@ -116,17 +157,30 @@ pub fn topology(cfg: &PipelineConfig, manifest: &Manifest) -> Graph {
 /// and `--dump-graph` describe a topology without loading artifacts).
 pub fn topology_with_rows(cfg: &PipelineConfig, rows_per_step: usize) -> Graph {
     let n_reward = cfg.n_reward_workers.max(1);
+    // the generator/reward fleets are restartable when configured; the
+    // trainer (single replica, owns the optimizer clock) and evaluator
+    // never are — their failure is always a global stop
+    let fleet_restart = if cfg.restart_max > 0 {
+        RestartPolicy::BoundedRetries {
+            max: cfg.restart_max,
+            backoff: Duration::from_millis(cfg.restart_backoff_ms.max(1)),
+        }
+    } else {
+        RestartPolicy::Never
+    };
     let evaluator = NodeSpec {
         kind: NodeKind::Evaluator,
         replicas: usize::from(cfg.eval_every > 0),
         lease: LeasePolicy::None,
         sync_slot: false,
+        restart: RestartPolicy::Never,
     };
     let trainer = NodeSpec {
         kind: NodeKind::Trainer,
         replicas: 1,
         lease: LeasePolicy::None, // brackets its own Train/Sync leases per step
         sync_slot: false,
+        restart: RestartPolicy::Never,
     };
     match cfg.mode {
         Mode::Sync => {
@@ -142,12 +196,15 @@ pub fn topology_with_rows(cfg: &PipelineConfig, rows_per_step: usize) -> Graph {
                         replicas: 1,
                         lease: LeasePolicy::PerStep(Phase::Generate),
                         sync_slot: false, // re-attaches to the DDMA master directly
+                        // the stepped scheduler has no supervisor thread
+                        restart: RestartPolicy::Never,
                     },
                     NodeSpec {
                         kind: NodeKind::Reward,
                         replicas: n_reward,
                         lease: LeasePolicy::None,
                         sync_slot: false,
+                        restart: RestartPolicy::Never,
                     },
                     trainer,
                     evaluator,
@@ -179,12 +236,14 @@ pub fn topology_with_rows(cfg: &PipelineConfig, rows_per_step: usize) -> Graph {
                         replicas: cfg.n_generator_workers.max(1),
                         lease: LeasePolicy::Lifetime(Phase::Generate),
                         sync_slot: true,
+                        restart: fleet_restart,
                     },
                     NodeSpec {
                         kind: NodeKind::Reward,
                         replicas: n_reward,
                         lease: LeasePolicy::None,
                         sync_slot: false,
+                        restart: fleet_restart,
                     },
                     trainer,
                     evaluator,
@@ -272,6 +331,27 @@ impl Graph {
                 return fail("the stepped scheduler requires a channel scored edge".into());
             }
         }
+        for n in &self.nodes {
+            if n.restart == RestartPolicy::Never {
+                continue;
+            }
+            // the supervisor layer exists only around fleet worker
+            // threads; the trainer IS the controller thread and the
+            // stepped scheduler runs every node inline
+            if matches!(n.kind, NodeKind::Trainer | NodeKind::Evaluator) {
+                return fail(format!(
+                    "{} nodes cannot be restartable (no supervisor wraps them)",
+                    n.kind.label()
+                ));
+            }
+            if self.stepped {
+                return fail(
+                    "restart policies require free-running threads; the stepped \
+                     scheduler has no supervisor"
+                        .into(),
+                );
+            }
+        }
         for e in &self.edges {
             if self.node(e.from).is_none() || self.node(e.to).is_none() {
                 return fail(format!("edge '{}' references a missing node", e.name));
@@ -324,6 +404,12 @@ impl Graph {
                 LeasePolicy::PerStep(p) => format!("\\nlease: {p:?} (per step)"),
             };
             let slot = if n.sync_slot { "\\nweight-sync slot" } else { "" };
+            let restart = match n.restart {
+                RestartPolicy::Never => String::new(),
+                RestartPolicy::BoundedRetries { max, backoff } => {
+                    format!("\\nrestart: <= {max}x, backoff {}ms", backoff.as_millis())
+                }
+            };
             // replicated nodes run one named thread per replica; single
             // nodes one thread. The same names are the telemetry/trace
             // track identities, so a dumped graph maps 1:1 onto the
@@ -338,13 +424,14 @@ impl Graph {
                 ),
             };
             out.push_str(&format!(
-                "  {} [label=\"{} x{}{}{}{}\"];\n",
+                "  {} [label=\"{} x{}{}{}{}{}\"];\n",
                 n.kind.label(),
                 n.kind.label(),
                 n.replicas,
                 tracks,
                 lease,
-                slot
+                slot,
+                restart
             ));
         }
         for e in &self.edges {

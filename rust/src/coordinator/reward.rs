@@ -143,6 +143,29 @@ impl RewardExecutor {
         Ok(())
     }
 
+    /// Decompose a dead executor into what a supervised replacement needs:
+    /// the inbound queue (an mpsc receiver — not cloneable, so it must be
+    /// recovered, not copied), the EOFs already counted, and any buffered
+    /// incomplete groups. The rows were already scored (reward set, tallies
+    /// counted), so the replacement re-adopts them via [`Self::adopt`]
+    /// rather than re-ingesting.
+    pub(crate) fn salvage(self) -> (Inbound, usize, Vec<Trajectory>) {
+        let buffered = self.groups.into_values().flatten().collect();
+        (self.inbound, self.eofs_seen, buffered)
+    }
+
+    /// Restore salvaged state from a previous attempt. Buffered rows slot
+    /// straight into the group map (already scored — see [`Self::salvage`]);
+    /// a group completed by later arrivals emits through the normal ingest
+    /// path. Incomplete groups can never be complete here: completion
+    /// removes them from the map before any salvage.
+    pub(crate) fn adopt(&mut self, eofs_seen: usize, buffered: Vec<Trajectory>) {
+        self.eofs_seen = self.eofs_seen.max(eofs_seen);
+        for t in buffered {
+            self.groups.entry(t.group_id).or_default().push(t);
+        }
+    }
+
     /// Non-blocking ingestion of one pending message; used by the sync
     /// baseline driver. Returns true if a message was processed.
     pub fn drain_once(&mut self) -> Result<bool> {

@@ -54,10 +54,33 @@ pub enum JournalRecord {
     },
     /// Graph node lifecycle ("start" / "stop").
     Node { name: String, state: String },
+    /// A supervised fleet replica restarted under its node's
+    /// `RestartPolicy` instead of stopping the world.
+    NodeRestart {
+        node: String,
+        /// 1-based restart ordinal for this replica
+        attempt: u64,
+        backoff_ms: u64,
+        /// partial rollouts the dying attempt parked for survivors
+        migrated: u64,
+        error: String,
+    },
+    /// The elastic fleet controller resized a node's replica set.
+    FleetResize {
+        node: String,
+        from: u64,
+        to: u64,
+        reason: String,
+    },
     /// Periodic consistent snapshot of the durable run state.
     Snapshot(SnapshotRecord),
     /// Clean end of run. A journal without one was killed mid-flight.
     Finish { steps: u64, trajectories: u64 },
+    /// A record kind this build does not recognize (a journal written by a
+    /// newer build). Decode keeps the tag and drops the payload: readers
+    /// pass it through, `journal --stats` counts it, resume skips it —
+    /// forward tolerance instead of a hard decode error.
+    Unknown { kind: String },
 }
 
 /// The payload of a [`JournalRecord::Snapshot`]: everything `resume` needs
@@ -100,17 +123,23 @@ impl JournalRecord {
             JournalRecord::Step { .. } => "step",
             JournalRecord::Tick { .. } => "tick",
             JournalRecord::Node { .. } => "node",
+            JournalRecord::NodeRestart { .. } => "node_restart",
+            JournalRecord::FleetResize { .. } => "fleet_resize",
             JournalRecord::Snapshot(_) => "snapshot",
             JournalRecord::Finish { .. } => "finish",
+            JournalRecord::Unknown { .. } => "unknown",
         }
     }
 
     /// Wire form for journal seq `seq`.
     pub fn to_value(&self, seq: u64) -> Value {
-        let mut pairs: Vec<(&str, Value)> = vec![
-            ("seq", Value::num(seq as f64)),
-            ("kind", Value::str(self.kind())),
-        ];
+        // an Unknown record re-serializes under its ORIGINAL tag (payload
+        // already dropped at decode), so copying a journal keeps the kind
+        let kind = match self {
+            JournalRecord::Unknown { kind } => Value::str(kind.clone()),
+            _ => Value::str(self.kind()),
+        };
+        let mut pairs: Vec<(&str, Value)> = vec![("seq", Value::num(seq as f64)), ("kind", kind)];
         match self {
             JournalRecord::Meta { config } => pairs.push(("config", config.clone())),
             JournalRecord::Event {
@@ -155,6 +184,31 @@ impl JournalRecord {
                 pairs.push(("name", Value::str(name.clone())));
                 pairs.push(("state", Value::str(state.clone())));
             }
+            JournalRecord::NodeRestart {
+                node,
+                attempt,
+                backoff_ms,
+                migrated,
+                error,
+            } => {
+                pairs.push(("node", Value::str(node.clone())));
+                pairs.push(("attempt", Value::num(*attempt as f64)));
+                pairs.push(("backoff_ms", Value::num(*backoff_ms as f64)));
+                pairs.push(("migrated", Value::num(*migrated as f64)));
+                pairs.push(("error", Value::str(error.clone())));
+            }
+            JournalRecord::FleetResize {
+                node,
+                from,
+                to,
+                reason,
+            } => {
+                pairs.push(("node", Value::str(node.clone())));
+                pairs.push(("from", Value::num(*from as f64)));
+                pairs.push(("to", Value::num(*to as f64)));
+                pairs.push(("reason", Value::str(reason.clone())));
+            }
+            JournalRecord::Unknown { .. } => {}
             JournalRecord::Snapshot(s) => {
                 pairs.push(("trainer_step", Value::num(s.trainer_step as f64)));
                 pairs.push(("bus_version", Value::num(s.bus_version as f64)));
@@ -246,6 +300,19 @@ impl JournalRecord {
                 name: v.req_str("name")?.to_string(),
                 state: v.req_str("state")?.to_string(),
             },
+            "node_restart" => JournalRecord::NodeRestart {
+                node: v.req_str("node")?.to_string(),
+                attempt: v.req_f64("attempt")? as u64,
+                backoff_ms: v.req_f64("backoff_ms")? as u64,
+                migrated: v.req_f64("migrated")? as u64,
+                error: v.req_str("error")?.to_string(),
+            },
+            "fleet_resize" => JournalRecord::FleetResize {
+                node: v.req_str("node")?.to_string(),
+                from: v.req_f64("from")? as u64,
+                to: v.req_f64("to")? as u64,
+                reason: v.req_str("reason")?.to_string(),
+            },
             "snapshot" => {
                 let store = match v.req("store")? {
                     Value::Null => None,
@@ -286,7 +353,13 @@ impl JournalRecord {
                 steps: v.req_f64("steps")? as u64,
                 trajectories: v.req_f64("trajectories")? as u64,
             },
-            other => return Err(bad(&format!("unknown record kind '{other}'"))),
+            // forward tolerance: a kind from a newer build decodes as a
+            // skippable marker instead of poisoning the whole read (the
+            // reader still treats MALFORMED lines as corruption — only a
+            // well-formed object with an unrecognized tag lands here)
+            other => JournalRecord::Unknown {
+                kind: other.to_string(),
+            },
         };
         Ok((seq, rec))
     }

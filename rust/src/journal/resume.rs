@@ -119,7 +119,14 @@ pub fn plan_resume(journal_path: impl AsRef<Path>) -> Result<ResumePlan> {
                 chunks,
             } => last_tick = Some((step, tokens, trajectories, chunks)),
             JournalRecord::Finish { .. } => finished = true,
-            JournalRecord::Event { .. } | JournalRecord::Node { .. } => {}
+            // elastic-fleet churn records and forward-compat unknowns carry
+            // no durable state — the resumed cut is the same with or
+            // without the restarts that happened along the way
+            JournalRecord::Event { .. }
+            | JournalRecord::Node { .. }
+            | JournalRecord::NodeRestart { .. }
+            | JournalRecord::FleetResize { .. }
+            | JournalRecord::Unknown { .. } => {}
         }
     }
     let config = config.ok_or_else(|| {

@@ -46,6 +46,7 @@ const BOOL_FLAGS: &[&str] = &[
     "offload-eager",
     "dump-graph",
     "no-journal",
+    "elastic-resize",
     "stats",
     "help",
 ];
@@ -129,6 +130,14 @@ USAGE: llamarl <subcommand> [flags]
             durable journal: on by default, streams OUT/journal.jsonl
             [--no-journal] [--journal-snapshot-secs SECS (consistent-cut
              snapshot cadence, default 0.25)]
+            elastic fleets: [--restart-max N (per-replica restart budget;
+             0 = any failure stops the world)] [--restart-backoff-ms MS
+             (base of the exponential backoff, default 50)]
+            [--chaos-kills N --chaos-seed S (seeded kill schedule spread
+             round-robin over the generator fleet; CI chaos arm)]
+            [--elastic-resize (queue-depth-driven dynamic generator
+             replicas)] [--resize-max-extra N (dynamic replica cap,
+             default 2)]
   pretrain  --artifacts DIR --steps N --lr X --out DIR
             supervised warm-up producing the RL init checkpoint
   simulate  reproduce Table 3 from the calibrated cluster cost model
@@ -476,11 +485,24 @@ fn cmd_journal(args: &Args) -> Result<()> {
     let mut kept: VecDeque<String> = VecDeque::new();
     let mut last_seq = 0u64;
     let mut total = 0u64;
+    let mut trained_rows = 0u64;
+    let mut unknown = 0u64;
     while let Some(item) = reader.next_record() {
         let (seq, rec) = item?;
         total += 1;
         last_seq = last_seq.max(seq);
         *counts.entry(rec.kind()).or_insert(0) += 1;
+        match &rec {
+            // trained rows is the churn-independent progress measure the
+            // chaos CI arm compares across runs (steps x train_batch)
+            llamarl::journal::JournalRecord::Step { record } => {
+                trained_rows += record.rows as u64;
+            }
+            // forward tolerance: kinds from newer builds are counted and
+            // skipped, never a decode error
+            llamarl::journal::JournalRecord::Unknown { .. } => unknown += 1,
+            _ => {}
+        }
         let wanted = filter.as_deref().map(|f| f == rec.kind()).unwrap_or(true);
         if tail > 0 && wanted {
             kept.push_back(rec.to_value(seq).to_string());
@@ -497,15 +519,19 @@ fn cmd_journal(args: &Args) -> Result<()> {
         let finished = counts.contains_key("finish");
         let kinds: Vec<String> = counts.iter().map(|(k, n)| format!("{k}:{n}")).collect();
         println!(
-            "{}: {} records (last seq {}), {} steps, finished: {}, torn tail: {}",
+            "{}: {} records (last seq {}), {} steps, {} trained rows, finished: {}, torn tail: {}",
             path.display(),
             total,
             last_seq,
             steps,
+            trained_rows,
             finished,
             reader.truncated_tail()
         );
         println!("kinds: {}", kinds.join(" "));
+        if unknown > 0 {
+            println!("skipped {unknown} records of unknown kind (newer-build journal)");
+        }
     }
     Ok(())
 }

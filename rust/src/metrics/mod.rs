@@ -63,6 +63,14 @@ pub fn print_report(r: &RunReport) {
             r.offload_superseded
         );
     }
+    // elastic churn: only worth a line when the fleet actually churned
+    if r.node_restarts + r.fleet_scale_ups + r.fleet_scale_downs > 0 {
+        println!(
+            "elastic fleet: {} node restarts ({} partials migrated), \
+             {} scale-ups, {} scale-downs",
+            r.node_restarts, r.partials_migrated, r.fleet_scale_ups, r.fleet_scale_downs
+        );
+    }
     if let Some(dp) = &r.dataplane {
         println!("{}", dp.summary());
         let hist: Vec<String> = dp
@@ -162,6 +170,10 @@ pub fn report_json(r: &RunReport) -> Value {
             "reward_rows_scored",
             Value::num(r.reward_rows_scored as f64),
         ),
+        ("node_restarts", Value::num(r.node_restarts as f64)),
+        ("partials_migrated", Value::num(r.partials_migrated as f64)),
+        ("fleet_scale_ups", Value::num(r.fleet_scale_ups as f64)),
+        ("fleet_scale_downs", Value::num(r.fleet_scale_downs as f64)),
         (
             "offload_d2h_bytes",
             Value::num(r.offload_d2h_bytes as f64),

@@ -133,7 +133,7 @@ fn any_snapshot(g: &mut Gen) -> SnapshotRecord {
 }
 
 fn any_record(g: &mut Gen) -> JournalRecord {
-    match g.usize(0, 9) {
+    match g.usize(0, 11) {
         0 => JournalRecord::Meta {
             config: Value::object(vec![
                 ("mode", Value::str("sync")),
@@ -176,6 +176,23 @@ fn any_record(g: &mut Gen) -> JournalRecord {
             state: if g.bool() { "start" } else { "stop" }.to_string(),
         },
         8 => JournalRecord::Snapshot(any_snapshot(g)),
+        9 => JournalRecord::NodeRestart {
+            node: format!("generator-{}", g.usize(0, 3)),
+            attempt: g.i64(1, 5) as u64,
+            backoff_ms: g.i64(1, 500) as u64,
+            migrated: g.i64(0, 8) as u64,
+            error: (*g.choice(&[
+                "injected failure after 2 chunks",
+                "reward executor panicked",
+            ]))
+            .to_string(),
+        },
+        10 => JournalRecord::FleetResize {
+            node: "generator".to_string(),
+            from: g.i64(1, 4) as u64,
+            to: g.i64(1, 6) as u64,
+            reason: if g.bool() { "queue low" } else { "queue drained" }.to_string(),
+        },
         _ => JournalRecord::Finish {
             steps: g.i64(0, 50) as u64,
             trajectories: g.i64(0, 500) as u64,
@@ -575,6 +592,129 @@ fn plan_resume_requires_a_meta_record() {
     .to_string();
     std::fs::write(&path, format!("{line}\n")).unwrap();
     assert!(plan_resume(&path).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Forward tolerance: well-formed records with a kind this build does not
+// know (a journal written by a newer build) must decode as skippable
+// markers, not poison the read — and resume must ignore them entirely
+
+#[test]
+fn unknown_kind_decodes_as_a_skippable_marker_and_keeps_its_tag() {
+    let line = r#"{"seq":5,"kind":"quantum_checkpoint","payload":[1,2,3]}"#;
+    let v = Value::parse(line).unwrap();
+    let (seq, rec) = JournalRecord::from_value(&v)
+        .expect("an unrecognized kind must not be a decode error");
+    assert_eq!(seq, 5);
+    assert_eq!(rec.kind(), "unknown");
+    // the payload is dropped but the ORIGINAL tag survives a re-write, so
+    // copying a journal through this build does not relabel newer records
+    let rewritten = rec.to_value(5).to_string();
+    assert!(
+        rewritten.contains(r#""kind":"quantum_checkpoint""#),
+        "re-serialized form lost the original tag: {rewritten}"
+    );
+    let (_, again) = JournalRecord::from_value(&Value::parse(&rewritten).unwrap()).unwrap();
+    assert_eq!(again.kind(), "unknown");
+    // malformed lines are still corruption — tolerance is for the TAG,
+    // not for broken JSON
+    assert!(Value::parse("{torn garbage").is_err());
+}
+
+#[test]
+fn reader_streams_past_unknown_kinds() {
+    let path = tmp("unknown_kinds.jsonl");
+    let mint = JournalRecord::Mint {
+        version: 3,
+        publisher: 0,
+    }
+    .to_value(0)
+    .to_string();
+    std::fs::write(
+        &path,
+        format!("{mint}\n{{\"seq\":1,\"kind\":\"hologram\",\"x\":9}}\n"),
+    )
+    .unwrap();
+    let recs: Vec<_> = JournalReader::open(&path)
+        .unwrap()
+        .map(|r| r.expect("unknown kinds must stream, not error"))
+        .collect();
+    assert_eq!(recs.len(), 2);
+    assert_eq!(recs[1].1.kind(), "unknown");
+}
+
+#[test]
+fn plan_resume_ignores_restart_resize_and_unknown_records() {
+    // two journals that differ only by churn + unknown records must plan
+    // to the identical resume state
+    let core = vec![
+        JournalRecord::Meta {
+            config: Value::object(vec![("mode", Value::str("async_buffered"))]),
+        },
+        JournalRecord::Admit {
+            rows: vec![(0, traj_fixed(0)), (1, traj_fixed(1))],
+        },
+        JournalRecord::Mint {
+            version: 1,
+            publisher: 0,
+        },
+        JournalRecord::Step {
+            record: TrainStepRecord {
+                step: 1,
+                ..TrainStepRecord::default()
+            },
+        },
+    ];
+    let churn = vec![
+        JournalRecord::NodeRestart {
+            node: "generator-0".into(),
+            attempt: 1,
+            backoff_ms: 50,
+            migrated: 2,
+            error: "injected failure after 1 chunks".into(),
+        },
+        JournalRecord::FleetResize {
+            node: "generator".into(),
+            from: 2,
+            to: 3,
+            reason: "queue low".into(),
+        },
+        JournalRecord::Unknown {
+            kind: "from_the_future".into(),
+        },
+    ];
+
+    let plain = tmp("resume_no_churn.jsonl");
+    let mut text = String::new();
+    for (i, r) in core.iter().enumerate() {
+        text.push_str(&r.to_value(i as u64).to_string());
+        text.push('\n');
+    }
+    std::fs::write(&plain, &text).unwrap();
+
+    let churned = tmp("resume_with_churn.jsonl");
+    let mut text = String::new();
+    let mut seq = 0u64;
+    for r in core.iter().take(2).chain(&churn).chain(core.iter().skip(2)) {
+        text.push_str(&r.to_value(seq).to_string());
+        text.push('\n');
+        seq += 1;
+    }
+    std::fs::write(&churned, &text).unwrap();
+
+    let a = plan_resume(&plain).unwrap().state;
+    let b = plan_resume(&churned).unwrap().state;
+    assert_eq!(a.start_step, b.start_step);
+    assert_eq!(a.bus_version, b.bus_version);
+    assert_eq!(a.prior.records.len(), b.prior.records.len());
+    let rows = |st: &Option<StoreSnapshot>| -> Vec<u64> {
+        st.as_ref()
+            .map(|s| s.rows.iter().map(|(q, _)| *q).collect())
+            .unwrap_or_default()
+    };
+    assert_eq!(rows(&a.store), rows(&b.store), "churn must not change the cut");
+    // the churned journal is longer, so only next_seq may differ
+    assert_eq!(b.next_seq, a.next_seq + churn.len() as u64);
 }
 
 // ---------------------------------------------------------------------------

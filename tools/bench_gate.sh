@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
-# Bench-regression gate for the weight-sync plane and the offloading
-# memory plane.
+# Bench-regression gate for the weight-sync plane, the offloading memory
+# plane, and the elastic-fleet recovery path.
 #
 # Compares the freshly-measured target/BENCH_weightsync.json (written by
 # `cargo bench --bench weightsync_overlap`) against the committed baseline
@@ -26,6 +26,13 @@
 # raise capacity errors, shard integrity holds, colocated arms move the
 # full offload volume) plus the prefetch_hidden_frac ratio with an
 # absolute 0.7 floor.
+#
+# When the committed BENCH_elastic.json baseline exists, the elastic
+# recovery summary (target/BENCH_elastic.json, written by `cargo bench
+# --bench elastic_recovery`) is gated too: shape checks (the supervisor
+# absorbs the whole seeded kill schedule without a global stop, every
+# parked partial is resumed, both arms reach the row quota) plus the
+# throughput-retained and recovery-speed ratios.
 #
 # Usage: tools/bench_gate.sh [current.json] [baseline.json]
 # Env:   BENCH_GATE_TOL=0.20   fractional allowed regression on ratios
@@ -127,6 +134,36 @@ cargo bench --bench offload_overlap first)"
     fi
 else
     echo "bench_gate: note — $OFF_BASE baseline not committed yet; offload \
+gate skipped"
+fi
+
+# --- elastic recovery bench (gated once its baseline is committed) ---
+ELA_CUR="${BENCH_ELASTIC_CUR:-target/BENCH_elastic.json}"
+ELA_BASE="${BENCH_ELASTIC_BASE:-BENCH_elastic.json}"
+if [ -f "$ELA_BASE" ]; then
+    if [ ! -f "$ELA_CUR" ]; then
+        echo "bench_gate: FAIL — elastic summary $ELA_CUR missing (run \
+cargo bench --bench elastic_recovery first)"
+        fail=1
+    else
+        echo "== bench_gate: $ELA_CUR vs $ELA_BASE (tol ${TOL}) =="
+        CUR="$ELA_CUR"
+        BASE="$ELA_BASE"
+        # shape: the supervisor absorbs the whole kill schedule (no
+        # escalation to a global stop), every scheduled kill restarts,
+        # every parked partial is resumed, and both arms hit their quota
+        require_true no_global_stop
+        require_true restarts_complete
+        require_true partials_migrated_ok
+        require_true rows_complete
+        # ratios (greater is better, conservative committed baselines):
+        # fraction of clean throughput retained under churn, and inverse
+        # mean kill->first-row recovery time
+        require_ratio throughput_retained_frac 0.1
+        require_ratio recovery_speed
+    fi
+else
+    echo "bench_gate: note — $ELA_BASE baseline not committed yet; elastic \
 gate skipped"
 fi
 
