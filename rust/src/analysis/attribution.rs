@@ -1,0 +1,163 @@
+//! Blocked-time attribution: classify every track's wall clock into
+//! compute / channel-blocked / sync-blocked / offload-wait / idle.
+//!
+//! The recorder's RAII guards mean spans on one track nest properly, so
+//! the innermost-wins rule is exact: each span's *self time* (duration
+//! minus its children's durations) is charged to the class of its own
+//! name. `send_blocked` inside `gen_chunk` charges the blocked window to
+//! the channel and only the remainder to compute — no interval store, no
+//! double counting, one O(n log n) sweep per track. Idle is the part of
+//! the run window outside any top-level span. Fractions are of the
+//! run-wide window `[t_min, t_max]`, so per-track busy fractions sum to
+//! at most 1 by construction (top-level spans on a track are disjoint).
+
+use std::collections::BTreeMap;
+
+use crate::analysis::ingest::ClosedSpan;
+use crate::trace;
+use crate::util::json::Value;
+
+/// Where a span's self time goes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeClass {
+    /// useful work (generation, scoring, training, streaming transfers)
+    Compute,
+    /// blocked on channel/store backpressure or starvation
+    Channel,
+    /// blocked on the weight-sync plane (inline publish, fenced reload)
+    Sync,
+    /// blocked on memplane residency (lease holder waiting on a transfer)
+    Offload,
+}
+
+/// Classification by span name: the blocked vocabulary is closed (each
+/// name documents the one resource being waited on — see the schema
+/// table in [`crate::trace`]); everything else is work.
+pub fn classify(name: &str) -> TimeClass {
+    match name {
+        trace::SEND_BLOCKED | trace::RECV_BLOCKED | trace::STORE_SAMPLE => TimeClass::Channel,
+        trace::PUBLISH_BLOCK | trace::WEIGHT_SYNC => TimeClass::Sync,
+        trace::OFFLOAD_WAIT => TimeClass::Offload,
+        _ => TimeClass::Compute,
+    }
+}
+
+/// One track's wall-clock breakdown over the run window.
+#[derive(Debug, Clone, Default)]
+pub struct TrackAttribution {
+    pub track: String,
+    pub window_secs: f64,
+    pub compute_secs: f64,
+    pub channel_secs: f64,
+    pub sync_secs: f64,
+    pub offload_secs: f64,
+    /// union of top-level spans (== sum of the four classes up to float
+    /// rounding)
+    pub busy_secs: f64,
+    pub idle_secs: f64,
+}
+
+impl TrackAttribution {
+    pub fn busy_frac(&self) -> f64 {
+        frac(self.busy_secs, self.window_secs)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("track", Value::str(self.track.clone())),
+            ("window_secs", Value::num(self.window_secs)),
+            ("busy_frac", Value::num(self.busy_frac())),
+            ("compute_frac", Value::num(frac(self.compute_secs, self.window_secs))),
+            (
+                "channel_blocked_frac",
+                Value::num(frac(self.channel_secs, self.window_secs)),
+            ),
+            (
+                "sync_blocked_frac",
+                Value::num(frac(self.sync_secs, self.window_secs)),
+            ),
+            (
+                "offload_wait_frac",
+                Value::num(frac(self.offload_secs, self.window_secs)),
+            ),
+            ("idle_frac", Value::num(frac(self.idle_secs, self.window_secs))),
+        ])
+    }
+}
+
+fn frac(x: f64, window: f64) -> f64 {
+    if window > 0.0 {
+        (x / window).clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
+/// Attribute every track's time over the shared window `[t_min, t_max]`
+/// (microseconds). Spans are assumed balanced (ingest enforces it).
+pub fn attribute(spans: &[ClosedSpan], t_min_us: f64, t_max_us: f64) -> Vec<TrackAttribution> {
+    let window_secs = ((t_max_us - t_min_us) / 1e6).max(0.0);
+    let mut by_track: BTreeMap<&str, Vec<&ClosedSpan>> = BTreeMap::new();
+    for s in spans {
+        by_track.entry(&s.track).or_default().push(s);
+    }
+    let mut out = Vec::with_capacity(by_track.len());
+    for (track, mut spans) in by_track {
+        // parents sort before their children: by start ascending, then
+        // end descending (a parent shares its child's start only when it
+        // also ends no earlier)
+        spans.sort_by(|a, b| {
+            a.start_us
+                .partial_cmp(&b.start_us)
+                .unwrap()
+                .then(b.end_us.partial_cmp(&a.end_us).unwrap())
+        });
+        let mut attr = TrackAttribution {
+            track: track.to_string(),
+            window_secs,
+            ..TrackAttribution::default()
+        };
+        // sweep stack: (name, end_us, dur, children_dur)
+        let mut stack: Vec<(&str, f64, f64, f64)> = Vec::new();
+        let mut top_level_end = f64::NEG_INFINITY;
+        // pop every open span ending at or before `up_to`, charging its
+        // self time to its class and its full duration to its parent
+        fn settle<'a>(
+            attr: &mut TrackAttribution,
+            stack: &mut Vec<(&'a str, f64, f64, f64)>,
+            up_to: f64,
+        ) {
+            while let Some(&(name, end, dur, children)) = stack.last() {
+                if end > up_to {
+                    break;
+                }
+                stack.pop();
+                let self_secs = (dur - children).max(0.0);
+                match classify(name) {
+                    TimeClass::Compute => attr.compute_secs += self_secs,
+                    TimeClass::Channel => attr.channel_secs += self_secs,
+                    TimeClass::Sync => attr.sync_secs += self_secs,
+                    TimeClass::Offload => attr.offload_secs += self_secs,
+                }
+                if let Some(parent) = stack.last_mut() {
+                    parent.3 += dur;
+                }
+            }
+        }
+        for s in &spans {
+            settle(&mut attr, &mut stack, s.start_us);
+            if stack.is_empty() {
+                // top-level: busy time is the union (overlap-safe even if
+                // a dropped E let two "top-level" spans overlap)
+                let start = s.start_us.max(top_level_end);
+                attr.busy_secs += ((s.end_us - start) / 1e6).max(0.0);
+                top_level_end = top_level_end.max(s.end_us);
+            }
+            stack.push((&s.name, s.end_us, s.dur_secs(), 0.0));
+        }
+        settle(&mut attr, &mut stack, f64::INFINITY);
+        attr.idle_secs = (window_secs - attr.busy_secs).max(0.0);
+        out.push(attr);
+    }
+    out
+}

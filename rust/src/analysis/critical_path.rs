@@ -1,0 +1,200 @@
+//! Per-step critical-path extraction: which plane bounded each optimizer
+//! step, and which bounded the run.
+//!
+//! Steps anchor the timeline: the stepped graph's `train` phase spans
+//! when present, otherwise the async modes' `train_step` spans. Step k's
+//! window runs from the previous anchor's end (or the run start) to its
+//! own end — everything the step had to wait for happened in that
+//! window. Within it, each plane's *presence* is the merged union of its
+//! spans' intervals across all tracks (union, not sum: eight generator
+//! replicas decoding concurrently are one plane being busy, not 8x), and
+//! the bounding plane is the one present longest. The run-level verdict
+//! sums the per-window presences — the measured analogue of the DES
+//! reports' idle-fraction story, localized to steps.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::ingest::ClosedSpan;
+use crate::trace;
+use crate::util::json::Value;
+
+/// The planes a step can wait on, in report order.
+pub const PLANES: &[&str] = &[
+    "generate",
+    "score",
+    "train",
+    "weightsync",
+    "memplane",
+    "dataplane",
+];
+
+/// Span name -> plane index in [`PLANES`] (None for lifecycle instants
+/// and names outside the plane vocabulary).
+pub fn plane_of(name: &str) -> Option<usize> {
+    match name {
+        trace::GENERATE | trace::GEN_CHUNK => Some(0),
+        trace::SCORE | trace::REWARD_SCORE => Some(1),
+        trace::TRAIN | trace::TRAIN_STEP => Some(2),
+        trace::WEIGHT_SYNC | trace::SYNC_OVERLAP | trace::PUBLISH_BLOCK => Some(3),
+        trace::OFFLOAD_D2H | trace::OFFLOAD_H2D | trace::OFFLOAD_WAIT => Some(4),
+        trace::SEND_BLOCKED | trace::RECV_BLOCKED | trace::STORE_SAMPLE => Some(5),
+        _ => None,
+    }
+}
+
+/// One step's window and plane presence.
+#[derive(Debug, Clone)]
+pub struct StepPath {
+    /// the anchor span's value (the optimizer step number)
+    pub step: u64,
+    pub start_us: f64,
+    pub end_us: f64,
+    /// union-overlap seconds per plane, indexed like [`PLANES`]
+    pub plane_secs: Vec<f64>,
+    /// plane with the largest presence in this window
+    pub bounding: &'static str,
+}
+
+/// The extracted critical path over all steps.
+#[derive(Debug, Clone, Default)]
+pub struct CriticalPath {
+    pub steps: Vec<StepPath>,
+    /// summed per-window presence, indexed like [`PLANES`]
+    pub totals: Vec<f64>,
+    /// plane with the largest summed presence ("none" when no spans)
+    pub bounding: &'static str,
+}
+
+impl CriticalPath {
+    pub fn to_json(&self) -> Value {
+        let planes = |secs: &[f64]| {
+            Value::object(
+                PLANES
+                    .iter()
+                    .zip(secs)
+                    .map(|(p, s)| (*p, Value::num(*s)))
+                    .collect(),
+            )
+        };
+        Value::object(vec![
+            ("overall_bounding_plane", Value::str(self.bounding)),
+            ("plane_totals_secs", planes(&self.totals)),
+            (
+                "steps",
+                Value::Array(
+                    self.steps
+                        .iter()
+                        .map(|s| {
+                            Value::object(vec![
+                                ("step", Value::num(s.step as f64)),
+                                (
+                                    "window_secs",
+                                    Value::num(((s.end_us - s.start_us) / 1e6).max(0.0)),
+                                ),
+                                ("bounding_plane", Value::str(s.bounding)),
+                                ("plane_secs", planes(&s.plane_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Union length of `intervals` clipped to `[lo, hi]`, in seconds.
+fn union_secs(intervals: &[(f64, f64)], lo: f64, hi: f64) -> f64 {
+    let mut clipped: Vec<(f64, f64)> = intervals
+        .iter()
+        .map(|&(a, b)| (a.max(lo), b.min(hi)))
+        .filter(|&(a, b)| b > a)
+        .collect();
+    clipped.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (a, b) in clipped {
+        match &mut cur {
+            Some((_, ce)) if a <= *ce => *ce = ce.max(b),
+            _ => {
+                if let Some((cs, ce)) = cur {
+                    total += ce - cs;
+                }
+                cur = Some((a, b));
+            }
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total / 1e6
+}
+
+fn argmax(secs: &[f64]) -> &'static str {
+    let mut best = 0;
+    for (i, s) in secs.iter().enumerate() {
+        if *s > secs[best] {
+            best = i;
+        }
+    }
+    if secs.is_empty() || secs[best] <= 0.0 {
+        "none"
+    } else {
+        PLANES[best]
+    }
+}
+
+/// Extract the per-step critical path from a run's closed spans.
+pub fn extract(spans: &[ClosedSpan], t_min_us: f64, t_max_us: f64) -> CriticalPath {
+    // anchors: stepped `train` phases when present, else `train_step`
+    let phase_anchors: Vec<&ClosedSpan> =
+        spans.iter().filter(|s| s.name == trace::TRAIN).collect();
+    let mut anchors: Vec<&ClosedSpan> = if phase_anchors.is_empty() {
+        spans.iter().filter(|s| s.name == trace::TRAIN_STEP).collect()
+    } else {
+        phase_anchors
+    };
+    anchors.sort_by(|a, b| a.end_us.partial_cmp(&b.end_us).unwrap());
+
+    // per-plane interval pools, gathered once
+    let mut pools: Vec<Vec<(f64, f64)>> = vec![Vec::new(); PLANES.len()];
+    for s in spans {
+        if let Some(p) = plane_of(&s.name) {
+            pools[p].push((s.start_us, s.end_us));
+        }
+    }
+
+    let mut path = CriticalPath {
+        totals: vec![0.0; PLANES.len()],
+        bounding: "none",
+        ..CriticalPath::default()
+    };
+    let mut prev_end = t_min_us;
+    for a in anchors {
+        let (lo, hi) = (prev_end, a.end_us.max(prev_end));
+        let plane_secs: Vec<f64> = pools
+            .iter()
+            .map(|pool| union_secs(pool, lo, hi))
+            .collect();
+        for (t, s) in path.totals.iter_mut().zip(&plane_secs) {
+            *t += s;
+        }
+        path.steps.push(StepPath {
+            step: a.value as u64,
+            start_us: lo,
+            end_us: hi,
+            bounding: argmax(&plane_secs),
+            plane_secs,
+        });
+        prev_end = hi;
+    }
+    if path.steps.is_empty() {
+        // no anchors (e.g. a log from a run killed before step 1): fall
+        // back to whole-window presence so the verdict is still useful
+        path.totals = pools
+            .iter()
+            .map(|pool| union_secs(pool, t_min_us, t_max_us))
+            .collect();
+    }
+    path.bounding = argmax(&path.totals);
+    path
+}

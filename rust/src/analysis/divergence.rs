@@ -1,0 +1,233 @@
+//! Measured-vs-DES divergence: re-cost a traced run's recorded config
+//! through the matching discrete-event simulator and compare timelines
+//! segment by segment.
+//!
+//! This is the first plank of the ROADMAP's measured-vs-simulated
+//! bridge. The calibration is deliberately *from the run itself*: the
+//! DES gets the measured per-step means (generation, scoring, training,
+//! sync stalls) as its deterministic segment costs (`gen_sigma = 0`,
+//! batch = concurrency = 1, the run's own seed and data-plane knobs),
+//! so the comparison isolates the *structural* model — how the simulator
+//! composes those segments into a timeline — from the cost model. A
+//! wall-clock ratio near 1 means the DES's overlap/bubble structure
+//! matches the real pipeline; a per-segment ratio far from 1 names the
+//! segment whose accounting diverges.
+
+use crate::analysis::ingest::RunData;
+use crate::simulator::des::{
+    simulate_async, simulate_async_buffered, simulate_sync, BufferedDesConfig, DesConfig,
+};
+use crate::trace;
+use crate::util::error::{Error, Result};
+use crate::util::json::Value;
+
+/// One shared timeline segment, measured against predicted.
+#[derive(Debug, Clone)]
+pub struct SegmentDivergence {
+    pub name: &'static str,
+    pub measured_secs: f64,
+    pub predicted_secs: f64,
+    /// measured / predicted; `None` when the prediction is ~0 (a segment
+    /// the config disables — a nonzero measurement then IS the finding)
+    pub ratio: Option<f64>,
+}
+
+/// The full divergence report for one traced run.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    pub mode: String,
+    /// optimizer steps the calibration normalized by
+    pub steps: u64,
+    pub measured_wall_secs: f64,
+    pub predicted_wall_secs: f64,
+    pub wall_ratio: f64,
+    pub segments: Vec<SegmentDivergence>,
+}
+
+impl Divergence {
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("mode", Value::str(self.mode.clone())),
+            ("steps", Value::num(self.steps as f64)),
+            ("measured_wall_secs", Value::num(self.measured_wall_secs)),
+            ("predicted_wall_secs", Value::num(self.predicted_wall_secs)),
+            ("wall_ratio", Value::num(self.wall_ratio)),
+            (
+                "segments",
+                Value::Array(
+                    self.segments
+                        .iter()
+                        .map(|s| {
+                            Value::object(vec![
+                                ("name", Value::str(s.name)),
+                                ("measured_secs", Value::num(s.measured_secs)),
+                                ("predicted_secs", Value::num(s.predicted_secs)),
+                                (
+                                    "ratio",
+                                    s.ratio.map(Value::num).unwrap_or(Value::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Total seconds and span count for `name` across all tracks.
+fn tot(data: &RunData, name: &str) -> (f64, u64) {
+    let mut secs = 0.0;
+    let mut n = 0;
+    for s in &data.spans {
+        if s.name == name {
+            secs += s.dur_secs();
+            n += 1;
+        }
+    }
+    (secs, n)
+}
+
+/// Prefer the stepped phase span when present, else the async analogue
+/// (the two never both carry a mode's primary timeline).
+fn tot_either(data: &RunData, phase: &str, fallback: &str) -> (f64, u64) {
+    let (secs, n) = tot(data, phase);
+    if n > 0 {
+        (secs, n)
+    } else {
+        tot(data, fallback)
+    }
+}
+
+fn per_step(total: f64, steps: u64) -> f64 {
+    total / steps.max(1) as f64
+}
+
+/// Re-cost `data`'s recorded config through the matching simulator and
+/// report measured-vs-predicted ratios per shared segment.
+pub fn diverge(data: &RunData) -> Result<Divergence> {
+    let cfg = data.config.as_ref().ok_or_else(|| {
+        Error::Cli(
+            "--des needs the run's recorded config: point analyze at the \
+             journal (out dir or journal.jsonl), not the bare event log"
+                .into(),
+        )
+    })?;
+    let mode = cfg
+        .get("mode")
+        .and_then(Value::as_str)
+        .unwrap_or("async_buffered")
+        .to_string();
+
+    let (gen_secs, _) = tot_either(data, trace::GENERATE, trace::GEN_CHUNK);
+    let (score_secs, _) = tot_either(data, trace::SCORE, trace::REWARD_SCORE);
+    let (train_secs, train_n) = tot_either(data, trace::TRAIN, trace::TRAIN_STEP);
+    let (sync_secs, sync_n) = tot_either(data, trace::WEIGHT_SYNC, trace::SYNC_OVERLAP);
+    let (publish_secs, _) = tot(data, trace::PUBLISH_BLOCK);
+    let (d2h, _) = tot(data, trace::OFFLOAD_D2H);
+    let (h2d, _) = tot(data, trace::OFFLOAD_H2D);
+    let (owait, _) = tot(data, trace::OFFLOAD_WAIT);
+    if train_n == 0 {
+        return Err(Error::Cli(
+            "--des found no train/train_step spans to calibrate against \
+             (was the run traced?)"
+                .into(),
+        ));
+    }
+    let steps = train_n;
+    let sync_background = cfg
+        .get("sync_background")
+        .and_then(Value::as_bool)
+        .unwrap_or(true);
+    let des = DesConfig {
+        steps: steps as usize,
+        // one sequence per batch at measured per-step cost: the timeline
+        // structure is under test, not the packing model
+        batch: 1,
+        concurrency: 1,
+        gen_mean_secs: per_step(gen_secs, steps),
+        gen_sigma: 0.0,
+        train_secs: per_step(train_secs, steps),
+        score_secs: per_step(score_secs, steps),
+        queue_capacity: cfg
+            .get("queue_capacity")
+            .and_then(Value::as_usize)
+            .unwrap_or(4),
+        partial_rollout_cap: f64::INFINITY,
+        weight_sync_secs: if sync_n > 0 { sync_secs / sync_n as f64 } else { 0.0 },
+        sync_overlap: sync_background,
+        publish_block_secs: per_step(publish_secs, steps),
+        background_publish: sync_background,
+        offload_d2h_secs: per_step(d2h, steps),
+        offload_h2d_secs: per_step(h2d, steps),
+        offload_overlap: cfg
+            .get("offload_background")
+            .and_then(Value::as_bool)
+            .unwrap_or(true),
+        seed: cfg.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+    };
+    let report = match mode.as_str() {
+        "sync" => simulate_sync(&des),
+        "async" => simulate_async(&des),
+        _ => {
+            let max_staleness = cfg
+                .get("max_staleness")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0) as u64;
+            simulate_async_buffered(
+                &des,
+                &BufferedDesConfig {
+                    store_capacity: cfg
+                        .get("store_capacity")
+                        .and_then(Value::as_usize)
+                        .unwrap_or(4),
+                    max_staleness: if max_staleness == 0 { u64::MAX } else { max_staleness },
+                    freshest_first: cfg
+                        .get("sampling")
+                        .and_then(Value::as_str)
+                        .map(|s| s.starts_with("freshest"))
+                        .unwrap_or(false),
+                },
+            )
+        }
+    };
+
+    let measured = [
+        ("generate", gen_secs),
+        ("score", score_secs),
+        ("train", train_secs),
+        ("weight_sync", sync_secs),
+        ("publish_block", publish_secs),
+        ("offload", d2h + h2d + owait),
+    ];
+    let segments = measured
+        .iter()
+        .map(|&(name, m)| {
+            let p = report
+                .segments
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|(_, s)| *s)
+                .unwrap_or(0.0);
+            SegmentDivergence {
+                name,
+                measured_secs: m,
+                predicted_secs: p,
+                ratio: if p > 1e-9 { Some(m / p) } else { None },
+            }
+        })
+        .collect();
+    let measured_wall = data.wall_secs();
+    Ok(Divergence {
+        mode,
+        steps,
+        measured_wall_secs: measured_wall,
+        predicted_wall_secs: report.total_secs,
+        wall_ratio: if report.total_secs > 1e-9 {
+            measured_wall / report.total_secs
+        } else {
+            0.0
+        },
+        segments,
+    })
+}

@@ -1,0 +1,109 @@
+//! Span-duration histograms: one streaming [`LogHistogram`] per
+//! `(track, name)` key, plus the cross-track merge per span name.
+//!
+//! The core property the bucket layout buys (fixed log-linear buckets,
+//! see [`LogHistogram`]): merging shard histograms bucket-wise is exactly
+//! equivalent to histogramming the concatenated stream, so the per-track
+//! shards and the per-name merged view are two readouts of the same
+//! counts — no re-pass over the spans, no approximation introduced by
+//! the merge itself. Quantiles carry the documented
+//! [`LogHistogram::RELATIVE_ERROR`] bound either way.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::ingest::ClosedSpan;
+use crate::util::json::Value;
+use crate::util::stats::LogHistogram;
+
+/// Duration histograms keyed `(track, name)`.
+#[derive(Debug, Default)]
+pub struct SpanHistograms {
+    map: BTreeMap<(String, String), LogHistogram>,
+}
+
+impl SpanHistograms {
+    pub fn new() -> SpanHistograms {
+        SpanHistograms::default()
+    }
+
+    pub fn record(&mut self, span: &ClosedSpan) {
+        self.map
+            .entry((span.track.clone(), span.name.clone()))
+            .or_insert_with(LogHistogram::new)
+            .record(span.dur_secs());
+    }
+
+    pub fn from_spans(spans: &[ClosedSpan]) -> SpanHistograms {
+        let mut h = SpanHistograms::new();
+        for s in spans {
+            h.record(s);
+        }
+        h
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&(String, String), &LogHistogram)> + '_ {
+        self.map.iter()
+    }
+
+    /// Cross-track view: all shards of one span name merged bucket-wise
+    /// (`weightsync-link0` + `weightsync-link1` + ... -> `sync_overlap`).
+    pub fn merged_by_name(&self) -> BTreeMap<String, LogHistogram> {
+        let mut out: BTreeMap<String, LogHistogram> = BTreeMap::new();
+        for ((_, name), hist) in &self.map {
+            out.entry(name.clone()).or_insert_with(LogHistogram::new).merge(hist);
+        }
+        out
+    }
+
+    /// Total recorded seconds per span name (exact sums, not bucketed).
+    pub fn totals_by_name(&self) -> BTreeMap<String, f64> {
+        let mut out: BTreeMap<String, f64> = BTreeMap::new();
+        for ((_, name), hist) in &self.map {
+            *out.entry(name.clone()).or_insert(0.0) += hist.sum();
+        }
+        out
+    }
+
+    /// Per-(track, name) stat rows for `analysis.json`.
+    pub fn to_json(&self) -> Value {
+        Value::Array(
+            self.map
+                .iter()
+                .map(|((track, name), h)| hist_row(Some(track), name, h))
+                .collect(),
+        )
+    }
+
+    /// Per-name merged stat rows for `analysis.json`.
+    pub fn merged_json(&self) -> Value {
+        Value::Array(
+            self.merged_by_name()
+                .iter()
+                .map(|(name, h)| hist_row(None, name, h))
+                .collect(),
+        )
+    }
+}
+
+fn hist_row(track: Option<&str>, name: &str, h: &LogHistogram) -> Value {
+    let mut pairs = Vec::new();
+    if let Some(t) = track {
+        pairs.push(("track", Value::str(t)));
+    }
+    pairs.extend([
+        ("name", Value::str(name)),
+        ("count", Value::num(h.count() as f64)),
+        ("total_secs", Value::num(h.sum())),
+        ("mean_secs", Value::num(h.mean())),
+        ("p50_secs", Value::num(h.quantile_or(0.50, 0.0))),
+        ("p90_secs", Value::num(h.quantile_or(0.90, 0.0))),
+        ("p99_secs", Value::num(h.quantile_or(0.99, 0.0))),
+        ("min_secs", Value::num(if h.count() > 0 { h.min() } else { 0.0 })),
+        ("max_secs", Value::num(if h.count() > 0 { h.max() } else { 0.0 })),
+    ]);
+    Value::object(pairs)
+}

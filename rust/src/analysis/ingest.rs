@@ -1,0 +1,205 @@
+//! Streaming ingest: one pass over a run's event stream into the shapes
+//! the analyses consume.
+//!
+//! The input is whatever the trace plane wrote — the collector's raw
+//! `trace_events.jsonl` or a journal whose `event` lines mirror it — read
+//! through the same [`JournalReader`] the resume path uses, so analyze
+//! inherits its torn-tail tolerance and interior-corruption detection for
+//! free. Span pairing rides [`SpanStacks`], the per-track B/E balance
+//! checker shared with `tracecheck --file`: spans on one track close in
+//! LIFO order (the recorder's RAII guards guarantee it at the source), so
+//! a name mismatch or an E without a B is evidence of log corruption or
+//! ring overflow, not a scheduling artifact.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::journal::{JournalReader, JournalRecord};
+use crate::util::error::Result;
+use crate::util::json::Value;
+
+/// A matched B/E pair on one track. Durations are given by the trace
+/// plane's microsecond clock; `value` is the B event's payload (step,
+/// chunk seq, rows — see the schema table in [`crate::trace`]).
+#[derive(Debug, Clone)]
+pub struct ClosedSpan {
+    pub track: String,
+    pub name: String,
+    pub start_us: f64,
+    pub end_us: f64,
+    pub value: f64,
+}
+
+impl ClosedSpan {
+    pub fn dur_secs(&self) -> f64 {
+        ((self.end_us - self.start_us) / 1e6).max(0.0)
+    }
+}
+
+/// Per-track span stacks enforcing the B/E discipline. Shared by
+/// `llamarl analyze` (JSONL events) and `tracecheck --file` (Chrome
+/// export): both inputs describe completed runs, where every begin must
+/// have a matching end on the same track in LIFO order.
+#[derive(Debug, Default)]
+pub struct SpanStacks {
+    stacks: BTreeMap<String, Vec<(String, f64, f64)>>,
+    violations: Vec<String>,
+}
+
+impl SpanStacks {
+    pub fn new() -> SpanStacks {
+        SpanStacks::default()
+    }
+
+    pub fn begin(&mut self, track: &str, name: &str, t_us: f64, value: f64) {
+        self.stacks
+            .entry(track.to_string())
+            .or_default()
+            .push((name.to_string(), t_us, value));
+    }
+
+    /// Close the innermost open span on `track`. Returns the matched pair,
+    /// or `None` with a recorded violation when the end has no begin or
+    /// names a different span than the innermost open one.
+    pub fn end(&mut self, track: &str, name: &str, t_us: f64) -> Option<ClosedSpan> {
+        let stack = self.stacks.entry(track.to_string()).or_default();
+        match stack.pop() {
+            None => {
+                self.violations
+                    .push(format!("track '{track}': E '{name}' without a matching B"));
+                None
+            }
+            Some((open, start_us, value)) => {
+                if open != name {
+                    self.violations.push(format!(
+                        "track '{track}': E '{name}' closes open span '{open}' \
+                         (improper nesting)"
+                    ));
+                    return None;
+                }
+                Some(ClosedSpan {
+                    track: track.to_string(),
+                    name: open,
+                    start_us,
+                    end_us: t_us,
+                    value,
+                })
+            }
+        }
+    }
+
+    /// Mismatches seen so far (E-without-B, name mismatch on close).
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    /// Spans still open — a completed run's log must leave none.
+    pub fn unclosed(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (track, stack) in &self.stacks {
+            for (name, _, _) in stack {
+                out.push(format!("track '{track}': span '{name}' never closed"));
+            }
+        }
+        out
+    }
+}
+
+/// Everything one streaming pass extracts from the event stream.
+#[derive(Debug, Default)]
+pub struct RunData {
+    pub spans: Vec<ClosedSpan>,
+    /// earliest / latest span or instant timestamp (the run window;
+    /// bookkeeping counter lines are excluded)
+    pub t_min_us: f64,
+    pub t_max_us: f64,
+    /// trace-plane events seen (spans count twice: B and E)
+    pub events: u64,
+    /// instant-event counts by name (`node_restart`, `store_admit`, ...)
+    pub instants: BTreeMap<String, u64>,
+    /// the collector's final ring-overflow tally (0 = complete log)
+    pub dropped_events: u64,
+    /// the journal's `meta` record: the resolved run config, when the
+    /// input is a journal (`analyze --des` requires it)
+    pub config: Option<Value>,
+    pub truncated_tail: bool,
+    /// B/E discipline violations: mismatches first, then unclosed spans
+    pub violations: Vec<String>,
+    /// spans left open at end-of-stream (subset of `violations`; expected
+    /// for a SIGKILLed journal, an error for a completed run)
+    pub unclosed: usize,
+}
+
+impl RunData {
+    pub fn wall_secs(&self) -> f64 {
+        ((self.t_max_us - self.t_min_us) / 1e6).max(0.0)
+    }
+}
+
+/// One streaming pass over `path` (journal or raw event log). O(line)
+/// memory for the stream itself; retained state is the closed spans plus
+/// the per-track open stacks.
+pub fn load(path: impl AsRef<Path>) -> Result<RunData> {
+    let path = path.as_ref();
+    let mut reader = JournalReader::open(path)?;
+    let mut stacks = SpanStacks::new();
+    let mut data = RunData {
+        t_min_us: f64::INFINITY,
+        t_max_us: f64::NEG_INFINITY,
+        ..RunData::default()
+    };
+    while let Some(item) = reader.next_record() {
+        let (_seq, rec) = item?;
+        match rec {
+            JournalRecord::Event {
+                t_us,
+                track,
+                ph,
+                name,
+                value,
+            } => {
+                data.events += 1;
+                match ph.as_str() {
+                    "B" => {
+                        data.t_min_us = data.t_min_us.min(t_us);
+                        data.t_max_us = data.t_max_us.max(t_us);
+                        stacks.begin(&track, &name, t_us, value);
+                    }
+                    "E" => {
+                        data.t_min_us = data.t_min_us.min(t_us);
+                        data.t_max_us = data.t_max_us.max(t_us);
+                        if let Some(span) = stacks.end(&track, &name, t_us) {
+                            data.spans.push(span);
+                        }
+                    }
+                    "i" => {
+                        data.t_min_us = data.t_min_us.min(t_us);
+                        data.t_max_us = data.t_max_us.max(t_us);
+                        *data.instants.entry(name).or_insert(0) += 1;
+                    }
+                    // counters are bookkeeping, not timeline: exclude from
+                    // the run window (the collector's final dropped_events
+                    // line lands after every node has stopped)
+                    "C" => {
+                        if name == crate::trace::DROPPED_EVENTS {
+                            data.dropped_events = value as u64;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            JournalRecord::Meta { config } => data.config = Some(config),
+            _ => {}
+        }
+    }
+    data.truncated_tail = reader.truncated_tail();
+    let unclosed = stacks.unclosed();
+    data.unclosed = unclosed.len();
+    data.violations = stacks.violations().to_vec();
+    data.violations.extend(unclosed);
+    if !data.t_min_us.is_finite() {
+        data.t_min_us = 0.0;
+        data.t_max_us = 0.0;
+    }
+    Ok(data)
+}

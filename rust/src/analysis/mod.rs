@@ -1,0 +1,241 @@
+//! Trace-analysis plane: turn a run's streaming event log into answers.
+//!
+//! The trace plane (PR 6) records *what happened*; this module computes
+//! *what it means*, in one streaming pass over `OUT/trace_events.jsonl`
+//! or a journal's mirrored `event` lines:
+//!
+//! * [`ingest`] — the pass itself: [`JournalReader`]-based decode (torn
+//!   tails tolerated, interior corruption fatal), span pairing through
+//!   the shared [`SpanStacks`] B/E balance checker (also used by
+//!   `tracecheck --file`), instant/counter capture including the
+//!   collector's final `dropped_events` tally, and the journal's `meta`
+//!   config for the DES bridge.
+//! * [`histogram`] — streaming log-bucketed duration histograms per
+//!   `(track, span name)` ([`LogHistogram`]: fixed bucket layout, so
+//!   shard-merge is exactly concatenation and quantiles carry a
+//!   documented relative-error bound), plus the cross-track merged view.
+//! * [`attribution`] — blocked-time attribution: each track's wall clock
+//!   classified compute / channel-blocked / sync-blocked / offload-wait
+//!   / idle by innermost-wins self time over the properly nested spans.
+//! * [`critical_path`] — per-step windows anchored on `train` /
+//!   `train_step` spans, each charged to the plane whose merged span
+//!   union dominates it; names the bounding plane per step and overall.
+//! * [`divergence`] — `analyze --des`: re-cost the recorded config
+//!   through the matching `simulate_*` path and report measured-vs-
+//!   predicted ratios per shared segment name.
+//!
+//! `llamarl analyze` drives all of it and emits `analysis.json` (via
+//! [`crate::util::json`]) plus the human report below.
+//!
+//! [`JournalReader`]: crate::journal::JournalReader
+//! [`SpanStacks`]: ingest::SpanStacks
+//! [`LogHistogram`]: crate::util::stats::LogHistogram
+
+pub mod attribution;
+pub mod critical_path;
+pub mod divergence;
+pub mod histogram;
+pub mod ingest;
+
+use std::path::Path;
+
+pub use attribution::{attribute, classify, TimeClass, TrackAttribution};
+pub use critical_path::{extract, plane_of, CriticalPath, PLANES};
+pub use divergence::{diverge, Divergence, SegmentDivergence};
+pub use histogram::SpanHistograms;
+pub use ingest::{load, ClosedSpan, RunData, SpanStacks};
+
+use crate::util::error::Result;
+use crate::util::json::Value;
+
+/// Everything `llamarl analyze` computes for one run.
+pub struct Analysis {
+    pub source: String,
+    pub run: RunData,
+    pub hists: SpanHistograms,
+    pub tracks: Vec<TrackAttribution>,
+    pub path: CriticalPath,
+    /// present only under `--des` (needs the journal's meta config)
+    pub divergence: Option<Divergence>,
+}
+
+/// One-pass analysis of `path` (a journal or a raw trace event log).
+/// Balance violations and dropped events are *reported*, not fatal here —
+/// the CLI decides exit status after `analysis.json` is on disk.
+pub fn analyze_file(path: impl AsRef<Path>, des: bool) -> Result<Analysis> {
+    let path = path.as_ref();
+    let run = load(path)?;
+    let hists = SpanHistograms::from_spans(&run.spans);
+    let tracks = attribute(&run.spans, run.t_min_us, run.t_max_us);
+    let cp = extract(&run.spans, run.t_min_us, run.t_max_us);
+    let divergence = if des { Some(diverge(&run)?) } else { None };
+    Ok(Analysis {
+        source: path.display().to_string(),
+        run,
+        hists,
+        tracks,
+        path: cp,
+        divergence,
+    })
+}
+
+impl Analysis {
+    /// The `analysis.json` document.
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("source", Value::str(self.source.clone())),
+            ("events", Value::num(self.run.events as f64)),
+            ("spans", Value::num(self.run.spans.len() as f64)),
+            ("wall_secs", Value::num(self.run.wall_secs())),
+            (
+                "dropped_events",
+                Value::num(self.run.dropped_events as f64),
+            ),
+            ("truncated_tail", Value::Bool(self.run.truncated_tail)),
+            (
+                "balance_violations",
+                Value::Array(
+                    self.run
+                        .violations
+                        .iter()
+                        .map(|v| Value::str(v.clone()))
+                        .collect(),
+                ),
+            ),
+            (
+                "instants",
+                Value::object(
+                    self.run
+                        .instants
+                        .iter()
+                        .map(|(k, n)| (k.as_str(), Value::num(*n as f64)))
+                        .collect(),
+                ),
+            ),
+            ("span_stats", self.hists.to_json()),
+            ("span_stats_by_name", self.hists.merged_json()),
+            (
+                "tracks",
+                Value::Array(self.tracks.iter().map(|t| t.to_json()).collect()),
+            ),
+            ("critical_path", self.path.to_json()),
+            (
+                "divergence",
+                self.divergence
+                    .as_ref()
+                    .map(|d| d.to_json())
+                    .unwrap_or(Value::Null),
+            ),
+        ])
+    }
+
+    /// The human report `llamarl analyze` prints.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "== analyze {} ==\n{} events, {} spans, {:.3}s wall{}{}",
+            self.source,
+            self.run.events,
+            self.run.spans.len(),
+            self.run.wall_secs(),
+            if self.run.dropped_events > 0 {
+                format!(", {} DROPPED", self.run.dropped_events)
+            } else {
+                String::new()
+            },
+            if self.run.truncated_tail {
+                ", torn tail"
+            } else {
+                ""
+            },
+        );
+        let _ = writeln!(s, "\nspan latencies (merged across tracks):");
+        let _ = writeln!(
+            s,
+            "  {:<16} {:>6} {:>10} {:>10} {:>10} {:>10}",
+            "name", "count", "total s", "p50 s", "p90 s", "p99 s"
+        );
+        for (name, h) in self.hists.merged_by_name() {
+            let _ = writeln!(
+                s,
+                "  {:<16} {:>6} {:>10.4} {:>10.5} {:>10.5} {:>10.5}",
+                name,
+                h.count(),
+                h.sum(),
+                h.quantile_or(0.50, 0.0),
+                h.quantile_or(0.90, 0.0),
+                h.quantile_or(0.99, 0.0),
+            );
+        }
+        let _ = writeln!(s, "\nblocked-time attribution (fraction of run window):");
+        let _ = writeln!(
+            s,
+            "  {:<20} {:>8} {:>8} {:>8} {:>8} {:>8}",
+            "track", "compute", "channel", "sync", "offload", "idle"
+        );
+        for t in &self.tracks {
+            let w = t.window_secs.max(1e-12);
+            let _ = writeln!(
+                s,
+                "  {:<20} {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%",
+                t.track,
+                100.0 * t.compute_secs / w,
+                100.0 * t.channel_secs / w,
+                100.0 * t.sync_secs / w,
+                100.0 * t.offload_secs / w,
+                100.0 * t.idle_secs / w,
+            );
+        }
+        let _ = writeln!(
+            s,
+            "\ncritical path: {} steps, run bounded by '{}'",
+            self.path.steps.len(),
+            self.path.bounding
+        );
+        for st in &self.path.steps {
+            let _ = writeln!(
+                s,
+                "  step {:>3}: {:>8.4}s window, bounded by '{}'",
+                st.step,
+                (st.end_us - st.start_us) / 1e6,
+                st.bounding
+            );
+        }
+        if let Some(d) = &self.divergence {
+            let _ = writeln!(
+                s,
+                "\nDES divergence ({} mode, {} steps): wall {:.3}s measured \
+                 vs {:.3}s predicted (ratio {:.2})",
+                d.mode, d.steps, d.measured_wall_secs, d.predicted_wall_secs, d.wall_ratio
+            );
+            for seg in &d.segments {
+                let _ = writeln!(
+                    s,
+                    "  {:<14} measured {:>9.4}s  predicted {:>9.4}s  ratio {}",
+                    seg.name,
+                    seg.measured_secs,
+                    seg.predicted_secs,
+                    seg.ratio
+                        .map(|r| format!("{r:.2}"))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+        }
+        if !self.run.violations.is_empty() {
+            let _ = writeln!(
+                s,
+                "\nBALANCE VIOLATIONS ({}):",
+                self.run.violations.len()
+            );
+            for v in self.run.violations.iter().take(10) {
+                let _ = writeln!(s, "  {v}");
+            }
+            if self.run.violations.len() > 10 {
+                let _ = writeln!(s, "  ... and {} more", self.run.violations.len() - 10);
+            }
+        }
+        s
+    }
+}

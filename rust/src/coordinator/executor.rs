@@ -9,12 +9,49 @@
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::ddma::WeightsBus;
 use crate::journal::JournalWriter;
 use crate::memplane::MemPlane;
 use crate::util::error::Result;
+use crate::util::stats::LogHistogram;
+
+/// Streaming latency histograms shared run-wide: executors record into
+/// them as work completes, and the `--metrics-interval` sampler reads
+/// live p50/p99 quantiles out — the same mergeable log-bucketed core
+/// `llamarl analyze` rebuilds offline from the event log. The mutexes
+/// are uncontended (a few records per second at most), so recording is
+/// off every hot path.
+#[derive(Debug, Default)]
+pub struct LiveStats {
+    /// trainer optimizer-step wall seconds, one sample per step
+    pub step_time: Mutex<LogHistogram>,
+    /// per-promotion fenced-swap stall seconds (generator weight refresh)
+    pub swap_stall: Mutex<LogHistogram>,
+}
+
+impl LiveStats {
+    pub fn record_step(&self, secs: f64) {
+        self.step_time.lock().unwrap().record(secs);
+    }
+
+    pub fn record_swap_stall(&self, secs: f64) {
+        self.swap_stall.lock().unwrap().record(secs);
+    }
+
+    /// (p50, p99) of step wall time so far; `default` when no steps yet.
+    pub fn step_quantiles(&self, default: f64) -> (f64, f64) {
+        let h = self.step_time.lock().unwrap();
+        (h.quantile_or(0.5, default), h.quantile_or(0.99, default))
+    }
+
+    /// (p50, p99) of per-swap stall so far; `default` when no swaps yet.
+    pub fn swap_quantiles(&self, default: f64) -> (f64, f64) {
+        let h = self.swap_stall.lock().unwrap();
+        (h.quantile_or(0.5, default), h.quantile_or(0.99, default))
+    }
+}
 
 /// What a `step()` accomplished — the controller uses this to drive
 /// progress/draining decisions without knowing executor internals.
@@ -45,6 +82,9 @@ pub struct ExecutorContext {
     /// durable run-journal (None when journaling is disabled); executors
     /// append step records, node lifecycle and version mints through it
     pub journal: Option<Arc<JournalWriter>>,
+    /// live streaming latency histograms (step time, swap stall) feeding
+    /// the `--metrics-interval` quantile fields
+    pub live: LiveStats,
 }
 
 impl ExecutorContext {
@@ -73,6 +113,7 @@ impl ExecutorContext {
             mem,
             out_dir,
             journal,
+            live: LiveStats::default(),
         })
     }
 

@@ -279,7 +279,13 @@ impl GeneratorWorker {
                 let snap = slot.attach();
                 return self.upload_params(&snap);
             }
+            let stall_before = slot.stall_secs();
             if let Some(snap) = slot.swap_at_boundary() {
+                // per-promotion stall sample for the live p50/p99 series
+                // (the slot only tracks the cumulative total)
+                self.ctx
+                    .live
+                    .record_swap_stall((slot.stall_secs() - stall_before).max(0.0));
                 return self.upload_params(&snap);
             }
             return Ok(());
@@ -335,6 +341,9 @@ impl GeneratorWorker {
                 )));
             }
         }
+        // one decode-chunk span per artifact call: the async-mode analogue
+        // of the stepped `generate` phase (nests inside it in sync mode)
+        let _span = crate::trace::span_with(crate::trace::GEN_CHUNK, self.chunks_run as f64);
         let rt = self.runtime.as_ref().unwrap();
         let mcfg = rt.config().clone();
         let (b, s, c) = (mcfg.gen_batch, mcfg.max_seq, mcfg.gen_chunk);

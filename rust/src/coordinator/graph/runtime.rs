@@ -337,6 +337,9 @@ fn spawn_fleet_controller(f: FleetCtl) -> JoinHandle<GenTally> {
 
 fn note_resize(f: &FleetCtl, from: usize, to: usize, reason: String) {
     crate::log_info!("graph", "fleet resize: generator {from} -> {to} ({reason})");
+    // mirror the journal record as a trace instant so resizes show up on
+    // the fleet-controller track in Chrome exports (value = new size)
+    trace::instant(trace::FLEET_RESIZE, to as f64);
     if let Some(j) = &f.ctx.journal {
         j.write_infallible(&JournalRecord::FleetResize {
             node: "generator".into(),
@@ -521,6 +524,9 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
                 |attempt, backoff, err| {
                     let migrated = parked.replace(0);
                     elastic.note_restart(migrated);
+                    // journaled below AND traced here: restarts were
+                    // invisible in Chrome exports before the analysis plane
+                    trace::instant(trace::NODE_RESTART, f64::from(attempt) + 1.0);
                     crate::log_warn!(
                         "graph",
                         "generator-{w} restart #{}: {err} (backoff {backoff:?}, {migrated} partials parked)",
@@ -615,6 +621,7 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
                 || ctx.should_stop(),
                 |attempt, backoff, err| {
                     elastic.note_restart(0);
+                    trace::instant(trace::NODE_RESTART, f64::from(attempt) + 1.0);
                     crate::log_warn!(
                         "graph",
                         "reward-{r} restart #{}: {err} (backoff {backoff:?})",

@@ -142,6 +142,16 @@ impl TelemetryHub {
                     Value::num(gen_stats.send_blocked_secs()),
                 ),
             ];
+            // live latency quantiles from the streaming histograms (the
+            // same log-bucketed core `llamarl analyze` rebuilds offline) —
+            // before these, percentiles existed only in the end-of-run
+            // summarize() pass
+            let (step_p50, step_p99) = ctx.live.step_quantiles(0.0);
+            pairs.push(("step_secs_p50", Value::num(step_p50)));
+            pairs.push(("step_secs_p99", Value::num(step_p99)));
+            let (swap_p50, swap_p99) = ctx.live.swap_quantiles(0.0);
+            pairs.push(("swap_stall_secs_p50", Value::num(swap_p50)));
+            pairs.push(("swap_stall_secs_p99", Value::num(swap_p99)));
             if let Some(s) = &scored_stats {
                 pairs.push((
                     "trainer_recv_blocked_secs",

@@ -109,6 +109,10 @@ impl RewardExecutor {
     }
 
     fn ingest(&mut self, trajs: Vec<Trajectory>) -> Result<()> {
+        // the reward fleet's own scoring timeline: async modes have no
+        // stepped `score` phase, so without this span the fleet is
+        // invisible in the trace (value = rows scored in this pass)
+        let _span = crate::trace::span_with(crate::trace::REWARD_SCORE, trajs.len() as f64);
         for mut t in trajs {
             let response = t.decoded_response(&self.tokenizer);
             t.reward = task::score(&t.problem, &response);

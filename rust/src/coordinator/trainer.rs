@@ -215,6 +215,10 @@ impl Trainer {
     }
 
     fn run_train_step(&mut self, rows: Vec<Trajectory>) -> Result<TrainStepRecord> {
+        // per-step span on the trainer's own track: async modes have no
+        // stepped `train` phase, so this is what the analysis plane anchors
+        // step windows on (in stepped mode it nests inside the phase span)
+        let _span = crate::trace::span_with(crate::trace::TRAIN_STEP, (self.step + 1) as f64);
         let t0 = Instant::now();
         // Memplane Train lease: the optimizer update requires grads +
         // moments device-resident. The lease returns once the FIRST
@@ -331,6 +335,7 @@ impl Trainer {
             max_lag: lags.iter().copied().max().unwrap_or(0),
             rows: batch.n_real_rows,
         };
+        self.ctx.live.record_step(rec.wall_secs);
         if let Some(log) = &self.log {
             let elapsed = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
             log.write(&Value::object(vec![

@@ -11,6 +11,9 @@
 //!   info      inspect an artifact bundle
 //!   tracecheck  validate a Chrome trace file emitted by `train --trace`,
 //!             or (with --log) a raw JSONL event-log/journal stream
+//!   analyze   trace-analysis plane: streaming span-latency histograms,
+//!             blocked-time attribution, per-step critical path, and
+//!             (--des) measured-vs-simulated divergence
 //!   resume    continue a killed run from its durable journal
 //!   replay    re-drive a recorded run and diff the training trajectories
 //!   journal   tail / filter / summarize a run journal
@@ -48,6 +51,8 @@ const BOOL_FLAGS: &[&str] = &[
     "no-journal",
     "elastic-resize",
     "stats",
+    "des",
+    "allow-drops",
     "help",
 ];
 
@@ -83,6 +88,7 @@ fn run(args: &Args) -> Result<()> {
         Some("dataplane") => cmd_dataplane(args),
         Some("info") => cmd_info(args),
         Some("tracecheck") => cmd_tracecheck(args),
+        Some("analyze") => cmd_analyze(args),
         Some("resume") => cmd_resume(args),
         Some("replay") => cmd_replay(args),
         Some("journal") => cmd_journal(args),
@@ -147,9 +153,21 @@ USAGE: llamarl <subcommand> [flags]
             comparison on real threads (no artifacts needed)
   info      --artifacts DIR  inspect an artifact bundle
   tracecheck --file trace.json  validate a Chrome trace export: parses the
-            file with the built-in JSON reader and reports the event count;
-            or --log FILE to validate a raw JSONL stream (the journal or
-            the trace event log) with the streaming journal reader
+            file with the built-in JSON reader, checks per-track B/E span
+            balance (a completed export must leave no span open), and
+            reports the event count; or --log FILE to validate a raw JSONL
+            stream (the journal or the trace event log) with the streaming
+            journal reader — --log tolerates the open spans a SIGKILL leaves
+  analyze   [--journal DIR-or-FILE | --log FILE] [--out analysis.json]
+            [--des] [--allow-drops]  one streaming pass over a traced run's
+            event stream: per-span latency histograms (log-bucketed,
+            mergeable, p50/p90/p99), per-track blocked-time attribution
+            (compute/channel/sync/offload/idle), per-step critical-path
+            extraction naming the bounding plane, and with --des the
+            measured-vs-simulated segment ratios from re-costing the run's
+            recorded config through the DES. Writes analysis.json next to
+            the input (or --out), then exits nonzero on B/E imbalance or
+            on dropped events (unless --allow-drops)
   resume    --journal DIR-or-FILE  reconstruct store+bus from the journal's
             latest snapshot, replay the suffix, and continue the run to its
             configured step count (a finished journal is a success no-op)
@@ -568,9 +586,13 @@ fn tracecheck_log(path: &str) -> Result<()> {
 }
 
 fn cmd_tracecheck(args: &Args) -> Result<()> {
+    use llamarl::analysis::SpanStacks;
     use llamarl::util::error::Error;
     use llamarl::util::json::Value;
+    use std::collections::BTreeMap;
     if let Some(log) = args.str_opt("log") {
+        // --log tolerates open spans: a SIGKILLed journal legitimately
+        // ends mid-span (the CI kill-and-resume arm depends on this)
         return tracecheck_log(log);
     }
     let path = args.str_or("file", "trace.json");
@@ -580,16 +602,53 @@ fn cmd_tracecheck(args: &Args) -> Result<()> {
     if events.is_empty() {
         return Err(Error::msg(format!("{path}: traceEvents is empty")));
     }
+    // tid -> thread name, from the exporter's metadata records (written
+    // first, but scanned up front to be order-independent)
+    let mut names: BTreeMap<String, String> = BTreeMap::new();
+    for e in events {
+        if e.req_str("ph")? == "M" {
+            if let (Some(tid), Some(name)) = (
+                e.get("tid").and_then(Value::as_f64),
+                e.get("args").and_then(|a| a.get("name")).and_then(Value::as_str),
+            ) {
+                names.insert(format!("{tid}"), name.to_string());
+            }
+        }
+    }
     let mut spans = 0usize;
     let mut instants = 0usize;
     let mut tracks = 0usize;
+    // a Chrome export describes a COMPLETED run, so per-track B/E balance
+    // is a hard invariant (unlike --log): the same checker analyze uses
+    let mut stacks = SpanStacks::new();
     for e in events {
-        match e.req_str("ph")? {
-            "B" => spans += 1,
+        let ph = e.req_str("ph")?;
+        let tid = format!("{}", e.get("tid").and_then(Value::as_f64).unwrap_or(0.0));
+        let track = names.get(&tid).cloned().unwrap_or(tid);
+        let ts = e.get("ts").and_then(Value::as_f64).unwrap_or(0.0);
+        match ph {
+            "B" => {
+                spans += 1;
+                stacks.begin(&track, e.req_str("name")?, ts, 0.0);
+            }
+            "E" => {
+                let _ = stacks.end(&track, e.req_str("name")?, ts);
+            }
             "i" => instants += 1,
             "M" => tracks += 1,
             _ => {}
         }
+    }
+    let mut problems = stacks.violations().to_vec();
+    problems.extend(stacks.unclosed());
+    if !problems.is_empty() {
+        for p in problems.iter().take(10) {
+            eprintln!("  {p}");
+        }
+        return Err(Error::msg(format!(
+            "{path}: {} B/E span balance violations",
+            problems.len()
+        )));
     }
     let dropped = v
         .get("otherData")
@@ -597,10 +656,70 @@ fn cmd_tracecheck(args: &Args) -> Result<()> {
         .and_then(Value::as_f64)
         .unwrap_or(0.0);
     println!(
-        "{path}: {} events ({spans} spans, {instants} instants, {tracks} tracks, \
+        "{path}: {} events ({spans} spans balanced, {instants} instants, {tracks} tracks, \
          {dropped} dropped)",
         events.len()
     );
+    Ok(())
+}
+
+/// `llamarl analyze`: one streaming pass over a traced run's event stream
+/// (journal or raw `trace_events.jsonl`) into `analysis.json` + a human
+/// report. The artifact is written BEFORE any gate fires, so CI uploads
+/// it even when the run fails validation.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use llamarl::util::error::Error;
+    let input: std::path::PathBuf = if let Some(log) = args.str_opt("log") {
+        log.into()
+    } else {
+        let raw = args
+            .str_opt("journal")
+            .map(String::from)
+            .or_else(|| args.positional.first().cloned())
+            .ok_or_else(|| Error::Cli("expected --journal DIR-or-FILE or --log FILE".into()))?;
+        let p = std::path::PathBuf::from(raw);
+        if p.is_dir() {
+            // prefer the journal (carries the meta config --des needs);
+            // fall back to the bare event log
+            let j = p.join("journal.jsonl");
+            if j.exists() {
+                j
+            } else {
+                p.join("trace_events.jsonl")
+            }
+        } else {
+            p
+        }
+    };
+    let analysis = llamarl::analysis::analyze_file(&input, args.flag("des"))?;
+    let out = args
+        .str_opt("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| input.with_file_name("analysis.json"));
+    std::fs::write(&out, analysis.to_json().to_string())?;
+    print!("{}", analysis.render());
+    println!("analysis -> {}", out.display());
+    if analysis.run.events == 0 {
+        return Err(Error::Cli(format!(
+            "{}: no trace events (was the run traced?)",
+            input.display()
+        )));
+    }
+    if !analysis.run.violations.is_empty() {
+        return Err(Error::Cli(format!(
+            "{}: {} B/E balance violations (see report)",
+            input.display(),
+            analysis.run.violations.len()
+        )));
+    }
+    if analysis.run.dropped_events > 0 && !args.flag("allow-drops") {
+        return Err(Error::Cli(format!(
+            "{}: {} trace events dropped (recorder rings overflowed); \
+             pass --allow-drops to analyze the incomplete log anyway",
+            input.display(),
+            analysis.run.dropped_events
+        )));
+    }
     Ok(())
 }
 

@@ -26,8 +26,8 @@ pub fn print_report(r: &RunReport) {
     if !step_times.is_empty() {
         let s = summarize(&step_times);
         println!(
-            "train step: mean {:.3}s p50 {:.3}s p90 {:.3}s",
-            s.mean, s.p50, s.p90
+            "train step: mean {:.3}s p50 {:.3}s p90 {:.3}s p99 {:.3}s",
+            s.mean, s.p50, s.p90, s.p99
         );
     }
     let lags: Vec<f64> = r.records.iter().map(|x| x.mean_lag).collect();
@@ -117,11 +117,15 @@ pub fn reward_curve(r: &RunReport) -> Vec<(u64, f64)> {
 
 /// Serialize a report summary to JSON (for EXPERIMENTS.md extraction).
 pub fn report_json(r: &RunReport) -> Value {
+    let steps = summarize(&r.records.iter().map(|x| x.wall_secs).collect::<Vec<_>>());
     Value::object(vec![
         ("mode", Value::str(r.mode.clone())),
         ("steps", Value::num(r.steps as f64)),
         ("wall_secs", Value::num(r.wall_secs)),
         ("mean_step_secs", Value::num(r.mean_step_secs())),
+        ("step_secs_p50", Value::num(steps.p50)),
+        ("step_secs_p90", Value::num(steps.p90)),
+        ("step_secs_p99", Value::num(steps.p99)),
         ("tokens_generated", Value::num(r.tokens_generated as f64)),
         ("trajectories", Value::num(r.trajectories as f64)),
         ("chunks", Value::num(r.chunks as f64)),

@@ -107,6 +107,13 @@ pub struct DesReport {
     pub dropped_batches: usize,
     /// per-step completion times
     pub step_ends: Vec<f64>,
+    /// total predicted seconds per timeline segment, under the canonical
+    /// names shared with the trace plane's span vocabulary (`generate`,
+    /// `score`, `train`, `weight_sync`, `publish_block`, `offload`).
+    /// `llamarl analyze --des` pairs these against the measured span
+    /// totals of a traced run — the first plank of the ROADMAP's
+    /// measured-vs-DES bridge. A segment the config disables reports 0.
+    pub segments: Vec<(&'static str, f64)>,
 }
 
 /// Data-plane knobs for [`simulate_async_buffered`]: the DES analogue of
@@ -226,10 +233,13 @@ pub fn simulate_sync(cfg: &DesConfig) -> DesReport {
     let mut train_busy = 0.0;
     let mut step_ends = Vec::with_capacity(cfg.steps);
     let mut carry = Vec::new();
+    let mut offload_total = 0.0;
     for _ in 0..cfg.steps {
         let g = batch_generation_time(&mut rng, cfg, &mut carry);
-        t += g + colocated_offload_stall(cfg, g);
+        let o = colocated_offload_stall(cfg, g);
+        t += g + o;
         gen_busy += g;
+        offload_total += o;
         t += cfg.score_secs;
         t += cfg.train_secs;
         train_busy += cfg.train_secs;
@@ -238,6 +248,7 @@ pub fn simulate_sync(cfg: &DesConfig) -> DesReport {
         t += cfg.weight_sync_secs + cfg.publish_block_secs;
         step_ends.push(t);
     }
+    let n = cfg.steps as f64;
     DesReport {
         total_secs: t,
         step_secs_mean: t / cfg.steps as f64,
@@ -247,6 +258,14 @@ pub fn simulate_sync(cfg: &DesConfig) -> DesReport {
         max_lag_steps: 0.0,
         dropped_batches: 0,
         step_ends,
+        segments: vec![
+            ("generate", gen_busy),
+            ("score", cfg.score_secs * n),
+            ("train", train_busy),
+            ("weight_sync", cfg.weight_sync_secs * n),
+            ("publish_block", cfg.publish_block_secs * n),
+            ("offload", offload_total),
+        ],
     }
 }
 
@@ -266,6 +285,7 @@ pub fn simulate_async(cfg: &DesConfig) -> DesReport {
     let mut step_ends = Vec::with_capacity(cfg.steps);
     let mut done_steps = 0usize;
     let mut carry = Vec::new();
+    let mut batches_generated = 0usize;
 
     let stall = gen_sync_stall(cfg);
     while done_steps < cfg.steps {
@@ -278,6 +298,7 @@ pub fn simulate_async(cfg: &DesConfig) -> DesReport {
             let g = batch_generation_time(&mut rng, cfg, &mut carry);
             gen_clock += g + stall;
             gen_busy += g;
+            batches_generated += 1;
             queue.push_back((gen_clock, done_steps));
         }
         // trainer consumes the next ready batch; each optimizer step ends
@@ -296,11 +317,13 @@ pub fn simulate_async(cfg: &DesConfig) -> DesReport {
                 let g = batch_generation_time(&mut rng, cfg, &mut carry);
                 gen_clock = gen_clock.max(train_clock) + g + stall;
                 gen_busy += g;
+                batches_generated += 1;
                 queue.push_back((gen_clock, done_steps));
             }
         }
     }
     let total = train_clock.max(gen_clock);
+    let n = cfg.steps as f64;
     DesReport {
         total_secs: total,
         step_secs_mean: total / cfg.steps as f64,
@@ -310,6 +333,14 @@ pub fn simulate_async(cfg: &DesConfig) -> DesReport {
         max_lag_steps: lags.iter().cloned().fold(0.0, f64::max),
         dropped_batches: 0,
         step_ends,
+        segments: vec![
+            ("generate", gen_busy),
+            ("score", cfg.score_secs * n),
+            ("train", train_busy),
+            ("weight_sync", stall * batches_generated as f64),
+            ("publish_block", trainer_publish_stall(cfg) * n),
+            ("offload", 0.0),
+        ],
     }
 }
 
@@ -334,6 +365,7 @@ pub fn simulate_async_buffered(cfg: &DesConfig, dp: &BufferedDesConfig) -> DesRe
     let mut done_steps = 0usize;
     let mut dropped = 0usize;
     let mut carry = Vec::new();
+    let mut batches_generated = 0usize;
     let cap = dp.store_capacity.max(1);
     let stall = gen_sync_stall(cfg);
 
@@ -346,6 +378,7 @@ pub fn simulate_async_buffered(cfg: &DesConfig, dp: &BufferedDesConfig) -> DesRe
             let g = batch_generation_time(&mut rng, cfg, &mut carry);
             gen_clock += g + stall;
             gen_busy += g;
+            batches_generated += 1;
             store.push_back((gen_clock, done_steps));
             if store.len() > cap {
                 store.pop_front();
@@ -376,6 +409,7 @@ pub fn simulate_async_buffered(cfg: &DesConfig, dp: &BufferedDesConfig) -> DesRe
     // wall clock ends when the trainer finishes; generation beyond that
     // point is speculative work for a run that already ended
     let total = train_clock;
+    let n = cfg.steps as f64;
     DesReport {
         total_secs: total,
         step_secs_mean: total / cfg.steps as f64,
@@ -385,6 +419,14 @@ pub fn simulate_async_buffered(cfg: &DesConfig, dp: &BufferedDesConfig) -> DesRe
         max_lag_steps: lags.iter().cloned().fold(0.0, f64::max),
         dropped_batches: dropped,
         step_ends,
+        segments: vec![
+            ("generate", gen_busy),
+            ("score", cfg.score_secs * n),
+            ("train", train_busy),
+            ("weight_sync", stall * batches_generated as f64),
+            ("publish_block", trainer_publish_stall(cfg) * n),
+            ("offload", 0.0),
+        ],
     }
 }
 

@@ -122,7 +122,32 @@ impl Collector {
                     if stopping {
                         // the stop flag was observed *before* this final
                         // drain, so every event recorded before finish()
-                        // was captured
+                        // was captured. Close the stream with the ring-drop
+                        // counter so `llamarl analyze` can gate on overflow
+                        // without the Chrome export's otherData side channel.
+                        let t_us = recorder::now_nanos() as f64 / 1e3;
+                        let dropped = recorder::dropped_total() as f64;
+                        let line = Value::object(vec![
+                            ("t_us", Value::num(t_us)),
+                            ("track", Value::str("trace-collector")),
+                            ("ph", Value::str("C")),
+                            ("name", Value::str(crate::trace::DROPPED_EVENTS)),
+                            ("value", Value::num(dropped)),
+                        ]);
+                        if first_err.is_none() {
+                            if let Err(e) = writer.write(&line) {
+                                first_err = Some(e);
+                            }
+                        }
+                        if let Some(j) = &journal {
+                            j.write_infallible(&JournalRecord::Event {
+                                t_us,
+                                track: "trace-collector".into(),
+                                ph: "C".into(),
+                                name: crate::trace::DROPPED_EVENTS.into(),
+                                value: dropped,
+                            });
+                        }
                         return (retained, first_err);
                     }
                     std::thread::sleep(DRAIN_INTERVAL);

@@ -35,6 +35,9 @@
 //! | name | ph | plane / track | value |
 //! |---|---|---|---|
 //! | `generate` / `score` / `train` | B/E | stepped-graph phases (controller) | step |
+//! | `gen_chunk` | B/E | one `generate_chunk` artifact call (`generator-{i}`) | chunk seq |
+//! | `train_step` | B/E | one optimizer step (trainer / controller) | step |
+//! | `reward_score` | B/E | reward-fleet scoring pass (`reward-{i}`) | rows |
 //! | `weight_sync` | B/E | ddma inline publish fan-out (trainer) | version |
 //! | `sync_overlap` | B/E | weightsync link-group stream (`weightsync-link{g}`) | version |
 //! | `publish_block` | B/E | trainer blocked inside `publish` | version |
@@ -48,6 +51,14 @@
 //! | `store_drop_stale` / `store_drop_capacity` | i | admission drops | rows |
 //! | `lease_acquire` / `lease_release` | i | memplane phase lease | phase idx |
 //! | `node_start` / `node_stop` | i | graph node lifecycle | 0 |
+//! | `node_restart` | i | supervised replica respawn (restarting node) | attempt |
+//! | `fleet_resize` | i | elastic fleet grew/shrank (`fleet-controller`) | new size |
+//! | `dropped_events` | C | collector final drain (`trace-collector`) | ring drops |
+//!
+//! The `dropped_events` counter is the last line of every event log: the
+//! collector appends it at `finish()` so downstream consumers
+//! (`llamarl analyze`) can gate on recorder-ring overflow without the
+//! Chrome export's `otherData` side channel.
 //!
 //! # Journal records
 //!
@@ -118,6 +129,15 @@ pub const OFFLOAD_WAIT: &str = "offload_wait";
 pub const SEND_BLOCKED: &str = "send_blocked";
 pub const RECV_BLOCKED: &str = "recv_blocked";
 pub const STORE_SAMPLE: &str = "store_sample";
+/// one `generate_chunk` artifact call on a generator replica (the async
+/// modes' per-chunk analogue of the stepped `generate` phase)
+pub const GEN_CHUNK: &str = "gen_chunk";
+/// one optimizer step on the trainer (the async modes' per-step analogue
+/// of the stepped `train` phase; nests inside it in stepped mode)
+pub const TRAIN_STEP: &str = "train_step";
+/// a reward worker scoring a trajectory batch (async modes have no
+/// stepped `score` phase — this is the fleet's own timeline)
+pub const REWARD_SCORE: &str = "reward_score";
 
 // instants
 pub const VERSION_MINT: &str = "version_mint";
@@ -129,3 +149,12 @@ pub const LEASE_ACQUIRE: &str = "lease_acquire";
 pub const LEASE_RELEASE: &str = "lease_release";
 pub const NODE_START: &str = "node_start";
 pub const NODE_STOP: &str = "node_stop";
+/// a supervised replica is being respawned (value = attempt number)
+pub const NODE_RESTART: &str = "node_restart";
+/// the elastic fleet controller grew or shrank the generator fleet
+/// (value = new replica count)
+pub const FLEET_RESIZE: &str = "fleet_resize";
+
+// counters
+/// final-drain counter: events lost to full recorder rings over the run
+pub const DROPPED_EVENTS: &str = "dropped_events";

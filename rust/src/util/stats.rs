@@ -74,6 +74,196 @@ pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
     (a, b, r2)
 }
 
+// ---------------------------------------------------------------------------
+// Streaming log-bucketed histogram (the analysis plane's latency primitive)
+
+/// Sub-buckets per power of two: 4 mantissa bits -> 16 linear sub-buckets,
+/// so a bucket spanning `[lo, lo + lo/16)` bounds the quantile estimate's
+/// relative error by [`LogHistogram::RELATIVE_ERROR`].
+const SUB_BITS: u32 = 4;
+const SUBS: usize = 1 << SUB_BITS;
+/// Smallest representable exponent: 2^-34 s ≈ 58 ps. Anything smaller
+/// (including zero and negatives) lands in the shared low bucket.
+const MIN_EXP: i32 = -34;
+/// Largest representable exponent: values at or above 2^21 s (~24 days)
+/// land in the shared high bucket.
+const MAX_EXP: i32 = 20;
+const N_EXPS: usize = (MAX_EXP - MIN_EXP + 1) as usize;
+/// low bucket + log-linear grid + high bucket
+const N_BUCKETS: usize = 2 + N_EXPS * SUBS;
+
+/// HDR-style streaming histogram over a FIXED log-linear bucket layout:
+/// base-2 exponent buckets, each split into 16 linear sub-buckets taken
+/// straight from the IEEE-754 mantissa bits (so bucketing is exact — no
+/// float-log boundary jitter).
+///
+/// Properties the analysis plane relies on:
+/// * **Mergeable**: the layout is identical for every instance, so
+///   [`LogHistogram::merge`] is a bucket-wise add — building one histogram
+///   from a whole stream equals merging per-shard histograms of any
+///   partition of that stream.
+/// * **Bounded relative error**: a recorded value `v` in
+///   `[2^-34, 2^21)` shares its bucket (width `≤ v/16`) with the estimate
+///   its quantile reports, so `|quantile(q) - exact| ≤ exact / 16`
+///   ([`LogHistogram::RELATIVE_ERROR`]) against the nearest-rank order
+///   statistic. Out-of-range and non-positive values are counted in the
+///   shared low/high buckets and reported as the exact tracked min/max.
+/// * **No panics on garbage**: zero, negative, NaN, subnormal and huge
+///   durations all land in a bucket; quantiles stay finite whenever at
+///   least one finite value was recorded.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    /// Documented quantile error bound relative to the exact nearest-rank
+    /// order statistic, for positive in-range values (one sub-bucket
+    /// width).
+    pub const RELATIVE_ERROR: f64 = 1.0 / SUBS as f64;
+
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_index(v: f64) -> usize {
+        // non-positive, NaN and sub-grid values share the low bucket
+        if !(v >= (MIN_EXP as f64).exp2()) {
+            return 0;
+        }
+        if !v.is_finite() {
+            return N_BUCKETS - 1;
+        }
+        let bits = v.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        if exp > MAX_EXP {
+            return N_BUCKETS - 1;
+        }
+        let sub = ((bits >> (52 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        1 + (exp - MIN_EXP) as usize * SUBS + sub
+    }
+
+    /// Lower edge / width midpoint of a grid bucket.
+    fn bucket_midpoint(idx: usize) -> f64 {
+        let grid = idx - 1;
+        let exp = MIN_EXP + (grid / SUBS) as i32;
+        let sub = (grid % SUBS) as f64;
+        let base = (exp as f64).exp2();
+        base * (1.0 + (sub + 0.5) / SUBS as f64)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        if v.is_finite() {
+            self.sum += v;
+        }
+        // NaN fails both comparisons and leaves min/max untouched
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Bucket-wise add: because the layout is fixed, merging shard
+    /// histograms is exactly equivalent to having recorded the
+    /// concatenated stream into one histogram.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile estimate, `q` in [0,1]: the midpoint of the
+    /// bucket holding the `ceil(q*n)`-th smallest recorded value, clamped
+    /// to the exact tracked `[min, max]`. NaN when empty (matching
+    /// [`percentile_sorted`] on an empty slice).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let k = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= k {
+                let est = if idx == 0 {
+                    // low bucket: report the exact minimum (possibly <= 0)
+                    if self.min.is_finite() { self.min } else { 0.0 }
+                } else if idx == N_BUCKETS - 1 {
+                    if self.max.is_finite() { self.max } else { f64::INFINITY }
+                } else {
+                    Self::bucket_midpoint(idx)
+                };
+                // clamping toward the observed extremes only tightens the
+                // estimate (the order statistic lies in [min, max])
+                return if self.min.is_finite() && self.max.is_finite() {
+                    est.clamp(self.min, self.max)
+                } else {
+                    est
+                };
+            }
+        }
+        unreachable!("cumulative bucket count ({cum}) < total count ({})", self.count)
+    }
+
+    /// [`LogHistogram::quantile`], with a default for the empty case (live
+    /// telemetry wants a JSON-safe number, not NaN).
+    pub fn quantile_or(&self, q: f64, default: f64) -> f64 {
+        if self.count == 0 {
+            default
+        } else {
+            self.quantile(q)
+        }
+    }
+}
+
 /// Exponentially weighted moving average tracker.
 #[derive(Debug, Clone)]
 pub struct Ewma {
@@ -122,6 +312,55 @@ mod tests {
         assert!((a - 1.0).abs() < 1e-9);
         assert!((b - 2.0).abs() < 1e-9);
         assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_bound_error() {
+        let mut h = LogHistogram::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 1e-3).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 1000);
+        for q in [0.5, 0.9, 0.99] {
+            let exact = xs[((q * 1000.0).ceil() as usize).clamp(1, 1000) - 1];
+            let est = h.quantile(q);
+            assert!(
+                (est - exact).abs() <= exact * LogHistogram::RELATIVE_ERROR + 1e-12,
+                "q={q}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_histogram_merge_equals_whole_stream() {
+        let (mut a, mut b, mut whole) =
+            (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+        for i in 0..500 {
+            let v = (i as f64 * 0.731).sin().abs() * 10.0;
+            whole.record(v);
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), whole.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_swallows_garbage() {
+        let mut h = LogHistogram::new();
+        for v in [0.0, -1.0, -1e300, 1e300, f64::INFINITY, f64::NAN, 1e-300, 2.5] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        // quantiles stay defined (clamped into the observed range)
+        assert!(h.quantile(0.5).is_finite() || h.quantile(0.5).is_infinite());
+        assert!(h.quantile(0.0) <= h.quantile(1.0));
+        // empty histogram mirrors percentile_sorted's empty-slice NaN
+        assert!(LogHistogram::new().quantile(0.5).is_nan());
+        assert_eq!(LogHistogram::new().quantile_or(0.5, 0.0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! Analysis-plane property tests: the [`LogHistogram`] core (shard-merge
+//! == whole-stream over random partitions, the documented quantile
+//! relative-error bound on random AND adversarial bucket-boundary
+//! inputs, garbage tolerance), and the end-to-end `analyze` pipeline
+//! over synthetic event streams (balance invariants, attribution
+//! fractions, critical-path extraction, dropped-event accounting, and
+//! the measured-vs-DES divergence round trip).
+
+use llamarl::analysis::{analyze_file, attribute, extract, load, PLANES};
+use llamarl::trace;
+use llamarl::util::prop::run_prop;
+use llamarl::util::stats::LogHistogram;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("llamarl_analysis_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+const QS: &[f64] = &[0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0];
+
+/// The exact nearest-rank order statistic the histogram's quantile is
+/// specified against: the `ceil(q*n)`-th smallest value.
+fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    let k = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[k - 1]
+}
+
+fn assert_error_bound(vals: &[f64], ctx: &str) {
+    let mut h = LogHistogram::new();
+    for &v in vals {
+        h.record(v);
+    }
+    let mut sorted = vals.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for &q in QS {
+        let exact = nearest_rank(&sorted, q);
+        let est = h.quantile(q);
+        let bound = exact * LogHistogram::RELATIVE_ERROR * (1.0 + 1e-9);
+        assert!(
+            (est - exact).abs() <= bound,
+            "{ctx}: q={q} exact={exact:e} est={est:e} bound={bound:e} (n={})",
+            vals.len()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram core
+
+#[test]
+fn prop_shard_merge_equals_whole_stream() {
+    run_prop("shard_merge_equals_whole_stream", 200, |g| {
+        let n = g.size(1, 400);
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            // mostly in-range positives, seasoned with garbage the low
+            // bucket absorbs
+            vals.push(match g.usize(0, 9) {
+                0 => 0.0,
+                1 => -g.f64(0.1, 10.0),
+                2 => g.f64(1e250, 1e300),
+                _ => g.f64(1e-8, 1e5),
+            });
+        }
+        let shards = g.usize(1, 8);
+        let mut parts = vec![LogHistogram::new(); shards];
+        let mut whole = LogHistogram::new();
+        for &v in &vals {
+            whole.record(v);
+            parts[g.usize(0, shards - 1)].record(v);
+        }
+        let mut merged = LogHistogram::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(whole.count(), merged.count());
+        assert_eq!(whole.min().to_bits(), merged.min().to_bits());
+        assert_eq!(whole.max().to_bits(), merged.max().to_bits());
+        // sums differ only by float association order
+        let tol = 1e-9 * whole.sum().abs().max(1.0);
+        assert!((whole.sum() - merged.sum()).abs() <= tol);
+        // quantiles depend only on bucket counts + min/max, which the
+        // bucket-wise add preserves exactly
+        for &q in QS {
+            assert_eq!(
+                whole.quantile(q).to_bits(),
+                merged.quantile(q).to_bits(),
+                "q={q}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_quantile_error_bound_random() {
+    run_prop("quantile_error_bound_random", 200, |g| {
+        let n = g.size(1, 500);
+        let vals: Vec<f64> = (0..n).map(|_| g.f64(1e-6, 1e4)).collect();
+        assert_error_bound(&vals, "random");
+    });
+}
+
+#[test]
+fn prop_quantile_error_bound_adversarial_boundaries() {
+    run_prop("quantile_error_bound_boundaries", 200, |g| {
+        let n = g.size(1, 300);
+        let mut vals = Vec::with_capacity(n);
+        let mut prev = 1.0;
+        for _ in 0..n {
+            let v = match g.usize(0, 4) {
+                // exact bucket lower edges 2^e * (1 + s/16): the worst
+                // case for a bucketing scheme with open/closed edge bugs
+                0 | 1 => {
+                    let e = g.i64(-30, 18) as f64;
+                    let s = g.i64(0, 15) as f64;
+                    e.exp2() * (1.0 + s / 16.0)
+                }
+                // exact powers of two (sub-bucket 0 edges)
+                2 => (g.i64(-30, 18) as f64).exp2(),
+                // a hair below an edge (previous bucket's last value)
+                3 => {
+                    let e = g.i64(-30, 18) as f64;
+                    e.exp2() * (1.0 + g.i64(0, 15) as f64 / 16.0) * (1.0 - 1e-14)
+                }
+                // duplicates pile mass on a single bucket
+                _ => prev,
+            };
+            prev = v;
+            vals.push(v);
+        }
+        assert_error_bound(&vals, "boundaries");
+    });
+}
+
+#[test]
+fn histogram_garbage_does_not_panic() {
+    let garbage = [
+        0.0,
+        -0.0,
+        -1.0,
+        -1e308,
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        1e-320, // subnormal
+        f64::MIN_POSITIVE,
+        f64::MAX,
+        1e300,
+        (-34f64).exp2(), // exact grid edges
+        (21f64).exp2(),
+        1.0,
+    ];
+    let mut h = LogHistogram::new();
+    for &v in &garbage {
+        h.record(v);
+    }
+    assert_eq!(h.count(), garbage.len() as u64);
+    for &q in QS {
+        // never NaN once something was recorded
+        assert!(!h.quantile(q).is_nan(), "q={q}");
+    }
+    let empty = LogHistogram::new();
+    assert!(empty.quantile(0.5).is_nan());
+    assert_eq!(empty.quantile_or(0.5, 7.0), 7.0);
+    // merging an empty histogram is the identity on every readout
+    let mut merged = h.clone();
+    merged.merge(&empty);
+    assert_eq!(merged.count(), h.count());
+    for &q in QS {
+        assert_eq!(merged.quantile(q).to_bits(), h.quantile(q).to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic event streams
+
+fn ev(out: &mut String, t_us: f64, track: &str, ph: &str, name: &str, value: f64) {
+    out.push_str(&format!(
+        "{{\"t_us\":{t_us},\"track\":\"{track}\",\"ph\":\"{ph}\",\
+         \"name\":\"{name}\",\"value\":{value}}}\n"
+    ));
+}
+
+#[test]
+fn analyze_balanced_stream() {
+    let mut s = String::new();
+    // 3 steps: per step, a generator decodes 800us (100us of it blocked on
+    // the channel), then the controller trains for 200us
+    for k in 0..3 {
+        let base = k as f64 * 1000.0;
+        ev(&mut s, base, "generator-0", "B", trace::GEN_CHUNK, k as f64);
+        ev(&mut s, base + 600.0, "generator-0", "B", trace::SEND_BLOCKED, 0.0);
+        ev(&mut s, base + 700.0, "generator-0", "E", trace::SEND_BLOCKED, 0.0);
+        ev(&mut s, base + 800.0, "generator-0", "E", trace::GEN_CHUNK, 0.0);
+        ev(&mut s, base + 800.0, "controller", "B", trace::TRAIN, k as f64);
+        ev(&mut s, base + 1000.0, "controller", "E", trace::TRAIN, 0.0);
+    }
+    let path = tmp("balanced.jsonl");
+    std::fs::write(&path, &s).unwrap();
+
+    let a = analyze_file(&path, false).unwrap();
+    assert!(a.run.violations.is_empty(), "{:?}", a.run.violations);
+    assert_eq!(a.run.events, 18);
+    assert_eq!(a.run.spans.len(), 9);
+    assert!((a.run.wall_secs() - 3000e-6).abs() < 1e-12);
+
+    // attribution invariants and exact class charges
+    assert_eq!(a.tracks.len(), 2);
+    for t in &a.tracks {
+        assert!(t.busy_frac() <= 1.0 + 1e-9, "{}: {}", t.track, t.busy_frac());
+        let classes = t.compute_secs + t.channel_secs + t.sync_secs + t.offload_secs;
+        assert!((classes - t.busy_secs).abs() < 1e-9);
+        assert!((t.busy_secs + t.idle_secs - t.window_secs).abs() < 1e-9);
+    }
+    let generator = a.tracks.iter().find(|t| t.track == "generator-0").unwrap();
+    assert!((generator.channel_secs - 300e-6).abs() < 1e-12); // 3 x 100us
+    assert!((generator.compute_secs - 2100e-6).abs() < 1e-12); // 3 x 700us
+
+    // critical path: one window per train span, each dominated by decode
+    assert_eq!(a.path.steps.len(), 3);
+    for st in &a.path.steps {
+        assert_eq!(st.bounding, "generate");
+    }
+    assert_eq!(a.path.bounding, "generate");
+    assert_eq!(a.path.totals.len(), PLANES.len());
+
+    // merged histogram view sees all shards of each name
+    let merged = a.hists.merged_by_name();
+    assert_eq!(merged[trace::TRAIN].count(), 3);
+    assert_eq!(merged[trace::GEN_CHUNK].count(), 3);
+    // 200us trains: the p50 estimate carries the documented bound
+    let p50 = merged[trace::TRAIN].quantile(0.5);
+    assert!((p50 - 200e-6).abs() <= 200e-6 * LogHistogram::RELATIVE_ERROR * 1.001);
+}
+
+#[test]
+fn analyze_detects_imbalance_and_unclosed() {
+    let mut s = String::new();
+    ev(&mut s, 0.0, "t0", "B", trace::GEN_CHUNK, 0.0);
+    ev(&mut s, 10.0, "t0", "E", trace::TRAIN, 0.0); // closes the wrong span
+    ev(&mut s, 20.0, "t1", "E", trace::SCORE, 0.0); // E without B
+    ev(&mut s, 30.0, "t2", "B", trace::TRAIN_STEP, 1.0); // never closed
+    let path = tmp("unbalanced.jsonl");
+    std::fs::write(&path, &s).unwrap();
+
+    let run = load(&path).unwrap();
+    assert_eq!(run.violations.len(), 3, "{:?}", run.violations);
+    assert_eq!(run.unclosed, 1);
+    assert!(run.spans.is_empty());
+}
+
+#[test]
+fn analyze_reads_dropped_counter_outside_window() {
+    let mut s = String::new();
+    ev(&mut s, 100.0, "t0", "B", trace::TRAIN, 0.0);
+    ev(&mut s, 600.0, "t0", "E", trace::TRAIN, 0.0);
+    // the collector's final tally lands long after the run; it must be
+    // read but not stretch the wall-clock window
+    ev(&mut s, 9e9, "collector", "C", trace::DROPPED_EVENTS, 7.0);
+    let path = tmp("dropped.jsonl");
+    std::fs::write(&path, &s).unwrap();
+
+    let run = load(&path).unwrap();
+    assert_eq!(run.dropped_events, 7);
+    assert!((run.wall_secs() - 500e-6).abs() < 1e-12);
+}
+
+#[test]
+fn divergence_round_trips_a_deterministic_sync_run() {
+    // a synthetic journal whose timeline IS the sync DES's structure:
+    // gen 1000us -> score 200us -> train 300us -> sync 100us, 3 steps,
+    // no gaps. Calibrated back through simulate_sync, every shared
+    // segment and the wall clock must come back at ratio ~1.
+    let mut s = String::new();
+    s.push_str("{\"kind\":\"meta\",\"config\":{\"mode\":\"sync\",\"seed\":3}}\n");
+    for k in 0..3 {
+        let base = k as f64 * 1600.0;
+        ev(&mut s, base, "controller", "B", trace::GENERATE, k as f64);
+        ev(&mut s, base + 1000.0, "controller", "E", trace::GENERATE, 0.0);
+        ev(&mut s, base + 1000.0, "controller", "B", trace::SCORE, k as f64);
+        ev(&mut s, base + 1200.0, "controller", "E", trace::SCORE, 0.0);
+        ev(&mut s, base + 1200.0, "controller", "B", trace::TRAIN, k as f64);
+        ev(&mut s, base + 1500.0, "controller", "E", trace::TRAIN, 0.0);
+        ev(&mut s, base + 1500.0, "controller", "B", trace::WEIGHT_SYNC, k as f64);
+        ev(&mut s, base + 1600.0, "controller", "E", trace::WEIGHT_SYNC, 0.0);
+    }
+    let path = tmp("divergence.jsonl");
+    std::fs::write(&path, &s).unwrap();
+
+    let a = analyze_file(&path, true).unwrap();
+    let d = a.divergence.expect("--des requested");
+    assert_eq!(d.mode, "sync");
+    assert_eq!(d.steps, 3);
+    assert!((d.wall_ratio - 1.0).abs() < 1e-6, "wall_ratio={}", d.wall_ratio);
+    for name in ["generate", "score", "train", "weight_sync"] {
+        let seg = d.segments.iter().find(|s| s.name == name).unwrap();
+        let r = seg.ratio.unwrap_or_else(|| panic!("{name}: no prediction"));
+        assert!((r - 1.0).abs() < 1e-6, "{name}: ratio={r}");
+    }
+    // segments the run never exercised predict 0 and report no ratio
+    let publish = d.segments.iter().find(|s| s.name == "publish_block").unwrap();
+    assert!(publish.ratio.is_none());
+}
+
+#[test]
+fn divergence_without_config_is_a_clear_error() {
+    let mut s = String::new();
+    ev(&mut s, 0.0, "t0", "B", trace::TRAIN, 0.0);
+    ev(&mut s, 10.0, "t0", "E", trace::TRAIN, 0.0);
+    let path = tmp("no_meta.jsonl");
+    std::fs::write(&path, &s).unwrap();
+    let err = analyze_file(&path, true).unwrap_err();
+    assert!(format!("{err}").contains("config"), "{err}");
+}
+
+#[test]
+fn prop_random_balanced_streams_hold_invariants() {
+    run_prop("random_balanced_streams", 60, |g| {
+        let names = [
+            trace::GEN_CHUNK,
+            trace::TRAIN_STEP,
+            trace::SEND_BLOCKED,
+            trace::WEIGHT_SYNC,
+            trace::OFFLOAD_WAIT,
+            "custom_phase",
+        ];
+        let mut s = String::new();
+        let tracks = g.usize(1, 3);
+        for tr in 0..tracks {
+            let track = format!("track-{tr}");
+            let mut t = g.f64(0.0, 100.0);
+            for _ in 0..g.usize(1, 6) {
+                t += g.f64(0.0, 500.0);
+                let dur = g.f64(100.0, 2000.0);
+                let name = *g.choice(&names);
+                ev(&mut s, t, &track, "B", name, 0.0);
+                if dur > 400.0 {
+                    // one properly nested child
+                    let child = *g.choice(&names);
+                    ev(&mut s, t + dur * 0.25, &track, "B", child, 0.0);
+                    ev(&mut s, t + dur * 0.75, &track, "E", child, 0.0);
+                }
+                ev(&mut s, t + dur, &track, "E", name, 0.0);
+                t += dur;
+            }
+        }
+        let path = tmp(&format!("prop_stream_{}.jsonl", g.usize(0, 1 << 30)));
+        std::fs::write(&path, &s).unwrap();
+
+        let run = load(&path).unwrap();
+        assert!(run.violations.is_empty(), "{:?}", run.violations);
+        let attrs = attribute(&run.spans, run.t_min_us, run.t_max_us);
+        assert_eq!(attrs.len(), tracks);
+        for a in &attrs {
+            assert!(a.busy_frac() <= 1.0 + 1e-9, "{}: {}", a.track, a.busy_frac());
+            let classes = a.compute_secs + a.channel_secs + a.sync_secs + a.offload_secs;
+            assert!((classes - a.busy_secs).abs() < 1e-9 * a.busy_secs.max(1e-12));
+            assert!(a.idle_secs >= 0.0);
+            assert!((a.busy_secs + a.idle_secs - a.window_secs).abs() < 1e-9);
+        }
+        let cp = extract(&run.spans, run.t_min_us, run.t_max_us);
+        assert!(cp.bounding == "none" || PLANES.contains(&cp.bounding));
+        for st in &cp.steps {
+            assert!(st.bounding == "none" || PLANES.contains(&st.bounding));
+        }
+    });
+}
