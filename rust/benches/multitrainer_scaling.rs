@@ -1,0 +1,235 @@
+//! Bench: multi-trainer data parallelism + the periodic-asynchrony curve.
+//!
+//! Two measurements:
+//!
+//! * **trainer scaling** — the identical pre-filled [`RolloutStore`] is
+//!   drained by 1 vs 2 trainer replicas. Each replica owns the static
+//!   round-robin slice of the step sequence the runtime uses (step `s`
+//!   belongs to replica `(s % n + n - 1) % n`), samples its disjoint
+//!   shard-slice via `sample_slice`, burns a fixed per-row optimizer cost,
+//!   and publishes through its own registered publisher on a real
+//!   [`WeightsBus`] (`register_publisher` / `publish_from`). Measured:
+//!   trained-rows/sec per arm; the headline ratio `trainer_scaling_2x`
+//!   must clear 1.6x (gated by tools/bench_gate.sh).
+//! * **periodic curve** — the DES runs the same config through
+//!   `simulate_sync`, `simulate_async`, and `simulate_periodic`: the
+//!   period fence must land between the two architectures' wall clocks
+//!   (slower than free-running async, faster than sync).
+//!
+//! Shape checks (acceptance): both arms drain the full row quota, the
+//! 2-replica partition is exactly disjoint (each replica trains exactly
+//! half, nothing sampled twice), every step published, and the periodic
+//! DES point sits between sync and async.
+//!
+//! Emits `BENCH_multitrainer.json` (stdout line + target/ copy; gated
+//! against the committed repo-root baseline by tools/bench_gate.sh).
+//!
+//! CI smoke: `LLAMARL_BENCH_ROUNDS=3` caps the workload.
+
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use llamarl::data::{Difficulty, Problem};
+use llamarl::dataplane::{RolloutStore, StoreConfig};
+use llamarl::ddma::WeightsBus;
+use llamarl::rl::{FinishReason, Trajectory};
+use llamarl::simulator::{simulate_async, simulate_periodic, simulate_sync, DesConfig};
+use llamarl::util::bench::{bench_rounds, fmt_secs};
+use llamarl::util::json::Value;
+
+const BATCH: usize = 32;
+const SHARDS: usize = 8;
+const PARAMS: usize = 8192;
+
+/// A fixed few hundred microseconds of real compute per trained row — the
+/// per-row optimizer cost the replicas parallelize.
+fn train_row(scratch: &mut [u64]) {
+    let mut acc = 0x2545_F491_4F6C_DD1Du64;
+    for _ in 0..4 {
+        for w in scratch.iter_mut() {
+            acc = acc.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(11) ^ *w;
+            *w = w.wrapping_add(acc);
+        }
+    }
+    black_box(acc);
+}
+
+fn row(group_id: u64) -> Trajectory {
+    Trajectory {
+        group_id,
+        replica: 0,
+        n_replicas: 1,
+        problem: Problem {
+            prompt: "1+1=".into(),
+            answer: "2".into(),
+            difficulty: Difficulty::Add1,
+        },
+        prompt_tokens: vec![1, 2],
+        response_tokens: vec![3],
+        behavior_logp: vec![-0.5],
+        gen_version: 0,
+        chunks: 1,
+        finish: FinishReason::Eos,
+        reward: 0.0,
+        advantage: 0.0,
+    }
+}
+
+struct ArmOut {
+    wall_secs: f64,
+    per_replica: Vec<u64>,
+    publishes: u64,
+}
+
+/// Drain `steps` optimizer steps of BATCH rows each from a pre-filled
+/// store with `n_trainers` data-parallel replicas.
+fn run_arm(n_trainers: usize, steps: u64) -> ArmOut {
+    let total_rows = steps as usize * BATCH;
+    let store = Arc::new(RolloutStore::new(StoreConfig {
+        capacity: total_rows,
+        max_staleness: None,
+        shards: SHARDS,
+        ..StoreConfig::default()
+    }));
+    // sequential group ids spread evenly over the shards (shard = id % n),
+    // so each replica's slice holds exactly its share of the rows
+    for g in 0..total_rows as u64 {
+        store.push_group(vec![row(g)]).expect("prefill fits capacity");
+    }
+    store.close(); // no producers: replicas drain to their quota
+    let bus = Arc::new(WeightsBus::new(vec![0.0f32; PARAMS]));
+    let publishers: Vec<usize> = (0..n_trainers)
+        .map(|r| if r == 0 { 0 } else { bus.register_publisher() })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (r, publisher) in publishers.into_iter().enumerate() {
+        let store = store.clone();
+        let bus = bus.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut scratch = vec![1u64; 32 * 1024];
+            let params = vec![0.0f32; PARAMS];
+            let n = n_trainers as u64;
+            let want = (r as u64 + 1) % n;
+            let mut trained = 0u64;
+            let mut s = 0u64;
+            loop {
+                // the runtime's static round-robin step partition
+                let c = s + 1;
+                let next = c + (want + n - c % n) % n;
+                if next > steps {
+                    break;
+                }
+                s = next;
+                let mut got = 0usize;
+                while got < BATCH {
+                    match store.sample_slice(
+                        r,
+                        n_trainers,
+                        BATCH - got,
+                        Duration::from_millis(100),
+                    ) {
+                        Some(rows) if rows.is_empty() => continue,
+                        Some(rows) => {
+                            for _ in &rows {
+                                train_row(&mut scratch);
+                            }
+                            got += rows.len();
+                        }
+                        None => break, // slice drained
+                    }
+                }
+                trained += got as u64;
+                bus.publish_from(publisher, params.clone());
+            }
+            trained
+        }));
+    }
+    let per_replica: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    ArmOut {
+        wall_secs: t0.elapsed().as_secs_f64(),
+        per_replica,
+        publishes: bus.publish_count(),
+    }
+}
+
+fn main() {
+    println!("\n=== multi-trainer scaling + periodic-asynchrony curve ===\n");
+    let rounds = bench_rounds(12);
+    let steps = rounds as u64 * 2; // even: splits exactly across 2 replicas
+    let total_rows = steps * BATCH as u64;
+    println!("workload: {steps} steps x {BATCH} rows, {SHARDS} store shards\n");
+
+    let one = run_arm(1, steps);
+    let two = run_arm(2, steps);
+
+    let rows = |a: &ArmOut| -> u64 { a.per_replica.iter().sum() };
+    let one_rps = rows(&one) as f64 / one.wall_secs.max(1e-9);
+    let two_rps = rows(&two) as f64 / two.wall_secs.max(1e-9);
+    let scaling = two_rps / one_rps.max(1e-9);
+
+    println!(
+        "1 trainer:  {} rows in {} ({:.0} rows/s)",
+        rows(&one),
+        fmt_secs(one.wall_secs),
+        one_rps
+    );
+    println!(
+        "2 trainers: {} rows in {} ({:.0} rows/s, {:.2}x) split {:?}",
+        rows(&two),
+        fmt_secs(two.wall_secs),
+        two_rps,
+        scaling,
+        two.per_replica
+    );
+
+    // the DES curve: the period fence must sit between the architectures
+    let des = DesConfig {
+        steps: 120,
+        ..DesConfig::default()
+    };
+    let d_sync = simulate_sync(&des);
+    let d_async = simulate_async(&des);
+    let d_per = simulate_periodic(&des, 4);
+    println!(
+        "\nDES wall clock (120 steps): sync {} > periodic {} >= async {}\n",
+        fmt_secs(d_sync.total_secs),
+        fmt_secs(d_per.total_secs),
+        fmt_secs(d_async.total_secs)
+    );
+
+    let rows_complete = rows(&one) == total_rows && rows(&two) == total_rows;
+    let partition_disjoint = two.per_replica.len() == 2
+        && two.per_replica.iter().all(|&r| r == total_rows / 2);
+    let publishes_complete = one.publishes >= steps && two.publishes >= steps;
+    let periodic_between = d_async.total_secs <= d_per.total_secs + 1e-9
+        && d_per.total_secs < d_sync.total_secs;
+    println!(
+        "shape checks: both arms drained {total_rows} rows: {}; 2-replica \
+         partition exactly disjoint: {}; every step published: {}; periodic \
+         between sync and async: {}\n",
+        if rows_complete { "PASS" } else { "FAIL" },
+        if partition_disjoint { "PASS" } else { "FAIL" },
+        if publishes_complete { "PASS" } else { "FAIL" },
+        if periodic_between { "PASS" } else { "FAIL" },
+    );
+
+    let json = Value::object(vec![
+        ("rounds", Value::num(rounds as f64)),
+        ("steps", Value::num(steps as f64)),
+        ("batch", Value::num(BATCH as f64)),
+        ("one_trainer_rows_per_sec", Value::num(one_rps)),
+        ("two_trainer_rows_per_sec", Value::num(two_rps)),
+        ("trainer_scaling_2x", Value::num(scaling)),
+        ("des_sync_secs", Value::num(d_sync.total_secs)),
+        ("des_periodic_secs", Value::num(d_per.total_secs)),
+        ("des_async_secs", Value::num(d_async.total_secs)),
+        ("rows_complete", Value::Bool(rows_complete)),
+        ("partition_disjoint", Value::Bool(partition_disjoint)),
+        ("publishes_complete", Value::Bool(publishes_complete)),
+        ("periodic_between", Value::Bool(periodic_between)),
+    ]);
+    llamarl::util::bench::emit_summary("BENCH_multitrainer.json", &json);
+}

@@ -15,7 +15,8 @@
 
 use crate::analysis::ingest::RunData;
 use crate::simulator::des::{
-    simulate_async, simulate_async_buffered, simulate_sync, BufferedDesConfig, DesConfig,
+    simulate_async, simulate_async_buffered, simulate_periodic, simulate_sync,
+    BufferedDesConfig, DesConfig,
 };
 use crate::trace;
 use crate::util::error::{Error, Result};
@@ -169,6 +170,13 @@ pub fn diverge(data: &RunData) -> Result<Divergence> {
     let report = match mode.as_str() {
         "sync" => simulate_sync(&des),
         "async" => simulate_async(&des),
+        "periodic" => simulate_periodic(
+            &des,
+            cfg.get("period_steps")
+                .and_then(Value::as_usize)
+                .unwrap_or(1)
+                .max(1),
+        ),
         _ => {
             let max_staleness = cfg
                 .get("max_staleness")

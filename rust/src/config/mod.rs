@@ -59,8 +59,9 @@ fn parse_mode(s: &str) -> Result<Mode> {
         "sync" => Ok(Mode::Sync),
         "async" => Ok(Mode::Async),
         "async_buffered" | "buffered" => Ok(Mode::AsyncBuffered),
+        "periodic" => Ok(Mode::Periodic),
         other => Err(Error::Config(format!(
-            "mode must be sync|async|async_buffered, got '{other}'"
+            "mode must be sync|async|async_buffered|periodic, got '{other}'"
         ))),
     }
 }
@@ -113,6 +114,12 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             "n_generator_workers" => cfg.n_generator_workers = val.as_usize().unwrap_or(1),
             "n_reward_workers" => {
                 cfg.n_reward_workers = val.as_usize().unwrap_or(1).max(1)
+            }
+            "n_trainer_workers" => {
+                cfg.n_trainer_workers = val.as_usize().unwrap_or(1).max(1)
+            }
+            "period_steps" => {
+                cfg.period_steps = val.as_i64().unwrap_or(4).max(1) as u64
             }
             "queue_capacity" => cfg.queue_capacity = val.as_usize().unwrap_or(4),
             "scored_capacity" => cfg.scored_capacity = val.as_usize().unwrap_or(8),
@@ -193,6 +200,9 @@ pub fn apply_json(cfg: &mut PipelineConfig, v: &Value) -> Result<()> {
             }
             "chaos_kills" => cfg.chaos_kills = val.as_i64().unwrap_or(0).max(0) as u64,
             "chaos_seed" => cfg.chaos_seed = val.as_i64().unwrap_or(0) as u64,
+            "chaos_reward_kills" => {
+                cfg.chaos_reward_kills = val.as_i64().unwrap_or(0).max(0) as u64
+            }
             "elastic_resize" => cfg.elastic_resize = val.as_bool().unwrap_or(false),
             "resize_max_extra" => cfg.resize_max_extra = val.as_usize().unwrap_or(2),
             other => return Err(Error::Config(format!("unknown config key '{other}'"))),
@@ -216,6 +226,10 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
     cfg.n_reward_workers = args
         .usize_or("reward-workers", cfg.n_reward_workers)?
         .max(1);
+    cfg.n_trainer_workers = args
+        .usize_or("trainers", cfg.n_trainer_workers)?
+        .max(1);
+    cfg.period_steps = args.u64_or("period-steps", cfg.period_steps)?.max(1);
     cfg.queue_capacity = args.usize_or("queue-capacity", cfg.queue_capacity)?;
     cfg.store.capacity = args.usize_or("store-capacity", cfg.store.capacity)?.max(1);
     cfg.store.shards = args.usize_or("store-shards", cfg.store.shards)?.max(1);
@@ -306,6 +320,7 @@ pub fn apply_cli(cfg: &mut PipelineConfig, args: &Args) -> Result<()> {
         .max(1);
     cfg.chaos_kills = args.u64_or("chaos-kills", cfg.chaos_kills)?;
     cfg.chaos_seed = args.u64_or("chaos-seed", cfg.chaos_seed)?;
+    cfg.chaos_reward_kills = args.u64_or("chaos-reward-kills", cfg.chaos_reward_kills)?;
     if args.flag("elastic-resize") {
         cfg.elastic_resize = true;
     }
@@ -328,6 +343,7 @@ fn mode_name(m: Mode) -> &'static str {
         Mode::Sync => "sync",
         Mode::Async => "async",
         Mode::AsyncBuffered => "async_buffered",
+        Mode::Periodic => "periodic",
     }
 }
 
@@ -359,6 +375,8 @@ pub fn to_json(cfg: &PipelineConfig) -> Value {
         ("mode", Value::str(mode_name(cfg.mode))),
         ("n_generator_workers", Value::num(cfg.n_generator_workers as f64)),
         ("n_reward_workers", Value::num(cfg.n_reward_workers as f64)),
+        ("n_trainer_workers", Value::num(cfg.n_trainer_workers as f64)),
+        ("period_steps", Value::num(cfg.period_steps as f64)),
         ("queue_capacity", Value::num(cfg.queue_capacity as f64)),
         ("scored_capacity", Value::num(cfg.scored_capacity as f64)),
         ("store_capacity", Value::num(cfg.store.capacity as f64)),
@@ -408,6 +426,7 @@ pub fn to_json(cfg: &PipelineConfig) -> Value {
         ("restart_backoff_ms", Value::num(cfg.restart_backoff_ms as f64)),
         ("chaos_kills", Value::num(cfg.chaos_kills as f64)),
         ("chaos_seed", Value::num(cfg.chaos_seed as f64)),
+        ("chaos_reward_kills", Value::num(cfg.chaos_reward_kills as f64)),
         ("elastic_resize", Value::Bool(cfg.elastic_resize)),
         ("resize_max_extra", Value::num(cfg.resize_max_extra as f64)),
     ];
@@ -637,8 +656,11 @@ mod tests {
         cfg.restart_backoff_ms = 25;
         cfg.chaos_kills = 4;
         cfg.chaos_seed = 99;
+        cfg.chaos_reward_kills = 2;
         cfg.elastic_resize = true;
         cfg.resize_max_extra = 1;
+        cfg.n_trainer_workers = 2;
+        cfg.period_steps = 8;
         let v = to_json(&cfg);
         let mut rebuilt = PipelineConfig::default();
         apply_json(&mut rebuilt, &v).unwrap();
@@ -660,8 +682,43 @@ mod tests {
         assert_eq!(rebuilt.restart_backoff_ms, 25);
         assert_eq!(rebuilt.chaos_kills, 4);
         assert_eq!(rebuilt.chaos_seed, 99);
+        assert_eq!(rebuilt.chaos_reward_kills, 2);
         assert!(rebuilt.elastic_resize);
         assert_eq!(rebuilt.resize_max_extra, 1);
+        assert_eq!(rebuilt.n_trainer_workers, 2);
+        assert_eq!(rebuilt.period_steps, 8);
+    }
+
+    #[test]
+    fn trainer_fleet_and_periodic_overrides() {
+        let mut cfg = preset("nano").unwrap();
+        assert_eq!(cfg.n_trainer_workers, 1, "single trainer is the default");
+        let v = Value::parse(
+            r#"{"mode":"periodic","n_trainer_workers":2,"period_steps":6}"#,
+        )
+        .unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert_eq!(cfg.mode, Mode::Periodic);
+        assert_eq!(cfg.n_trainer_workers, 2);
+        assert_eq!(cfg.period_steps, 6);
+
+        let args = Args::parse(
+            ["--trainers", "3", "--period-steps", "2", "--chaos-reward-kills", "1"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.n_trainer_workers, 3);
+        assert_eq!(cfg.period_steps, 2);
+        assert_eq!(cfg.chaos_reward_kills, 1);
+        // 0 clamps to 1 on both knobs — a topology always has a trainer
+        // fleet, and a period fence needs a non-empty period
+        let v = Value::parse(r#"{"n_trainer_workers":0,"period_steps":0}"#).unwrap();
+        apply_json(&mut cfg, &v).unwrap();
+        assert_eq!(cfg.n_trainer_workers, 1);
+        assert_eq!(cfg.period_steps, 1);
     }
 
     #[test]

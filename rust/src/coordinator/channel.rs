@@ -19,13 +19,20 @@
 //! lag in the async pipeline (a generator can run at most
 //! `capacity / rows-per-step` steps ahead of the trainer).
 //!
+//! Consumer slots are *re-routable*: when a consumer's panic destroys its
+//! receiver (mpsc receivers cannot be cloned or salvaged off a dead
+//! stack), its supervisor mints a replacement via [`Outbound::reroute`]
+//! and every producer clone transparently retries onto the fresh queue —
+//! the elasticity path that makes a reward-fleet panic restartable
+//! instead of terminal.
+//!
 //! Weight updates use the dedicated DDMA bus ([`crate::ddma::WeightsBus`])
 //! rather than a message channel — matching the paper's distinction between
 //! data channels and the DDMA weights path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender, TrySendError};
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::rl::Trajectory;
@@ -83,10 +90,21 @@ impl ChannelStats {
     }
 }
 
+/// One consumer slot: the live sender plus an epoch the supervisor bumps
+/// when it re-routes a dead consumer (see [`Outbound::reroute`]). Slots are
+/// shared across every `Outbound` clone, so a swap is visible to all
+/// producers at once.
+struct Slot {
+    epoch: u64,
+    tx: SyncSender<Message>,
+}
+
 /// Sending half. Cloneable for GATHER / GROUP-ROUTED (many producers).
 pub struct Outbound {
     pub name: String,
-    senders: Vec<SyncSender<Message>>,
+    slots: Arc<Vec<RwLock<Slot>>>,
+    /// per-consumer queue bound, reused when a slot is re-routed
+    capacity: usize,
     next: std::cell::Cell<usize>,
     /// deliver each trajectory to consumer `group_id % n` instead of
     /// round-robining whole messages (see [`routed_channel`])
@@ -98,7 +116,8 @@ impl Clone for Outbound {
     fn clone(&self) -> Self {
         Outbound {
             name: self.name.clone(),
-            senders: self.senders.clone(),
+            slots: self.slots.clone(),
+            capacity: self.capacity,
             next: std::cell::Cell::new(0),
             route_by_group: self.route_by_group,
             stats: self.stats.clone(),
@@ -121,22 +140,75 @@ fn count_items(m: &Message) -> u64 {
 }
 
 impl Outbound {
+    /// The slot's live sender, cloned OUT of the lock — a blocking send
+    /// must never hold the slot lock, or a re-route could not swap the
+    /// sender from under a backpressured producer.
+    fn sender(&self, idx: usize) -> (u64, SyncSender<Message>) {
+        let s = self.slots[idx].read().unwrap();
+        (s.epoch, s.tx.clone())
+    }
+
+    /// Send to one consumer slot, retrying across re-routes. A dead slot is
+    /// either being re-routed by its supervisor (a fresh receiver swaps in
+    /// before the restart backoff even starts) or gone for good (shutdown);
+    /// wait a bounded grace for the epoch to advance and retry on the new
+    /// channel, so a reward replica's panic is invisible to producers
+    /// instead of a ChannelClosed cascade.
+    fn send_slot(&self, idx: usize, mut msg: Message) -> Result<()> {
+        loop {
+            let (epoch, tx) = self.sender(idx);
+            match tx.send(msg) {
+                Ok(()) => return Ok(()),
+                Err(SendError(m)) => {
+                    msg = m;
+                    let deadline = Instant::now() + Duration::from_millis(200);
+                    loop {
+                        if self.slots[idx].read().unwrap().epoch != epoch {
+                            break; // re-routed: retry on the fresh sender
+                        }
+                        if Instant::now() >= deadline {
+                            return Err(Error::ChannelClosed(self.name.clone()));
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Replace consumer slot `idx` with a freshly minted queue and hand
+    /// back its receiving half — the supervisor's recovery path for a
+    /// consumer whose panic destroyed the old receiver. Every producer
+    /// clone sees the swap (slots are shared); messages still queued in
+    /// the dead receiver are lost, which is the same contract as the
+    /// consumer having died before draining them. Stats carry over so
+    /// channel telemetry stays cumulative across re-routes.
+    pub fn reroute(&self, idx: usize) -> Inbound {
+        let (tx, rx) = sync_channel(self.capacity);
+        let mut slot = self.slots[idx].write().unwrap();
+        slot.epoch += 1;
+        slot.tx = tx;
+        Inbound {
+            name: self.name.clone(),
+            rx,
+            stats: self.stats.clone(),
+        }
+    }
+
     /// Blocking send with backpressure accounting. SCATTER round-robins the
     /// message to one inbound process; GATHER/BROADCAST have a single slot;
     /// GROUP-ROUTED splits the message's trajectories by `group_id % n`
     /// and delivers each part to its owning consumer.
     pub fn send(&self, msg: Message) -> Result<()> {
-        if self.route_by_group && self.senders.len() > 1 {
+        if self.route_by_group && self.slots.len() > 1 {
             return self.send_routed(msg);
         }
         let items = count_items(&msg);
-        let idx = self.next.get() % self.senders.len();
+        let idx = self.next.get() % self.slots.len();
         self.next.set(idx + 1);
         let t0 = Instant::now();
         let span = trace::span(trace::SEND_BLOCKED);
-        self.senders[idx]
-            .send(msg)
-            .map_err(|_| Error::ChannelClosed(self.name.clone()))?;
+        self.send_slot(idx, msg)?;
         drop(span);
         // (send on a non-full channel is ~free; anything measurable is
         // backpressure block time)
@@ -152,12 +224,13 @@ impl Outbound {
     /// rather than silently violating group integrity the message is
     /// handed back unsent (use the blocking [`Outbound::send`] there).
     pub fn try_send(&self, msg: Message) -> std::result::Result<(), Message> {
-        if self.route_by_group && self.senders.len() > 1 {
+        if self.route_by_group && self.slots.len() > 1 {
             return Err(msg);
         }
         let items = count_items(&msg);
-        let idx = self.next.get() % self.senders.len();
-        match self.senders[idx].try_send(msg) {
+        let idx = self.next.get() % self.slots.len();
+        let (_, tx) = self.sender(idx);
+        match tx.try_send(msg) {
             Ok(()) => {
                 self.next.set(idx + 1);
                 self.stats.messages.fetch_add(1, Ordering::Relaxed);
@@ -173,7 +246,7 @@ impl Outbound {
     /// a prompt's advantage group lands on the same inbound process. EOF
     /// broadcasts (same as [`Outbound::send_eof`]).
     fn send_routed(&self, msg: Message) -> Result<()> {
-        let n = self.senders.len();
+        let n = self.slots.len();
         let (scored, items) = match msg {
             Message::Trajectories(v) => (false, v),
             Message::Scored(v) => (true, v),
@@ -198,9 +271,7 @@ impl Outbound {
             } else {
                 Message::Trajectories(part)
             };
-            self.senders[i]
-                .send(wrapped)
-                .map_err(|_| Error::ChannelClosed(self.name.clone()))?;
+            self.send_slot(i, wrapped)?;
             self.stats.items.fetch_add(count, Ordering::Relaxed);
         }
         // one message + one blocked-time sample per send() CALL, however
@@ -213,8 +284,9 @@ impl Outbound {
 
     /// Signal EOF to every inbound process.
     pub fn send_eof(&self) {
-        for s in &self.senders {
-            let _ = s.send(Message::Eof);
+        for i in 0..self.slots.len() {
+            let (_, tx) = self.sender(i);
+            let _ = tx.send(Message::Eof);
         }
     }
 }
@@ -249,22 +321,8 @@ impl Inbound {
 
 /// GATHER: many producers (clone the Outbound), one consumer.
 pub fn gather_channel(name: &str, capacity: usize) -> (Outbound, Inbound) {
-    let (tx, rx) = sync_channel(capacity);
-    let stats = Arc::new(ChannelStats::default());
-    (
-        Outbound {
-            name: name.to_string(),
-            senders: vec![tx],
-            next: std::cell::Cell::new(0),
-            route_by_group: false,
-            stats: stats.clone(),
-        },
-        Inbound {
-            name: name.to_string(),
-            rx,
-            stats,
-        },
-    )
+    let (tx, mut rxs) = fan_out_channel(name, capacity, 1, false);
+    (tx, rxs.pop().expect("one consumer"))
 }
 
 fn fan_out_channel(
@@ -274,11 +332,11 @@ fn fan_out_channel(
     route_by_group: bool,
 ) -> (Outbound, Vec<Inbound>) {
     let stats = Arc::new(ChannelStats::default());
-    let mut senders = Vec::with_capacity(n);
+    let mut slots = Vec::with_capacity(n);
     let mut inbounds = Vec::with_capacity(n);
     for _ in 0..n {
         let (tx, rx) = sync_channel(capacity);
-        senders.push(tx);
+        slots.push(RwLock::new(Slot { epoch: 0, tx }));
         inbounds.push(Inbound {
             name: name.to_string(),
             rx,
@@ -288,7 +346,8 @@ fn fan_out_channel(
     (
         Outbound {
             name: name.to_string(),
-            senders,
+            slots: Arc::new(slots),
+            capacity,
             next: std::cell::Cell::new(0),
             route_by_group,
             stats,
@@ -434,6 +493,38 @@ mod tests {
             assert!(matches!(rx.recv().unwrap(), Message::Eof));
             assert!(matches!(rx.recv().unwrap(), Message::Eof));
         }
+    }
+
+    #[test]
+    fn reroute_swaps_consumer_slot_for_all_producers() {
+        let n = 2;
+        let (tx, mut rxs) = routed_channel("reroute", 4, n);
+        // consumer 1 "panics": its receiver is destroyed with no salvage
+        drop(rxs.remove(1));
+        // a second producer clone sends a group owned by the dead slot; it
+        // must ride out the gap and land on the re-routed queue
+        let tx2 = tx.clone();
+        let sender = std::thread::spawn(move || tx2.send(Message::Trajectories(vec![traj(1)])));
+        std::thread::sleep(Duration::from_millis(10));
+        let fresh = tx.reroute(1);
+        sender.join().unwrap().expect("send retries onto the fresh slot");
+        let Message::Trajectories(v) = fresh.recv().unwrap() else {
+            panic!("expected trajectories on the re-routed receiver");
+        };
+        assert_eq!(v[0].group_id, 1);
+        // slot 0 was untouched throughout
+        tx.send(Message::Trajectories(vec![traj(0)])).unwrap();
+        assert!(matches!(rxs[0].recv().unwrap(), Message::Trajectories(_)));
+    }
+
+    #[test]
+    fn dead_slot_without_reroute_still_reports_closed() {
+        let (tx, rx) = gather_channel("dead", 2);
+        drop(rx);
+        // nobody re-routes: after the bounded grace the producer gets the
+        // same ChannelClosed the shutdown path has always relied on
+        let err = tx.send(Message::Trajectories(vec![traj(0)]));
+        assert!(err.is_err());
     }
 
     #[test]

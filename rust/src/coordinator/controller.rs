@@ -3,7 +3,7 @@
 //! planes (weight-sync, memory), and launches it through the one generic
 //! graph runtime ([`crate::coordinator::graph`]).
 //!
-//! Three modes, three *topology descriptions* — one runtime:
+//! Four modes, four *topology descriptions* — one runtime:
 //!
 //! * [`Mode::Sync`] — the DeepSpeed-Chat-like baseline (paper §8.1): the
 //!   same graph driven by the stepped scheduler, strictly sequential
@@ -17,9 +17,17 @@
 //! * [`Mode::AsyncBuffered`] — the streaming data plane: scored groups
 //!   land in a sharded [`RolloutStore`](crate::dataplane::RolloutStore)
 //!   with an enforced max-staleness bound instead of a scored channel.
+//! * [`Mode::Periodic`] — periodic asynchrony: the buffered data plane
+//!   plus a period fence — generators free-run for `period_steps` trainer
+//!   steps, the trainer fleet steps synchronously at the boundary, one
+//!   coalesced publish per period.
 //!
 //! In every mode reward scoring is a fleet (`n_reward_workers`), scattered
-//! over generation groups by group id with group integrity preserved.
+//! over generation groups by group id with group integrity preserved. In
+//! the store-backed modes training is a fleet too (`n_trainer_workers`):
+//! replicas sample disjoint shard-slices, partition the global step
+//! sequence round-robin, and publish through the bus's multi-publisher
+//! path.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -47,6 +55,13 @@ pub enum Mode {
     Sync,
     Async,
     AsyncBuffered,
+    /// Periodic asynchrony (PAPERS.md, arXiv 2511.18871): generators
+    /// free-run against the rollout store for `period_steps` trainer
+    /// steps, the trainer fleet steps synchronously at each period
+    /// boundary, and exactly one coalesced publish goes out per period
+    /// — recovering most of async throughput while bounding off-policy
+    /// lag to one period.
+    Periodic,
 }
 
 /// Sharded weight-sync plane configuration: how each publish is resharded
@@ -98,6 +113,16 @@ pub struct PipelineConfig {
     /// is scored by exactly one node, so the advantage baseline stays
     /// intact while scoring throughput scales
     pub n_reward_workers: usize,
+    /// data-parallel trainer fleet size (store-backed modes only): each
+    /// replica samples a disjoint shard-slice of the rollout store and
+    /// the fleet partitions the global step sequence round-robin, all
+    /// replicas publishing through one shared reshard plan via the bus's
+    /// multi-publisher path. Requires `store.shards >= n_trainer_workers`.
+    pub n_trainer_workers: usize,
+    /// Mode::Periodic period length, in global trainer steps: generators
+    /// free-run for one period, the trainer fleet fences at each period
+    /// boundary and publishes exactly once per period
+    pub period_steps: u64,
     /// gen->reward capacity per reward replica, in messages (bounds
     /// off-policy lag)
     pub queue_capacity: usize,
@@ -159,6 +184,12 @@ pub struct PipelineConfig {
     pub chaos_kills: u64,
     /// seed for the chaos kill schedule (same seed = same schedule)
     pub chaos_seed: u64,
+    /// CHAOS MODE: inject this many seeded reward-replica PANICS (not
+    /// errors), spread round-robin across the reward fleet — exercises
+    /// the inbound-receiver re-creation path, where the dying attempt's
+    /// receiver is lost and the supervisor re-routes a fresh one
+    /// (0 disables)
+    pub chaos_reward_kills: u64,
     /// enable the queue-depth-driven fleet controller: spawn dynamic
     /// generator replicas while the trainer starves on the store, retire
     /// them when admission backs up (Mode::AsyncBuffered only)
@@ -178,6 +209,8 @@ impl Default for PipelineConfig {
             mode: Mode::Async,
             n_generator_workers: 1,
             n_reward_workers: 1,
+            n_trainer_workers: 1,
+            period_steps: 4,
             queue_capacity: 4,
             scored_capacity: 8,
             store: StoreConfig::default(),
@@ -206,6 +239,7 @@ impl Default for PipelineConfig {
             restart_backoff_ms: 50,
             chaos_kills: 0,
             chaos_seed: 0,
+            chaos_reward_kills: 0,
             elastic_resize: false,
             resize_max_extra: 2,
             debug_fail_generator_after: None,
@@ -367,6 +401,18 @@ pub fn run_training(cfg: &PipelineConfig) -> Result<RunReport> {
     }
     if cfg.n_generations == 0 || cfg.max_steps == 0 {
         return Err(Error::Config("n_generations and max_steps must be > 0".into()));
+    }
+    // Trainer fleets partition the store by shard slice: replica k owns
+    // shards where `shard % n_trainers == k`, so every replica must own
+    // at least one shard or it would spin on an empty slice forever.
+    if cfg.n_trainer_workers > 1 && cfg.store.shards < cfg.n_trainer_workers {
+        return Err(Error::Config(format!(
+            "n_trainer_workers ({}) requires store_shards >= trainers (got {})",
+            cfg.n_trainer_workers, cfg.store.shards
+        )));
+    }
+    if cfg.mode == Mode::Periodic && cfg.period_steps == 0 {
+        return Err(Error::Config("period_steps must be > 0".into()));
     }
 
     // Resolve the declarative topology FIRST: the planes below derive

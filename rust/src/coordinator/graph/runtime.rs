@@ -26,7 +26,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::channel::{gather_channel, routed_channel, ChannelStats, Inbound, Outbound};
-use crate::coordinator::controller::{PipelineConfig, RunReport};
+use crate::coordinator::controller::{Mode, PipelineConfig, RunReport};
 use crate::coordinator::evaluator::{eval_policy, EvaluatorConfig, EvaluatorExecutor};
 use crate::coordinator::executor::{
     run_executor_loop, run_executor_loop_initialized, Executor, ExecutorContext, StepOutcome,
@@ -36,7 +36,7 @@ use crate::coordinator::graph::supervisor::{supervise, ChaosSchedule};
 use crate::coordinator::graph::telemetry::{ElasticStats, RewardTally, TelemetryHub};
 use crate::coordinator::graph::topology::{EdgeKind, Graph, LeasePolicy, NodeKind};
 use crate::coordinator::reward::{RewardExecutor, ScoredSink};
-use crate::coordinator::trainer::{Trainer, TrainerConfig, TrajectorySource};
+use crate::coordinator::trainer::{FleetState, Trainer, TrainerConfig, TrajectorySource};
 use crate::data::{task, PromptScheduler};
 use crate::dataplane::{RolloutStore, StoreConfig, StoreDump};
 use crate::journal::{JournalRecord, SnapshotDaemon, SnapshotRecord, StoreSnapshot};
@@ -90,12 +90,22 @@ fn trainer_cfg(cfg: &PipelineConfig) -> TrainerConfig {
         artifact_dir: cfg.artifact_dir.clone(),
         aipo: cfg.aipo,
         max_steps: cfg.max_steps,
-        publish_every: 1,
+        // periodic mode coalesces publication to ONE bus publish per
+        // period — the boundary step's owner publishes for the fleet
+        publish_every: if matches!(cfg.mode, Mode::Periodic) {
+            cfg.period_steps.max(1)
+        } else {
+            1
+        },
         checkpoint_every: cfg.checkpoint_every,
         // crash-resume: the optimizer clock continues from the journaled
         // step, seeded from the newest on-disk checkpoint when one exists
         start_step: cfg.resume.as_ref().map(|r| r.start_step).unwrap_or(0),
         resume_state: cfg.resume.as_ref().and_then(|r| r.init_state.clone()),
+        replica: 0,
+        n_replicas: 1,
+        publisher: 0,
+        fleet: None,
     }
 }
 
@@ -596,16 +606,25 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
         })),
         _ => None,
     };
-    drop(gen_tx);
-
     // reward fleet: group-routed inbound queues, one shared scored sink.
-    // Supervised like the generators, with one twist: the inbound receiver
-    // is not cloneable, so a dead attempt is *salvaged* — its queue, EOF
-    // count, and buffered (already-scored) partial groups carry into the
-    // replacement executor instead of being rebuilt.
+    // Supervised like the generators, with two twists: the inbound
+    // receiver is not cloneable, so a dead attempt is *salvaged* — its
+    // queue, EOF count, and buffered (already-scored) partial groups carry
+    // into the replacement executor instead of being rebuilt; and when a
+    // PANIC destroys the receiver with the unwound stack (no salvage
+    // possible), the restart hook re-routes the replica's consumer slot to
+    // a freshly minted queue before the backoff even starts, so producers
+    // retry onto it transparently. The reroute handles are cloned BEFORE
+    // gen_tx drops below — an Outbound clone keeps no EOF state (fan-in
+    // counts are message-based), it only keeps the shared slots reachable.
     let n_gen = gen_node.replicas;
     let vocab = env.manifest.config.vocab;
     let reward_node = *graph.node(NodeKind::Reward).expect("check(): reward present");
+    let reward_chaos = ChaosSchedule::new(
+        cfg.chaos_seed ^ 0x5EED_CAFE,
+        cfg.chaos_reward_kills,
+        n_reward,
+    );
     let mut reward_handles = Vec::new();
     for (r, rx) in gen_rxs.into_iter().enumerate() {
         let ctx = env.ctx.clone();
@@ -613,13 +632,25 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
         let baseline = cfg.baseline;
         let restart = reward_node.restart;
         let elastic = elastic.clone();
+        let reroute_tx = gen_tx.clone();
         reward_handles.push(spawn_node(format!("reward-{r}"), fail.clone(), move || {
             let mut tally = RewardTally::default();
-            let mut carried = Some((rx, 0usize, Vec::new()));
+            // RefCell because both supervise closures need the slot: the
+            // restart hook refills it after a panic, the attempt drains it
+            let carried = std::cell::RefCell::new(Some((rx, 0usize, Vec::new())));
             supervise(
                 restart,
                 || ctx.should_stop(),
                 |attempt, backoff, err| {
+                    if carried.borrow().is_none() {
+                        // the panicked attempt took the receiver down with
+                        // its stack; group-routing makes the re-route cheap:
+                        // mint a fresh queue for this consumer slot and swap
+                        // it in for every producer. Rows/EOFs queued in the
+                        // dead receiver are lost — the replacement converges
+                        // through the stop path like any starved replica.
+                        *carried.borrow_mut() = Some((reroute_tx.reroute(r), 0, Vec::new()));
+                    }
                     elastic.note_restart(0);
                     trace::instant(trace::NODE_RESTART, f64::from(attempt) + 1.0);
                     crate::log_warn!(
@@ -637,16 +668,36 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
                         });
                     }
                 },
-                |_attempt| {
-                    // an attempt that panicked (or died constructing) took
-                    // the receiver down with it — that loss is terminal
-                    let (rx, eofs, buffered) = carried.take().ok_or_else(|| {
-                        Error::Coordinator(format!("reward-{r}: inbound not recoverable"))
-                    })?;
+                |attempt| {
+                    let (rx, eofs, buffered) =
+                        carried.borrow_mut().take().ok_or_else(|| {
+                            Error::Coordinator(format!("reward-{r}: inbound not recoverable"))
+                        })?;
                     let mut rew =
                         RewardExecutor::new(ctx.clone(), rx, sink.clone(), baseline, vocab, n_gen)?;
                     rew.adopt(eofs, buffered);
-                    let res = run_executor_loop(&mut rew, &ctx, None);
+                    let res = match reward_chaos.and_then(|c| c.kill_after(r, attempt)) {
+                        // chaos: drive a few drain passes then die mid-
+                        // flight — a PANIC, not an error, so salvage can't
+                        // save the receiver and the re-route above must
+                        Some(k) => (|| -> Result<()> {
+                            rew.init()?;
+                            let mut made = 0u64;
+                            loop {
+                                match rew.step()? {
+                                    StepOutcome::Finished => return Ok(()),
+                                    StepOutcome::Progress => {
+                                        made += 1;
+                                        if made >= k {
+                                            panic!("chaos: reward-{r} killed after {k} messages");
+                                        }
+                                    }
+                                    _ => {}
+                                }
+                            }
+                        })(),
+                        None => run_executor_loop(&mut rew, &ctx, None),
+                    };
                     tally.add(&RewardTally {
                         scored: rew.scored,
                         groups: rew.groups_emitted,
@@ -655,7 +706,7 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
                     match res {
                         Ok(()) => Ok(()),
                         Err(e) => {
-                            carried = Some(rew.salvage());
+                            *carried.borrow_mut() = Some(rew.salvage());
                             Err(e)
                         }
                     }
@@ -664,6 +715,7 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
             Ok(tally)
         }));
     }
+    drop(gen_tx);
     // only the reward workers' sink clones may signal EOF (store latch /
     // channel senders)
     drop(shared_sink);
@@ -685,11 +737,50 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
         None
     };
 
-    // Trainer on the controller thread (Algorithm 1's "local executor").
-    // Init (artifact compilation) runs OUTSIDE the measured wall clock;
-    // the generator/reward threads warm up concurrently.
-    let mut trainer =
-        Trainer::new(trainer_cfg(cfg), env.ctx.clone(), source, Some(env.log.clone()));
+    // Trainer fleet: replica 0 runs on the controller thread (Algorithm
+    // 1's "local executor"); replicas 1..N are data-parallel peers on
+    // their own threads, each draining a disjoint shard-slice of the
+    // store and publishing through its own registered bus publisher. The
+    // shared FleetState carries the finish countdown (only the LAST
+    // finisher may stop the world) and, in periodic mode, the period
+    // fence that re-synchronizes the fleet every `period_steps`.
+    let n_trainers = graph.replicas(NodeKind::Trainer).max(1);
+    let periodic = matches!(cfg.mode, Mode::Periodic);
+    let fleet_state = (n_trainers > 1 || periodic).then(|| {
+        Arc::new(FleetState::new(
+            n_trainers,
+            if periodic { cfg.period_steps.max(1) } else { 0 },
+            cfg.resume.as_ref().map(|r| r.start_step).unwrap_or(0),
+        ))
+    });
+    let mut trainer_handles = Vec::new();
+    for t in 1..n_trainers {
+        let ctx = env.ctx.clone();
+        let log = env.log.clone();
+        let mut tcfg = trainer_cfg(cfg);
+        tcfg.replica = t;
+        tcfg.n_replicas = n_trainers;
+        tcfg.publisher = env.ctx.weights.register_publisher();
+        tcfg.fleet = fleet_state.clone();
+        // checkpointing stays with replica 0: one writer per ckpt dir
+        tcfg.checkpoint_every = 0;
+        let src = TrajectorySource::Store(
+            store.clone().expect("check(): trainer fleets require the store edge"),
+        );
+        trainer_handles.push(spawn_node(format!("trainer-{t}"), fail.clone(), move || {
+            let mut tr = Trainer::new(tcfg, ctx.clone(), src, Some(log));
+            run_executor_loop(&mut tr, &ctx, None)?;
+            Ok((tr.current_step(), std::mem::take(&mut tr.records)))
+        }));
+    }
+
+    // Trainer replica 0 on the controller thread. Init (artifact
+    // compilation) runs OUTSIDE the measured wall clock; the
+    // generator/reward/peer-trainer threads warm up concurrently.
+    let mut tcfg0 = trainer_cfg(cfg);
+    tcfg0.n_replicas = n_trainers;
+    tcfg0.fleet = fleet_state;
+    let mut trainer = Trainer::new(tcfg0, env.ctx.clone(), source, Some(env.log.clone()));
     let ckpt = (cfg.checkpoint_every > 0).then_some(cfg.checkpoint_every);
     // the controller thread hosts the trainer; name its trace track so
     // publish/store spans land on a "trainer" timeline
@@ -703,6 +794,16 @@ fn run_threaded(graph: &Graph, env: &LaunchEnv<'_>) -> Result<RunReport> {
             }
         }
         Err(e) => fail.record("trainer", e),
+    }
+
+    // join the data-parallel peers BEFORE the global fan-out: an early-
+    // finishing replica 0 must not stop the world while peers still own
+    // later steps (the LAST finisher requests the stop itself, and on any
+    // node error FailState already fanned the stop out)
+    for (i, h) in trainer_handles.into_iter().enumerate() {
+        if let Some((steps, records)) = join_node(h, "trainer", i + 1)? {
+            hub.add_trainer(steps, records);
+        }
     }
 
     // shutdown fan-out: stop every loop, tear down the trainer's source

@@ -17,7 +17,7 @@ use crate::coordinator::controller::RunReport;
 use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::executor::ExecutorContext;
 use crate::coordinator::generator::GenTally;
-use crate::coordinator::trainer::Trainer;
+use crate::coordinator::trainer::{TrainStepRecord, Trainer};
 use crate::dataplane::RolloutStore;
 use crate::util::json::Value;
 
@@ -72,6 +72,12 @@ pub struct TelemetryHub {
     gen: GenTally,
     reward: RewardTally,
     evals: Vec<EvalResult>,
+    /// step records handed back by data-parallel trainer peers (replicas
+    /// 1..N); replica 0's live on the controller's Trainer and the two
+    /// sets merge by step in [`TelemetryHub::finish`]
+    trainer_records: Vec<TrainStepRecord>,
+    /// highest global step any peer completed (fleet clock = max)
+    trainer_steps: u64,
 }
 
 impl TelemetryHub {
@@ -90,6 +96,8 @@ impl TelemetryHub {
             gen: GenTally::default(),
             reward: RewardTally::default(),
             evals: Vec::new(),
+            trainer_records: Vec::new(),
+            trainer_steps: 0,
         }
     }
 
@@ -109,6 +117,15 @@ impl TelemetryHub {
 
     pub fn add_evals(&mut self, evals: Vec<EvalResult>) {
         self.evals.extend(evals);
+    }
+
+    /// Fold in one data-parallel trainer peer's end-of-run state: its step
+    /// records join the merged per-step series and its clock raises the
+    /// fleet's step high-water mark (the fleet clock is a max, matching
+    /// `ctx.trainer_step`'s fetch_max discipline).
+    pub fn add_trainer(&mut self, steps: u64, records: Vec<TrainStepRecord>) {
+        self.trainer_steps = self.trainer_steps.max(steps);
+        self.trainer_records.extend(records);
     }
 
     /// Build the closure the `--metrics-interval` sampler drives: clones
@@ -237,11 +254,16 @@ impl TelemetryHub {
             Some(d) => d.sample_wait_secs,
             None => 0.0,
         };
+        // merge the controller trainer's records with any peers': one
+        // series ordered by global step, whichever replica executed it
+        let mut records = trainer.records.clone();
+        records.extend(self.trainer_records);
+        records.sort_by_key(|r| r.step);
         let mut report = RunReport {
             mode: self.mode_name.into(),
-            steps: trainer.current_step(),
+            steps: trainer.current_step().max(self.trainer_steps),
             wall_secs,
-            records: trainer.records.clone(),
+            records,
             evals: self.evals,
             tokens_generated: self.gen.tokens,
             trajectories: self.gen.trajectories,

@@ -4,7 +4,7 @@
 //! links between them — how many replicas of each [`NodeKind`], which
 //! memory-plane lease each node's thread holds ([`LeasePolicy`]), whether
 //! it receives streamed weight versions, and what [`EdgeKind`] carries the
-//! trajectories. The three execution modes are three small *descriptions*
+//! trajectories. The four execution modes are four small *descriptions*
 //! built by [`topology`]; one generic runtime
 //! ([`super::runtime`]) launches any of them. Sync is not a separate
 //! engine: it is the same graph with step-sized channel capacities, driven
@@ -25,8 +25,11 @@ pub enum NodeKind {
     /// rule-based scoring + group advantages; a fleet receives generation
     /// groups scattered by group id
     Reward,
-    /// the AIPO optimizer (always exactly one replica, on the controller
-    /// thread — Algorithm 1's "local executor")
+    /// the AIPO optimizer fleet (Algorithm 1's "local executor"). Replica
+    /// 0 runs on the controller thread; extra replicas (store-backed modes
+    /// only) are data-parallel threads that sample disjoint shard-slices,
+    /// partition the global step sequence round-robin, and publish through
+    /// the bus's multi-publisher path
     Trainer,
     /// optional held-out benchmark runs every K weight versions
     Evaluator,
@@ -136,7 +139,8 @@ pub struct EdgeSpec {
 /// selects the scheduler, and everything else is nodes and edges.
 #[derive(Debug, Clone)]
 pub struct Graph {
-    /// the mode string reports carry ("sync" / "async" / "async_buffered")
+    /// the mode string reports carry
+    /// ("sync" / "async" / "async_buffered" / "periodic")
     pub mode_name: &'static str,
     /// drive the graph with the stepped one-thread scheduler (strictly
     /// sequential generate → score → train ticks) instead of free-running
@@ -158,8 +162,8 @@ pub fn topology(cfg: &PipelineConfig, manifest: &Manifest) -> Graph {
 pub fn topology_with_rows(cfg: &PipelineConfig, rows_per_step: usize) -> Graph {
     let n_reward = cfg.n_reward_workers.max(1);
     // the generator/reward fleets are restartable when configured; the
-    // trainer (single replica, owns the optimizer clock) and evaluator
-    // never are — their failure is always a global stop
+    // trainer fleet (owns the optimizer clock) and evaluator never are —
+    // their failure is always a global stop
     let fleet_restart = if cfg.restart_max > 0 {
         RestartPolicy::BoundedRetries {
             max: cfg.restart_max,
@@ -175,9 +179,13 @@ pub fn topology_with_rows(cfg: &PipelineConfig, rows_per_step: usize) -> Graph {
         sync_slot: false,
         restart: RestartPolicy::Never,
     };
+    // the configured fleet size lands in the spec for every mode;
+    // `check()` rejects the combinations the runtime cannot execute
+    // (stepped scheduler, channel scored edge) with an explicit error
+    // instead of silently running with one trainer
     let trainer = NodeSpec {
         kind: NodeKind::Trainer,
-        replicas: 1,
+        replicas: cfg.n_trainer_workers.max(1),
         lease: LeasePolicy::None, // brackets its own Train/Sync leases per step
         sync_slot: false,
         restart: RestartPolicy::Never,
@@ -225,10 +233,16 @@ pub fn topology_with_rows(cfg: &PipelineConfig, rows_per_step: usize) -> Graph {
                 ],
             }
         }
-        Mode::Async | Mode::AsyncBuffered => {
-            let buffered = cfg.mode == Mode::AsyncBuffered;
+        Mode::Async | Mode::AsyncBuffered | Mode::Periodic => {
+            // periodic is the buffered topology plus a trainer-side period
+            // fence (runtime concern); the graph shape is identical
+            let buffered = matches!(cfg.mode, Mode::AsyncBuffered | Mode::Periodic);
             Graph {
-                mode_name: if buffered { "async_buffered" } else { "async" },
+                mode_name: match cfg.mode {
+                    Mode::Async => "async",
+                    Mode::Periodic => "periodic",
+                    _ => "async_buffered",
+                },
                 stepped: false,
                 nodes: vec![
                     NodeSpec {
@@ -289,14 +303,33 @@ impl Graph {
     }
 
     /// Structural validation, run before anything spawns: every launchable
-    /// topology has exactly one trainer, at least one generator and reward
-    /// replica, a group-routed generations edge (group integrity), and a
-    /// scored edge the trainer can consume. The stepped scheduler drives a
-    /// single generator.
+    /// topology has at least one trainer, generator, and reward replica, a
+    /// group-routed generations edge (group integrity), and a scored edge
+    /// the trainer can consume. The stepped scheduler drives a single
+    /// generator and a single trainer; a trainer *fleet* (replicas > 1)
+    /// additionally requires the store scored edge — disjoint shard-slice
+    /// sampling is the partitioning mechanism, and a gather channel has no
+    /// equivalent.
     pub fn check(&self) -> Result<()> {
         let fail = |msg: String| Err(Error::Coordinator(format!("invalid topology: {msg}")));
-        if self.replicas(NodeKind::Trainer) != 1 {
-            return fail("exactly one trainer replica required".into());
+        if self.replicas(NodeKind::Trainer) == 0 {
+            return fail("at least one trainer replica required".into());
+        }
+        if self.replicas(NodeKind::Trainer) > 1 {
+            if self.stepped {
+                return fail(
+                    "the stepped scheduler drives exactly one trainer; trainer \
+                     fleets require free-running threads"
+                        .into(),
+                );
+            }
+            if self.edge_into(NodeKind::Trainer).map(|e| e.kind) != Some(EdgeKind::Store) {
+                return fail(
+                    "trainer fleets require the store scored edge (disjoint \
+                     shard-slice sampling is the step partitioning mechanism)"
+                        .into(),
+                );
+            }
         }
         if self.replicas(NodeKind::Generator) == 0 {
             return fail("at least one generator replica required".into());

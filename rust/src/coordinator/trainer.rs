@@ -9,7 +9,8 @@
 //! device.
 
 use std::collections::VecDeque;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::channel::{Inbound, Message};
@@ -40,6 +41,19 @@ pub struct TrainerConfig {
     /// checkpoint (None: `init()` builds fresh state from the bus's
     /// version-front weights)
     pub resume_state: Option<Vec<f32>>,
+    /// data-parallel fleet position: this replica's 0-based index. The
+    /// global step sequence is partitioned round-robin — replica `r` of
+    /// `n` owns exactly the steps `s` with `s % n == (r + 1) % n`, so the
+    /// fleet covers `1..=max_steps` disjointly with no claim protocol.
+    pub replica: usize,
+    /// fleet size (1 = the classic single trainer)
+    pub n_replicas: usize,
+    /// bus publisher index minted by `WeightsBus::register_publisher`
+    /// (0 is the pre-registered built-in publisher)
+    pub publisher: usize,
+    /// shared fleet coordination (finish countdown + periodic fence);
+    /// None for a solo trainer outside periodic mode
+    pub fleet: Option<Arc<FleetState>>,
 }
 
 impl Default for TrainerConfig {
@@ -52,7 +66,83 @@ impl Default for TrainerConfig {
             checkpoint_every: 0,
             start_step: 0,
             resume_state: None,
+            replica: 0,
+            n_replicas: 1,
+            publisher: 0,
+            fleet: None,
         }
+    }
+}
+
+/// Shared coordination state for a data-parallel trainer fleet. Two
+/// concerns live here because they share the fleet's lifetime:
+///
+/// * the **finish countdown** — replicas exhaust disjoint step slices at
+///   different times, and only the LAST one may request the global stop
+///   and close the store (an early finisher closing the store would
+///   starve peers that still own later steps);
+/// * the **period fence** (`Mode::Periodic`) — before a replica executes
+///   global step `s` it waits until every step of the previous period has
+///   completed (`completed >= ((s - 1) / period) * period`), so the fleet
+///   steps synchronously at period boundaries while generators free-run
+///   against the store. `period == 0` disables the fence (pure async
+///   fleet). The fence cannot deadlock: a step's fence depends only on
+///   strictly smaller steps, and each replica executes its own slice in
+///   increasing order, so the smallest incomplete step is always runnable.
+#[derive(Debug)]
+pub struct FleetState {
+    /// trainers still running; decremented once per replica at finish
+    active: AtomicUsize,
+    /// completed global steps across the fleet (the period-fence clock;
+    /// starts at the resume step)
+    completed: Mutex<u64>,
+    cv: Condvar,
+    /// period length in global steps; 0 = no fence
+    period: u64,
+}
+
+impl FleetState {
+    pub fn new(n_replicas: usize, period: u64, start_step: u64) -> FleetState {
+        FleetState {
+            active: AtomicUsize::new(n_replicas.max(1)),
+            completed: Mutex::new(start_step),
+            cv: Condvar::new(),
+            period,
+        }
+    }
+
+    /// Count one replica out; true when this was the last active one.
+    pub fn finish_one(&self) -> bool {
+        self.active.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+
+    /// Block until the fence for global step `step` opens (every step of
+    /// the previous period has been trained). Returns false when the stop
+    /// signal fired while waiting; the wait polls `should_stop` so a
+    /// global stop never strands a replica at a boundary.
+    pub fn fence_wait(&self, step: u64, should_stop: impl Fn() -> bool) -> bool {
+        if self.period == 0 {
+            return true;
+        }
+        let boundary = ((step.saturating_sub(1)) / self.period) * self.period;
+        let mut done = self.completed.lock().unwrap();
+        while *done < boundary {
+            if should_stop() {
+                return false;
+            }
+            let (d, _) = self
+                .cv
+                .wait_timeout(done, Duration::from_millis(50))
+                .unwrap();
+            done = d;
+        }
+        true
+    }
+
+    /// Record one completed global step and wake fence waiters.
+    pub fn step_done(&self) {
+        *self.completed.lock().unwrap() += 1;
+        self.cv.notify_all();
     }
 }
 
@@ -60,6 +150,8 @@ impl Default for TrainerConfig {
 #[derive(Debug, Clone, Default)]
 pub struct TrainStepRecord {
     pub step: u64,
+    /// trainer-fleet replica that executed the step (0 for a solo trainer)
+    pub replica: usize,
     pub wall_secs: f64,
     pub loss: f64,
     pub reward_mean: f64,
@@ -185,7 +277,15 @@ impl Trainer {
                 }
                 TrajectorySource::Store(store) => {
                     let want = need - self.pending.len();
-                    match store.sample(want, Duration::from_millis(50)) {
+                    // fleet replicas drain disjoint shard-slices (no lock
+                    // contention, no double-sampling); a solo trainer
+                    // samples the whole store
+                    match store.sample_slice(
+                        self.cfg.replica,
+                        self.cfg.n_replicas.max(1),
+                        want,
+                        Duration::from_millis(50),
+                    ) {
                         None => self.eof = true, // closed and drained
                         Some(rows) => {
                             let starved = rows.is_empty();
@@ -218,7 +318,8 @@ impl Trainer {
         // per-step span on the trainer's own track: async modes have no
         // stepped `train` phase, so this is what the analysis plane anchors
         // step windows on (in stepped mode it nests inside the phase span)
-        let _span = crate::trace::span_with(crate::trace::TRAIN_STEP, (self.step + 1) as f64);
+        let global_step = self.next_step();
+        let _span = crate::trace::span_with(crate::trace::TRAIN_STEP, global_step as f64);
         let t0 = Instant::now();
         // Memplane Train lease: the optimizer update requires grads +
         // moments device-resident. The lease returns once the FIRST
@@ -264,13 +365,18 @@ impl Trainer {
             ],
         )?;
         self.state_buf = Some(new_state);
-        self.step += 1;
+        self.step = global_step;
+        // fleet replicas complete out of order; the shared clock is the
+        // max completed step (fetch_max, like the store watermark)
         self.ctx
             .trainer_step
-            .store(self.step, std::sync::atomic::Ordering::SeqCst);
+            .fetch_max(self.step, std::sync::atomic::Ordering::SeqCst);
         // the store's staleness clock follows the optimizer step
         if let Some(TrajectorySource::Store(store)) = &self.source {
             store.advance_watermark(self.step);
+        }
+        if let Some(fleet) = &self.cfg.fleet {
+            fleet.step_done();
         }
 
         // fetch [step | metrics]
@@ -304,7 +410,7 @@ impl Trainer {
             let params = rt.fetch_f32(&p_buf)?;
             self.extract_secs_total += tf.elapsed().as_secs_f64();
             let tp = Instant::now();
-            self.ctx.weights.publish(params);
+            self.ctx.weights.publish_from(self.cfg.publisher, params);
             self.publish_secs_total += tp.elapsed().as_secs_f64();
         }
 
@@ -323,6 +429,7 @@ impl Trainer {
 
         let rec = TrainStepRecord {
             step: self.step,
+            replica: self.cfg.replica,
             wall_secs: t0.elapsed().as_secs_f64(),
             loss: m("loss"),
             reward_mean,
@@ -372,11 +479,46 @@ impl Trainer {
     pub fn current_step(&self) -> u64 {
         self.step
     }
+
+    /// The next global step this replica owns: the smallest `s > step`
+    /// with `s % n == (replica + 1) % n` (round-robin partition of
+    /// `1..=max_steps`; the identity partition for a solo trainer).
+    fn next_step(&self) -> u64 {
+        let n = self.cfg.n_replicas.max(1) as u64;
+        if n == 1 {
+            return self.step + 1;
+        }
+        let want = (self.cfg.replica as u64 + 1) % n;
+        let s = self.step + 1;
+        s + (want + n - s % n) % n
+    }
+
+    /// Finish-path bookkeeping: only the LAST replica to finish requests
+    /// the global stop and closes the store; an early finisher just drops
+    /// its source handle so peers keep draining their own slices.
+    fn finish(&mut self) {
+        let last = match &self.cfg.fleet {
+            Some(f) => f.finish_one(),
+            None => true,
+        };
+        if last {
+            self.ctx.request_stop();
+            self.drop_source();
+        } else {
+            self.source = None;
+        }
+    }
 }
 
 impl Executor for Trainer {
     fn name(&self) -> String {
-        "trainer".into()
+        // fleet replicas get indexed names — the same identities the DOT
+        // dump and trace tracks use ("tracks: trainer-0..trainer-N")
+        if self.cfg.n_replicas > 1 {
+            format!("trainer-{}", self.cfg.replica)
+        } else {
+            "trainer".into()
+        }
     }
 
     fn init(&mut self) -> Result<()> {
@@ -404,10 +546,11 @@ impl Executor for Trainer {
         self.state_buf = Some(rt.upload(&HostTensor::F32(state, vec![total]))?);
         self.runtime = Some(rt);
         // publish the resumed clock so store staleness/lag math is correct
-        // from the first sampled batch
+        // from the first sampled batch (fetch_max: a fleet peer may have
+        // completed a step before this replica finished init)
         self.ctx
             .trainer_step
-            .store(self.step, std::sync::atomic::Ordering::SeqCst);
+            .fetch_max(self.step, std::sync::atomic::Ordering::SeqCst);
         if let Some(TrajectorySource::Store(store)) = &self.source {
             store.advance_watermark(self.step);
         }
@@ -418,16 +561,29 @@ impl Executor for Trainer {
     fn set_step(&mut self, _step: u64) {}
 
     fn step(&mut self) -> Result<StepOutcome> {
-        if self.step >= self.cfg.max_steps {
-            self.ctx.request_stop();
-            // unblock any upstream sender stuck on a full channel/store
-            self.drop_source();
+        if self.next_step() > self.cfg.max_steps {
+            // this replica's step slice is exhausted; the last finisher
+            // requests the stop and unblocks any upstream sender stuck on
+            // a full channel/store
+            self.finish();
             return Ok(StepOutcome::Finished);
+        }
+        // periodic mode: hold at the period boundary until the previous
+        // period is fully trained (generators keep free-running meanwhile)
+        if let Some(fleet) = self.cfg.fleet.clone() {
+            if !fleet.fence_wait(self.next_step(), || self.ctx.should_stop()) {
+                fleet.finish_one();
+                self.drop_source();
+                return Ok(StepOutcome::Finished);
+            }
         }
         self.fill_pending()?;
         let b = self.runtime().config().train_batch;
         if self.pending.is_empty() {
             return if self.eof || self.ctx.should_stop() {
+                if let Some(fleet) = &self.cfg.fleet {
+                    fleet.finish_one();
+                }
                 self.drop_source();
                 Ok(StepOutcome::Finished)
             } else {

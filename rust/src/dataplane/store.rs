@@ -588,6 +588,96 @@ impl RolloutStore {
         }
     }
 
+    /// [`sample`](Self::sample) restricted to the shard-slice owned by
+    /// trainer replica `replica` of `n_replicas`: only shards with
+    /// `index % n_replicas == replica` are locked (still in ascending
+    /// index order, so the module lock rule holds on the subset) and only
+    /// their rows are eligible. Because every shard belongs to exactly one
+    /// replica, a fleet of trainers draining their slices concurrently
+    /// never contends on shard locks and never samples the same row twice.
+    /// Same return contract as `sample`: `None` at EOF (closed and this
+    /// slice drained), `Some(vec![])` on timeout.
+    pub fn sample_slice(
+        &self,
+        replica: usize,
+        n_replicas: usize,
+        max_rows: usize,
+        timeout: Duration,
+    ) -> Option<Vec<Trajectory>> {
+        assert!(n_replicas > 0 && replica < n_replicas, "bad slice index");
+        assert!(
+            n_replicas <= self.shards.len(),
+            "slice requires shards >= n_replicas"
+        );
+        if n_replicas == 1 {
+            return self.sample(max_rows, timeout);
+        }
+        let deadline = Instant::now() + timeout;
+        let t0 = Instant::now();
+        let _span = trace::span_with(trace::STORE_SAMPLE, max_rows as f64);
+        let charge_wait = || {
+            self.stats.sample_wait_nanos.fetch_add(
+                u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX),
+                Ordering::Relaxed,
+            );
+        };
+        loop {
+            let mut out = Vec::new();
+            let mut taken_seqs = Vec::new();
+            let purged;
+            {
+                let mut guards: Vec<MutexGuard<'_, Shard>> = self
+                    .shards
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % n_replicas == replica)
+                    .map(|(_, s)| s.lock().unwrap())
+                    .collect();
+                purged = self.purge_stale_locked(&mut guards);
+                for e in self.take_batch_locked(&mut guards, max_rows) {
+                    self.stats
+                        .record_sampled_lag(self.lag_of(e.traj.gen_version));
+                    taken_seqs.push(e.seq);
+                    out.push(e.traj);
+                }
+            }
+            if let Some(obs) = self.observer() {
+                if !purged.is_empty() {
+                    obs.on_consume(&purged, ConsumeReason::Stale);
+                }
+                if !taken_seqs.is_empty() {
+                    obs.on_consume(&taken_seqs, ConsumeReason::Sample);
+                }
+            }
+            if !out.is_empty() {
+                self.release(out.len());
+                charge_wait();
+                self.cv.notify_all(); // space freed for Block producers
+                return Some(out);
+            }
+            if self.is_closed() {
+                charge_wait();
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                charge_wait();
+                return Some(Vec::new());
+            }
+            // no per-slice occupancy counter exists, so an empty slice
+            // waits on the shared gate with a short bound: a row admitted
+            // to another replica's slice may wake us spuriously, but the
+            // timed wait keeps the loop from spinning
+            let guard = self.gate.lock().unwrap();
+            if !self.is_closed() {
+                let _ = self
+                    .cv
+                    .wait_timeout(guard, (deadline - now).min(Duration::from_millis(50)))
+                    .unwrap();
+            }
+        }
+    }
+
     // -- resumption slot ----------------------------------------------------
 
     /// Park an unfinished rollout, keyed by (prompt group, replica). A
@@ -883,6 +973,38 @@ mod tests {
         assert!(s.take_partial_any().is_some());
         let snap = s.snapshot();
         assert_eq!((snap.parked, snap.resumed), (2, 2));
+    }
+
+    #[test]
+    fn sample_slice_partitions_rows_disjointly() {
+        // cfg uses 3 shards: replica 0 of 2 owns shards {0, 2}, replica 1
+        // owns shard {1}; shard = group_id % 3
+        let s = RolloutStore::new(cfg(16));
+        for i in 0..6u64 {
+            s.push_group(vec![traj(i, 0)]).unwrap();
+        }
+        let a: Vec<u64> = s
+            .sample_slice(0, 2, 8, Duration::from_millis(10))
+            .unwrap()
+            .iter()
+            .map(|t| t.group_id)
+            .collect();
+        let b: Vec<u64> = s
+            .sample_slice(1, 2, 8, Duration::from_millis(10))
+            .unwrap()
+            .iter()
+            .map(|t| t.group_id)
+            .collect();
+        assert_eq!(a, vec![0, 2, 3, 5], "slice 0 drains shards 0 and 2 in FIFO");
+        assert_eq!(b, vec![1, 4], "slice 1 drains shard 1");
+        assert_eq!(s.occupancy(), 0);
+        // empty slice: timeout, then EOF after close
+        assert!(s
+            .sample_slice(1, 2, 4, Duration::from_millis(5))
+            .unwrap()
+            .is_empty());
+        s.close();
+        assert!(s.sample_slice(1, 2, 4, Duration::from_millis(5)).is_none());
     }
 
     #[test]

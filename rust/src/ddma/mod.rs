@@ -276,6 +276,7 @@ impl WeightsBus {
                     } else {
                         None
                     },
+                    publisher,
                 });
             }
             None => {

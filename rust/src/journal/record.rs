@@ -569,6 +569,7 @@ fn partial_from_value(v: &Value) -> Result<PartialRollout> {
 fn step_record_to_value(r: &TrainStepRecord) -> Value {
     Value::object(vec![
         ("step", Value::num(r.step as f64)),
+        ("trainer_replica", Value::num(r.replica as f64)),
         ("wall_secs", Value::num(r.wall_secs)),
         ("loss", Value::num(r.loss)),
         ("reward_mean", Value::num(r.reward_mean)),
@@ -597,6 +598,9 @@ fn opt_f64(v: &Value, key: &str) -> Result<f64> {
 fn step_record_from_value(v: &Value) -> Result<TrainStepRecord> {
     Ok(TrainStepRecord {
         step: v.req_f64("step")? as u64,
+        // absent in journals written before trainer fleets existed: those
+        // runs had exactly one trainer, replica 0
+        replica: v.req_f64("trainer_replica").unwrap_or(0.0) as usize,
         wall_secs: opt_f64(v, "wall_secs")?,
         loss: opt_f64(v, "loss")?,
         reward_mean: opt_f64(v, "reward_mean")?,

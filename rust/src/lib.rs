@@ -27,7 +27,7 @@
 //! | data plane | [`dataplane`] (staleness-aware rollout store: admission/eviction policies, sampling strategies, partial-rollout resumption, lag telemetry) |
 //! | weight plane | [`weightsync`] (FSDP/TP shard layouts, bandwidth-balanced resharding planner, f32/int8/delta(+RLE)/top-k/adaptive-auto per-shard transfer, generation-overlapped double-buffered swap, background per-link-group streaming executor) |
 //! | memory plane | [`memplane`] (per-rank HBM/host pool accounting over tracked allocation classes, phase-aware colocation planner with hard-capacity rejection, background offload/prefetch executor behind the phase-lease protocol) |
-//! | system | [`coordinator`] (executors, channels, and the single-controller execution graph: declarative `NodeSpec`/`EdgeSpec` topologies per mode, one generic `Graph::launch` runtime, `TelemetryHub` report assembly, reward fleets over group-routed channels), [`ddma`] (the DDMA facade over [`weightsync`] + cluster link models) |
+//! | system | [`coordinator`] (executors, channels, and the single-controller execution graph: declarative `NodeSpec`/`EdgeSpec` topologies per mode — sync / async / async_buffered / periodic — one generic `Graph::launch` runtime, `TelemetryHub` report assembly, reward fleets over group-routed channels with re-routable consumer slots, data-parallel trainer fleets with round-robin step partitioning and a period fence), [`ddma`] (the DDMA facade over [`weightsync`] + cluster link models, per-publisher coalescing on the streaming executor) |
 //! | observability | [`trace`] (per-thread lock-free span/instant recorder, background collector → streaming JSONL event log, Chrome Trace Event Format export, periodic live telemetry snapshots — all four planes instrumented), [`journal`] (durable run-journal: snapshot records + streaming pull reader → crash-resume and deterministic replay), [`analysis`] (`llamarl analyze`: streaming log-bucketed span histograms, blocked-time attribution, per-step critical-path extraction, measured-vs-DES divergence) |
 //! | evaluation | [`simulator`] (memory/cost models, Theorem 7.5 optimizer, discrete-event timelines), [`metrics`] |
 

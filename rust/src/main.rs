@@ -105,12 +105,19 @@ fn print_help() {
 
 USAGE: llamarl <subcommand> [flags]
 
-  train     --preset nano|small|e2e  --mode sync|async|async_buffered
+  train     --preset nano|small|e2e  --mode sync|async|async_buffered|periodic
             --steps N [--config file.json] [--workers N] [--rho X] [--lr X]
             [--quantize-generator] [--eval-every K] [--out DIR]
             [--init-checkpoint DIR]
             [--reward-workers N (scatter generation groups across N reward
              executors by group id; groups stay whole)]
+            [--trainers N (data-parallel trainer replicas; each owns the
+             round-robin slice of the step sequence, samples a disjoint
+             store shard-slice, and publishes through its own bus
+             publisher; needs the buffered store and store-shards >= N)]
+            [--period-steps K (periodic mode: generators free-run for K
+             steps against frozen weights, the trainer fleet fences at
+             the period boundary and publishes ONE coalesced update)]
             [--dump-graph (print the resolved topology as Graphviz DOT and
              exit without training)]
             buffered data plane: [--store-capacity N] [--store-shards N]
@@ -141,6 +148,9 @@ USAGE: llamarl <subcommand> [flags]
              (base of the exponential backoff, default 50)]
             [--chaos-kills N --chaos-seed S (seeded kill schedule spread
              round-robin over the generator fleet; CI chaos arm)]
+            [--chaos-reward-kills N (seeded panic schedule over the reward
+             fleet; the supervisor re-routes the dead replica's inbound
+             channel slot and restarts it in place)]
             [--elastic-resize (queue-depth-driven dynamic generator
              replicas)] [--resize-max-extra N (dynamic replica cap,
              default 2)]

@@ -430,6 +430,93 @@ pub fn simulate_async_buffered(cfg: &DesConfig, dp: &BufferedDesConfig) -> DesRe
     }
 }
 
+/// Periodic asynchrony (PAPERS.md: arXiv 2511.18871): generators free-run
+/// for `period_steps` batches against frozen weights while the trainer
+/// fleet trains the PREVIOUS period's batches; the two sides re-join at
+/// the period fence, where exactly ONE coalesced publish lands. This is a
+/// two-stage pipeline at period granularity — each period costs
+/// `max(generate, train)` instead of their sum (sync) — but unlike
+/// free-running async the fence bounds off-policy lag at one period, and
+/// the barrier realizes `E[max(G, T)] >= max(E[G], E[T])` every period,
+/// so the wall clock lands between the two architectures.
+pub fn simulate_periodic(cfg: &DesConfig, period_steps: usize) -> DesReport {
+    let p = period_steps.max(1);
+    let mut rng = Rng::new(cfg.seed);
+    let mut carry = Vec::new();
+    let stall = gen_sync_stall(cfg);
+    let publish_once = trainer_publish_stall(cfg);
+    let mut t = 0.0f64;
+    let mut gen_busy = 0.0f64;
+    let mut train_busy = 0.0f64;
+    let mut sync_paid = 0.0f64;
+    let mut publish_paid = 0.0f64;
+    let mut step_ends = Vec::with_capacity(cfg.steps);
+    let mut lags = Vec::with_capacity(cfg.steps);
+    // pipeline fill: the first period's data must exist before any
+    // training starts (the one-period offset every later period hides)
+    let mut pending = p.min(cfg.steps);
+    let mut fill = stall;
+    for _ in 0..pending {
+        fill += batch_generation_time(&mut rng, cfg, &mut carry);
+    }
+    gen_busy += fill - stall;
+    sync_paid += stall;
+    t += fill;
+    let mut done = 0usize;
+    while done < cfg.steps {
+        // trainer side: consume the period banked by the generators, then
+        // pay the boundary's single coalesced publish
+        let k = pending;
+        let mut train_t = 0.0f64;
+        for _ in 0..k {
+            train_t += cfg.score_secs + cfg.train_secs;
+            train_busy += cfg.train_secs;
+            step_ends.push(t + train_t);
+            // one-period pipeline offset: this batch was generated while
+            // the previous period's k steps trained
+            lags.push(k as f64);
+        }
+        train_t += publish_once;
+        publish_paid += publish_once;
+        done += k;
+        // generator side, concurrent: bank the NEXT period's batches with
+        // one weight refresh at the boundary it launched from
+        let next = p.min(cfg.steps - done);
+        let mut gen_t = 0.0f64;
+        if next > 0 {
+            gen_t += stall;
+            sync_paid += stall;
+            for _ in 0..next {
+                let g = batch_generation_time(&mut rng, cfg, &mut carry);
+                gen_t += g;
+                gen_busy += g;
+            }
+        }
+        pending = next;
+        // the period fence: both sides re-join before the next period
+        t += train_t.max(gen_t);
+    }
+    let n = cfg.steps as f64;
+    DesReport {
+        total_secs: t,
+        step_secs_mean: t / n,
+        gen_idle_frac: (1.0 - gen_busy / t).max(0.0),
+        train_idle_frac: 1.0 - train_busy / t,
+        mean_lag_steps: lags.iter().sum::<f64>() / lags.len().max(1) as f64,
+        max_lag_steps: lags.iter().cloned().fold(0.0, f64::max),
+        dropped_batches: 0,
+        step_ends,
+        segments: vec![
+            ("generate", gen_busy),
+            ("score", cfg.score_secs * n),
+            ("train", train_busy),
+            ("weight_sync", sync_paid),
+            ("publish_block", publish_paid),
+            ("offload", 0.0),
+        ],
+    }
+}
+
 /// Convenience: run both architectures on the same config.
 pub fn simulate_timeline(cfg: &DesConfig) -> (DesReport, DesReport) {
     (simulate_sync(cfg), simulate_async(cfg))
@@ -737,5 +824,80 @@ mod tests {
         let b = simulate_async_buffered(&cfg, &dp);
         assert_eq!(a.total_secs, b.total_secs);
         assert_eq!(a.dropped_batches, b.dropped_batches);
+    }
+
+    #[test]
+    fn periodic_lands_between_sync_and_async() {
+        // the ISSUE's bench curve in miniature: the period fence realizes
+        // E[max(G, T)] per period (slower than free-running async) but
+        // still pipelines the two sides (faster than sync's G + T)
+        let cfg = DesConfig {
+            steps: 200,
+            ..DesConfig::default()
+        };
+        let s = simulate_sync(&cfg);
+        let a = simulate_async(&cfg);
+        let p = simulate_periodic(&cfg, 4);
+        assert!(
+            p.total_secs < s.total_secs,
+            "periodic {} !< sync {}",
+            p.total_secs,
+            s.total_secs
+        );
+        assert!(
+            p.total_secs >= a.total_secs,
+            "periodic {} !>= async {}",
+            p.total_secs,
+            a.total_secs
+        );
+    }
+
+    #[test]
+    fn periodic_lag_bounded_by_period() {
+        let cfg = DesConfig::default();
+        for period in [1usize, 4, 8] {
+            let p = simulate_periodic(&cfg, period);
+            assert!(
+                p.max_lag_steps <= period as f64 + 1e-9,
+                "period {}: max lag {}",
+                period,
+                p.max_lag_steps
+            );
+        }
+    }
+
+    #[test]
+    fn periodic_coalesces_publishes() {
+        // one blocking publish per period, not per step: the periodic
+        // trainer's publish_block segment shrinks with the period length
+        let cfg = DesConfig {
+            publish_block_secs: 3.0,
+            background_publish: false,
+            ..DesConfig::default()
+        };
+        let per_step = simulate_periodic(&cfg, 1);
+        let coalesced = simulate_periodic(&cfg, 5);
+        let paid = |r: &DesReport| {
+            r.segments
+                .iter()
+                .find(|(n, _)| *n == "publish_block")
+                .map(|(_, s)| *s)
+                .unwrap()
+        };
+        assert!(
+            paid(&coalesced) < paid(&per_step) / 2.0,
+            "coalesced publish {} !< per-step {} / 2",
+            paid(&coalesced),
+            paid(&per_step)
+        );
+    }
+
+    #[test]
+    fn periodic_deterministic_given_seed() {
+        let cfg = DesConfig::default();
+        let a = simulate_periodic(&cfg, 4);
+        let b = simulate_periodic(&cfg, 4);
+        assert_eq!(a.total_secs, b.total_secs);
+        assert_eq!(a.step_ends, b.step_ends);
     }
 }

@@ -25,8 +25,8 @@ pub mod hardware;
 pub mod problem;
 
 pub use des::{
-    simulate_async, simulate_async_buffered, simulate_sync, simulate_timeline,
-    BufferedDesConfig, DesConfig, DesReport,
+    simulate_async, simulate_async_buffered, simulate_periodic, simulate_sync,
+    simulate_timeline, BufferedDesConfig, DesConfig, DesReport,
 };
 pub use hardware::{
     calibrated_eta, GpuSpec, HardwareModel, ModelSpec, PaperRow, LLAMA_MODELS, PAPER_TABLE3,

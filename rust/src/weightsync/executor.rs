@@ -11,16 +11,23 @@
 //! parameter-update workers):
 //!
 //! ```text
-//!   publisher(s) ── enqueue(job) ──► pending[g] (one slot per link-group,
-//!        │    (returns immediately)      latest-wins: a newer version
-//!        ▼                               supersedes an undrained older one)
-//!   master snapshot swap                      │ worker thread per group
-//!   (latest()/wait_for() exact,               ▼
-//!    version order total across      encode op → recv() into every
-//!    all publishers)                 GeneratorSlot (version fence +
-//!                                    base-version fence; stale-base deltas
-//!                                    re-sent as full f32)
+//!   publisher(s) ── enqueue(job) ──► pending[g] (one slot per link-group
+//!        │    (returns immediately)      PER PUBLISHER; latest-wins per
+//!        ▼                               publisher: a newer version
+//!   master snapshot swap                 supersedes that publisher's own
+//!   (latest()/wait_for() exact,          undrained job, never a peer's)
+//!    version order total across               │ worker thread per group,
+//!    all publishers)                          ▼ oldest pending version first
+//!                                     encode op → recv() into every
+//!                                     GeneratorSlot (version fence +
+//!                                     base-version fence; stale-base deltas
+//!                                     re-sent as full f32)
 //! ```
+//!
+//! With one publisher this is exactly the original latest-wins queue. With
+//! a trainer fleet, per-publisher slots + oldest-first draining keep a
+//! lagging replica's version fence from being starved by a faster peer
+//! (fairness test: `fleet_publishers_are_not_starved`).
 //!
 //! Correctness leans entirely on the receive-side fences
 //! ([`crate::weightsync::swap`]): a slot promotes only a *complete* staged
@@ -134,6 +141,12 @@ impl SyncMetrics {
 pub(crate) struct PublishJob {
     pub params: Arc<VersionedParams>,
     pub base: Option<Arc<VersionedParams>>,
+    /// registered bus publisher that minted this version. Coalescing is
+    /// scoped per publisher: a trainer replica's newer publish supersedes
+    /// only its OWN undrained job, never a fleet peer's — pure latest-wins
+    /// across publishers would let a fast replica starve a lagging one's
+    /// version fence indefinitely.
+    pub publisher: usize,
 }
 
 /// Open staging for `version` on every slot (idempotent per version; the
@@ -216,8 +229,11 @@ pub(crate) fn fan_out_op(
 }
 
 struct ExecState {
-    /// one latest-wins slot per link-group
-    pending: Vec<Option<Arc<PublishJob>>>,
+    /// per link-group: one latest-wins slot PER PUBLISHER (at most one
+    /// undrained job per (group, publisher) pair — the fleet-fair
+    /// coalescing policy; a solo publisher degenerates to the original
+    /// single-slot latest-wins)
+    pending: Vec<Vec<(usize, Arc<PublishJob>)>>,
     /// link-group workers currently streaming a job
     busy: usize,
     shutdown: bool,
@@ -273,7 +289,7 @@ impl StreamExecutor {
             subscribers,
             metrics,
             state: Mutex::new(ExecState {
-                pending: vec![None; n],
+                pending: (0..n).map(|_| Vec::new()).collect(),
                 busy: 0,
                 shutdown: false,
             }),
@@ -297,18 +313,25 @@ impl StreamExecutor {
     }
 
     /// Hand a publish to the link-group workers and return immediately.
-    /// Latest-wins: a job still pending in a group's queue slot is
-    /// superseded (its packets would be fenced off anyway once the newer
-    /// version begins staging).
+    /// Latest-wins per publisher: a job from the SAME publisher still
+    /// pending in a group's queue is superseded (its packets would be
+    /// fenced off anyway once the newer version begins staging), while
+    /// other publishers' pending jobs are left alone — so a lagging
+    /// trainer replica's version is streamed, not starved, under
+    /// link-group contention.
     pub(crate) fn enqueue(&self, job: PublishJob) {
         let job = Arc::new(job);
         let mut st = self.inner.state.lock().unwrap();
         if st.shutdown {
             return;
         }
-        for slot in st.pending.iter_mut() {
-            if slot.replace(job.clone()).is_some() {
-                self.inner.metrics.coalesced_jobs.fetch_add(1, Ordering::Relaxed);
+        for slots in st.pending.iter_mut() {
+            match slots.iter_mut().find(|(p, _)| *p == job.publisher) {
+                Some(entry) => {
+                    entry.1 = job.clone();
+                    self.inner.metrics.coalesced_jobs.fetch_add(1, Ordering::Relaxed);
+                }
+                None => slots.push((job.publisher, job.clone())),
             }
         }
         drop(st);
@@ -320,7 +343,7 @@ impl StreamExecutor {
     /// pick the version up at their next boundary).
     pub fn flush(&self) {
         let mut st = self.inner.state.lock().unwrap();
-        while !st.shutdown && (st.busy > 0 || st.pending.iter().any(|p| p.is_some())) {
+        while !st.shutdown && (st.busy > 0 || st.pending.iter().any(|p| !p.is_empty())) {
             st = self.inner.idle_cv.wait(st).unwrap();
         }
     }
@@ -345,7 +368,18 @@ fn worker_loop(inner: &ExecInner, g: usize) {
         let job = {
             let mut st = inner.state.lock().unwrap();
             loop {
-                if let Some(job) = st.pending[g].take() {
+                // oldest version first: each publisher's versions then
+                // stream in mint order, which keeps a lagging publisher's
+                // delta base chain intact and its version fence honest —
+                // streaming a newer peer version first would fence the
+                // older one off at the slots
+                let next = st.pending[g]
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, (_, j))| j.params.version)
+                    .map(|(i, _)| i);
+                if let Some(i) = next {
+                    let (_, job) = st.pending[g].swap_remove(i);
                     st.busy += 1;
                     break job;
                 }
@@ -358,7 +392,7 @@ fn worker_loop(inner: &ExecInner, g: usize) {
         stream_group(inner, g, &job);
         let mut st = inner.state.lock().unwrap();
         st.busy -= 1;
-        if st.busy == 0 && st.pending.iter().all(|p| p.is_none()) {
+        if st.busy == 0 && st.pending.iter().all(|p| p.is_empty()) {
             inner.idle_cv.notify_all();
         }
     }
@@ -433,6 +467,7 @@ mod tests {
             exec.enqueue(PublishJob {
                 params: Arc::new(VersionedParams::new(v, data)),
                 base: None,
+                publisher: 0,
             });
         }
         exec.flush();
@@ -466,6 +501,7 @@ mod tests {
             exec.enqueue(PublishJob {
                 params: snap.clone(),
                 base: Some(prev.clone()),
+                publisher: 0,
             });
             // flush per publish so every delta lands on its exact base —
             // whether the slot swapped or not, the staging seed tracks it
@@ -512,6 +548,7 @@ mod tests {
             exec.enqueue(PublishJob {
                 params: snap.clone(),
                 base: Some(prev.clone()),
+                publisher: 0,
             });
             exec.flush();
             prev = snap;
@@ -536,11 +573,70 @@ mod tests {
     }
 
     #[test]
+    fn fleet_publishers_are_not_starved() {
+        // Two trainer replicas publishing through one plan: versions 1, 3,
+        // 5 from publisher 0 interleave with 2, 4 from publisher 1 while
+        // the single link-group worker is busy streaming v1. Per-publisher
+        // coalescing must supersede only a publisher's OWN pending job —
+        // pure latest-wins would collapse all four queued versions into
+        // one slot and starve the lagging publisher's version fence.
+        let n = 100_000;
+        let (exec, subs, metrics) = spawn_exec(n, ShardEncoding::F32, 1);
+        let slots: Vec<Arc<GeneratorSlot>> = (0..8)
+            .map(|_| {
+                let s = GeneratorSlot::new(Arc::new(VersionedParams::new(0, vec![0.0; n])));
+                subs.lock().unwrap().push(s.clone());
+                s
+            })
+            .collect();
+        exec.enqueue(PublishJob {
+            params: Arc::new(VersionedParams::new(1, vec![1.0; n])),
+            base: None,
+            publisher: 0,
+        });
+        // wait until the worker picked v1 up (or already finished it) so
+        // the queue state built below is deterministic
+        while exec.inner.state.lock().unwrap().busy == 0
+            && metrics.shard_max_samples.load(Ordering::Relaxed) == 0
+        {
+            std::thread::yield_now();
+        }
+        for (v, p) in [(2u64, 1usize), (3, 0), (4, 1), (5, 0)] {
+            exec.enqueue(PublishJob {
+                params: Arc::new(VersionedParams::new(v, vec![v as f32; n])),
+                base: None,
+                publisher: p,
+            });
+        }
+        exec.flush();
+        for s in &slots {
+            let snap = s.swap_at_boundary().expect("latest version staged");
+            assert_eq!(snap.version, 5, "slots converge to the newest version");
+        }
+        let samples = metrics.shard_max_samples.load(Ordering::Relaxed);
+        let coalesced = metrics.coalesced_jobs.load(Ordering::Relaxed);
+        assert_eq!(samples + coalesced, 5, "streamed or coalesced, never dropped");
+        // fairness: each publisher may supersede at most its own earlier
+        // pending job (one each here); latest-wins across publishers would
+        // coalesce 3
+        assert!(
+            coalesced <= 2,
+            "a publisher must only supersede its own pending job (coalesced {coalesced})"
+        );
+        // both publishers' terminal versions (and v1) must actually stream
+        assert!(
+            samples >= 3,
+            "a lagging publisher's version was starved (streamed {samples})"
+        );
+    }
+
+    #[test]
     fn executor_with_no_subscribers_is_inert() {
         let (exec, _subs, metrics) = spawn_exec(64, ShardEncoding::F32, 1);
         exec.enqueue(PublishJob {
             params: Arc::new(VersionedParams::new(1, vec![1.0; 64])),
             base: None,
+            publisher: 0,
         });
         exec.flush();
         assert_eq!(metrics.bytes_streamed.load(Ordering::Relaxed), 0);

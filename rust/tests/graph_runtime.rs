@@ -152,6 +152,54 @@ fn check_rejects_malformed_topologies() {
 }
 
 #[test]
+fn trainer_fleet_topology_check_and_dot() {
+    // a data-parallel trainer fleet rides the buffered topology: replicas
+    // come from n_trainer_workers, check() demands the store edge, and the
+    // DOT labels track the whole fleet
+    let mut cfg = cfg_for(Mode::AsyncBuffered);
+    cfg.n_trainer_workers = 3;
+    let g = topology_with_rows(&cfg, 8);
+    g.check().unwrap();
+    assert_eq!(g.replicas(NodeKind::Trainer), 3);
+    let dot = g.to_dot();
+    assert!(dot.contains("trainer x3"));
+    assert!(dot.contains("tracks: trainer-0..trainer-2"));
+
+    // the stepped scheduler drives exactly one trainer
+    let mut cfg = cfg_for(Mode::Sync);
+    cfg.n_trainer_workers = 2;
+    assert!(topology_with_rows(&cfg, 8).check().is_err());
+
+    // a fleet without the store edge cannot shard its sampling: the async
+    // (channel-scored) topology must be rejected at check() time
+    let mut cfg = cfg_for(Mode::Async);
+    cfg.n_trainer_workers = 2;
+    assert!(topology_with_rows(&cfg, 8).check().is_err());
+
+    // zero trainers is malformed whatever the mode
+    let mut g = topology_with_rows(&cfg_for(Mode::AsyncBuffered), 8);
+    for n in g.nodes.iter_mut() {
+        if n.kind == NodeKind::Trainer {
+            n.replicas = 0;
+        }
+    }
+    assert!(g.check().is_err());
+}
+
+#[test]
+fn periodic_topology_is_buffered_with_its_own_name() {
+    let mut cfg = cfg_for(Mode::Periodic);
+    cfg.n_generator_workers = 2;
+    cfg.n_trainer_workers = 2;
+    let g = topology_with_rows(&cfg, 8);
+    g.check().unwrap();
+    assert_eq!(g.mode_name, "periodic");
+    assert!(!g.stepped, "periodic generators free-run between fences");
+    assert_eq!(g.edge_into(NodeKind::Trainer).unwrap().kind, EdgeKind::Store);
+    assert_eq!(g.replicas(NodeKind::Trainer), 2);
+}
+
+#[test]
 fn dot_rendering_names_every_fleet_and_edge() {
     let mut cfg = cfg_for(Mode::AsyncBuffered);
     cfg.n_generator_workers = 2;
@@ -537,6 +585,104 @@ fn exhausted_restart_budget_escalates_to_global_stop() {
         err.to_string().contains("injected failure"),
         "unexpected error: {err}"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Multi-trainer data parallelism + periodic asynchrony.
+// ---------------------------------------------------------------------------
+
+/// Period-fence degeneracy: with `period_steps = 1` every step is a
+/// boundary, so the periodic trainer consumes exactly what sync consumes —
+/// same step count, same trained-row totals — at a fixed seed.
+#[test]
+fn periodic_with_period_one_matches_sync_row_totals() {
+    if !have_artifacts() {
+        return;
+    }
+    let sync = run_training(&PipelineConfig {
+        mode: Mode::Sync,
+        ..base_cfg("periodic_sync_base")
+    })
+    .unwrap();
+    let mut cfg = PipelineConfig {
+        mode: Mode::Periodic,
+        period_steps: 1,
+        n_generator_workers: 2,
+        ..base_cfg("periodic_p1")
+    };
+    cfg.store.capacity = 64;
+    let per = run_training(&cfg).unwrap();
+    assert_eq!(per.mode, "periodic");
+    assert_eq!(per.steps, sync.steps);
+    assert_eq!(per.records.len(), sync.records.len());
+    let rows = |r: &llamarl::coordinator::RunReport| -> usize {
+        r.records.iter().map(|x| x.rows).sum()
+    };
+    assert_eq!(
+        rows(&per),
+        rows(&sync),
+        "period_steps=1 must reproduce sync's trained-row totals"
+    );
+}
+
+/// A 2-replica trainer fleet must complete every step exactly once, with
+/// the static round-robin partition visible in the merged records: step s
+/// belongs to replica (s % n + n - 1) % n.
+#[test]
+fn trainer_fleet_covers_every_step_disjointly() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = PipelineConfig {
+        mode: Mode::AsyncBuffered,
+        n_generator_workers: 2,
+        n_trainer_workers: 2,
+        max_steps: 4,
+        ..base_cfg("trainer_fleet")
+    };
+    cfg.store.capacity = 64;
+    let r = run_training(&cfg).unwrap();
+    assert_eq!(r.steps, 4, "the fleet clock is the max over replicas");
+    assert_eq!(r.records.len(), 4, "every step trained exactly once");
+    let mut seen = std::collections::HashSet::new();
+    for rec in &r.records {
+        assert!(seen.insert(rec.step), "step {} trained twice", rec.step);
+        assert_eq!(
+            rec.replica,
+            ((rec.step as usize % 2) + 1) % 2,
+            "step {} ran on the wrong replica",
+            rec.step
+        );
+        assert!(rec.rows > 0);
+    }
+    assert!(
+        r.records.iter().any(|rec| rec.replica == 1),
+        "the peer replica must have trained its share"
+    );
+    // every replica publishes through its own registered bus publisher
+    assert!(r.ddma_publishes >= 4);
+}
+
+/// A reward replica killed mid-run must restart in place: the supervisor
+/// re-routes its inbound slot to a fresh receiver (producers retry across
+/// the epoch bump), and the run completes every step.
+#[test]
+fn reward_panic_restarts_with_rerouted_channel() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = chaos_cfg("chaos_reward");
+    cfg.restart_max = 5;
+    cfg.restart_backoff_ms = 1;
+    cfg.chaos_reward_kills = 2; // one panic per reward worker on attempt 0
+    cfg.chaos_seed = 13;
+    let r = run_training(&cfg).expect("a rerouted reward replica must not stop the run");
+    assert_eq!(r.steps, cfg.max_steps, "every step must complete under reward churn");
+    assert!(
+        r.node_restarts >= 1,
+        "the kill schedule must have forced at least one reward restart"
+    );
+    assert!(r.reward_groups > 0, "the replacement replica kept scoring");
 }
 
 /// The opt-in fleet controller must never destabilize a run: with resize

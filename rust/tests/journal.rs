@@ -61,6 +61,7 @@ fn any_traj(g: &mut Gen) -> Trajectory {
 fn any_step(g: &mut Gen) -> TrainStepRecord {
     TrainStepRecord {
         step: g.i64(1, 100) as u64,
+        replica: g.usize(0, 3),
         wall_secs: g.f64(0.0, 5.0),
         loss: g.f64(-2.0, 2.0),
         reward_mean: g.f64(-1.0, 1.0),

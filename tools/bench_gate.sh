@@ -167,6 +167,34 @@ else
 gate skipped"
 fi
 
+# --- multi-trainer scaling bench (gated once its baseline is committed) ---
+MT_CUR="${BENCH_MULTITRAINER_CUR:-target/BENCH_multitrainer.json}"
+MT_BASE="${BENCH_MULTITRAINER_BASE:-BENCH_multitrainer.json}"
+if [ -f "$MT_BASE" ]; then
+    if [ ! -f "$MT_CUR" ]; then
+        echo "bench_gate: FAIL — multitrainer summary $MT_CUR missing (run \
+cargo bench --bench multitrainer_scaling first)"
+        fail=1
+    else
+        echo "== bench_gate: $MT_CUR vs $MT_BASE (tol ${TOL}) =="
+        CUR="$MT_CUR"
+        BASE="$MT_BASE"
+        # shape: both arms drain the full row quota, the 2-replica
+        # partition is exactly disjoint, every step published, and the
+        # DES periodic point lands between sync and async wall clocks
+        require_true rows_complete
+        require_true partition_disjoint
+        require_true publishes_complete
+        require_true periodic_between
+        # headline: trained-rows/sec at 2 trainer replicas vs 1 — the
+        # ISSUE's acceptance floor is an absolute 1.6x
+        require_ratio trainer_scaling_2x 1.6
+    fi
+else
+    echo "bench_gate: note — $MT_BASE baseline not committed yet; \
+multitrainer gate skipped"
+fi
+
 if [ "$fail" = 0 ]; then
     echo "bench_gate: PASS"
 else
